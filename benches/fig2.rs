@@ -1,0 +1,17 @@
+//! Bench: regenerate Fig. 2 (BO NAS scans, 100 models x 3 stack counts)
+//! and time the GP-BO loop.
+use std::time::Instant;
+use tinyml_codesign::dse;
+
+fn main() {
+    let t0 = Instant::now();
+    println!("{}", tinyml_codesign::report::tables::fig2(100, 0xF16));
+    let dt = t0.elapsed().as_secs_f64();
+    println!("[bench] 3 x 100-model BO scans in {dt:.2} s ({:.1} ms/model)", dt * 1e3 / 300.0);
+    // Shape assertions (the Fig. 2 story).
+    for stacks in 1..=3 {
+        let pts = dse::run_ic_bo_scan(stacks, 100, 0xF16 + stacks as u64);
+        let best = pts.iter().map(|p| p.accuracy).fold(f64::NEG_INFINITY, f64::max);
+        assert!(best > 65.0, "{stacks}-stack best {best}");
+    }
+}

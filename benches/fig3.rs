@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 3 (ASHA over CNV variants) and time the scan.
+use std::time::Instant;
+use tinyml_codesign::dse;
+
+fn main() {
+    let t0 = Instant::now();
+    println!("{}", tinyml_codesign::report::tables::fig3(128, 0xF17));
+    println!("[bench] 128-config adaptive ASHA in {:.2} s", t0.elapsed().as_secs_f64());
+    let pts = dse::run_cnv_asha_scan(128, 0xF17);
+    let evals = pts.len();
+    let top = pts.iter().filter(|p| p.rung == 3).count();
+    println!("[bench] {evals} evaluations, {top} reached the top rung (eta=4 halving)");
+    assert!(top >= 1 && evals < 128 * 2);
+}

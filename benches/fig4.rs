@@ -1,0 +1,35 @@
+//! Bench: Fig. 4 (KWS quantization exploration) — REAL QAT training of the
+//! W1A1/W3A3/FP32 variants through the PJRT runtime (the full 6-variant
+//! sweep is examples/kws_quant_scan.rs; this bench keeps 3 for time) and
+//! the BOPs x-axis for all six.
+use std::time::Instant;
+use tinyml_codesign::coordinator::{self, TrainConfig};
+use tinyml_codesign::report::tables;
+use tinyml_codesign::runtime::{LoadedModel, Runtime};
+
+fn main() {
+    let art = tinyml_codesign::artifacts_dir();
+    println!("variant,bops,wm_bits  (all six variants)");
+    for (v, bops, wm) in tables::fig4_costs(&art).unwrap() {
+        println!("{v},{bops:.3e},{wm:.0}");
+    }
+    let rt = Runtime::cpu().unwrap();
+    let steps = 150;
+    let mut accs = Vec::new();
+    for v in ["w1a1", "w3a3", "fp32"] {
+        let mut m = LoadedModel::load(&art, &format!("kws_mlp_{v}")).unwrap();
+        let cfg = TrainConfig { steps, lr: 0.08, final_lr_frac: 0.15, log_every: steps, seed: 4 };
+        let t0 = Instant::now();
+        coordinator::train(&rt, &mut m, &cfg).unwrap();
+        let train_s = t0.elapsed().as_secs_f64();
+        let acc = coordinator::evaluate(&rt, &mut m, 300, 0xE7A1).unwrap();
+        println!("[bench] {v}: {steps} steps in {train_s:.1} s ({:.1} ms/step) -> acc {acc:.3}",
+            train_s * 1e3 / steps as f64);
+        accs.push((v, acc));
+    }
+    // The Fig. 4 cliff: W1A1 must be clearly below W3A3; W3A3 ~ FP32.
+    let get = |name: &str| accs.iter().find(|a| a.0 == name).unwrap().1;
+    assert!(get("w3a3") - get("w1a1") > 0.05, "no quantization cliff: {accs:?}");
+    assert!((get("fp32") - get("w3a3")).abs() < 0.08, "w3a3 should track fp32: {accs:?}");
+    println!("cliff OK: w1a1 {:.3} << w3a3 {:.3} ~= fp32 {:.3}", get("w1a1"), get("w3a3"), get("fp32"));
+}

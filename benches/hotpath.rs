@@ -1,0 +1,67 @@
+//! Bench: hot paths — dataflow simulator cycle rate, PJRT batch-1
+//! inference latency, and the batching engine throughput (§Perf targets).
+use std::time::Instant;
+use tinyml_codesign::board::pynq_z2;
+use tinyml_codesign::coordinator::engine::{spawn, BatchPolicy};
+use tinyml_codesign::data;
+use tinyml_codesign::report::tables;
+use tinyml_codesign::runtime::{LoadedModel, Runtime};
+
+fn main() {
+    let art = tinyml_codesign::artifacts_dir();
+
+    // 1. Dataflow simulator rate on the big design (full CNV).
+    let g = tinyml_codesign::ir::Graph::load(&art.join("ic_finn_full_topology.json")).unwrap();
+    let mut pm = tinyml_codesign::passes::PassManager::for_flow("finn");
+    let g = pm.run(&g);
+    let d = tinyml_codesign::dataflow::schedule::schedule(&g, &Default::default());
+    let sim = tinyml_codesign::dataflow::Simulator::new(d.stage_specs());
+    let t0 = Instant::now();
+    let r = sim.run_unbounded();
+    let dt = t0.elapsed().as_secs_f64();
+    let rate = r.simulated_cycles as f64 * d.stages.len() as f64 / dt / 1e6;
+    println!("[bench] simulator: {} cycles x {} stages in {:.3} s = {rate:.1} M stage-updates/s",
+        r.simulated_cycles, d.stages.len(), dt);
+
+    // 2. PJRT batch-1 inference (the EEMBC request path).
+    let rt = Runtime::cpu().unwrap();
+    let mut m = LoadedModel::load(&art, "kws_mlp_w3a3").unwrap();
+    let ts = data::test_set("kws", 64, 0xB);
+    m.infer1(&rt, &ts.samples[0].x).unwrap(); // compile + warm
+    let t0 = Instant::now();
+    let iters = 300;
+    for i in 0..iters {
+        std::hint::black_box(m.infer1(&rt, &ts.samples[i % 64].x).unwrap());
+    }
+    let per = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+    println!("[bench] PJRT batch-1 inference: {per:.1} us/inference");
+
+    // 3. Batching engine throughput (multi-threaded submitters).
+    let (handle, join) = spawn(art.clone(), "kws_mlp_w3a3".into(), BatchPolicy::default());
+    let n = 512;
+    let t0 = Instant::now();
+    let mut threads = Vec::new();
+    for t in 0..4 {
+        let h = handle.clone();
+        threads.push(std::thread::spawn(move || {
+            let ts = data::test_set("kws", n / 4, 0xC0 + t as u64);
+            for s in &ts.samples {
+                std::hint::black_box(h.infer(s.x.clone()).unwrap());
+            }
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    drop(handle);
+    let served = join.join().unwrap().unwrap();
+    println!("[bench] engine: {served} requests in {dt:.2} s = {:.0} req/s", served as f64 / dt);
+
+    // 4. End-to-end flow (compiler + sizing + estimate) latency.
+    let t0 = Instant::now();
+    for _ in 0..3 {
+        std::hint::black_box(tables::flow_for(&art, "kws_mlp_w3a3", &pynq_z2()).unwrap());
+    }
+    println!("[bench] full codesign flow (KWS): {:.1} ms", t0.elapsed().as_secs_f64() * 1e3 / 3.0);
+}

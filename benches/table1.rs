@@ -1,0 +1,24 @@
+//! Bench: regenerate Table 1 (model summary) and time topology loading +
+//! metric computation.  Accuracies come from `train_and_submit`
+//! (EXPERIMENTS.md records the measured run).
+use std::time::Instant;
+
+fn main() {
+    let art = tinyml_codesign::artifacts_dir();
+    let t0 = Instant::now();
+    let text = tinyml_codesign::report::tables::table1(&art, &[]).unwrap();
+    let dt = t0.elapsed();
+    println!("{text}");
+    println!("[bench] table1 generated in {:.2} ms", dt.as_secs_f64() * 1e3);
+    // Throughput: topology load + validate (the compiler front-end).
+    let t0 = Instant::now();
+    let iters = 200;
+    for _ in 0..iters {
+        let g = tinyml_codesign::ir::Graph::load(&art.join("kws_mlp_w3a3_topology.json")).unwrap();
+        std::hint::black_box(g.total_macs());
+    }
+    println!(
+        "[bench] topology load+validate: {:.1} us/iter",
+        t0.elapsed().as_secs_f64() * 1e6 / iters as f64
+    );
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate Table 2 (FIFO sizes) and time the FIFO-depth
+//! optimization pass (sizing simulation) per model.
+use std::time::Instant;
+use tinyml_codesign::board::pynq_z2;
+use tinyml_codesign::report::tables;
+
+fn main() {
+    let art = tinyml_codesign::artifacts_dir();
+    let t0 = Instant::now();
+    println!("{}", tables::table2(&art).unwrap());
+    println!("[bench] table2 generated in {:.2} s", t0.elapsed().as_secs_f64());
+    for (label, name) in tables::SUBMITTED {
+        let t0 = Instant::now();
+        let r = tables::flow_for(&art, name, &pynq_z2()).unwrap();
+        println!(
+            "[bench] {label:<14} FIFO sizing sim: {:>9} cycles simulated in {:.1} ms",
+            r.fifo.sizing_run.simulated_cycles,
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+    }
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate Table 3 (IC/hls4ml optimization ablation) and assert
+//! its shape: FIFO opt cuts BRAM, ReLU merge cuts LUTs.
+use std::time::Instant;
+use tinyml_codesign::report::tables;
+
+fn main() {
+    let art = tinyml_codesign::artifacts_dir();
+    let t0 = Instant::now();
+    let text = tables::table3(&art).unwrap();
+    println!("{text}");
+    println!("[bench] table3 (4 full flows) in {:.2} s", t0.elapsed().as_secs_f64());
+}

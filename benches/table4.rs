@@ -1,0 +1,11 @@
+//! Bench: regenerate Table 4 (AD optimization ablation, RF 144).
+use std::time::Instant;
+use tinyml_codesign::report::tables;
+
+fn main() {
+    let art = tinyml_codesign::artifacts_dir();
+    let t0 = Instant::now();
+    let text = tables::table4(&art, None).unwrap();
+    println!("{text}");
+    println!("[bench] table4 (4 AD variants) in {:.2} s", t0.elapsed().as_secs_f64());
+}

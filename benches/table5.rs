@@ -1,0 +1,23 @@
+//! Bench: regenerate Table 5 (resources/latency/energy, 4 models x 2
+//! boards) — the paper's headline table — and check the headline claims.
+use std::time::Instant;
+use tinyml_codesign::board::pynq_z2;
+use tinyml_codesign::report::tables;
+
+fn main() {
+    let art = tinyml_codesign::artifacts_dir();
+    let t0 = Instant::now();
+    let text = tables::table5(&art).unwrap();
+    println!("{text}");
+    println!("[bench] table5 (8 full flows) in {:.2} s", t0.elapsed().as_secs_f64());
+    println!("{}", tables::ic_comparison(&art).unwrap());
+    // Headline claims: latency as low as ~20 us, energy as low as ~30 uJ.
+    let b = pynq_z2();
+    let kws = tables::flow_for(&art, "kws_mlp_w3a3", &b).unwrap();
+    let ad = tables::flow_for(&art, "ad_autoencoder", &b).unwrap();
+    let min_lat = kws.latency_s.min(ad.latency_s) * 1e6;
+    let min_e = kws.energy_per_inference_uj.min(ad.energy_per_inference_uj);
+    println!("headline: min latency {min_lat:.1} us (paper ~20 us), min energy {min_e:.1} uJ (paper ~30 uJ)");
+    assert!(min_lat < 60.0, "latency headline off: {min_lat}");
+    assert!(min_e < 120.0, "energy headline off: {min_e}");
+}

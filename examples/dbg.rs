@@ -1,0 +1,14 @@
+use tinyml_codesign::runtime::{LoadedModel, Runtime};
+fn main() -> anyhow::Result<()> {
+    let art = tinyml_codesign::artifacts_dir();
+    let rt = Runtime::cpu()?;
+    let mut m = LoadedModel::load(&art, "kws_mlp_w3a3")?;
+    let x = vec![0.25f32; 490];
+    let out = m.infer1(&rt, &x)?;
+    println!("rs logits: {:?}", &out[..6]);
+    let xb = vec![0.25f32; 490*32];
+    let yb: Vec<i32> = (0..32).map(|i| i % 12).collect();
+    let loss = m.train_step(&rt, &xb, &yb, 0.05)?;
+    println!("rs loss: {loss}");
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Fig. 2 + Fig. 3 design-space exploration scans.
+//!
+//! ```sh
+//! cargo run --release --example dse_scan [models_per_scan] [asha_configs]
+//! ```
+//!
+//! Prints the Fig. 2 BO scans (accuracy vs MFLOPs for 1-, 2-, 3-stack IC
+//! NAS; 100 models per scan like the paper) and the Fig. 3 ASHA scan
+//! (accuracy vs inference cost C of eq. 2), both as CSV suitable for
+//! plotting, plus summary lines comparing against the paper's anchors.
+
+use tinyml_codesign::dse;
+
+fn main() {
+    let models: usize = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(100);
+    let configs: usize = std::env::args().nth(2).and_then(|v| v.parse().ok()).unwrap_or(128);
+
+    println!("{}", tinyml_codesign::report::tables::fig2(models, 0xF16));
+
+    // Fig. 2 summary: best model per scan (what §3.1.1 extracted).
+    for stacks in 1..=3 {
+        let pts = dse::run_ic_bo_scan(stacks, models, 0xF16 + stacks as u64);
+        let best = pts
+            .iter()
+            .max_by(|a, b| a.accuracy.total_cmp(&b.accuracy))
+            .unwrap();
+        // Pareto knee: best accuracy under 5 MFLOPs.
+        let knee = pts
+            .iter()
+            .filter(|p| p.mflops < 5.0)
+            .max_by(|a, b| a.accuracy.total_cmp(&b.accuracy));
+        println!(
+            "# {stacks}-stack: best {:.1}% @ {:.1} MFLOPs; <5MF knee {:?}",
+            best.accuracy,
+            best.mflops,
+            knee.map(|p| (p.accuracy.round(), p.mflops))
+        );
+    }
+
+    println!();
+    println!("{}", tinyml_codesign::report::tables::fig3(configs, 0xF17));
+    let pts = dse::run_cnv_asha_scan(configs, 0xF17);
+    let top = pts
+        .iter()
+        .filter(|p| p.rung >= 2)
+        .max_by(|a, b| a.accuracy.total_cmp(&b.accuracy));
+    println!("# ASHA winner (rung>=2): {top:?}");
+    println!("# paper: CNV-W1A1 (C=1.0) performs near-optimally at 84.5%");
+}

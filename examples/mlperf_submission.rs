@@ -1,0 +1,45 @@
+//! Full MLPerf Tiny v0.7-style report: Tables 1, 2, 3, 4, 5 + the §4.2.3
+//! IC comparison, all regenerated from the artifacts (no training — run
+//! `train_and_submit` first for measured accuracies, or pass `--train`
+//! for a quick training pass here).
+
+use tinyml_codesign::coordinator::{self, TrainConfig};
+use tinyml_codesign::report::tables;
+use tinyml_codesign::runtime::{LoadedModel, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let art = tinyml_codesign::artifacts_dir();
+    let do_train = std::env::args().any(|a| a == "--train");
+
+    let mut measured: Vec<(String, String)> = Vec::new();
+    let mut ad_auc = None;
+    if do_train {
+        let rt = Runtime::cpu()?;
+        for (name, steps, lr, n) in [
+            ("ad_autoencoder", 300usize, 0.05f32, 250usize),
+            ("kws_mlp_w3a3", 300, 0.08, 400),
+            ("ic_hls4ml", 80, 0.05, 150),
+            ("ic_finn", 40, 0.02, 150),
+        ] {
+            eprintln!("[train] {name} ({steps} steps)...");
+            let mut m = LoadedModel::load(&art, name)?;
+            let cfg = TrainConfig { steps, lr, final_lr_frac: 0.15, log_every: steps, seed: 1 };
+            coordinator::train(&rt, &mut m, &cfg)?;
+            let v = coordinator::evaluate(&rt, &mut m, n, 0xE7A1)?;
+            if name == "ad_autoencoder" {
+                ad_auc = Some(v);
+                measured.push((name.into(), format!("{v:.3} AUC")));
+            } else {
+                measured.push((name.into(), format!("{:.1}%", 100.0 * v)));
+            }
+        }
+    }
+
+    println!("{}", tables::table1(&art, &measured)?);
+    println!("{}", tables::table2(&art)?);
+    println!("{}", tables::table3(&art)?);
+    println!("{}", tables::table4(&art, ad_auc)?);
+    println!("{}", tables::table5(&art)?);
+    println!("{}", tables::ic_comparison(&art)?);
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! End-to-end validation driver (DESIGN.md §End-to-end validation).
+//!
+//! Trains the AD autoencoder and the KWS W3A3 MLP for a few hundred SGD
+//! steps on synthetic data entirely from Rust via PJRT (loss curves
+//! logged), gives the IC models a shorter budget, evaluates
+//! accuracy/AUC over the EEMBC-style batch-1 path, then pushes every
+//! design through the full codesign flow and the simulated EnergyRunner
+//! and prints MLPerf-submission-style rows.  Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//! ```sh
+//! cargo run --release --example train_and_submit [steps_scale]
+//! ```
+
+use tinyml_codesign::board::pynq_z2;
+use tinyml_codesign::coordinator::{self, TrainConfig};
+use tinyml_codesign::data;
+use tinyml_codesign::eembc::{DesignPerf, Dut, Runner};
+use tinyml_codesign::report::tables;
+use tinyml_codesign::runtime::{LoadedModel, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(1.0);
+    let art = tinyml_codesign::artifacts_dir();
+    let rt = Runtime::cpu()?;
+    let board = pynq_z2();
+    let runner = Runner { min_window_s: 1.0, ..Default::default() };
+
+    // (model, flow-estimation topology, train steps, lr, eval n)
+    let plan: [(&str, &str, usize, f32, usize); 4] = [
+        ("ad_autoencoder", "ad_autoencoder", (400.0 * scale) as usize, 0.05, 250),
+        ("kws_mlp_w3a3", "kws_mlp_w3a3", (400.0 * scale) as usize, 0.08, 500),
+        ("ic_hls4ml", "ic_hls4ml", (120.0 * scale) as usize, 0.05, 200),
+        ("ic_finn", "ic_finn_full", (60.0 * scale) as usize, 0.02, 200),
+    ];
+
+    let mut rows = Vec::new();
+    for (name, flow_name, steps, lr, eval_n) in plan {
+        println!("==== {name}: training {steps} steps ====");
+        let mut m = LoadedModel::load(&art, name)?;
+        let cfg = TrainConfig {
+            steps,
+            lr,
+            final_lr_frac: 0.15,
+            log_every: (steps / 8).max(1),
+            seed: 0x7121,
+        };
+        let t0 = std::time::Instant::now();
+        let curve = coordinator::train(&rt, &mut m, &cfg)?;
+        let dt = t0.elapsed().as_secs_f64();
+        for p in &curve {
+            println!("  step {:>5}  loss {:.4}  lr {:.4}", p.step, p.loss, p.lr);
+        }
+        println!("  ({dt:.1} s total, {:.1} ms/step)", dt * 1e3 / steps.max(1) as f64);
+
+        // Codesign flow -> simulated platform performance.
+        let fr = tables::flow_for(&art, flow_name, &board)?;
+        let perf = DesignPerf { latency_s: fr.latency_s, power_w: fr.power_w };
+        let task = m.manifest.task.clone();
+        let test = data::test_set(&task, eval_n, 0xE7A1);
+        let mut dut = Dut::new(&mut m, perf);
+        let acc = runner.accuracy_mode(&rt, &mut dut, &test.samples)?;
+        let p = runner.performance_mode(&rt, &mut dut, &test.samples)?;
+        let e = runner.energy_mode(&rt, &mut dut, &test.samples)?;
+        println!(
+            "  EEMBC: {} = {:.3} | median latency {:.3} ms | {:.1} uJ/inf",
+            acc.metric,
+            acc.value,
+            p.median_latency_s * 1e3,
+            e.median_energy_uj
+        );
+        rows.push((name, acc.metric.clone(), acc.value, p.median_latency_s, e.median_energy_uj, fr.fits));
+    }
+
+    println!("\n==== MLPerf Tiny v0.7-style submission (Pynq-Z2, simulated) ====");
+    println!(
+        "{:<16} {:>8} {:>10} {:>12} {:>12} {:>6}",
+        "model", "metric", "value", "latency[ms]", "E/inf[uJ]", "fits"
+    );
+    for (name, metric, value, lat, e, fits) in &rows {
+        println!(
+            "{name:<16} {metric:>8} {value:>10.3} {:>12.3} {e:>12.1} {fits:>6}",
+            lat * 1e3
+        );
+    }
+    println!("\npaper rows: IC/hls4ml 83.5% 27.3ms 44330uJ | IC/FINN 84.5% 1.5ms 2535uJ");
+    println!("            AD 0.83AUC 19us 30.1uJ | KWS 82.5% 17us 30.9uJ");
+    Ok(())
+}

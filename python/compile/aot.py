@@ -1,0 +1,154 @@
+"""AOT artifact builder: JAX models -> HLO text + topology + params.
+
+Python runs ONCE (`make artifacts`); the Rust binary is self-contained
+afterwards.  For every model variant this emits into ``artifacts/``:
+
+* ``<name>_fwd1.hlo.txt``   — batch-1 inference graph (the EEMBC path)
+* ``<name>_fwdN.hlo.txt``   — batch-N inference graph (accuracy mode)
+* ``<name>_train.hlo.txt``  — one SGD step: (params..., x, y, lr) ->
+  (params'..., loss); Rust round-trips the parameter literals
+* ``<name>_topology.json``  — the QONNX-like IR for the Rust compiler
+* ``<name>_manifest.json``  — parameter order/shapes + artifact index
+* ``params/<name>/NNN.bin`` — raw little-endian f32 initial parameters
+
+Interchange is HLO **text**: the image's xla_extension 0.5.1 rejects
+jax>=0.5 serialized HloModuleProto (64-bit instruction ids); the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .models import MODELS, topology_only_variants
+
+TRAIN_BATCH_KEY = "train_batch"
+EVAL_BATCH = 64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def flat_param_names(params: dict) -> list[str]:
+    return sorted(params.keys())
+
+
+def export_model(mdef, out_dir: str, skip_train: bool = False) -> dict:
+    """Export one model variant; returns its manifest dict."""
+    params = mdef.init_params(0)
+    names = flat_param_names(params)
+    pdir = os.path.join(out_dir, "params", mdef.name)
+    os.makedirs(pdir, exist_ok=True)
+    plist = []
+    for i, n in enumerate(names):
+        arr = np.asarray(params[n], dtype=np.float32)
+        fname = f"{i:03d}.bin"
+        arr.tofile(os.path.join(pdir, fname))
+        plist.append({"name": n, "shape": list(arr.shape), "file": f"params/{mdef.name}/{fname}"})
+
+    in_shape = tuple(mdef.input_shape)
+
+    def fwd(plist_args, x):
+        p = dict(zip(names, plist_args))
+        out, _ = mdef.apply(p, x, False)
+        return (out,)
+
+    def train_step(plist_args, x, y, lr):
+        from .models import common
+
+        p = dict(zip(names, plist_args))
+        new_p, loss = common.sgd_train_step(mdef.loss_and_updates, p, x, y, lr)
+        # Keep `y` alive even for unsupervised losses (AD ignores labels):
+        # jax DCEs unused arguments at lowering, which would change the
+        # executable arity the Rust runtime marshals against.
+        loss = loss + 0.0 * jnp.sum(y.astype(jnp.float32))
+        return tuple(new_p[n] for n in names) + (loss,)
+
+    pspec = tuple(jax.ShapeDtypeStruct(np.asarray(params[n]).shape, jnp.float32) for n in names)
+
+    manifest = {
+        "name": mdef.name,
+        "task": mdef.task,
+        "flow": mdef.flow,
+        "input_shape": list(in_shape),
+        "num_outputs": mdef.num_outputs,
+        "loss_kind": mdef.loss_kind,
+        "weight_bits": mdef.weight_bits,
+        "params": plist,
+        "artifacts": {},
+    }
+
+    for tag, batch in (("fwd1", 1), (f"fwd{EVAL_BATCH}", EVAL_BATCH)):
+        xspec = jax.ShapeDtypeStruct((batch,) + in_shape, jnp.float32)
+        lowered = jax.jit(fwd).lower(pspec, xspec)
+        path = f"{mdef.name}_{tag}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["artifacts"][tag] = {"file": path, "batch": batch}
+
+    if not skip_train:
+        tb = mdef.train_batch
+        xspec = jax.ShapeDtypeStruct((tb,) + in_shape, jnp.float32)
+        if mdef.loss_kind == "ce":
+            yspec = jax.ShapeDtypeStruct((tb,), jnp.int32)
+        else:
+            yspec = jax.ShapeDtypeStruct((tb,), jnp.int32)  # ignored by AD loss
+        lrspec = jax.ShapeDtypeStruct((), jnp.float32)
+        lowered = jax.jit(train_step).lower(pspec, xspec, yspec, lrspec)
+        path = f"{mdef.name}_train.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["artifacts"]["train"] = {"file": path, "batch": tb}
+
+    topo = mdef.topology()
+    with open(os.path.join(out_dir, f"{mdef.name}_topology.json"), "w") as f:
+        json.dump(topo, f, indent=1)
+    with open(os.path.join(out_dir, f"{mdef.name}_manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="all",
+                    help="comma list of model names, or 'all'")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    wanted = list(MODELS) if args.models == "all" else args.models.split(",")
+    index = {"models": [], "topology_only": []}
+    for name in wanted:
+        mdef = MODELS[name]
+        # IC training graphs are large (interpret-mode conv unrolling); the
+        # e2e driver trains AD + KWS for real and IC gets a shorter budget.
+        print(f"[aot] exporting {name} ...", flush=True)
+        export_model(mdef, args.out)
+        index["models"].append(name)
+
+    for topo in topology_only_variants():
+        path = f"{topo['name']}_topology.json"
+        with open(os.path.join(args.out, path), "w") as f:
+            json.dump(topo, f, indent=1)
+        index["topology_only"].append(topo["name"])
+
+    with open(os.path.join(args.out, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"[aot] wrote {len(index['models'])} models + "
+          f"{len(index['topology_only'])} topology-only variants to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""L1 — Pallas kernels for the quantized dataflow hot-spots.
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); correctness vs the pure-jnp oracles in ``ref.py`` is the
+build-time gate (`make test`).
+"""
+
+from .qmatmul import matmul
+from .binary_gemm import binary_gemm
+from .multithreshold import multithreshold
+
+__all__ = ["matmul", "binary_gemm", "multithreshold"]

@@ -1,0 +1,119 @@
+"""Pallas XNOR-popcount binary GEMM — the CNV-W1A1 (FINN) hot loop.
+
+On the FPGA, a binary MVAU computes ``dot(a, b) = K - 2*popcount(a XOR b)``
+entirely in LUTs (no DSPs — cf. Table 5: IC/FINN uses 0 DSPs on Pynq-Z2).
+The Pallas kernel computes the identical quantity from the bit-plane form:
+inputs are bipolar {-1,+1} floats, the kernel recovers the bit planes,
+accumulates the XOR-popcount per K-tile, and converts back to the signed
+dot product.  The oracle in ``ref.py`` evaluates the same formula with an
+explicit (M, N, K) xor tensor, so the tiled kernel is checked against an
+independently-shaped computation.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the popcount reduction is a
+1-bit matmul; on a real TPU this feeds the MXU as bf16 ±1 multiplies, with
+the XOR trick recovered by the compiler through the affine substitution
+x = 2*xb - 1.  Structure (tiling, revolving accumulator) is shared with
+``qmatmul.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .qmatmul import _pad_to
+
+
+def _binary_kernel(x_ref, w_ref, o_ref, *, k_total: int, bk: int, n_k: int):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Bit planes: {-1,+1} -> {0,1}.  Padding contributed 0.0 which maps to
+    # bit 0; pad columns of x and pad rows of w then XOR to 0^0 = 0 and the
+    # popcount correction below must only count *real* K, handled by the
+    # caller passing the true k_total.
+    xb = (x_ref[...] > 0.0).astype(jnp.float32)
+    wb = (w_ref[...] > 0.0).astype(jnp.float32)
+    # popcount(xor) = sum(xb + wb - 2*xb*wb) = sum_xb + sum_wb - 2*dot.
+    dot = jnp.dot(xb, wb, preferred_element_type=jnp.float32)
+    sum_x = jnp.sum(xb, axis=1, keepdims=True)  # (bm, 1)
+    sum_w = jnp.sum(wb, axis=0, keepdims=True)  # (1, bn)
+    pop = sum_x + sum_w - 2.0 * dot
+    # Accumulate -2*popcount; add K once (on the last tile).
+    o_ref[...] += -2.0 * pop
+
+    @pl.when(kk == n_k - 1)
+    def _finish():
+        o_ref[...] += jnp.float32(k_total)
+
+
+def binary_gemm(
+    xb: jnp.ndarray,
+    wb: jnp.ndarray,
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+) -> jnp.ndarray:
+    """XNOR-popcount GEMM over bipolar inputs; returns f32 signed dot.
+
+    Zero padding is safe: a padded x column is bit 0 and the matching padded
+    w row is bit 0, so xor = 0 and the popcount is unaffected; the +K
+    correction uses the unpadded K.
+    """
+    m, k = xb.shape
+    k2, n = wb.shape
+    assert k == k2
+    bm = min(bm, max(1, m))
+    bn = min(bn, max(1, n))
+    bk = min(bk, max(1, k))
+    xp = _pad_to(_pad_to(xb, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(wb, 0, bk), 1, bn)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_binary_kernel, k_total=k, bk=bk, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp.astype(jnp.float32), wp.astype(jnp.float32))
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def binary_gemm_ste(xb: jnp.ndarray, wb: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable XNOR-popcount GEMM.
+
+    For bipolar inputs ``binary_gemm(x, w) == x @ w`` exactly (proved by the
+    kernel-vs-oracle tests), so the float-product cotangents are the correct
+    gradients: ``dx = g @ wᵀ``, ``dw = xᵀ @ g`` — both routed through the
+    Pallas f32 kernel.  This is the BinaryNet training recipe: binary
+    forward, real-valued backward.
+    """
+    return binary_gemm(xb, wb)
+
+
+def _bg_fwd(xb, wb):
+    return binary_gemm(xb, wb), (xb, wb)
+
+
+def _bg_bwd(res, g):
+    from .qmatmul import matmul_untiled
+
+    xb, wb = res
+    return matmul_untiled(g, wb.T), matmul_untiled(xb.T, g)
+
+
+binary_gemm_ste.defvjp(_bg_fwd, _bg_bwd)

@@ -1,0 +1,53 @@
+"""Pallas multi-threshold activation — FINN's streamlined quantized ReLU.
+
+Streamlining (Umuroglu & Jahre 2017, paper §3.5) folds BN + uniform
+quantized activations into a single integer multi-threshold node:
+``out[b, c] = step * sum_t [x[b, c] >= th[c, t]]``.  On the FPGA this is a
+comparator tree per channel; here it is a Pallas kernel tiled over the batch
+with the full (C, T) threshold plane resident (thresholds are tiny: C x
+(2^bits - 1) entries).
+
+``quant.act_thresholds`` produces the thresholds that make this node exactly
+equal to ``uint_act_quant(relu(x))`` — asserted in the tests, which is the
+streamlining-correctness proof the paper's flow relies on.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .qmatmul import _pad_to
+
+
+def _mt_kernel(x_ref, th_ref, o_ref):
+    x = x_ref[...]  # (bb, C)
+    th = th_ref[...]  # (C, T)
+    hits = (x[:, :, None] >= th[None, :, :]).astype(jnp.float32)
+    o_ref[...] = jnp.sum(hits, axis=-1)
+
+
+def multithreshold(x: jnp.ndarray, thresholds: jnp.ndarray, *, bb: int = 64) -> jnp.ndarray:
+    """Apply per-channel thresholds; returns integer level counts as f32.
+
+    ``x`` is (B, C); ``thresholds`` is (C, T) with rows sorted ascending.
+    """
+    b, c = x.shape
+    c2, t = thresholds.shape
+    assert c == c2
+    bb = min(bb, max(1, b))
+    xp = _pad_to(x, 0, bb)
+    bp = xp.shape[0]
+    out = pl.pallas_call(
+        _mt_kernel,
+        grid=(bp // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, c), lambda i: (i, 0)),
+            pl.BlockSpec((c, t), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, c), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), thresholds.astype(jnp.float32))
+    return out[:b]

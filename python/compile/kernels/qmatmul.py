@@ -1,0 +1,118 @@
+"""Pallas tiled GEMM — the MVAU (matrix-vector-activation unit) hot loop.
+
+This is the compute hot-spot of every dataflow layer in the paper: an FPGA
+MVAU streams activation vectors against a weight matrix with PE x SIMD
+parallelism.  On TPU the same insight maps to MXU tiles: BlockSpec expresses
+the HBM->VMEM schedule that the FPGA did with on-chip weight BRAMs and
+activation FIFOs (see DESIGN.md §Hardware-Adaptation).
+
+Grid is (M/bm, N/bn, K/bk) with a revolving f32 accumulator in the output
+block; the K axis is innermost so each (i, j) output tile stays resident in
+VMEM while weight tiles stream through — the double-buffered schedule the
+paper's reuse-factor knob controls on the FPGA.
+
+MUST run with ``interpret=True``: the CPU PJRT client cannot execute Mosaic
+custom-calls (real-TPU lowering).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, n_k: int):
+    """One (bm, bn) output tile; accumulates over the K grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def matmul_untiled(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+) -> jnp.ndarray:
+    """``x @ w`` via the Pallas MVAU kernel with zero-padding to tile shape.
+
+    Block shapes are multiples of the MXU-friendly (8, 128) (sublane, lane)
+    tiling; the default (256, 256, 512) keeps one x-tile + one w-tile + one
+    f32 accumulator tile at ~(256*512 + 512*256 + 256*256)*4B ~ 1.3 MB,
+    comfortably inside a 16 MB VMEM budget while amortizing interpret-mode
+    grid overhead (the FPGA analogue of the reuse factor: how many MACs
+    share one multiplier).
+
+    AOT note: exported HLO text MUST be printed with
+    ``print_large_constants=True`` — the default printer elides big array
+    constants to ``{...}`` and xla_extension 0.5.1 silently parses the
+    elision as NaN (DESIGN.md §Known-substrate-gotchas).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} != {k2}"
+    bm = min(bm, max(1, m))
+    bn = min(bn, max(1, n))
+    bk = min(bk, max(1, k))
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp.astype(jnp.float32), wp.astype(jnp.float32))
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable Pallas GEMM.
+
+    ``pallas_call`` has no automatic VJP, so the backward pass is spelled
+    out — and itself routed through the Pallas kernel, keeping *all* GEMM
+    work (fwd and bwd) on the L1 hot path:
+    ``dx = g @ wᵀ``, ``dw = xᵀ @ g``.
+    """
+    return matmul_untiled(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul_untiled(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    return matmul_untiled(g, w.T), matmul_untiled(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every Pallas kernel in this package has an independent reference here; the
+pytest + hypothesis suite sweeps shapes/dtypes and asserts allclose.  The
+binary GEMM oracle deliberately uses the *XNOR-popcount* formulation (what
+the FPGA datapath computes) rather than a float dot product, so the test
+also proves the popcount equivalence FINN relies on.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """f32 GEMM oracle."""
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def binary_gemm_ref(xb: jnp.ndarray, wb: jnp.ndarray) -> jnp.ndarray:
+    """XNOR-popcount binary GEMM oracle over bipolar {-1,+1} inputs.
+
+    With a, b in {-1,+1}^K:  dot(a, b) = K - 2 * popcount(a_bits XOR b_bits),
+    where x_bits = (x + 1) / 2.  This is the datapath FINN synthesizes into
+    LUTs; the Pallas kernel computes the same quantity.
+    """
+    k = xb.shape[-1]
+    x_bits = (xb > 0.0).astype(jnp.int32)  # (M, K)
+    w_bits = (wb > 0.0).astype(jnp.int32)  # (K, N)
+    # popcount(xor) across K for every (m, n) pair.
+    xor = jnp.bitwise_xor(x_bits[:, None, :], w_bits.T[None, :, :])  # (M, N, K)
+    pop = jnp.sum(xor, axis=-1)
+    return (k - 2 * pop).astype(jnp.float32)
+
+
+def multithreshold_ref(x: jnp.ndarray, thresholds: jnp.ndarray) -> jnp.ndarray:
+    """Multi-threshold oracle: out[b, c] = sum_t [x[b, c] >= th[c, t]].
+
+    FINN's streamlined quantized activation (Umuroglu & Jahre 2017): any
+    uniform quantized monotone activation is a sum of step functions.
+    """
+    return jnp.sum(
+        (x[:, :, None] >= thresholds[None, :, :]).astype(jnp.float32), axis=-1
+    )
+
+
+def conv2d_nhwc_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int, padding: str) -> jnp.ndarray:
+    """Direct NHWC conv oracle via lax (independent of the im2col path)."""
+    import jax
+
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

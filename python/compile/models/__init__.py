@@ -1,0 +1,17 @@
+"""L2 — the paper's four submitted models (Table 1) as pure-JAX functions.
+
+| name            | task | flow   | precision        | paper params |
+|-----------------|------|--------|------------------|--------------|
+| ic_hls4ml       | IC   | hls4ml | 8-12 bit fixed   | 58 115       |
+| ic_finn         | IC   | FINN   | 1 bit (bipolar)  | 1 542 848 (†)|
+| ad_autoencoder  | AD   | hls4ml | 6-12 bit fixed   | 22 285       |
+| kws_mlp_w3a3    | KWS  | FINN   | 3 bit int        | 259 584      |
+
+(†) our CNV is width-scaled for 1-CPU tractability; see DESIGN.md
+§Hardware-Adaptation.  ``kws_mlp`` also exists in W1A1..W8A8 + FP32
+variants for the Fig. 4 quantization exploration.
+"""
+
+from .registry import MODELS, ModelDef, get_model, topology_only_variants
+
+__all__ = ["MODELS", "ModelDef", "get_model", "topology_only_variants"]

@@ -1,0 +1,113 @@
+"""AD / hls4ml — quantized autoencoder (§3.3) with QDenseBatchnorm.
+
+Submitted model: 128 inputs (mel-spectrogram window downsampled from 640),
+encoder/decoder of two quantized 72-unit FC layers each (QDenseBatchnorm +
+ReLU), an 8-wide bottleneck, and a linear 128-wide output FC.  Weights are
+6-bit fixed point, activations 8-bit (paper: "6-12 bits").  Anomaly score =
+MSE(input, reconstruction); threshold calibration + AUC live in Rust
+(`data::roc_auc`).
+
+Table 4 variants (reference 640-input 9x128 model, folding-only,
+downsampling-only) are emitted as *topologies only* — exactly like the
+paper, where the reference floating-point model was too large to
+synthesize.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import quant
+from . import common, topology as T
+
+NAME = "ad_autoencoder"
+TASK = "ad"
+FLOW = "hls4ml"
+INPUT_DIM = 128
+INPUT_SHAPE = (INPUT_DIM,)
+NUM_OUTPUTS = INPUT_DIM
+HIDDEN = [72, 72, 8, 72, 72]  # 5 hidden layers (paper: 9 -> 5, 128 -> 72)
+W_BITS, W_INT = 6, 2
+A_BITS = 8
+
+
+def _wq(w):
+    return quant.fixed_point_quant(w, W_BITS, W_INT)
+
+
+def _aq(x):
+    return quant.uint_act_quant(x, A_BITS, act_range=4.0)
+
+
+def init_params(seed: int = 0) -> dict:
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    dims = [INPUT_DIM] + HIDDEN
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:]), start=1):
+        key, sub = jax.random.split(key)
+        params[f"l{i:02d}_fc.kernel"] = common.he_init(sub, (din, dout), din)
+        params[f"l{i:02d}_fc.bias"] = jnp.zeros((dout,), jnp.float32)
+        params[f"l{i:02d}_fc.gamma"] = jnp.ones((dout,), jnp.float32)
+        params[f"l{i:02d}_fc.beta"] = jnp.zeros((dout,), jnp.float32)
+        params[f"l{i:02d}_fc.mean"] = jnp.zeros((dout,), jnp.float32)
+        params[f"l{i:02d}_fc.var"] = jnp.ones((dout,), jnp.float32)
+    key, sub = jax.random.split(key)
+    params["l06_out.kernel"] = common.he_init(sub, (HIDDEN[-1], INPUT_DIM), HIDDEN[-1])
+    params["l06_out.bias"] = jnp.zeros((INPUT_DIM,), jnp.float32)
+    return params
+
+
+def apply(params: dict, x: jnp.ndarray, train: bool = False):
+    """x: (B, 128) standardized mel-band window; returns reconstruction."""
+    updates = {}
+    h = x
+    for i in range(1, len(HIDDEN) + 1):
+        h, upd = common.qdense_bn(params, f"l{i:02d}_fc", h, _wq, train)
+        updates.update(upd)
+        h = _aq(jax.nn.relu(h))
+    recon = common.matmul(h, _wq(params["l06_out.kernel"])) + params["l06_out.bias"]
+    return recon, updates
+
+
+def loss_and_updates(params, x, y):
+    """Unsupervised: y is ignored (kept for the uniform train-step ABI)."""
+    recon, updates = apply(params, x, train=True)
+    return common.mse(recon, x), updates
+
+
+def _mlp_topology(name, input_dim, hidden, wbits, folded: bool, rf: int) -> dict:
+    nodes = []
+    dims = [input_dim] + hidden
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:]), start=1):
+        nodes.append(T.dense(f"l{i:02d}_fc", din, dout, wbits, has_bias=True))
+        nodes.append(T.batchnorm(f"l{i:02d}_bn", dout))
+        nodes.append(T.relu(f"l{i:02d}_relu", dout, A_BITS))
+    nodes.append(T.dense("l06_out", hidden[-1], input_dim, wbits, has_bias=True))
+    return T.model_topology(name, TASK, FLOW, (input_dim,), 8, nodes,
+                            folded_bn=folded, reuse_factor=rf)
+
+
+def topology() -> dict:
+    """Submitted model: downsampled input + folded BN + RF 144 (§3.3.2)."""
+    return _mlp_topology(NAME, INPUT_DIM, HIDDEN, W_BITS, True, 144)
+
+
+def topology_reference() -> dict:
+    """MLPerf Tiny AD reference: 640 inputs, 9 hidden FC(128) + bottleneck.
+
+    Float32 weights (wbits 32) — too large to synthesize (Table 4 row 1)."""
+    hidden = [128, 128, 128, 128, 8, 128, 128, 128, 128]
+    return _mlp_topology("ad_reference", 640, hidden, 32, False, 144)
+
+
+def topology_folded() -> dict:
+    """Reference arch, quantized + BN folded, still 640 inputs (row 2)."""
+    hidden = [128, 128, 128, 128, 8, 128, 128, 128, 128]
+    return _mlp_topology("ad_folded", 640, hidden, W_BITS, True, 144)
+
+
+def topology_downsampled() -> dict:
+    """128 inputs, reference-width layers, no folding yet (row 3)."""
+    hidden = [128, 128, 128, 128, 8, 128, 128, 128, 128]
+    return _mlp_topology("ad_downsampled", 128, hidden, W_BITS, False, 144)

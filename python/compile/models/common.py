@@ -1,0 +1,221 @@
+"""Shared L2 building blocks: quantized dense/conv + BN, im2col, losses.
+
+Blocks mirror the paper's two toolchains:
+
+* hls4ml-style ``qdense_bn`` — the QDenseBatchnorm layer of §3.3.1: the FC
+  kernel is folded with the BatchNorm parameters *inside the forward pass*
+  and quantization is applied to the folded kernel, so QAT sees exactly the
+  arithmetic the synthesized design performs.  Running statistics are
+  non-trainable params updated by the train step (momentum 0.9).
+* FINN-style ``qdense``/``qconv`` + separate ``batchnorm`` — BN is kept as a
+  graph node and is *streamlined* into multi-threshold activations by the
+  Rust compiler pass (paper §3.5), not folded into (binary) weights.
+
+All dense/conv compute routes through the L1 Pallas kernels
+(``kernels.matmul`` / ``kernels.binary_gemm``) so the AOT-lowered HLO
+contains the kernel's tiled schedule.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .. import quant
+from ..kernels.binary_gemm import binary_gemm_ste
+from ..kernels.qmatmul import matmul
+
+BN_EPS = 1e-3
+BN_MOMENTUM = 0.9
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization helpers (deterministic, he-normal).
+# ---------------------------------------------------------------------------
+
+def he_init(key, shape, fan_in: int) -> jnp.ndarray:
+    return jax.random.normal(key, shape, dtype=jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+# ---------------------------------------------------------------------------
+# Weight application: pick the Pallas kernel by weight precision.
+# ---------------------------------------------------------------------------
+
+def _qgemm(x: jnp.ndarray, w: jnp.ndarray, wq: Callable[[jnp.ndarray], jnp.ndarray],
+           binary: bool) -> jnp.ndarray:
+    """Quantize weights (STE) then run the Pallas GEMM.
+
+    For bipolar weights *and* bipolar inputs the XNOR-popcount kernel is
+    used; the STE wrapper keeps gradients flowing to the latent f32 weights.
+    """
+    w_q = wq(w)
+    if binary:
+        # XNOR-popcount forward, float-product backward (BinaryNet recipe);
+        # both directions run on the L1 Pallas kernels.
+        return binary_gemm_ste(x, w_q)
+    return matmul(x, w_q)
+
+
+def qdense(x: jnp.ndarray, w: jnp.ndarray, wq, *, binary: bool = False) -> jnp.ndarray:
+    """Quantized dense without bias (FINN-style; BN supplies the shift)."""
+    return _qgemm(x, w, wq, binary)
+
+
+def batchnorm(params: dict, prefix: str, y: jnp.ndarray, train: bool):
+    """BatchNorm over the last axis; returns (out, stats_updates).
+
+    ``stats_updates`` maps param names to new running stats when training,
+    empty when evaluating.
+    """
+    gamma = params[f"{prefix}.gamma"]
+    beta = params[f"{prefix}.beta"]
+    if train:
+        axes = tuple(range(y.ndim - 1))
+        mu = jnp.mean(y, axis=axes)
+        # Manual variance: jnp.var's ddof guard lowers to a scalar-pred
+        # select-with-NaN that miscompiles on xla_extension 0.5.1.
+        var = jnp.mean((y - mu) ** 2, axis=axes)
+        new_mean = BN_MOMENTUM * params[f"{prefix}.mean"] + (1 - BN_MOMENTUM) * mu
+        new_var = BN_MOMENTUM * params[f"{prefix}.var"] + (1 - BN_MOMENTUM) * var
+        updates = {f"{prefix}.mean": new_mean, f"{prefix}.var": new_var}
+    else:
+        mu = params[f"{prefix}.mean"]
+        var = params[f"{prefix}.var"]
+        updates = {}
+    out = gamma * (y - mu) / jnp.sqrt(var + BN_EPS) + beta
+    return out, updates
+
+
+def qdense_bn(params: dict, prefix: str, x: jnp.ndarray, wq, train: bool):
+    """QDenseBatchnorm (§3.3.1): BN folded into the FC kernel pre-quant.
+
+    Training: run the raw FC once to harvest batch statistics, fold BN into
+    (kernel, bias) per eq. 3-4, quantize the folded kernel, recompute the
+    output with the quantized folded weights.  Inference: fold with running
+    stats.  Returns (out, stats_updates).
+    """
+    k = params[f"{prefix}.kernel"]
+    b = params[f"{prefix}.bias"]
+    gamma = params[f"{prefix}.gamma"]
+    beta = params[f"{prefix}.beta"]
+    if train:
+        y_raw = matmul(x, k) + b
+        mu = jnp.mean(y_raw, axis=0)
+        var = jnp.mean((y_raw - mu) ** 2, axis=0)  # see batchnorm() note
+        mu_s = jax.lax.stop_gradient(mu)
+        var_s = jax.lax.stop_gradient(var)
+        updates = {
+            f"{prefix}.mean": BN_MOMENTUM * params[f"{prefix}.mean"] + (1 - BN_MOMENTUM) * mu_s,
+            f"{prefix}.var": BN_MOMENTUM * params[f"{prefix}.var"] + (1 - BN_MOMENTUM) * var_s,
+        }
+    else:
+        mu, var = params[f"{prefix}.mean"], params[f"{prefix}.var"]
+        updates = {}
+    k_f, b_f = quant.fold_bn(k, b, gamma, beta, mu, var, BN_EPS)
+    out = matmul(x, wq(k_f)) + b_f
+    return out, updates
+
+
+# ---------------------------------------------------------------------------
+# Convolution via im2col + Pallas GEMM.
+# ---------------------------------------------------------------------------
+
+def im2col(x: jnp.ndarray, kh: int, kw: int, stride: int, padding: str) -> jnp.ndarray:
+    """(B, H, W, C) -> (B, OH, OW, kh*kw*C) patches, feature order (i, j, c).
+
+    Matches ``w.reshape(kh*kw*ci, co)`` for HWIO weights; equivalence with
+    ``lax.conv_general_dilated`` is asserted in the tests.
+    """
+    if padding == "SAME":
+        ph, pw = (kh - 1) // 2, (kw - 1) // 2
+        x = jnp.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
+    b, h, w_, c = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w_ - kw) // stride + 1
+    cols = [
+        x[:, i : i + (oh - 1) * stride + 1 : stride, j : j + (ow - 1) * stride + 1 : stride, :]
+        for i in range(kh)
+        for j in range(kw)
+    ]
+    return jnp.concatenate(cols, axis=-1)
+
+
+def qconv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    wq,
+    *,
+    stride: int = 1,
+    padding: str = "VALID",
+    binary: bool = False,
+) -> jnp.ndarray:
+    """Quantized NHWC conv: im2col then the Pallas GEMM. w is HWIO."""
+    kh, kw, ci, co = w.shape
+    patches = im2col(x, kh, kw, stride, padding)
+    b, oh, ow, feat = patches.shape
+    flat = patches.reshape(b * oh * ow, feat)
+    wmat = w.reshape(kh * kw * ci, co)
+    out = _qgemm(flat, wmat, wq, binary)
+    return out.reshape(b, oh, ow, co)
+
+
+def maxpool2x2(x: jnp.ndarray) -> jnp.ndarray:
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+# ---------------------------------------------------------------------------
+# Losses.
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  class_weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean (optionally class-weighted) softmax CE; labels are int32.
+
+    Implemented with one-hot contractions rather than ``take_along_axis``:
+    jax lowers fancy indexing to a fill-mode gather whose NaN-guard
+    miscompiles on the image's xla_extension 0.5.1 (returns NaN for valid
+    indices).  One-hot lowers to compare/select + dot, which round-trips
+    through the HLO-text interchange cleanly.
+    """
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    nll = -jnp.sum(logp * onehot, axis=-1)
+    if class_weights is not None:
+        wts = jnp.sum(onehot * class_weights[None, :], axis=-1)
+        return jnp.sum(nll * wts) / jnp.sum(wts)
+    return jnp.mean(nll)
+
+
+def mse(recon: jnp.ndarray, target: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((recon - target) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# Generic SGD train step over a params dict with BN-stats side updates.
+# ---------------------------------------------------------------------------
+
+def sgd_train_step(loss_and_updates, params: dict, x, y, lr):
+    """One SGD step: returns (new_params, loss).
+
+    ``loss_and_updates(params, x, y) -> (loss, stats_updates)``; gradients
+    flow only to trainable params (running stats get zero grads and are
+    overwritten by ``stats_updates``).
+    """
+
+    def lfn(p):
+        loss, upd = loss_and_updates(p, x, y)
+        return loss, upd
+
+    (loss, updates), grads = jax.value_and_grad(lfn, has_aux=True)(params)
+    new = {}
+    for name, value in params.items():
+        if name in updates:
+            new[name] = updates[name]
+        elif name.endswith(".mean") or name.endswith(".var"):
+            new[name] = value
+        else:
+            new[name] = value - lr * grads[name]
+    return new, loss

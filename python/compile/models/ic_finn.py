@@ -1,0 +1,121 @@
+"""IC / FINN — CNV-W1A1 (Umuroglu et al. 2017), width-scaled (§3.2).
+
+Binary (bipolar) weights and activations everywhere except the 8-bit input
+layer.  Topology: three conv blocks of two 3x3 VALID convolutions each, max
+pooling after the first two blocks, then two hidden FC layers and a 10-way
+output; a TopK node computes the classification in hardware (inserted by
+the Rust graph pass).  BatchNorm stays a separate graph node — the FINN
+streamlining pass (§3.5) folds it into multi-threshold activations.
+
+Width scaling: the paper's CNV uses channels (64, 128, 256) and 512-wide FC
+(1 542 848 params); interpret-mode Pallas on one CPU cannot train that, so
+we scale to (16, 32, 64) / 128-wide FC (~97 k params) with identical
+structure.  Documented in DESIGN.md §Hardware-Adaptation; Table 1 reports
+both.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import quant
+from . import common, topology as T
+
+NAME = "ic_finn"
+TASK = "ic"
+FLOW = "finn"
+INPUT_SHAPE = (32, 32, 3)
+NUM_OUTPUTS = 10
+
+CONV_CH = [16, 16, 32, 32, 64, 64]
+FC_DIMS = [128, 128]
+# Paper's full-size CNV for Table 1 reporting.
+PAPER_PARAMS = 1_542_848
+
+
+def _wq(w):
+    return quant.bipolar_quant(w)
+
+
+def init_params(seed: int = 0) -> dict:
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    in_ch = 3
+    for i, ch in enumerate(CONV_CH, start=1):
+        key, sub = jax.random.split(key)
+        params[f"l{i:02d}_conv.kernel"] = common.he_init(sub, (3, 3, in_ch, ch), 9 * in_ch)
+        params[f"l{i:02d}_bn.gamma"] = jnp.ones((ch,), jnp.float32)
+        params[f"l{i:02d}_bn.beta"] = jnp.zeros((ch,), jnp.float32)
+        params[f"l{i:02d}_bn.mean"] = jnp.zeros((ch,), jnp.float32)
+        params[f"l{i:02d}_bn.var"] = jnp.ones((ch,), jnp.float32)
+        in_ch = ch
+    dims = [CONV_CH[-1]] + FC_DIMS + [NUM_OUTPUTS]
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:]), start=7):
+        key, sub = jax.random.split(key)
+        params[f"l{i:02d}_fc.kernel"] = common.he_init(sub, (din, dout), din)
+        params[f"l{i:02d}_bn.gamma"] = jnp.ones((dout,), jnp.float32)
+        params[f"l{i:02d}_bn.beta"] = jnp.zeros((dout,), jnp.float32)
+        params[f"l{i:02d}_bn.mean"] = jnp.zeros((dout,), jnp.float32)
+        params[f"l{i:02d}_bn.var"] = jnp.ones((dout,), jnp.float32)
+    return params
+
+
+def apply(params: dict, x: jnp.ndarray, train: bool = False):
+    """x: (B, 32, 32, 3) in [0, 1]; first layer consumes 8-bit input."""
+    updates = {}
+    h = quant.uint_act_quant(x, 8, act_range=1.0)
+    binary_input = False  # first conv input is 8-bit, not bipolar
+    for i in range(1, 7):
+        h = common.qconv2d(h, params[f"l{i:02d}_conv.kernel"], _wq,
+                           stride=1, padding="VALID", binary=binary_input)
+        h, upd = common.batchnorm(params, f"l{i:02d}_bn", h, train)
+        updates.update(upd)
+        h = quant.bipolar_quant(h)
+        binary_input = True
+        if i in (2, 4):
+            h = common.maxpool2x2(h)
+    h = h.reshape(h.shape[0], -1)
+    n_fc = 1 + len(FC_DIMS)
+    for j in range(n_fc):
+        i = 7 + j
+        last = j == n_fc - 1
+        h = common.qdense(h, params[f"l{i:02d}_fc.kernel"], _wq, binary=True)
+        h, upd = common.batchnorm(params, f"l{i:02d}_bn", h, train)
+        updates.update(upd)
+        if not last:
+            h = quant.bipolar_quant(h)
+    return h, updates
+
+
+def loss_and_updates(params, x, y):
+    logits, updates = apply(params, x, train=True)
+    return common.cross_entropy(logits, y), updates
+
+
+def topology(full_size: bool = False) -> dict:
+    """Our scaled CNV by default; ``full_size=True`` emits the paper's
+    (64,128,256)/512 CNV-W1A1 for resource/metric comparison rows."""
+    conv_ch = [64, 64, 128, 128, 256, 256] if full_size else CONV_CH
+    fc_dims = [512, 512] if full_size else FC_DIMS
+    nodes = []
+    in_ch, hw = 3, 32
+    for i, ch in enumerate(conv_ch, start=1):
+        c = T.conv2d(f"l{i:02d}_conv", hw, in_ch, ch, 3, 1, "VALID", 1)
+        nodes.append(c)
+        nodes.append(T.batchnorm(f"l{i:02d}_bn", ch))
+        nodes.append(T.bipolar_act(f"l{i:02d}_act", ch))
+        hw, in_ch = c["out_hw"], ch
+        if i in (2, 4):
+            nodes.append(T.maxpool(f"l{i:02d}_pool", hw, ch, 2))
+            hw //= 2
+    nodes.append(T.flatten("flatten", hw * hw * in_ch))
+    dims = [hw * hw * in_ch] + fc_dims + [NUM_OUTPUTS]
+    for j, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        i = 7 + j
+        nodes.append(T.dense(f"l{i:02d}_fc", din, dout, 1))
+        nodes.append(T.batchnorm(f"l{i:02d}_bn", dout))
+        if j < len(dims) - 2:
+            nodes.append(T.bipolar_act(f"l{i:02d}_act", dout))
+    name = "ic_finn_full" if full_size else NAME
+    return T.model_topology(name, TASK, FLOW, INPUT_SHAPE, 8, nodes)

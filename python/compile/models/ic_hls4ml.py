@@ -1,0 +1,103 @@
+"""IC / hls4ml — the v0.7 2-stack NAS winner (§3.1.1), QKeras 8-bit QAT.
+
+Architecture (from the BO scan description): 5 conv layers with filters
+[32, 4, 32, 32, 32], kernel sizes [1, 4, 4, 4, 4], strides [1, 1, 1, 4, 1],
+no skip connections, followed by one FC layer over the flattened 8x8x32 =
+2048 features ("an FC layer with 2048 units") to 10 classes.  The paper's
+listing (final conv "4 filters") is inconsistent with both its own 58 115
+parameter count and the 2048-unit FC; this reconstruction hits ~58 k params
+and the 2048-wide FC simultaneously.  Softmax is removed for inference
+(monotonic; §3.1.1) — the Rust graph pass inserts TopK instead.
+
+Weights/activations: fixed-point QAT, 8 total / 2 integer bits (QKeras
+``quantized_bits(8, 2)``), activations 8-bit unsigned after ReLU.  The FC is
+a QDenseBatchnorm (§3.3.1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import quant
+from . import common, topology as T
+
+NAME = "ic_hls4ml"
+TASK = "ic"
+FLOW = "hls4ml"
+INPUT_SHAPE = (32, 32, 3)
+NUM_OUTPUTS = 10
+
+FILTERS = [32, 4, 32, 32, 32]
+KERNELS = [1, 4, 4, 4, 4]
+STRIDES = [1, 1, 1, 4, 1]
+W_BITS, W_INT = 8, 2
+A_BITS = 8
+
+
+def _wq(w):
+    return quant.fixed_point_quant(w, W_BITS, W_INT)
+
+
+def _aq(x):
+    return quant.uint_act_quant(x, A_BITS, act_range=4.0)
+
+
+def init_params(seed: int = 0) -> dict:
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    in_ch = 3
+    for i, (f, k) in enumerate(zip(FILTERS, KERNELS), start=1):
+        key, sub = jax.random.split(key)
+        params[f"l{i:02d}_conv.kernel"] = common.he_init(sub, (k, k, in_ch, f), k * k * in_ch)
+        params[f"l{i:02d}_bn.gamma"] = jnp.ones((f,), jnp.float32)
+        params[f"l{i:02d}_bn.beta"] = jnp.zeros((f,), jnp.float32)
+        params[f"l{i:02d}_bn.mean"] = jnp.zeros((f,), jnp.float32)
+        params[f"l{i:02d}_bn.var"] = jnp.ones((f,), jnp.float32)
+        in_ch = f
+    flat = 8 * 8 * FILTERS[-1]
+    key, sub = jax.random.split(key)
+    params["l06_fc.kernel"] = common.he_init(sub, (flat, NUM_OUTPUTS), flat)
+    params["l06_fc.bias"] = jnp.zeros((NUM_OUTPUTS,), jnp.float32)
+    params["l06_fc.gamma"] = jnp.ones((NUM_OUTPUTS,), jnp.float32)
+    params["l06_fc.beta"] = jnp.zeros((NUM_OUTPUTS,), jnp.float32)
+    params["l06_fc.mean"] = jnp.zeros((NUM_OUTPUTS,), jnp.float32)
+    params["l06_fc.var"] = jnp.ones((NUM_OUTPUTS,), jnp.float32)
+    return params
+
+
+def apply(params: dict, x: jnp.ndarray, train: bool = False):
+    """x: (B, 32, 32, 3) in [0, 1] (the /256 normalization of §3.1.1)."""
+    updates = {}
+    h = quant.uint_act_quant(x, 8, act_range=1.0)  # 8-bit input
+    for i, (k, s) in enumerate(zip(KERNELS, STRIDES), start=1):
+        h = common.qconv2d(h, params[f"l{i:02d}_conv.kernel"], _wq,
+                           stride=s, padding="SAME")
+        h, upd = common.batchnorm(params, f"l{i:02d}_bn", h, train)
+        updates.update(upd)
+        h = _aq(jax.nn.relu(h))
+    h = h.reshape(h.shape[0], -1)
+    logits, upd = common.qdense_bn(params, "l06_fc", h, _wq, train)
+    updates.update(upd)
+    return logits, updates
+
+
+def loss_and_updates(params, x, y):
+    logits, updates = apply(params, x, train=True)
+    return common.cross_entropy(logits, y), updates
+
+
+def topology() -> dict:
+    nodes = []
+    in_ch, hw = 3, 32
+    for i, (f, k, s) in enumerate(zip(FILTERS, KERNELS, STRIDES), start=1):
+        c = T.conv2d(f"l{i:02d}_conv", hw, in_ch, f, k, s, "SAME", W_BITS)
+        nodes.append(c)
+        nodes.append(T.batchnorm(f"l{i:02d}_bn", f))
+        nodes.append(T.relu(f"l{i:02d}_relu", f, A_BITS))
+        hw, in_ch = c["out_hw"], f
+    nodes.append(T.flatten("flatten", hw * hw * in_ch))
+    nodes.append(T.dense("l06_fc", hw * hw * in_ch, NUM_OUTPUTS, W_BITS, has_bias=True))
+    nodes.append(T.batchnorm("l06_bn", NUM_OUTPUTS))
+    nodes.append(T.softmax("softmax", NUM_OUTPUTS))
+    return T.model_topology(NAME, TASK, FLOW, INPUT_SHAPE, 8, nodes)

@@ -1,0 +1,121 @@
+"""KWS / FINN — quantized MLP (§3.4), Brevitas-style QAT, WnAm variants.
+
+Input: 490 MFCC features (10 coefficients x 49 frames, 8-bit).  Three FC
+layers of 256 units, each followed by BatchNorm and a quantized ReLU, and a
+12-way output FC.  Without biases (BN supplies the shift) the parameter
+count is 490*256 + 256*256 + 256*256 + 256*12 = 259 584, exactly the paper's
+Table 1 figure.  The submitted variant is W3A3 (3-bit weights and
+activations, 8-bit input); the Fig. 4 exploration sweeps
+W1A1/W2A2/W3A3/W4A4/W8A8/FP32, each exported as its own AOT artifact and
+trained *for real* from Rust.
+
+Training uses a weighted cross-entropy that suppresses the "unknown" class
+(paper: ~17x over-represented in Speech Commands v2; the suppression weight
+mirrors that imbalance).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import quant
+from . import common, topology as T
+
+TASK = "kws"
+FLOW = "finn"
+INPUT_DIM = 490
+INPUT_SHAPE = (INPUT_DIM,)
+NUM_OUTPUTS = 12
+HIDDEN = [256, 256, 256]
+UNKNOWN_CLASS = 11
+UNKNOWN_WEIGHT = 1.0 / 17.0
+
+VARIANTS = {  # name suffix -> (weight_bits, act_bits); 32 == float
+    "w1a1": (1, 1),
+    "w2a2": (2, 2),
+    "w3a3": (3, 3),
+    "w4a4": (4, 4),
+    "w8a8": (8, 8),
+    "fp32": (32, 32),
+}
+
+
+def _make_quant(wbits: int, abits: int):
+    if wbits >= 32:
+        wq = lambda w: w
+    else:
+        wq = lambda w: quant.int_weight_quant(w, wbits)
+    if abits >= 32:
+        aq = lambda x: jax.nn.relu(x)
+    elif abits == 1:
+        aq = lambda x: quant.bipolar_quant(x)
+    else:
+        aq = lambda x: quant.uint_act_quant(jax.nn.relu(x), abits, act_range=4.0)
+    return wq, aq
+
+
+def init_params(seed: int = 0) -> dict:
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    dims = [INPUT_DIM] + HIDDEN + [NUM_OUTPUTS]
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:]), start=1):
+        key, sub = jax.random.split(key)
+        params[f"l{i:02d}_fc.kernel"] = common.he_init(sub, (din, dout), din)
+        params[f"l{i:02d}_bn.gamma"] = jnp.ones((dout,), jnp.float32)
+        params[f"l{i:02d}_bn.beta"] = jnp.zeros((dout,), jnp.float32)
+        params[f"l{i:02d}_bn.mean"] = jnp.zeros((dout,), jnp.float32)
+        params[f"l{i:02d}_bn.var"] = jnp.ones((dout,), jnp.float32)
+    return params
+
+
+def make_apply(wbits: int, abits: int):
+    wq, aq = _make_quant(wbits, abits)
+    n_layers = len(HIDDEN) + 1
+
+    def apply(params: dict, x: jnp.ndarray, train: bool = False):
+        updates = {}
+        h = quant.uint_act_quant(x, 8, act_range=4.0)  # 8-bit input
+        binary = False
+        for i in range(1, n_layers + 1):
+            h = common.qdense(h, params[f"l{i:02d}_fc.kernel"], wq,
+                              binary=(wbits == 1 and binary))
+            h, upd = common.batchnorm(params, f"l{i:02d}_bn", h, train)
+            updates.update(upd)
+            if i < n_layers:
+                h = aq(h)
+                binary = abits == 1
+        return h, updates
+
+    return apply
+
+
+CLASS_WEIGHTS = jnp.array(
+    [1.0] * UNKNOWN_CLASS + [UNKNOWN_WEIGHT], dtype=jnp.float32
+)
+
+
+def make_loss(wbits: int, abits: int):
+    apply = make_apply(wbits, abits)
+
+    def loss_and_updates(params, x, y):
+        logits, updates = apply(params, x, train=True)
+        return common.cross_entropy(logits, y, CLASS_WEIGHTS), updates
+
+    return loss_and_updates
+
+
+def topology(wbits: int = 3, abits: int = 3) -> dict:
+    suffix = "fp32" if wbits >= 32 else f"w{wbits}a{abits}"
+    nodes = []
+    dims = [INPUT_DIM] + HIDDEN + [NUM_OUTPUTS]
+    n_layers = len(dims) - 1
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:]), start=1):
+        nodes.append(T.dense(f"l{i:02d}_fc", din, dout, wbits))
+        nodes.append(T.batchnorm(f"l{i:02d}_bn", dout))
+        if i < n_layers:
+            if abits == 1:
+                nodes.append(T.bipolar_act(f"l{i:02d}_act", dout))
+            else:
+                nodes.append(T.relu(f"l{i:02d}_relu", dout, min(abits, 32)))
+    return T.model_topology(f"kws_mlp_{suffix}", TASK, FLOW, INPUT_SHAPE, 8, nodes)

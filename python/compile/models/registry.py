@@ -1,0 +1,87 @@
+"""Model registry: one ``ModelDef`` per AOT-exported model variant."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+from . import ad_autoencoder, ic_finn, ic_hls4ml, kws_mlp
+
+
+@dataclass
+class ModelDef:
+    name: str
+    task: str           # ic | ad | kws
+    flow: str           # hls4ml | finn
+    input_shape: tuple
+    num_outputs: int
+    init_params: Callable[[int], dict]
+    apply: Callable     # (params, x, train) -> (out, updates)
+    loss_and_updates: Callable
+    topology: Callable[[], dict]
+    train_batch: int = 32
+    loss_kind: str = "ce"   # ce | mse
+    weight_bits: str = ""   # for Table 1 reporting
+
+
+def _kws_def(suffix: str, wbits: int, abits: int) -> ModelDef:
+    return ModelDef(
+        name=f"kws_mlp_{suffix}",
+        task="kws",
+        flow="finn",
+        input_shape=kws_mlp.INPUT_SHAPE,
+        num_outputs=kws_mlp.NUM_OUTPUTS,
+        init_params=kws_mlp.init_params,
+        apply=kws_mlp.make_apply(wbits, abits),
+        loss_and_updates=kws_mlp.make_loss(wbits, abits),
+        topology=lambda w=wbits, a=abits: kws_mlp.topology(w, a),
+        train_batch=32,
+        loss_kind="ce",
+        weight_bits="fp32" if wbits >= 32 else str(wbits),
+    )
+
+
+MODELS: dict[str, ModelDef] = {
+    "ic_hls4ml": ModelDef(
+        name="ic_hls4ml", task="ic", flow="hls4ml",
+        input_shape=ic_hls4ml.INPUT_SHAPE, num_outputs=ic_hls4ml.NUM_OUTPUTS,
+        init_params=ic_hls4ml.init_params, apply=ic_hls4ml.apply,
+        loss_and_updates=ic_hls4ml.loss_and_updates,
+        topology=ic_hls4ml.topology, train_batch=16, loss_kind="ce",
+        weight_bits="8-12",
+    ),
+    "ic_finn": ModelDef(
+        name="ic_finn", task="ic", flow="finn",
+        input_shape=ic_finn.INPUT_SHAPE, num_outputs=ic_finn.NUM_OUTPUTS,
+        init_params=ic_finn.init_params, apply=ic_finn.apply,
+        loss_and_updates=ic_finn.loss_and_updates,
+        topology=ic_finn.topology, train_batch=16, loss_kind="ce",
+        weight_bits="1",
+    ),
+    "ad_autoencoder": ModelDef(
+        name="ad_autoencoder", task="ad", flow="hls4ml",
+        input_shape=ad_autoencoder.INPUT_SHAPE,
+        num_outputs=ad_autoencoder.NUM_OUTPUTS,
+        init_params=ad_autoencoder.init_params, apply=ad_autoencoder.apply,
+        loss_and_updates=ad_autoencoder.loss_and_updates,
+        topology=ad_autoencoder.topology, train_batch=64, loss_kind="mse",
+        weight_bits="6-12",
+    ),
+}
+for _suffix, (_w, _a) in kws_mlp.VARIANTS.items():
+    MODELS[f"kws_mlp_{_suffix}"] = _kws_def(_suffix, _w, _a)
+
+
+def get_model(name: str) -> ModelDef:
+    return MODELS[name]
+
+
+def topology_only_variants() -> list[dict]:
+    """Topologies that are analyzed (resources/metrics) but never trained:
+    the AD Table-4 ablation rows and the full-size CNV-W1A1."""
+    return [
+        ad_autoencoder.topology_reference(),
+        ad_autoencoder.topology_folded(),
+        ad_autoencoder.topology_downsampled(),
+        ic_finn.topology(full_size=True),
+    ]

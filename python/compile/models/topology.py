@@ -1,0 +1,74 @@
+"""Topology (QONNX-like IR) node constructors.
+
+``aot.py`` writes one ``*_topology.json`` per model; the Rust compiler
+(`rust/src/ir`) parses it, runs the optimization passes of §3 on it, and
+feeds the dataflow simulator + resource estimators.  The schema is a plain
+chain of nodes (all four submitted models are chains — the chosen v0.7 IC
+model has no skip connections, §3.1.1).
+"""
+
+from __future__ import annotations
+
+
+def conv2d(name, in_hw, in_ch, out_ch, kernel, stride, padding, weight_bits,
+           out_hw=None):
+    if out_hw is None:
+        if padding == "SAME":
+            out_hw = (in_hw + stride - 1) // stride
+        else:
+            out_hw = (in_hw - kernel) // stride + 1
+    return {
+        "op": "Conv2D", "name": name, "in_hw": in_hw, "out_hw": out_hw,
+        "in_ch": in_ch, "out_ch": out_ch, "kernel": kernel, "stride": stride,
+        "padding": padding, "weight_bits": weight_bits,
+        "params": kernel * kernel * in_ch * out_ch,
+    }
+
+
+def dense(name, in_features, out_features, weight_bits, has_bias=False):
+    return {
+        "op": "Dense", "name": name, "in_features": in_features,
+        "out_features": out_features, "weight_bits": weight_bits,
+        "has_bias": has_bias,
+        "params": in_features * out_features + (out_features if has_bias else 0),
+    }
+
+
+def batchnorm(name, channels):
+    return {"op": "BatchNorm", "name": name, "channels": channels,
+            "params": 4 * channels}
+
+
+def relu(name, channels, act_bits):
+    return {"op": "ReLU", "name": name, "channels": channels,
+            "act_bits": act_bits, "params": 0}
+
+
+def bipolar_act(name, channels):
+    return {"op": "BipolarAct", "name": name, "channels": channels,
+            "params": 0}
+
+
+def maxpool(name, in_hw, channels, size):
+    return {"op": "MaxPool", "name": name, "in_hw": in_hw,
+            "out_hw": in_hw // size, "channels": channels, "size": size,
+            "params": 0}
+
+
+def flatten(name, features):
+    return {"op": "Flatten", "name": name, "features": features, "params": 0}
+
+
+def softmax(name, channels):
+    return {"op": "Softmax", "name": name, "channels": channels, "params": 0}
+
+
+def model_topology(name, task, flow, input_shape, input_bits, nodes,
+                   folded_bn=False, reuse_factor=1):
+    return {
+        "name": name, "task": task, "flow": flow,
+        "input_shape": list(input_shape), "input_bits": input_bits,
+        "folded_bn": folded_bn, "reuse_factor": reuse_factor,
+        "nodes": nodes,
+        "total_params": sum(n["params"] for n in nodes),
+    }

@@ -1,0 +1,61 @@
+"""Deterministic cross-language PRNG (splitmix64 + Box-Muller).
+
+The synthetic datasets substitute for CIFAR-10 / ToyADMOS / Speech Commands
+(see DESIGN.md §Hardware-Adaptation).  Training happens in Python at build
+time; evaluation happens in Rust on the request path.  Both sides must see
+the *same class templates*, so the template generator is a bit-exact
+splitmix64 stream mirrored in ``rust/src/data/prng.rs``.  All arithmetic is
+u64 wraparound + IEEE-754 f64, which is identical in numpy and Rust.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    """splitmix64 — tiny, fast, and trivially portable."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+    def next_f64(self) -> float:
+        """Uniform in [0, 1) with 53 bits of entropy (matches Rust impl)."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def next_gaussian(self) -> float:
+        """Box-Muller; one sample per call (cosine branch only, portable)."""
+        u1 = self.next_f64()
+        u2 = self.next_f64()
+        # Avoid log(0).
+        if u1 <= 0.0:
+            u1 = 2.0 ** -53
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+    def gaussian_vec(self, n: int) -> np.ndarray:
+        return np.array([self.next_gaussian() for _ in range(n)], dtype=np.float64)
+
+    def uniform_vec(self, n: int) -> np.ndarray:
+        return np.array([self.next_f64() for _ in range(n)], dtype=np.float64)
+
+
+def template_seed(task_seed: int, class_id: int) -> int:
+    """Per-(task, class) stream seed; must match rust/src/data/prng.rs."""
+    return (task_seed * 0x100000001B3 + class_id * 0x9E3779B97F4A7C15 + 1) & MASK64
+
+
+def class_template(task_seed: int, class_id: int, dim: int) -> np.ndarray:
+    """The deterministic class template both languages agree on."""
+    rng = SplitMix64(template_seed(task_seed, class_id))
+    return rng.gaussian_vec(dim)

@@ -1,0 +1,102 @@
+"""Quantizers for QAT (straight-through estimators) and BatchNorm folding.
+
+Three quantizer families, matching the paper's toolchains:
+
+* ``fixed_point_quant``   — QKeras ``quantized_bits(bits, integer)`` style
+  symmetric fixed point, used by the hls4ml models (IC: 8 total / 2 integer,
+  AD: 6-12 bits).
+* ``int_weight_quant`` / ``uint_act_quant`` — Brevitas-style integer
+  quantizers with per-tensor scale, used by the FINN models (KWS W3A3).
+* ``bipolar_quant``       — 1-bit {-1,+1} binarization with hard-tanh STE,
+  used by CNV-W1A1.
+
+Plus ``fold_bn`` — the QDenseBatchnorm folding of §3.3.1 (eq. 3-4):
+``v = gamma / sqrt(var + eps)``, ``k_folded = v * k``,
+``b_folded = v * (b - mu) + beta``.  (The paper's text has a typo,
+``v = gamma * sqrt(...)``; the division is the standard, correct form and is
+what makes folded inference equal BN inference — asserted in the tests.)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _ste(x: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Straight-through estimator: forward q, backward identity."""
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def fixed_point_quant(x: jnp.ndarray, bits: int, int_bits: int) -> jnp.ndarray:
+    """QKeras-style symmetric fixed point with STE.
+
+    ``bits`` total (incl. sign), ``int_bits`` integer bits (excl. sign).
+    Step is ``2^-(bits - 1 - int_bits)``; representable range is
+    ``[-2^int_bits, 2^int_bits - step]``.
+    """
+    frac_bits = bits - 1 - int_bits
+    step = 2.0 ** (-frac_bits)
+    qmin = -(2.0 ** (bits - 1))
+    qmax = 2.0 ** (bits - 1) - 1.0
+    q = jnp.clip(jnp.round(x / step), qmin, qmax) * step
+    return _ste(x, q)
+
+
+def int_weight_quant(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Brevitas-style signed int quant, per-tensor dynamic scale, STE."""
+    if bits == 1:
+        return bipolar_quant(w)
+    qmax = 2.0 ** (bits - 1) - 1.0
+    scale = jax.lax.stop_gradient(jnp.maximum(jnp.max(jnp.abs(w)), 1e-8)) / qmax
+    q = jnp.clip(jnp.round(w / scale), -qmax - 1.0, qmax) * scale
+    return _ste(w, q)
+
+
+def uint_act_quant(x: jnp.ndarray, bits: int, act_range: float = 4.0) -> jnp.ndarray:
+    """Unsigned activation quantizer (applied after ReLU), fixed range, STE.
+
+    A fixed ``act_range`` keeps the activation scale static, which is what a
+    multi-threshold hardware activation implements (thresholds are baked at
+    synthesis time).  ``kernels/multithreshold.py`` realizes exactly this
+    function in its inference form; equality is asserted in the tests.
+    """
+    if bits == 1:
+        # Bipolar activation: sign with hard-tanh STE.
+        return bipolar_quant(x)
+    levels = 2.0 ** bits - 1.0
+    step = act_range / levels
+    q = jnp.clip(jnp.round(x / step), 0.0, levels) * step
+    return _ste(x, q)
+
+
+def bipolar_quant(x: jnp.ndarray) -> jnp.ndarray:
+    """1-bit {-1,+1} binarization; gradient = hard-tanh window (|x| <= 1)."""
+    q = jnp.where(x >= 0.0, 1.0, -1.0)
+    # STE with gradient clipping outside [-1, 1] (BinaryNet-style).
+    clipped = jnp.clip(x, -1.0, 1.0)
+    return clipped + jax.lax.stop_gradient(q - clipped)
+
+
+def fold_bn(kernel, bias, gamma, beta, mean, var, eps: float = 1e-3):
+    """Fold BN into the preceding linear layer (paper eq. 3-4, corrected).
+
+    ``kernel`` has output features on the last axis; BN params are 1-D over
+    that axis.  Returns ``(k_folded, b_folded)`` such that
+    ``x @ k_folded + b_folded == BN(x @ kernel + bias)`` exactly.
+    """
+    v = gamma / jnp.sqrt(var + eps)
+    k_folded = kernel * v  # broadcast over last (output) axis
+    b_folded = v * (bias - mean) + beta
+    return k_folded, b_folded
+
+
+def act_thresholds(bits: int, act_range: float = 4.0) -> jnp.ndarray:
+    """Thresholds realizing ``uint_act_quant ∘ relu`` as a multi-threshold op.
+
+    out = step * sum_t [x >= th_t]  with  th_t = (t + 0.5) * step,
+    t = 0 .. 2^bits - 2.  Matches FINN's streamlined activation.
+    """
+    levels = int(2**bits - 1)
+    step = act_range / levels
+    return (jnp.arange(levels, dtype=jnp.float32) + 0.5) * step

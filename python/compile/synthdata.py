@@ -1,0 +1,141 @@
+"""Synthetic datasets substituting for CIFAR-10 / ToyADMOS / Speech Commands.
+
+See DESIGN.md §Hardware-Adaptation: the paper's datasets are not available
+here, so each task gets a parametric dataset of matched shape and tuned
+difficulty.  Class *templates* come from the cross-language splitmix64
+stream (``prng.py`` == ``rust/src/data/prng.rs``), so Python (training, at
+build time) and Rust (evaluation, on the request path) see the same
+classes; per-sample noise uses independent streams on each side.
+
+Difficulty is tuned so the fp32 models sit in the high-80s/low-90s accuracy
+band (like the paper's reference models) and aggressive quantization
+degrades measurably (the Fig. 4 cliff).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .prng import SplitMix64, class_template
+
+IC_SEED = 0xC1FA_0001
+AD_SEED = 0x70AD_0002
+KWS_SEED = 0x5EEC_0003
+
+IC_CLASSES = 10
+IC_DIM = 32 * 32 * 3
+KWS_CLASSES = 12
+KWS_DIM = 490
+KWS_SILENCE = 10
+KWS_UNKNOWN = 11
+KWS_N_UNKNOWN_TEMPLATES = 25
+AD_DIM = 128
+AD_SMOOTH_WINDOW = 9
+
+IC_TEMPLATE_SCALE = 0.18
+IC_NOISE = 2.0
+KWS_NOISE = 1.25
+AD_NOISE = 0.35
+AD_BUMP_AMP = 1.2
+AD_BUMP_WIDTH = 5.0
+
+
+def _moving_average(x: np.ndarray, window: int) -> np.ndarray:
+    """Centered moving average with edge clamping (mirrored in Rust)."""
+    n = len(x)
+    half = window // 2
+    out = np.empty_like(x)
+    for i in range(n):
+        lo = max(0, i - half)
+        hi = min(n, i + half + 1)
+        out[i] = np.mean(x[lo:hi])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Templates (identical in Rust).
+# ---------------------------------------------------------------------------
+
+def ic_template(c: int) -> np.ndarray:
+    return class_template(IC_SEED, c, IC_DIM)
+
+
+def kws_template(c: int) -> np.ndarray:
+    """Classes 0..9 are keywords; 100+j are the 'unknown' sub-templates."""
+    return class_template(KWS_SEED, c, KWS_DIM)
+
+
+def ad_profile(machine_id: int = 0) -> np.ndarray:
+    """Normal-operation spectral profile: smoothed gaussian template."""
+    raw = class_template(AD_SEED, machine_id, AD_DIM)
+    return _moving_average(raw, AD_SMOOTH_WINDOW)
+
+
+# ---------------------------------------------------------------------------
+# Sample generators (Python side uses numpy vectorized noise for speed).
+# ---------------------------------------------------------------------------
+
+def ic_batch(rng: np.random.Generator, n: int):
+    """Returns (x, y): x in [0,1]^(n, 32, 32, 3), y int32 labels."""
+    y = rng.integers(0, IC_CLASSES, size=n)
+    templates = np.stack([ic_template(c) for c in range(IC_CLASSES)])
+    amp = rng.uniform(0.8, 1.2, size=(n, 1))
+    noise = rng.standard_normal((n, IC_DIM))
+    x = 0.5 + IC_TEMPLATE_SCALE * (amp * templates[y] + IC_NOISE * noise)
+    x = np.clip(x, 0.0, 1.0).astype(np.float32)
+    return x.reshape(n, 32, 32, 3), y.astype(np.int32)
+
+
+def kws_batch(rng: np.random.Generator, n: int):
+    """Returns (x, y): x (n, 490) standardized MFCC-like, y int32 in [0,12)."""
+    y = rng.integers(0, KWS_CLASSES, size=n)
+    x = np.empty((n, KWS_DIM))
+    keyword_templates = np.stack([kws_template(c) for c in range(10)])
+    unk_templates = np.stack(
+        [kws_template(100 + j) for j in range(KWS_N_UNKNOWN_TEMPLATES)]
+    )
+    for i in range(n):
+        noise = rng.standard_normal(KWS_DIM)
+        if y[i] < 10:
+            x[i] = keyword_templates[y[i]] + KWS_NOISE * noise
+        elif y[i] == KWS_SILENCE:
+            x[i] = 0.15 * noise
+        else:  # unknown: one of 25 off-vocabulary words
+            j = rng.integers(0, KWS_N_UNKNOWN_TEMPLATES)
+            x[i] = unk_templates[j] + KWS_NOISE * noise
+    return x.astype(np.float32), y.astype(np.int32)
+
+
+def ad_batch(rng: np.random.Generator, n: int, anomalous: bool = False,
+             machine_id: int = 0):
+    """Returns (x, y): x (n, 128) spectrogram windows, y 0 normal/1 anomaly.
+
+    Anomalies add a localized spectral bump at a random band (a failing
+    bearing's resonance) — the ToyADMOS failure signature analogue.
+    """
+    profile = ad_profile(machine_id)
+    noise = rng.standard_normal((n, AD_DIM))
+    x = profile[None, :] + AD_NOISE * noise
+    if anomalous:
+        centers = rng.uniform(8, AD_DIM - 8, size=(n, 1))
+        bands = np.arange(AD_DIM)[None, :]
+        bump = AD_BUMP_AMP * np.exp(
+            -0.5 * ((bands - centers) / AD_BUMP_WIDTH) ** 2
+        )
+        sign = rng.choice([-1.0, 1.0], size=(n, 1))
+        x = x + sign * bump
+    y = np.full(n, 1 if anomalous else 0, dtype=np.int32)
+    return x.astype(np.float32), y
+
+
+def batch_for(task: str, rng: np.random.Generator, n: int):
+    """Uniform training-batch interface used by aot.py smoke training."""
+    if task == "ic":
+        x, y = ic_batch(rng, n)
+        return x, y
+    if task == "kws":
+        return kws_batch(rng, n)
+    if task == "ad":
+        # Train on normal data only (unsupervised, §2.2).
+        return ad_batch(rng, n, anomalous=False)
+    raise ValueError(task)

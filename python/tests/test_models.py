@@ -1,0 +1,102 @@
+"""Model-level checks: shapes, param counts (Table 1), train-step sanity."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import synthdata
+from compile.models import MODELS, common, topology_only_variants
+
+
+def _trainable_count(params):
+    return sum(
+        int(np.prod(v.shape))
+        for k, v in params.items()
+        if not (k.endswith(".mean") or k.endswith(".var"))
+    )
+
+
+@pytest.mark.parametrize("name", ["kws_mlp_w3a3", "ad_autoencoder"])
+def test_apply_shapes(name):
+    m = MODELS[name]
+    p = m.init_params(0)
+    rng = np.random.default_rng(0)
+    x, _ = synthdata.batch_for(m.task, rng, 3)
+    out, updates = m.apply(p, jnp.array(x), False)
+    assert out.shape == (3, m.num_outputs)
+    assert updates == {}
+
+
+def test_kws_param_count_matches_table1():
+    """490*256 + 256*256 + 256*256 + 256*12 == 259 584 exactly."""
+    p = MODELS["kws_mlp_w3a3"].init_params(0)
+    kernels = sum(
+        int(np.prod(v.shape)) for k, v in p.items() if k.endswith(".kernel")
+    )
+    assert kernels == 259_584
+
+
+def test_ic_hls4ml_param_count_near_table1():
+    """Paper: 58 115; our reconstruction must land within 2%."""
+    p = MODELS["ic_hls4ml"].init_params(0)
+    n = _trainable_count(p)
+    assert abs(n - 58_115) / 58_115 < 0.02, n
+
+
+def test_ic_finn_full_topology_param_count():
+    """The full-size CNV-W1A1 topology must count ~1.54 M params."""
+    topo = [t for t in topology_only_variants() if t["name"] == "ic_finn_full"][0]
+    dense_conv = sum(
+        n["params"] for n in topo["nodes"] if n["op"] in ("Conv2D", "Dense")
+    )
+    # Umuroglu et al. CNV: 1 542 848 conv+fc weights.
+    assert abs(dense_conv - 1_542_848) / 1_542_848 < 0.06, dense_conv
+
+
+@pytest.mark.parametrize("name", ["kws_mlp_w3a3", "ad_autoencoder"])
+def test_train_step_reduces_loss(name):
+    """A handful of SGD steps on a fixed batch must reduce the loss."""
+    m = MODELS[name]
+    p = m.init_params(0)
+    rng = np.random.default_rng(42)
+    x, y = synthdata.batch_for(m.task, rng, 16)
+    x, y = jnp.array(x), jnp.array(y)
+    first = None
+    for _ in range(5):
+        p, loss = common.sgd_train_step(m.loss_and_updates, p, x, y, 0.05)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first, (first, float(loss))
+
+
+def test_bn_running_stats_updated_by_train_step():
+    m = MODELS["kws_mlp_w3a3"]
+    p = m.init_params(0)
+    rng = np.random.default_rng(1)
+    x, y = synthdata.batch_for(m.task, rng, 16)
+    p2, _ = common.sgd_train_step(m.loss_and_updates, p, jnp.array(x), jnp.array(y), 0.05)
+    moved = np.abs(np.asarray(p2["l01_bn.mean"]) - np.asarray(p["l01_bn.mean"])).max()
+    assert moved > 0.0
+
+
+def test_topologies_have_consistent_chains():
+    for name, m in MODELS.items():
+        topo = m.topology()
+        assert topo["nodes"], name
+        assert topo["total_params"] > 0, name
+        ops = {n["op"] for n in topo["nodes"]}
+        assert ops <= {
+            "Conv2D", "Dense", "BatchNorm", "ReLU", "BipolarAct",
+            "MaxPool", "Flatten", "Softmax",
+        }, (name, ops)
+
+
+def test_ad_loss_is_reconstruction():
+    m = MODELS["ad_autoencoder"]
+    p = m.init_params(0)
+    rng = np.random.default_rng(3)
+    x, y = synthdata.batch_for("ad", rng, 8)
+    loss, _ = m.loss_and_updates(p, jnp.array(x), jnp.array(y))
+    recon, _ = m.apply(p, jnp.array(x), True)
+    want = float(jnp.mean((recon - jnp.array(x)) ** 2))
+    assert abs(float(loss) - want) < 1e-5

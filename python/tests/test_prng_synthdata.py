@@ -1,0 +1,105 @@
+"""Cross-language PRNG vectors + synthetic dataset sanity.
+
+The splitmix64 test vectors here are duplicated verbatim in
+``rust/src/data/prng.rs`` — if either side drifts, templates diverge and
+Rust-side evaluation silently measures a different task.
+"""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import synthdata
+from compile.prng import MASK64, SplitMix64, class_template, template_seed
+
+# Reference vectors for seed 0x DEADBEEF (first 4 outputs) — asserted
+# identically in rust/src/data/prng.rs::tests::splitmix_vectors.
+SPLITMIX_SEED = 0xDEADBEEF
+SPLITMIX_EXPECT = [
+    0x4ADFB90F68C9EB9B,
+    0xDE586A3141A10922,
+    0x021FBC2F8E1CFC1D,
+    0x7466CE737BE16790,
+]
+
+
+def test_splitmix64_reference_vectors():
+    rng = SplitMix64(SPLITMIX_SEED)
+    got = [rng.next_u64() for _ in range(4)]
+    assert got == SPLITMIX_EXPECT, [hex(g) for g in got]
+
+
+def test_f64_in_unit_interval():
+    rng = SplitMix64(12345)
+    vals = [rng.next_f64() for _ in range(1000)]
+    assert all(0.0 <= v < 1.0 for v in vals)
+    assert 0.4 < np.mean(vals) < 0.6
+
+
+def test_gaussian_moments():
+    rng = SplitMix64(99)
+    vals = rng.gaussian_vec(4000)
+    assert abs(vals.mean()) < 0.08
+    assert abs(vals.std() - 1.0) < 0.08
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, MASK64), cls=st.integers(0, 200))
+def test_template_deterministic(seed, cls):
+    a = class_template(seed, cls, 32)
+    b = class_template(seed, cls, 32)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_templates_distinct_across_classes():
+    t = [synthdata.ic_template(c) for c in range(10)]
+    for i in range(10):
+        for j in range(i + 1, 10):
+            assert np.abs(t[i] - t[j]).max() > 0.5
+
+
+def test_ic_batch_ranges():
+    rng = np.random.default_rng(0)
+    x, y = synthdata.ic_batch(rng, 32)
+    assert x.shape == (32, 32, 32, 3)
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    assert set(np.unique(y)) <= set(range(10))
+
+
+def test_kws_batch_shapes_and_silence():
+    rng = np.random.default_rng(0)
+    x, y = synthdata.kws_batch(rng, 200)
+    assert x.shape == (200, 490)
+    sil = x[y == synthdata.KWS_SILENCE]
+    spoken = x[y < 10]
+    assert sil.std() < 0.3 * spoken.std()  # silence really is quieter
+
+
+def test_ad_anomalies_have_higher_energy_deviation():
+    rng = np.random.default_rng(0)
+    xn, _ = synthdata.ad_batch(rng, 200, anomalous=False)
+    xa, _ = synthdata.ad_batch(rng, 200, anomalous=True)
+    prof = synthdata.ad_profile(0)
+    dn = np.abs(xn - prof).max(axis=1).mean()
+    da = np.abs(xa - prof).max(axis=1).mean()
+    assert da > dn * 1.3, (dn, da)
+
+
+def test_ad_profile_is_smooth():
+    prof = synthdata.ad_profile(0)
+    raw = class_template(synthdata.AD_SEED, 0, synthdata.AD_DIM)
+    assert np.abs(np.diff(prof)).mean() < 0.5 * np.abs(np.diff(raw)).mean()
+
+
+def test_linear_separability_gap():
+    """Nearest-template classification must beat chance by a wide margin —
+    the task is learnable — but not be perfect — quantization must bite."""
+    rng = np.random.default_rng(7)
+    x, y = synthdata.kws_batch(rng, 400)
+    temps = np.stack([synthdata.kws_template(c) for c in range(10)])
+    keyword_mask = y < 10
+    xs, ys = x[keyword_mask], y[keyword_mask]
+    d = ((xs[:, None, :] - temps[None, :, :]) ** 2).sum(-1)
+    acc = (d.argmin(1) == ys).mean()
+    assert 0.7 < acc <= 1.0, acc

@@ -1,0 +1,97 @@
+"""Quantizer and BN-folding properties (the §3.3.1 math)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+from compile.kernels import multithreshold
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.integers(2, 12), int_bits=st.integers(0, 4),
+       seed=st.integers(0, 2**31 - 1))
+def test_fixed_point_quant_grid(bits, int_bits, seed):
+    """Outputs lie on the 2^-f grid, within range, idempotent."""
+    if int_bits >= bits:
+        return
+    rng = np.random.default_rng(seed)
+    x = jnp.array((8 * rng.standard_normal(64)).astype(np.float32))
+    q = quant.fixed_point_quant(x, bits, int_bits)
+    step = 2.0 ** -(bits - 1 - int_bits)
+    grid = np.asarray(q) / step
+    np.testing.assert_allclose(grid, np.round(grid), atol=1e-4)
+    assert np.all(np.asarray(q) >= -(2.0 ** int_bits) - 1e-6)
+    assert np.all(np.asarray(q) <= 2.0 ** int_bits - step + 1e-6)
+    q2 = quant.fixed_point_quant(q, bits, int_bits)
+    np.testing.assert_allclose(np.asarray(q2), np.asarray(q), atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.integers(2, 8), seed=st.integers(0, 2**31 - 1))
+def test_int_weight_quant_levels(bits, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.array(rng.standard_normal(128).astype(np.float32))
+    q = np.asarray(quant.int_weight_quant(w, bits))
+    # No more than 2^bits distinct levels.
+    assert len(np.unique(np.round(q, 6))) <= 2**bits
+    # Max-magnitude weight survives quantization (scale anchored to it).
+    assert abs(q).max() > 0.9 * abs(np.asarray(w)).max()
+
+
+def test_bipolar_quant_values_and_grad():
+    x = jnp.array([-2.0, -0.3, 0.0, 0.4, 3.0])
+    q = np.asarray(quant.bipolar_quant(x))
+    np.testing.assert_array_equal(q, [-1.0, -1.0, 1.0, 1.0, 1.0])
+    g = jax.grad(lambda v: jnp.sum(quant.bipolar_quant(v)))(x)
+    # Hard-tanh STE: gradient 1 inside [-1,1], 0 outside.
+    np.testing.assert_array_equal(np.asarray(g), [0.0, 1.0, 1.0, 1.0, 0.0])
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 16), c=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
+def test_fold_bn_exact_equivalence(n, c, seed):
+    """x @ k_folded + b_folded == BN(x @ k + b) — eq. 3-4, corrected form."""
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.standard_normal((n, 8)).astype(np.float32))
+    k = jnp.array(rng.standard_normal((8, c)).astype(np.float32))
+    b = jnp.array(rng.standard_normal(c).astype(np.float32))
+    gamma = jnp.array((1 + 0.5 * rng.standard_normal(c)).astype(np.float32))
+    beta = jnp.array(rng.standard_normal(c).astype(np.float32))
+    mean = jnp.array(rng.standard_normal(c).astype(np.float32))
+    var = jnp.array((0.5 + rng.random(c)).astype(np.float32))
+    eps = 1e-3
+    kf, bf = quant.fold_bn(k, b, gamma, beta, mean, var, eps)
+    folded = x @ kf + bf
+    bn = gamma * ((x @ k + b) - mean) / jnp.sqrt(var + eps) + beta
+    np.testing.assert_allclose(np.asarray(folded), np.asarray(bn), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(bits=st.integers(2, 6), seed=st.integers(0, 2**31 - 1))
+def test_multithreshold_realizes_act_quant(bits, seed):
+    """Streamlining correctness: MT node == uint_act_quant ∘ relu / step.
+
+    This is the proof obligation behind FINN's streamlining pass (§3.5):
+    the quantized activation and its threshold implementation agree on
+    every input.
+    """
+    rng = np.random.default_rng(seed)
+    c = 6
+    x = jnp.array((3.0 * rng.standard_normal((9, c))).astype(np.float32))
+    th_row = quant.act_thresholds(bits, act_range=4.0)
+    th = jnp.tile(th_row[None, :], (c, 1))
+    levels = multithreshold(x, th)
+    step = 4.0 / (2**bits - 1)
+    via_mt = step * np.asarray(levels)
+    direct = np.asarray(quant.uint_act_quant(jax.nn.relu(x), bits, act_range=4.0))
+    np.testing.assert_allclose(via_mt, direct, atol=1e-5)
+
+
+def test_uint_act_quant_levels():
+    x = jnp.linspace(-1, 6, 200)
+    q = np.asarray(quant.uint_act_quant(x, 3, act_range=4.0))
+    assert q.min() >= 0.0
+    assert q.max() <= 4.0 + 1e-6
+    assert len(np.unique(np.round(q, 5))) <= 8

@@ -1,0 +1,129 @@
+//! Target platform descriptors (§4.2.3).
+//!
+//! * **TUL Pynq-Z2** — Zynq-7020 SoC (xc7z020-1clg400c): ARM Cortex-A9 PS +
+//!   PL with 53 200 LUTs / 106 400 FFs / 140 36-kb BRAMs / 220 DSPs.
+//! * **Digilent Arty A7-100T** — pure FPGA (xc7a100t-1csg324) with a soft
+//!   MicroBlaze + MIG DDR controller: 63 400 LUTs / 126 800 FFs / 135
+//!   36-kb BRAMs / 240 DSPs.
+//!
+//! Static power coefficients are calibrated against the paper's Table 5
+//! energies (total board power ≈ 1.6-1.8 W on Pynq-Z2 — dominated by the
+//! ARM PS — and ≈ 1.6-2.2 W on the Arty where the soft MIG keeps the
+//! fabric busy).
+
+
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BoardKind {
+    PynqZ2,
+    ArtyA7100T,
+}
+
+#[derive(Clone, Debug)]
+pub struct Board {
+    pub kind: BoardKind,
+    pub name: &'static str,
+    pub part: &'static str,
+    /// Available fabric resources.
+    pub luts: u64,
+    pub lutram: u64,
+    pub ffs: u64,
+    /// 36-kb BRAM blocks (Table 5 counts in 36 kb units).
+    pub bram36: f64,
+    pub dsps: u64,
+    /// Fabric clock for the accelerator (Hz).
+    pub clock_hz: f64,
+    /// Idle platform power (W): PS / soft-core + memory controller.
+    pub static_power_w: f64,
+    /// Host processing: SoC uses hard ARM + off-chip DDR; pure FPGA uses a
+    /// soft MicroBlaze + soft MIG (§4.2.2).
+    pub soft_processor: bool,
+}
+
+pub fn pynq_z2() -> Board {
+    Board {
+        kind: BoardKind::PynqZ2,
+        name: "Pynq-Z2",
+        part: "xc7z020-1clg400c",
+        luts: 53_200,
+        lutram: 17_400,
+        ffs: 106_400,
+        bram36: 140.0,
+        dsps: 220,
+        clock_hz: 100e6,
+        static_power_w: 1.45,
+        soft_processor: false,
+    }
+}
+
+pub fn arty_a7_100t() -> Board {
+    Board {
+        kind: BoardKind::ArtyA7100T,
+        name: "Arty A7-100T",
+        part: "xc7a100t-1csg324",
+        luts: 63_400,
+        lutram: 19_000,
+        ffs: 126_800,
+        bram36: 135.0,
+        dsps: 240,
+        // Slightly slower achievable fabric clock on the -1 Artix part with
+        // the soft MIG sharing the fabric (paper latencies are ~1.2-2.4x
+        // Pynq's for the same designs).
+        clock_hz: 83e6,
+        static_power_w: 1.9,
+        soft_processor: true,
+    }
+}
+
+pub fn all_boards() -> Vec<Board> {
+    vec![pynq_z2(), arty_a7_100t()]
+}
+
+/// MicroBlaze soft-processor overhead on pure-FPGA targets (§4.2.2):
+/// instruction/data caches (1-16 kB) + OCM (32-128 kB) in BRAM, plus MIG.
+#[derive(Clone, Debug)]
+pub struct SoftSystemOverhead {
+    pub luts: u64,
+    pub ffs: u64,
+    pub bram36: f64,
+    pub dsps: u64,
+}
+
+pub fn soft_system_overhead(board: &Board) -> SoftSystemOverhead {
+    if board.soft_processor {
+        SoftSystemOverhead {
+            luts: 4_800,  // MicroBlaze + MIG + UART Lite + AXI interconnect
+            ffs: 5_600,
+            bram36: 18.0, // caches + 64 kB OCM
+            dsps: 2,
+        }
+    } else {
+        SoftSystemOverhead { luts: 1_800, ffs: 2_400, bram36: 2.0, dsps: 0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_available_rows() {
+        let p = pynq_z2();
+        assert_eq!(p.luts, 53_200);
+        assert_eq!(p.ffs, 106_400);
+        assert_eq!(p.bram36 as u64, 140);
+        assert_eq!(p.dsps, 220);
+        let a = arty_a7_100t();
+        assert_eq!(a.luts, 63_400);
+        assert_eq!(a.dsps, 240);
+    }
+
+    #[test]
+    fn arty_carries_soft_system() {
+        let a = arty_a7_100t();
+        let o = soft_system_overhead(&a);
+        assert!(a.soft_processor && o.bram36 > 10.0);
+        let p = pynq_z2();
+        assert!(soft_system_overhead(&p).luts < o.luts);
+    }
+}

@@ -1,0 +1,140 @@
+//! Async batching inference engine (std-threads; the image's vendored
+//! crate set has no tokio, so the event loop is a plain channel-driven
+//! worker — same architecture as a vLLM-style router: request queue →
+//! dynamic batcher → device executor).
+//!
+//! Requests are coalesced into device batches of up to the AOT batch size
+//! within a bounded batching window; the worker owns the `LoadedModel`
+//! (PJRT executables are not Sync) and replies over per-request channels.
+
+use crate::runtime::{argmax, LoadedModel, Runtime};
+use anyhow::{anyhow, Result};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One inference request.
+pub struct Request {
+    pub x: Vec<f32>,
+    pub reply: mpsc::Sender<Reply>,
+}
+
+/// The engine's answer.
+#[derive(Clone, Debug)]
+pub struct Reply {
+    pub output: Vec<f32>,
+    pub top1: usize,
+    /// Device batch this request rode in (observability).
+    pub batch_size: usize,
+    pub queue_us: u128,
+}
+
+/// Dynamic batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 64, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Handle for submitting requests; clone freely across threads.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<(Request, Instant)>,
+}
+
+impl EngineHandle {
+    pub fn infer(&self, x: Vec<f32>) -> Result<Reply> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send((Request { x, reply: reply_tx }, Instant::now()))
+            .map_err(|_| anyhow!("engine stopped"))?;
+        reply_rx.recv().map_err(|_| anyhow!("engine dropped request"))
+    }
+}
+
+/// Run the engine on the current thread until the handle side hangs up.
+/// Call from a dedicated `std::thread`; returns total requests served.
+pub fn serve(
+    rt: &Runtime,
+    model: &mut LoadedModel,
+    policy: BatchPolicy,
+    rx: mpsc::Receiver<(Request, Instant)>,
+) -> Result<u64> {
+    let device_batch = model.ensure_fwd_batch(rt)?;
+    let max_batch = policy.max_batch.min(device_batch);
+    let feat = model.manifest.input_elems();
+    let n_out = model.manifest.num_outputs;
+    let mut served = 0u64;
+
+    loop {
+        // Block for the first request of a batch.
+        let Ok(first) = rx.recv() else {
+            return Ok(served);
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + policy.max_wait;
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(req) => batch.push(req),
+                Err(_) => break,
+            }
+        }
+
+        // Pad to the device batch and execute once.
+        let mut x = vec![0.0f32; device_batch * feat];
+        for (i, (req, _)) in batch.iter().enumerate() {
+            x[i * feat..(i + 1) * feat].copy_from_slice(&req.x);
+        }
+        let out = model.infer_batch(rt, &x)?;
+        for (i, (req, t0)) in batch.iter().enumerate() {
+            let slice = out[i * n_out..(i + 1) * n_out].to_vec();
+            let top1 = argmax(&slice);
+            let _ = req.reply.send(Reply {
+                output: slice,
+                top1,
+                batch_size: batch.len(),
+                queue_us: t0.elapsed().as_micros(),
+            });
+            served += 1;
+        }
+    }
+}
+
+/// Spawn the engine on a background thread, returning a handle.  PJRT
+/// handles are not `Send`, so the runtime and model are constructed
+/// *inside* the worker thread from the artifact directory.
+pub fn spawn(
+    art_dir: std::path::PathBuf,
+    model_name: String,
+    policy: BatchPolicy,
+) -> (EngineHandle, std::thread::JoinHandle<Result<u64>>) {
+    let (tx, rx) = mpsc::channel();
+    let join = std::thread::spawn(move || {
+        let rt = Runtime::cpu()?;
+        let mut model = LoadedModel::load(&art_dir, &model_name)?;
+        serve(&rt, &mut model, policy, rx)
+    });
+    (EngineHandle { tx }, join)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Engine tests that need PJRT + artifacts live in rust/tests/.
+    #[test]
+    fn batch_policy_defaults() {
+        let p = BatchPolicy::default();
+        assert_eq!(p.max_batch, 64);
+        assert!(p.max_wait >= Duration::from_millis(1));
+    }
+}

@@ -1,0 +1,233 @@
+//! The end-to-end codesign flow (the paper's §5 "common methodology"):
+//!
+//! topology → optimization passes → folding schedule → FIFO-depth
+//! optimization → resource estimate → board-fit check → dataflow latency →
+//! power/energy — one call, one [`FlowReport`] per (model, board).
+//!
+//! This is the Rust-side equivalent of `hls4ml convert + vivado_hls csynth`
+//! / `FINN build_dataflow`, driven entirely from the AOT topology JSON.
+
+use crate::board::Board;
+use crate::dataflow::schedule::{schedule, ScheduleConfig, ScheduledDesign};
+use crate::dataflow::Simulator;
+use crate::fifo::{depth_range, optimize_fifos, DepthPolicy, FifoOptResult};
+use crate::ir::Graph;
+use crate::passes::PassManager;
+use crate::power::PowerModel;
+use crate::resources::{estimate, CostModel, ResourceReport};
+use anyhow::Result;
+
+/// Which optimizations to run — the Table 3/4 ablation axes.
+#[derive(Clone, Copy, Debug)]
+pub struct FlowOptions {
+    pub run_passes: bool,
+    pub fifo_opt: bool,
+    /// Only meaningful for hls4ml (Table 3): merge ReLU stages.
+    pub relu_merge: bool,
+    /// Only meaningful for hls4ml (Table 4): fold BN into FC.
+    pub bn_fold: bool,
+}
+
+impl Default for FlowOptions {
+    fn default() -> Self {
+        Self { run_passes: true, fifo_opt: true, relu_merge: true, bn_fold: true }
+    }
+}
+
+impl FlowOptions {
+    pub fn none() -> Self {
+        Self { run_passes: false, fifo_opt: false, relu_merge: false, bn_fold: false }
+    }
+}
+
+/// Everything the flow produces for one (model, board) pair.
+#[derive(Clone, Debug)]
+pub struct FlowReport {
+    pub model: String,
+    pub board: &'static str,
+    pub optimized: Graph,
+    pub fifo: FifoOptResult,
+    pub fifo_range: (usize, usize),
+    pub resources: ResourceReport,
+    pub fits: bool,
+    pub latency_cycles: u64,
+    pub latency_s: f64,
+    pub ii_cycles: u64,
+    pub power_w: f64,
+    pub energy_per_inference_uj: f64,
+    pub pass_log: Vec<String>,
+}
+
+/// Run the full flow.
+pub fn run_flow(
+    g: &Graph,
+    board: &Board,
+    opts: &FlowOptions,
+    schedule_cfg: &ScheduleConfig,
+) -> Result<FlowReport> {
+    // 1. Compiler passes.
+    let mut pm = if opts.run_passes {
+        let mut pm = PassManager::for_flow(&g.flow);
+        if g.flow == "hls4ml" {
+            if !opts.relu_merge {
+                pm.passes.retain(|(n, _)| *n != "merge_relu");
+            }
+            if !opts.bn_fold {
+                pm.passes.retain(|(n, _)| *n != "fold_bn_into_linear");
+            }
+        }
+        pm
+    } else {
+        PassManager::baseline()
+    };
+    let optimized = pm.run(g);
+    optimized.validate()?;
+
+    // 2. Folding schedule + dataflow network.
+    let design: ScheduledDesign = schedule(&optimized, schedule_cfg);
+    let sim = Simulator::new(design.stage_specs());
+
+    // 3. FIFO sizing (§3.1.2): optimized or naive depths.
+    let policy = DepthPolicy::for_flow(&g.flow);
+    let fifo = if opts.fifo_opt {
+        optimize_fifos(&sim, policy)
+    } else {
+        let depths = crate::fifo::naive_depths(&sim);
+        let run = sim.run(&depths, 1);
+        crate::fifo::FifoOptResult {
+            unoptimized_latency: run.latency_cycles,
+            optimized_latency: run.latency_cycles,
+            sizing_run: run,
+            depths,
+        }
+    };
+    // Interior FIFO range (skip the I/O FIFOs for Table 2 reporting).
+    let interior = if fifo.depths.len() > 2 {
+        &fifo.depths[1..fifo.depths.len() - 1]
+    } else {
+        &fifo.depths[..]
+    };
+    let fifo_range = depth_range(interior);
+
+    // 4. Resources + fit.
+    let resources = estimate(
+        &design,
+        optimized.reuse_factor,
+        &fifo.depths,
+        board,
+        &CostModel::default(),
+    );
+    let fits = resources.total.fits(board);
+
+    // 5. Latency + power + energy.
+    let latency_cycles = fifo.optimized_latency;
+    let latency_s = latency_cycles as f64 / board.clock_hz;
+    let pm_power = PowerModel::default();
+    let power = pm_power.power(&resources.total, board);
+    let energy = pm_power.energy_per_inference_uj(&resources.total, board, latency_s);
+
+    Ok(FlowReport {
+        model: g.name.clone(),
+        board: board.name,
+        optimized,
+        fifo_range,
+        fifo,
+        resources,
+        fits,
+        latency_cycles,
+        latency_s,
+        ii_cycles: 0,
+        power_w: power.total_w,
+        energy_per_inference_uj: energy,
+        pass_log: pm.log,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::board::pynq_z2;
+    use crate::ir::Graph;
+
+    fn kws_graph() -> Graph {
+        Graph::from_json_str(
+            r#"{
+            "name":"kws_small","task":"kws","flow":"finn","input_shape":[64],
+            "input_bits":8,"nodes":[
+              {"op":"Dense","name":"fc1","in_features":64,"out_features":32,
+               "weight_bits":3,"params":2048},
+              {"op":"BatchNorm","name":"bn1","channels":32,"params":128},
+              {"op":"ReLU","name":"r1","channels":32,"act_bits":3,"params":0},
+              {"op":"Dense","name":"fc2","in_features":32,"out_features":12,
+               "weight_bits":3,"params":384},
+              {"op":"BatchNorm","name":"bn2","channels":12,"params":48}
+            ],"total_params":2608}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn flow_runs_end_to_end() {
+        let r = run_flow(
+            &kws_graph(),
+            &pynq_z2(),
+            &FlowOptions::default(),
+            &ScheduleConfig::default(),
+        )
+        .unwrap();
+        assert!(r.fits, "{:?}", r.resources.total);
+        assert!(r.latency_s > 0.0 && r.latency_s < 1.0);
+        assert!(r.energy_per_inference_uj > 0.0);
+        assert!(r.optimized.nodes.iter().any(|n| n.op() == "MultiThreshold"));
+    }
+
+    #[test]
+    fn fifo_opt_does_not_change_latency() {
+        let with = run_flow(
+            &kws_graph(),
+            &pynq_z2(),
+            &FlowOptions::default(),
+            &ScheduleConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(with.fifo.unoptimized_latency, with.fifo.optimized_latency);
+    }
+
+    #[test]
+    fn finn_depths_are_powers_of_two() {
+        let r = run_flow(
+            &kws_graph(),
+            &pynq_z2(),
+            &FlowOptions::default(),
+            &ScheduleConfig::default(),
+        )
+        .unwrap();
+        for &d in &r.fifo.depths {
+            assert!(d.is_power_of_two(), "{d}");
+        }
+    }
+
+    #[test]
+    fn unoptimized_flow_uses_more_resources() {
+        let opt = run_flow(
+            &kws_graph(),
+            &pynq_z2(),
+            &FlowOptions::default(),
+            &ScheduleConfig::default(),
+        )
+        .unwrap();
+        let raw = run_flow(
+            &kws_graph(),
+            &pynq_z2(),
+            &FlowOptions::none(),
+            &ScheduleConfig::default(),
+        )
+        .unwrap();
+        assert!(
+            raw.resources.total.luts > opt.resources.total.luts,
+            "raw={:?} opt={:?}",
+            raw.resources.total,
+            opt.resources.total
+        );
+    }
+}

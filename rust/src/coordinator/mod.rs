@@ -1,0 +1,81 @@
+//! L3 coordinator: the codesign flow driver + the inference engine + the
+//! Rust-driven SGD training loop (the paper's workflow, owned end-to-end
+//! by Rust with Python only at AOT time).
+
+pub mod engine;
+pub mod flow;
+
+use crate::data::{self, prng::SplitMix64};
+use crate::runtime::{LoadedModel, Runtime};
+use anyhow::Result;
+
+/// Training-loop configuration for the e2e driver.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    /// Decay the LR by this factor over the run (cosine-free simple decay).
+    pub final_lr_frac: f32,
+    pub log_every: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self { steps: 300, lr: 0.08, final_lr_frac: 0.1, log_every: 25, seed: 0x7121 }
+    }
+}
+
+/// One logged point of the loss curve.
+#[derive(Clone, Copy, Debug)]
+pub struct LossPoint {
+    pub step: usize,
+    pub loss: f32,
+    pub lr: f32,
+}
+
+/// Train a loaded model on synthetic data via the AOT train-step
+/// executable.  Returns the loss curve (recorded every `log_every` steps,
+/// plus first and last).
+pub fn train(
+    rt: &Runtime,
+    model: &mut LoadedModel,
+    cfg: &TrainConfig,
+) -> Result<Vec<LossPoint>> {
+    let batch = model.ensure_train(rt)?;
+    let task = model.manifest.task.clone();
+    let mut rng = SplitMix64::new(cfg.seed);
+    let mut curve = Vec::new();
+    for step in 0..cfg.steps {
+        let (x, y) = data::train_batch(&task, &mut rng, batch);
+        let t = step as f32 / cfg.steps.max(1) as f32;
+        let lr = cfg.lr * (1.0 - t + t * cfg.final_lr_frac);
+        let loss = model.train_step(rt, &x, &y, lr)?;
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            curve.push(LossPoint { step, loss, lr });
+        }
+    }
+    Ok(curve)
+}
+
+/// Evaluate accuracy (classification) or AUC (AD) over a fresh synthetic
+/// test set of `n` samples, batch-1 through the EEMBC-style path.
+pub fn evaluate(rt: &Runtime, model: &mut LoadedModel, n: usize, seed: u64) -> Result<f64> {
+    let task = model.manifest.task.clone();
+    let ts = data::test_set(&task, n, seed);
+    if task == "ad" {
+        let mut scores = Vec::with_capacity(n);
+        for s in &ts.samples {
+            scores.push((model.anomaly_score1(rt, &s.x)?, s.label == 1));
+        }
+        Ok(data::roc_auc(&scores))
+    } else {
+        let mut correct = 0usize;
+        for s in &ts.samples {
+            if model.classify1(rt, &s.x)? == s.label as usize {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / n as f64)
+    }
+}

@@ -1,0 +1,302 @@
+//! Synthetic datasets (request-path side) + ROC/AUC.
+//!
+//! Mirrors `python/compile/synthdata.py` — identical class templates via
+//! the shared splitmix64 stream, independent per-sample noise.  See
+//! DESIGN.md §Hardware-Adaptation for the dataset substitutions
+//! (CIFAR-10 → class-template images, ToyADMOS → spectral-profile frames,
+//! Speech Commands v2 → MFCC-like keyword vectors).
+
+pub mod prng;
+
+use prng::{class_template, SplitMix64};
+
+pub const IC_SEED: u64 = 0xC1FA_0001;
+pub const AD_SEED: u64 = 0x70AD_0002;
+pub const KWS_SEED: u64 = 0x5EEC_0003;
+
+pub const IC_CLASSES: usize = 10;
+pub const IC_DIM: usize = 32 * 32 * 3;
+pub const KWS_CLASSES: usize = 12;
+pub const KWS_DIM: usize = 490;
+pub const KWS_SILENCE: usize = 10;
+pub const KWS_UNKNOWN: usize = 11;
+pub const KWS_N_UNKNOWN_TEMPLATES: usize = 25;
+pub const AD_DIM: usize = 128;
+pub const AD_SMOOTH_WINDOW: usize = 9;
+
+pub const IC_TEMPLATE_SCALE: f64 = 0.18;
+pub const IC_NOISE: f64 = 2.0;
+pub const KWS_NOISE: f64 = 1.25;
+pub const AD_NOISE: f64 = 0.35;
+pub const AD_BUMP_AMP: f64 = 1.2;
+pub const AD_BUMP_WIDTH: f64 = 5.0;
+
+/// Centered moving average with edge clamping (mirror of Python).
+fn moving_average(x: &[f64], window: usize) -> Vec<f64> {
+    let n = x.len();
+    let half = window / 2;
+    (0..n)
+        .map(|i| {
+            let lo = i.saturating_sub(half);
+            let hi = (i + half + 1).min(n);
+            x[lo..hi].iter().sum::<f64>() / (hi - lo) as f64
+        })
+        .collect()
+}
+
+pub fn ic_template(class: usize) -> Vec<f64> {
+    class_template(IC_SEED, class as u64, IC_DIM)
+}
+
+pub fn kws_template(class: usize) -> Vec<f64> {
+    class_template(KWS_SEED, class as u64, KWS_DIM)
+}
+
+pub fn ad_profile(machine_id: usize) -> Vec<f64> {
+    let raw = class_template(AD_SEED, machine_id as u64, AD_DIM);
+    moving_average(&raw, AD_SMOOTH_WINDOW)
+}
+
+/// A labeled sample: flattened f32 features + integer label.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub x: Vec<f32>,
+    pub label: i32,
+}
+
+/// Deterministic test-set generator for a task.
+pub struct TestSet {
+    pub task: String,
+    pub samples: Vec<Sample>,
+}
+
+/// IC: template image + amplitude jitter + gaussian noise, clipped to [0,1].
+pub fn ic_sample(rng: &mut SplitMix64, class: usize, templates: &[Vec<f64>]) -> Sample {
+    let amp = rng.uniform_range(0.8, 1.2);
+    let t = &templates[class];
+    let x = (0..IC_DIM)
+        .map(|i| {
+            let v = 0.5 + IC_TEMPLATE_SCALE * (amp * t[i] + IC_NOISE * rng.next_gaussian());
+            v.clamp(0.0, 1.0) as f32
+        })
+        .collect();
+    Sample { x, label: class as i32 }
+}
+
+pub fn kws_sample(
+    rng: &mut SplitMix64,
+    class: usize,
+    keyword_templates: &[Vec<f64>],
+    unknown_templates: &[Vec<f64>],
+) -> Sample {
+    let x: Vec<f32> = if class < 10 {
+        let t = &keyword_templates[class];
+        (0..KWS_DIM)
+            .map(|i| (t[i] + KWS_NOISE * rng.next_gaussian()) as f32)
+            .collect()
+    } else if class == KWS_SILENCE {
+        (0..KWS_DIM).map(|_| (0.15 * rng.next_gaussian()) as f32).collect()
+    } else {
+        let j = rng.next_below(KWS_N_UNKNOWN_TEMPLATES as u64) as usize;
+        let t = &unknown_templates[j];
+        (0..KWS_DIM)
+            .map(|i| (t[i] + KWS_NOISE * rng.next_gaussian()) as f32)
+            .collect()
+    };
+    Sample { x, label: class as i32 }
+}
+
+pub fn ad_sample(rng: &mut SplitMix64, anomalous: bool, profile: &[f64]) -> Sample {
+    let mut x: Vec<f64> = (0..AD_DIM)
+        .map(|i| profile[i] + AD_NOISE * rng.next_gaussian())
+        .collect();
+    if anomalous {
+        let center = rng.uniform_range(8.0, (AD_DIM - 8) as f64);
+        let sign = if rng.next_f64() < 0.5 { -1.0 } else { 1.0 };
+        for (i, v) in x.iter_mut().enumerate() {
+            let d = (i as f64 - center) / AD_BUMP_WIDTH;
+            *v += sign * AD_BUMP_AMP * (-0.5 * d * d).exp();
+        }
+    }
+    Sample {
+        x: x.into_iter().map(|v| v as f32).collect(),
+        label: anomalous as i32,
+    }
+}
+
+/// Build the benchmark test set for a task.  Sizes follow the MLPerf Tiny
+/// on-device subsets (IC: 200 balanced, KWS: 1000, AD: 2459→scaled 250+250).
+pub fn test_set(task: &str, n: usize, seed: u64) -> TestSet {
+    let mut rng = SplitMix64::new(seed);
+    let samples = match task {
+        "ic" => {
+            let templates: Vec<_> = (0..IC_CLASSES).map(ic_template).collect();
+            // Class-balanced, like the v0.7 subset (§2.1).
+            (0..n).map(|i| ic_sample(&mut rng, i % IC_CLASSES, &templates)).collect()
+        }
+        "kws" => {
+            let kw: Vec<_> = (0..10).map(kws_template).collect();
+            let unk: Vec<_> = (0..KWS_N_UNKNOWN_TEMPLATES)
+                .map(|j| kws_template(100 + j))
+                .collect();
+            (0..n)
+                .map(|i| kws_sample(&mut rng, i % KWS_CLASSES, &kw, &unk))
+                .collect()
+        }
+        "ad" => {
+            let profile = ad_profile(0);
+            (0..n)
+                .map(|i| ad_sample(&mut rng, i % 2 == 1, &profile))
+                .collect()
+        }
+        other => panic!("unknown task {other}"),
+    };
+    TestSet { task: task.to_string(), samples }
+}
+
+/// Training-batch generator (for the Rust-driven SGD loop).
+pub fn train_batch(task: &str, rng: &mut SplitMix64, n: usize) -> (Vec<f32>, Vec<i32>) {
+    let mut xs = Vec::with_capacity(n * feature_dim(task));
+    let mut ys = Vec::with_capacity(n);
+    match task {
+        "ic" => {
+            let templates: Vec<_> = (0..IC_CLASSES).map(ic_template).collect();
+            for _ in 0..n {
+                let c = rng.next_below(IC_CLASSES as u64) as usize;
+                let s = ic_sample(rng, c, &templates);
+                xs.extend_from_slice(&s.x);
+                ys.push(s.label);
+            }
+        }
+        "kws" => {
+            let kw: Vec<_> = (0..10).map(kws_template).collect();
+            let unk: Vec<_> = (0..KWS_N_UNKNOWN_TEMPLATES)
+                .map(|j| kws_template(100 + j))
+                .collect();
+            for _ in 0..n {
+                let c = rng.next_below(KWS_CLASSES as u64) as usize;
+                let s = kws_sample(rng, c, &kw, &unk);
+                xs.extend_from_slice(&s.x);
+                ys.push(s.label);
+            }
+        }
+        "ad" => {
+            // Unsupervised: train on normal data only (§2.2).
+            let profile = ad_profile(0);
+            for _ in 0..n {
+                let s = ad_sample(rng, false, &profile);
+                xs.extend_from_slice(&s.x);
+                ys.push(0);
+            }
+        }
+        other => panic!("unknown task {other}"),
+    }
+    (xs, ys)
+}
+
+pub fn feature_dim(task: &str) -> usize {
+    match task {
+        "ic" => IC_DIM,
+        "kws" => KWS_DIM,
+        "ad" => AD_DIM,
+        other => panic!("unknown task {other}"),
+    }
+}
+
+/// ROC AUC from (score, is_anomaly) pairs — the AD quality metric (§2.2).
+pub fn roc_auc(scores: &[(f32, bool)]) -> f64 {
+    let mut pos: Vec<f32> = scores.iter().filter(|s| s.1).map(|s| s.0).collect();
+    let mut neg: Vec<f32> = scores.iter().filter(|s| !s.1).map(|s| s.0).collect();
+    if pos.is_empty() || neg.is_empty() {
+        return 0.5;
+    }
+    pos.sort_by(|a, b| a.total_cmp(b));
+    neg.sort_by(|a, b| a.total_cmp(b));
+    // Mann-Whitney U via merge counting (ties get half credit).
+    let mut wins = 0.0f64;
+    for &p in &pos {
+        let below = neg.partition_point(|&x| x < p);
+        let equal = neg.partition_point(|&x| x <= p) - below;
+        wins += below as f64 + 0.5 * equal as f64;
+    }
+    wins / (pos.len() as f64 * neg.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ic_samples_in_unit_range() {
+        let ts = test_set("ic", 20, 1);
+        for s in &ts.samples {
+            assert_eq!(s.x.len(), IC_DIM);
+            assert!(s.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn ad_anomalies_deviate_more() {
+        let profile = ad_profile(0);
+        let mut rng = SplitMix64::new(3);
+        let dev = |s: &Sample| -> f64 {
+            s.x.iter()
+                .enumerate()
+                .map(|(i, &v)| (v as f64 - profile[i]).abs())
+                .fold(0.0, f64::max)
+        };
+        let dn: f64 = (0..100)
+            .map(|_| dev(&ad_sample(&mut rng, false, &profile)))
+            .sum::<f64>()
+            / 100.0;
+        let da: f64 = (0..100)
+            .map(|_| dev(&ad_sample(&mut rng, true, &profile)))
+            .sum::<f64>()
+            / 100.0;
+        assert!(da > dn * 1.3, "dn={dn} da={da}");
+    }
+
+    #[test]
+    fn auc_perfect_and_random() {
+        let perfect: Vec<(f32, bool)> =
+            (0..50).map(|i| (i as f32, i >= 25)).collect();
+        assert!((roc_auc(&perfect) - 1.0).abs() < 1e-9);
+        let mut rng = SplitMix64::new(0);
+        let random: Vec<(f32, bool)> = (0..2000)
+            .map(|_| (rng.next_f64() as f32, rng.next_f64() < 0.5))
+            .collect();
+        let auc = roc_auc(&random);
+        assert!((auc - 0.5).abs() < 0.05, "{auc}");
+    }
+
+    #[test]
+    fn test_set_balanced_classes() {
+        let ts = test_set("ic", 200, 7);
+        let mut counts = [0usize; IC_CLASSES];
+        for s in &ts.samples {
+            counts[s.label as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 20), "{counts:?}");
+    }
+
+    #[test]
+    fn kws_silence_quieter() {
+        let ts = test_set("kws", 240, 9);
+        let energy = |s: &Sample| -> f64 {
+            s.x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / s.x.len() as f64
+        };
+        let sil: f64 = ts.samples.iter().filter(|s| s.label == 10).map(energy).sum::<f64>();
+        let spk: f64 = ts.samples.iter().filter(|s| s.label < 10).map(energy).sum::<f64>();
+        assert!(sil * 5.0 < spk, "sil={sil} spk={spk}");
+    }
+
+    #[test]
+    fn templates_match_python_profile_smoothness() {
+        let p = ad_profile(0);
+        let raw = class_template(AD_SEED, 0, AD_DIM);
+        let rough = |v: &[f64]| -> f64 {
+            v.windows(2).map(|w| (w[1] - w[0]).abs()).sum::<f64>() / (v.len() - 1) as f64
+        };
+        assert!(rough(&p) < 0.5 * rough(&raw));
+    }
+}

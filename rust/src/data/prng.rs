@@ -1,0 +1,122 @@
+//! Deterministic cross-language PRNG (splitmix64 + Box-Muller).
+//!
+//! Bit-exact mirror of `python/compile/prng.py`; the reference vectors in
+//! the tests below are asserted identically by
+//! `python/tests/test_prng_synthdata.py`.  Class templates generated here
+//! match the ones the models were trained on, which is what makes the
+//! Rust-side accuracy numbers meaningful.
+
+/// splitmix64 — tiny, fast, trivially portable.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1) with 53 bits of entropy.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Box-Muller, cosine branch only (matches the Python impl exactly).
+    pub fn next_gaussian(&mut self) -> f64 {
+        let mut u1 = self.next_f64();
+        let u2 = self.next_f64();
+        if u1 <= 0.0 {
+            u1 = 2.0_f64.powi(-53);
+        }
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    pub fn gaussian_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.next_gaussian()).collect()
+    }
+
+    pub fn uniform_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.next_f64()).collect()
+    }
+
+    /// Uniform integer in [0, n) (Lemire-free simple modulo; fine for data
+    /// generation, not cryptography).
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+
+    pub fn uniform_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+}
+
+/// Per-(task, class) stream seed; must match `python/compile/prng.py`.
+pub fn template_seed(task_seed: u64, class_id: u64) -> u64 {
+    task_seed
+        .wrapping_mul(0x0000_0100_0000_01B3)
+        .wrapping_add(class_id.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add(1)
+}
+
+/// The deterministic class template both languages agree on.
+pub fn class_template(task_seed: u64, class_id: u64, dim: usize) -> Vec<f64> {
+    SplitMix64::new(template_seed(task_seed, class_id)).gaussian_vec(dim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Same vectors as python/tests/test_prng_synthdata.py.
+    #[test]
+    fn splitmix_vectors() {
+        let mut rng = SplitMix64::new(0xDEAD_BEEF);
+        let got: Vec<u64> = (0..4).map(|_| rng.next_u64()).collect();
+        assert_eq!(
+            got,
+            vec![
+                0x4ADF_B90F_68C9_EB9B,
+                0xDE58_6A31_41A1_0922,
+                0x021F_BC2F_8E1C_FC1D,
+                0x7466_CE73_7BE1_6790,
+            ]
+        );
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut rng = SplitMix64::new(12345);
+        let v = rng.uniform_vec(1000);
+        assert!(v.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        assert!((0.4..0.6).contains(&mean), "{mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = SplitMix64::new(99);
+        let v = rng.gaussian_vec(4000);
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / v.len() as f64;
+        assert!(mean.abs() < 0.08, "{mean}");
+        assert!((var.sqrt() - 1.0).abs() < 0.08, "{var}");
+    }
+
+    #[test]
+    fn templates_deterministic_and_distinct() {
+        let a = class_template(7, 3, 64);
+        let b = class_template(7, 3, 64);
+        assert_eq!(a, b);
+        let c = class_template(7, 4, 64);
+        assert!(a.iter().zip(&c).any(|(x, y)| (x - y).abs() > 0.1));
+    }
+}

@@ -1,0 +1,367 @@
+//! Spatial dataflow architecture simulator.
+//!
+//! Both hls4ml and FINN emit *dataflow* accelerators (§4.2.1): one stage
+//! per layer, stages connected by FIFOs, activations streaming on-chip.
+//! This module is the substitute for Vivado's RTL simulation (DESIGN.md
+//! §Hardware-Adaptation): it executes the stage network cycle by cycle with
+//! bounded FIFOs and backpressure, and reports
+//!
+//! * end-to-end latency (first input token -> last output token),
+//! * steady-state initiation interval (throughput),
+//! * per-FIFO maximum occupancy — the signal the FIFO-depth optimization
+//!   of §3.1.2/§3.5 is built on.
+//!
+//! Token model: one token is one spatial position's channel vector for 2-D
+//! layers, one element-group for 1-D layers.  Window stages (conv/pool)
+//! track the sliding-window dependency (output (r,c) needs input rows up to
+//! `r*stride + kernel - 1`), dense stages need the full input but *pop*
+//! incrementally (the MVAU accumulates as tokens stream in, which is why
+//! the paper's AD design works with FIFO depth 1).
+
+pub mod schedule;
+
+
+
+/// Input-dependency shape of a stage.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Prereq {
+    /// Output j requires all `n_in` input tokens (dense/global layers).
+    All,
+    /// Sliding window over a 2-D raster: output (r, c) requires the input
+    /// raster up to row `r*stride + kernel - 1 - pad` (VALID: pad = 0).
+    Window { in_w: usize, kernel: usize, stride: usize, pad: usize },
+    /// Output j requires inputs 0..=j (elementwise stages).
+    Elementwise,
+}
+
+/// One dataflow stage (≈ one layer IP block / HLS dataflow process).
+#[derive(Clone, Debug)]
+pub struct StageSpec {
+    pub name: String,
+    /// Input tokens per inference.
+    pub n_in: usize,
+    /// Output tokens per inference.
+    pub n_out: usize,
+    /// Cycles between successive output tokens once inputs are available.
+    pub ii_out: u64,
+    /// Cycles between successive input-token pops (stream-in pace).
+    pub ii_in: u64,
+    /// Dependency shape.
+    pub prereq: Prereq,
+}
+
+impl StageSpec {
+    /// Input tokens required before output token `j` can be produced.
+    fn required(&self, j: usize) -> usize {
+        match &self.prereq {
+            Prereq::All => self.n_in,
+            Prereq::Elementwise => (j + 1).min(self.n_in),
+            Prereq::Window { in_w, kernel, stride, pad } => {
+                let out_w = if *in_w + pad >= *kernel {
+                    (*in_w + 2 * pad - *kernel) / *stride + 1
+                } else {
+                    1
+                };
+                let r = j / out_w.max(1);
+                let c = j % out_w.max(1);
+                let last_row = (r * stride + kernel - 1).saturating_sub(*pad);
+                let last_col = (c * stride + kernel - 1).saturating_sub(*pad);
+                let need = last_row * in_w + last_col.min(in_w - 1) + 1;
+                need.min(self.n_in)
+            }
+        }
+    }
+}
+
+/// Result of one simulation run.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// First-input to last-output, in cycles.
+    pub latency_cycles: u64,
+    /// Steady-state cycles/inference (gap between last outputs of two
+    /// back-to-back inferences); equals the slowest stage's total cycles.
+    pub ii_cycles: u64,
+    /// Max occupancy observed per FIFO (FIFO i sits in front of stage i).
+    pub fifo_max_occupancy: Vec<usize>,
+    /// Total simulated cycles.
+    pub simulated_cycles: u64,
+    /// True if the run hit the cycle limit without finishing (deadlock or
+    /// under-sized FIFOs in a cyclic stall).
+    pub deadlocked: bool,
+}
+
+struct FifoState {
+    occupancy: usize,
+    depth: usize,
+    max_seen: usize,
+}
+
+struct StageState {
+    popped: usize,
+    produced: usize,
+    in_timer: u64,
+    out_timer: u64,
+}
+
+/// Cycle-level simulator over a chain of stages.
+pub struct Simulator {
+    pub stages: Vec<StageSpec>,
+    /// Tokens/cycle the input interface can sustain (m_axi burst pace).
+    pub source_ii: u64,
+    pub cycle_limit: u64,
+}
+
+pub const UNBOUNDED_DEPTH: usize = 1 << 24;
+
+impl Simulator {
+    pub fn new(stages: Vec<StageSpec>) -> Self {
+        Self { stages, source_ii: 1, cycle_limit: 2_000_000_000 }
+    }
+
+    /// Run `inferences` back-to-back inferences with the given FIFO depths
+    /// (`depths[i]` feeds stage i; length = stages + 1, the last entry is
+    /// the output FIFO).  Use [`UNBOUNDED_DEPTH`] for the sizing run.
+    pub fn run(&self, depths: &[usize], inferences: usize) -> SimResult {
+        assert_eq!(depths.len(), self.stages.len() + 1);
+        let n = self.stages.len();
+        let mut fifos: Vec<FifoState> = depths
+            .iter()
+            .map(|&d| FifoState { occupancy: 0, depth: d.max(1), max_seen: 0 })
+            .collect();
+        // out_timer starts at ii_out: a stage's first output token costs
+        // one initiation interval of compute after its inputs arrive
+        // (otherwise stages with n_out == 1 — dense layers — would appear
+        // free and pipeline latency would collapse to stream-in time).
+        let mut st: Vec<StageState> = self
+            .stages
+            .iter()
+            .map(|s| StageState { popped: 0, produced: 0, in_timer: 0, out_timer: s.ii_out })
+            .collect();
+
+        let total_in = self.stages[0].n_in * inferences;
+        let total_out = self.stages[n - 1].n_out * inferences;
+        let mut src_sent = 0usize;
+        let mut src_timer = 0u64;
+        let mut sink_got = 0usize;
+        let mut first_out_cycle = 0u64;
+        let mut finish_cycles: Vec<u64> = Vec::with_capacity(inferences);
+
+        let mut cycle: u64 = 0;
+        while sink_got < total_out && cycle < self.cycle_limit {
+            // Source: feed the first FIFO.
+            if src_sent < total_in && src_timer == 0 && fifos[0].occupancy < fifos[0].depth {
+                fifos[0].occupancy += 1;
+                fifos[0].max_seen = fifos[0].max_seen.max(fifos[0].occupancy);
+                src_sent += 1;
+                src_timer = self.source_ii;
+            }
+            src_timer = src_timer.saturating_sub(1);
+
+            // Stages, downstream first so a pop this cycle frees space for
+            // the upstream push next cycle (RTL-ish, order-independent-ish).
+            for i in (0..n).rev() {
+                let spec = &self.stages[i];
+                let s = &mut st[i];
+                // Wrap per-inference counters.
+                let infer_idx = s.produced / spec.n_out.max(1);
+                let local_produced = s.produced % spec.n_out.max(1);
+                let local_popped = s.popped.saturating_sub(infer_idx * spec.n_in);
+
+                // Pop side.
+                if s.in_timer == 0
+                    && fifos[i].occupancy > 0
+                    && local_popped < spec.n_in
+                {
+                    fifos[i].occupancy -= 1;
+                    s.popped += 1;
+                    s.in_timer = spec.ii_in;
+                }
+                s.in_timer = s.in_timer.saturating_sub(1);
+
+                // Push side.  The compute timer only runs once the stage
+                // has started (popped its first input): a stage cannot
+                // pipeline-fill before data exists, so its first output
+                // costs a full initiation interval after data arrival.
+                let started = s.popped > 0;
+                if started && s.out_timer == 0 && s.produced < spec.n_out * inferences {
+                    let local_popped2 = s.popped.saturating_sub(infer_idx * spec.n_in);
+                    let need = spec.required(local_produced);
+                    if local_popped2 >= need
+                        && fifos[i + 1].occupancy < fifos[i + 1].depth
+                    {
+                        fifos[i + 1].occupancy += 1;
+                        fifos[i + 1].max_seen =
+                            fifos[i + 1].max_seen.max(fifos[i + 1].occupancy);
+                        s.produced += 1;
+                        s.out_timer = spec.ii_out;
+                    }
+                }
+                if started {
+                    s.out_timer = s.out_timer.saturating_sub(1);
+                }
+            }
+
+            // Sink drains the last FIFO freely.
+            if fifos[n].occupancy > 0 {
+                fifos[n].occupancy -= 1;
+                sink_got += 1;
+                if sink_got == self.stages[n - 1].n_out {
+                    first_out_cycle = cycle;
+                }
+                if sink_got % self.stages[n - 1].n_out == 0 {
+                    finish_cycles.push(cycle);
+                }
+            }
+            cycle += 1;
+        }
+
+        let deadlocked = sink_got < total_out;
+        let latency = if finish_cycles.is_empty() { cycle } else { finish_cycles[0] + 1 };
+        let ii = if finish_cycles.len() >= 2 {
+            let l = finish_cycles.len();
+            finish_cycles[l - 1] - finish_cycles[l - 2]
+        } else {
+            latency
+        };
+        let _ = first_out_cycle;
+        SimResult {
+            latency_cycles: latency,
+            ii_cycles: ii,
+            fifo_max_occupancy: fifos.iter().map(|f| f.max_seen).collect(),
+            simulated_cycles: cycle,
+            deadlocked,
+        }
+    }
+
+    /// Convenience: single inference with unbounded FIFOs (the §3.1.2
+    /// "large FIFO" RTL-simulation configuration).
+    pub fn run_unbounded(&self) -> SimResult {
+        let depths = vec![UNBOUNDED_DEPTH; self.stages.len() + 1];
+        self.run(&depths, 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn elementwise(name: &str, n: usize, ii: u64) -> StageSpec {
+        StageSpec {
+            name: name.into(),
+            n_in: n,
+            n_out: n,
+            ii_out: ii,
+            ii_in: ii,
+            prereq: Prereq::Elementwise,
+        }
+    }
+
+    #[test]
+    fn single_stage_latency_matches_ii() {
+        let sim = Simulator::new(vec![elementwise("a", 10, 3)]);
+        let r = sim.run_unbounded();
+        assert!(!r.deadlocked);
+        // 10 tokens at II=3, plus pipeline entry: latency ≈ 30 ± small.
+        assert!((28..=35).contains(&r.latency_cycles), "{r:?}");
+    }
+
+    #[test]
+    fn chain_latency_dominated_by_slowest() {
+        let sim = Simulator::new(vec![
+            elementwise("fast", 100, 1),
+            elementwise("slow", 100, 5),
+            elementwise("fast2", 100, 1),
+        ]);
+        let r = sim.run_unbounded();
+        assert!(!r.deadlocked);
+        assert!((480..560).contains(&r.latency_cycles), "{r:?}");
+    }
+
+    #[test]
+    fn dense_stage_waits_for_all_inputs() {
+        let dense = StageSpec {
+            name: "fc".into(),
+            n_in: 16,
+            n_out: 4,
+            ii_out: 2,
+            ii_in: 1,
+            prereq: Prereq::All,
+        };
+        let sim = Simulator::new(vec![dense]);
+        let r = sim.run_unbounded();
+        assert!(!r.deadlocked);
+        // 16 pops at ii_in=1 (≈16 cycles, paced with source), then 4 outputs
+        // at II=2 (≈8 cycles).
+        assert!(r.latency_cycles >= 22, "{r:?}");
+    }
+
+    #[test]
+    fn window_stage_streams_before_end() {
+        // 8x8 raster, 3x3 window, stride 1: first output after ~2 rows + 3.
+        let conv = StageSpec {
+            name: "conv".into(),
+            n_in: 64,
+            n_out: 36,
+            ii_out: 1,
+            ii_in: 1,
+            prereq: Prereq::Window { in_w: 8, kernel: 3, stride: 1, pad: 0 },
+        };
+        assert_eq!(conv.required(0), 2 * 8 + 3);
+        assert_eq!(conv.required(1), 2 * 8 + 4);
+        assert_eq!(conv.required(35), 64);
+        let sim = Simulator::new(vec![conv]);
+        let r = sim.run_unbounded();
+        assert!(!r.deadlocked);
+        assert!(r.latency_cycles < 64 + 40, "{r:?}");
+    }
+
+    #[test]
+    fn bounded_fifos_preserve_results() {
+        let stages = vec![
+            elementwise("a", 50, 1),
+            StageSpec {
+                name: "fc".into(),
+                n_in: 50,
+                n_out: 10,
+                ii_out: 4,
+                ii_in: 1,
+                prereq: Prereq::All,
+            },
+        ];
+        let sim = Simulator::new(stages);
+        let unbounded = sim.run_unbounded();
+        let sized: Vec<usize> =
+            unbounded.fifo_max_occupancy.iter().map(|&m| m + 1).collect();
+        let bounded = sim.run(&sized, 1);
+        assert!(!bounded.deadlocked);
+        assert_eq!(bounded.latency_cycles, unbounded.latency_cycles);
+    }
+
+    #[test]
+    fn tiny_fifos_slow_but_do_not_deadlock_chain() {
+        let stages = vec![elementwise("a", 40, 1), elementwise("b", 40, 3)];
+        let sim = Simulator::new(stages);
+        let r = sim.run(&[1, 1, 1], 1);
+        assert!(!r.deadlocked);
+        let fast = sim.run(&[64, 64, 64], 1);
+        assert!(r.latency_cycles >= fast.latency_cycles);
+    }
+
+    #[test]
+    fn steady_state_ii_from_multiple_inferences() {
+        let sim = Simulator::new(vec![elementwise("a", 20, 2)]);
+        let depths = vec![UNBOUNDED_DEPTH; 2];
+        let r = sim.run(&depths, 3);
+        assert!(!r.deadlocked);
+        assert!((38..=44).contains(&r.ii_cycles), "{r:?}");
+    }
+
+    #[test]
+    fn backpressure_bounds_occupancy() {
+        let stages = vec![elementwise("fast", 100, 1), elementwise("slow", 100, 10)];
+        let sim = Simulator::new(stages);
+        let r = sim.run(&[4, 4, 4], 1);
+        assert!(!r.deadlocked);
+        assert!(r.fifo_max_occupancy.iter().all(|&m| m <= 4));
+    }
+}

@@ -1,0 +1,189 @@
+//! Adaptive ASHA — asynchronous successive halving (Li et al. 2020),
+//! as used by Determined AI for the CNV (§3.2.1) and KWS (§3.4) scans.
+//!
+//! Rung r has budget `min_budget * eta^r`.  A configuration is promoted to
+//! rung r+1 when it is in the top 1/eta of completed runs at rung r.  The
+//! "asynchronous" part: a worker asking for a job always gets one — either
+//! a promotion (if some config is promotable) or a fresh config at rung 0 —
+//! so no straggler ever blocks the pool.  Here workers are simulated
+//! sequentially, which preserves the promotion semantics exactly.
+
+/// One evaluated configuration at some budget.
+#[derive(Clone, Debug)]
+pub struct Trial {
+    pub config_id: usize,
+    pub rung: usize,
+    pub budget: u32,
+    pub score: f64,
+}
+
+pub struct Asha {
+    pub eta: usize,
+    pub min_budget: u32,
+    pub max_rung: usize,
+    /// Completed trials per rung: (config_id, score).
+    rungs: Vec<Vec<(usize, f64)>>,
+    /// Configs already promoted out of each rung.
+    promoted: Vec<Vec<usize>>,
+    next_config: usize,
+    pub max_configs: usize,
+}
+
+/// A job handed to a worker.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Job {
+    pub config_id: usize,
+    pub rung: usize,
+    pub budget: u32,
+}
+
+impl Asha {
+    pub fn new(eta: usize, min_budget: u32, max_rung: usize, max_configs: usize) -> Self {
+        Self {
+            eta,
+            min_budget,
+            max_rung,
+            rungs: vec![Vec::new(); max_rung + 1],
+            promoted: vec![Vec::new(); max_rung + 1],
+            next_config: 0,
+            max_configs,
+        }
+    }
+
+    pub fn budget_for(&self, rung: usize) -> u32 {
+        self.min_budget * (self.eta as u32).pow(rung as u32)
+    }
+
+    /// Get the next job: a promotion if one is available, else a new config.
+    pub fn next_job(&mut self) -> Option<Job> {
+        // Look for promotable configs, top rung first (ASHA's rule).
+        for rung in (0..self.max_rung).rev() {
+            let done = &self.rungs[rung];
+            let k = done.len() / self.eta;
+            if k == 0 {
+                continue;
+            }
+            let mut sorted: Vec<&(usize, f64)> = done.iter().collect();
+            sorted.sort_by(|a, b| b.1.total_cmp(&a.1));
+            for cand in sorted.iter().take(k) {
+                if !self.promoted[rung].contains(&cand.0) {
+                    let id = cand.0;
+                    self.promoted[rung].push(id);
+                    return Some(Job {
+                        config_id: id,
+                        rung: rung + 1,
+                        budget: self.budget_for(rung + 1),
+                    });
+                }
+            }
+        }
+        if self.next_config < self.max_configs {
+            let id = self.next_config;
+            self.next_config += 1;
+            Some(Job { config_id: id, rung: 0, budget: self.budget_for(0) })
+        } else {
+            None
+        }
+    }
+
+    pub fn report(&mut self, job: &Job, score: f64) {
+        self.rungs[job.rung].push((job.config_id, score));
+    }
+
+    pub fn completed(&self) -> Vec<Trial> {
+        let mut out = Vec::new();
+        for (rung, done) in self.rungs.iter().enumerate() {
+            for &(config_id, score) in done {
+                out.push(Trial { config_id, rung, budget: self.budget_for(rung), score });
+            }
+        }
+        out
+    }
+
+    /// Best config seen at the highest rung reached.
+    pub fn best(&self) -> Option<Trial> {
+        for rung in (0..=self.max_rung).rev() {
+            if let Some(&(config_id, score)) = self.rungs[rung]
+                .iter()
+                .max_by(|a, b| a.1.total_cmp(&b.1))
+            {
+                return Some(Trial { config_id, rung, budget: self.budget_for(rung), score });
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Config quality: pseudo-random per config (hash), with
+    /// budget-dependent reveal — the realistic ASHA regime.  (A score
+    /// monotone in arrival order makes every new config a global best,
+    /// which async ASHA legitimately promotes every time.)
+    fn score(config_id: usize, budget: u32) -> f64 {
+        let q = (config_id as u64)
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .rotate_left(17) as f64
+            / u64::MAX as f64;
+        q * (1.0 - (-(budget as f64) / 8.0).exp())
+    }
+
+    fn run(max_configs: usize) -> Asha {
+        let mut asha = Asha::new(4, 1, 3, max_configs);
+        while let Some(job) = asha.next_job() {
+            let s = score(job.config_id, job.budget);
+            asha.report(&job, s);
+        }
+        asha
+    }
+
+    #[test]
+    fn promotes_good_configs_to_top_rung() {
+        let asha = run(64);
+        let best = asha.best().unwrap();
+        assert_eq!(best.rung, 3, "{best:?}");
+        // The promoted winner must be among the truly-best configs: its
+        // asymptotic quality (budget -> inf) should be near the maximum.
+        let q = |id: usize| score(id, 1_000_000);
+        let qmax = (0..64).map(q).fold(f64::NEG_INFINITY, f64::max);
+        assert!(q(best.config_id) > 0.85 * qmax, "{best:?}");
+    }
+
+    #[test]
+    fn rung_sizes_shrink_by_eta() {
+        let asha = run(64);
+        let sizes: Vec<usize> = asha.rungs.iter().map(|r| r.len()).collect();
+        assert_eq!(sizes[0], 64);
+        assert!(sizes[1] <= sizes[0] / 4 + 1, "{sizes:?}");
+        assert!(sizes[2] <= sizes[1] / 4 + 2, "{sizes:?}");
+    }
+
+    #[test]
+    fn budgets_scale_geometrically() {
+        let asha = Asha::new(4, 2, 3, 10);
+        assert_eq!(asha.budget_for(0), 2);
+        assert_eq!(asha.budget_for(1), 8);
+        assert_eq!(asha.budget_for(3), 128);
+    }
+
+    #[test]
+    fn no_config_promoted_twice_from_same_rung() {
+        let asha = run(32);
+        for rung in &asha.promoted {
+            let mut seen = rung.clone();
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen.len(), rung.len());
+        }
+    }
+
+    #[test]
+    fn total_evaluations_bounded() {
+        let asha = run(64);
+        let total: usize = asha.rungs.iter().map(|r| r.len()).sum();
+        // 64 rung-0 + at most 64*(1/4 + 1/16 + 1/64) promotions ≈ 85.
+        assert!(total <= 64 + 16 + 4 + 1 + 3, "{total}");
+    }
+}

@@ -1,0 +1,235 @@
+//! Gaussian-process Bayesian optimization (KerasTuner-style, §3.1.1).
+//!
+//! Small, dependency-free GP: RBF kernel, Cholesky solve, expected
+//! improvement maximized over a random candidate pool.  Dimensions are
+//! normalized to [0,1]^d by the caller.
+
+use crate::data::prng::SplitMix64;
+
+/// Dense lower-triangular Cholesky; returns None if not PD.
+pub fn cholesky(a: &[Vec<f64>]) -> Option<Vec<Vec<f64>>> {
+    let n = a.len();
+    let mut l = vec![vec![0.0; n]; n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i][j];
+            for k in 0..j {
+                sum -= l[i][k] * l[j][k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[i][j] = sum.sqrt();
+            } else {
+                l[i][j] = sum / l[j][j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L y = b (forward), then L^T x = y (backward).
+pub fn chol_solve(l: &[Vec<f64>], b: &[f64]) -> Vec<f64> {
+    let n = l.len();
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i][k] * y[k];
+        }
+        y[i] = s / l[i][i];
+    }
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in i + 1..n {
+            s -= l[k][i] * x[k];
+        }
+        x[i] = s / l[i][i];
+    }
+    x
+}
+
+fn rbf(a: &[f64], b: &[f64], lengthscale: f64) -> f64 {
+    let d2: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    (-0.5 * d2 / (lengthscale * lengthscale)).exp()
+}
+
+/// Standard normal pdf/cdf (Abramowitz-Stegun erf approximation).
+fn phi(x: f64) -> f64 {
+    (-0.5 * x * x).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+fn cdf(x: f64) -> f64 {
+    // erf via A&S 7.1.26.
+    let t = 1.0 / (1.0 + 0.3275911 * x.abs() / std::f64::consts::SQRT_2);
+    let erf = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x / 2.0).exp();
+    if x >= 0.0 { 0.5 * (1.0 + erf) } else { 0.5 * (1.0 - erf) }
+}
+
+/// GP posterior + EI-driven suggestion.
+pub struct GpOptimizer {
+    pub xs: Vec<Vec<f64>>,
+    pub ys: Vec<f64>,
+    pub lengthscale: f64,
+    pub noise: f64,
+    pub candidates: usize,
+    rng: SplitMix64,
+    dim: usize,
+}
+
+impl GpOptimizer {
+    pub fn new(dim: usize, seed: u64) -> Self {
+        Self {
+            xs: Vec::new(),
+            ys: Vec::new(),
+            // Median pairwise distance in [0,1]^d grows ~ sqrt(d/6); scale
+            // the RBF lengthscale with sqrt(dim) so the GP stays informative
+            // in the 20-dim NAS space.
+            lengthscale: 0.3 * (dim as f64).sqrt().max(1.0),
+            noise: 1e-3,
+            candidates: 256,
+            rng: SplitMix64::new(seed),
+            dim,
+        }
+    }
+
+    pub fn observe(&mut self, x: Vec<f64>, y: f64) {
+        assert_eq!(x.len(), self.dim);
+        self.xs.push(x);
+        self.ys.push(y);
+    }
+
+    fn posterior(&self, x: &[f64], l: &[Vec<f64>], alpha: &[f64]) -> (f64, f64) {
+        let n = self.xs.len();
+        let kx: Vec<f64> = (0..n).map(|i| rbf(&self.xs[i], x, self.lengthscale)).collect();
+        let mean: f64 = kx.iter().zip(alpha).map(|(a, b)| a * b).sum();
+        // var = k(x,x) - kx^T K^-1 kx via forward solve.
+        let v = {
+            let mut y = vec![0.0; n];
+            for i in 0..n {
+                let mut s = kx[i];
+                for k in 0..i {
+                    s -= l[i][k] * y[k];
+                }
+                y[i] = s / l[i][i];
+            }
+            y
+        };
+        let var = (1.0 + self.noise - v.iter().map(|a| a * a).sum::<f64>()).max(1e-9);
+        (mean, var.sqrt())
+    }
+
+    /// Suggest the next point: random for the first few, then max-EI over
+    /// a random candidate pool.
+    pub fn suggest(&mut self) -> Vec<f64> {
+        if self.xs.len() < 4 {
+            return (0..self.dim).map(|_| self.rng.next_f64()).collect();
+        }
+        let n = self.xs.len();
+        // Normalize y to zero mean, unit-ish scale for GP stability.
+        let mean_y = self.ys.iter().sum::<f64>() / n as f64;
+        let std_y = (self.ys.iter().map(|y| (y - mean_y) * (y - mean_y)).sum::<f64>()
+            / n as f64)
+            .sqrt()
+            .max(1e-6);
+        let ys_n: Vec<f64> = self.ys.iter().map(|y| (y - mean_y) / std_y).collect();
+        let mut k = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                k[i][j] = rbf(&self.xs[i], &self.xs[j], self.lengthscale);
+            }
+            k[i][i] += self.noise;
+        }
+        let Some(l) = cholesky(&k) else {
+            return (0..self.dim).map(|_| self.rng.next_f64()).collect();
+        };
+        let alpha = chol_solve(&l, &ys_n);
+        let best = ys_n.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+
+        let mut best_x = Vec::new();
+        let mut best_ei = f64::NEG_INFINITY;
+        for _ in 0..self.candidates {
+            let x: Vec<f64> = (0..self.dim).map(|_| self.rng.next_f64()).collect();
+            let (mu, sigma) = self.posterior(&x, &l, &alpha);
+            let z = (mu - best - 0.01) / sigma;
+            let ei = sigma * (z * cdf(z) + phi(z));
+            if ei > best_ei {
+                best_ei = ei;
+                best_x = x;
+            }
+        }
+        best_x
+    }
+
+    pub fn best(&self) -> Option<(&Vec<f64>, f64)> {
+        self.ys
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, &y)| (&self.xs[i], y))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_identity() {
+        let a = vec![vec![4.0, 2.0], vec![2.0, 3.0]];
+        let l = cholesky(&a).unwrap();
+        // L L^T == A
+        let a00 = l[0][0] * l[0][0];
+        let a10 = l[1][0] * l[0][0];
+        let a11 = l[1][0] * l[1][0] + l[1][1] * l[1][1];
+        assert!((a00 - 4.0).abs() < 1e-12 && (a10 - 2.0).abs() < 1e-12 && (a11 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chol_solve_solves() {
+        let a = vec![vec![4.0, 2.0], vec![2.0, 3.0]];
+        let l = cholesky(&a).unwrap();
+        let x = chol_solve(&l, &[10.0, 8.0]);
+        assert!((4.0 * x[0] + 2.0 * x[1] - 10.0).abs() < 1e-9);
+        assert!((2.0 * x[0] + 3.0 * x[1] - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cdf_sane() {
+        assert!((cdf(0.0) - 0.5).abs() < 1e-6);
+        assert!(cdf(3.0) > 0.99 && cdf(-3.0) < 0.01);
+    }
+
+    #[test]
+    fn bo_finds_peak_of_smooth_function() {
+        // f(x) = -(x-0.7)^2: peak at 0.7.
+        let mut bo = GpOptimizer::new(1, 7);
+        for _ in 0..30 {
+            let x = bo.suggest();
+            let y = -(x[0] - 0.7) * (x[0] - 0.7);
+            bo.observe(x, y);
+        }
+        let (bx, _) = bo.best().unwrap();
+        assert!((bx[0] - 0.7).abs() < 0.15, "{bx:?}");
+    }
+
+    #[test]
+    fn bo_beats_its_own_random_phase() {
+        let mut bo = GpOptimizer::new(2, 9);
+        let f = |x: &[f64]| -((x[0] - 0.3) * (x[0] - 0.3) + (x[1] - 0.8) * (x[1] - 0.8));
+        for _ in 0..40 {
+            let x = bo.suggest();
+            let y = f(&x);
+            bo.observe(x, y);
+        }
+        let random_best = bo.ys[..4].iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let overall_best = bo.best().unwrap().1;
+        assert!(overall_best >= random_best);
+    }
+}

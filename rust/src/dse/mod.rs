@@ -1,0 +1,138 @@
+//! Design-space exploration: the paper's three scans as runnable drivers.
+//!
+//! * [`run_ic_bo_scan`] — Fig. 2: Bayesian-optimization NAS over 1-, 2-,
+//!   and 3-stack ResNet-style IC models (accuracy vs MFLOPs).
+//! * [`run_cnv_asha_scan`] — Fig. 3: adaptive ASHA over CNV variants
+//!   (accuracy vs inference cost C of eq. 2).
+//!
+//! Both use the calibrated surrogates in [`crate::surrogate`] (see
+//! DESIGN.md for the substitution rationale).  The KWS quantization scan
+//! (Fig. 4) trains real models through [`crate::runtime`] — see
+//! `examples/kws_quant_scan.rs`.
+
+pub mod asha;
+pub mod bo;
+pub mod space;
+
+use crate::data::prng::SplitMix64;
+use crate::surrogate;
+use space::{CnvSpace, IcNasSpace};
+
+/// One scan point for plotting (Fig. 2 axes).
+#[derive(Clone, Debug)]
+pub struct ScanPoint {
+    pub mflops: f64,
+    pub accuracy: f64,
+    pub label: String,
+}
+
+/// Fig. 2: one BO scan of `budget` models at a fixed stack count.
+pub fn run_ic_bo_scan(stacks: usize, budget: usize, seed: u64) -> Vec<ScanPoint> {
+    let space = IcNasSpace { stacks };
+    let mut bo = bo::GpOptimizer::new(space.dim(), seed);
+    let mut points = Vec::with_capacity(budget);
+    for _ in 0..budget {
+        let x = bo.suggest();
+        let cfg = space.decode(&x);
+        let acc = surrogate::ic_nas_accuracy(
+            stacks,
+            cfg.mflops(),
+            cfg.max_filters(),
+            cfg.seed(),
+        );
+        points.push(ScanPoint {
+            mflops: cfg.mflops(),
+            accuracy: acc,
+            label: format!(
+                "{}stk f{:?} k{:?} s{:?}",
+                stacks, cfg.filters, cfg.kernels, cfg.strides
+            ),
+        });
+        bo.observe(x, acc);
+    }
+    points
+}
+
+/// One Fig. 3 scan point: accuracy vs inference cost at final rung.
+#[derive(Clone, Debug)]
+pub struct AshaPoint {
+    pub inference_cost: f64,
+    pub accuracy: f64,
+    pub budget_epochs: u32,
+    pub rung: usize,
+}
+
+/// Fig. 3: adaptive ASHA over the CNV space.
+pub fn run_cnv_asha_scan(max_configs: usize, seed: u64) -> Vec<AshaPoint> {
+    let space = CnvSpace;
+    let reference = space.reference();
+    let mut rng = SplitMix64::new(seed);
+    let configs: Vec<space::CnvConfig> =
+        (0..max_configs).map(|_| space.sample(&mut rng)).collect();
+    // eta=4 rungs: 1, 4, 16, 64 epochs — "up to 100 epochs" with early stop.
+    let mut asha = asha::Asha::new(4, 1, 3, max_configs);
+    let mut points = Vec::new();
+    while let Some(job) = asha.next_job() {
+        let cfg = &configs[job.config_id];
+        let c = cfg.inference_cost(&reference);
+        let acc = surrogate::cnv_asha_accuracy(c, cfg.weight_bits, job.budget, cfg.seed());
+        asha.report(&job, acc);
+        points.push(AshaPoint {
+            inference_cost: c,
+            accuracy: acc,
+            budget_epochs: job.budget,
+            rung: job.rung,
+        });
+    }
+    points
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_scan_produces_pareto_shape() {
+        let pts = run_ic_bo_scan(2, 100, 11);
+        assert_eq!(pts.len(), 100);
+        // The best accuracy must come from a non-trivial FLOPs model.
+        let best = pts.iter().max_by(|a, b| a.accuracy.total_cmp(&b.accuracy)).unwrap();
+        assert!(best.accuracy > 68.0, "{best:?}");
+        // And small models must exist with lower accuracy (Pareto spread).
+        let min_acc = pts.iter().map(|p| p.accuracy).fold(f64::INFINITY, f64::min);
+        assert!(best.accuracy - min_acc > 10.0);
+    }
+
+    #[test]
+    fn fig2_bo_average_improves_over_time() {
+        let pts = run_ic_bo_scan(2, 60, 3);
+        let first: f64 = pts[..15].iter().map(|p| p.accuracy).sum::<f64>() / 15.0;
+        let last: f64 = pts[45..].iter().map(|p| p.accuracy).sum::<f64>() / 15.0;
+        assert!(last > first - 1.0, "first={first} last={last}");
+        let best_late = pts[15..].iter().map(|p| p.accuracy).fold(f64::NEG_INFINITY, f64::max);
+        let best_early = pts[..15].iter().map(|p| p.accuracy).fold(f64::NEG_INFINITY, f64::max);
+        assert!(best_late >= best_early - 2.0);
+    }
+
+    #[test]
+    fn fig3_reference_is_near_optimal() {
+        // Paper: "the CNV-W1A1 model performs near optimally" — configs
+        // with C < 1 shouldn't dominate it.
+        let pts = run_cnv_asha_scan(64, 5);
+        let ref_acc = surrogate::cnv_asha_accuracy(1.0, 1, 64, 0);
+        let cheaper_better = pts
+            .iter()
+            .filter(|p| p.inference_cost < 0.8 && p.accuracy > ref_acc + 1.0)
+            .count();
+        assert_eq!(cheaper_better, 0, "{cheaper_better} cheap configs beat the reference");
+    }
+
+    #[test]
+    fn fig3_high_rungs_get_high_budget() {
+        let pts = run_cnv_asha_scan(64, 6);
+        assert!(pts.iter().any(|p| p.rung >= 2));
+        for p in &pts {
+            assert_eq!(p.budget_epochs, 4u32.pow(p.rung as u32));
+        }
+    }
+}

@@ -1,0 +1,273 @@
+//! Search spaces for the paper's three explorations.
+//!
+//! * [`IcNasSpace`] — the restricted ResNet-style NAS of §3.1.1 (Fig. 2):
+//!   stacks fixed per scan; per-layer filters {2,4,8,16,32}, kernel sizes
+//!   {1,2,3}, strides, average-pool and skip-connection toggles.
+//! * [`CnvSpace`] — the ASHA scan of §3.2.1 (Fig. 3): conv filters 32-512,
+//!   pooling toggles, strides/kernels 1-4, FC width 16-512, weight and
+//!   activation bit widths {1,2}.
+//!
+//! Points decode from normalized [0,1]^d vectors (for the GP) or from a
+//! seeded stream (for ASHA random sampling); each decodes to FLOPs/BOPs/
+//! WM metrics the paper plots on its x-axes.
+
+use crate::data::prng::SplitMix64;
+
+/// A decoded IC NAS configuration.
+#[derive(Clone, Debug)]
+pub struct IcNasConfig {
+    pub stacks: usize,
+    pub filters: Vec<usize>,
+    pub kernels: Vec<usize>,
+    pub strides: Vec<usize>,
+    pub avg_pool: bool,
+    pub skip: bool,
+}
+
+pub struct IcNasSpace {
+    pub stacks: usize,
+}
+
+const FILTER_CHOICES: [usize; 4] = [2, 4, 8, 16];
+const KERNEL_CHOICES: [usize; 3] = [1, 2, 3];
+const STRIDE_CHOICES: [usize; 3] = [1, 2, 4];
+
+impl IcNasSpace {
+    /// 3 conv layers per stack (the reference ResNet stack shape).
+    pub fn dim(&self) -> usize {
+        self.stacks * 3 * 3 + 2 // (filters, kernel, stride) per layer + 2 toggles
+    }
+
+    pub fn decode(&self, x: &[f64]) -> IcNasConfig {
+        assert_eq!(x.len(), self.dim());
+        let n_layers = self.stacks * 3;
+        let pick = |v: f64, n: usize| ((v * n as f64) as usize).min(n - 1);
+        let mut filters = Vec::new();
+        let mut kernels = Vec::new();
+        let mut strides = Vec::new();
+        for l in 0..n_layers {
+            filters.push(FILTER_CHOICES[pick(x[3 * l], FILTER_CHOICES.len())]);
+            kernels.push(KERNEL_CHOICES[pick(x[3 * l + 1], KERNEL_CHOICES.len())]);
+            strides.push(STRIDE_CHOICES[pick(x[3 * l + 2], STRIDE_CHOICES.len())]);
+        }
+        IcNasConfig {
+            stacks: self.stacks,
+            filters,
+            kernels,
+            strides,
+            avg_pool: x[3 * n_layers] > 0.5,
+            skip: x[3 * n_layers + 1] > 0.5,
+        }
+    }
+
+    pub fn sample(&self, rng: &mut SplitMix64) -> (Vec<f64>, IcNasConfig) {
+        let x: Vec<f64> = (0..self.dim()).map(|_| rng.next_f64()).collect();
+        let c = self.decode(&x);
+        (x, c)
+    }
+}
+
+impl IcNasConfig {
+    /// MFLOPs of the decoded model on 32x32x3 inputs (2*MACs, §3.1.1).
+    pub fn mflops(&self) -> f64 {
+        let mut hw = 32usize;
+        let mut in_ch = 3usize;
+        let mut macs = 0u64;
+        for ((&f, &k), &s) in self.filters.iter().zip(&self.kernels).zip(&self.strides) {
+            let out_hw = hw.div_ceil(s);
+            macs += (out_hw * out_hw * k * k * in_ch * f) as u64;
+            hw = out_hw;
+            in_ch = f;
+        }
+        // Final FC over (avg-pooled or flattened) features to 10 classes.
+        let feats = if self.avg_pool { in_ch } else { hw * hw * in_ch };
+        macs += (feats * 10) as u64;
+        2.0 * macs as f64 / 1e6
+    }
+
+    pub fn max_filters(&self) -> usize {
+        self.filters.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Deterministic identity for surrogate noise.
+    pub fn seed(&self) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        for &f in &self.filters {
+            mix(f as u64);
+        }
+        for &k in &self.kernels {
+            mix(k as u64 + 100);
+        }
+        for &s in &self.strides {
+            mix(s as u64 + 200);
+        }
+        mix(self.avg_pool as u64 + 300);
+        mix(self.skip as u64 + 400);
+        h
+    }
+}
+
+/// A decoded CNV-variant configuration (Fig. 3 / §3.2.1).
+#[derive(Clone, Debug)]
+pub struct CnvConfig {
+    /// Channels of the three conv blocks (two convs each).
+    pub block_ch: [usize; 3],
+    pub fc_dim: usize,
+    pub weight_bits: u32,
+    pub act_bits: u32,
+    pub kernel: usize,
+}
+
+pub struct CnvSpace;
+
+impl CnvSpace {
+    pub fn sample(&self, rng: &mut SplitMix64) -> CnvConfig {
+        let ch = |rng: &mut SplitMix64| 32usize << rng.next_below(5); // 32..512
+        CnvConfig {
+            block_ch: [ch(rng), ch(rng), ch(rng)],
+            fc_dim: 16usize << rng.next_below(6), // 16..512
+            weight_bits: 1 + rng.next_below(2) as u32,
+            act_bits: 1 + rng.next_below(2) as u32,
+            kernel: 2 + rng.next_below(3) as usize, // 2..4
+        }
+    }
+
+    /// The reference CNV-W1A1.
+    pub fn reference(&self) -> CnvConfig {
+        CnvConfig {
+            block_ch: [64, 128, 256],
+            fc_dim: 512,
+            weight_bits: 1,
+            act_bits: 1,
+            kernel: 3,
+        }
+    }
+}
+
+impl CnvConfig {
+    /// (BOPs, weight-memory bits) via eq. 1 over the CNV topology shape.
+    pub fn costs(&self) -> (f64, f64) {
+        let mut hw = 32usize;
+        let mut in_ch = 3usize;
+        let mut bops = 0.0f64;
+        let mut wm = 0.0f64;
+        let mut in_bits = 8u64; // 8-bit input layer
+        for (b, &ch) in self.block_ch.iter().enumerate() {
+            for _ in 0..2 {
+                let out_hw = hw.saturating_sub(self.kernel - 1).max(1);
+                let nk2 = (in_ch * self.kernel * self.kernel) as f64;
+                let macs = (out_hw * out_hw) as f64 * nk2 * ch as f64;
+                bops += macs
+                    * ((in_bits * self.weight_bits as u64) as f64
+                        + (in_bits + self.weight_bits as u64) as f64
+                        + nk2.log2());
+                wm += nk2 * ch as f64 * self.weight_bits as f64;
+                hw = out_hw;
+                in_ch = ch;
+                in_bits = self.act_bits as u64;
+            }
+            if b < 2 {
+                hw /= 2;
+            }
+        }
+        let dims = [in_ch * hw * hw, self.fc_dim, self.fc_dim, 10];
+        for w in dims.windows(2) {
+            let macs = (w[0] * w[1]) as f64;
+            bops += macs
+                * ((in_bits * self.weight_bits as u64) as f64
+                    + (in_bits + self.weight_bits as u64) as f64
+                    + (w[0] as f64).log2());
+            wm += macs * self.weight_bits as f64;
+        }
+        (bops, wm)
+    }
+
+    /// Inference cost C (eq. 2) vs the reference CNV-W1A1.
+    pub fn inference_cost(&self, reference: &CnvConfig) -> f64 {
+        let (b, w) = self.costs();
+        let (rb, rw) = reference.costs();
+        0.5 * (b / rb + w / rw)
+    }
+
+    pub fn seed(&self) -> u64 {
+        (self.block_ch[0] as u64)
+            .wrapping_mul(31)
+            .wrapping_add(self.block_ch[1] as u64)
+            .wrapping_mul(31)
+            .wrapping_add(self.block_ch[2] as u64)
+            .wrapping_mul(31)
+            .wrapping_add(self.fc_dim as u64)
+            .wrapping_mul(31)
+            .wrapping_add((self.weight_bits * 10 + self.act_bits) as u64)
+            .wrapping_mul(31)
+            .wrapping_add(self.kernel as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_in_bounds() {
+        let space = IcNasSpace { stacks: 2 };
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..50 {
+            let (_, c) = space.sample(&mut rng);
+            assert_eq!(c.filters.len(), 6);
+            assert!(c.filters.iter().all(|f| FILTER_CHOICES.contains(f)));
+            assert!(c.mflops() > 0.0);
+        }
+    }
+
+    #[test]
+    fn more_filters_more_flops() {
+        let space = IcNasSpace { stacks: 1 };
+        let lo = space.decode(&vec![0.0; space.dim()]);
+        let hi = space.decode(&vec![0.99; space.dim()]);
+        // hi has 16 filters everywhere but also stride 4; compare directly.
+        let mut hi_f = hi.clone();
+        hi_f.strides = lo.strides.clone();
+        assert!(hi_f.mflops() > lo.mflops());
+    }
+
+    #[test]
+    fn cnv_reference_cost_is_one() {
+        let space = CnvSpace;
+        let r = space.reference();
+        assert!((r.inference_cost(&space.reference()) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cnv_smaller_is_cheaper() {
+        let space = CnvSpace;
+        let small = CnvConfig {
+            block_ch: [32, 32, 32],
+            fc_dim: 16,
+            weight_bits: 1,
+            act_bits: 1,
+            kernel: 3,
+        };
+        assert!(small.inference_cost(&space.reference()) < 0.3);
+        let big = CnvConfig {
+            block_ch: [128, 256, 512],
+            fc_dim: 512,
+            weight_bits: 2,
+            act_bits: 2,
+            kernel: 3,
+        };
+        assert!(big.inference_cost(&space.reference()) > 1.5);
+    }
+
+    #[test]
+    fn cnv_w2_costs_more_than_w1() {
+        let space = CnvSpace;
+        let mut w2 = space.reference();
+        w2.weight_bits = 2;
+        assert!(w2.inference_cost(&space.reference()) > 1.0);
+    }
+}

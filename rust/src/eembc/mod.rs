@@ -1,0 +1,302 @@
+//! EEMBC EnergyRunner™ + test harness simulation (§4.3-4.4).
+//!
+//! The physical rig — host PC, DUT over USB-serial, IO manager (Arduino
+//! UNO) as a serial bridge, level shifters, Joulescope JS110 energy
+//! monitor, GPIO timing pin — is modeled with a *virtual-time* harness:
+//!
+//! * [`SerialLink`] paces every byte at the configured baud rate
+//!   (115 200 in performance mode; 9 600 in energy mode, the IO-manager
+//!   limit — §4.4.2) and accumulates virtual seconds.
+//! * [`Dut`] implements the test-harness command protocol (`name%`,
+//!   `db load`, `infer`, `results%`) over the link; inference latency
+//!   comes from the dataflow simulation (the accelerator), while sample
+//!   outputs come from real PJRT inference — both layers are exercised.
+//! * [`EnergyMonitor`] integrates the power model over the GPIO-framed
+//!   window (the DUT holds the pin low ≥ 10 µs to frame a measurement).
+//!
+//! Methodology follows §4.4.1/§4.4.2: 5 samples; for each, enough batch-1
+//! inferences to accumulate ≥ 10 s of continuous accelerator runtime;
+//! median over the 5 samples.  Accuracy mode streams the whole test set
+//! one sample at a time.
+
+use crate::data::{self, Sample};
+use crate::runtime::{LoadedModel, Runtime};
+use anyhow::Result;
+
+/// Byte-paced serial connection with a virtual clock.
+#[derive(Clone, Debug)]
+pub struct SerialLink {
+    pub baud: u64,
+    pub virtual_time_s: f64,
+    pub bytes_moved: u64,
+}
+
+impl SerialLink {
+    pub fn new(baud: u64) -> Self {
+        Self { baud, virtual_time_s: 0.0, bytes_moved: 0 }
+    }
+
+    /// Move `n` bytes across the link (10 bits per byte: start + 8 + stop).
+    pub fn transfer(&mut self, n: u64) {
+        self.bytes_moved += n;
+        self.virtual_time_s += (n * 10) as f64 / self.baud as f64;
+    }
+}
+
+/// Performance characteristics of the deployed design (from the codesign
+/// flow: dataflow simulation + power model).
+#[derive(Clone, Copy, Debug)]
+pub struct DesignPerf {
+    pub latency_s: f64,
+    pub power_w: f64,
+}
+
+/// The device under test: harness + accelerator + (simulated) platform.
+pub struct Dut<'m> {
+    pub model: &'m mut LoadedModel,
+    pub perf: DesignPerf,
+    pub loaded: Option<Vec<f32>>,
+    /// Virtual timestamp counter (the DUT-internal timer of §4.4.1).
+    pub timer_s: f64,
+    pub gpio_low: bool,
+}
+
+/// What the DUT reports back for one `infer` command.
+#[derive(Clone, Debug)]
+pub struct InferReply {
+    pub iterations: u64,
+    pub window_s: f64,
+    pub output: Vec<f32>,
+}
+
+impl<'m> Dut<'m> {
+    pub fn new(model: &'m mut LoadedModel, perf: DesignPerf) -> Self {
+        Self { model, perf, loaded: None, timer_s: 0.0, gpio_low: false }
+    }
+
+    pub fn name(&self) -> String {
+        format!("tinyml-codesign/{}", self.model.manifest.name)
+    }
+
+    /// `db load`: receive one sample into DUT memory.
+    pub fn load_sample(&mut self, link: &mut SerialLink, x: &[f32]) {
+        // EEMBC sends samples as hex text: 2 chars per byte + framing.
+        link.transfer((x.len() * 4 * 2 + 16) as u64);
+        self.loaded = Some(x.to_vec());
+    }
+
+    /// `infer <n>`: run n batch-1 inferences back-to-back.  One inference
+    /// runs for real through PJRT (producing the output the accuracy mode
+    /// needs); the accelerator-time accounting uses the simulated design
+    /// latency for all n (§4.4.1 measures the accelerator, not the CPU
+    /// stand-in).
+    pub fn infer(&mut self, rt: &Runtime, n: u64) -> Result<InferReply> {
+        let x = self.loaded.clone().expect("no sample loaded");
+        self.gpio_low = true; // frame the timing window (energy mode)
+        let output = self.model.infer1(rt, &x)?;
+        let window = self.perf.latency_s * n as f64;
+        self.timer_s += window;
+        self.gpio_low = false;
+        Ok(InferReply { iterations: n, window_s: window, output })
+    }
+}
+
+/// Joulescope JS110 stand-in: integrates power over GPIO-framed windows.
+pub struct EnergyMonitor {
+    /// Sampling noise (fraction of reading, deterministic per window).
+    pub noise_frac: f64,
+    seed: u64,
+}
+
+impl EnergyMonitor {
+    pub fn new(seed: u64) -> Self {
+        Self { noise_frac: 0.015, seed }
+    }
+
+    /// Energy over a window framed by the GPIO pin (must be ≥ 10 µs).
+    pub fn measure_uj(&mut self, power_w: f64, window_s: f64) -> f64 {
+        assert!(window_s >= 10e-6, "GPIO frame must be >= 10 us");
+        let mut rng = crate::data::prng::SplitMix64::new(self.seed);
+        self.seed = rng.next_u64();
+        let noise = 1.0 + self.noise_frac * (rng.next_f64() - 0.5) * 2.0;
+        power_w * window_s * 1e6 * noise
+    }
+}
+
+/// Benchmark-mode results (what the runner prints / the paper tabulates).
+#[derive(Clone, Debug)]
+pub struct PerformanceResult {
+    pub median_latency_s: f64,
+    pub throughput_inf_per_s: f64,
+    pub serial_time_s: f64,
+    pub total_inferences: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct EnergyResult {
+    pub median_energy_uj: f64,
+    pub mean_power_w: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct AccuracyResult {
+    pub metric: String, // "top1" | "auc"
+    pub value: f64,
+    pub n_samples: usize,
+}
+
+/// The host-side EnergyRunner application.
+pub struct Runner {
+    pub perf_baud: u64,
+    pub energy_baud: u64,
+    /// Minimum continuous accelerator runtime per sample (§4.4.1: 10 s).
+    pub min_window_s: f64,
+    pub n_samples: usize,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Self { perf_baud: 115_200, energy_baud: 9_600, min_window_s: 10.0, n_samples: 5 }
+    }
+}
+
+fn median(values: &mut [f64]) -> f64 {
+    values.sort_by(|a, b| a.total_cmp(b));
+    values[values.len() / 2]
+}
+
+impl Runner {
+    /// Performance mode (§4.4.1): median batch-1 latency over 5 samples.
+    pub fn performance_mode(
+        &self,
+        rt: &Runtime,
+        dut: &mut Dut,
+        samples: &[Sample],
+    ) -> Result<PerformanceResult> {
+        let mut link = SerialLink::new(self.perf_baud);
+        link.transfer(dut.name().len() as u64 + 8); // name% handshake
+        let mut latencies = Vec::new();
+        let mut total_inf = 0u64;
+        for s in samples.iter().take(self.n_samples) {
+            dut.load_sample(&mut link, &s.x);
+            let iters = (self.min_window_s / dut.perf.latency_s).ceil().max(1.0) as u64;
+            let reply = dut.infer(rt, iters)?;
+            total_inf += reply.iterations;
+            latencies.push(reply.window_s / reply.iterations as f64);
+            link.transfer(64); // results% reply
+        }
+        let med = median(&mut latencies);
+        Ok(PerformanceResult {
+            median_latency_s: med,
+            throughput_inf_per_s: 1.0 / med,
+            serial_time_s: link.virtual_time_s,
+            total_inferences: total_inf,
+        })
+    }
+
+    /// Energy mode (§4.4.2): IO-manager bridge at 9 600 baud, GPIO-framed
+    /// windows integrated by the energy monitor, median over samples.
+    pub fn energy_mode(
+        &self,
+        rt: &Runtime,
+        dut: &mut Dut,
+        samples: &[Sample],
+    ) -> Result<EnergyResult> {
+        let mut link = SerialLink::new(self.energy_baud);
+        let mut monitor = EnergyMonitor::new(0xE4E6);
+        link.transfer(dut.name().len() as u64 + 8);
+        let mut energies = Vec::new();
+        for s in samples.iter().take(self.n_samples) {
+            dut.load_sample(&mut link, &s.x);
+            let iters = (self.min_window_s / dut.perf.latency_s).ceil().max(1.0) as u64;
+            let reply = dut.infer(rt, iters)?;
+            let e_window = monitor.measure_uj(dut.perf.power_w, reply.window_s.max(10e-6));
+            energies.push(e_window / reply.iterations as f64);
+            link.transfer(64);
+        }
+        Ok(EnergyResult {
+            median_energy_uj: median(&mut energies),
+            mean_power_w: dut.perf.power_w,
+        })
+    }
+
+    /// Accuracy mode: the whole test set, one sample at a time (§4.4.1).
+    pub fn accuracy_mode(
+        &self,
+        rt: &Runtime,
+        dut: &mut Dut,
+        test_set: &[Sample],
+    ) -> Result<AccuracyResult> {
+        let mut link = SerialLink::new(self.perf_baud);
+        let task = dut.model.manifest.task.clone();
+        if task == "ad" {
+            let mut scores = Vec::with_capacity(test_set.len());
+            for s in test_set {
+                dut.load_sample(&mut link, &s.x);
+                let score = dut.model.anomaly_score1(rt, &s.x)?;
+                scores.push((score, s.label == 1));
+            }
+            Ok(AccuracyResult {
+                metric: "auc".into(),
+                value: data::roc_auc(&scores),
+                n_samples: test_set.len(),
+            })
+        } else {
+            let mut correct = 0usize;
+            for s in test_set {
+                dut.load_sample(&mut link, &s.x);
+                let pred = dut.model.classify1(rt, &s.x)?;
+                if pred == s.label as usize {
+                    correct += 1;
+                }
+            }
+            Ok(AccuracyResult {
+                metric: "top1".into(),
+                value: correct as f64 / test_set.len() as f64,
+                n_samples: test_set.len(),
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_pacing_115200_vs_9600() {
+        let mut fast = SerialLink::new(115_200);
+        let mut slow = SerialLink::new(9_600);
+        fast.transfer(1000);
+        slow.transfer(1000);
+        assert!((fast.virtual_time_s - 1000.0 * 10.0 / 115_200.0).abs() < 1e-12);
+        assert!(slow.virtual_time_s / fast.virtual_time_s > 11.0);
+    }
+
+    #[test]
+    fn energy_monitor_integrates_power() {
+        let mut m = EnergyMonitor::new(7);
+        let e = m.measure_uj(1.6, 10.0);
+        // 1.6 W * 10 s = 16 J = 16e6 uJ, ±1.5% noise.
+        assert!((e - 16e6).abs() < 0.03 * 16e6, "{e}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn energy_monitor_rejects_short_window() {
+        let mut m = EnergyMonitor::new(7);
+        m.measure_uj(1.0, 1e-6);
+    }
+
+    #[test]
+    fn median_of_odd() {
+        assert_eq!(median(&mut [3.0, 1.0, 2.0]), 2.0);
+    }
+
+    #[test]
+    fn iteration_count_reaches_min_window() {
+        // 20 us latency -> 10 s window needs 500 000 iterations.
+        let iters = (10.0f64 / 20e-6).ceil() as u64;
+        assert_eq!(iters, 500_000);
+    }
+}

@@ -1,0 +1,138 @@
+//! FIFO buffer depth optimization (paper §3.1.2 / §3.5).
+//!
+//! The algorithm is exactly the paper's: simulate the dataflow design with
+//! effectively-unbounded FIFOs (their RTL simulation with "large FIFO
+//! buffers"), record the maximum occupancy of every FIFO, then size each
+//! FIFO to that maximum plus one.  hls4ml allows arbitrary integer depths;
+//! FINN rounds up to the next power of two (Table 2).  The optimized
+//! depths must not change latency — asserted both in tests here and by the
+//! Table 2/3 benches.
+
+use crate::dataflow::{SimResult, Simulator};
+#[cfg(test)]
+use crate::dataflow::UNBOUNDED_DEPTH;
+
+
+/// Depth-rounding policy per flow.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DepthPolicy {
+    /// hls4ml: arbitrary integer depths (max occupancy + 1).
+    Exact,
+    /// FINN: next power of two of (max occupancy + 1), minimum 2.
+    PowerOfTwo,
+}
+
+impl DepthPolicy {
+    pub fn for_flow(flow: &str) -> Self {
+        if flow == "finn" { DepthPolicy::PowerOfTwo } else { DepthPolicy::Exact }
+    }
+
+    pub fn round(&self, max_occupancy: usize) -> usize {
+        let need = max_occupancy + 1;
+        match self {
+            DepthPolicy::Exact => need,
+            DepthPolicy::PowerOfTwo => need.max(2).next_power_of_two(),
+        }
+    }
+}
+
+/// Result of the optimization pass.
+#[derive(Clone, Debug)]
+pub struct FifoOptResult {
+    pub depths: Vec<usize>,
+    pub unoptimized_latency: u64,
+    pub optimized_latency: u64,
+    /// The simulation run used for sizing.
+    pub sizing_run: SimResult,
+}
+
+/// Run the sizing simulation and return per-FIFO depths.
+pub fn optimize_fifos(sim: &Simulator, policy: DepthPolicy) -> FifoOptResult {
+    let sizing = sim.run_unbounded();
+    assert!(!sizing.deadlocked, "sizing run must complete");
+    let depths: Vec<usize> =
+        sizing.fifo_max_occupancy.iter().map(|&m| policy.round(m)).collect();
+    let optimized = sim.run(&depths, 1);
+    FifoOptResult {
+        depths,
+        unoptimized_latency: sizing.latency_cycles,
+        optimized_latency: optimized.latency_cycles,
+        sizing_run: sizing,
+    }
+}
+
+/// Default (unoptimized) depths a naive synthesis would use: every FIFO as
+/// deep as the producing stage's full output — the "Without opt." Table 3
+/// configuration.
+pub fn naive_depths(sim: &Simulator) -> Vec<usize> {
+    let mut depths = Vec::with_capacity(sim.stages.len() + 1);
+    depths.push(sim.stages[0].n_in.max(1));
+    for s in &sim.stages {
+        depths.push(s.n_out.max(1));
+    }
+    depths
+}
+
+/// Summary of a depth vector for Table 2 reporting.
+pub fn depth_range(depths: &[usize]) -> (usize, usize) {
+    let lo = depths.iter().copied().min().unwrap_or(0);
+    let hi = depths.iter().copied().max().unwrap_or(0);
+    (lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::{Prereq, StageSpec};
+
+    fn chain() -> Simulator {
+        Simulator::new(vec![
+            StageSpec {
+                name: "producer".into(),
+                n_in: 64,
+                n_out: 64,
+                ii_out: 1,
+                ii_in: 1,
+                prereq: Prereq::Elementwise,
+            },
+            StageSpec {
+                name: "dense".into(),
+                n_in: 64,
+                n_out: 8,
+                ii_out: 4,
+                ii_in: 2,
+                prereq: Prereq::All,
+            },
+        ])
+    }
+
+    #[test]
+    fn optimized_depths_preserve_latency() {
+        let sim = chain();
+        let r = optimize_fifos(&sim, DepthPolicy::Exact);
+        assert_eq!(r.unoptimized_latency, r.optimized_latency);
+        assert!(r.depths.iter().all(|&d| d < UNBOUNDED_DEPTH));
+    }
+
+    #[test]
+    fn pow2_policy_rounds_up() {
+        assert_eq!(DepthPolicy::PowerOfTwo.round(0), 2);
+        assert_eq!(DepthPolicy::PowerOfTwo.round(2), 4);
+        assert_eq!(DepthPolicy::PowerOfTwo.round(3), 4);
+        assert_eq!(DepthPolicy::PowerOfTwo.round(4), 8);
+        assert_eq!(DepthPolicy::Exact.round(41), 42);
+    }
+
+    #[test]
+    fn optimized_no_deeper_than_naive_total() {
+        let sim = chain();
+        let naive: usize = naive_depths(&sim).iter().sum();
+        let opt: usize = optimize_fifos(&sim, DepthPolicy::Exact).depths.iter().sum();
+        assert!(opt <= naive * 2, "opt={opt} naive={naive}");
+    }
+
+    #[test]
+    fn depth_range_reporting() {
+        assert_eq!(depth_range(&[1, 5, 3]), (1, 5));
+    }
+}

@@ -1,0 +1,449 @@
+//! QONNX-like graph IR.
+//!
+//! Parsed from the `*_topology.json` files emitted by `python/compile/aot.py`
+//! (the Python side of the QONNX interchange of §4.1).  All four submitted
+//! models are chains (the chosen v0.7 IC model has no skip connections),
+//! so the IR is an ordered node list; the compiler passes in [`crate::passes`]
+//! rewrite it, and [`crate::dataflow`] / [`crate::resources`] consume it.
+
+use crate::report::json::Value;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One layer/operator in the chain.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Node {
+    Conv2D {
+        name: String,
+        in_hw: usize,
+        out_hw: usize,
+        in_ch: usize,
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        padding: String,
+        weight_bits: u32,
+        params: u64,
+        /// Set by the ReLU-merge pass (§3.1.3): activation fused into this
+        /// dataflow stage instead of occupying its own stage + FIFO.
+        fused_relu: bool,
+        /// Set by the BN-fold pass: BN absorbed into the kernel (eq. 3-4).
+        folded_bn: bool,
+        /// Set by the accumulator-minimization pass (§3.5); 0 = not yet
+        /// minimized (synthesis default: 32-bit accumulators).
+        acc_bits: u32,
+        /// Input activation precision, set by datatype inference.
+        in_bits: u32,
+    },
+    Dense {
+        name: String,
+        in_features: usize,
+        out_features: usize,
+        weight_bits: u32,
+        has_bias: bool,
+        params: u64,
+        fused_relu: bool,
+        folded_bn: bool,
+        acc_bits: u32,
+        in_bits: u32,
+    },
+    BatchNorm {
+        name: String,
+        channels: usize,
+        params: u64,
+    },
+    ReLU {
+        name: String,
+        channels: usize,
+        act_bits: u32,
+        params: u64,
+    },
+    BipolarAct {
+        name: String,
+        channels: usize,
+        params: u64,
+    },
+    MaxPool {
+        name: String,
+        in_hw: usize,
+        out_hw: usize,
+        channels: usize,
+        size: usize,
+        params: u64,
+    },
+    Flatten {
+        name: String,
+        features: usize,
+        params: u64,
+    },
+    Softmax {
+        name: String,
+        channels: usize,
+        params: u64,
+    },
+    /// Created by the streamlining pass (§3.5): BN + quantized activation
+    /// folded into per-channel integer thresholds.
+    MultiThreshold {
+        name: String,
+        channels: usize,
+        /// Number of thresholds = 2^act_bits - 1 (1 for bipolar).
+        levels: u32,
+        params: u64,
+    },
+    /// Created by the softmax-removal pass (§3.1.1): in-hardware top-k.
+    TopK {
+        name: String,
+        channels: usize,
+        k: usize,
+        params: u64,
+    },
+}
+
+impl Node {
+    pub fn from_json(v: &Value) -> Result<Node> {
+        let op = v.str_of("op")?;
+        let name = v.str_of("name")?;
+        let params = v.u64_of("params")?;
+        Ok(match op.as_str() {
+            "Conv2D" => Node::Conv2D {
+                name,
+                in_hw: v.usize_of("in_hw")?,
+                out_hw: v.usize_of("out_hw")?,
+                in_ch: v.usize_of("in_ch")?,
+                out_ch: v.usize_of("out_ch")?,
+                kernel: v.usize_of("kernel")?,
+                stride: v.usize_of("stride")?,
+                padding: v.str_of("padding")?,
+                weight_bits: v.u64_of("weight_bits")? as u32,
+                params,
+                fused_relu: v.bool_of_or("fused_relu", false),
+                folded_bn: v.bool_of_or("folded_bn", false),
+                acc_bits: v.get("acc_bits").and_then(|x| x.as_u64()).unwrap_or(0) as u32,
+                in_bits: v.get("in_bits").and_then(|x| x.as_u64()).unwrap_or(0) as u32,
+            },
+            "Dense" => Node::Dense {
+                name,
+                in_features: v.usize_of("in_features")?,
+                out_features: v.usize_of("out_features")?,
+                weight_bits: v.u64_of("weight_bits")? as u32,
+                has_bias: v.bool_of_or("has_bias", false),
+                params,
+                fused_relu: v.bool_of_or("fused_relu", false),
+                folded_bn: v.bool_of_or("folded_bn", false),
+                acc_bits: v.get("acc_bits").and_then(|x| x.as_u64()).unwrap_or(0) as u32,
+                in_bits: v.get("in_bits").and_then(|x| x.as_u64()).unwrap_or(0) as u32,
+            },
+            "BatchNorm" => Node::BatchNorm { name, channels: v.usize_of("channels")?, params },
+            "ReLU" => Node::ReLU {
+                name,
+                channels: v.usize_of("channels")?,
+                act_bits: v.u64_of("act_bits")? as u32,
+                params,
+            },
+            "BipolarAct" => Node::BipolarAct { name, channels: v.usize_of("channels")?, params },
+            "MaxPool" => Node::MaxPool {
+                name,
+                in_hw: v.usize_of("in_hw")?,
+                out_hw: v.usize_of("out_hw")?,
+                channels: v.usize_of("channels")?,
+                size: v.usize_of("size")?,
+                params,
+            },
+            "Flatten" => Node::Flatten { name, features: v.usize_of("features")?, params },
+            "Softmax" => Node::Softmax { name, channels: v.usize_of("channels")?, params },
+            "MultiThreshold" => Node::MultiThreshold {
+                name,
+                channels: v.usize_of("channels")?,
+                levels: v.u64_of("levels")? as u32,
+                params,
+            },
+            "TopK" => Node::TopK {
+                name,
+                channels: v.usize_of("channels")?,
+                k: v.usize_of("k")?,
+                params,
+            },
+            other => bail!("unknown op '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        match self {
+            Node::Conv2D { name, .. }
+            | Node::Dense { name, .. }
+            | Node::BatchNorm { name, .. }
+            | Node::ReLU { name, .. }
+            | Node::BipolarAct { name, .. }
+            | Node::MaxPool { name, .. }
+            | Node::Flatten { name, .. }
+            | Node::Softmax { name, .. }
+            | Node::MultiThreshold { name, .. }
+            | Node::TopK { name, .. } => name,
+        }
+    }
+
+    pub fn op(&self) -> &'static str {
+        match self {
+            Node::Conv2D { .. } => "Conv2D",
+            Node::Dense { .. } => "Dense",
+            Node::BatchNorm { .. } => "BatchNorm",
+            Node::ReLU { .. } => "ReLU",
+            Node::BipolarAct { .. } => "BipolarAct",
+            Node::MaxPool { .. } => "MaxPool",
+            Node::Flatten { .. } => "Flatten",
+            Node::Softmax { .. } => "Softmax",
+            Node::MultiThreshold { .. } => "MultiThreshold",
+            Node::TopK { .. } => "TopK",
+        }
+    }
+
+    pub fn params(&self) -> u64 {
+        match self {
+            Node::Conv2D { params, .. }
+            | Node::Dense { params, .. }
+            | Node::BatchNorm { params, .. }
+            | Node::ReLU { params, .. }
+            | Node::BipolarAct { params, .. }
+            | Node::MaxPool { params, .. }
+            | Node::Flatten { params, .. }
+            | Node::Softmax { params, .. }
+            | Node::MultiThreshold { params, .. }
+            | Node::TopK { params, .. } => *params,
+        }
+    }
+
+    /// Is this a weight-bearing compute node (MVAU on the FPGA)?
+    pub fn is_compute(&self) -> bool {
+        matches!(self, Node::Conv2D { .. } | Node::Dense { .. })
+    }
+
+    /// MAC count for one inference.
+    pub fn macs(&self) -> u64 {
+        match self {
+            Node::Conv2D { out_hw, in_ch, out_ch, kernel, .. } => {
+                (out_hw * out_hw * kernel * kernel * in_ch * out_ch) as u64
+            }
+            Node::Dense { in_features, out_features, .. } => {
+                (in_features * out_features) as u64
+            }
+            _ => 0,
+        }
+    }
+
+    /// Output token count (one token = one spatial position's channel
+    /// vector for 2-D layers, one full vector for 1-D layers).
+    pub fn out_tokens(&self) -> usize {
+        match self {
+            Node::Conv2D { out_hw, .. } => out_hw * out_hw,
+            Node::MaxPool { out_hw, .. } => out_hw * out_hw,
+            _ => 1,
+        }
+    }
+
+    /// Output elements per inference (for elementwise stages).
+    pub fn out_elems(&self) -> usize {
+        match self {
+            Node::Conv2D { out_hw, out_ch, .. } => out_hw * out_hw * out_ch,
+            Node::MaxPool { out_hw, channels, .. } => out_hw * out_hw * channels,
+            Node::Dense { out_features, .. } => *out_features,
+            Node::BatchNorm { channels, .. }
+            | Node::ReLU { channels, .. }
+            | Node::BipolarAct { channels, .. }
+            | Node::Softmax { channels, .. }
+            | Node::MultiThreshold { channels, .. } => *channels,
+            Node::Flatten { features, .. } => *features,
+            Node::TopK { k, .. } => *k,
+        }
+    }
+}
+
+/// A whole model graph + metadata, as exported from Python.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    pub task: String,
+    pub flow: String, // "hls4ml" | "finn"
+    pub input_shape: Vec<usize>,
+    pub input_bits: u32,
+    pub folded_bn: bool,
+    pub reuse_factor: u32,
+    pub nodes: Vec<Node>,
+    pub total_params: u64,
+}
+
+impl Graph {
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let v = Value::parse(text)?;
+        let nodes = v
+            .req("nodes")?
+            .as_arr()
+            .context("'nodes' not an array")?
+            .iter()
+            .map(Node::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let input_shape = v
+            .req("input_shape")?
+            .as_arr()
+            .context("'input_shape' not an array")?
+            .iter()
+            .map(|x| x.as_usize().context("bad input_shape entry"))
+            .collect::<Result<Vec<_>>>()?;
+        let g = Graph {
+            name: v.str_of("name")?,
+            task: v.str_of("task")?,
+            flow: v.str_of("flow")?,
+            input_shape,
+            input_bits: v.u64_of("input_bits")? as u32,
+            folded_bn: v.bool_of_or("folded_bn", false),
+            reuse_factor: v.get("reuse_factor").and_then(|x| x.as_u64()).unwrap_or(1) as u32,
+            nodes,
+            total_params: v.u64_of("total_params")?,
+        };
+        g.validate()?;
+        Ok(g)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading topology {}", path.display()))?;
+        Self::from_json_str(&text)
+            .with_context(|| format!("parsing topology {}", path.display()))
+    }
+
+    /// Structural validation: channel/feature counts must chain, params
+    /// totals must be consistent.
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes.is_empty() {
+            bail!("{}: empty graph", self.name);
+        }
+        let mut prev_elems: Option<usize> = None;
+        let mut prev_ch: Option<usize> = None;
+        for node in &self.nodes {
+            match node {
+                Node::Conv2D { name, in_hw, in_ch, out_hw, kernel, stride, padding, .. } => {
+                    if let Some(c) = prev_ch {
+                        if c != *in_ch {
+                            bail!("{}: {} expects {} channels, got {}", self.name, name, in_ch, c);
+                        }
+                    }
+                    let expect = match padding.as_str() {
+                        "SAME" => in_hw.div_ceil(*stride),
+                        _ => (*in_hw - *kernel) / *stride + 1,
+                    };
+                    if expect != *out_hw {
+                        bail!("{}: {} out_hw {} != expected {}", self.name, name, out_hw, expect);
+                    }
+                }
+                Node::Dense { name, in_features, .. } => {
+                    if let Some(e) = prev_elems {
+                        if e != *in_features {
+                            bail!(
+                                "{}: {} expects {} features, got {}",
+                                self.name, name, in_features, e
+                            );
+                        }
+                    }
+                }
+                _ => {}
+            }
+            // Elementwise nodes pass the element count through unchanged
+            // (their `channels` field is per-position in 2-D context).
+            prev_elems = match node {
+                Node::BatchNorm { .. }
+                | Node::ReLU { .. }
+                | Node::BipolarAct { .. }
+                | Node::MultiThreshold { .. } => prev_elems.or(Some(node.out_elems())),
+                _ => Some(node.out_elems()),
+            };
+            prev_ch = match node {
+                Node::Conv2D { out_ch, .. } => Some(*out_ch),
+                Node::MaxPool { channels, .. } => Some(*channels),
+                Node::BatchNorm { channels, .. }
+                | Node::ReLU { channels, .. }
+                | Node::BipolarAct { channels, .. }
+                | Node::MultiThreshold { channels, .. } => prev_ch.or(Some(*channels)),
+                Node::Flatten { .. } | Node::Dense { .. } | Node::Softmax { .. }
+                | Node::TopK { .. } => None,
+            };
+        }
+        let total: u64 = self.nodes.iter().map(|n| n.params()).sum();
+        if total != self.total_params {
+            bail!("{}: total_params {} != sum {}", self.name, self.total_params, total);
+        }
+        Ok(())
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.nodes.iter().map(|n| n.macs()).sum()
+    }
+
+    pub fn compute_nodes(&self) -> impl Iterator<Item = &Node> {
+        self.nodes.iter().filter(|n| n.is_compute())
+    }
+
+    /// Number of dataflow stages (post-pass view): every node except
+    /// Flatten (free reshape) occupies a stage.
+    pub fn stage_count(&self) -> usize {
+        self.nodes.iter().filter(|n| !matches!(n, Node::Flatten { .. })).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn tiny_json() -> &'static str {
+        r#"{
+        "name":"tiny","task":"kws","flow":"finn","input_shape":[8],
+        "input_bits":8,"nodes":[
+          {"op":"Dense","name":"fc1","in_features":8,"out_features":4,
+           "weight_bits":3,"params":32},
+          {"op":"BatchNorm","name":"bn1","channels":4,"params":16},
+          {"op":"ReLU","name":"r1","channels":4,"act_bits":3,"params":0},
+          {"op":"Dense","name":"fc2","in_features":4,"out_features":2,
+           "weight_bits":3,"params":8}
+        ],"total_params":56}"#
+    }
+
+    pub(crate) fn tiny_graph() -> Graph {
+        Graph::from_json_str(tiny_json()).unwrap()
+    }
+
+    #[test]
+    fn parse_and_validate() {
+        let g = tiny_graph();
+        assert_eq!(g.nodes.len(), 4);
+        assert_eq!(g.input_bits, 8);
+        assert_eq!(g.reuse_factor, 1); // default
+    }
+
+    #[test]
+    fn validate_rejects_feature_mismatch() {
+        let mut g = tiny_graph();
+        if let Node::Dense { in_features, .. } = &mut g.nodes[3] {
+            *in_features = 5;
+        }
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_param_total_mismatch() {
+        let mut g = tiny_graph();
+        g.total_params = 1;
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn macs_and_tokens() {
+        let g = tiny_graph();
+        assert_eq!(g.total_macs(), 8 * 4 + 4 * 2);
+        assert_eq!(g.nodes[0].out_tokens(), 1);
+        assert_eq!(g.nodes[0].out_elems(), 4);
+    }
+
+    #[test]
+    fn unknown_op_rejected() {
+        let bad = tiny_json().replace("BatchNorm", "Mystery");
+        assert!(Graph::from_json_str(&bad).is_err());
+    }
+}

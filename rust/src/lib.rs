@@ -1,0 +1,59 @@
+//! # tinyml-codesign
+//!
+//! Reproduction of *"Open-source FPGA-ML codesign for the MLPerf Tiny
+//! Benchmark"* (Borras et al., MLSys 2022) as a three-layer Rust + JAX +
+//! Pallas stack.  Python authors and AOT-compiles the quantized models
+//! (`python/compile/`, build time only); this crate owns everything else:
+//!
+//! * [`ir`] / [`passes`] — the QONNX-like graph IR and the paper's compiler
+//!   optimizations (BN folding, streamlining, ReLU merging, accumulator
+//!   minimization, softmax→TopK).
+//! * [`dataflow`] / [`fifo`] — the spatial dataflow architecture simulator
+//!   and the FIFO-depth optimization of §3.1.2/§3.5.
+//! * [`board`] / [`resources`] / [`power`] — Pynq-Z2 and Arty A7-100T
+//!   models: LUT/FF/BRAM/DSP estimation and the energy-per-inference model.
+//! * [`metrics`] — FLOPs, BOPs (eq. 1), weight memory, inference cost (eq. 2).
+//! * [`dse`] / [`surrogate`] — Bayesian optimization + adaptive ASHA for the
+//!   Fig. 2/3/4 design-space explorations.
+//! * [`runtime`] — the PJRT bridge: loads `artifacts/*.hlo.txt`, executes
+//!   inference and SGD train steps (Python never on the request path).
+//! * [`coordinator`] — the end-to-end codesign flow driver and the async
+//!   batching inference engine.
+//! * [`eembc`] — a simulation of the EEMBC EnergyRunner™ + test harness
+//!   (performance, energy, and accuracy modes over a paced serial link).
+//! * [`data`] — deterministic synthetic datasets shared bit-exactly with
+//!   the Python training side (splitmix64 templates).
+
+pub mod board;
+pub mod coordinator;
+pub mod data;
+pub mod dataflow;
+pub mod dse;
+pub mod eembc;
+pub mod fifo;
+pub mod ir;
+pub mod metrics;
+pub mod passes;
+pub mod power;
+pub mod report;
+pub mod resources;
+pub mod runtime;
+pub mod surrogate;
+
+/// Canonical location of the AOT artifacts relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory from the current working directory or
+/// the `TINYML_ARTIFACTS` environment variable.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("TINYML_ARTIFACTS") {
+        return p.into();
+    }
+    for base in [".", "..", "../.."] {
+        let p = std::path::Path::new(base).join(ARTIFACTS_DIR);
+        if p.join("index.json").exists() {
+            return p;
+        }
+    }
+    std::path::PathBuf::from(ARTIFACTS_DIR)
+}

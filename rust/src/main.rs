@@ -1,0 +1,223 @@
+//! tinyml-codesign CLI — the leader entrypoint.
+//!
+//! Subcommands (hand-rolled arg parsing; the offline vendored crate set has
+//! no clap):
+//!
+//! ```text
+//! tinyml-codesign flow <model> [--board pynq|arty]   codesign flow report
+//! tinyml-codesign train <model> [--steps N] [--lr F] Rust-driven SGD
+//! tinyml-codesign eval <model> [--n N]               accuracy / AUC
+//! tinyml-codesign eembc <model> [--mode perf|energy|accuracy]
+//! tinyml-codesign table <1|2|3|4|5>                  paper tables
+//! tinyml-codesign fig <2|3>                          DSE scan CSVs
+//! tinyml-codesign serve <model> [--requests N]       batching engine demo
+//! tinyml-codesign list                               available models
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use tinyml_codesign::board::{arty_a7_100t, pynq_z2, Board};
+use tinyml_codesign::coordinator::engine::{spawn, BatchPolicy};
+use tinyml_codesign::coordinator::{self, TrainConfig};
+use tinyml_codesign::data;
+use tinyml_codesign::eembc::{DesignPerf, Dut, Runner};
+use tinyml_codesign::report::tables;
+use tinyml_codesign::runtime::{LoadedModel, Runtime};
+
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse() -> Self {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut it = std::env::args().skip(1).peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let val = it.peek().filter(|v| !v.starts_with("--")).cloned();
+                if let Some(v) = val {
+                    it.next();
+                    flags.push((name.to_string(), v));
+                } else {
+                    flags.push((name.to_string(), "true".to_string()));
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Self { positional, flags }
+    }
+
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+
+    fn usize_flag(&self, name: &str, default: usize) -> usize {
+        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn board_from(args: &Args) -> Board {
+    match args.flag("board").unwrap_or("pynq") {
+        "arty" => arty_a7_100t(),
+        _ => pynq_z2(),
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let art = tinyml_codesign::artifacts_dir();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "list" => {
+            let idx = std::fs::read_to_string(art.join("index.json"))?;
+            println!("{idx}");
+        }
+        "flow" => {
+            let model = args.positional.get(1).ok_or_else(|| anyhow!("flow <model>"))?;
+            let board = board_from(&args);
+            let r = tables::flow_for(&art, model, &board)?;
+            println!("== codesign flow: {} on {} ==", r.model, r.board);
+            for l in &r.pass_log {
+                println!("  pass {l}");
+            }
+            println!("  FIFO depths: {:?}", r.fifo.depths);
+            let t = &r.resources.total;
+            let u = t.utilization(&board);
+            println!(
+                "  resources: {:.0} LUT ({:.1}%), {:.0} FF ({:.1}%), {:.1} BRAM36 ({:.1}%), {:.0} DSP ({:.1}%) -> fits: {}",
+                t.luts, u.lut_pct, t.ffs, u.ff_pct, t.bram36, u.bram_pct, t.dsps, u.dsp_pct, r.fits
+            );
+            println!(
+                "  latency: {} cycles = {:.3} ms @ {:.0} MHz | power {:.2} W | energy/inf {:.1} uJ",
+                r.latency_cycles,
+                r.latency_s * 1e3,
+                board.clock_hz / 1e6,
+                r.power_w,
+                r.energy_per_inference_uj
+            );
+        }
+        "train" => {
+            let model = args.positional.get(1).ok_or_else(|| anyhow!("train <model>"))?;
+            let rt = Runtime::cpu()?;
+            let mut m = LoadedModel::load(&art, model)?;
+            let cfg = TrainConfig {
+                steps: args.usize_flag("steps", 300),
+                lr: args.flag("lr").and_then(|v| v.parse().ok()).unwrap_or(0.08),
+                ..Default::default()
+            };
+            println!("training {model} for {} steps (batch from manifest)...", cfg.steps);
+            let curve = coordinator::train(&rt, &mut m, &cfg)?;
+            for p in &curve {
+                println!("  step {:>5}  loss {:.4}  lr {:.4}", p.step, p.loss, p.lr);
+            }
+            let metric = coordinator::evaluate(&rt, &mut m, 200, 0xE7A1)?;
+            println!("eval ({}) = {:.4}", if m.manifest.task == "ad" { "AUC" } else { "top-1" }, metric);
+        }
+        "eval" => {
+            let model = args.positional.get(1).ok_or_else(|| anyhow!("eval <model>"))?;
+            let rt = Runtime::cpu()?;
+            let mut m = LoadedModel::load(&art, model)?;
+            let n = args.usize_flag("n", 200);
+            let metric = coordinator::evaluate(&rt, &mut m, n, 0xE7A1)?;
+            println!("{model}: {:.4} over {n} samples", metric);
+        }
+        "eembc" => {
+            let model = args.positional.get(1).ok_or_else(|| anyhow!("eembc <model>"))?;
+            let board = board_from(&args);
+            let flow_name = if model == "ic_finn" { "ic_finn_full" } else { model };
+            let fr = tables::flow_for(&art, flow_name, &board)?;
+            let perf = DesignPerf { latency_s: fr.latency_s, power_w: fr.power_w };
+            let rt = Runtime::cpu()?;
+            let mut m = LoadedModel::load(&art, model)?;
+            let task = m.manifest.task.clone();
+            let n_acc = match task.as_str() {
+                "ic" => 200,
+                "kws" => 1000,
+                _ => 250,
+            };
+            let samples = data::test_set(&task, n_acc, 0xEE4B);
+            let mut dut = Dut::new(&mut m, perf);
+            let runner = Runner::default();
+            match args.flag("mode").unwrap_or("perf") {
+                "perf" => {
+                    let r = runner.performance_mode(&rt, &mut dut, &samples.samples)?;
+                    println!(
+                        "performance: median latency {:.3} ms ({:.1} inf/s), {} inferences, serial {:.2} s",
+                        r.median_latency_s * 1e3,
+                        r.throughput_inf_per_s,
+                        r.total_inferences,
+                        r.serial_time_s
+                    );
+                }
+                "energy" => {
+                    let r = runner.energy_mode(&rt, &mut dut, &samples.samples)?;
+                    println!(
+                        "energy: median {:.1} uJ/inf at {:.2} W",
+                        r.median_energy_uj, r.mean_power_w
+                    );
+                }
+                "accuracy" => {
+                    let r = runner.accuracy_mode(&rt, &mut dut, &samples.samples)?;
+                    println!("accuracy: {} = {:.4} over {} samples", r.metric, r.value, r.n_samples);
+                }
+                other => bail!("unknown mode {other}"),
+            }
+        }
+        "table" => {
+            let which = args.positional.get(1).map(String::as_str).unwrap_or("5");
+            let text = match which {
+                "1" => tables::table1(&art, &[])?,
+                "2" => tables::table2(&art)?,
+                "3" => tables::table3(&art)?,
+                "4" => tables::table4(&art, None)?,
+                "5" => tables::table5(&art)?,
+                other => bail!("unknown table {other}"),
+            };
+            println!("{text}");
+        }
+        "fig" => {
+            let which = args.positional.get(1).map(String::as_str).unwrap_or("2");
+            match which {
+                "2" => println!("{}", tables::fig2(args.usize_flag("models", 100), 0xF16)),
+                "3" => println!("{}", tables::fig3(args.usize_flag("configs", 128), 0xF17)),
+                other => bail!("unknown fig {other} (fig 4 = examples/kws_quant_scan)"),
+            }
+        }
+        "serve" => {
+            let model = args
+                .positional
+                .get(1)
+                .cloned()
+                .unwrap_or_else(|| "kws_mlp_w3a3".to_string());
+            let n = args.usize_flag("requests", 256);
+            let (handle, join) = spawn(art.clone(), model.clone(), BatchPolicy::default());
+            let task = LoadedModel::load(&art, &model)?.manifest.task.clone();
+            let ts = data::test_set(&task, n, 0x5E12);
+            let t0 = std::time::Instant::now();
+            let mut correct = 0usize;
+            let mut batch_sizes = Vec::new();
+            for s in &ts.samples {
+                let reply = handle.infer(s.x.clone())?;
+                if reply.top1 == s.label as usize {
+                    correct += 1;
+                }
+                batch_sizes.push(reply.batch_size);
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            drop(handle);
+            let served = join.join().unwrap()?;
+            println!(
+                "served {served} requests in {dt:.2} s ({:.1} req/s), top-1 {:.3}, mean batch {:.2}",
+                n as f64 / dt,
+                correct as f64 / n as f64,
+                batch_sizes.iter().sum::<usize>() as f64 / batch_sizes.len() as f64
+            );
+        }
+        _ => {
+            println!("{}", include_str!("main.rs").lines().skip(2).take(13).map(|l| l.trim_start_matches("//! ")).collect::<Vec<_>>().join("\n"));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,159 @@
+//! Inference cost metrics: FLOPs, BOPs (eq. 1), weight memory, cost C (eq. 2).
+//!
+//! BOPs for one layer with b_w-bit weights, b_a-bit activations, n input
+//! channels, m output channels, k×k filters (per output position):
+//!
+//! ```text
+//! BOPs ≈ m·n·k²·(b_a·b_w + b_a + b_w + log2(n·k²))            (eq. 1)
+//! ```
+//!
+//! (dense layers use k = 1).  The summary inference cost compares against
+//! the CNV-W1A1 reference:
+//!
+//! ```text
+//! C = ½ (BOPs/BOPs_CNV + WM/WM_CNV)                            (eq. 2)
+//! ```
+
+use crate::ir::{Graph, Node};
+
+/// FLOPs for one inference (2·MACs, the keras-Opcounter convention).
+pub fn flops(g: &Graph) -> u64 {
+    2 * g.total_macs()
+}
+
+/// BOPs for a single layer (eq. 1).  `spatial` multiplies by the number of
+/// output positions for convolutions (BOPs count all MACs in the layer).
+pub fn layer_bops(
+    m_out: u64,
+    n_in: u64,
+    k: u64,
+    ba: u64,
+    bw: u64,
+    spatial: u64,
+) -> f64 {
+    let nk2 = (n_in * k * k) as f64;
+    spatial as f64
+        * (m_out * n_in * k * k) as f64
+        * ((ba * bw + ba + bw) as f64 + nk2.log2())
+}
+
+/// Total BOPs for a graph; activation precision comes from each compute
+/// node's `in_bits` (set by datatype inference; falls back to input bits).
+pub fn bops(g: &Graph) -> f64 {
+    let mut cur_bits = g.input_bits as u64;
+    let mut total = 0.0;
+    for node in &g.nodes {
+        match node {
+            Node::Conv2D { out_hw, in_ch, out_ch, kernel, weight_bits, in_bits, .. } => {
+                let ba = if *in_bits > 0 { *in_bits as u64 } else { cur_bits };
+                total += layer_bops(
+                    *out_ch as u64,
+                    *in_ch as u64,
+                    *kernel as u64,
+                    ba,
+                    *weight_bits as u64,
+                    (*out_hw * *out_hw) as u64,
+                );
+            }
+            Node::Dense { in_features, out_features, weight_bits, in_bits, .. } => {
+                let ba = if *in_bits > 0 { *in_bits as u64 } else { cur_bits };
+                total += layer_bops(
+                    *out_features as u64,
+                    *in_features as u64,
+                    1,
+                    ba,
+                    *weight_bits as u64,
+                    1,
+                );
+            }
+            Node::ReLU { act_bits, .. } => cur_bits = *act_bits as u64,
+            Node::BipolarAct { .. } => cur_bits = 1,
+            Node::MultiThreshold { levels, .. } => {
+                cur_bits = (32 - levels.leading_zeros()).max(1) as u64
+            }
+            _ => {}
+        }
+    }
+    total
+}
+
+/// Weight memory: total bits needed to store all weights (WM).
+pub fn weight_memory_bits(g: &Graph) -> u64 {
+    g.nodes
+        .iter()
+        .filter(|n| n.is_compute())
+        .map(|n| {
+            let bits = match n {
+                Node::Conv2D { weight_bits, .. } | Node::Dense { weight_bits, .. } => *weight_bits,
+                _ => 0,
+            };
+            n.params() * bits as u64
+        })
+        .sum()
+}
+
+/// Reference costs of the full-size CNV-W1A1 (the eq. 2 denominators).
+#[derive(Clone, Copy, Debug)]
+pub struct CostReference {
+    pub bops: f64,
+    pub wm_bits: f64,
+}
+
+/// Inference cost C (eq. 2) relative to a reference design.
+pub fn inference_cost(g: &Graph, reference: &CostReference) -> f64 {
+    0.5 * (bops(g) / reference.bops + weight_memory_bits(g) as f64 / reference.wm_bits)
+}
+
+pub fn cost_reference_from(g: &Graph) -> CostReference {
+    CostReference { bops: bops(g), wm_bits: weight_memory_bits(g) as f64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense_graph(wbits: u32, abits_relu: u32) -> Graph {
+        let json = format!(
+            r#"{{
+            "name":"d","task":"kws","flow":"finn","input_shape":[64],
+            "input_bits":{abits_relu},"nodes":[
+              {{"op":"Dense","name":"fc1","in_features":64,"out_features":32,
+               "weight_bits":{wbits},"params":2048}}
+            ],"total_params":2048}}"#
+        );
+        Graph::from_json_str(&json).unwrap()
+    }
+
+    #[test]
+    fn eq1_dense_formula() {
+        let g = dense_graph(3, 3);
+        // m·n·(ba·bw + ba + bw + log2(n)) = 32·64·(9+3+3+6) = 43008
+        let want = 32.0 * 64.0 * (9.0 + 3.0 + 3.0 + 64f64.log2());
+        assert!((bops(&g) - want).abs() < 1e-6, "{}", bops(&g));
+    }
+
+    #[test]
+    fn bops_scale_with_precision() {
+        assert!(bops(&dense_graph(8, 8)) > bops(&dense_graph(1, 8)));
+        assert!(bops(&dense_graph(3, 8)) > bops(&dense_graph(3, 1)));
+    }
+
+    #[test]
+    fn weight_memory_counts_bits() {
+        assert_eq!(weight_memory_bits(&dense_graph(3, 8)), 2048 * 3);
+        assert_eq!(weight_memory_bits(&dense_graph(1, 8)), 2048);
+    }
+
+    #[test]
+    fn cost_of_reference_is_one() {
+        let g = dense_graph(1, 1);
+        let r = cost_reference_from(&g);
+        assert!((inference_cost(&g, &r) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flops_are_2x_macs() {
+        let g = dense_graph(3, 3);
+        assert_eq!(flops(&g), 2 * 64 * 32);
+    }
+}

@@ -1,0 +1,423 @@
+//! Compiler optimization passes over the IR (paper §3 + §3.5).
+//!
+//! Pass pipeline per flow:
+//!
+//! * **hls4ml**: `fold_flatten` → `fold_bn_into_linear` (QDenseBatchnorm,
+//!   §3.3.1) → `merge_relu` (§3.1.3) → `remove_softmax_insert_topk`
+//!   (§3.1.1) → `minimize_accumulators` → `infer_datatypes`.
+//! * **FINN**: `fold_flatten` (constant folding analogue) → `streamline`
+//!   (BN + quantized act → MultiThreshold, Umuroglu & Jahre 2017) →
+//!   `remove_softmax_insert_topk` (in-hardware TopK, §3.2) →
+//!   `minimize_accumulators` → `infer_datatypes`.
+//!
+//! Every pass is `Graph -> Graph` and idempotent (asserted in tests); the
+//! [`PassManager`] records which passes ran so resource reports (Tables 3-4)
+//! can diff optimized vs unoptimized designs.
+
+use crate::ir::{Graph, Node};
+
+/// A named graph-rewriting pass.
+pub type Pass = (&'static str, fn(&Graph) -> Graph);
+
+/// Remove Flatten nodes: a pure reshape is free in a dataflow architecture
+/// (the stream is already serialized).  This is the chain-IR analogue of
+/// FINN's constant folding: nodes that do no runtime work are removed at
+/// compile time.
+pub fn fold_flatten(g: &Graph) -> Graph {
+    let mut out = g.clone();
+    out.nodes.retain(|n| !matches!(n, Node::Flatten { .. }));
+    out.total_params = out.nodes.iter().map(|n| n.params()).sum();
+    out
+}
+
+/// hls4ml QDenseBatchnorm (§3.3.1): fold BatchNorm into the preceding
+/// Dense/Conv2D per eq. 3-4.  The BN node disappears; the linear node gains
+/// a bias (if it had none) and is marked `folded_bn`.
+pub fn fold_bn_into_linear(g: &Graph) -> Graph {
+    let mut nodes: Vec<Node> = Vec::with_capacity(g.nodes.len());
+    for node in &g.nodes {
+        if let Node::BatchNorm { .. } = node {
+            if let Some(prev) = nodes.last_mut() {
+                match prev {
+                    Node::Dense { folded_bn, has_bias, params, out_features, .. } => {
+                        if !*folded_bn {
+                            if !*has_bias {
+                                *has_bias = true;
+                                *params += *out_features as u64;
+                            }
+                            *folded_bn = true;
+                            continue; // BN absorbed
+                        }
+                    }
+                    Node::Conv2D { folded_bn, params, out_ch, .. } => {
+                        if !*folded_bn {
+                            *folded_bn = true;
+                            *params += *out_ch as u64; // folded bias
+                            continue;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        nodes.push(node.clone());
+    }
+    let mut out = g.clone();
+    out.nodes = nodes;
+    out.folded_bn = true;
+    out.total_params = out.nodes.iter().map(|n| n.params()).sum();
+    out
+}
+
+/// hls4ml ReLU merging (§3.1.3): fuse each ReLU into the preceding
+/// compute/pool stage so it stops costing its own dataflow stage + FIFO.
+pub fn merge_relu(g: &Graph) -> Graph {
+    let mut nodes: Vec<Node> = Vec::with_capacity(g.nodes.len());
+    for node in &g.nodes {
+        if let Node::ReLU { .. } = node {
+            if let Some(prev) = nodes.last_mut() {
+                match prev {
+                    Node::Dense { fused_relu, .. } | Node::Conv2D { fused_relu, .. } => {
+                        if !*fused_relu {
+                            *fused_relu = true;
+                            continue; // ReLU absorbed
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        nodes.push(node.clone());
+    }
+    let mut out = g.clone();
+    out.nodes = nodes;
+    out.total_params = out.nodes.iter().map(|n| n.params()).sum();
+    out
+}
+
+/// FINN streamlining (§3.5, Umuroglu & Jahre 2017): BatchNorm followed by a
+/// uniform quantized activation collapses into one integer MultiThreshold
+/// node — removing the floating-point BN from the datapath entirely.
+pub fn streamline(g: &Graph) -> Graph {
+    let mut nodes: Vec<Node> = Vec::with_capacity(g.nodes.len());
+    let mut i = 0;
+    while i < g.nodes.len() {
+        let here = &g.nodes[i];
+        let next = g.nodes.get(i + 1);
+        if let Node::BatchNorm { name, channels, .. } = here {
+            match next {
+                Some(Node::ReLU { act_bits, .. }) if *act_bits < 32 => {
+                    let levels = (1u64 << *act_bits.min(&30)) as u32 - 1;
+                    nodes.push(Node::MultiThreshold {
+                        name: format!("{name}_mt"),
+                        channels: *channels,
+                        levels,
+                        // Thresholds: channels * levels stored values.
+                        params: (*channels as u64) * levels as u64,
+                    });
+                    i += 2;
+                    continue;
+                }
+                Some(Node::BipolarAct { .. }) => {
+                    nodes.push(Node::MultiThreshold {
+                        name: format!("{name}_mt"),
+                        channels: *channels,
+                        levels: 1,
+                        params: *channels as u64,
+                    });
+                    i += 2;
+                    continue;
+                }
+                _ => {}
+            }
+        }
+        nodes.push(here.clone());
+        i += 1;
+    }
+    let mut out = g.clone();
+    out.nodes = nodes;
+    out.total_params = out.nodes.iter().map(|n| n.params()).sum();
+    out
+}
+
+/// Softmax removal (§3.1.1): softmax is monotonic in the logits, so the
+/// top-1 class is unchanged by replacing it with an in-hardware TopK node
+/// (what FINN inserts for its IC/KWS submissions, §3.2).
+pub fn remove_softmax_insert_topk(g: &Graph) -> Graph {
+    let mut out = g.clone();
+    let mut replaced = false;
+    out.nodes = g
+        .nodes
+        .iter()
+        .map(|n| match n {
+            Node::Softmax { name, channels, .. } => {
+                replaced = true;
+                Node::TopK {
+                    name: format!("{name}_topk"),
+                    channels: *channels,
+                    k: 1,
+                    params: 0,
+                }
+            }
+            other => other.clone(),
+        })
+        .collect();
+    // Classification chains that end in raw logits get a TopK appended
+    // (AD is regression — reconstruction error — and is left alone).
+    if !replaced && g.task != "ad" && !matches!(out.nodes.last(), Some(Node::TopK { .. })) {
+        let ch = out.nodes.last().map(|n| n.out_elems()).unwrap_or(0);
+        out.nodes.push(Node::TopK {
+            name: "topk".into(),
+            channels: ch,
+            k: 1,
+            params: 0,
+        });
+    }
+    out.total_params = out.nodes.iter().map(|n| n.params()).sum();
+    out
+}
+
+/// FINN accumulator minimization (§3.5): shrink each MVAU's accumulator
+/// from the synthesis default (32) to the provably-sufficient width
+/// `wbits + in_bits + ceil(log2(fan_in))`.  Requires datatype inference to
+/// have run (uses `in_bits`; falls back to the graph input precision).
+pub fn minimize_accumulators(g: &Graph) -> Graph {
+    let mut out = g.clone();
+    let mut cur_bits = g.input_bits;
+    for node in &mut out.nodes {
+        match node {
+            Node::Conv2D { kernel, in_ch, weight_bits, acc_bits, in_bits, .. } => {
+                let fan_in = (*kernel * *kernel * *in_ch) as f64;
+                *in_bits = cur_bits;
+                *acc_bits = *weight_bits + cur_bits + fan_in.log2().ceil() as u32;
+            }
+            Node::Dense { in_features, weight_bits, acc_bits, in_bits, .. } => {
+                let fan_in = *in_features as f64;
+                *in_bits = cur_bits;
+                *acc_bits = *weight_bits + cur_bits + fan_in.log2().ceil() as u32;
+            }
+            Node::ReLU { act_bits, .. } => cur_bits = *act_bits,
+            Node::BipolarAct { .. } => cur_bits = 1,
+            Node::MultiThreshold { levels, .. } => {
+                cur_bits = (32 - levels.leading_zeros()).max(1);
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Datatype inference: propagate activation precision down the chain into
+/// each compute node's `in_bits` (resource + BOPs models depend on it).
+pub fn infer_datatypes(g: &Graph) -> Graph {
+    // minimize_accumulators already performs the propagation; this pass
+    // exists separately so unoptimized designs still get `in_bits` set
+    // (with default 32-bit accumulators).
+    let mut out = g.clone();
+    let mut cur_bits = g.input_bits;
+    for node in &mut out.nodes {
+        match node {
+            Node::Conv2D { in_bits, acc_bits, .. } | Node::Dense { in_bits, acc_bits, .. } => {
+                *in_bits = cur_bits;
+                if *acc_bits == 0 {
+                    *acc_bits = 32;
+                }
+            }
+            Node::ReLU { act_bits, .. } => cur_bits = *act_bits,
+            Node::BipolarAct { .. } => cur_bits = 1,
+            Node::MultiThreshold { levels, .. } => {
+                cur_bits = (32 - levels.leading_zeros()).max(1);
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Ordered pass pipeline with a run log.
+pub struct PassManager {
+    pub passes: Vec<Pass>,
+    pub log: Vec<String>,
+}
+
+impl PassManager {
+    /// The paper's full optimization pipeline for a flow ("hls4ml"|"finn").
+    pub fn for_flow(flow: &str) -> Self {
+        let passes: Vec<Pass> = match flow {
+            "hls4ml" => vec![
+                ("fold_flatten", fold_flatten),
+                ("fold_bn_into_linear", fold_bn_into_linear),
+                ("merge_relu", merge_relu),
+                ("remove_softmax_insert_topk", remove_softmax_insert_topk),
+                ("minimize_accumulators", minimize_accumulators),
+                ("infer_datatypes", infer_datatypes),
+            ],
+            _ => vec![
+                ("fold_flatten", fold_flatten),
+                ("streamline", streamline),
+                ("remove_softmax_insert_topk", remove_softmax_insert_topk),
+                ("minimize_accumulators", minimize_accumulators),
+                ("infer_datatypes", infer_datatypes),
+            ],
+        };
+        Self { passes, log: Vec::new() }
+    }
+
+    /// Baseline pipeline: only what is needed for analysis (datatype
+    /// inference), no optimizations — the "Without opt." rows of Tables 3-4.
+    pub fn baseline() -> Self {
+        Self {
+            passes: vec![("infer_datatypes", infer_datatypes)],
+            log: Vec::new(),
+        }
+    }
+
+    pub fn run(&mut self, g: &Graph) -> Graph {
+        let mut cur = g.clone();
+        for (name, pass) in &self.passes {
+            let next = pass(&cur);
+            self.log.push(format!(
+                "{name}: {} -> {} nodes, {} -> {} params",
+                cur.nodes.len(),
+                next.nodes.len(),
+                cur.total_params,
+                next.total_params
+            ));
+            cur = next;
+        }
+        cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Graph;
+
+    fn kws_like() -> Graph {
+        Graph::from_json_str(
+            r#"{
+            "name":"t","task":"kws","flow":"finn","input_shape":[8],
+            "input_bits":8,"nodes":[
+              {"op":"Dense","name":"fc1","in_features":8,"out_features":4,
+               "weight_bits":3,"params":32},
+              {"op":"BatchNorm","name":"bn1","channels":4,"params":16},
+              {"op":"ReLU","name":"r1","channels":4,"act_bits":3,"params":0},
+              {"op":"Flatten","name":"fl","features":4,"params":0},
+              {"op":"Dense","name":"fc2","in_features":4,"out_features":2,
+               "weight_bits":3,"params":8},
+              {"op":"BatchNorm","name":"bn2","channels":2,"params":8},
+              {"op":"Softmax","name":"sm","channels":2,"params":0}
+            ],"total_params":64}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn streamline_creates_multithreshold() {
+        let g = streamline(&kws_like());
+        let ops: Vec<_> = g.nodes.iter().map(|n| n.op()).collect();
+        assert!(ops.contains(&"MultiThreshold"));
+        assert!(!ops
+            .iter()
+            .zip(ops.iter().skip(1))
+            .any(|(a, b)| *a == "BatchNorm" && *b == "ReLU"));
+        // 3-bit act -> 7 thresholds per channel.
+        let mt = g.nodes.iter().find(|n| n.op() == "MultiThreshold").unwrap();
+        if let Node::MultiThreshold { levels, params, channels, .. } = mt {
+            assert_eq!(*levels, 7);
+            assert_eq!(*params, (*channels as u64) * 7);
+        }
+    }
+
+    #[test]
+    fn streamline_idempotent() {
+        let once = streamline(&kws_like());
+        let twice = streamline(&once);
+        assert_eq!(once.nodes, twice.nodes);
+    }
+
+    #[test]
+    fn fold_bn_marks_linear_and_removes_bn() {
+        let g = fold_bn_into_linear(&kws_like());
+        assert!(!g.nodes.iter().any(|n| n.op() == "BatchNorm"));
+        match &g.nodes[0] {
+            Node::Dense { folded_bn, has_bias, params, .. } => {
+                assert!(*folded_bn && *has_bias);
+                assert_eq!(*params, 32 + 4);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fold_bn_idempotent() {
+        let once = fold_bn_into_linear(&kws_like());
+        let twice = fold_bn_into_linear(&once);
+        assert_eq!(once.nodes, twice.nodes);
+    }
+
+    #[test]
+    fn merge_relu_removes_standalone_relu() {
+        // hls4ml order: fold BN first, then the ReLU is adjacent to Dense.
+        let g = merge_relu(&fold_bn_into_linear(&kws_like()));
+        assert!(!g.nodes.iter().any(|n| n.op() == "ReLU"));
+        assert!(matches!(g.nodes[0], Node::Dense { fused_relu: true, .. }));
+    }
+
+    #[test]
+    fn softmax_becomes_topk() {
+        let g = remove_softmax_insert_topk(&kws_like());
+        assert!(!g.nodes.iter().any(|n| n.op() == "Softmax"));
+        assert!(matches!(g.nodes.last(), Some(Node::TopK { k: 1, .. })));
+    }
+
+    #[test]
+    fn topk_appended_when_missing() {
+        let mut base = kws_like();
+        base.nodes.pop(); // drop softmax
+        base.total_params = base.nodes.iter().map(|n| n.params()).sum();
+        let g = remove_softmax_insert_topk(&base);
+        assert!(matches!(g.nodes.last(), Some(Node::TopK { .. })));
+    }
+
+    #[test]
+    fn accumulator_widths_are_sufficient_and_small() {
+        let g = minimize_accumulators(&infer_datatypes(&kws_like()));
+        for n in g.compute_nodes() {
+            if let Node::Dense { acc_bits, weight_bits, in_bits, in_features, .. } = n {
+                let need = weight_bits + in_bits + (*in_features as f64).log2().ceil() as u32;
+                assert_eq!(*acc_bits, need);
+                assert!(*acc_bits < 32);
+            }
+        }
+    }
+
+    #[test]
+    fn full_finn_pipeline_runs_and_validates() {
+        let mut pm = PassManager::for_flow("finn");
+        let g = pm.run(&kws_like());
+        g.validate().unwrap();
+        assert_eq!(pm.log.len(), 5);
+    }
+
+    #[test]
+    fn full_hls4ml_pipeline_runs_and_validates() {
+        let mut pm = PassManager::for_flow("hls4ml");
+        let g = pm.run(&kws_like());
+        g.validate().unwrap();
+        assert!(!g.nodes.iter().any(|n| n.op() == "BatchNorm"));
+        assert!(!g.nodes.iter().any(|n| n.op() == "ReLU"));
+    }
+
+    #[test]
+    fn datatype_inference_propagates_bits() {
+        let g = infer_datatypes(&kws_like());
+        if let Node::Dense { in_bits, .. } = &g.nodes[0] {
+            assert_eq!(*in_bits, 8); // graph input precision
+        }
+        if let Node::Dense { in_bits, .. } = &g.nodes[4] {
+            assert_eq!(*in_bits, 3); // after the 3-bit ReLU
+        }
+    }
+}

@@ -1,0 +1,3 @@
+//! Report rendering (tables/figures) + the in-tree JSON implementation.
+pub mod json;
+pub mod tables;

@@ -1,0 +1,358 @@
+//! Paper table/figure renderers (ours vs paper, side by side).
+//!
+//! Every table and figure in the paper's evaluation section has a
+//! generator here; `benches/` and the CLI call these.  Paper values are
+//! embedded so each row prints `ours | paper` — absolute agreement is not
+//! expected (the substrate is a simulator; see DESIGN.md), the *shape* is
+//! asserted by the benches.
+
+use crate::board::{all_boards, arty_a7_100t, pynq_z2, Board};
+use crate::coordinator::flow::{run_flow, FlowOptions, FlowReport};
+use crate::dataflow::schedule::ScheduleConfig;
+use crate::dse;
+use crate::ir::Graph;
+use crate::metrics;
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// The four submitted designs (Table 5 rows).  IC/FINN uses the full-size
+/// CNV topology for hardware estimation (the paper's 1.54 M-param design);
+/// the width-scaled variant is what gets *trained* (see DESIGN.md).
+pub const SUBMITTED: [(&str, &str); 4] = [
+    ("IC (hls4ml)", "ic_hls4ml"),
+    ("IC (FINN)", "ic_finn_full"),
+    ("AD", "ad_autoencoder"),
+    ("KWS", "kws_mlp_w3a3"),
+];
+
+pub fn load_topology(art_dir: &Path, name: &str) -> Result<Graph> {
+    Graph::load(&art_dir.join(format!("{name}_topology.json")))
+        .with_context(|| format!("loading {name} topology"))
+}
+
+pub fn flow_for(art_dir: &Path, name: &str, board: &Board) -> Result<FlowReport> {
+    let g = load_topology(art_dir, name)?;
+    run_flow(&g, board, &FlowOptions::default(), &ScheduleConfig::default())
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 — model summary.
+// ---------------------------------------------------------------------------
+
+/// Paper Table 1 rows: (benchmark, flow, precision, params, performance).
+pub const TABLE1_PAPER: [(&str, &str, &str, u64, &str); 4] = [
+    ("IC", "hls4ml", "8-12", 58_115, "83.5%"),
+    ("IC", "FINN", "1", 1_542_848, "84.5%"),
+    ("AD", "hls4ml", "6-12", 22_285, "0.83 AUC"),
+    ("KWS", "FINN", "3", 259_584, "82.5%"),
+];
+
+/// Our models; `measured` maps model name -> measured accuracy/AUC string.
+pub fn table1(art_dir: &Path, measured: &[(String, String)]) -> Result<String> {
+    let mut out = String::new();
+    writeln!(out, "Table 1 — submitted models (ours vs paper)").ok();
+    writeln!(
+        out,
+        "{:<12} {:<7} {:<7} {:>12} {:>18} | {:>10} {:>10}",
+        "Benchmark", "Flow", "Prec.", "Params(ours)", "Perf(ours)", "Params(pap)", "Perf(pap)"
+    )
+    .ok();
+    let ours = [
+        ("IC", "hls4ml", "8-12", "ic_hls4ml"),
+        ("IC", "FINN", "1", "ic_finn"),
+        ("AD", "hls4ml", "6-12", "ad_autoencoder"),
+        ("KWS", "FINN", "3", "kws_mlp_w3a3"),
+    ];
+    for (i, (bench, flow, prec, name)) in ours.iter().enumerate() {
+        let g = load_topology(art_dir, name)?;
+        let weights: u64 = g.compute_nodes().map(|n| n.params()).sum();
+        let acc = measured
+            .iter()
+            .find(|(m, _)| m == name)
+            .map(|(_, a)| a.clone())
+            .unwrap_or_else(|| "n/a (train first)".into());
+        let p = TABLE1_PAPER[i];
+        writeln!(
+            out,
+            "{bench:<12} {flow:<7} {prec:<7} {weights:>12} {acc:>18} | {:>10} {:>10}",
+            p.3, p.4
+        )
+        .ok();
+    }
+    writeln!(out, "note: IC/FINN trains width-scaled CNV (DESIGN.md §Hardware-Adaptation)").ok();
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 — FIFO sizes after optimization.
+// ---------------------------------------------------------------------------
+
+pub const TABLE2_PAPER: [(&str, &str, &str, &str); 4] = [
+    ("IC", "hls4ml", "enabled", "1-1066"),
+    ("IC", "FINN", "enabled", "2-512"),
+    ("AD", "hls4ml", "disabled", "1"),
+    ("KWS", "FINN", "enabled", "32-64"),
+];
+
+pub fn table2(art_dir: &Path) -> Result<String> {
+    let mut out = String::new();
+    writeln!(out, "Table 2 — FIFO buffer sizes after depth optimization").ok();
+    writeln!(
+        out,
+        "{:<12} {:<7} {:<10} {:>12} | {:>10}",
+        "Benchmark", "Flow", "FIFO opt", "sizes(ours)", "paper"
+    )
+    .ok();
+    let board = pynq_z2();
+    for (i, (label, name)) in SUBMITTED.iter().enumerate() {
+        let g = load_topology(art_dir, name)?;
+        // AD shipped without FIFO optimization (paper Table 2).
+        let mut opts = FlowOptions::default();
+        if g.task == "ad" {
+            opts.fifo_opt = false;
+        }
+        let r = run_flow(&g, &board, &opts, &ScheduleConfig::default())?;
+        let sizes = if g.task == "ad" {
+            "1".to_string() // depth-1 defaults, like the submission
+        } else {
+            format!("{}-{}", r.fifo_range.0, r.fifo_range.1)
+        };
+        let p = TABLE2_PAPER[i];
+        writeln!(
+            out,
+            "{:<12} {:<7} {:<10} {:>12} | {:>10}",
+            label,
+            g.flow,
+            if g.task == "ad" { "disabled" } else { "enabled" },
+            sizes,
+            p.3
+        )
+        .ok();
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 3 — IC/hls4ml resource ablation (Pynq-Z2).
+// ---------------------------------------------------------------------------
+
+pub const TABLE3_PAPER: [(&str, f64, u64, u64); 4] = [
+    ("Without opt.", 477.0 / 2.0, 79_177, 66_838), // BRAM printed in 36kb here
+    ("With FIFO opt.", 278.0 / 2.0, 72_686, 58_515),
+    ("With ReLU opt.", 345.0 / 2.0, 72_921, 55_292),
+    ("With all opt.", 146.0 / 2.0, 66_430, 46_969),
+];
+
+pub fn table3(art_dir: &Path) -> Result<String> {
+    let g = load_topology(art_dir, "ic_hls4ml")?;
+    let board = pynq_z2();
+    let cfg = ScheduleConfig::default();
+    let rows: [(&str, FlowOptions); 4] = [
+        ("Without opt.", FlowOptions { run_passes: true, fifo_opt: false, relu_merge: false, bn_fold: true }),
+        ("With FIFO opt.", FlowOptions { run_passes: true, fifo_opt: true, relu_merge: false, bn_fold: true }),
+        ("With ReLU opt.", FlowOptions { run_passes: true, fifo_opt: false, relu_merge: true, bn_fold: true }),
+        ("With all opt.", FlowOptions::default()),
+    ];
+    let mut out = String::new();
+    writeln!(out, "Table 3 — IC/hls4ml resources vs optimizations (Pynq-Z2, accelerator only)").ok();
+    writeln!(
+        out,
+        "{:<16} {:>12} {:>10} {:>10} | {:>10} {:>8} {:>8}",
+        "", "BRAM36(ours)", "FF(ours)", "LUT(ours)", "BRAM36(p)", "FF(p)", "LUT(p)"
+    )
+    .ok();
+    for (i, (label, opts)) in rows.iter().enumerate() {
+        let r = run_flow(&g, &board, opts, &cfg)?;
+        let a = &r.resources.accelerator;
+        let p = TABLE3_PAPER[i];
+        writeln!(
+            out,
+            "{label:<16} {:>12.1} {:>10.0} {:>10.0} | {:>10.1} {:>8} {:>8}",
+            a.bram36, a.ffs, a.luts, p.1, p.2, p.3
+        )
+        .ok();
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 4 — AD optimization ablation (Pynq-Z2, RF 144).
+// ---------------------------------------------------------------------------
+
+pub const TABLE4_PAPER: [(&str, &str, &str, &str); 4] = [
+    ("Reference", "87.1% AUC", "-", "- (too large)"),
+    ("With folding", "68.1% AUC", "161228", "221063"),
+    ("With downsampling", "81.4% AUC", "55341", "35366"),
+    ("With all opt.", "83.3% AUC", "44300", "31094"),
+];
+
+pub fn table4(art_dir: &Path, measured_auc: Option<f64>) -> Result<String> {
+    let board = pynq_z2();
+    let cfg = ScheduleConfig::default();
+    // Cumulative rows, like the paper: fold -> +downsample -> +shrink.
+    let rows = [
+        ("Reference", "ad_reference"),
+        ("With folding", "ad_folded"),
+        ("With downsampling", "ad_downsampled"),
+        ("With all opt.", "ad_autoencoder"),
+    ];
+    let mut out = String::new();
+    writeln!(out, "Table 4 — AD resources vs optimizations (Pynq-Z2, RF 144)").ok();
+    writeln!(
+        out,
+        "{:<20} {:>12} {:>10} {:>10} {:>6} | {:>10} {:>10} {:>10}",
+        "", "AUC(ours)", "FF(ours)", "LUT(ours)", "fits", "AUC(p)", "FF(p)", "LUT(p)"
+    )
+    .ok();
+    for (i, (label, name)) in rows.iter().enumerate() {
+        let g = load_topology(art_dir, name)?;
+        let r = run_flow(&g, &board, &FlowOptions::default(), &cfg)?;
+        let a = &r.resources.accelerator;
+        let auc = if *name == "ad_autoencoder" {
+            measured_auc
+                .map(|v| format!("{v:.3}"))
+                .unwrap_or_else(|| "n/a".into())
+        } else {
+            "(not trained)".into()
+        };
+        let p = TABLE4_PAPER[i];
+        writeln!(
+            out,
+            "{label:<20} {auc:>12} {:>10.0} {:>10.0} {:>6} | {:>10} {:>10} {:>10}",
+            a.ffs,
+            a.luts,
+            if r.fits { "yes" } else { "NO" },
+            p.1,
+            p.2,
+            p.3
+        )
+        .ok();
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 5 — resources, latency, energy per board.
+// ---------------------------------------------------------------------------
+
+/// Paper Table 5: (model, board, lut, lutram, ff, bram36, dsp, latency_ms,
+/// energy_uj).
+pub const TABLE5_PAPER: [(&str, &str, u64, u64, u64, f64, u64, f64, f64); 8] = [
+    ("IC (hls4ml)", "Pynq-Z2", 28_544, 3_756, 49_215, 42.0, 4, 27.3, 44_330.0),
+    ("IC (FINN)", "Pynq-Z2", 24_502, 2_086, 34_354, 100.0, 0, 1.5, 2_535.0),
+    ("AD", "Pynq-Z2", 40_658, 3_659, 51_879, 14.5, 205, 0.019, 30.1),
+    ("KWS", "Pynq-Z2", 33_732, 1_033, 34_405, 37.0, 1, 0.017, 30.9),
+    ("IC (hls4ml)", "Arty A7-100T", 39_126, 5_877, 59_184, 50.0, 6, 33.1, 73_166.0),
+    ("IC (FINN)", "Arty A7-100T", 32_096, 3_154, 39_962, 113.5, 2, 1.5, 3_419.0),
+    ("AD", "Arty A7-100T", 51_429, 5_780, 61_639, 22.5, 207, 0.045, 98.4),
+    ("KWS", "Arty A7-100T", 42_518, 1_634, 43_157, 59.5, 2, 0.033, 53.7),
+];
+
+pub fn table5(art_dir: &Path) -> Result<String> {
+    let mut out = String::new();
+    writeln!(out, "Table 5 — resources, latency, energy per inference").ok();
+    writeln!(
+        out,
+        "{:<14} {:<14} {:>8} {:>8} {:>8} {:>7} {:>5} {:>11} {:>12} | {:>11} {:>12}",
+        "Model", "Board", "LUT", "LUTRAM", "FF", "BRAM36", "DSP", "Lat[ms]", "E/inf[uJ]",
+        "Lat(p)[ms]", "E(p)[uJ]"
+    )
+    .ok();
+    let mut idx = 0;
+    for board in all_boards() {
+        for (label, name) in SUBMITTED.iter() {
+            let r = flow_for(art_dir, name, &board)?;
+            let t = &r.resources.total;
+            let p = TABLE5_PAPER[idx];
+            writeln!(
+                out,
+                "{label:<14} {:<14} {:>8.0} {:>8.0} {:>8.0} {:>7.1} {:>5.0} {:>11.3} {:>12.1} | {:>11.3} {:>12.1}",
+                board.name,
+                t.luts,
+                t.lutram,
+                t.ffs,
+                t.bram36,
+                t.dsps,
+                r.latency_s * 1e3,
+                r.energy_per_inference_uj,
+                p.7,
+                p.8
+            )
+            .ok();
+            idx += 1;
+        }
+    }
+    writeln!(out, "(IC/FINN rows estimate the paper's full-size CNV-W1A1 topology)").ok();
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 2 / Fig. 3 — DSE scans as CSV series.
+// ---------------------------------------------------------------------------
+
+pub fn fig2(models_per_scan: usize, seed: u64) -> String {
+    let mut out = String::new();
+    writeln!(out, "Fig. 2 — BO NAS scans: accuracy vs MFLOPs (CSV)").ok();
+    writeln!(out, "stacks,mflops,accuracy").ok();
+    for stacks in 1..=3 {
+        for p in dse::run_ic_bo_scan(stacks, models_per_scan, seed + stacks as u64) {
+            writeln!(out, "{stacks},{:.3},{:.2}", p.mflops, p.accuracy).ok();
+        }
+    }
+    writeln!(out, "# paper anchors: (1stk,2.5,75.0) (2stk,12.8,83.5) (ref,25.0,87.0)").ok();
+    out
+}
+
+pub fn fig3(configs: usize, seed: u64) -> String {
+    let mut out = String::new();
+    writeln!(out, "Fig. 3 — ASHA scan: accuracy vs inference cost C (CSV)").ok();
+    writeln!(out, "inference_cost,accuracy,epochs,rung").ok();
+    for p in dse::run_cnv_asha_scan(configs, seed) {
+        writeln!(
+            out,
+            "{:.4},{:.2},{},{}",
+            p.inference_cost, p.accuracy, p.budget_epochs, p.rung
+        )
+        .ok();
+    }
+    writeln!(out, "# paper anchor: CNV-W1A1 at C=1.0 -> 84.5% after 100 epochs").ok();
+    out
+}
+
+/// Fig. 4 x-axis: BOPs of each KWS WnAm variant (training happens in the
+/// example/bench; this provides the metric side).
+pub fn fig4_costs(art_dir: &Path) -> Result<Vec<(String, f64, f64)>> {
+    let variants = ["w1a1", "w2a2", "w3a3", "w4a4", "w8a8", "fp32"];
+    let mut rows = Vec::new();
+    for v in variants {
+        let g = load_topology(art_dir, &format!("kws_mlp_{v}"))?;
+        let g = crate::passes::infer_datatypes(&g);
+        rows.push((
+            v.to_string(),
+            metrics::bops(&g),
+            metrics::weight_memory_bits(&g) as f64,
+        ));
+    }
+    Ok(rows)
+}
+
+/// Comparison helper for the §4.2.3 claim: hls4ml-IC vs FINN-IC.
+pub fn ic_comparison(art_dir: &Path) -> Result<String> {
+    let board = pynq_z2();
+    let h = flow_for(art_dir, "ic_hls4ml", &board)?;
+    let f = flow_for(art_dir, "ic_finn_full", &board)?;
+    let mut out = String::new();
+    writeln!(out, "§4.2.3 IC comparison (paper: hls4ml uses 58% fewer BRAM, 18.2x latency)").ok();
+    writeln!(
+        out,
+        "BRAM36: hls4ml {:.1} vs FINN {:.1} ({:.0}% fewer) | latency ratio {:.1}x",
+        h.resources.total.bram36,
+        f.resources.total.bram36,
+        100.0 * (1.0 - h.resources.total.bram36 / f.resources.total.bram36),
+        h.latency_s / f.latency_s
+    )
+    .ok();
+    let _ = arty_a7_100t();
+    Ok(out)
+}

@@ -1,0 +1,405 @@
+//! FPGA resource estimation (Tables 3, 4, 5).
+//!
+//! Substitute for Vivado HLS synthesis reports (DESIGN.md
+//! §Hardware-Adaptation): an analytic per-stage cost model over the
+//! scheduled design.  The *structure* is first-principles — multiplier
+//! counts come from the folding schedule, weight storage from param-bits,
+//! FIFO costs from the optimized depths, line buffers from window shapes —
+//! while the per-unit coefficients in [`CostModel`] are calibrated so the
+//! four submitted models land near the paper's reported utilizations
+//! (e.g. AD at RF 144 ⇒ 208 DSP-mapped multipliers vs the paper's 205).
+//!
+//! What the model must reproduce (and the benches assert):
+//! * FIFO-depth optimization cuts BRAM massively (Table 3: 477 → 278).
+//! * ReLU merging cuts LUTs (Table 3: 66.8 k → 55.3 k).
+//! * BN folding + downsampling + width reduction takes AD from
+//!   unsynthesizable to 58.5% LUT (Table 4).
+//! * hls4ml-IC uses far fewer BRAMs than FINN-IC (Table 5: 42 vs 100).
+
+use crate::board::{soft_system_overhead, Board};
+use crate::dataflow::schedule::{ScheduledDesign, StageImpl};
+
+
+/// Multiplier implementation choice.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MultImpl {
+    Dsp,
+    Lut,
+}
+
+/// Calibrated per-unit coefficients.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// LUTs per DSP-mapped multiplier (routing + pre-adders).
+    pub lut_per_dsp_mult: f64,
+    /// FFs per DSP-mapped multiplier (pipeline + accumulator).
+    pub ff_per_dsp_mult: f64,
+    /// LUTs per XNOR-popcount binary MAC (incl. its popcount-tree share).
+    pub lut_per_binary_mult: f64,
+    /// LUTs per (wbits x abits) LUT-mapped multiplier, per bit-product.
+    pub lut_per_bitproduct: f64,
+    /// FFs per LUT-mapped multiplier, per accumulator bit.
+    pub ff_per_acc_bit: f64,
+    /// Fixed control/stream logic per dataflow stage.
+    pub ctrl_lut_per_stage: f64,
+    pub ctrl_ff_per_stage: f64,
+    /// Extra stream glue per stage (AXI-stream handshakes, counters).
+    pub stream_lut_per_stage: f64,
+    /// MultiThreshold comparators: LUTs per channel·level·bit.
+    pub lut_per_threshold_bit: f64,
+    /// Standalone (unfolded) BatchNorm: LUTs/FFs per channel (fixed-point
+    /// mult-add at full width — this is what folding eliminates, §3.3.1).
+    pub bn_lut_per_channel: f64,
+    pub bn_ff_per_channel: f64,
+    /// Standalone ReLU stage: LUTs per channel (what merging eliminates).
+    pub relu_lut_per_channel: f64,
+    /// BRAM packing efficiency for partitioned weight memories (FINN slices
+    /// weights per PE, wasting part of each block).
+    pub weight_bram_efficiency: f64,
+    /// FIFO impl threshold: depth*width (bits) at or below this go to
+    /// LUTRAM (SRL), above to BRAM.
+    pub fifo_lutram_threshold_bits: u64,
+    /// DSP-mapping rule: hls4ml designs with reuse-factor >= this map
+    /// multipliers to DSP slices (resource strategy); below, to LUTs.
+    pub dsp_reuse_threshold: u32,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self {
+            lut_per_dsp_mult: 105.0,
+            ff_per_dsp_mult: 190.0,
+            lut_per_binary_mult: 8.0,
+            lut_per_bitproduct: 1.0,
+            ff_per_acc_bit: 2.4,
+            ctrl_lut_per_stage: 180.0,
+            ctrl_ff_per_stage: 420.0,
+            stream_lut_per_stage: 300.0,
+            lut_per_threshold_bit: 0.55,
+            bn_lut_per_channel: 160.0,
+            bn_ff_per_channel: 96.0,
+            relu_lut_per_channel: 48.0,
+            weight_bram_efficiency: 0.45,
+            fifo_lutram_threshold_bits: 9_216, // half an 18-kb BRAM
+            dsp_reuse_threshold: 16,
+        }
+    }
+}
+
+/// Resource totals (Table 5 columns).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Resources {
+    pub luts: f64,
+    pub lutram: f64,
+    pub ffs: f64,
+    pub bram36: f64,
+    pub dsps: f64,
+}
+
+impl Resources {
+    pub fn add(&mut self, o: &Resources) {
+        self.luts += o.luts;
+        self.lutram += o.lutram;
+        self.ffs += o.ffs;
+        self.bram36 += o.bram36;
+        self.dsps += o.dsps;
+    }
+
+    pub fn utilization(&self, b: &Board) -> Utilization {
+        Utilization {
+            lut_pct: 100.0 * self.luts / b.luts as f64,
+            lutram_pct: 100.0 * self.lutram / b.lutram as f64,
+            ff_pct: 100.0 * self.ffs / b.ffs as f64,
+            bram_pct: 100.0 * self.bram36 / b.bram36,
+            dsp_pct: 100.0 * self.dsps / b.dsps as f64,
+        }
+    }
+
+    pub fn fits(&self, b: &Board) -> bool {
+        let u = self.utilization(b);
+        u.lut_pct <= 100.0 && u.ff_pct <= 100.0 && u.bram_pct <= 100.0 && u.dsp_pct <= 100.0
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Utilization {
+    pub lut_pct: f64,
+    pub lutram_pct: f64,
+    pub ff_pct: f64,
+    pub bram_pct: f64,
+    pub dsp_pct: f64,
+}
+
+/// Per-stage breakdown + totals.
+#[derive(Clone, Debug)]
+pub struct ResourceReport {
+    pub model: String,
+    pub per_stage: Vec<(String, Resources)>,
+    pub fifo: Resources,
+    pub accelerator: Resources,
+    /// Accelerator + platform system (AXI/DMA or MicroBlaze+MIG).
+    pub total: Resources,
+}
+
+/// Estimate one compute stage.
+fn compute_stage(s: &StageImpl, flow: &str, reuse_factor: u32, cm: &CostModel) -> Resources {
+    let mut r = Resources::default();
+    let n = s.n_mult as f64;
+    let mult_impl = if flow == "hls4ml" && reuse_factor >= cm.dsp_reuse_threshold {
+        MultImpl::Dsp
+    } else {
+        MultImpl::Lut
+    };
+    match mult_impl {
+        MultImpl::Dsp => {
+            r.dsps += n;
+            r.luts += n * cm.lut_per_dsp_mult;
+            r.ffs += n * cm.ff_per_dsp_mult;
+        }
+        MultImpl::Lut => {
+            if s.wbits <= 1 {
+                r.luts += n * cm.lut_per_binary_mult;
+            } else {
+                let bitprod = (s.wbits.max(1) * s.in_bits.max(1)) as f64;
+                r.luts += n * bitprod * cm.lut_per_bitproduct;
+            }
+            r.ffs += n * s.acc_bits.max(8) as f64 * cm.ff_per_acc_bit;
+        }
+    }
+    // Weight storage: BRAM above LUTRAM threshold, partition-inefficient.
+    let wbits = s.weight_store_bits as f64;
+    if s.weight_store_bits > cm.fifo_lutram_threshold_bits {
+        r.bram36 += (wbits / 36_864.0 / cm.weight_bram_efficiency).ceil().max(1.0);
+    } else {
+        r.lutram += wbits / 64.0;
+        r.luts += wbits / 64.0;
+    }
+    r
+}
+
+/// Window line buffers for conv/pool stages ((kernel-1) rows on chip).
+fn line_buffer(s: &StageImpl, cm: &CostModel) -> Resources {
+    let mut r = Resources::default();
+    if let crate::dataflow::Prereq::Window { in_w, kernel, .. } = s.spec.prereq {
+        if kernel > 1 {
+            let bits = ((kernel - 1) * in_w * s.token_elems) as f64 * s.in_bits.max(1) as f64;
+            if bits > cm.fifo_lutram_threshold_bits as f64 {
+                r.bram36 += (bits / 36_864.0).ceil();
+            } else {
+                r.lutram += bits / 64.0;
+                r.luts += bits / 64.0;
+            }
+        }
+    }
+    r
+}
+
+/// FIFO cost for one channel of `depth` tokens of `width_bits` each.
+pub fn fifo_cost(depth: usize, width_bits: u64, cm: &CostModel) -> Resources {
+    let mut r = Resources::default();
+    let bits = depth as u64 * width_bits;
+    if bits == 0 {
+        return r;
+    }
+    if bits <= cm.fifo_lutram_threshold_bits {
+        // SRL-based: one LUT shifts 32 bits deep per bit of width.
+        let lut = (width_bits as f64) * (depth as f64 / 32.0).ceil();
+        r.lutram += lut;
+        r.luts += lut + 12.0; // + handshake
+        r.ffs += width_bits as f64 + 10.0;
+    } else {
+        r.bram36 += (bits as f64 / 36_864.0).ceil().max(0.5);
+        r.luts += 40.0;
+        r.ffs += width_bits as f64 + 16.0;
+    }
+    r
+}
+
+/// Full design estimate: scheduled stages + FIFO depths (one per channel,
+/// `depths.len() == stages + 1`).
+pub fn estimate(
+    design: &ScheduledDesign,
+    reuse_factor: u32,
+    depths: &[usize],
+    board: &Board,
+    cm: &CostModel,
+) -> ResourceReport {
+    let mut per_stage = Vec::new();
+    let mut accel = Resources::default();
+
+    for s in &design.stages {
+        let mut r = Resources::default();
+        match s.op {
+            "Conv2D" | "Dense" => {
+                r.add(&compute_stage(s, &design.flow, reuse_factor, cm));
+                r.add(&line_buffer(s, cm));
+            }
+            "BatchNorm" => {
+                r.luts += s.token_elems as f64 * cm.bn_lut_per_channel;
+                r.ffs += s.token_elems as f64 * cm.bn_ff_per_channel;
+            }
+            "ReLU" => {
+                r.luts += s.token_elems as f64 * cm.relu_lut_per_channel;
+                r.ffs += s.token_elems as f64 * 4.0;
+            }
+            "MultiThreshold" => {
+                // channels * levels comparators at in_bits width.
+                let levels = s.spec.n_out.max(1); // not meaningful; use params
+                let _ = levels;
+                let bits = s.token_elems as f64 * s.out_bits.max(1) as f64;
+                r.luts += bits * 12.0 * cm.lut_per_threshold_bit;
+                r.ffs += s.token_elems as f64 * 6.0;
+            }
+            "BipolarAct" => {
+                r.luts += s.token_elems as f64 * 2.0;
+            }
+            "MaxPool" => {
+                r.add(&line_buffer(s, cm));
+                r.luts += s.token_elems as f64 * 6.0;
+                r.ffs += s.token_elems as f64 * 8.0;
+            }
+            "Softmax" => {
+                // exp LUT tables + divider — expensive, which is why it is
+                // removed (§3.1.1).
+                r.luts += 3_000.0;
+                r.ffs += 2_400.0;
+                r.bram36 += 2.0;
+            }
+            "TopK" => {
+                r.luts += s.token_elems as f64 * 14.0;
+                r.ffs += s.token_elems as f64 * 8.0;
+            }
+            _ => {}
+        }
+        // Every stage pays dataflow control + stream glue.
+        r.luts += cm.ctrl_lut_per_stage + cm.stream_lut_per_stage;
+        r.ffs += cm.ctrl_ff_per_stage;
+        accel.add(&r);
+        per_stage.push((s.name.clone(), r));
+    }
+
+    // FIFOs between stages (width = token elems * activation bits).
+    let mut fifo_total = Resources::default();
+    for (i, &d) in depths.iter().enumerate() {
+        let width_bits = if i == 0 {
+            // input FIFO carries input-precision tokens
+            design.stages.first().map(|s| s.token_elems as u64 * 8).unwrap_or(8)
+        } else {
+            let s = &design.stages[i - 1];
+            (s.token_elems as u64 * s.out_bits.max(1) as u64).max(8)
+        };
+        fifo_total.add(&fifo_cost(d, width_bits, cm));
+    }
+    accel.add(&fifo_total);
+
+    let sys = soft_system_overhead(board);
+    let mut total = accel;
+    total.luts += sys.luts as f64;
+    total.ffs += sys.ffs as f64;
+    total.bram36 += sys.bram36;
+    total.dsps += sys.dsps as f64;
+
+    ResourceReport {
+        model: design.model.clone(),
+        per_stage,
+        fifo: fifo_total,
+        accelerator: accel,
+        total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::board::pynq_z2;
+    use crate::dataflow::schedule::{schedule, ScheduleConfig};
+    use crate::ir::Graph;
+    use crate::passes::PassManager;
+
+    fn ad_like(rf: u32, width: usize, input: usize) -> Graph {
+        let mut nodes = Vec::new();
+        let mut total = 0u64;
+        let dims = [input, width, width, 8, width, width, input];
+        for (i, w) in dims.windows(2).enumerate() {
+            let params = (w[0] * w[1] + w[1]) as u64;
+            total += params;
+            nodes.push(format!(
+                r#"{{"op":"Dense","name":"fc{i}","in_features":{},"out_features":{},"weight_bits":6,"has_bias":true,"params":{params}}}"#,
+                w[0], w[1]
+            ));
+            if i < dims.len() - 2 {
+                nodes.push(format!(
+                    r#"{{"op":"ReLU","name":"r{i}","channels":{},"act_bits":8,"params":0}}"#,
+                    w[1]
+                ));
+            }
+        }
+        let json = format!(
+            r#"{{"name":"ad_like","task":"ad","flow":"hls4ml","input_shape":[{input}],"input_bits":8,"reuse_factor":{rf},"nodes":[{}],"total_params":{total}}}"#,
+            nodes.join(",")
+        );
+        Graph::from_json_str(&json).unwrap()
+    }
+
+    fn estimate_for(g: &Graph) -> (ResourceReport, ScheduledDesign) {
+        let mut pm = PassManager::for_flow(&g.flow);
+        let g2 = pm.run(g);
+        let d = schedule(&g2, &ScheduleConfig::default());
+        let sim = crate::dataflow::Simulator::new(d.stage_specs());
+        let opt = crate::fifo::optimize_fifos(&sim, crate::fifo::DepthPolicy::Exact);
+        let r = estimate(&d, g2.reuse_factor, &opt.depths, &pynq_z2(), &CostModel::default());
+        (r, d)
+    }
+
+    #[test]
+    fn ad_at_rf144_maps_to_dsps_near_205() {
+        let (r, d) = estimate_for(&ad_like(144, 72, 128));
+        // Paper: 205 DSPs at RF 144 (Table 5).  Structural: sum of
+        // ceil(macs_l / 144).
+        assert!(
+            (150.0..260.0).contains(&r.total.dsps),
+            "dsps={} mults={}",
+            r.total.dsps,
+            d.total_mults()
+        );
+    }
+
+    #[test]
+    fn higher_reuse_factor_fewer_multipliers() {
+        let (r144, _) = estimate_for(&ad_like(144, 72, 128));
+        let (r36, _) = estimate_for(&ad_like(36, 72, 128));
+        assert!(r36.total.dsps > r144.total.dsps);
+    }
+
+    #[test]
+    fn fp32_reference_is_unsynthesizable() {
+        let mut g = ad_like(144, 128, 640);
+        for n in &mut g.nodes {
+            if let crate::ir::Node::Dense { weight_bits, .. } = n {
+                *weight_bits = 32;
+            }
+        }
+        // fp32 "quantization": LUT-mapped float mults at RF below the DSP
+        // threshold explode.
+        g.reuse_factor = 4;
+        let (r, _) = estimate_for(&g);
+        assert!(!r.total.fits(&pynq_z2()), "{:?}", r.total);
+    }
+
+    #[test]
+    fn fifo_cost_lutram_vs_bram() {
+        let cm = CostModel::default();
+        let small = fifo_cost(16, 64, &cm);
+        assert!(small.bram36 == 0.0 && small.lutram > 0.0);
+        let big = fifo_cost(2048, 64, &cm);
+        assert!(big.bram36 >= 1.0);
+    }
+
+    #[test]
+    fn report_structure() {
+        let (r, d) = estimate_for(&ad_like(144, 72, 128));
+        assert_eq!(r.per_stage.len(), d.stages.len());
+        assert!(r.total.luts > r.accelerator.luts - 1.0);
+        assert!(r.total.fits(&pynq_z2()), "{:?}", r.total.utilization(&pynq_z2()));
+    }
+}

@@ -1,0 +1,189 @@
+//! Integration: real AOT topologies -> passes -> schedule -> FIFO opt ->
+//! resources -> power, asserting the paper's qualitative claims
+//! (Tables 2-5 shapes).  Needs `make artifacts`.
+
+use tinyml_codesign::board::{arty_a7_100t, pynq_z2};
+use tinyml_codesign::coordinator::flow::{run_flow, FlowOptions};
+use tinyml_codesign::dataflow::schedule::ScheduleConfig;
+use tinyml_codesign::ir::Graph;
+use tinyml_codesign::metrics;
+use tinyml_codesign::report::tables;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = tinyml_codesign::artifacts_dir();
+    if dir.join("index.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built");
+        None
+    }
+}
+
+fn load(name: &str) -> Option<Graph> {
+    let dir = artifacts()?;
+    Some(Graph::load(&dir.join(format!("{name}_topology.json"))).unwrap())
+}
+
+#[test]
+fn all_exported_topologies_validate_and_flow() {
+    let Some(dir) = artifacts() else { return };
+    let board = pynq_z2();
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        if let Some(model) = name.strip_suffix("_topology.json") {
+            let g = Graph::load(&path).unwrap();
+            let r = run_flow(&g, &board, &FlowOptions::default(), &ScheduleConfig::default())
+                .unwrap_or_else(|e| panic!("{model}: {e}"));
+            assert!(!r.fifo.sizing_run.deadlocked, "{model} deadlocked");
+            assert!(r.latency_cycles > 0, "{model}");
+        }
+    }
+}
+
+#[test]
+fn table5_shape_finn_ic_much_faster_than_hls4ml_ic() {
+    let Some(dir) = artifacts() else { return };
+    let board = pynq_z2();
+    let h = tables::flow_for(&dir, "ic_hls4ml", &board).unwrap();
+    let f = tables::flow_for(&dir, "ic_finn_full", &board).unwrap();
+    // Paper: 27.3 ms vs 1.5 ms (18.2x).  Assert >4x and the BRAM trade.
+    let ratio = h.latency_s / f.latency_s;
+    assert!(ratio > 4.0, "latency ratio {ratio}");
+    assert!(
+        h.resources.total.bram36 < f.resources.total.bram36,
+        "hls4ml should use fewer BRAMs: {} vs {}",
+        h.resources.total.bram36,
+        f.resources.total.bram36
+    );
+}
+
+#[test]
+fn table5_shape_ad_kws_are_microsecond_class() {
+    let Some(dir) = artifacts() else { return };
+    for board in [pynq_z2(), arty_a7_100t()] {
+        for name in ["ad_autoencoder", "kws_mlp_w3a3"] {
+            let r = tables::flow_for(&dir, name, &board).unwrap();
+            assert!(
+                r.latency_s < 500e-6,
+                "{name} on {}: {} s",
+                board.name,
+                r.latency_s
+            );
+            assert!(r.fits, "{name} must fit on {}", board.name);
+            // Paper band: tens of uJ (30-100).
+            assert!(
+                (3.0..2000.0).contains(&r.energy_per_inference_uj),
+                "{name} energy {}",
+                r.energy_per_inference_uj
+            );
+        }
+    }
+}
+
+#[test]
+fn table4_shape_reference_unsynthesizable_final_fits() {
+    let Some(_) = artifacts() else { return };
+    let board = pynq_z2();
+    let reference = load("ad_reference").unwrap();
+    let final_g = load("ad_autoencoder").unwrap();
+    let cfg = ScheduleConfig::default();
+    let r_ref = run_flow(&reference, &board, &FlowOptions::default(), &cfg).unwrap();
+    let r_fin = run_flow(&final_g, &board, &FlowOptions::default(), &cfg).unwrap();
+    assert!(!r_ref.fits, "fp32 reference must NOT fit: {:?}", r_ref.resources.total);
+    assert!(r_fin.fits, "submitted AD must fit: {:?}", r_fin.resources.total);
+    // LUT trend of Table 4: folded-640 >> downsampled >> final.
+    let folded = run_flow(&load("ad_folded").unwrap(), &board, &FlowOptions::default(), &cfg).unwrap();
+    let down = run_flow(&load("ad_downsampled").unwrap(), &board, &FlowOptions::default(), &cfg).unwrap();
+    assert!(folded.resources.accelerator.luts > down.resources.accelerator.luts);
+    assert!(down.resources.accelerator.luts > r_fin.resources.accelerator.luts);
+}
+
+#[test]
+fn table3_shape_fifo_opt_cuts_bram_relu_merge_cuts_lut() {
+    let Some(_) = artifacts() else { return };
+    let g = load("ic_hls4ml").unwrap();
+    let board = pynq_z2();
+    let cfg = ScheduleConfig::default();
+    let none = FlowOptions { run_passes: true, fifo_opt: false, relu_merge: false, bn_fold: true };
+    let fifo = FlowOptions { run_passes: true, fifo_opt: true, relu_merge: false, bn_fold: true };
+    let relu = FlowOptions { run_passes: true, fifo_opt: false, relu_merge: true, bn_fold: true };
+    let all = FlowOptions::default();
+    let r0 = run_flow(&g, &board, &none, &cfg).unwrap();
+    let rf = run_flow(&g, &board, &fifo, &cfg).unwrap();
+    let rr = run_flow(&g, &board, &relu, &cfg).unwrap();
+    let ra = run_flow(&g, &board, &all, &cfg).unwrap();
+    assert!(
+        rf.resources.accelerator.bram36 < r0.resources.accelerator.bram36,
+        "FIFO opt must cut BRAM: {} -> {}",
+        r0.resources.accelerator.bram36,
+        rf.resources.accelerator.bram36
+    );
+    assert!(
+        rr.resources.accelerator.luts < r0.resources.accelerator.luts,
+        "ReLU merge must cut LUTs: {} -> {}",
+        r0.resources.accelerator.luts,
+        rr.resources.accelerator.luts
+    );
+    // All-opt may trade a little LUT (LUTRAM FIFOs) for the BRAM cut, so
+    // allow slack; it must stay within a whisker of the best single opt.
+    assert!(ra.resources.accelerator.luts <= rr.resources.accelerator.luts * 1.2);
+    assert!(ra.resources.accelerator.bram36 <= rf.resources.accelerator.bram36 * 1.1);
+}
+
+#[test]
+fn table2_shape_fifo_policies() {
+    let Some(dir) = artifacts() else { return };
+    let board = pynq_z2();
+    // FINN KWS: depths must be powers of two.
+    let r = tables::flow_for(&dir, "kws_mlp_w3a3", &board).unwrap();
+    assert!(r.fifo.depths.iter().all(|d| d.is_power_of_two()), "{:?}", r.fifo.depths);
+    // hls4ml IC: arbitrary integers allowed, wide range.
+    let h = tables::flow_for(&dir, "ic_hls4ml", &board).unwrap();
+    assert!(h.fifo_range.1 > h.fifo_range.0, "{:?}", h.fifo_range);
+}
+
+#[test]
+fn kws_cost_metrics_are_monotone_in_bits() {
+    let Some(dir) = artifacts() else { return };
+    let costs = tables::fig4_costs(&dir).unwrap();
+    // BOPs must rise with precision: w1a1 < w2a2 < w3a3 < w4a4 < w8a8.
+    for w in costs.windows(2).take(4) {
+        assert!(w[1].1 > w[0].1, "{:?} !< {:?}", w[0], w[1]);
+    }
+    // WM bits exactly: 259584 * wbits.
+    assert_eq!(costs[2].2, 259_584.0 * 3.0);
+}
+
+#[test]
+fn full_cnv_metrics_match_table1_scale() {
+    let Some(_) = artifacts() else { return };
+    let g = load("ic_finn_full").unwrap();
+    let weights: u64 = g.compute_nodes().map(|n| n.params()).sum();
+    assert!((weights as f64 - 1_542_848.0).abs() / 1_542_848.0 < 0.06, "{weights}");
+    let mflops = metrics::flops(&g) as f64 / 1e6;
+    assert!((50.0..300.0).contains(&mflops), "{mflops}");
+}
+
+#[test]
+fn eembc_end_to_end_on_flow_numbers() {
+    use tinyml_codesign::data;
+    use tinyml_codesign::eembc::{DesignPerf, Dut, Runner};
+    use tinyml_codesign::runtime::{LoadedModel, Runtime};
+    let Some(dir) = artifacts() else { return };
+    let board = pynq_z2();
+    let fr = tables::flow_for(&dir, "kws_mlp_w3a3", &board).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let mut m = LoadedModel::load(&dir, "kws_mlp_w3a3").unwrap();
+    let samples = data::test_set("kws", 24, 0xBEEF);
+    let mut dut = Dut::new(&mut m, DesignPerf { latency_s: fr.latency_s, power_w: fr.power_w });
+    let runner = Runner { min_window_s: 0.05, ..Default::default() };
+    let perf = runner.performance_mode(&rt, &mut dut, &samples.samples).unwrap();
+    assert!((perf.median_latency_s - fr.latency_s).abs() / fr.latency_s < 1e-6);
+    let energy = runner.energy_mode(&rt, &mut dut, &samples.samples).unwrap();
+    let expect = fr.power_w * fr.latency_s * 1e6;
+    assert!((energy.median_energy_uj - expect).abs() / expect < 0.05, "{energy:?}");
+    let acc = runner.accuracy_mode(&rt, &mut dut, &samples.samples).unwrap();
+    assert_eq!(acc.metric, "top1");
+    assert_eq!(acc.n_samples, 24);
+}

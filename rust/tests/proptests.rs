@@ -1,0 +1,248 @@
+//! Property-based tests over coordinator invariants.
+//!
+//! The offline vendored crate set has no proptest, so properties are
+//! checked with an in-tree randomized harness driven by the shared
+//! splitmix64 stream: hundreds of random cases per property, fully
+//! deterministic (failures print the case seed for replay).
+
+use tinyml_codesign::data::prng::SplitMix64;
+use tinyml_codesign::dataflow::{Prereq, Simulator, StageSpec, UNBOUNDED_DEPTH};
+use tinyml_codesign::fifo::{optimize_fifos, DepthPolicy};
+use tinyml_codesign::ir::Graph;
+use tinyml_codesign::passes;
+
+/// Random chain of dataflow stages with consistent token counts.
+fn random_chain(rng: &mut SplitMix64) -> Vec<StageSpec> {
+    let n_stages = 1 + rng.next_below(5) as usize;
+    let mut tokens = 4 + rng.next_below(60) as usize;
+    let mut stages = Vec::new();
+    for i in 0..n_stages {
+        let kind = rng.next_below(3);
+        let (n_out, prereq) = match kind {
+            0 => (tokens, Prereq::Elementwise),
+            1 => {
+                let n_out = 1 + rng.next_below(8) as usize;
+                (n_out, Prereq::All)
+            }
+            _ => {
+                // Window over a square raster if tokens is a square; else
+                // fall back to elementwise.
+                let w = (tokens as f64).sqrt() as usize;
+                if w >= 3 && w * w == tokens {
+                    let k = 2 + rng.next_below(2) as usize;
+                    let out_w = w - k + 1;
+                    (out_w * out_w, Prereq::Window { in_w: w, kernel: k, stride: 1, pad: 0 })
+                } else {
+                    (tokens, Prereq::Elementwise)
+                }
+            }
+        };
+        stages.push(StageSpec {
+            name: format!("s{i}"),
+            n_in: tokens,
+            n_out,
+            ii_out: 1 + rng.next_below(6),
+            ii_in: 1 + rng.next_below(3),
+            prereq,
+        });
+        tokens = n_out;
+    }
+    stages
+}
+
+#[test]
+fn prop_sized_fifos_never_deadlock_and_preserve_latency() {
+    let mut rng = SplitMix64::new(0xF1F0);
+    for case in 0..150 {
+        let stages = random_chain(&mut rng);
+        let sim = Simulator::new(stages);
+        let opt = optimize_fifos(&sim, DepthPolicy::Exact);
+        assert!(!opt.sizing_run.deadlocked, "case {case}: sizing deadlocked");
+        let replay = sim.run(&opt.depths, 1);
+        assert!(!replay.deadlocked, "case {case}: sized run deadlocked");
+        assert_eq!(
+            replay.latency_cycles, opt.unoptimized_latency,
+            "case {case}: latency changed by sizing"
+        );
+    }
+}
+
+#[test]
+fn prop_fifo_occupancy_never_exceeds_depth() {
+    let mut rng = SplitMix64::new(0x0CC0);
+    for case in 0..100 {
+        let stages = random_chain(&mut rng);
+        let sim = Simulator::new(stages);
+        let depth = 1 + rng.next_below(6) as usize;
+        let depths = vec![depth; sim.stages.len() + 1];
+        let r = sim.run(&depths, 1);
+        assert!(!r.deadlocked, "case {case}");
+        assert!(
+            r.fifo_max_occupancy.iter().all(|&m| m <= depth),
+            "case {case}: occupancy {:?} exceeded depth {depth}",
+            r.fifo_max_occupancy
+        );
+    }
+}
+
+#[test]
+fn prop_latency_monotone_in_fifo_depth() {
+    let mut rng = SplitMix64::new(0x10A7);
+    for case in 0..60 {
+        let stages = random_chain(&mut rng);
+        let sim = Simulator::new(stages);
+        let tight = sim.run(&vec![1; sim.stages.len() + 1], 1);
+        let roomy = sim.run(&vec![UNBOUNDED_DEPTH; sim.stages.len() + 1], 1);
+        assert!(!tight.deadlocked && !roomy.deadlocked, "case {case}");
+        assert!(
+            tight.latency_cycles >= roomy.latency_cycles,
+            "case {case}: deeper FIFOs made it slower ({} < {})",
+            tight.latency_cycles,
+            roomy.latency_cycles
+        );
+    }
+}
+
+/// Random chain graphs for pass invariants.
+fn random_graph(rng: &mut SplitMix64) -> Graph {
+    let n_layers = 1 + rng.next_below(4) as usize;
+    let mut dims = vec![4 + rng.next_below(60) as usize];
+    for _ in 0..n_layers {
+        dims.push(2 + rng.next_below(48) as usize);
+    }
+    let flow = if rng.next_f64() < 0.5 { "finn" } else { "hls4ml" };
+    let mut nodes = Vec::new();
+    for (i, w) in dims.windows(2).enumerate() {
+        let params = w[0] * w[1];
+        nodes.push(format!(
+            r#"{{"op":"Dense","name":"fc{i}","in_features":{},"out_features":{},"weight_bits":{},"params":{params}}}"#,
+            w[0],
+            w[1],
+            1 + rng.next_below(8)
+        ));
+        if rng.next_f64() < 0.8 {
+            nodes.push(format!(
+                r#"{{"op":"BatchNorm","name":"bn{i}","channels":{},"params":{}}}"#,
+                w[1],
+                4 * w[1]
+            ));
+        }
+        if i + 1 < dims.len() - 1 {
+            if rng.next_f64() < 0.5 {
+                nodes.push(format!(
+                    r#"{{"op":"ReLU","name":"r{i}","channels":{},"act_bits":{},"params":0}}"#,
+                    w[1],
+                    2 + rng.next_below(7)
+                ));
+            } else {
+                nodes.push(format!(
+                    r#"{{"op":"BipolarAct","name":"b{i}","channels":{},"params":0}}"#,
+                    w[1]
+                ));
+            }
+        }
+    }
+    let total: u64 = dims
+        .windows(2)
+        .map(|w| (w[0] * w[1]) as u64)
+        .sum::<u64>()
+        + nodes
+            .iter()
+            .filter(|n| n.contains("BatchNorm"))
+            .map(|n| {
+                let c: u64 = n
+                    .split("\"channels\":")
+                    .nth(1)
+                    .unwrap()
+                    .split(',')
+                    .next()
+                    .unwrap()
+                    .parse()
+                    .unwrap();
+                4 * c
+            })
+            .sum::<u64>();
+    let json = format!(
+        r#"{{"name":"rand","task":"kws","flow":"{flow}","input_shape":[{}],"input_bits":8,"nodes":[{}],"total_params":{total}}}"#,
+        dims[0],
+        nodes.join(",")
+    );
+    Graph::from_json_str(&json).unwrap()
+}
+
+#[test]
+fn prop_passes_preserve_validity_and_are_idempotent() {
+    let mut rng = SplitMix64::new(0x9A55);
+    let pass_list: [(&str, fn(&Graph) -> Graph); 5] = [
+        ("fold_flatten", passes::fold_flatten),
+        ("fold_bn", passes::fold_bn_into_linear),
+        ("merge_relu", passes::merge_relu),
+        ("streamline", passes::streamline),
+        ("topk", passes::remove_softmax_insert_topk),
+    ];
+    for case in 0..120 {
+        let g = random_graph(&mut rng);
+        for (name, pass) in pass_list {
+            let once = pass(&g);
+            once.validate().unwrap_or_else(|e| panic!("case {case} {name}: {e}"));
+            let twice = pass(&once);
+            assert_eq!(once.nodes, twice.nodes, "case {case}: {name} not idempotent");
+        }
+    }
+}
+
+#[test]
+fn prop_streamline_conserves_compute_nodes() {
+    let mut rng = SplitMix64::new(0x57E4);
+    for case in 0..100 {
+        let g = random_graph(&mut rng);
+        let s = passes::streamline(&g);
+        assert_eq!(
+            g.compute_nodes().count(),
+            s.compute_nodes().count(),
+            "case {case}: streamlining changed compute nodes"
+        );
+        assert_eq!(g.total_macs(), s.total_macs(), "case {case}");
+    }
+}
+
+#[test]
+fn prop_accumulator_minimization_is_sound() {
+    // acc_bits must be large enough that a worst-case dot product cannot
+    // overflow: wbits + in_bits + ceil(log2(fan_in)) >= exact bound.
+    let mut rng = SplitMix64::new(0xACC5);
+    for case in 0..100 {
+        let g = passes::minimize_accumulators(&passes::infer_datatypes(&random_graph(&mut rng)));
+        for n in g.compute_nodes() {
+            if let tinyml_codesign::ir::Node::Dense {
+                acc_bits, weight_bits, in_bits, in_features, ..
+            } = n
+            {
+                // Worst case |sum| < 2^(wbits-1) * 2^in_bits * fan_in.
+                let need =
+                    (*weight_bits + *in_bits) as f64 + (*in_features as f64).log2();
+                assert!(
+                    *acc_bits as f64 >= need,
+                    "case {case}: acc {acc_bits} < bound {need}"
+                );
+                assert!(*acc_bits <= 64, "case {case}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_bops_monotone_in_weight_bits() {
+    use tinyml_codesign::metrics::bops;
+    let mut rng = SplitMix64::new(0xB095);
+    for _ in 0..60 {
+        let g = random_graph(&mut rng);
+        let mut hi = g.clone();
+        for n in &mut hi.nodes {
+            if let tinyml_codesign::ir::Node::Dense { weight_bits, .. } = n {
+                *weight_bits += 4;
+            }
+        }
+        assert!(bops(&hi) > bops(&g));
+    }
+}

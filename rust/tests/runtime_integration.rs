@@ -1,0 +1,80 @@
+//! Integration: AOT artifacts -> PJRT runtime -> inference + training.
+//!
+//! These tests need `make artifacts` to have run; they are skipped (with a
+//! message) otherwise, so `cargo test` stays green on a fresh checkout.
+
+use tinyml_codesign::coordinator::{self, TrainConfig};
+use tinyml_codesign::data;
+use tinyml_codesign::runtime::{LoadedModel, Runtime};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = tinyml_codesign::artifacts_dir();
+    if dir.join("index.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn kws_fwd1_runs_and_is_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut m = LoadedModel::load(&dir, "kws_mlp_w3a3").unwrap();
+    let ts = data::test_set("kws", 4, 1);
+    let a = m.infer1(&rt, &ts.samples[0].x).unwrap();
+    let b = m.infer1(&rt, &ts.samples[0].x).unwrap();
+    assert_eq!(a.len(), 12);
+    assert_eq!(a, b);
+    // Different inputs give different logits.
+    let c = m.infer1(&rt, &ts.samples[1].x).unwrap();
+    assert_ne!(a, c);
+}
+
+#[test]
+fn kws_train_step_reduces_loss_and_updates_params() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut m = LoadedModel::load(&dir, "kws_mlp_w3a3").unwrap();
+    let batch = m.ensure_train(&rt).unwrap();
+    let mut rng = data::prng::SplitMix64::new(7);
+    let (x, y) = data::train_batch("kws", &mut rng, batch);
+    let first = m.train_step(&rt, &x, &y, 0.05).unwrap();
+    let mut last = first;
+    for _ in 0..5 {
+        last = m.train_step(&rt, &x, &y, 0.05).unwrap();
+    }
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+}
+
+#[test]
+fn ad_anomaly_scores_separate_after_training() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut m = LoadedModel::load(&dir, "ad_autoencoder").unwrap();
+    let cfg = TrainConfig { steps: 60, lr: 0.05, final_lr_frac: 0.3, log_every: 20, seed: 3 };
+    let curve = coordinator::train(&rt, &mut m, &cfg).unwrap();
+    assert!(curve.last().unwrap().loss < curve.first().unwrap().loss);
+    let auc = coordinator::evaluate(&rt, &mut m, 60, 11).unwrap();
+    assert!(auc > 0.6, "AUC after short training: {auc}");
+}
+
+#[test]
+fn batch_fwd_matches_fwd1() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut m = LoadedModel::load(&dir, "kws_mlp_w3a3").unwrap();
+    let batch = m.ensure_fwd_batch(&rt).unwrap();
+    let ts = data::test_set("kws", batch, 5);
+    let feat = m.manifest.input_elems();
+    let mut x = vec![0.0f32; batch * feat];
+    for (i, s) in ts.samples.iter().enumerate() {
+        x[i * feat..(i + 1) * feat].copy_from_slice(&s.x);
+    }
+    let out = m.infer_batch(&rt, &x).unwrap();
+    let single = m.infer1(&rt, &ts.samples[0].x).unwrap();
+    for (a, b) in out[..12].iter().zip(&single) {
+        assert!((a - b).abs() < 1e-4, "batch vs single mismatch: {a} {b}");
+    }
+}
