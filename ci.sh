@@ -1,0 +1,43 @@
+#!/usr/bin/env sh
+# CI gate: build, tests, formatting, lints.  Run from the repo root.
+#
+#   ./ci.sh          # everything
+#   ./ci.sh fast     # build + tests only (skip fmt/clippy)
+#
+# The crate is dependency-free by design (offline build image), so a bare
+# rust toolchain is all this needs.  fmt/clippy steps are skipped with a
+# warning when the components are not installed.
+
+set -eu
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ci.sh: cargo not found on PATH — install a Rust toolchain first" >&2
+    exit 1
+fi
+
+run() {
+    echo "==> $*"
+    "$@"
+}
+
+run cargo build --release
+run cargo test -q
+
+if [ "${1:-}" = "fast" ]; then
+    echo "==> skipping fmt/clippy (fast mode)"
+    exit 0
+fi
+
+if cargo fmt --version >/dev/null 2>&1; then
+    run cargo fmt --check
+else
+    echo "==> cargo fmt not installed; skipping format check" >&2
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    run cargo clippy --all-targets -- -D warnings
+else
+    echo "==> cargo clippy not installed; skipping lints" >&2
+fi
+
+echo "==> ci.sh OK"

@@ -1,5 +1,5 @@
 use tinyml_codesign::runtime::{LoadedModel, Runtime};
-fn main() -> anyhow::Result<()> {
+fn main() -> tinyml_codesign::error::Result<()> {
     let art = tinyml_codesign::artifacts_dir();
     let rt = Runtime::cpu()?;
     let mut m = LoadedModel::load(&art, "kws_mlp_w3a3")?;

@@ -14,7 +14,7 @@ use tinyml_codesign::coordinator::{self, TrainConfig};
 use tinyml_codesign::report::tables;
 use tinyml_codesign::runtime::{LoadedModel, Runtime};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tinyml_codesign::error::Result<()> {
     let steps: usize = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(250);
     let eval_n: usize = std::env::args().nth(2).and_then(|v| v.parse().ok()).unwrap_or(400);
     let art = tinyml_codesign::artifacts_dir();

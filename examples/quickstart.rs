@@ -15,7 +15,7 @@ use tinyml_codesign::coordinator::{self, TrainConfig};
 use tinyml_codesign::report::tables;
 use tinyml_codesign::runtime::{LoadedModel, Runtime};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tinyml_codesign::error::Result<()> {
     let art = tinyml_codesign::artifacts_dir();
     let model = "kws_mlp_w3a3";
 

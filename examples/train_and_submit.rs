@@ -19,7 +19,7 @@ use tinyml_codesign::eembc::{DesignPerf, Dut, Runner};
 use tinyml_codesign::report::tables;
 use tinyml_codesign::runtime::{LoadedModel, Runtime};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tinyml_codesign::error::Result<()> {
     let scale: f64 = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(1.0);
     let art = tinyml_codesign::artifacts_dir();
     let rt = Runtime::cpu()?;

@@ -4,11 +4,17 @@
 //! dynamic batcher → device executor).
 //!
 //! Requests are coalesced into device batches of up to the AOT batch size
-//! within a bounded batching window; the worker owns the `LoadedModel`
-//! (PJRT executables are not Sync) and replies over per-request channels.
+//! within a bounded batching window; the worker owns the executor (PJRT
+//! executables are not Sync) and replies over per-request channels.
+//!
+//! The device side is abstracted behind [`BatchExecutor`]
+//! ([`ModelExecutor`] wraps a [`LoadedModel`]) so [`serve_with`] can
+//! drive any executor; the [`crate::fleet`] board workers keep their own
+//! loop (work stealing, per-batch telemetry, simulated device timing)
+//! but reuse [`fill_window`], so every serving path batches identically.
 
+use crate::error::{anyhow, Result};
 use crate::runtime::{argmax, LoadedModel, Runtime};
-use anyhow::{anyhow, Result};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -25,7 +31,11 @@ pub struct Reply {
     pub top1: usize,
     /// Device batch this request rode in (observability).
     pub batch_size: usize,
+    /// Time spent queued + batching before execution started.
     pub queue_us: u128,
+    /// Device execution time of the batch this request rode in, so
+    /// downstream telemetry (fleet) doesn't re-measure.
+    pub exec_us: u128,
 }
 
 /// Dynamic batching policy.
@@ -38,6 +48,44 @@ pub struct BatchPolicy {
 impl Default for BatchPolicy {
     fn default() -> Self {
         Self { max_batch: 64, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// What the batching loop needs from a device: capacity, shapes, and a
+/// padded-batch execute.
+pub trait BatchExecutor {
+    /// Device batch capacity; batches are padded to exactly this size.
+    fn device_batch(&mut self) -> Result<usize>;
+    /// Flattened input elements per sample.
+    fn input_elems(&self) -> usize;
+    /// Output elements per sample.
+    fn num_outputs(&self) -> usize;
+    /// Execute one padded batch of `device_batch * input_elems` values;
+    /// returns `device_batch * num_outputs` values.
+    fn execute(&mut self, x: &[f32]) -> Result<Vec<f32>>;
+}
+
+/// [`BatchExecutor`] over the runtime's [`LoadedModel`].
+pub struct ModelExecutor<'a> {
+    pub rt: &'a Runtime,
+    pub model: &'a mut LoadedModel,
+}
+
+impl BatchExecutor for ModelExecutor<'_> {
+    fn device_batch(&mut self) -> Result<usize> {
+        self.model.ensure_fwd_batch(self.rt)
+    }
+
+    fn input_elems(&self) -> usize {
+        self.model.manifest.input_elems()
+    }
+
+    fn num_outputs(&self) -> usize {
+        self.model.manifest.num_outputs
+    }
+
+    fn execute(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        self.model.infer_batch(self.rt, x)
     }
 }
 
@@ -57,6 +105,76 @@ impl EngineHandle {
     }
 }
 
+/// Grow a batch around `first`: keep pulling items until `max_batch` is
+/// reached or the `max_wait` window closes.  `next` is handed the window
+/// deadline and returns the next item, or `None` when the source is dry
+/// for this window.  Shared by the engine loop and the fleet workers so
+/// every serving path batches identically.
+pub fn fill_window<T>(
+    first: T,
+    policy: &BatchPolicy,
+    mut next: impl FnMut(Instant) -> Option<T>,
+) -> Vec<T> {
+    let mut batch = vec![first];
+    let deadline = Instant::now() + policy.max_wait;
+    while batch.len() < policy.max_batch && Instant::now() < deadline {
+        match next(deadline) {
+            Some(item) => batch.push(item),
+            None => break,
+        }
+    }
+    batch
+}
+
+/// Run the batching loop over any executor until `rx` hangs up; returns
+/// total requests served.
+pub fn serve_with<E: BatchExecutor>(
+    exec: &mut E,
+    policy: BatchPolicy,
+    rx: mpsc::Receiver<(Request, Instant)>,
+) -> Result<u64> {
+    let device_batch = exec.device_batch()?;
+    let window = BatchPolicy {
+        max_batch: policy.max_batch.min(device_batch),
+        max_wait: policy.max_wait,
+    };
+    let feat = exec.input_elems();
+    let n_out = exec.num_outputs();
+    let mut served = 0u64;
+
+    loop {
+        // Block for the first request of a batch.
+        let Ok(first) = rx.recv() else {
+            return Ok(served);
+        };
+        let batch = fill_window(first, &window, |deadline| {
+            let now = Instant::now();
+            rx.recv_timeout(deadline.saturating_duration_since(now)).ok()
+        });
+
+        // Pad to the device batch and execute once.
+        let mut x = vec![0.0f32; device_batch * feat];
+        for (i, (req, _)) in batch.iter().enumerate() {
+            x[i * feat..(i + 1) * feat].copy_from_slice(&req.x);
+        }
+        let exec_start = Instant::now();
+        let out = exec.execute(&x)?;
+        let exec_us = exec_start.elapsed().as_micros();
+        for (i, (req, t0)) in batch.iter().enumerate() {
+            let slice = out[i * n_out..(i + 1) * n_out].to_vec();
+            let top1 = argmax(&slice);
+            let _ = req.reply.send(Reply {
+                output: slice,
+                top1,
+                batch_size: batch.len(),
+                queue_us: exec_start.duration_since(*t0).as_micros(),
+                exec_us,
+            });
+            served += 1;
+        }
+    }
+}
+
 /// Run the engine on the current thread until the handle side hangs up.
 /// Call from a dedicated `std::thread`; returns total requests served.
 pub fn serve(
@@ -65,48 +183,7 @@ pub fn serve(
     policy: BatchPolicy,
     rx: mpsc::Receiver<(Request, Instant)>,
 ) -> Result<u64> {
-    let device_batch = model.ensure_fwd_batch(rt)?;
-    let max_batch = policy.max_batch.min(device_batch);
-    let feat = model.manifest.input_elems();
-    let n_out = model.manifest.num_outputs;
-    let mut served = 0u64;
-
-    loop {
-        // Block for the first request of a batch.
-        let Ok(first) = rx.recv() else {
-            return Ok(served);
-        };
-        let mut batch = vec![first];
-        let deadline = Instant::now() + policy.max_wait;
-        while batch.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(req) => batch.push(req),
-                Err(_) => break,
-            }
-        }
-
-        // Pad to the device batch and execute once.
-        let mut x = vec![0.0f32; device_batch * feat];
-        for (i, (req, _)) in batch.iter().enumerate() {
-            x[i * feat..(i + 1) * feat].copy_from_slice(&req.x);
-        }
-        let out = model.infer_batch(rt, &x)?;
-        for (i, (req, t0)) in batch.iter().enumerate() {
-            let slice = out[i * n_out..(i + 1) * n_out].to_vec();
-            let top1 = argmax(&slice);
-            let _ = req.reply.send(Reply {
-                output: slice,
-                top1,
-                batch_size: batch.len(),
-                queue_us: t0.elapsed().as_micros(),
-            });
-            served += 1;
-        }
-    }
+    serve_with(&mut ModelExecutor { rt, model }, policy, rx)
 }
 
 /// Spawn the engine on a background thread, returning a handle.  PJRT
@@ -130,11 +207,74 @@ pub fn spawn(
 mod tests {
     use super::*;
 
-    // Engine tests that need PJRT + artifacts live in rust/tests/.
     #[test]
     fn batch_policy_defaults() {
         let p = BatchPolicy::default();
         assert_eq!(p.max_batch, 64);
         assert!(p.max_wait >= Duration::from_millis(1));
+    }
+
+    /// Executor that doubles every input element (batch 4).
+    struct Doubler;
+
+    impl BatchExecutor for Doubler {
+        fn device_batch(&mut self) -> Result<usize> {
+            Ok(4)
+        }
+
+        fn input_elems(&self) -> usize {
+            2
+        }
+
+        fn num_outputs(&self) -> usize {
+            2
+        }
+
+        fn execute(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+            Ok(x.iter().map(|v| v * 2.0).collect())
+        }
+    }
+
+    #[test]
+    fn serve_with_batches_and_reports_timing() {
+        let (tx, rx) = mpsc::channel();
+        let worker = std::thread::spawn(move || {
+            let mut exec = Doubler;
+            let policy =
+                BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(5) };
+            serve_with(&mut exec, policy, rx).unwrap()
+        });
+        let mut rxs = Vec::new();
+        for i in 0..8 {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send((Request { x: vec![i as f32, 1.0], reply: rtx }, Instant::now()))
+                .unwrap();
+            rxs.push((i, rrx));
+        }
+        drop(tx);
+        for (i, rrx) in rxs {
+            let r = rrx.recv().unwrap();
+            assert_eq!(r.output, vec![i as f32 * 2.0, 2.0]);
+            assert!(r.batch_size >= 1 && r.batch_size <= 4);
+            // exec_us is per-batch device time; queue_us covers the wait.
+            assert!(r.queue_us < 5_000_000);
+        }
+        let served = worker.join().unwrap();
+        assert_eq!(served, 8);
+    }
+
+    #[test]
+    fn fill_window_respects_max_batch() {
+        let mut pool = (1..10).collect::<Vec<i32>>();
+        let policy = BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(50) };
+        let batch = fill_window(0, &policy, |_| pool.pop());
+        assert_eq!(batch.len(), 3);
+    }
+
+    #[test]
+    fn fill_window_stops_when_source_dry() {
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) };
+        let batch = fill_window(7, &policy, |_| None);
+        assert_eq!(batch, vec![7]);
     }
 }

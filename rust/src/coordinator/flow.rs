@@ -15,7 +15,7 @@ use crate::ir::Graph;
 use crate::passes::PassManager;
 use crate::power::PowerModel;
 use crate::resources::{estimate, CostModel, ResourceReport};
-use anyhow::Result;
+use crate::error::Result;
 
 /// Which optimizations to run — the Table 3/4 ablation axes.
 #[derive(Clone, Copy, Debug)]
@@ -52,6 +52,10 @@ pub struct FlowReport {
     pub fits: bool,
     pub latency_cycles: u64,
     pub latency_s: f64,
+    /// Steady-state initiation interval: cycles between back-to-back
+    /// inferences once the pipeline is full (= the bottleneck stage).
+    /// This is what the fleet batches against: a batch of n costs
+    /// `latency + (n-1) * ii`.
     pub ii_cycles: u64,
     pub power_w: f64,
     pub energy_per_inference_uj: f64,
@@ -136,7 +140,7 @@ pub fn run_flow(
         fits,
         latency_cycles,
         latency_s,
-        ii_cycles: 0,
+        ii_cycles: design.bottleneck_cycles().max(1),
         power_w: power.total_w,
         energy_per_inference_uj: energy,
         pass_log: pm.log,
@@ -177,6 +181,7 @@ mod tests {
         .unwrap();
         assert!(r.fits, "{:?}", r.resources.total);
         assert!(r.latency_s > 0.0 && r.latency_s < 1.0);
+        assert!(r.ii_cycles > 0 && r.ii_cycles <= r.latency_cycles, "{r:?}");
         assert!(r.energy_per_inference_uj > 0.0);
         assert!(r.optimized.nodes.iter().any(|n| n.op() == "MultiThreshold"));
     }

@@ -7,7 +7,7 @@ pub mod flow;
 
 use crate::data::{self, prng::SplitMix64};
 use crate::runtime::{LoadedModel, Runtime};
-use anyhow::Result;
+use crate::error::Result;
 
 /// Training-loop configuration for the e2e driver.
 #[derive(Clone, Copy, Debug)]

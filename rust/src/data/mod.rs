@@ -44,6 +44,46 @@ fn moving_average(x: &[f64], window: usize) -> Vec<f64> {
         .collect()
 }
 
+/// Template-matching logits shared by the surrogate executors
+/// (`runtime::sim`, `fleet::worker`) so fleet replies cannot drift from
+/// engine replies: `dot(x, template) / dim` per class.
+pub fn template_logits(x: &[f32], templates: &[Vec<f32>]) -> Vec<f32> {
+    let scale = 1.0 / x.len().max(1) as f32;
+    templates
+        .iter()
+        .map(|t| x.iter().zip(t).map(|(a, b)| a * b).sum::<f32>() * scale)
+        .collect()
+}
+
+/// f32 class templates for a classification task (KWS keywords / IC
+/// classes), shared by the surrogate executors.
+pub fn class_templates_f32(task: &str, n_out: usize) -> Vec<Vec<f32>> {
+    (0..n_out)
+        .map(|c| {
+            let t = match task {
+                "kws" => kws_template(c),
+                _ => ic_template(c % IC_CLASSES),
+            };
+            t.iter().map(|&v| v as f32).collect()
+        })
+        .collect()
+}
+
+/// f32 variant of the same kernel, shared by the surrogate executors
+/// (`runtime::sim`, `fleet::worker`) so the AD reconstruction cannot
+/// drift between them.
+pub fn moving_average_f32(x: &[f32], window: usize) -> Vec<f32> {
+    let n = x.len();
+    let half = window / 2;
+    (0..n)
+        .map(|i| {
+            let lo = i.saturating_sub(half);
+            let hi = (i + half + 1).min(n);
+            x[lo..hi].iter().sum::<f32>() / (hi - lo) as f32
+        })
+        .collect()
+}
+
 pub fn ic_template(class: usize) -> Vec<f64> {
     class_template(IC_SEED, class as u64, IC_DIM)
 }

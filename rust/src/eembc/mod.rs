@@ -21,7 +21,7 @@
 
 use crate::data::{self, Sample};
 use crate::runtime::{LoadedModel, Runtime};
-use anyhow::Result;
+use crate::error::Result;
 
 /// Byte-paced serial connection with a virtual clock.
 #[derive(Clone, Debug)]

@@ -1,0 +1,129 @@
+//! In-crate error type (std-only `anyhow` subset).
+//!
+//! The build image is fully offline with no anyhow in its vendored crate
+//! set, so the crate carries its own drop-in subset: a string-backed
+//! [`Error`], the [`anyhow!`]/[`bail!`] macros, and a [`Context`]
+//! extension trait for both `Result` and `Option`.  Semantics mirror
+//! anyhow's: context wraps outside-in (`"outer: inner"`), and any
+//! `std::error::Error` converts via `?`.
+
+use std::fmt;
+
+/// A string-backed error with layered context.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prefix this error with an outer context layer.
+    pub fn wrap(self, outer: impl fmt::Display) -> Self {
+        Error { msg: format!("{outer}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`: that keeps
+// this blanket conversion coherent with core's reflexive `From<T> for T`
+// (the same trick anyhow uses).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(...)` / `.with_context(|| ...)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($t:tt)*) => {
+        $crate::error::Error::msg(format!($($t)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::error::Error::msg(format!($($t)*)))
+    };
+}
+
+pub use crate::{anyhow, bail};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/nonexistent/definitely/missing")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().starts_with("reading config: "), "{e}");
+    }
+
+    #[test]
+    fn macros_and_option_context() {
+        let e: Error = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        let r: Result<u32> = None.context("missing key");
+        assert_eq!(r.unwrap_err().to_string(), "missing key");
+        fn f() -> Result<()> {
+            bail!("boom {}", 1);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "boom 1");
+    }
+
+    #[test]
+    fn context_layers_outside_in() {
+        let inner: Result<()> = Err(Error::msg("inner"));
+        let e = inner.with_context(|| format!("outer {}", 2)).unwrap_err();
+        assert_eq!(e.to_string(), "outer 2: inner");
+    }
+}

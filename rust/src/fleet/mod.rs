@@ -1,0 +1,350 @@
+//! Multi-board serving plane: one coordinator, many simulated
+//! accelerators.
+//!
+//! The paper deploys each MLPerf Tiny task on a *single* board and
+//! measures µs-latency / µJ-energy per inference; this module lifts that
+//! codesign envelope to fleet scope.  A [`registry::Registry`] enumerates
+//! heterogeneous board instances (Pynq-Z2 / Arty A7-100T × KWS / AD / IC
+//! × folding schedule), each carrying the latency, initiation-interval,
+//! power, and energy numbers its codesign flow produced.  A
+//! [`router::Router`] places every request on an instance under a
+//! pluggable policy with admission control; bounded per-board queues give
+//! backpressure; per-board worker threads batch through the same dynamic
+//! window as the single-model engine, steal work from same-task replicas,
+//! and hold the (simulated) accelerator for the dataflow-predicted device
+//! time.  [`telemetry::Telemetry`] aggregates the result into fleet-level
+//! p50/p99/throughput/energy.
+//!
+//! ```no_run
+//! use tinyml_codesign::fleet::{Fleet, FleetConfig, Registry};
+//!
+//! let reg = Registry::standard_fleet().unwrap();
+//! let fleet = Fleet::start(reg, FleetConfig::default()).unwrap();
+//! let handle = fleet.handle();
+//! let x = vec![0.0f32; 490];
+//! let reply = handle.infer("kws", x).unwrap();
+//! println!("top1 {} in {} us", reply.top1, reply.queue_us + reply.exec_us);
+//! let summary = fleet.shutdown();
+//! println!("{}", summary.render());
+//! ```
+
+pub mod registry;
+pub mod router;
+pub mod telemetry;
+pub mod worker;
+
+pub use registry::{BoardInstance, Registry};
+pub use router::{Policy, RouteError, Router};
+pub use telemetry::{FleetSnapshot, Telemetry};
+pub use worker::{BoardQueue, FleetRequest, WorkerConfig};
+
+use crate::coordinator::engine::{BatchPolicy, Reply};
+use crate::error::{anyhow, Result};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+/// Fleet-wide serving knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetConfig {
+    pub policy: Policy,
+    /// Bounded queue capacity per board (admission control past this).
+    pub queue_cap: usize,
+    /// Dynamic-batching window shared by every worker.
+    pub batch: BatchPolicy,
+    /// Wall-seconds per simulated device-second (stretch µs-class
+    /// accelerator latencies so policy differences dominate thread
+    /// overhead; 1.0 = real time).
+    pub time_scale: f64,
+    /// Let idle workers steal queued requests from same-task replicas.
+    pub work_stealing: bool,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            policy: Policy::LeastLoaded,
+            queue_cap: 256,
+            batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(100) },
+            time_scale: 1.0,
+            work_stealing: true,
+        }
+    }
+}
+
+/// A running fleet: workers + router + telemetry.
+pub struct Fleet {
+    registry: Registry,
+    router: Arc<Router>,
+    queues: Vec<Arc<BoardQueue>>,
+    telemetry: Arc<Telemetry>,
+    workers: Vec<std::thread::JoinHandle<u64>>,
+}
+
+impl Fleet {
+    /// Spawn one worker thread per registry instance.
+    pub fn start(registry: Registry, config: FleetConfig) -> Result<Fleet> {
+        if registry.is_empty() {
+            return Err(anyhow!("fleet registry is empty"));
+        }
+        // Queues, router cost tables, and telemetry are all indexed by
+        // instance id; a hand-built registry with ids out of line would
+        // route on the wrong board's cost model (or panic).
+        for (pos, inst) in registry.instances.iter().enumerate() {
+            if inst.id != pos {
+                return Err(anyhow!(
+                    "registry instance '{}' has id {} at position {pos}",
+                    inst.label,
+                    inst.id
+                ));
+            }
+        }
+        let router = Arc::new(Router::new(&registry, config.policy, config.queue_cap));
+        let queues: Vec<Arc<BoardQueue>> = registry
+            .instances
+            .iter()
+            .map(|_| Arc::new(BoardQueue::new(config.queue_cap)))
+            .collect();
+        let telemetry = Arc::new(Telemetry::new(registry.len()));
+        let mut workers = Vec::new();
+        for inst in &registry.instances {
+            let inst = inst.clone();
+            let own = queues[inst.id].clone();
+            // Same-task replicas to steal from, skipping self.
+            let peers: Vec<Arc<BoardQueue>> = registry
+                .eligible(&inst.task)
+                .into_iter()
+                .filter(|&i| i != inst.id)
+                .map(|i| queues[i].clone())
+                .collect();
+            let telemetry = telemetry.clone();
+            let wcfg = WorkerConfig {
+                batch: config.batch,
+                time_scale: config.time_scale,
+                work_stealing: config.work_stealing,
+            };
+            workers.push(std::thread::spawn(move || {
+                worker::run_worker(&inst, &own, &peers, &wcfg, &telemetry)
+            }));
+        }
+        Ok(Fleet { registry, router, queues, telemetry, workers })
+    }
+
+    /// Cloneable submission handle.
+    pub fn handle(&self) -> FleetHandle {
+        FleetHandle {
+            router: self.router.clone(),
+            queues: self.queues.clone(),
+        }
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Current telemetry without stopping the fleet.
+    pub fn snapshot(&self) -> FleetSnapshot {
+        self.telemetry.snapshot(&self.registry)
+    }
+
+    /// Close every queue, drain, join workers, and return the final
+    /// telemetry plus per-worker serve counts.
+    pub fn shutdown(self) -> FleetSummary {
+        for q in &self.queues {
+            q.close();
+        }
+        let served_per_worker: Vec<u64> =
+            self.workers.into_iter().map(|w| w.join().unwrap_or(0)).collect();
+        FleetSummary {
+            snapshot: self.telemetry.snapshot(&self.registry),
+            served_per_worker,
+        }
+    }
+}
+
+/// What [`Fleet::shutdown`] returns.
+pub struct FleetSummary {
+    pub snapshot: FleetSnapshot,
+    pub served_per_worker: Vec<u64>,
+}
+
+impl FleetSummary {
+    pub fn render(&self) -> String {
+        self.snapshot.render()
+    }
+}
+
+/// Clone-to-share submission side of a running fleet.
+#[derive(Clone)]
+pub struct FleetHandle {
+    router: Arc<Router>,
+    queues: Vec<Arc<BoardQueue>>,
+}
+
+impl FleetHandle {
+    fn depths(&self) -> Vec<usize> {
+        self.queues.iter().map(|q| q.depth()).collect()
+    }
+
+    /// Route + enqueue; returns the reply channel without blocking on
+    /// execution.  Admission control surfaces as `Err(RouteError)`.
+    pub fn submit(
+        &self,
+        task: &str,
+        x: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Reply>, RouteError> {
+        // select() reads a depth snapshot; the push re-checks the bound
+        // under the queue lock, so a racing submit can at worst bounce to
+        // the next replica — never overfill.  try_push hands the request
+        // back on failure, so the input is never copied.
+        let (tx, rx) = mpsc::channel();
+        let mut req =
+            FleetRequest { x, reply: tx, enqueued: std::time::Instant::now() };
+        for _ in 0..3 {
+            let idx = self.router.select(task, &self.depths())?;
+            match self.queues[idx].try_push(req) {
+                Ok(()) => return Ok(rx),
+                Err(r) => req = r,
+            }
+        }
+        Err(RouteError::Overloaded)
+    }
+
+    /// Blocking round trip.
+    pub fn infer(&self, task: &str, x: Vec<f32>) -> Result<Reply> {
+        let rx = self
+            .submit(task, x)
+            .map_err(|e| anyhow!("fleet rejected {task} request: {e}"))?;
+        rx.recv().map_err(|_| anyhow!("fleet dropped {task} request"))
+    }
+
+    /// Instantaneous queue depths (observability).
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.depths()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic_registry() -> Registry {
+        Registry {
+            instances: vec![
+                BoardInstance::synthetic(0, "kws", 80.0, 10.0, 1.5),
+                BoardInstance::synthetic(1, "kws", 300.0, 60.0, 1.8),
+                BoardInstance::synthetic(2, "ad", 40.0, 5.0, 1.5),
+                BoardInstance::synthetic(3, "ic", 600.0, 100.0, 1.6),
+            ],
+        }
+    }
+
+    fn input_for(task: &str) -> Vec<f32> {
+        vec![0.1; crate::data::feature_dim(task)]
+    }
+
+    #[test]
+    fn mixed_workload_round_trips() {
+        let fleet =
+            Fleet::start(synthetic_registry(), FleetConfig::default()).unwrap();
+        let handle = fleet.handle();
+        let tasks = ["kws", "ad", "ic", "kws", "kws", "ad"];
+        let mut rxs = Vec::new();
+        for &t in tasks.iter().cycle().take(60) {
+            rxs.push((t, handle.submit(t, input_for(t)).unwrap()));
+        }
+        for (t, rx) in rxs {
+            let r = rx.recv().unwrap();
+            let want = match t {
+                "kws" => 12,
+                "ad" => 128,
+                _ => 10,
+            };
+            assert_eq!(r.output.len(), want, "{t}");
+            assert!(r.batch_size >= 1);
+        }
+        let summary = fleet.shutdown();
+        assert_eq!(summary.snapshot.served, 60);
+        assert_eq!(summary.served_per_worker.iter().sum::<u64>(), 60);
+        assert!(summary.snapshot.p99_us >= summary.snapshot.p50_us);
+        assert!(summary.snapshot.energy_per_inference_uj > 0.0);
+    }
+
+    #[test]
+    fn unknown_task_is_rejected_not_dropped() {
+        let fleet =
+            Fleet::start(synthetic_registry(), FleetConfig::default()).unwrap();
+        let handle = fleet.handle();
+        assert_eq!(
+            handle.submit("vww", vec![0.0; 10]).unwrap_err(),
+            RouteError::UnknownTask
+        );
+        let summary = fleet.shutdown();
+        assert_eq!(summary.snapshot.served, 0);
+    }
+
+    #[test]
+    fn backpressure_bounds_queues() {
+        let cfg = FleetConfig {
+            queue_cap: 4,
+            work_stealing: false,
+            // Slow the boards down so queues actually fill.
+            time_scale: 20.0,
+            ..Default::default()
+        };
+        let reg = Registry {
+            instances: vec![BoardInstance::synthetic(0, "kws", 2000.0, 500.0, 1.5)],
+        };
+        let fleet = Fleet::start(reg, cfg).unwrap();
+        let handle = fleet.handle();
+        let mut accepted = 0usize;
+        let mut rejected = 0usize;
+        let mut rxs = Vec::new();
+        for _ in 0..64 {
+            match handle.submit("kws", input_for("kws")) {
+                Ok(rx) => {
+                    accepted += 1;
+                    rxs.push(rx);
+                }
+                Err(RouteError::Overloaded) => rejected += 1,
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+            assert!(handle.queue_depths()[0] <= 4);
+        }
+        assert!(rejected > 0, "cap 4 must reject under a 64-burst");
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let summary = fleet.shutdown();
+        assert_eq!(summary.snapshot.served as usize, accepted);
+    }
+
+    #[test]
+    fn work_stealing_drains_hot_replica() {
+        // Two same-task replicas; all requests land on board 0 (energy-
+        // aware always picks the cheaper), but the idle replica steals.
+        let reg = Registry {
+            instances: vec![
+                BoardInstance::synthetic(0, "kws", 500.0, 100.0, 1.0),
+                BoardInstance::synthetic(1, "kws", 500.0, 100.0, 2.0),
+            ],
+        };
+        let cfg = FleetConfig {
+            policy: Policy::EnergyAware,
+            time_scale: 10.0,
+            ..Default::default()
+        };
+        let fleet = Fleet::start(reg, cfg).unwrap();
+        let handle = fleet.handle();
+        let mut rxs = Vec::new();
+        for _ in 0..120 {
+            rxs.push(handle.submit("kws", input_for("kws")).unwrap());
+        }
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let summary = fleet.shutdown();
+        assert_eq!(summary.snapshot.served, 120);
+        let stolen: u64 = summary.snapshot.per_board.iter().map(|b| b.stolen).sum();
+        assert!(stolen > 0, "idle replica should have stolen work");
+    }
+}

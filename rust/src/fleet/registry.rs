@@ -1,0 +1,284 @@
+//! Board-instance registry: which accelerators exist, what they host,
+//! and what the codesign flow says they cost.
+//!
+//! Every [`BoardInstance`] bundles a board model (Pynq-Z2 / Arty
+//! A7-100T), a task, a built-in topology, and the numbers the full
+//! codesign flow produces for that (model, board, folding) triple:
+//! batch-1 dataflow latency, steady-state initiation interval, total
+//! power, and energy per inference.  The router and the workers consume
+//! these numbers — the fleet never re-estimates what the flow already
+//! knows.
+//!
+//! Folding (the FINN multiplier budget / hls4ml reuse factor) is part of
+//! the instance, not the model: the same KWS MLP deployed with a 1024-
+//! multiplier budget and with a 128-multiplier budget are two *different*
+//! serving instances with ~8x different throughput — exactly the
+//! latency/resource knob of §4.2.3, lifted to fleet scope.
+
+use crate::board::{arty_a7_100t, pynq_z2, Board};
+use crate::coordinator::flow::{run_flow, FlowOptions};
+use crate::dataflow::schedule::ScheduleConfig;
+use crate::error::{bail, Result};
+use crate::ir::Graph;
+
+/// Built-in serving topologies (self-contained: no artifacts needed).
+pub const BUILTIN_MODELS: [&str; 3] = ["kws_mlp_w3a3", "ad_autoencoder", "ic_cnv_w1a1"];
+
+/// Topology JSON for a built-in serving model.
+pub fn builtin_topology(model: &str) -> Result<Graph> {
+    let json = match model {
+        "kws_mlp_w3a3" => {
+            r#"{
+            "name":"kws_mlp_w3a3","task":"kws","flow":"finn","input_shape":[490],
+            "input_bits":8,"nodes":[
+              {"op":"Dense","name":"fc1","in_features":490,"out_features":256,
+               "weight_bits":3,"params":125440},
+              {"op":"BatchNorm","name":"bn1","channels":256,"params":1024},
+              {"op":"ReLU","name":"r1","channels":256,"act_bits":3,"params":0},
+              {"op":"Dense","name":"fc2","in_features":256,"out_features":128,
+               "weight_bits":3,"params":32768},
+              {"op":"BatchNorm","name":"bn2","channels":128,"params":512},
+              {"op":"ReLU","name":"r2","channels":128,"act_bits":3,"params":0},
+              {"op":"Dense","name":"fc3","in_features":128,"out_features":12,
+               "weight_bits":3,"params":1536},
+              {"op":"BatchNorm","name":"bn3","channels":12,"params":48}
+            ],"total_params":161328}"#
+        }
+        "ad_autoencoder" => {
+            r#"{
+            "name":"ad_autoencoder","task":"ad","flow":"hls4ml","input_shape":[128],
+            "input_bits":8,"reuse_factor":128,"nodes":[
+              {"op":"Dense","name":"enc1","in_features":128,"out_features":64,
+               "weight_bits":6,"params":8192},
+              {"op":"ReLU","name":"r1","channels":64,"act_bits":6,"params":0},
+              {"op":"Dense","name":"enc2","in_features":64,"out_features":8,
+               "weight_bits":6,"params":512},
+              {"op":"ReLU","name":"r2","channels":8,"act_bits":6,"params":0},
+              {"op":"Dense","name":"dec1","in_features":8,"out_features":64,
+               "weight_bits":6,"params":512},
+              {"op":"ReLU","name":"r3","channels":64,"act_bits":6,"params":0},
+              {"op":"Dense","name":"dec2","in_features":64,"out_features":128,
+               "weight_bits":6,"params":8192}
+            ],"total_params":17408}"#
+        }
+        "ic_cnv_w1a1" => {
+            r#"{
+            "name":"ic_cnv_w1a1","task":"ic","flow":"finn","input_shape":[32,32,3],
+            "input_bits":8,"nodes":[
+              {"op":"Conv2D","name":"c1","in_hw":32,"out_hw":30,"in_ch":3,
+               "out_ch":16,"kernel":3,"stride":1,"padding":"VALID",
+               "weight_bits":1,"params":432},
+              {"op":"BatchNorm","name":"bn1","channels":16,"params":64},
+              {"op":"BipolarAct","name":"a1","channels":16,"params":0},
+              {"op":"MaxPool","name":"p1","in_hw":30,"out_hw":15,"channels":16,
+               "size":2,"params":0},
+              {"op":"Conv2D","name":"c2","in_hw":15,"out_hw":13,"in_ch":16,
+               "out_ch":32,"kernel":3,"stride":1,"padding":"VALID",
+               "weight_bits":1,"params":4608},
+              {"op":"BatchNorm","name":"bn2","channels":32,"params":128},
+              {"op":"BipolarAct","name":"a2","channels":32,"params":0},
+              {"op":"MaxPool","name":"p2","in_hw":13,"out_hw":6,"channels":32,
+               "size":2,"params":0},
+              {"op":"Flatten","name":"fl","features":1152,"params":0},
+              {"op":"Dense","name":"fc1","in_features":1152,"out_features":64,
+               "weight_bits":1,"params":73728},
+              {"op":"BatchNorm","name":"bn3","channels":64,"params":256},
+              {"op":"BipolarAct","name":"a3","channels":64,"params":0},
+              {"op":"Dense","name":"fc2","in_features":64,"out_features":10,
+               "weight_bits":1,"params":640}
+            ],"total_params":79856}"#
+        }
+        other => bail!("no built-in topology for '{other}'"),
+    };
+    Graph::from_json_str(json)
+}
+
+/// One serving accelerator: a (board, task, model, folding) bundle with
+/// its flow-estimated performance envelope.
+#[derive(Clone, Debug)]
+pub struct BoardInstance {
+    pub id: usize,
+    /// `"<board>#<id>/<model>"`, for telemetry.
+    pub label: String,
+    pub board: Board,
+    pub task: String,
+    pub model: String,
+    /// Batch-1 end-to-end latency (dataflow simulation).
+    pub latency_s: f64,
+    /// Steady-state per-inference interval once the pipeline is full.
+    pub ii_s: f64,
+    pub power_w: f64,
+    pub energy_per_inference_uj: f64,
+}
+
+impl BoardInstance {
+    /// Device time for a back-to-back batch of `n` inferences.
+    pub fn batch_latency_s(&self, n: usize) -> f64 {
+        self.latency_s + n.saturating_sub(1) as f64 * self.ii_s
+    }
+
+    /// Hand-specified instance (µs units) for tests and benches that
+    /// don't want to run the codesign flow.
+    pub fn synthetic(
+        id: usize,
+        task: &str,
+        latency_us: f64,
+        ii_us: f64,
+        power_w: f64,
+    ) -> Self {
+        BoardInstance {
+            id,
+            label: format!("synthetic#{id}/{task}"),
+            board: pynq_z2(),
+            task: task.to_string(),
+            model: format!("synthetic_{task}"),
+            latency_s: latency_us * 1e-6,
+            ii_s: ii_us * 1e-6,
+            power_w,
+            energy_per_inference_uj: power_w * ii_us,
+        }
+    }
+}
+
+/// The fleet's view of its hardware.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    pub instances: Vec<BoardInstance>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add an instance with the default folding schedule.
+    pub fn add(&mut self, board: Board, model: &str) -> Result<usize> {
+        self.add_with(board, model, &ScheduleConfig::default())
+    }
+
+    /// Add an instance with an explicit folding schedule (heterogeneous
+    /// replicas of the same model).  Runs the full codesign flow and
+    /// refuses instances that do not fit their board.
+    pub fn add_with(
+        &mut self,
+        board: Board,
+        model: &str,
+        schedule: &ScheduleConfig,
+    ) -> Result<usize> {
+        let g = builtin_topology(model)?;
+        let fr = run_flow(&g, &board, &FlowOptions::default(), schedule)?;
+        if !fr.fits {
+            bail!("{model} does not fit on {}: {:?}", board.name, fr.resources.total);
+        }
+        let id = self.instances.len();
+        let ii_s = fr.ii_cycles.max(1) as f64 / board.clock_hz;
+        self.instances.push(BoardInstance {
+            id,
+            label: format!("{}#{id}/{model}", board.name),
+            board,
+            task: g.task.clone(),
+            model: model.to_string(),
+            latency_s: fr.latency_s,
+            ii_s,
+            power_w: fr.power_w,
+            energy_per_inference_uj: fr.energy_per_inference_uj,
+        });
+        Ok(id)
+    }
+
+    /// The reference heterogeneous fleet: every task on both boards (6
+    /// instances), with the Arty replicas folded down to a quarter of the
+    /// multiplier budget — slower but cheaper, the codesign trade the
+    /// router gets to play with.
+    pub fn standard_fleet() -> Result<Registry> {
+        let mut reg = Registry::new();
+        let fast = ScheduleConfig::default();
+        let slow = ScheduleConfig {
+            finn_mult_budget: fast.finn_mult_budget / 4,
+            ..fast.clone()
+        };
+        for model in BUILTIN_MODELS {
+            reg.add_with(pynq_z2(), model, &fast)?;
+            reg.add_with(arty_a7_100t(), model, &slow)?;
+        }
+        Ok(reg)
+    }
+
+    /// Instance ids hosting `task`'s model.
+    pub fn eligible(&self, task: &str) -> Vec<usize> {
+        self.instances
+            .iter()
+            .filter(|i| i.task == task)
+            .map(|i| i.id)
+            .collect()
+    }
+
+    /// Distinct tasks the fleet can serve, in instance order.
+    pub fn tasks(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for i in &self.instances {
+            if !out.contains(&i.task) {
+                out.push(i.task.clone());
+            }
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instances.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_topologies_validate() {
+        for m in BUILTIN_MODELS {
+            let g = builtin_topology(m).unwrap();
+            assert!(g.validate().is_ok(), "{m}");
+            assert!(g.total_macs() > 0, "{m}");
+        }
+        assert!(builtin_topology("nope").is_err());
+    }
+
+    #[test]
+    fn standard_fleet_covers_all_tasks_on_both_boards() {
+        let reg = Registry::standard_fleet().unwrap();
+        assert_eq!(reg.len(), 6);
+        for task in ["kws", "ad", "ic"] {
+            let ids = reg.eligible(task);
+            assert_eq!(ids.len(), 2, "{task}: {ids:?}");
+        }
+        assert_eq!(reg.tasks().len(), 3);
+        for inst in &reg.instances {
+            assert!(inst.latency_s > 0.0, "{}", inst.label);
+            assert!(inst.ii_s > 0.0 && inst.ii_s <= inst.latency_s, "{}", inst.label);
+            assert!(inst.energy_per_inference_uj > 0.0, "{}", inst.label);
+        }
+    }
+
+    #[test]
+    fn folded_down_replica_is_slower() {
+        let mut reg = Registry::new();
+        let fast = ScheduleConfig::default();
+        let slow = ScheduleConfig { finn_mult_budget: 64, ..fast.clone() };
+        let a = reg.add_with(pynq_z2(), "kws_mlp_w3a3", &fast).unwrap();
+        let b = reg.add_with(pynq_z2(), "kws_mlp_w3a3", &slow).unwrap();
+        assert!(reg.instances[b].ii_s > reg.instances[a].ii_s * 2.0);
+    }
+
+    #[test]
+    fn batch_latency_scales_with_ii() {
+        let i = BoardInstance::synthetic(0, "kws", 100.0, 10.0, 1.5);
+        let one = i.batch_latency_s(1);
+        let eight = i.batch_latency_s(8);
+        assert!((one - 100e-6).abs() < 1e-12);
+        assert!((eight - 170e-6).abs() < 1e-12);
+    }
+}

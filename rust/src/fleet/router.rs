@@ -1,0 +1,242 @@
+//! Request routing across board instances.
+//!
+//! The router is a *pure* decision function over the registry's static
+//! cost model plus the instantaneous queue depths: given a task and the
+//! current depths it returns a target instance or an admission-control
+//! rejection.  Keeping it side-effect free makes the policies directly
+//! property-testable (see `rust/tests/proptests.rs`); the fleet wires it
+//! to the real [`super::worker::BoardQueue`] depths.
+//!
+//! Policies:
+//! * **RoundRobin** — rotate over the task's replicas, skipping full
+//!   queues.
+//! * **LeastLoaded** — shortest queue first; ties break toward the
+//!   faster replica (smaller steady-state interval).
+//! * **EnergyAware** — cheapest µJ/inference replica that still has
+//!   queue room (the codesign energy axis as a serving policy).
+//! * **LatencySlo** — smallest *predicted* completion latency
+//!   (`queue_depth × ii + batch-1 latency`, all from the dataflow
+//!   estimates); rejects when even the best replica would blow the SLO.
+
+use super::registry::Registry;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Routing policy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Policy {
+    RoundRobin,
+    LeastLoaded,
+    EnergyAware,
+    /// Reject requests whose predicted latency exceeds `slo_us`.
+    LatencySlo { slo_us: f64 },
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::RoundRobin => "round-robin",
+            Policy::LeastLoaded => "least-loaded",
+            Policy::EnergyAware => "energy-aware",
+            Policy::LatencySlo { .. } => "latency-slo",
+        }
+    }
+}
+
+impl fmt::Display for Policy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Policy::LatencySlo { slo_us } => write!(f, "latency-slo({slo_us} us)"),
+            p => f.write_str(p.name()),
+        }
+    }
+}
+
+/// Why a request was not admitted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteError {
+    /// No instance hosts this task's model.
+    UnknownTask,
+    /// Every eligible queue is at capacity (backpressure).
+    Overloaded,
+    /// Even the best replica's predicted latency exceeds the SLO.
+    SloUnattainable,
+}
+
+impl fmt::Display for RouteError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RouteError::UnknownTask => f.write_str("no board hosts this task"),
+            RouteError::Overloaded => f.write_str("all eligible queues full"),
+            RouteError::SloUnattainable => {
+                f.write_str("predicted latency exceeds SLO on every replica")
+            }
+        }
+    }
+}
+
+/// Policy-driven instance selector.
+pub struct Router {
+    policy: Policy,
+    queue_cap: usize,
+    by_task: BTreeMap<String, Vec<usize>>,
+    rr: BTreeMap<String, AtomicUsize>,
+    latency_us: Vec<f64>,
+    ii_us: Vec<f64>,
+    energy_uj: Vec<f64>,
+}
+
+impl Router {
+    pub fn new(reg: &Registry, policy: Policy, queue_cap: usize) -> Self {
+        let mut by_task: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for inst in &reg.instances {
+            by_task.entry(inst.task.clone()).or_default().push(inst.id);
+        }
+        let rr = by_task.keys().map(|t| (t.clone(), AtomicUsize::new(0))).collect();
+        Router {
+            policy,
+            queue_cap: queue_cap.max(1),
+            by_task,
+            rr,
+            latency_us: reg.instances.iter().map(|i| i.latency_s * 1e6).collect(),
+            ii_us: reg.instances.iter().map(|i| i.ii_s * 1e6).collect(),
+            energy_uj: reg.instances.iter().map(|i| i.energy_per_inference_uj).collect(),
+        }
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    pub fn queue_cap(&self) -> usize {
+        self.queue_cap
+    }
+
+    /// Predicted completion latency if one more request joins instance
+    /// `i` behind `depth` queued ones (dataflow estimates, µs).
+    pub fn predicted_latency_us(&self, i: usize, depth: usize) -> f64 {
+        self.latency_us[i] + depth as f64 * self.ii_us[i]
+    }
+
+    /// Pick a target instance for `task` given per-instance queue depths
+    /// (`depths[i]` = queue in front of instance `i`).  Pure: admission
+    /// accounting is the caller's (the queue push is what commits).
+    pub fn select(&self, task: &str, depths: &[usize]) -> Result<usize, RouteError> {
+        let Some(cands) = self.by_task.get(task) else {
+            return Err(RouteError::UnknownTask);
+        };
+        let open: Vec<usize> =
+            cands.iter().copied().filter(|&i| depths[i] < self.queue_cap).collect();
+        if open.is_empty() {
+            return Err(RouteError::Overloaded);
+        }
+        match self.policy {
+            Policy::RoundRobin => {
+                // Rotate over *all* replicas so the cursor advances evenly,
+                // then skip to the next open one.
+                let start = self.rr[task].fetch_add(1, Ordering::Relaxed) % cands.len();
+                for k in 0..cands.len() {
+                    let i = cands[(start + k) % cands.len()];
+                    if depths[i] < self.queue_cap {
+                        return Ok(i);
+                    }
+                }
+                unreachable!("open was non-empty");
+            }
+            Policy::LeastLoaded => Ok(open
+                .into_iter()
+                .min_by(|&a, &b| {
+                    depths[a]
+                        .cmp(&depths[b])
+                        .then(self.ii_us[a].total_cmp(&self.ii_us[b]))
+                })
+                .unwrap()),
+            Policy::EnergyAware => Ok(open
+                .into_iter()
+                .min_by(|&a, &b| self.energy_uj[a].total_cmp(&self.energy_uj[b]))
+                .unwrap()),
+            Policy::LatencySlo { slo_us } => {
+                let best = open
+                    .into_iter()
+                    .min_by(|&a, &b| {
+                        self.predicted_latency_us(a, depths[a])
+                            .total_cmp(&self.predicted_latency_us(b, depths[b]))
+                    })
+                    .unwrap();
+                if self.predicted_latency_us(best, depths[best]) > slo_us {
+                    Err(RouteError::SloUnattainable)
+                } else {
+                    Ok(best)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::registry::{BoardInstance, Registry};
+
+    fn reg() -> Registry {
+        Registry {
+            instances: vec![
+                BoardInstance::synthetic(0, "kws", 100.0, 10.0, 1.5), // fast, 15 uJ
+                BoardInstance::synthetic(1, "kws", 400.0, 80.0, 1.8), // slow, 144 uJ
+                BoardInstance::synthetic(2, "ad", 50.0, 5.0, 1.5),
+            ],
+        }
+    }
+
+    #[test]
+    fn unknown_task_rejected() {
+        let r = Router::new(&reg(), Policy::RoundRobin, 4);
+        assert_eq!(r.select("vww", &[0, 0, 0]), Err(RouteError::UnknownTask));
+    }
+
+    #[test]
+    fn round_robin_alternates_and_skips_full() {
+        let r = Router::new(&reg(), Policy::RoundRobin, 2);
+        let a = r.select("kws", &[0, 0, 0]).unwrap();
+        let b = r.select("kws", &[0, 0, 0]).unwrap();
+        assert_ne!(a, b);
+        // Board 0 full: everything lands on 1.
+        assert_eq!(r.select("kws", &[2, 0, 0]).unwrap(), 1);
+        assert_eq!(r.select("kws", &[2, 0, 0]).unwrap(), 1);
+        // Both full: backpressure.
+        assert_eq!(r.select("kws", &[2, 2, 0]), Err(RouteError::Overloaded));
+    }
+
+    #[test]
+    fn least_loaded_prefers_short_queue_then_speed() {
+        let r = Router::new(&reg(), Policy::LeastLoaded, 8);
+        assert_eq!(r.select("kws", &[3, 1, 0]).unwrap(), 1);
+        // Tie: the faster replica (smaller ii) wins.
+        assert_eq!(r.select("kws", &[2, 2, 0]).unwrap(), 0);
+    }
+
+    #[test]
+    fn energy_aware_prefers_cheap_board_until_full() {
+        let r = Router::new(&reg(), Policy::EnergyAware, 2);
+        assert_eq!(r.select("kws", &[0, 0, 0]).unwrap(), 0);
+        assert_eq!(r.select("kws", &[1, 0, 0]).unwrap(), 0);
+        assert_eq!(r.select("kws", &[2, 0, 0]).unwrap(), 1);
+    }
+
+    #[test]
+    fn slo_routing_predicts_and_rejects() {
+        let r = Router::new(&reg(), Policy::LatencySlo { slo_us: 300.0 }, 64);
+        // Empty queues: fast board predicted 100 us — fine.
+        assert_eq!(r.select("kws", &[0, 0, 0]).unwrap(), 0);
+        // Fast board deep (100 + 30*10 = 400), slow empty (400): both
+        // blow the 300 us SLO.
+        assert_eq!(
+            r.select("kws", &[30, 0, 0]),
+            Err(RouteError::SloUnattainable)
+        );
+        // Deep fast board but generous SLO: prediction picks the smaller.
+        let r2 = Router::new(&reg(), Policy::LatencySlo { slo_us: 10_000.0 }, 64);
+        assert_eq!(r2.select("kws", &[35, 0, 0]).unwrap(), 1);
+    }
+}

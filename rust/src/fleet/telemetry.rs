@@ -1,0 +1,349 @@
+//! Fleet-level observability: per-board counters + latency reservoirs,
+//! aggregated into p50/p99 latency, throughput, energy per inference, and
+//! queue depths — renderable as a table or as [`crate::report::json`].
+
+use super::registry::Registry;
+use crate::data::prng::SplitMix64;
+use crate::report::json::{num, obj, s, Value};
+use std::fmt::Write as _;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Latency samples kept per board (reservoir-sampled beyond this).
+const RESERVOIR_CAP: usize = 8192;
+
+#[derive(Debug)]
+struct BoardStats {
+    served: u64,
+    batches: u64,
+    stolen: u64,
+    queue_us_sum: u128,
+    exec_us_sum: u128,
+    energy_uj_sum: f64,
+    /// End-to-end request latencies (µs), reservoir-sampled.
+    lat_us: Vec<f64>,
+    lat_seen: u64,
+    depth_peak: usize,
+    rng: SplitMix64,
+}
+
+impl BoardStats {
+    fn new(id: usize) -> Self {
+        BoardStats {
+            served: 0,
+            batches: 0,
+            stolen: 0,
+            queue_us_sum: 0,
+            exec_us_sum: 0,
+            energy_uj_sum: 0.0,
+            lat_us: Vec::new(),
+            lat_seen: 0,
+            depth_peak: 0,
+            rng: SplitMix64::new(0x7E1E_0000 + id as u64),
+        }
+    }
+
+    fn push_latency(&mut self, v: f64) {
+        self.lat_seen += 1;
+        if self.lat_us.len() < RESERVOIR_CAP {
+            self.lat_us.push(v);
+        } else {
+            // Algorithm R: keep each of the first n samples w.p. cap/n.
+            let j = self.rng.next_below(self.lat_seen) as usize;
+            if j < RESERVOIR_CAP {
+                self.lat_us[j] = v;
+            }
+        }
+    }
+}
+
+/// Shared collector; workers record, anyone can snapshot.
+pub struct Telemetry {
+    boards: Vec<Mutex<BoardStats>>,
+    t0: Instant,
+}
+
+impl Telemetry {
+    pub fn new(n_boards: usize) -> Self {
+        Telemetry {
+            boards: (0..n_boards).map(|i| Mutex::new(BoardStats::new(i))).collect(),
+            t0: Instant::now(),
+        }
+    }
+
+    /// One executed device batch on board `id`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_batch(
+        &self,
+        id: usize,
+        latencies_us: &[f64],
+        queue_us_sum: u128,
+        exec_us: u128,
+        energy_uj: f64,
+        stolen: u64,
+        depth_after: usize,
+    ) {
+        let mut b = self.boards[id].lock().unwrap();
+        b.served += latencies_us.len() as u64;
+        b.batches += 1;
+        b.stolen += stolen;
+        b.queue_us_sum += queue_us_sum;
+        b.exec_us_sum += exec_us;
+        b.energy_uj_sum += energy_uj;
+        b.depth_peak = b.depth_peak.max(depth_after);
+        for &v in latencies_us {
+            b.push_latency(v);
+        }
+    }
+
+    pub fn snapshot(&self, reg: &Registry) -> FleetSnapshot {
+        let elapsed_s = self.t0.elapsed().as_secs_f64().max(1e-9);
+        let mut per_board = Vec::new();
+        // Fleet percentiles weight each board's reservoir samples by the
+        // traffic they represent (served / samples-kept): once a hot
+        // board's reservoir saturates, its samples each stand for many
+        // requests, and a flat merge would overrepresent idle boards.
+        let mut weighted: Vec<(f64, f64)> = Vec::new();
+        let mut served = 0u64;
+        let mut energy = 0.0f64;
+        for (i, m) in self.boards.iter().enumerate() {
+            let b = m.lock().unwrap();
+            let inst = &reg.instances[i];
+            let mut lat = b.lat_us.clone();
+            if !lat.is_empty() {
+                let w = b.served as f64 / lat.len() as f64;
+                weighted.extend(lat.iter().map(|&v| (v, w)));
+            }
+            served += b.served;
+            energy += b.energy_uj_sum;
+            lat.sort_by(|a, c| a.total_cmp(c));
+            per_board.push(BoardSnapshot {
+                label: inst.label.clone(),
+                task: inst.task.clone(),
+                served: b.served,
+                batches: b.batches,
+                stolen: b.stolen,
+                mean_batch: if b.batches > 0 {
+                    b.served as f64 / b.batches as f64
+                } else {
+                    0.0
+                },
+                mean_queue_us: if b.served > 0 {
+                    b.queue_us_sum as f64 / b.served as f64
+                } else {
+                    0.0
+                },
+                p50_us: percentile(&lat, 0.50),
+                p99_us: percentile(&lat, 0.99),
+                energy_per_inference_uj: if b.served > 0 {
+                    b.energy_uj_sum / b.served as f64
+                } else {
+                    0.0
+                },
+                depth_peak: b.depth_peak,
+            });
+        }
+        weighted.sort_by(|a, c| a.0.total_cmp(&c.0));
+        FleetSnapshot {
+            elapsed_s,
+            served,
+            throughput_rps: served as f64 / elapsed_s,
+            p50_us: weighted_percentile(&weighted, 0.50),
+            p99_us: weighted_percentile(&weighted, 0.99),
+            energy_per_inference_uj: if served > 0 { energy / served as f64 } else { 0.0 },
+            per_board,
+        }
+    }
+}
+
+/// Percentile over a pre-sorted slice (nearest-rank).
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Percentile over (value, weight) pairs pre-sorted by value: the first
+/// value whose cumulative weight reaches `q` of the total.
+fn weighted_percentile(sorted: &[(f64, f64)], q: f64) -> f64 {
+    let total: f64 = sorted.iter().map(|&(_, w)| w).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let target = total * q;
+    let mut cum = 0.0;
+    for &(v, w) in sorted {
+        cum += w;
+        if cum >= target {
+            return v;
+        }
+    }
+    sorted.last().map(|&(v, _)| v).unwrap_or(0.0)
+}
+
+/// Per-board aggregate view.
+#[derive(Clone, Debug)]
+pub struct BoardSnapshot {
+    pub label: String,
+    pub task: String,
+    pub served: u64,
+    pub batches: u64,
+    pub stolen: u64,
+    pub mean_batch: f64,
+    pub mean_queue_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub energy_per_inference_uj: f64,
+    pub depth_peak: usize,
+}
+
+/// Fleet aggregate view.
+#[derive(Clone, Debug)]
+pub struct FleetSnapshot {
+    pub elapsed_s: f64,
+    pub served: u64,
+    pub throughput_rps: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub energy_per_inference_uj: f64,
+    pub per_board: Vec<BoardSnapshot>,
+}
+
+impl FleetSnapshot {
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("elapsed_s", num(self.elapsed_s)),
+            ("served", num(self.served as f64)),
+            ("throughput_rps", num(self.throughput_rps)),
+            ("p50_us", num(self.p50_us)),
+            ("p99_us", num(self.p99_us)),
+            ("energy_per_inference_uj", num(self.energy_per_inference_uj)),
+            (
+                "boards",
+                Value::Arr(
+                    self.per_board
+                        .iter()
+                        .map(|b| {
+                            obj(vec![
+                                ("label", s(&b.label)),
+                                ("task", s(&b.task)),
+                                ("served", num(b.served as f64)),
+                                ("batches", num(b.batches as f64)),
+                                ("stolen", num(b.stolen as f64)),
+                                ("mean_batch", num(b.mean_batch)),
+                                ("mean_queue_us", num(b.mean_queue_us)),
+                                ("p50_us", num(b.p50_us)),
+                                ("p99_us", num(b.p99_us)),
+                                (
+                                    "energy_per_inference_uj",
+                                    num(b.energy_per_inference_uj),
+                                ),
+                                ("depth_peak", num(b.depth_peak as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Human-readable table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        writeln!(
+            out,
+            "fleet: {} served in {:.3} s = {:.0} req/s | p50 {:.1} us  p99 {:.1} us | {:.2} uJ/inf",
+            self.served,
+            self.elapsed_s,
+            self.throughput_rps,
+            self.p50_us,
+            self.p99_us,
+            self.energy_per_inference_uj
+        )
+        .ok();
+        writeln!(
+            out,
+            "  {:<26} {:>6} {:>7} {:>7} {:>9} {:>9} {:>9} {:>6} {:>6}",
+            "board", "served", "batches", "stolen", "p50(us)", "p99(us)", "uJ/inf", "avg_b", "peakQ"
+        )
+        .ok();
+        for b in &self.per_board {
+            writeln!(
+                out,
+                "  {:<26} {:>6} {:>7} {:>7} {:>9.1} {:>9.1} {:>9.2} {:>6.2} {:>6}",
+                b.label,
+                b.served,
+                b.batches,
+                b.stolen,
+                b.p50_us,
+                b.p99_us,
+                b.energy_per_inference_uj,
+                b.mean_batch,
+                b.depth_peak
+            )
+            .ok();
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::registry::{BoardInstance, Registry};
+
+    fn reg2() -> Registry {
+        Registry {
+            instances: vec![
+                BoardInstance::synthetic(0, "kws", 100.0, 10.0, 1.5),
+                BoardInstance::synthetic(1, "kws", 400.0, 40.0, 1.8),
+            ],
+        }
+    }
+
+    #[test]
+    fn snapshot_aggregates_and_serializes() {
+        let reg = reg2();
+        let t = Telemetry::new(2);
+        t.record_batch(0, &[100.0, 120.0, 140.0], 30, 90, 450.0, 1, 3);
+        t.record_batch(1, &[400.0], 10, 380, 720.0, 0, 0);
+        let snap = t.snapshot(&reg);
+        assert_eq!(snap.served, 4);
+        assert!(snap.p50_us >= 100.0 && snap.p50_us <= 400.0);
+        assert!(snap.p99_us >= snap.p50_us);
+        let e = snap.energy_per_inference_uj;
+        assert!((e - (450.0 + 720.0) / 4.0).abs() < 1e-9, "{e}");
+        let json = snap.to_json().to_json();
+        assert!(json.contains("\"throughput_rps\""));
+        assert!(json.contains("synthetic#1/kws"));
+        let parsed = crate::report::json::Value::parse(&json).unwrap();
+        assert_eq!(parsed.u64_of("served").unwrap(), 4);
+        assert!(snap.render().contains("fleet: 4 served"));
+    }
+
+    #[test]
+    fn fleet_percentiles_weight_by_traffic() {
+        // 99% of traffic at 1 us (hot board, saturated reservoir stands
+        // for many requests), 1% at 100 us: weighted median must stay
+        // at the hot board's latency.
+        let samples = vec![(1.0, 99.0), (100.0, 1.0)];
+        assert_eq!(weighted_percentile(&samples, 0.50), 1.0);
+        assert_eq!(weighted_percentile(&samples, 0.999), 100.0);
+        assert_eq!(weighted_percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn reservoir_keeps_percentiles_bounded() {
+        let reg = reg2();
+        let t = Telemetry::new(2);
+        for i in 0..20_000u64 {
+            t.record_batch(0, &[(i % 1000) as f64], 1, 1, 1.0, 0, 0);
+        }
+        let snap = t.snapshot(&reg);
+        assert_eq!(snap.served, 20_000);
+        assert!(snap.per_board[0].p50_us >= 300.0 && snap.per_board[0].p50_us <= 700.0);
+        assert!(snap.per_board[0].p99_us >= 900.0);
+    }
+}

@@ -1,0 +1,358 @@
+//! Per-board worker threads and their bounded request queues.
+//!
+//! Each board instance owns one [`BoardQueue`] (Mutex + Condvar; the
+//! vendored crate set has no crossbeam) and one worker thread.  The
+//! worker drains its queue through the *same* dynamic-batching window as
+//! the single-model engine ([`crate::coordinator::engine::fill_window`]),
+//! optionally steals queued requests from same-task replicas when its own
+//! queue runs dry before the device batch fills, then "executes" the
+//! batch by holding the board for the dataflow-simulated device time:
+//! `latency + (n-1) * ii`, scaled by the fleet's `time_scale`.
+//!
+//! Outputs come from the same deterministic surrogate family as
+//! `runtime::sim` (template matching / smoothing autoencoder), so replies
+//! carry plausible logits without a PJRT dependency.
+
+use super::registry::BoardInstance;
+use super::telemetry::Telemetry;
+use crate::coordinator::engine::{fill_window, BatchPolicy, Reply};
+use crate::runtime::argmax;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One request in flight inside the fleet.
+pub struct FleetRequest {
+    pub x: Vec<f32>,
+    pub reply: mpsc::Sender<Reply>,
+    pub enqueued: Instant,
+}
+
+/// Bounded MPMC queue in front of one board (router pushes, the owning
+/// worker pops, same-task workers steal).
+pub struct BoardQueue {
+    q: Mutex<VecDeque<FleetRequest>>,
+    cv: Condvar,
+    depth: AtomicUsize,
+    /// High-water mark, updated at push time (where depth is
+    /// authoritative) — sampling depth after a batch drain would
+    /// systematically read 0.
+    peak: AtomicUsize,
+    cap: usize,
+    closed: AtomicBool,
+}
+
+impl BoardQueue {
+    pub fn new(cap: usize) -> Self {
+        BoardQueue {
+            q: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            depth: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+            cap: cap.max(1),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    /// Lock-free read of the current depth (router load signal).
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// Highest depth ever observed at push time.
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Admit a request; hands it back if the queue is full or closed.
+    /// Both conditions are checked under the lock: the cap so depth can
+    /// never exceed it, and `closed` so a submit racing with shutdown
+    /// cannot enqueue after the worker's final drain (the request would
+    /// be stranded forever).
+    pub fn try_push(&self, r: FleetRequest) -> Result<(), FleetRequest> {
+        let mut q = self.q.lock().unwrap();
+        if self.closed.load(Ordering::Acquire) || q.len() >= self.cap {
+            return Err(r);
+        }
+        q.push_back(r);
+        self.depth.store(q.len(), Ordering::Relaxed);
+        self.peak.fetch_max(q.len(), Ordering::Relaxed);
+        drop(q);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Stop admitting; wakes the worker so it can drain and exit.  Takes
+    /// the queue lock so closing serializes with in-flight pushes: after
+    /// close() returns, any request that won the race is in the queue
+    /// (depth > 0) and will be drained, and any later push is rejected.
+    pub fn close(&self) {
+        let guard = self.q.lock().unwrap();
+        self.closed.store(true, Ordering::Release);
+        drop(guard);
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+
+    /// Block until a request is available; `None` once closed *and*
+    /// drained.  Used by workers with nothing to steal from — no
+    /// periodic wakeups, `close()`'s notify_all is the exit signal.
+    pub fn pop_blocking(&self) -> Option<FleetRequest> {
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if let Some(r) = q.pop_front() {
+                self.depth.store(q.len(), Ordering::Relaxed);
+                return Some(r);
+            }
+            if self.closed.load(Ordering::Acquire) {
+                return None;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+
+    /// Pop with a deadline (the batching window's `next` source).
+    pub fn pop_until(&self, deadline: Instant) -> Option<FleetRequest> {
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if let Some(r) = q.pop_front() {
+                self.depth.store(q.len(), Ordering::Relaxed);
+                return Some(r);
+            }
+            if self.closed.load(Ordering::Acquire) {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, timeout) =
+                self.cv.wait_timeout(q, deadline.duration_since(now)).unwrap();
+            q = guard;
+            if timeout.timed_out() && q.is_empty() {
+                return None;
+            }
+        }
+    }
+
+    /// Non-blocking steal (same-task replicas balancing a hot queue).
+    pub fn try_steal(&self) -> Option<FleetRequest> {
+        let mut q = self.q.lock().unwrap();
+        let r = q.pop_front();
+        if r.is_some() {
+            self.depth.store(q.len(), Ordering::Relaxed);
+        }
+        r
+    }
+}
+
+/// Deterministic surrogate forward for a task (same family as
+/// `runtime::sim`, minus the training dynamics — fleet boards serve a
+/// frozen deployed model).
+pub struct SimBoardExecutor {
+    task: String,
+    templates: Vec<Vec<f32>>,
+    n_out: usize,
+    feat: usize,
+}
+
+impl SimBoardExecutor {
+    pub fn for_task(task: &str) -> Self {
+        let (n_out, feat) = match task {
+            "kws" => (crate::data::KWS_CLASSES, crate::data::KWS_DIM),
+            "ic" => (crate::data::IC_CLASSES, crate::data::IC_DIM),
+            _ => (crate::data::AD_DIM, crate::data::AD_DIM),
+        };
+        let templates = if task == "ad" {
+            Vec::new()
+        } else {
+            crate::data::class_templates_f32(task, n_out)
+        };
+        SimBoardExecutor { task: task.to_string(), templates, n_out, feat }
+    }
+
+    pub fn input_elems(&self) -> usize {
+        self.feat
+    }
+
+    pub fn num_outputs(&self) -> usize {
+        self.n_out
+    }
+
+    pub fn forward1(&self, x: &[f32]) -> Vec<f32> {
+        if self.task == "ad" {
+            // Reconstruction: the deployed autoencoder returns the
+            // denoised spectral profile (9-tap smoothing).
+            crate::data::moving_average_f32(x, crate::data::AD_SMOOTH_WINDOW)
+        } else {
+            crate::data::template_logits(x, &self.templates)
+        }
+    }
+}
+
+/// Hold the thread for `dur` with µs precision (plain `sleep` alone is
+/// too coarse for microsecond-class accelerator latencies).
+pub fn precise_sleep(dur: Duration) {
+    let deadline = Instant::now() + dur;
+    if dur > Duration::from_millis(2) {
+        std::thread::sleep(dur - Duration::from_millis(1));
+    }
+    while Instant::now() < deadline {
+        std::hint::spin_loop();
+    }
+}
+
+/// Knobs a worker needs beyond its instance.
+pub struct WorkerConfig {
+    pub batch: BatchPolicy,
+    /// Wall-seconds per simulated device-second (1.0 = real time).
+    pub time_scale: f64,
+    /// Steal from same-task replicas when the own queue runs dry.
+    pub work_stealing: bool,
+}
+
+/// Run one board's serve loop until its queue is closed and drained.
+/// Returns the number of requests served.
+pub fn run_worker(
+    inst: &BoardInstance,
+    own: &Arc<BoardQueue>,
+    peers: &[Arc<BoardQueue>],
+    cfg: &WorkerConfig,
+    telemetry: &Telemetry,
+) -> u64 {
+    let exec = SimBoardExecutor::for_task(&inst.task);
+    let mut served = 0u64;
+    // How long to wait on the own queue before checking peers for work
+    // to steal (bounds the idle-replica pickup latency).
+    let steal_poll = Duration::from_micros(200);
+
+    let stealing = cfg.work_stealing && !peers.is_empty();
+
+    loop {
+        // First request of a batch: own queue first, then — if idle —
+        // steal one from a same-task replica.  Without anyone to steal
+        // from, park on the condvar instead of polling.
+        let mut stolen = 0u64;
+        let first = if stealing {
+            loop {
+                if let Some(r) = own.pop_until(Instant::now() + steal_poll) {
+                    break r;
+                }
+                if let Some(r) = peers.iter().find_map(|p| p.try_steal()) {
+                    stolen += 1;
+                    break r;
+                }
+                if own.is_closed() && own.depth() == 0 {
+                    return served;
+                }
+            }
+        } else {
+            match own.pop_blocking() {
+                Some(r) => r,
+                None => return served,
+            }
+        };
+        let mut batch = fill_window(first, &cfg.batch, |deadline| own.pop_until(deadline));
+        if stealing {
+            'steal: for peer in peers {
+                while batch.len() < cfg.batch.max_batch {
+                    match peer.try_steal() {
+                        Some(r) => {
+                            batch.push(r);
+                            stolen += 1;
+                        }
+                        None => continue 'steal,
+                    }
+                }
+                break;
+            }
+        }
+
+        let n = batch.len();
+        // Hold the (simulated) accelerator for the batch's device time.
+        let device_s = inst.batch_latency_s(n);
+        let exec_start = Instant::now();
+        precise_sleep(Duration::from_secs_f64(device_s * cfg.time_scale));
+        let exec_us = exec_start.elapsed().as_micros();
+        let energy_uj = inst.power_w * device_s * 1e6;
+
+        let mut latencies_us = Vec::with_capacity(n);
+        let mut queue_us_sum = 0u128;
+        for req in &batch {
+            let out = exec.forward1(&req.x);
+            let top1 = argmax(&out);
+            let queue_us = exec_start.duration_since(req.enqueued).as_micros();
+            queue_us_sum += queue_us;
+            latencies_us.push(req.enqueued.elapsed().as_micros() as f64);
+            let _ = req.reply.send(Reply {
+                output: out,
+                top1,
+                batch_size: n,
+                queue_us,
+                exec_us,
+            });
+            served += 1;
+        }
+        telemetry.record_batch(
+            inst.id,
+            &latencies_us,
+            queue_us_sum,
+            exec_us,
+            energy_uj,
+            stolen,
+            own.peak(),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_bounds_are_strict() {
+        let q = BoardQueue::new(2);
+        let (tx, _rx) = mpsc::channel();
+        let mk = || FleetRequest { x: vec![0.0], reply: tx.clone(), enqueued: Instant::now() };
+        assert!(q.try_push(mk()).is_ok());
+        assert!(q.try_push(mk()).is_ok());
+        assert!(q.try_push(mk()).is_err(), "cap 2 must reject the 3rd");
+        assert_eq!(q.depth(), 2);
+        assert!(q.try_steal().is_some());
+        assert_eq!(q.depth(), 1);
+        q.close();
+        assert!(q.try_push(mk()).is_err(), "closed queue rejects");
+        assert!(q.pop_until(Instant::now()).is_some(), "drains after close");
+        assert!(q.pop_until(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn sim_executor_shapes_and_determinism() {
+        let e = SimBoardExecutor::for_task("kws");
+        let x = vec![0.3f32; e.input_elems()];
+        let a = e.forward1(&x);
+        let b = e.forward1(&x);
+        assert_eq!(a.len(), 12);
+        assert_eq!(a, b);
+        let ad = SimBoardExecutor::for_task("ad");
+        let x = vec![0.5f32; ad.input_elems()];
+        assert_eq!(ad.forward1(&x).len(), 128);
+    }
+
+    #[test]
+    fn precise_sleep_hits_target() {
+        let t0 = Instant::now();
+        precise_sleep(Duration::from_micros(300));
+        let dt = t0.elapsed();
+        assert!(dt >= Duration::from_micros(300));
+        assert!(dt < Duration::from_millis(50), "{dt:?}");
+    }
+}

@@ -7,7 +7,7 @@
 //! rewrite it, and [`crate::dataflow`] / [`crate::resources`] consume it.
 
 use crate::report::json::Value;
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 use std::path::Path;
 
 /// One layer/operator in the chain.

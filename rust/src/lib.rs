@@ -15,14 +15,28 @@
 //! * [`metrics`] — FLOPs, BOPs (eq. 1), weight memory, inference cost (eq. 2).
 //! * [`dse`] / [`surrogate`] — Bayesian optimization + adaptive ASHA for the
 //!   Fig. 2/3/4 design-space explorations.
-//! * [`runtime`] — the PJRT bridge: loads `artifacts/*.hlo.txt`, executes
-//!   inference and SGD train steps (Python never on the request path).
+//! * [`runtime`] — the execution backend behind a stable `Runtime` /
+//!   `LoadedModel` facade: with `--features pjrt` the PJRT bridge loads
+//!   `artifacts/*.hlo.txt` and executes inference and SGD train steps
+//!   (Python never on the request path); the default build substitutes a
+//!   deterministic surrogate backend so the stack runs anywhere.
 //! * [`coordinator`] — the end-to-end codesign flow driver and the async
 //!   batching inference engine.
+//! * [`fleet`] — the multi-board serving plane: a [`fleet::registry`] of
+//!   heterogeneous board instances (board model × task × folding schedule,
+//!   each carrying its dataflow-simulated latency and power model), a
+//!   [`fleet::router`] with pluggable policies (round-robin, least-loaded,
+//!   energy-aware, latency-SLO) plus admission control and bounded-queue
+//!   backpressure, per-board worker threads that reuse the dynamic batcher
+//!   with work stealing between same-task replicas, and [`fleet::telemetry`]
+//!   aggregating fleet-level p50/p99 latency, throughput, and energy per
+//!   inference into [`report::json`].
 //! * [`eembc`] — a simulation of the EEMBC EnergyRunner™ + test harness
 //!   (performance, energy, and accuracy modes over a paced serial link).
 //! * [`data`] — deterministic synthetic datasets shared bit-exactly with
 //!   the Python training side (splitmix64 templates).
+//! * [`error`] — std-only anyhow-subset error type (the offline build
+//!   image has no external crates).
 
 pub mod board;
 pub mod coordinator;
@@ -30,7 +44,9 @@ pub mod data;
 pub mod dataflow;
 pub mod dse;
 pub mod eembc;
+pub mod error;
 pub mod fifo;
+pub mod fleet;
 pub mod ir;
 pub mod metrics;
 pub mod passes;

@@ -11,15 +11,17 @@
 //! tinyml-codesign table <1|2|3|4|5>                  paper tables
 //! tinyml-codesign fig <2|3>                          DSE scan CSVs
 //! tinyml-codesign serve <model> [--requests N]       batching engine demo
+//! tinyml-codesign fleet [--policy rr|ll|energy|slo] [--requests N] [--json]
 //! tinyml-codesign list                               available models
 //! ```
 
-use anyhow::{anyhow, bail, Result};
 use tinyml_codesign::board::{arty_a7_100t, pynq_z2, Board};
 use tinyml_codesign::coordinator::engine::{spawn, BatchPolicy};
 use tinyml_codesign::coordinator::{self, TrainConfig};
 use tinyml_codesign::data;
 use tinyml_codesign::eembc::{DesignPerf, Dut, Runner};
+use tinyml_codesign::error::{anyhow, bail, Result};
+use tinyml_codesign::fleet::{Fleet, FleetConfig, Policy, Registry};
 use tinyml_codesign::report::tables;
 use tinyml_codesign::runtime::{LoadedModel, Runtime};
 
@@ -215,8 +217,47 @@ fn main() -> Result<()> {
                 batch_sizes.iter().sum::<usize>() as f64 / batch_sizes.len() as f64
             );
         }
+        "fleet" => {
+            let policy = match args.flag("policy").unwrap_or("ll") {
+                "rr" => Policy::RoundRobin,
+                "energy" => Policy::EnergyAware,
+                "slo" => Policy::LatencySlo {
+                    slo_us: args.usize_flag("slo-us", 3000) as f64,
+                },
+                _ => Policy::LeastLoaded,
+            };
+            let n = args.usize_flag("requests", 600);
+            let cfg = FleetConfig { policy, time_scale: 20.0, ..Default::default() };
+            let fleet = Fleet::start(Registry::standard_fleet()?, cfg)?;
+            let handle = fleet.handle();
+            let mut rng = data::prng::SplitMix64::new(0xF1EE7);
+            let mut pending = Vec::new();
+            let mut rejected = 0usize;
+            for _ in 0..n {
+                let task = match rng.next_below(4) {
+                    0 | 1 => "kws",
+                    2 => "ad",
+                    _ => "ic",
+                };
+                let x = vec![0.2f32; data::feature_dim(task)];
+                match handle.submit(task, x) {
+                    Ok(rx) => pending.push(rx),
+                    Err(_) => rejected += 1,
+                }
+            }
+            for rx in pending {
+                let _ = rx.recv();
+            }
+            let summary = fleet.shutdown();
+            println!("policy {policy}, {n} mixed requests, {rejected} rejected");
+            if args.flag("json").is_some() {
+                println!("{}", summary.snapshot.to_json().to_json());
+            } else {
+                print!("{}", summary.render());
+            }
+        }
         _ => {
-            println!("{}", include_str!("main.rs").lines().skip(2).take(13).map(|l| l.trim_start_matches("//! ")).collect::<Vec<_>>().join("\n"));
+            println!("{}", include_str!("main.rs").lines().skip(2).take(14).map(|l| l.trim_start_matches("//! ")).collect::<Vec<_>>().join("\n"));
         }
     }
     Ok(())

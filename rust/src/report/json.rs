@@ -6,7 +6,7 @@
 //! escapes, numbers, booleans, null) parses; output is used by the report
 //! generators.  Property-tested round-trip in the test module.
 
-use anyhow::{anyhow, bail, Result};
+use crate::error::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 

@@ -12,7 +12,7 @@ use crate::dataflow::schedule::ScheduleConfig;
 use crate::dse;
 use crate::ir::Graph;
 use crate::metrics;
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 use std::fmt::Write as _;
 use std::path::Path;
 

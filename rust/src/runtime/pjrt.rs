@@ -1,0 +1,239 @@
+//! PJRT backend: compiles the AOT HLO artifacts on the PJRT CPU client
+//! and owns all request-path compute.  Requires the vendored `xla` crate
+//! (`--features pjrt`).
+
+use super::{argmax, Manifest};
+use crate::error::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// The PJRT client wrapper (one per process).
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn compile_hlo_text(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+}
+
+/// A loaded model: parameters + lazily-compiled executables.
+pub struct LoadedModel {
+    pub manifest: Manifest,
+    pub params: Vec<xla::Literal>,
+    /// Device-resident copies of `params` for the inference hot path
+    /// (§Perf L3: avoids re-uploading every weight on every request).
+    /// Invalidated by `train_step`.
+    param_bufs: Option<Vec<xla::PjRtBuffer>>,
+    art_dir: PathBuf,
+    fwd1: Option<xla::PjRtLoadedExecutable>,
+    fwd_batch: Option<(usize, xla::PjRtLoadedExecutable)>,
+    train: Option<(usize, xla::PjRtLoadedExecutable)>,
+}
+
+/// Which forward executable to run.
+#[derive(Clone, Copy)]
+enum Fwd {
+    One,
+    Batch,
+}
+
+fn literal_from_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+impl LoadedModel {
+    /// Load manifest + initial params; compiles executables lazily.
+    pub fn load(art_dir: &Path, name: &str) -> Result<Self> {
+        let manifest = Manifest::load(&art_dir.join(format!("{name}_manifest.json")))?;
+        let mut params = Vec::with_capacity(manifest.params.len());
+        for p in &manifest.params {
+            let bytes = std::fs::read(art_dir.join(&p.file))
+                .with_context(|| format!("param file {}", p.file))?;
+            let n: usize = p.shape.iter().product::<usize>().max(1);
+            if bytes.len() != 4 * n {
+                bail!("{}: expected {} bytes, got {}", p.file, 4 * n, bytes.len());
+            }
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            params.push(literal_from_f32(&data, &p.shape)?);
+        }
+        Ok(Self {
+            manifest,
+            params,
+            param_bufs: None,
+            art_dir: art_dir.to_path_buf(),
+            fwd1: None,
+            fwd_batch: None,
+            train: None,
+        })
+    }
+
+    fn compile(&self, rt: &Runtime, tag: &str) -> Result<(usize, xla::PjRtLoadedExecutable)> {
+        let (file, batch) = self
+            .manifest
+            .artifact(tag)
+            .ok_or_else(|| anyhow!("{}: no artifact '{tag}'", self.manifest.name))?;
+        let exe = rt.compile_hlo_text(&self.art_dir.join(file))?;
+        Ok((batch, exe))
+    }
+
+    pub fn ensure_fwd1(&mut self, rt: &Runtime) -> Result<()> {
+        if self.fwd1.is_none() {
+            self.fwd1 = Some(self.compile(rt, "fwd1")?.1);
+        }
+        Ok(())
+    }
+
+    pub fn ensure_fwd_batch(&mut self, rt: &Runtime) -> Result<usize> {
+        if self.fwd_batch.is_none() {
+            let tag = self
+                .manifest
+                .artifacts
+                .iter()
+                .find(|(t, _, _)| t.starts_with("fwd") && t != "fwd1")
+                .map(|(t, _, _)| t.clone())
+                .ok_or_else(|| anyhow!("no batch fwd artifact"))?;
+            self.fwd_batch = Some(self.compile(rt, &tag)?);
+        }
+        Ok(self.fwd_batch.as_ref().unwrap().0)
+    }
+
+    pub fn ensure_train(&mut self, rt: &Runtime) -> Result<usize> {
+        if self.train.is_none() {
+            self.train = Some(self.compile(rt, "train")?);
+        }
+        Ok(self.train.as_ref().unwrap().0)
+    }
+
+    /// Upload parameters to the device once (inference hot path).
+    fn ensure_param_bufs(&mut self, rt: &Runtime) -> Result<()> {
+        if self.param_bufs.is_none() {
+            let mut bufs = Vec::with_capacity(self.params.len());
+            for (lit, spec) in self.params.iter().zip(&self.manifest.params) {
+                let data = lit.to_vec::<f32>()?;
+                let dims = if spec.shape.is_empty() { vec![1] } else { spec.shape.clone() };
+                // Rank-0 params round-trip as [1]; none exist today but
+                // keep the path total.
+                let buf = if spec.shape.is_empty() {
+                    rt.client.buffer_from_host_buffer::<f32>(&data, &[], None)?
+                } else {
+                    rt.client.buffer_from_host_buffer::<f32>(&data, &dims, None)?
+                };
+                bufs.push(buf);
+            }
+            self.param_bufs = Some(bufs);
+        }
+        Ok(())
+    }
+
+    fn run_fwd(
+        &mut self,
+        rt: &Runtime,
+        which: Fwd,
+        x: &[f32],
+        batch: usize,
+    ) -> Result<Vec<f32>> {
+        let feat = self.manifest.input_elems();
+        if x.len() != feat * batch {
+            bail!("input len {} != batch {} * {}", x.len(), batch, feat);
+        }
+        self.ensure_param_bufs(rt)?;
+        let mut shape = vec![batch];
+        shape.extend_from_slice(&self.manifest.input_shape);
+        let xbuf = rt.client.buffer_from_host_buffer::<f32>(x, &shape, None)?;
+        let exe = match which {
+            Fwd::One => self.fwd1.as_ref().unwrap(),
+            Fwd::Batch => &self.fwd_batch.as_ref().unwrap().1,
+        };
+        let mut args: Vec<&xla::PjRtBuffer> =
+            self.param_bufs.as_ref().unwrap().iter().collect();
+        args.push(&xbuf);
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0].to_literal_sync()?;
+        let tup = result.to_tuple()?;
+        let out = tup
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("empty output tuple"))?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Batch-1 inference (the EEMBC path): returns the output vector.
+    pub fn infer1(&mut self, rt: &Runtime, x: &[f32]) -> Result<Vec<f32>> {
+        self.ensure_fwd1(rt)?;
+        self.run_fwd(rt, Fwd::One, x, 1)
+    }
+
+    /// Batched inference; `x` must hold exactly `batch_size` samples (pad
+    /// the tail batch with zeros and slice the result).
+    pub fn infer_batch(&mut self, rt: &Runtime, x: &[f32]) -> Result<Vec<f32>> {
+        let batch = self.ensure_fwd_batch(rt)?;
+        self.run_fwd(rt, Fwd::Batch, x, batch)
+    }
+
+    /// One SGD step; parameters round-trip through the runtime.  Returns
+    /// the loss.
+    pub fn train_step(&mut self, rt: &Runtime, x: &[f32], y: &[i32], lr: f32) -> Result<f32> {
+        let batch = self.ensure_train(rt)?;
+        let feat = self.manifest.input_elems();
+        if x.len() != feat * batch || y.len() != batch {
+            bail!(
+                "train batch mismatch: x {} (want {}), y {} (want {})",
+                x.len(),
+                feat * batch,
+                y.len(),
+                batch
+            );
+        }
+        let mut shape = vec![batch];
+        shape.extend_from_slice(&self.manifest.input_shape);
+        let xlit = literal_from_f32(x, &shape)?;
+        let ylit = xla::Literal::vec1(y);
+        let lrlit = xla::Literal::from(lr);
+        let exe = &self.train.as_ref().unwrap().1;
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        args.push(&xlit);
+        args.push(&ylit);
+        args.push(&lrlit);
+        let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let mut tup = result.to_tuple()?;
+        if tup.len() != self.params.len() + 1 {
+            bail!("train output arity {} != params {} + 1", tup.len(), self.params.len());
+        }
+        let loss_lit = tup.pop().unwrap();
+        let loss = loss_lit.to_vec::<f32>()?[0];
+        self.params = tup;
+        self.param_bufs = None; // device copies are stale after the update
+        Ok(loss)
+    }
+
+    /// Argmax over the batch-1 output (classification).
+    pub fn classify1(&mut self, rt: &Runtime, x: &[f32]) -> Result<usize> {
+        let out = self.infer1(rt, x)?;
+        Ok(argmax(&out))
+    }
+
+    /// AD anomaly score: mean squared reconstruction error (§2.2).
+    pub fn anomaly_score1(&mut self, rt: &Runtime, x: &[f32]) -> Result<f32> {
+        let out = self.infer1(rt, x)?;
+        let mse = out
+            .iter()
+            .zip(x.iter())
+            .map(|(r, t)| (r - t) * (r - t))
+            .sum::<f32>()
+            / x.len() as f32;
+        Ok(mse)
+    }
+}

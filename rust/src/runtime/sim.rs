@@ -1,0 +1,299 @@
+//! Surrogate backend (default build): a deterministic stand-in for the
+//! PJRT runtime with the same `Runtime` / `LoadedModel` API.
+//!
+//! Classification tasks score inputs against the shared splitmix64 class
+//! templates (the same streams `data::test_set` draws from), blended with
+//! a small pseudo-random projection whose weight shrinks as "training"
+//! progresses; the AD autoencoder reconstructs the 9-tap moving average
+//! of its input (the spectral profile minus noise), plus a residual that
+//! decays with training.  Losses decay deterministically, so train/eval
+//! driver code behaves as it does on the real backend.
+//!
+//! If `<model>_manifest.json` exists it is honored; otherwise a manifest
+//! is synthesized from the model name so the engine, fleet, EEMBC, and
+//! CLI layers run on a fresh checkout with no artifacts at all.
+
+use super::{argmax, Manifest};
+use crate::data::prng::SplitMix64;
+use crate::error::{bail, Result};
+use std::path::Path;
+
+/// Stand-in for the PJRT client (one per process; nothing to hold).
+pub struct Runtime;
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime)
+    }
+}
+
+const DEFAULT_BATCH: usize = 64;
+
+/// A loaded surrogate model.
+pub struct LoadedModel {
+    pub manifest: Manifest,
+    /// Class templates (classification) — one per output.
+    templates: Vec<Vec<f32>>,
+    /// Per-class pseudo-random projections (the "untrained" component).
+    proj: Vec<Vec<f32>>,
+    /// Deterministic per-element residual for the AD reconstruction.
+    residual: Vec<f32>,
+    /// SGD steps taken (drives loss decay and blend sharpening).
+    steps: u32,
+}
+
+fn fnv64(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn synth_manifest(name: &str) -> Result<Manifest> {
+    let (task, flow, input_shape, num_outputs, loss_kind) = if name.contains("kws") {
+        ("kws", "finn", vec![490], 12, "xent")
+    } else if name.contains("ad") {
+        ("ad", "hls4ml", vec![128], 128, "mse")
+    } else if name.contains("ic") {
+        ("ic", "finn", vec![32, 32, 3], 10, "xent")
+    } else {
+        bail!("sim backend: cannot infer task from model name '{name}'");
+    };
+    Ok(Manifest {
+        name: name.to_string(),
+        task: task.to_string(),
+        flow: flow.to_string(),
+        input_shape,
+        num_outputs,
+        loss_kind: loss_kind.to_string(),
+        weight_bits: "sim".to_string(),
+        params: Vec::new(),
+        artifacts: vec![
+            ("fwd1".into(), "<sim>".into(), 1),
+            (format!("fwd{DEFAULT_BATCH}"), "<sim>".into(), DEFAULT_BATCH),
+            ("train".into(), "<sim>".into(), DEFAULT_BATCH),
+        ],
+    })
+}
+
+impl LoadedModel {
+    /// Load the manifest if present, else synthesize one from the name.
+    pub fn load(art_dir: &Path, name: &str) -> Result<Self> {
+        let path = art_dir.join(format!("{name}_manifest.json"));
+        let manifest =
+            if path.exists() { Manifest::load(&path)? } else { synth_manifest(name)? };
+        let feat = manifest.input_elems();
+        let n_out = manifest.num_outputs;
+        let seed = fnv64(name);
+        let mut templates = Vec::new();
+        let mut proj = Vec::new();
+        if manifest.task != "ad" {
+            templates = crate::data::class_templates_f32(&manifest.task, n_out);
+            for c in 0..n_out {
+                let mut rng = SplitMix64::new(seed ^ (0x9E37 + c as u64));
+                proj.push((0..feat).map(|_| rng.next_gaussian() as f32).collect());
+            }
+        }
+        let mut rng = SplitMix64::new(seed ^ 0xAD0FF5E7);
+        let residual = (0..feat).map(|_| rng.next_gaussian() as f32).collect();
+        Ok(Self { manifest, templates, proj, residual, steps: 0 })
+    }
+
+    /// Blend weight of the template/profile component: grows with steps.
+    fn fidelity(&self) -> f32 {
+        1.0 - 0.4 * (-(self.steps as f32) / 50.0).exp()
+    }
+
+    fn forward1(&self, x: &[f32]) -> Vec<f32> {
+        let feat = self.manifest.input_elems();
+        debug_assert_eq!(x.len(), feat);
+        if self.manifest.task == "ad" {
+            // Reconstruction: smoothed input + a training-decayed residual.
+            let ma = crate::data::moving_average_f32(x, crate::data::AD_SMOOTH_WINDOW);
+            let delta = 0.5 * (1.0 - self.fidelity());
+            ma.iter().zip(&self.residual).map(|(&m, &r)| m + delta * r).collect()
+        } else {
+            // Shared template-matching kernel (dot/dim) plus the
+            // training-decayed pseudo-random component: rescale the
+            // projection part from /dim to 0.05/sqrt(dim).
+            let beta = self.fidelity();
+            let t_part = crate::data::template_logits(x, &self.templates);
+            let w_part = crate::data::template_logits(x, &self.proj);
+            let wscale = 0.05 * (feat as f32).sqrt();
+            t_part
+                .iter()
+                .zip(&w_part)
+                .map(|(&t, &w)| beta * t + (1.0 - beta) * w * wscale)
+                .collect()
+        }
+    }
+
+    pub fn ensure_fwd1(&mut self, _rt: &Runtime) -> Result<()> {
+        Ok(())
+    }
+
+    pub fn ensure_fwd_batch(&mut self, _rt: &Runtime) -> Result<usize> {
+        Ok(self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|(t, _, _)| t.starts_with("fwd") && t != "fwd1")
+            .map(|(_, _, b)| *b)
+            .unwrap_or(DEFAULT_BATCH))
+    }
+
+    pub fn ensure_train(&mut self, _rt: &Runtime) -> Result<usize> {
+        Ok(self
+            .manifest
+            .artifact("train")
+            .map(|(_, b)| b)
+            .unwrap_or(DEFAULT_BATCH))
+    }
+
+    /// Batch-1 inference (the EEMBC path): returns the output vector.
+    pub fn infer1(&mut self, _rt: &Runtime, x: &[f32]) -> Result<Vec<f32>> {
+        let feat = self.manifest.input_elems();
+        if x.len() != feat {
+            bail!("input len {} != {}", x.len(), feat);
+        }
+        Ok(self.forward1(x))
+    }
+
+    /// Batched inference; `x` must hold exactly the device batch (pad the
+    /// tail batch with zeros and slice the result).
+    pub fn infer_batch(&mut self, rt: &Runtime, x: &[f32]) -> Result<Vec<f32>> {
+        let batch = self.ensure_fwd_batch(rt)?;
+        let feat = self.manifest.input_elems();
+        if x.len() != feat * batch {
+            bail!("input len {} != batch {} * {}", x.len(), batch, feat);
+        }
+        let mut out = Vec::with_capacity(batch * self.manifest.num_outputs);
+        for sample in x.chunks_exact(feat) {
+            out.extend(self.forward1(sample));
+        }
+        Ok(out)
+    }
+
+    /// One surrogate SGD step: advances the fidelity schedule and returns
+    /// a deterministically decaying loss.  Accepts any batch whose `x`
+    /// and `y` lengths agree (the real backend is stricter — it must
+    /// match the AOT-compiled train batch).
+    pub fn train_step(&mut self, _rt: &Runtime, x: &[f32], y: &[i32], _lr: f32) -> Result<f32> {
+        let feat = self.manifest.input_elems();
+        if y.is_empty() || x.len() != feat * y.len() {
+            bail!("train batch mismatch: x {} vs y {} * {}", x.len(), y.len(), feat);
+        }
+        self.steps += 1;
+        let base = if self.manifest.loss_kind == "mse" {
+            0.35f32 * 0.35
+        } else {
+            (self.manifest.num_outputs as f32).ln()
+        };
+        Ok(base * (0.12 + 0.88 * (-(self.steps as f32) / 35.0).exp()))
+    }
+
+    /// Argmax over the batch-1 output (classification).
+    pub fn classify1(&mut self, rt: &Runtime, x: &[f32]) -> Result<usize> {
+        let out = self.infer1(rt, x)?;
+        Ok(argmax(&out))
+    }
+
+    /// AD anomaly score: mean squared reconstruction error (§2.2).
+    pub fn anomaly_score1(&mut self, rt: &Runtime, x: &[f32]) -> Result<f32> {
+        let out = self.infer1(rt, x)?;
+        let mse = out
+            .iter()
+            .zip(x.iter())
+            .map(|(r, t)| (r - t) * (r - t))
+            .sum::<f32>()
+            / x.len() as f32;
+        Ok(mse)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+
+    fn model(name: &str) -> LoadedModel {
+        // Point at a directory with no manifests: synthesis path.
+        LoadedModel::load(Path::new("/nonexistent"), name).unwrap()
+    }
+
+    #[test]
+    fn deterministic_and_input_sensitive() {
+        let rt = Runtime::cpu().unwrap();
+        let mut m = model("kws_mlp_w3a3");
+        let ts = data::test_set("kws", 3, 1);
+        let a = m.infer1(&rt, &ts.samples[0].x).unwrap();
+        let b = m.infer1(&rt, &ts.samples[0].x).unwrap();
+        assert_eq!(a.len(), 12);
+        assert_eq!(a, b);
+        let c = m.infer1(&rt, &ts.samples[1].x).unwrap();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let rt = Runtime::cpu().unwrap();
+        let mut m = model("kws_mlp_w3a3");
+        let batch = m.ensure_fwd_batch(&rt).unwrap();
+        let feat = m.manifest.input_elems();
+        let ts = data::test_set("kws", 2, 5);
+        let mut x = vec![0.0f32; batch * feat];
+        x[..feat].copy_from_slice(&ts.samples[0].x);
+        let out = m.infer_batch(&rt, &x).unwrap();
+        let single = m.infer1(&rt, &ts.samples[0].x).unwrap();
+        assert_eq!(&out[..12], &single[..]);
+    }
+
+    #[test]
+    fn training_loss_decreases() {
+        let rt = Runtime::cpu().unwrap();
+        let mut m = model("kws_mlp_w3a3");
+        let mut rng = SplitMix64::new(7);
+        let (x, y) = data::train_batch("kws", &mut rng, 8);
+        let first = m.train_step(&rt, &x, &y, 0.05).unwrap();
+        let mut last = first;
+        for _ in 0..5 {
+            last = m.train_step(&rt, &x, &y, 0.05).unwrap();
+        }
+        assert!(last < first, "{first} -> {last}");
+    }
+
+    #[test]
+    fn classification_beats_chance() {
+        let rt = Runtime::cpu().unwrap();
+        let mut m = model("kws_mlp_w3a3");
+        let ts = data::test_set("kws", 60, 0xACC);
+        let mut correct = 0;
+        for s in &ts.samples {
+            if m.classify1(&rt, &s.x).unwrap() == s.label as usize {
+                correct += 1;
+            }
+        }
+        assert!(correct > 30, "top-1 {correct}/60");
+    }
+
+    #[test]
+    fn anomaly_scores_separate() {
+        let rt = Runtime::cpu().unwrap();
+        let mut m = model("ad_autoencoder");
+        // Train a little so the residual decays.
+        let mut rng = SplitMix64::new(3);
+        for _ in 0..60 {
+            let (x, y) = data::train_batch("ad", &mut rng, 8);
+            m.train_step(&rt, &x, &y, 0.05).unwrap();
+        }
+        let ts = data::test_set("ad", 60, 11);
+        let mut scores = Vec::new();
+        for s in &ts.samples {
+            scores.push((m.anomaly_score1(&rt, &s.x).unwrap(), s.label == 1));
+        }
+        let auc = data::roc_auc(&scores);
+        assert!(auc > 0.6, "AUC {auc}");
+    }
+}

@@ -8,6 +8,9 @@
 use tinyml_codesign::data::prng::SplitMix64;
 use tinyml_codesign::dataflow::{Prereq, Simulator, StageSpec, UNBOUNDED_DEPTH};
 use tinyml_codesign::fifo::{optimize_fifos, DepthPolicy};
+use tinyml_codesign::fleet::{
+    BoardInstance, Fleet, FleetConfig, Policy, Registry, RouteError, Router,
+};
 use tinyml_codesign::ir::Graph;
 use tinyml_codesign::passes;
 
@@ -244,5 +247,218 @@ fn prop_bops_monotone_in_weight_bits() {
             }
         }
         assert!(bops(&hi) > bops(&g));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet router properties.
+// ---------------------------------------------------------------------------
+
+const TASKS: [&str; 3] = ["kws", "ad", "ic"];
+
+/// Random heterogeneous registry: 2-8 instances over random tasks.
+fn random_registry(rng: &mut SplitMix64) -> Registry {
+    let n = 2 + rng.next_below(7) as usize;
+    let instances = (0..n)
+        .map(|id| {
+            let task = TASKS[rng.next_below(3) as usize];
+            let latency_us = 20.0 + rng.next_f64() * 2000.0;
+            let ii_us = latency_us / (2.0 + rng.next_f64() * 18.0);
+            let power_w = 1.2 + rng.next_f64();
+            BoardInstance::synthetic(id, task, latency_us, ii_us, power_w)
+        })
+        .collect();
+    Registry { instances }
+}
+
+fn random_policy(rng: &mut SplitMix64) -> Policy {
+    match rng.next_below(4) {
+        0 => Policy::RoundRobin,
+        1 => Policy::LeastLoaded,
+        2 => Policy::EnergyAware,
+        _ => Policy::LatencySlo { slo_us: 100.0 + rng.next_f64() * 20_000.0 },
+    }
+}
+
+#[test]
+fn prop_router_only_routes_to_boards_hosting_the_task() {
+    let mut rng = SplitMix64::new(0xF1EE_0001);
+    for case in 0..200 {
+        let reg = random_registry(&mut rng);
+        let policy = random_policy(&mut rng);
+        let cap = 1 + rng.next_below(8) as usize;
+        let router = Router::new(&reg, policy, cap);
+        let depths: Vec<usize> =
+            (0..reg.len()).map(|_| rng.next_below(cap as u64 + 1) as usize).collect();
+        let task = TASKS[rng.next_below(3) as usize];
+        let eligible = reg.eligible(task);
+        match router.select(task, &depths) {
+            Ok(i) => {
+                assert_eq!(
+                    reg.instances[i].task, task,
+                    "case {case} ({policy:?}): routed {task} to {}",
+                    reg.instances[i].label
+                );
+                assert!(depths[i] < cap, "case {case}: routed to a full queue");
+            }
+            Err(RouteError::UnknownTask) => {
+                assert!(eligible.is_empty(), "case {case}: spurious UnknownTask");
+            }
+            Err(RouteError::Overloaded) => {
+                assert!(
+                    !eligible.is_empty() && eligible.iter().all(|&i| depths[i] >= cap),
+                    "case {case}: spurious Overloaded with depths {depths:?}"
+                );
+            }
+            Err(RouteError::SloUnattainable) => {
+                assert!(
+                    matches!(policy, Policy::LatencySlo { .. }),
+                    "case {case}: {policy:?} returned SloUnattainable"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_router_respects_queue_bounds_and_drops_nothing() {
+    // Drive a random admit/complete schedule against the pure router and
+    // check conservation: everything admitted is either completed or
+    // still queued, and no queue ever exceeds its bound.
+    let mut rng = SplitMix64::new(0xF1EE_0002);
+    for case in 0..120 {
+        let reg = random_registry(&mut rng);
+        let policy = random_policy(&mut rng);
+        let cap = 1 + rng.next_below(6) as usize;
+        let router = Router::new(&reg, policy, cap);
+        let mut depths = vec![0usize; reg.len()];
+        let (mut admitted, mut completed, mut rejected) = (0u64, 0u64, 0u64);
+        for _ in 0..300 {
+            if rng.next_f64() < 0.6 {
+                let task = TASKS[rng.next_below(3) as usize];
+                match router.select(task, &depths) {
+                    Ok(i) => {
+                        assert!(depths[i] < cap, "case {case}: admitted past the bound");
+                        depths[i] += 1;
+                        admitted += 1;
+                    }
+                    Err(_) => rejected += 1,
+                }
+            } else {
+                // A worker finishes one queued request somewhere.
+                let busy: Vec<usize> =
+                    (0..reg.len()).filter(|&i| depths[i] > 0).collect();
+                if !busy.is_empty() {
+                    let i = busy[rng.next_below(busy.len() as u64) as usize];
+                    depths[i] -= 1;
+                    completed += 1;
+                }
+            }
+            assert!(
+                depths.iter().all(|&d| d <= cap),
+                "case {case}: depths {depths:?} exceed cap {cap}"
+            );
+        }
+        let queued: u64 = depths.iter().map(|&d| d as u64).sum();
+        assert_eq!(
+            admitted,
+            completed + queued,
+            "case {case} ({policy:?}): {admitted} admitted != {completed} completed \
+             + {queued} queued ({rejected} rejected)"
+        );
+    }
+}
+
+#[test]
+fn prop_round_robin_spreads_evenly_over_replicas() {
+    let mut rng = SplitMix64::new(0xF1EE_0003);
+    for case in 0..60 {
+        let n = 2 + rng.next_below(4) as usize;
+        let reg = Registry {
+            instances: (0..n)
+                .map(|id| {
+                    BoardInstance::synthetic(
+                        id,
+                        "kws",
+                        50.0 + rng.next_f64() * 500.0,
+                        10.0,
+                        1.5,
+                    )
+                })
+                .collect(),
+        };
+        let rounds = 3 + rng.next_below(5) as usize;
+        let router = Router::new(&reg, Policy::RoundRobin, n * rounds + 1);
+        let mut counts = vec![0usize; n];
+        let mut depths = vec![0usize; n];
+        for _ in 0..n * rounds {
+            let i = router.select("kws", &depths).unwrap();
+            counts[i] += 1;
+            depths[i] += 1;
+        }
+        let (lo, hi) =
+            (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert!(
+            hi - lo <= 1,
+            "case {case}: round-robin skew {counts:?} over {n} replicas"
+        );
+    }
+}
+
+#[test]
+fn fleet_end_to_end_delivers_every_admitted_request() {
+    // Live fleet over synthetic boards: every admitted request must come
+    // back, under every policy, with stealing on and off.
+    let mut rng = SplitMix64::new(0xF1EE_0004);
+    let policies = [
+        Policy::RoundRobin,
+        Policy::LeastLoaded,
+        Policy::EnergyAware,
+        Policy::LatencySlo { slo_us: 1e9 },
+    ];
+    for (pi, policy) in policies.into_iter().enumerate() {
+        let reg = Registry {
+            instances: vec![
+                BoardInstance::synthetic(0, "kws", 80.0, 10.0, 1.5),
+                BoardInstance::synthetic(1, "kws", 250.0, 50.0, 1.8),
+                BoardInstance::synthetic(2, "ad", 40.0, 5.0, 1.5),
+                BoardInstance::synthetic(3, "ic", 300.0, 60.0, 1.6),
+            ],
+        };
+        let cfg = FleetConfig {
+            policy,
+            work_stealing: pi % 2 == 0,
+            ..Default::default()
+        };
+        let fleet = Fleet::start(reg, cfg).unwrap();
+        let handle = fleet.handle();
+        let n = 100;
+        let mut pending = Vec::new();
+        for _ in 0..n {
+            let task = TASKS[rng.next_below(3) as usize];
+            let x = vec![0.1f32; tinyml_codesign::data::feature_dim(task)];
+            loop {
+                match handle.submit(task, x.clone()) {
+                    Ok(rx) => {
+                        pending.push(rx);
+                        break;
+                    }
+                    Err(RouteError::Overloaded) => {
+                        std::thread::sleep(std::time::Duration::from_micros(100));
+                    }
+                    Err(e) => panic!("{policy:?}: unexpected rejection {e:?}"),
+                }
+            }
+        }
+        for rx in &pending {
+            rx.recv().expect("admitted request was dropped");
+        }
+        let summary = fleet.shutdown();
+        assert_eq!(summary.snapshot.served as usize, n, "{policy:?}");
+        assert_eq!(
+            summary.served_per_worker.iter().sum::<u64>() as usize,
+            n,
+            "{policy:?}"
+        );
     }
 }
