@@ -1,0 +1,242 @@
+//! Bench: packed quantized kernel core vs the naive f32 hot path it
+//! replaced (`data::template_logits` Vec-of-Vec dots with a fresh
+//! allocation per request; O(n·window) moving average).
+//!
+//! Self-checking: asserts the packed path is no slower than the naive
+//! baseline on every shape, ≥ 2x on the batched KWS shape (the serving
+//! plane's dominant traffic), and that packed argmax agrees with the
+//! f32 reference on realistic samples.  Writes `BENCH_kernels.json`
+//! (ns/sample, samples/sec, speedups) so later PRs have a recorded
+//! trajectory to beat.
+//!
+//! `BENCH_QUICK=1` (used by ci.sh) cuts the iteration counts ~10x but
+//! keeps every assertion.
+
+use std::time::Instant;
+use tinyml_codesign::data;
+use tinyml_codesign::kernels::{PackedLinear, ScratchArena, SmoothKernel};
+use tinyml_codesign::report::json::{num, obj, s, Value};
+use tinyml_codesign::runtime::argmax;
+
+const BATCH: usize = 64;
+
+fn quick() -> bool {
+    std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Best-of-`reps` wall time of `f` (ns), de-noising scheduler jitter.
+fn best_ns<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_nanos() as f64);
+    }
+    best
+}
+
+struct GemmResult {
+    task: &'static str,
+    rows: usize,
+    cols: usize,
+    naive_ns: f64,
+    packed1_ns: f64,
+    packed_batch_ns: f64,
+    agreement: f64,
+}
+
+/// One classification shape: naive per-sample vs packed single vs packed
+/// batched, all over the same `BATCH` realistic samples.
+fn bench_gemm(task: &'static str, n_out: usize, iters: usize) -> GemmResult {
+    let templates = data::class_templates_f32(task, n_out);
+    let cols = templates[0].len();
+    let packed = PackedLinear::pack(&templates, 1.0 / cols as f32);
+    let ts = data::test_set(task, BATCH, 0xBE2C);
+    let mut xbatch = Vec::with_capacity(BATCH * cols);
+    for s in &ts.samples {
+        xbatch.extend_from_slice(&s.x);
+    }
+    let mut scratch = ScratchArena::new();
+    let mut out1 = vec![0.0f32; n_out];
+    let mut outb = vec![0.0f32; BATCH * n_out];
+
+    // Equivalence self-check before timing: packed argmax must track the
+    // f32 reference on template-derived samples.
+    let mut agree = 0usize;
+    for s in &ts.samples {
+        let reference = data::template_logits(&s.x, &templates);
+        packed.gemv(&s.x, &mut out1, &mut scratch);
+        if argmax(&reference) == argmax(&out1) {
+            agree += 1;
+        }
+    }
+    let agreement = agree as f64 / BATCH as f64;
+
+    // Naive baseline: the seed's exact hot path — one Vec-of-Vec f32 dot
+    // pass plus a fresh allocation per request.
+    let naive_ns = best_ns(3, || {
+        for _ in 0..iters {
+            for smp in &ts.samples {
+                std::hint::black_box(data::template_logits(&smp.x, &templates));
+            }
+        }
+    }) / (iters * BATCH) as f64;
+
+    // Packed, one sample at a time (the EEMBC batch-1 path).
+    let packed1_ns = best_ns(3, || {
+        for _ in 0..iters {
+            for smp in &ts.samples {
+                packed.gemv(&smp.x, &mut out1, &mut scratch);
+                std::hint::black_box(out1[0]);
+            }
+        }
+    }) / (iters * BATCH) as f64;
+
+    // Packed, whole batch per call (the serve-loop path): one tiled walk
+    // over the weight matrix per batch.
+    let packed_batch_ns = best_ns(3, || {
+        for _ in 0..iters {
+            packed.gemm_batch(&xbatch, &mut outb, &mut scratch);
+            std::hint::black_box(outb[0]);
+        }
+    }) / (iters * BATCH) as f64;
+
+    GemmResult { task, rows: n_out, cols, naive_ns, packed1_ns, packed_batch_ns, agreement }
+}
+
+struct SmoothResult {
+    n: usize,
+    naive_ns: f64,
+    packed_ns: f64,
+}
+
+/// AD shape: O(n·window) naive moving average vs O(n) prefix-sum pass.
+fn bench_smooth(iters: usize) -> SmoothResult {
+    let ts = data::test_set("ad", BATCH, 0xBE2D);
+    let kernel = SmoothKernel::new(data::AD_SMOOTH_WINDOW);
+    let mut scratch = ScratchArena::new();
+    let mut out = vec![0.0f32; data::AD_DIM];
+    let naive_ns = best_ns(3, || {
+        for _ in 0..iters {
+            for s in &ts.samples {
+                std::hint::black_box(data::moving_average_f32(
+                    &s.x,
+                    data::AD_SMOOTH_WINDOW,
+                ));
+            }
+        }
+    }) / (iters * BATCH) as f64;
+    let packed_ns = best_ns(3, || {
+        for _ in 0..iters {
+            for s in &ts.samples {
+                kernel.smooth_into(&s.x, &mut out, &mut scratch);
+                std::hint::black_box(out[0]);
+            }
+        }
+    }) / (iters * BATCH) as f64;
+    SmoothResult { n: data::AD_DIM, naive_ns, packed_ns }
+}
+
+fn main() {
+    let quick = quick();
+    let iters = if quick { 10 } else { 100 };
+    println!(
+        "[bench] packed kernel core vs naive f32 hot path ({BATCH}-sample sets, \
+         {iters} iters{})",
+        if quick { ", quick mode" } else { "" }
+    );
+
+    let gemms = [
+        bench_gemm("kws", data::KWS_CLASSES, iters),
+        bench_gemm("ic", data::IC_CLASSES, iters),
+    ];
+    let smooth = bench_smooth(iters);
+
+    let mut shapes_json = Vec::new();
+    for g in &gemms {
+        let s1 = g.naive_ns / g.packed1_ns;
+        let sb = g.naive_ns / g.packed_batch_ns;
+        println!(
+            "[bench] {:<3} {:>3}x{:<5} naive {:>8.1} ns/smp | packed-1 {:>8.1} ({s1:>5.2}x) | \
+             packed-batch {:>8.1} ({sb:>5.2}x) | argmax agreement {:.2}",
+            g.task, g.rows, g.cols, g.naive_ns, g.packed1_ns, g.packed_batch_ns, g.agreement
+        );
+        shapes_json.push(obj(vec![
+            ("task", s(g.task)),
+            ("rows", num(g.rows as f64)),
+            ("cols", num(g.cols as f64)),
+            ("batch", num(BATCH as f64)),
+            ("naive_ns_per_sample", num(g.naive_ns)),
+            ("packed_single_ns_per_sample", num(g.packed1_ns)),
+            ("packed_batch_ns_per_sample", num(g.packed_batch_ns)),
+            ("packed_single_speedup", num(s1)),
+            ("packed_batch_speedup", num(sb)),
+            ("samples_per_sec_packed_batch", num(1e9 / g.packed_batch_ns)),
+            ("argmax_agreement", num(g.agreement)),
+        ]));
+    }
+    let smooth_speedup = smooth.naive_ns / smooth.packed_ns;
+    println!(
+        "[bench] ad  smooth({:>3})  naive {:>8.1} ns/smp | prefix-sum {:>8.1} ({smooth_speedup:>5.2}x)",
+        smooth.n, smooth.naive_ns, smooth.packed_ns
+    );
+
+    let doc = obj(vec![
+        ("bench", s("kernels")),
+        ("quick", Value::Bool(quick)),
+        ("shapes", Value::Arr(shapes_json)),
+        (
+            "smooth",
+            obj(vec![
+                ("task", s("ad")),
+                ("n", num(smooth.n as f64)),
+                ("window", num(data::AD_SMOOTH_WINDOW as f64)),
+                ("naive_ns_per_sample", num(smooth.naive_ns)),
+                ("packed_ns_per_sample", num(smooth.packed_ns)),
+                ("samples_per_sec_packed", num(1e9 / smooth.packed_ns)),
+                ("speedup", num(smooth_speedup)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_kernels.json", doc.to_json()).expect("write BENCH_kernels.json");
+    println!("[bench] wrote BENCH_kernels.json");
+
+    // Self-checks: equivalence first, then the perf floor.
+    for g in &gemms {
+        assert!(
+            g.agreement >= 0.9,
+            "{}: packed argmax agreement {:.2} < 0.90",
+            g.task,
+            g.agreement
+        );
+        assert!(
+            g.naive_ns / g.packed1_ns >= 0.9,
+            "{}: packed single-sample path slower than naive ({:.1} vs {:.1} ns)",
+            g.task,
+            g.packed1_ns,
+            g.naive_ns
+        );
+        assert!(
+            g.naive_ns / g.packed_batch_ns >= 1.0,
+            "{}: packed batched path slower than naive ({:.1} vs {:.1} ns)",
+            g.task,
+            g.packed_batch_ns,
+            g.naive_ns
+        );
+    }
+    let kws = &gemms[0];
+    let kws_speedup = kws.naive_ns / kws.packed_batch_ns;
+    assert!(
+        kws_speedup >= 2.0,
+        "KWS packed batched speedup {kws_speedup:.2}x < 2x floor"
+    );
+    assert!(
+        smooth_speedup >= 1.0,
+        "prefix-sum smoothing slower than naive ({:.1} vs {:.1} ns)",
+        smooth.packed_ns,
+        smooth.naive_ns
+    );
+    println!(
+        "[bench] OK: packed >= naive everywhere, KWS batched {kws_speedup:.2}x (>= 2x floor)"
+    );
+}

@@ -24,8 +24,22 @@ run cargo build --release
 run cargo test -q
 
 if [ "${1:-}" = "fast" ]; then
-    echo "==> skipping fmt/clippy (fast mode)"
+    echo "==> skipping kernels bench, pjrt check, fmt/clippy (fast mode)"
     exit 0
+fi
+
+# Kernel-core self-check: quick mode keeps the perf-floor and
+# equivalence assertions but cuts iterations ~10x.  Emits
+# BENCH_kernels.json (the recorded perf trajectory).
+run env BENCH_QUICK=1 cargo bench --bench kernels
+
+# Keep the feature-gated PJRT backend compiling when its vendored xla
+# dependency is enabled in Cargo.toml (it cannot resolve otherwise, so
+# skip with a warning on the offline image).
+if grep -Eq '^[[:space:]]*xla[[:space:]]*=' Cargo.toml; then
+    run cargo check --features pjrt
+else
+    echo "==> xla dependency not enabled in Cargo.toml; skipping cargo check --features pjrt" >&2
 fi
 
 if cargo fmt --version >/dev/null 2>&1; then

@@ -60,9 +60,11 @@ pub trait BatchExecutor {
     fn input_elems(&self) -> usize;
     /// Output elements per sample.
     fn num_outputs(&self) -> usize;
-    /// Execute one padded batch of `device_batch * input_elems` values;
-    /// returns `device_batch * num_outputs` values.
-    fn execute(&mut self, x: &[f32]) -> Result<Vec<f32>>;
+    /// Execute one padded batch of `device_batch * input_elems` values
+    /// into a caller-owned buffer of `device_batch * num_outputs` values.
+    /// The serve loop reuses both buffers across batches, so the steady
+    /// state allocates nothing on the device path.
+    fn execute(&mut self, x: &[f32], out: &mut [f32]) -> Result<()>;
 }
 
 /// [`BatchExecutor`] over the runtime's [`LoadedModel`].
@@ -84,8 +86,8 @@ impl BatchExecutor for ModelExecutor<'_> {
         self.model.manifest.num_outputs
     }
 
-    fn execute(&mut self, x: &[f32]) -> Result<Vec<f32>> {
-        self.model.infer_batch(self.rt, x)
+    fn execute(&mut self, x: &[f32], out: &mut [f32]) -> Result<()> {
+        self.model.infer_batch_into(self.rt, x, out)
     }
 }
 
@@ -141,6 +143,12 @@ pub fn serve_with<E: BatchExecutor>(
     let feat = exec.input_elems();
     let n_out = exec.num_outputs();
     let mut served = 0u64;
+    // Batch staging buffers, allocated once and reused for every batch:
+    // together with the executor-side scratch arena this makes the
+    // steady-state serve loop allocation-free up to the per-request
+    // reply vectors (which cross a channel and must be owned).
+    let mut x = vec![0.0f32; device_batch * feat];
+    let mut out = vec![0.0f32; device_batch * n_out];
 
     loop {
         // Block for the first request of a batch.
@@ -152,13 +160,14 @@ pub fn serve_with<E: BatchExecutor>(
             rx.recv_timeout(deadline.saturating_duration_since(now)).ok()
         });
 
-        // Pad to the device batch and execute once.
-        let mut x = vec![0.0f32; device_batch * feat];
+        // Pad to the device batch and execute once.  Only the tail needs
+        // zeroing — the head is overwritten by this batch's requests.
         for (i, (req, _)) in batch.iter().enumerate() {
             x[i * feat..(i + 1) * feat].copy_from_slice(&req.x);
         }
+        x[batch.len() * feat..].fill(0.0);
         let exec_start = Instant::now();
-        let out = exec.execute(&x)?;
+        exec.execute(&x, &mut out)?;
         let exec_us = exec_start.elapsed().as_micros();
         for (i, (req, t0)) in batch.iter().enumerate() {
             let slice = out[i * n_out..(i + 1) * n_out].to_vec();
@@ -230,8 +239,11 @@ mod tests {
             2
         }
 
-        fn execute(&mut self, x: &[f32]) -> Result<Vec<f32>> {
-            Ok(x.iter().map(|v| v * 2.0).collect())
+        fn execute(&mut self, x: &[f32], out: &mut [f32]) -> Result<()> {
+            for (o, v) in out.iter_mut().zip(x) {
+                *o = v * 2.0;
+            }
+            Ok(())
         }
     }
 

@@ -44,9 +44,13 @@ fn moving_average(x: &[f64], window: usize) -> Vec<f64> {
         .collect()
 }
 
-/// Template-matching logits shared by the surrogate executors
-/// (`runtime::sim`, `fleet::worker`) so fleet replies cannot drift from
-/// engine replies: `dot(x, template) / dim` per class.
+/// Template-matching logits, `dot(x, template) / dim` per class.
+///
+/// This is the *naive f32 reference* for the packed quantized kernels in
+/// [`crate::kernels`]: the surrogate executors (`runtime::sim`,
+/// `fleet::worker`) now run `PackedLinear` packed from the same
+/// templates, and the kernel property tests + `benches/kernels.rs`
+/// check against (and race against) this implementation.
 pub fn template_logits(x: &[f32], templates: &[Vec<f32>]) -> Vec<f32> {
     let scale = 1.0 / x.len().max(1) as f32;
     templates
@@ -69,9 +73,10 @@ pub fn class_templates_f32(task: &str, n_out: usize) -> Vec<Vec<f32>> {
         .collect()
 }
 
-/// f32 variant of the same kernel, shared by the surrogate executors
-/// (`runtime::sim`, `fleet::worker`) so the AD reconstruction cannot
-/// drift between them.
+/// f32 variant of the same kernel — the *naive O(n·window) reference*
+/// for [`crate::kernels::SmoothKernel`], which both surrogate executors
+/// now run; the kernel property tests assert exact agreement on
+/// grid-quantized inputs.
 pub fn moving_average_f32(x: &[f32], window: usize) -> Vec<f32> {
     let n = x.len();
     let half = window / 2;

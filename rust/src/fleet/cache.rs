@@ -1,0 +1,182 @@
+//! Result cache: a bounded memo of (task, quantized input) → output
+//! sitting **in front of** the router (the ROADMAP "Result caching"
+//! open item).
+//!
+//! Repeated requests — identical or near-identical after quantizing the
+//! input to a 1/256 grid (comfortably finer than the i8 grid the packed
+//! kernels themselves execute at) — skip routing, queueing, and device
+//! execution entirely: the submit path answers from the memo and the
+//! boards never see the request.  Workers populate the memo after
+//! executing, keyed by a digest the submit path computed.
+//!
+//! The key is a 64-bit FNV-1a digest of the task name and the quantized
+//! input.  A 64-bit digest can collide in principle; at fleet request
+//! volumes the probability is negligible (birthday bound ~n²/2⁶⁵) and
+//! this is the standard memo-cache trade.  Eviction is FIFO — the memo
+//! is a bounded buffer, not an LRU — which keeps the insert path to one
+//! `VecDeque` operation under the lock.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Hit/miss counters plus occupancy, for telemetry and `report::json`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+    pub cap: usize,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Inner {
+    map: HashMap<u64, (Vec<f32>, usize)>,
+    /// Insertion order for FIFO eviction (one entry per live key).
+    fifo: VecDeque<u64>,
+}
+
+/// Bounded (task, quantized-input) → (output, top1) memo.
+pub struct ResultCache {
+    cap: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+#[inline]
+fn fnv_byte(h: u64, b: u8) -> u64 {
+    (h ^ b as u64).wrapping_mul(0x100000001b3)
+}
+
+impl ResultCache {
+    pub fn new(cap: usize) -> Self {
+        ResultCache {
+            cap: cap.max(1),
+            inner: Mutex::new(Inner { map: HashMap::new(), fifo: VecDeque::new() }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Digest of (task, input quantized to a 1/256 grid).  Pure and
+    /// cheap: one pass over the input, no allocation.
+    pub fn key(task: &str, x: &[f32]) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        for b in task.bytes() {
+            h = fnv_byte(h, b);
+        }
+        h = fnv_byte(h, 0xFF); // separator: task name cannot bleed into data
+        for &v in x {
+            // Saturating float→int cast: NaN → 0, ±inf → extremes, all
+            // deterministic.
+            let q = (v * 256.0).round() as i32;
+            for b in q.to_le_bytes() {
+                h = fnv_byte(h, b);
+            }
+        }
+        h
+    }
+
+    /// Look up a key, counting hits.  Misses are counted at
+    /// [`Self::insert`] time instead, so a submit that is rejected by
+    /// admission control (and retried, possibly many times) does not
+    /// inflate the miss counter: `hits + misses` stays equal to the
+    /// cached-path traffic that actually completed.
+    pub fn get(&self, key: u64) -> Option<(Vec<f32>, usize)> {
+        let inner = self.inner.lock().unwrap();
+        match inner.map.get(&key) {
+            Some((out, top1)) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some((out.clone(), *top1))
+            }
+            None => None,
+        }
+    }
+
+    /// Insert (or refresh) an entry, evicting FIFO past the capacity.
+    /// Each insert is one executed cache miss (see [`Self::get`]).
+    pub fn insert(&self, key: u64, output: &[f32], top1: usize) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        if inner.map.insert(key, (output.to_vec(), top1)).is_none() {
+            inner.fifo.push_back(key);
+            while inner.map.len() > self.cap {
+                let Some(old) = inner.fifo.pop_front() else { break };
+                inner.map.remove(&old);
+            }
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.inner.lock().unwrap().map.len(),
+            cap: self.cap,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_hits_and_misses() {
+        let c = ResultCache::new(8);
+        let k = ResultCache::key("kws", &[0.1, 0.2]);
+        assert!(c.get(k).is_none());
+        c.insert(k, &[1.0, 2.0], 1);
+        let (out, top1) = c.get(k).expect("hit after insert");
+        assert_eq!(out, vec![1.0, 2.0]);
+        assert_eq!(top1, 1);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn key_quantizes_and_separates_tasks() {
+        let x = vec![0.5f32, -1.25, 3.0];
+        let mut y = x.clone();
+        y[1] += 1e-6; // below the 1/256 grid: same key
+        assert_eq!(ResultCache::key("kws", &x), ResultCache::key("kws", &y));
+        let mut z = x.clone();
+        z[1] += 0.5; // well above the grid: different key
+        assert_ne!(ResultCache::key("kws", &x), ResultCache::key("kws", &z));
+        assert_ne!(ResultCache::key("kws", &x), ResultCache::key("ic", &x));
+    }
+
+    #[test]
+    fn fifo_eviction_bounds_entries() {
+        let c = ResultCache::new(4);
+        for i in 0..20u32 {
+            c.insert(ResultCache::key("kws", &[i as f32]), &[i as f32], 0);
+            assert!(c.stats().entries <= 4, "at insert {i}");
+        }
+        // Oldest evicted, newest retained.
+        assert!(c.get(ResultCache::key("kws", &[0.0])).is_none());
+        assert!(c.get(ResultCache::key("kws", &[19.0])).is_some());
+    }
+
+    #[test]
+    fn reinsert_refreshes_without_duplicating() {
+        let c = ResultCache::new(2);
+        let k = ResultCache::key("ad", &[1.0]);
+        c.insert(k, &[1.0], 0);
+        c.insert(k, &[2.0], 0);
+        assert_eq!(c.stats().entries, 1);
+        assert_eq!(c.get(k).unwrap().0, vec![2.0]);
+    }
+}

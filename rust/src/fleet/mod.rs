@@ -13,7 +13,10 @@
 //! window as the single-model engine, steal work from same-task replicas,
 //! and hold the (simulated) accelerator for the dataflow-predicted device
 //! time.  [`telemetry::Telemetry`] aggregates the result into fleet-level
-//! p50/p99/throughput/energy.
+//! p50/p99/throughput/energy.  An optional bounded [`cache::ResultCache`]
+//! in front of the router memoizes (task, quantized-input) → output so
+//! repeated requests skip the boards entirely, with hit/miss counters in
+//! the snapshot.
 //!
 //! ```no_run
 //! use tinyml_codesign::fleet::{Fleet, FleetConfig, Registry};
@@ -28,11 +31,13 @@
 //! println!("{}", summary.render());
 //! ```
 
+pub mod cache;
 pub mod registry;
 pub mod router;
 pub mod telemetry;
 pub mod worker;
 
+pub use cache::{CacheStats, ResultCache};
 pub use registry::{BoardInstance, Registry};
 pub use router::{Policy, RouteError, Router};
 pub use telemetry::{FleetSnapshot, Telemetry};
@@ -57,6 +62,11 @@ pub struct FleetConfig {
     pub time_scale: f64,
     /// Let idle workers steal queued requests from same-task replicas.
     pub work_stealing: bool,
+    /// Result-cache capacity in entries (0 = disabled).  When on,
+    /// repeated (task, quantized-input) requests are answered in front
+    /// of the router without touching a board; cache hits carry
+    /// `batch_size == 0` in their [`Reply`].
+    pub cache_cap: usize,
 }
 
 impl Default for FleetConfig {
@@ -67,6 +77,7 @@ impl Default for FleetConfig {
             batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(100) },
             time_scale: 1.0,
             work_stealing: true,
+            cache_cap: 0,
         }
     }
 }
@@ -77,6 +88,7 @@ pub struct Fleet {
     router: Arc<Router>,
     queues: Vec<Arc<BoardQueue>>,
     telemetry: Arc<Telemetry>,
+    cache: Option<Arc<ResultCache>>,
     workers: Vec<std::thread::JoinHandle<u64>>,
 }
 
@@ -105,6 +117,8 @@ impl Fleet {
             .map(|_| Arc::new(BoardQueue::new(config.queue_cap)))
             .collect();
         let telemetry = Arc::new(Telemetry::new(registry.len()));
+        let cache = (config.cache_cap > 0)
+            .then(|| Arc::new(ResultCache::new(config.cache_cap)));
         let mut workers = Vec::new();
         for inst in &registry.instances {
             let inst = inst.clone();
@@ -117,16 +131,17 @@ impl Fleet {
                 .map(|i| queues[i].clone())
                 .collect();
             let telemetry = telemetry.clone();
+            let cache = cache.clone();
             let wcfg = WorkerConfig {
                 batch: config.batch,
                 time_scale: config.time_scale,
                 work_stealing: config.work_stealing,
             };
             workers.push(std::thread::spawn(move || {
-                worker::run_worker(&inst, &own, &peers, &wcfg, &telemetry)
+                worker::run_worker(&inst, &own, &peers, &wcfg, &telemetry, cache.as_deref())
             }));
         }
-        Ok(Fleet { registry, router, queues, telemetry, workers })
+        Ok(Fleet { registry, router, queues, telemetry, cache, workers })
     }
 
     /// Cloneable submission handle.
@@ -134,6 +149,7 @@ impl Fleet {
         FleetHandle {
             router: self.router.clone(),
             queues: self.queues.clone(),
+            cache: self.cache.clone(),
         }
     }
 
@@ -143,7 +159,7 @@ impl Fleet {
 
     /// Current telemetry without stopping the fleet.
     pub fn snapshot(&self) -> FleetSnapshot {
-        self.telemetry.snapshot(&self.registry)
+        snapshot_with_cache(&self.telemetry, &self.registry, self.cache.as_deref())
     }
 
     /// Close every queue, drain, join workers, and return the final
@@ -155,10 +171,28 @@ impl Fleet {
         let served_per_worker: Vec<u64> =
             self.workers.into_iter().map(|w| w.join().unwrap_or(0)).collect();
         FleetSummary {
-            snapshot: self.telemetry.snapshot(&self.registry),
+            snapshot: snapshot_with_cache(
+                &self.telemetry,
+                &self.registry,
+                self.cache.as_deref(),
+            ),
             served_per_worker,
         }
     }
+}
+
+/// Telemetry snapshot with the result-cache counters grafted on (the
+/// cache lives outside `Telemetry`, which stays per-board).
+fn snapshot_with_cache(
+    telemetry: &Telemetry,
+    registry: &Registry,
+    cache: Option<&ResultCache>,
+) -> FleetSnapshot {
+    let mut snap = telemetry.snapshot(registry);
+    if let Some(c) = cache {
+        snap.cache = c.stats();
+    }
+    snap
 }
 
 /// What [`Fleet::shutdown`] returns.
@@ -178,6 +212,7 @@ impl FleetSummary {
 pub struct FleetHandle {
     router: Arc<Router>,
     queues: Vec<Arc<BoardQueue>>,
+    cache: Option<Arc<ResultCache>>,
 }
 
 impl FleetHandle {
@@ -187,18 +222,41 @@ impl FleetHandle {
 
     /// Route + enqueue; returns the reply channel without blocking on
     /// execution.  Admission control surfaces as `Err(RouteError)`.
+    /// With result caching on, a repeated (task, quantized-input) is
+    /// answered here — in front of the router — with `batch_size == 0`
+    /// marking the cache hit; the boards never see it.
     pub fn submit(
         &self,
         task: &str,
         x: Vec<f32>,
     ) -> Result<mpsc::Receiver<Reply>, RouteError> {
+        let mut cache_key = None;
+        if let Some(cache) = &self.cache {
+            let key = ResultCache::key(task, &x);
+            if let Some((output, top1)) = cache.get(key) {
+                let (tx, rx) = mpsc::channel();
+                let _ = tx.send(Reply {
+                    output,
+                    top1,
+                    batch_size: 0,
+                    queue_us: 0,
+                    exec_us: 0,
+                });
+                return Ok(rx);
+            }
+            cache_key = Some(key);
+        }
         // select() reads a depth snapshot; the push re-checks the bound
         // under the queue lock, so a racing submit can at worst bounce to
         // the next replica — never overfill.  try_push hands the request
         // back on failure, so the input is never copied.
         let (tx, rx) = mpsc::channel();
-        let mut req =
-            FleetRequest { x, reply: tx, enqueued: std::time::Instant::now() };
+        let mut req = FleetRequest {
+            x,
+            reply: tx,
+            enqueued: std::time::Instant::now(),
+            cache_key,
+        };
         for _ in 0..3 {
             let idx = self.router.select(task, &self.depths())?;
             match self.queues[idx].try_push(req) {
@@ -316,6 +374,37 @@ mod tests {
         }
         let summary = fleet.shutdown();
         assert_eq!(summary.snapshot.served as usize, accepted);
+    }
+
+    #[test]
+    fn result_cache_answers_repeats_in_front_of_the_router() {
+        let reg = Registry {
+            instances: vec![BoardInstance::synthetic(0, "kws", 80.0, 10.0, 1.5)],
+        };
+        let cfg = FleetConfig { cache_cap: 64, ..Default::default() };
+        let fleet = Fleet::start(reg, cfg).unwrap();
+        let handle = fleet.handle();
+        let x = input_for("kws");
+        // First round trip executes on the board and populates the memo.
+        let first = handle.infer("kws", x.clone()).unwrap();
+        assert!(first.batch_size >= 1, "first request must hit a board");
+        // Repeat must be a hit: same output, batch_size 0 (no board).
+        let hit = handle.infer("kws", x.clone()).unwrap();
+        assert_eq!(hit.output, first.output);
+        assert_eq!(hit.top1, first.top1);
+        assert_eq!(hit.batch_size, 0, "repeat should be served from cache");
+        // A different input misses.
+        let mut y = x.clone();
+        y[0] += 1.0;
+        let other = handle.infer("kws", y).unwrap();
+        assert!(other.batch_size >= 1);
+        let summary = fleet.shutdown();
+        assert_eq!(summary.snapshot.served, 2, "cache hit must not reach a board");
+        assert_eq!(summary.snapshot.cache.hits, 1);
+        assert_eq!(summary.snapshot.cache.misses, 2);
+        assert!(summary.snapshot.cache.entries >= 1);
+        let json = summary.snapshot.to_json().to_json();
+        assert!(json.contains("\"cache_hits\""), "{json}");
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! aggregated into p50/p99 latency, throughput, energy per inference, and
 //! queue depths — renderable as a table or as [`crate::report::json`].
 
+use super::cache::CacheStats;
 use super::registry::Registry;
 use crate::data::prng::SplitMix64;
 use crate::report::json::{num, obj, s, Value};
@@ -151,6 +152,7 @@ impl Telemetry {
             p50_us: weighted_percentile(&weighted, 0.50),
             p99_us: weighted_percentile(&weighted, 0.99),
             energy_per_inference_uj: if served > 0 { energy / served as f64 } else { 0.0 },
+            cache: CacheStats::default(),
             per_board,
         }
     }
@@ -208,6 +210,10 @@ pub struct FleetSnapshot {
     pub p50_us: f64,
     pub p99_us: f64,
     pub energy_per_inference_uj: f64,
+    /// Result-cache counters (all zero when caching is disabled);
+    /// `served` counts only board-executed requests, so total traffic is
+    /// `served + cache.hits`.
+    pub cache: CacheStats,
     pub per_board: Vec<BoardSnapshot>,
 }
 
@@ -220,6 +226,10 @@ impl FleetSnapshot {
             ("p50_us", num(self.p50_us)),
             ("p99_us", num(self.p99_us)),
             ("energy_per_inference_uj", num(self.energy_per_inference_uj)),
+            ("cache_hits", num(self.cache.hits as f64)),
+            ("cache_misses", num(self.cache.misses as f64)),
+            ("cache_entries", num(self.cache.entries as f64)),
+            ("cache_hit_rate", num(self.cache.hit_rate())),
             (
                 "boards",
                 Value::Arr(
@@ -263,6 +273,18 @@ impl FleetSnapshot {
             self.energy_per_inference_uj
         )
         .ok();
+        if self.cache.hits + self.cache.misses > 0 {
+            writeln!(
+                out,
+                "  cache: {} hits / {} misses ({:.1}% hit rate, {} of {} entries)",
+                self.cache.hits,
+                self.cache.misses,
+                100.0 * self.cache.hit_rate(),
+                self.cache.entries,
+                self.cache.cap
+            )
+            .ok();
+        }
         writeln!(
             out,
             "  {:<26} {:>6} {:>7} {:>7} {:>9} {:>9} {:>9} {:>6} {:>6}",

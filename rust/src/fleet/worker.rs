@@ -9,17 +9,23 @@
 //! batch by holding the board for the dataflow-simulated device time:
 //! `latency + (n-1) * ii`, scaled by the fleet's `time_scale`.
 //!
-//! Outputs come from the same deterministic surrogate family as
-//! `runtime::sim` (template matching / smoothing autoencoder), so replies
-//! carry plausible logits without a PJRT dependency.
+//! Outputs come from the packed quantized kernel core
+//! ([`crate::kernels`]): each task's class templates are quantized and
+//! packed **once per process** behind a `OnceLock` and shared by every
+//! replica worker (the seed rebuilt the f32 templates per replica
+//! thread), and each worker drives the shared matrix with its own
+//! scratch arena and staging buffers, reused across batches — the
+//! steady-state serve loop allocates only the per-request reply vectors.
 
+use super::cache::ResultCache;
 use super::registry::BoardInstance;
 use super::telemetry::Telemetry;
 use crate::coordinator::engine::{fill_window, BatchPolicy, Reply};
+use crate::kernels::{PackedLinear, ScratchArena, SmoothKernel};
 use crate::runtime::argmax;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 /// One request in flight inside the fleet.
@@ -27,6 +33,9 @@ pub struct FleetRequest {
     pub x: Vec<f32>,
     pub reply: mpsc::Sender<Reply>,
     pub enqueued: Instant,
+    /// Set by the submit path when result caching is on: the worker
+    /// inserts its output under this key after executing.
+    pub cache_key: Option<u64>,
 }
 
 /// Bounded MPMC queue in front of one board (router pushes, the owning
@@ -154,12 +163,40 @@ impl BoardQueue {
     }
 }
 
+/// Per-task packed class templates, quantized once per process and
+/// shared by every replica worker of that task.
+static PACKED_KWS: OnceLock<Arc<PackedLinear>> = OnceLock::new();
+static PACKED_IC: OnceLock<Arc<PackedLinear>> = OnceLock::new();
+
+/// `None` for any task without a template matrix (ad, or a hand-built
+/// registry's nonstandard task name) — the caller falls back to the
+/// smoothing path, which tolerates any input length.
+fn shared_packed_templates(task: &str) -> Option<Arc<PackedLinear>> {
+    let (cell, n_out, feat) = match task {
+        "kws" => (&PACKED_KWS, crate::data::KWS_CLASSES, crate::data::KWS_DIM),
+        "ic" => (&PACKED_IC, crate::data::IC_CLASSES, crate::data::IC_DIM),
+        _ => return None,
+    };
+    Some(
+        cell.get_or_init(|| {
+            Arc::new(PackedLinear::pack(
+                &crate::data::class_templates_f32(task, n_out),
+                1.0 / feat as f32,
+            ))
+        })
+        .clone(),
+    )
+}
+
 /// Deterministic surrogate forward for a task (same family as
 /// `runtime::sim`, minus the training dynamics — fleet boards serve a
-/// frozen deployed model).
+/// frozen deployed model).  The packed weight matrix is shared across
+/// replicas; scratch and staging are private to this executor.
 pub struct SimBoardExecutor {
-    task: String,
-    templates: Vec<Vec<f32>>,
+    /// Shared packed class templates (`None` for AD, which smooths).
+    packed: Option<Arc<PackedLinear>>,
+    smooth: SmoothKernel,
+    scratch: ScratchArena,
     n_out: usize,
     feat: usize,
 }
@@ -171,12 +208,14 @@ impl SimBoardExecutor {
             "ic" => (crate::data::IC_CLASSES, crate::data::IC_DIM),
             _ => (crate::data::AD_DIM, crate::data::AD_DIM),
         };
-        let templates = if task == "ad" {
-            Vec::new()
-        } else {
-            crate::data::class_templates_f32(task, n_out)
-        };
-        SimBoardExecutor { task: task.to_string(), templates, n_out, feat }
+        let packed = shared_packed_templates(task);
+        SimBoardExecutor {
+            packed,
+            smooth: SmoothKernel::new(crate::data::AD_SMOOTH_WINDOW),
+            scratch: ScratchArena::new(),
+            n_out,
+            feat,
+        }
     }
 
     pub fn input_elems(&self) -> usize {
@@ -187,26 +226,71 @@ impl SimBoardExecutor {
         self.n_out
     }
 
-    pub fn forward1(&self, x: &[f32]) -> Vec<f32> {
-        if self.task == "ad" {
-            // Reconstruction: the deployed autoencoder returns the
-            // denoised spectral profile (9-tap smoothing).
-            crate::data::moving_average_f32(x, crate::data::AD_SMOOTH_WINDOW)
-        } else {
-            crate::data::template_logits(x, &self.templates)
+    /// Forward `n` contiguous samples into `out` (`n * num_outputs`).
+    /// One tiled pass over the shared packed weights per call.
+    pub fn forward_batch_into(&mut self, x: &[f32], n: usize, out: &mut [f32]) {
+        debug_assert_eq!(x.len(), n * self.feat);
+        debug_assert_eq!(out.len(), n * self.n_out);
+        match &self.packed {
+            Some(p) => p.gemm_batch(x, out, &mut self.scratch),
+            None => {
+                // Reconstruction: the deployed autoencoder returns the
+                // denoised spectral profile (9-tap smoothing).
+                for s in 0..n {
+                    self.smooth.smooth_into(
+                        &x[s * self.feat..(s + 1) * self.feat],
+                        &mut out[s * self.n_out..(s + 1) * self.n_out],
+                        &mut self.scratch,
+                    );
+                }
+            }
         }
+    }
+
+    /// Single-sample convenience wrapper (tests, spot checks).
+    pub fn forward1(&mut self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n_out];
+        self.forward_batch_into(x, 1, &mut out);
+        out
     }
 }
 
 /// Hold the thread for `dur` with µs precision (plain `sleep` alone is
-/// too coarse for microsecond-class accelerator latencies).
+/// too coarse for microsecond-class accelerator latencies).  The
+/// busy-wait is bounded in three stages: far out the thread *sleeps*
+/// (leaving slack for timer jitter), in the mid window it yields to the
+/// scheduler, and only the final `SPIN_WINDOW` spins — with periodic
+/// yields in case of oversubscription — so boards simulating long
+/// device times don't pin cores at 100%.
 pub fn precise_sleep(dur: Duration) {
     let deadline = Instant::now() + dur;
-    if dur > Duration::from_millis(2) {
-        std::thread::sleep(dur - Duration::from_millis(1));
-    }
-    while Instant::now() < deadline {
-        std::hint::spin_loop();
+    // Inside this remaining-time window, spin for µs precision; a
+    // yield's latency (~1 µs) cannot overshoot meaningfully above it.
+    const SPIN_WINDOW: Duration = Duration::from_micros(50);
+    // Above this, hand the core back to the OS: sleep up to ~200 µs
+    // short of the deadline (Linux timer slack is well under that).
+    const SLEEP_WINDOW: Duration = Duration::from_micros(500);
+    const SLEEP_SLACK: Duration = Duration::from_micros(200);
+    const SPINS_PER_YIELD: u32 = 4096;
+    let mut spins = 0u32;
+    loop {
+        let now = Instant::now();
+        if now >= deadline {
+            return;
+        }
+        let remaining = deadline - now;
+        if remaining > SLEEP_WINDOW {
+            std::thread::sleep(remaining - SLEEP_SLACK);
+        } else if remaining > SPIN_WINDOW {
+            std::thread::yield_now();
+        } else {
+            std::hint::spin_loop();
+            spins += 1;
+            if spins >= SPINS_PER_YIELD {
+                spins = 0;
+                std::thread::yield_now();
+            }
+        }
     }
 }
 
@@ -227,8 +311,14 @@ pub fn run_worker(
     peers: &[Arc<BoardQueue>],
     cfg: &WorkerConfig,
     telemetry: &Telemetry,
+    cache: Option<&ResultCache>,
 ) -> u64 {
-    let exec = SimBoardExecutor::for_task(&inst.task);
+    let mut exec = SimBoardExecutor::for_task(&inst.task);
+    let feat = exec.input_elems();
+    let n_out = exec.num_outputs();
+    // Batch staging, reused across batches (grown to high-water mark).
+    let mut xbuf: Vec<f32> = Vec::new();
+    let mut obuf: Vec<f32> = Vec::new();
     let mut served = 0u64;
     // How long to wait on the own queue before checking peers for work
     // to steal (bounds the idle-replica pickup latency).
@@ -284,11 +374,35 @@ pub fn run_worker(
         let exec_us = exec_start.elapsed().as_micros();
         let energy_uj = inst.power_w * device_s * 1e6;
 
+        // One tiled pass over the shared packed weights for the whole
+        // batch (the seed re-walked the f32 template set per request).
+        if xbuf.len() < n * feat {
+            xbuf.resize(n * feat, 0.0);
+        }
+        if obuf.len() < n * n_out {
+            obuf.resize(n * n_out, 0.0);
+        }
+        for (i, req) in batch.iter().enumerate() {
+            // No length validation exists on the submit path, so degrade
+            // gracefully on malformed inputs: truncate long ones, zero-pad
+            // short ones (the logit scale stays 1/feat — deterministic
+            // garbage out, never a panic).
+            let m = req.x.len().min(feat);
+            xbuf[i * feat..i * feat + m].copy_from_slice(&req.x[..m]);
+            xbuf[i * feat + m..(i + 1) * feat].fill(0.0);
+        }
+        exec.forward_batch_into(&xbuf[..n * feat], n, &mut obuf[..n * n_out]);
+
         let mut latencies_us = Vec::with_capacity(n);
         let mut queue_us_sum = 0u128;
-        for req in &batch {
-            let out = exec.forward1(&req.x);
+        for (i, req) in batch.iter().enumerate() {
+            let out = obuf[i * n_out..(i + 1) * n_out].to_vec();
             let top1 = argmax(&out);
+            if let (Some(c), Some(key)) = (cache, req.cache_key) {
+                // Insert before replying so a caller that observed the
+                // reply is guaranteed to hit on the next submit.
+                c.insert(key, &out, top1);
+            }
             let queue_us = exec_start.duration_since(req.enqueued).as_micros();
             queue_us_sum += queue_us;
             latencies_us.push(req.enqueued.elapsed().as_micros() as f64);
@@ -321,7 +435,12 @@ mod tests {
     fn queue_bounds_are_strict() {
         let q = BoardQueue::new(2);
         let (tx, _rx) = mpsc::channel();
-        let mk = || FleetRequest { x: vec![0.0], reply: tx.clone(), enqueued: Instant::now() };
+        let mk = || FleetRequest {
+            x: vec![0.0],
+            reply: tx.clone(),
+            enqueued: Instant::now(),
+            cache_key: None,
+        };
         assert!(q.try_push(mk()).is_ok());
         assert!(q.try_push(mk()).is_ok());
         assert!(q.try_push(mk()).is_err(), "cap 2 must reject the 3rd");
@@ -336,15 +455,42 @@ mod tests {
 
     #[test]
     fn sim_executor_shapes_and_determinism() {
-        let e = SimBoardExecutor::for_task("kws");
+        let mut e = SimBoardExecutor::for_task("kws");
         let x = vec![0.3f32; e.input_elems()];
         let a = e.forward1(&x);
         let b = e.forward1(&x);
         assert_eq!(a.len(), 12);
         assert_eq!(a, b);
-        let ad = SimBoardExecutor::for_task("ad");
+        let mut ad = SimBoardExecutor::for_task("ad");
         let x = vec![0.5f32; ad.input_elems()];
         assert_eq!(ad.forward1(&x).len(), 128);
+    }
+
+    #[test]
+    fn replicas_share_one_packed_matrix() {
+        let a = SimBoardExecutor::for_task("kws");
+        let b = SimBoardExecutor::for_task("kws");
+        let (pa, pb) = (a.packed.as_ref().unwrap(), b.packed.as_ref().unwrap());
+        assert!(Arc::ptr_eq(pa, pb), "replicas must share packed weights");
+    }
+
+    #[test]
+    fn batched_forward_matches_single() {
+        let mut e = SimBoardExecutor::for_task("kws");
+        let feat = e.input_elems();
+        let n_out = e.num_outputs();
+        let ts = crate::data::test_set("kws", 5, 0xB00);
+        let mut x = Vec::new();
+        for s in &ts.samples {
+            x.extend_from_slice(&s.x);
+        }
+        let mut out = vec![0.0f32; 5 * n_out];
+        e.forward_batch_into(&x, 5, &mut out);
+        for (i, s) in ts.samples.iter().enumerate() {
+            assert_eq!(s.x.len(), feat);
+            let single = e.forward1(&s.x);
+            assert_eq!(&out[i * n_out..(i + 1) * n_out], &single[..], "sample {i}");
+        }
     }
 
     #[test]

@@ -1,0 +1,89 @@
+//! Packed quantized kernel core — the surrogate inference hot path.
+//!
+//! The paper's submissions win on latency/energy because hls4ml/FINN
+//! lower quantized layers into tightly packed spatial MVAU dataflow
+//! kernels: weights live in on-chip memory as a few bits per element,
+//! packed once at synthesis time, and every inference streams activations
+//! past them with integer accumulators.  This module mirrors that
+//! execution model in software for the serving plane's surrogate
+//! executors, replacing the seed's Vec-of-Vec f32 dot products (one heap
+//! allocation per request, full weight walk per sample):
+//!
+//! * [`PackedLinear`] — templates/projections packed **once at load**
+//!   into a contiguous row-major i8 matrix with per-row dequantization
+//!   scales (the software analogue of the paper's 4–8-bit MVAU weight
+//!   memories).  [`PackedLinear::gemm_batch`] tiles over the weight
+//!   matrix once per *batch* instead of once per sample, accumulating in
+//!   i32; because the accumulation is exact integer arithmetic, the
+//!   batched path is bit-identical to the single-sample path.
+//! * [`SmoothKernel`] — the AD autoencoder's 9-tap moving average as an
+//!   O(n) prefix-sum pass (the seed recomputed each window from scratch,
+//!   O(n·window)).
+//! * [`ScratchArena`] — caller-owned scratch for everything the kernels
+//!   need at runtime (quantized activations, per-sample scales, prefix
+//!   sums).  Buffers grow to their high-water mark and are then reused,
+//!   so the steady-state serve loop performs **zero heap allocations**
+//!   inside the kernels.
+//!
+//! Scratch-arena contract: one arena per executor (they are cheap);
+//! kernels may clobber any arena buffer, so never hand one arena to two
+//! kernels concurrently — sequential reuse within a thread is the
+//! intended pattern.  All `*_into` entry points write into caller-owned
+//! output slices and never allocate.
+
+mod packed;
+mod smooth;
+
+pub use packed::{quantized_max_abs_error, PackedLinear};
+pub use smooth::SmoothKernel;
+
+/// Caller-owned scratch backing the kernel hot paths.
+///
+/// Every buffer is grown on demand (never shrunk) and reused across
+/// calls, so after the first batch of a given shape the kernels allocate
+/// nothing.  The arena is deliberately dumb — plain `Vec`s with a
+/// grow-to-fit helper — because the contract (exclusive use, sequential
+/// reuse) makes anything smarter unnecessary.
+#[derive(Default)]
+pub struct ScratchArena {
+    /// Quantized activations, one i8 per input element per sample.
+    pub(crate) xq: Vec<i8>,
+    /// Per-sample activation dequantization scales.
+    pub(crate) xscale: Vec<f32>,
+    /// f64 prefix sums for [`SmoothKernel`] (len n + 1).
+    pub(crate) prefix: Vec<f64>,
+}
+
+impl ScratchArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow `v` to at least `len` elements (filled with `fill`) and hand
+    /// back the `[..len]` window.  Steady state: no allocation.
+    fn grown<T: Copy>(v: &mut Vec<T>, len: usize, fill: T) -> &mut [T] {
+        if v.len() < len {
+            v.resize(len, fill);
+        }
+        &mut v[..len]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_buffers_grow_monotonically_and_are_reused() {
+        let mut a = ScratchArena::new();
+        let ptr1 = {
+            let b = ScratchArena::grown(&mut a.xq, 64, 0);
+            assert_eq!(b.len(), 64);
+            b.as_ptr()
+        };
+        // Smaller request reuses the same backing storage.
+        let ptr2 = ScratchArena::grown(&mut a.xq, 16, 0).as_ptr();
+        assert_eq!(ptr1, ptr2);
+        assert!(a.xq.len() >= 64);
+    }
+}

@@ -1,0 +1,236 @@
+//! Row-major i8 packed linear kernel with per-row scales.
+//!
+//! Packing format (mirrors a FINN MVAU weight memory): an `R x C` weight
+//! matrix is quantized **once** to i8 with symmetric per-row scales
+//! (`w ≈ q * w_scale`, `|q| ≤ 127` — the full i8 range minus -128 so the
+//! grid is symmetric) and stored contiguously row-major.  Activations
+//! are quantized per sample with one symmetric scale each, dot products
+//! accumulate exactly in i32, and a single f32 multiply per output
+//! dequantizes: `y[r] = acc * (w_scale[r] * out_scale) * x_scale`.
+//!
+//! Integer accumulation is associative, so loop order cannot change the
+//! result: the batched, weight-tiled path is bit-identical to the
+//! single-sample path.
+
+use super::ScratchArena;
+
+/// Row tile for the batched path: a tile of rows stays hot in L1 while
+/// every sample in the batch streams past it, so the weight matrix is
+/// walked once per batch rather than once per sample.
+const ROW_TILE: usize = 8;
+
+/// Widest supported row: guarantees `cols * 127 * 127` fits an i32
+/// accumulator with headroom (the largest shipped shape, IC, is 3072).
+const MAX_COLS: usize = 131_072;
+
+/// Exact i32 dot product over two i8 slices.  Integer adds reassociate
+/// freely, so this loop vectorizes in release builds (unlike the f32
+/// `.sum::<f32>()` chain it replaces, which is a serial dependency).
+#[inline]
+fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0i32;
+    for (&p, &q) in a.iter().zip(b.iter()) {
+        acc += p as i32 * q as i32;
+    }
+    acc
+}
+
+/// Symmetric i8 quantization of one vector; returns the dequantization
+/// scale (`v ≈ q * scale`).  All-zero (or non-finite) input quantizes to
+/// zeros with scale 0, which reproduces the exact f32 result (0) for
+/// every output.
+fn quantize_i8(src: &[f32], dst: &mut [i8]) -> f32 {
+    debug_assert_eq!(src.len(), dst.len());
+    let mut max_abs = 0.0f32;
+    for &v in src {
+        max_abs = max_abs.max(v.abs());
+    }
+    if max_abs == 0.0 || !max_abs.is_finite() {
+        dst.fill(0);
+        return 0.0;
+    }
+    let inv = 127.0 / max_abs;
+    for (d, &v) in dst.iter_mut().zip(src) {
+        // |v * inv| ≤ 127 (+1 ulp); float→int casts saturate, so the
+        // clamp to the i8 range is implicit.
+        *d = (v * inv).round() as i8;
+    }
+    max_abs / 127.0
+}
+
+/// Worst-case absolute error of one quantized output against the f32
+/// reference `out_scale * Σ x_i w_i`, given the activation/weight
+/// magnitudes of the row.  Used by the property tests to bound the
+/// equivalence check and to gate argmax assertions.
+pub fn quantized_max_abs_error(
+    x_max: f32,
+    w_max: f32,
+    cols: usize,
+    out_scale: f32,
+) -> f32 {
+    let sx = x_max / 127.0;
+    let sw = w_max / 127.0;
+    // Per element: |xw - (sx qx)(sw qw)| ≤ w_max·sx/2 + x_max·sw/2 + sx·sw/4.
+    cols as f32 * out_scale.abs() * (w_max * sx / 2.0 + x_max * sw / 2.0 + sx * sw / 4.0)
+}
+
+/// An `R x C` f32 matrix packed once into contiguous i8 (see module
+/// docs).  Build it at load time, share it freely (`&self` methods), and
+/// drive it with a per-thread [`ScratchArena`].
+pub struct PackedLinear {
+    rows: usize,
+    cols: usize,
+    /// Row-major quantized weights, `rows * cols` elements.
+    q: Vec<i8>,
+    /// Per-row dequantization scale with the global output scale folded
+    /// in: `scales[r] = w_scale[r] * out_scale`.
+    scales: Vec<f32>,
+}
+
+impl PackedLinear {
+    /// Quantize and pack `rows` (all the same length).  `out_scale` is a
+    /// global factor folded into the per-row scales — pass `1.0 / cols`
+    /// to reproduce the `dot(x, w) / dim` semantics of
+    /// [`crate::data::template_logits`].
+    pub fn pack(rows: &[Vec<f32>], out_scale: f32) -> Self {
+        let cols = rows.first().map(Vec::len).unwrap_or(0);
+        assert!(cols <= MAX_COLS, "row width {cols} would overflow the i32 accumulator");
+        let mut q = vec![0i8; rows.len() * cols];
+        let mut scales = Vec::with_capacity(rows.len());
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), cols, "row {r} has width {} != {cols}", row.len());
+            let s = quantize_i8(row, &mut q[r * cols..(r + 1) * cols]);
+            scales.push(s * out_scale);
+        }
+        PackedLinear { rows: rows.len(), cols, q, scales }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Resident weight bytes (i8 matrix + f32 scales) — 1/4 of the f32
+    /// Vec-of-Vec it replaces, before even counting per-Vec overhead.
+    pub fn packed_bytes(&self) -> usize {
+        self.q.len() + 4 * self.scales.len()
+    }
+
+    /// Single-sample matvec: `out[r] = dequant(q[r] · q8(x))`.
+    /// Bit-identical to the corresponding slice of [`Self::gemm_batch`].
+    pub fn gemv(&self, x: &[f32], out: &mut [f32], scratch: &mut ScratchArena) {
+        self.gemm_batch(x, out, scratch);
+    }
+
+    /// Batched matvec over `x.len() / cols` samples packed contiguously
+    /// in `x`; writes `rows` outputs per sample into `out`.  Activations
+    /// are quantized once per sample, then the weight matrix is walked
+    /// once per batch in row tiles (every sample streams past the hot
+    /// tile).  Allocation-free in steady state: all intermediates live
+    /// in the caller's arena.
+    pub fn gemm_batch(&self, x: &[f32], out: &mut [f32], scratch: &mut ScratchArena) {
+        if self.rows == 0 || self.cols == 0 {
+            return;
+        }
+        let n = x.len() / self.cols;
+        assert_eq!(x.len(), n * self.cols, "input is not a whole number of samples");
+        assert_eq!(out.len(), n * self.rows, "output buffer size mismatch");
+
+        let xq = ScratchArena::grown(&mut scratch.xq, n * self.cols, 0);
+        let xs = ScratchArena::grown(&mut scratch.xscale, n, 0.0);
+        for s in 0..n {
+            xs[s] = quantize_i8(
+                &x[s * self.cols..(s + 1) * self.cols],
+                &mut xq[s * self.cols..(s + 1) * self.cols],
+            );
+        }
+
+        for r0 in (0..self.rows).step_by(ROW_TILE) {
+            let r1 = (r0 + ROW_TILE).min(self.rows);
+            for s in 0..n {
+                let xq_s = &xq[s * self.cols..(s + 1) * self.cols];
+                let out_s = &mut out[s * self.rows..(s + 1) * self.rows];
+                for r in r0..r1 {
+                    let acc = dot_i8(&self.q[r * self.cols..(r + 1) * self.cols], xq_s);
+                    out_s[r] = acc as f32 * self.scales[r] * xs[s];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::prng::SplitMix64;
+
+    fn gaussian_rows(rng: &mut SplitMix64, r: usize, c: usize) -> Vec<Vec<f32>> {
+        (0..r)
+            .map(|_| (0..c).map(|_| rng.next_gaussian() as f32).collect())
+            .collect()
+    }
+
+    // Tolerance-bounded equivalence vs the f32 reference, batched-vs-
+    // single bit-exactness, and argmax preservation are covered by the
+    // randomized properties in rust/tests/proptests.rs; the tests here
+    // pin down the exact-arithmetic edge cases only.
+
+    fn naive(x: &[f32], rows: &[Vec<f32>], out_scale: f32) -> Vec<f32> {
+        rows.iter()
+            .map(|t| x.iter().zip(t).map(|(a, b)| a * b).sum::<f32>() * out_scale)
+            .collect()
+    }
+
+    #[test]
+    fn exactly_representable_weights_round_trip() {
+        // Weights and activations already on the i8 grid with max-abs
+        // exactly 127 (so both dequantization scales are exactly 1.0):
+        // quantization is lossless and every f32 op is exact, so the
+        // kernel must reproduce the f32 reference bit-for-bit.
+        let rows = vec![vec![127.0f32, -64.0, 1.0, 0.0], vec![2.0, 2.0, 2.0, 127.0]];
+        let x = vec![127.0f32, 1.0, -127.0, 64.0];
+        let p = PackedLinear::pack(&rows, 0.25);
+        let mut out = vec![0.0f32; 2];
+        let mut a = ScratchArena::new();
+        p.gemv(&x, &mut out, &mut a);
+        let want = naive(&x, &rows, 0.25);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn zero_rows_and_zero_inputs_are_exact() {
+        let rows = vec![vec![0.0f32; 16], vec![1.0f32; 16]];
+        let p = PackedLinear::pack(&rows, 1.0);
+        let mut a = ScratchArena::new();
+        let mut out = vec![9.0f32; 2];
+        p.gemv(&[0.0f32; 16], &mut out, &mut a);
+        assert_eq!(out, vec![0.0, 0.0]);
+        p.gemv(&[2.0f32; 16], &mut out, &mut a);
+        assert_eq!(out[0], 0.0, "all-zero row must stay exactly zero");
+        // Scale factors (1/127, 2/127) are not exact in f32 — a few ulp
+        // of rounding is expected around the true value 32.
+        assert!((out[1] - 32.0).abs() < 1e-3, "{}", out[1]);
+    }
+
+    #[test]
+    fn steady_state_is_allocation_free() {
+        // After a warm-up call the arena must not grow again for the
+        // same shape (pointer + capacity stable).
+        let mut rng = SplitMix64::new(0xA11C);
+        let rows = gaussian_rows(&mut rng, 4, 32);
+        let p = PackedLinear::pack(&rows, 1.0);
+        let mut a = ScratchArena::new();
+        let x: Vec<f32> = (0..3 * 32).map(|_| rng.next_gaussian() as f32).collect();
+        let mut out = vec![0.0f32; 3 * 4];
+        p.gemm_batch(&x, &mut out, &mut a);
+        let (ptr, cap) = (a.xq.as_ptr(), a.xq.capacity());
+        for _ in 0..5 {
+            p.gemm_batch(&x, &mut out, &mut a);
+        }
+        assert_eq!((a.xq.as_ptr(), a.xq.capacity()), (ptr, cap));
+    }
+}

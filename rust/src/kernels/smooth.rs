@@ -1,0 +1,70 @@
+//! O(n) prefix-sum moving average (the AD autoencoder's smoothing pass).
+//!
+//! The seed recomputed every window from scratch — O(n·window) serial
+//! f32 adds.  This kernel builds one f64 prefix-sum array and reads each
+//! window as `prefix[hi] - prefix[lo]`, O(n) regardless of window size.
+//!
+//! Numerics: the window sum is narrowed to f32 *before* the division so
+//! the final divide is the same f32 operation the naive implementation
+//! performs.  Whenever the f64 prefix sums are exact (inputs on a
+//! bounded dyadic grid — see the property tests) the kernel is
+//! bit-identical to the naive `moving_average_f32`; on arbitrary inputs
+//! it is at least as accurate (f64 accumulation vs f32).
+
+use super::ScratchArena;
+
+/// Centered moving average with edge clamping, window fixed at build
+/// time (`window / 2` taps on each side, mirror of the Python side).
+pub struct SmoothKernel {
+    window: usize,
+}
+
+impl SmoothKernel {
+    pub const fn new(window: usize) -> Self {
+        SmoothKernel { window }
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Smooth `x` into `out` (same length) using the arena's prefix-sum
+    /// buffer.  Allocation-free in steady state.
+    pub fn smooth_into(&self, x: &[f32], out: &mut [f32], scratch: &mut ScratchArena) {
+        let n = x.len();
+        assert_eq!(out.len(), n, "output length mismatch");
+        let half = self.window / 2;
+        let p = ScratchArena::grown(&mut scratch.prefix, n + 1, 0.0);
+        p[0] = 0.0;
+        for i in 0..n {
+            p[i + 1] = p[i] + x[i] as f64;
+        }
+        for (i, o) in out.iter_mut().enumerate() {
+            let lo = i.saturating_sub(half);
+            let hi = (i + half + 1).min(n);
+            let sum = (p[hi] - p[lo]) as f32;
+            *o = sum / (hi - lo) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Exact and tolerance-bounded equivalence against the naive moving
+    // average live as randomized properties in rust/tests/proptests.rs;
+    // this module pins down only the structural edge cases.
+
+    #[test]
+    fn empty_and_window_one() {
+        let mut a = ScratchArena::new();
+        let mut out = vec![];
+        SmoothKernel::new(9).smooth_into(&[], &mut out, &mut a);
+        // window 1: half = 0 → identity.
+        let x = vec![3.0f32, -1.0, 7.0];
+        let mut out = vec![0.0f32; 3];
+        SmoothKernel::new(1).smooth_into(&x, &mut out, &mut a);
+        assert_eq!(out, x);
+    }
+}

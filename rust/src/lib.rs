@@ -31,6 +31,14 @@
 //!   with work stealing between same-task replicas, and [`fleet::telemetry`]
 //!   aggregating fleet-level p50/p99 latency, throughput, and energy per
 //!   inference into [`report::json`].
+//! * [`kernels`] — the packed quantized kernel core behind every surrogate
+//!   forward: templates/projections packed once into contiguous i8 with
+//!   per-row scales ([`kernels::PackedLinear`], mirroring the paper's
+//!   4–8-bit MVAU weight memories), batched i32-accumulating GEMM that
+//!   walks the weight matrix once per batch, an O(n) prefix-sum smoothing
+//!   pass ([`kernels::SmoothKernel`]), and a caller-owned
+//!   [`kernels::ScratchArena`] so the steady-state serve loop performs
+//!   zero heap allocations inside the kernels.
 //! * [`eembc`] — a simulation of the EEMBC EnergyRunner™ + test harness
 //!   (performance, energy, and accuracy modes over a paced serial link).
 //! * [`data`] — deterministic synthetic datasets shared bit-exactly with
@@ -48,6 +56,7 @@ pub mod error;
 pub mod fifo;
 pub mod fleet;
 pub mod ir;
+pub mod kernels;
 pub mod metrics;
 pub mod passes;
 pub mod power;

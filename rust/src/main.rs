@@ -11,7 +11,7 @@
 //! tinyml-codesign table <1|2|3|4|5>                  paper tables
 //! tinyml-codesign fig <2|3>                          DSE scan CSVs
 //! tinyml-codesign serve <model> [--requests N]       batching engine demo
-//! tinyml-codesign fleet [--policy rr|ll|energy|slo] [--requests N] [--json]
+//! tinyml-codesign fleet [--policy rr|ll|energy|slo] [--requests N] [--cache N] [--json]
 //! tinyml-codesign list                               available models
 //! ```
 
@@ -227,7 +227,12 @@ fn main() -> Result<()> {
                 _ => Policy::LeastLoaded,
             };
             let n = args.usize_flag("requests", 600);
-            let cfg = FleetConfig { policy, time_scale: 20.0, ..Default::default() };
+            let cfg = FleetConfig {
+                policy,
+                time_scale: 20.0,
+                cache_cap: args.usize_flag("cache", 0),
+                ..Default::default()
+            };
             let fleet = Fleet::start(Registry::standard_fleet()?, cfg)?;
             let handle = fleet.handle();
             let mut rng = data::prng::SplitMix64::new(0xF1EE7);

@@ -183,6 +183,24 @@ impl LoadedModel {
         self.run_fwd(rt, Fwd::Batch, x, batch)
     }
 
+    /// Batched inference into a caller-owned buffer (same contract as the
+    /// surrogate backend).  PJRT materializes its own host literal, so
+    /// this copies once; it exists so `BatchExecutor` drives both
+    /// backends identically.
+    pub fn infer_batch_into(
+        &mut self,
+        rt: &Runtime,
+        x: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let y = self.infer_batch(rt, x)?;
+        if y.len() != out.len() {
+            bail!("output len {} != expected {}", out.len(), y.len());
+        }
+        out.copy_from_slice(&y);
+        Ok(())
+    }
+
     /// One SGD step; parameters round-trip through the runtime.  Returns
     /// the loss.
     pub fn train_step(&mut self, rt: &Runtime, x: &[f32], y: &[i32], lr: f32) -> Result<f32> {

@@ -9,6 +9,15 @@
 //! decays with training.  Losses decay deterministically, so train/eval
 //! driver code behaves as it does on the real backend.
 //!
+//! The forward pass runs on the packed quantized kernel core
+//! ([`crate::kernels`]): templates *and* projections are quantized once
+//! at load into a single fused i8 matrix (`2 * n_out` rows, per-row
+//! scales — the software mirror of the paper's 4–8-bit MVAU weight
+//! memories), every batch makes one tiled pass over it with i32
+//! accumulation, and the AD smoothing is an O(n) prefix-sum pass.  All
+//! intermediates live in a model-owned [`ScratchArena`], so the
+//! steady-state serve loop allocates nothing inside the forward.
+//!
 //! If `<model>_manifest.json` exists it is honored; otherwise a manifest
 //! is synthesized from the model name so the engine, fleet, EEMBC, and
 //! CLI layers run on a fresh checkout with no artifacts at all.
@@ -16,6 +25,7 @@
 use super::{argmax, Manifest};
 use crate::data::prng::SplitMix64;
 use crate::error::{bail, Result};
+use crate::kernels::{PackedLinear, ScratchArena, SmoothKernel};
 use std::path::Path;
 
 /// Stand-in for the PJRT client (one per process; nothing to hold).
@@ -32,12 +42,20 @@ const DEFAULT_BATCH: usize = 64;
 /// A loaded surrogate model.
 pub struct LoadedModel {
     pub manifest: Manifest,
-    /// Class templates (classification) — one per output.
-    templates: Vec<Vec<f32>>,
-    /// Per-class pseudo-random projections (the "untrained" component).
-    proj: Vec<Vec<f32>>,
+    /// Fused packed weights for classification: rows `0..n_out` are the
+    /// class templates, rows `n_out..2*n_out` the pseudo-random
+    /// projections, both with the `1/dim` template-logits scale folded
+    /// into the per-row dequantization scales.  `None` for AD.
+    packed: Option<PackedLinear>,
+    /// O(n) prefix-sum smoothing for the AD reconstruction.
+    smooth: SmoothKernel,
     /// Deterministic per-element residual for the AD reconstruction.
     residual: Vec<f32>,
+    /// Kernel scratch (quantized activations, prefix sums) — grows to
+    /// the high-water mark once, then the forward is allocation-free.
+    scratch: ScratchArena,
+    /// Reused staging for the fused GEMM output (`2 * n_out` per sample).
+    gemm_out: Vec<f32>,
     /// SGD steps taken (drives loss decay and blend sharpening).
     steps: u32,
 }
@@ -80,6 +98,8 @@ fn synth_manifest(name: &str) -> Result<Manifest> {
 
 impl LoadedModel {
     /// Load the manifest if present, else synthesize one from the name.
+    /// Classification weights (templates + projections) are packed to i8
+    /// here, once, and never touched again on the request path.
     pub fn load(art_dir: &Path, name: &str) -> Result<Self> {
         let path = art_dir.join(format!("{name}_manifest.json"));
         let manifest =
@@ -87,18 +107,34 @@ impl LoadedModel {
         let feat = manifest.input_elems();
         let n_out = manifest.num_outputs;
         let seed = fnv64(name);
-        let mut templates = Vec::new();
-        let mut proj = Vec::new();
-        if manifest.task != "ad" {
-            templates = crate::data::class_templates_f32(&manifest.task, n_out);
+        let packed = if manifest.task == "ad" {
+            None
+        } else {
+            let mut rows = crate::data::class_templates_f32(&manifest.task, n_out);
+            for row in &mut rows {
+                // A user manifest may declare an input width other than
+                // the built-in template width; reproduce the seed's
+                // zip-truncation semantics (elements past the shorter
+                // operand contribute 0) instead of panicking in pack.
+                row.resize(feat, 0.0);
+            }
             for c in 0..n_out {
                 let mut rng = SplitMix64::new(seed ^ (0x9E37 + c as u64));
-                proj.push((0..feat).map(|_| rng.next_gaussian() as f32).collect());
+                rows.push((0..feat).map(|_| rng.next_gaussian() as f32).collect());
             }
-        }
+            Some(PackedLinear::pack(&rows, 1.0 / feat.max(1) as f32))
+        };
         let mut rng = SplitMix64::new(seed ^ 0xAD0FF5E7);
         let residual = (0..feat).map(|_| rng.next_gaussian() as f32).collect();
-        Ok(Self { manifest, templates, proj, residual, steps: 0 })
+        Ok(Self {
+            manifest,
+            packed,
+            smooth: SmoothKernel::new(crate::data::AD_SMOOTH_WINDOW),
+            residual,
+            scratch: ScratchArena::new(),
+            gemm_out: Vec::new(),
+            steps: 0,
+        })
     }
 
     /// Blend weight of the template/profile component: grows with steps.
@@ -106,27 +142,43 @@ impl LoadedModel {
         1.0 - 0.4 * (-(self.steps as f32) / 50.0).exp()
     }
 
-    fn forward1(&self, x: &[f32]) -> Vec<f32> {
+    /// Forward `n` contiguous samples through the packed kernel core into
+    /// `out` (`n * num_outputs` values).  One tiled pass over the fused
+    /// weight matrix per call; zero allocations in steady state.
+    fn forward_batch_into(&mut self, x: &[f32], n: usize, out: &mut [f32]) {
         let feat = self.manifest.input_elems();
-        debug_assert_eq!(x.len(), feat);
-        if self.manifest.task == "ad" {
-            // Reconstruction: smoothed input + a training-decayed residual.
-            let ma = crate::data::moving_average_f32(x, crate::data::AD_SMOOTH_WINDOW);
-            let delta = 0.5 * (1.0 - self.fidelity());
-            ma.iter().zip(&self.residual).map(|(&m, &r)| m + delta * r).collect()
-        } else {
-            // Shared template-matching kernel (dot/dim) plus the
-            // training-decayed pseudo-random component: rescale the
-            // projection part from /dim to 0.05/sqrt(dim).
+        let n_out = self.manifest.num_outputs;
+        debug_assert_eq!(x.len(), n * feat);
+        debug_assert_eq!(out.len(), n * n_out);
+        if let Some(packed) = &self.packed {
+            // Fused GEMM: template part and projection part in one pass.
+            if self.gemm_out.len() < n * 2 * n_out {
+                self.gemm_out.resize(n * 2 * n_out, 0.0);
+            }
+            let y = &mut self.gemm_out[..n * 2 * n_out];
+            packed.gemm_batch(x, y, &mut self.scratch);
+            // Training-decayed blend: rescale the projection part from
+            // /dim to 0.05/sqrt(dim), exactly as the seed did.
             let beta = self.fidelity();
-            let t_part = crate::data::template_logits(x, &self.templates);
-            let w_part = crate::data::template_logits(x, &self.proj);
             let wscale = 0.05 * (feat as f32).sqrt();
-            t_part
-                .iter()
-                .zip(&w_part)
-                .map(|(&t, &w)| beta * t + (1.0 - beta) * w * wscale)
-                .collect()
+            for s in 0..n {
+                let y_s = &y[s * 2 * n_out..(s + 1) * 2 * n_out];
+                let out_s = &mut out[s * n_out..(s + 1) * n_out];
+                for c in 0..n_out {
+                    out_s[c] = beta * y_s[c] + (1.0 - beta) * y_s[n_out + c] * wscale;
+                }
+            }
+        } else {
+            // Reconstruction: smoothed input + a training-decayed residual.
+            let delta = 0.5 * (1.0 - self.fidelity());
+            for s in 0..n {
+                let x_s = &x[s * feat..(s + 1) * feat];
+                let out_s = &mut out[s * n_out..(s + 1) * n_out];
+                self.smooth.smooth_into(x_s, out_s, &mut self.scratch);
+                for (o, &r) in out_s.iter_mut().zip(&self.residual) {
+                    *o += delta * r;
+                }
+            }
         }
     }
 
@@ -158,22 +210,46 @@ impl LoadedModel {
         if x.len() != feat {
             bail!("input len {} != {}", x.len(), feat);
         }
-        Ok(self.forward1(x))
+        let mut out = vec![0.0f32; self.manifest.num_outputs];
+        self.forward_batch_into(x, 1, &mut out);
+        Ok(out)
     }
 
     /// Batched inference; `x` must hold exactly the device batch (pad the
     /// tail batch with zeros and slice the result).
     pub fn infer_batch(&mut self, rt: &Runtime, x: &[f32]) -> Result<Vec<f32>> {
         let batch = self.ensure_fwd_batch(rt)?;
+        let mut out = vec![0.0f32; batch * self.manifest.num_outputs];
+        self.infer_batch_into(rt, x, &mut out)?;
+        Ok(out)
+    }
+
+    /// Batched inference into a caller-owned buffer — the zero-allocation
+    /// serving entry point ([`crate::coordinator::engine::BatchExecutor`]
+    /// drives this with buffers it reuses across batches).  Because the
+    /// kernel accumulates in exact integer arithmetic, outputs are
+    /// bit-identical to `infer1` on the same sample.
+    pub fn infer_batch_into(
+        &mut self,
+        rt: &Runtime,
+        x: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let batch = self.ensure_fwd_batch(rt)?;
         let feat = self.manifest.input_elems();
         if x.len() != feat * batch {
             bail!("input len {} != batch {} * {}", x.len(), batch, feat);
         }
-        let mut out = Vec::with_capacity(batch * self.manifest.num_outputs);
-        for sample in x.chunks_exact(feat) {
-            out.extend(self.forward1(sample));
+        if out.len() != batch * self.manifest.num_outputs {
+            bail!(
+                "output len {} != batch {} * {}",
+                out.len(),
+                batch,
+                self.manifest.num_outputs
+            );
         }
-        Ok(out)
+        self.forward_batch_into(x, batch, out);
+        Ok(())
     }
 
     /// One surrogate SGD step: advances the fidelity schedule and returns
@@ -247,7 +323,28 @@ mod tests {
         x[..feat].copy_from_slice(&ts.samples[0].x);
         let out = m.infer_batch(&rt, &x).unwrap();
         let single = m.infer1(&rt, &ts.samples[0].x).unwrap();
+        // Integer accumulation makes batch vs single *bit*-identical.
         assert_eq!(&out[..12], &single[..]);
+    }
+
+    #[test]
+    fn infer_batch_into_matches_infer_batch() {
+        let rt = Runtime::cpu().unwrap();
+        let mut m = model("ad_autoencoder");
+        let batch = m.ensure_fwd_batch(&rt).unwrap();
+        let feat = m.manifest.input_elems();
+        let ts = data::test_set("ad", 4, 3);
+        let mut x = vec![0.0f32; batch * feat];
+        for (i, s) in ts.samples.iter().enumerate() {
+            x[i * feat..(i + 1) * feat].copy_from_slice(&s.x);
+        }
+        let owned = m.infer_batch(&rt, &x).unwrap();
+        let mut buf = vec![0.0f32; batch * m.manifest.num_outputs];
+        m.infer_batch_into(&rt, &x, &mut buf).unwrap();
+        assert_eq!(owned, buf);
+        // Wrong buffer size is an error, not a panic.
+        let mut short = vec![0.0f32; 3];
+        assert!(m.infer_batch_into(&rt, &x, &mut short).is_err());
     }
 
     #[test]

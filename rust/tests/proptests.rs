@@ -12,6 +12,9 @@ use tinyml_codesign::fleet::{
     BoardInstance, Fleet, FleetConfig, Policy, Registry, RouteError, Router,
 };
 use tinyml_codesign::ir::Graph;
+use tinyml_codesign::kernels::{
+    quantized_max_abs_error, PackedLinear, ScratchArena, SmoothKernel,
+};
 use tinyml_codesign::passes;
 
 /// Random chain of dataflow stages with consistent token counts.
@@ -460,5 +463,174 @@ fn fleet_end_to_end_delivers_every_admitted_request() {
             n,
             "{policy:?}"
         );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed quantized kernel properties (the surrogate inference hot path).
+// ---------------------------------------------------------------------------
+
+/// The three task shapes the serving plane runs: KWS (12x490 MLP head),
+/// IC (10x3072 over the flattened image), AD decoder (128x128).
+const GEMM_SHAPES: [(&str, usize, usize); 3] =
+    [("kws", 12, 490), ("ic", 10, 3072), ("ad", 128, 128)];
+
+fn max_abs(v: &[f32]) -> f32 {
+    v.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+}
+
+/// f32 reference for the packed kernel: `dot(x, w) / dim` per row —
+/// exactly `data::template_logits`, the code path the kernel replaced.
+fn reference_logits(x: &[f32], rows: &[Vec<f32>]) -> Vec<f32> {
+    tinyml_codesign::data::template_logits(x, rows)
+}
+
+#[test]
+fn prop_packed_gemm_matches_f32_reference_within_quant_tolerance() {
+    let mut rng = SplitMix64::new(0x6E33_0001);
+    for (name, n_rows, cols) in GEMM_SHAPES {
+        let rows: Vec<Vec<f32>> = (0..n_rows)
+            .map(|_| (0..cols).map(|_| rng.next_gaussian() as f32).collect())
+            .collect();
+        let packed = PackedLinear::pack(&rows, 1.0 / cols as f32);
+        let mut scratch = ScratchArena::new();
+        let mut out = vec![0.0f32; n_rows];
+        for case in 0..30 {
+            let x: Vec<f32> = (0..cols).map(|_| rng.next_gaussian() as f32).collect();
+            packed.gemv(&x, &mut out, &mut scratch);
+            let want = reference_logits(&x, &rows);
+            let x_max = max_abs(&x);
+            for (r, (&got, &ref_v)) in out.iter().zip(&want).enumerate() {
+                let tol = quantized_max_abs_error(
+                    x_max,
+                    max_abs(&rows[r]),
+                    cols,
+                    1.0 / cols as f32,
+                ) + 1e-5;
+                assert!(
+                    (got - ref_v).abs() <= tol,
+                    "{name} case {case} row {r}: packed {got} vs f32 {ref_v} (tol {tol})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_packed_gemm_preserves_argmax_on_task_samples() {
+    // Realistic inputs (the actual synthetic test sets) against the
+    // actual class templates: wherever the f32 top-2 margin exceeds
+    // twice the worst-case quantization error, the packed argmax must
+    // match.  The margin gate keeps the property sound (quantization
+    // may legitimately flip a near-tie); the coverage assert keeps it
+    // from being vacuous.
+    for (task, n_out) in [("kws", 12usize), ("ic", 10usize)] {
+        let rows = tinyml_codesign::data::class_templates_f32(task, n_out);
+        let cols = rows[0].len();
+        let packed = PackedLinear::pack(&rows, 1.0 / cols as f32);
+        let mut scratch = ScratchArena::new();
+        let mut out = vec![0.0f32; n_out];
+        let ts = tinyml_codesign::data::test_set(task, 80, 0x6E33_0002);
+        let w_max_global = rows.iter().map(|r| max_abs(r)).fold(0.0f32, f32::max);
+        let (mut gated, mut total) = (0usize, 0usize);
+        for (i, s) in ts.samples.iter().enumerate() {
+            let want = reference_logits(&s.x, &rows);
+            packed.gemv(&s.x, &mut out, &mut scratch);
+            let tol = quantized_max_abs_error(
+                max_abs(&s.x),
+                w_max_global,
+                cols,
+                1.0 / cols as f32,
+            );
+            let top1 = tinyml_codesign::runtime::argmax(&want);
+            let margin = want[top1]
+                - want
+                    .iter()
+                    .enumerate()
+                    .filter(|&(c, _)| c != top1)
+                    .map(|(_, &v)| v)
+                    .fold(f32::NEG_INFINITY, f32::max);
+            total += 1;
+            if margin > 2.0 * tol {
+                gated += 1;
+                assert_eq!(
+                    tinyml_codesign::runtime::argmax(&out),
+                    top1,
+                    "{task} sample {i}: argmax flipped despite margin {margin} > 2*tol {tol}"
+                );
+            }
+        }
+        assert!(
+            gated * 3 >= total,
+            "{task}: margin gate passed only {gated}/{total} samples — property is vacuous"
+        );
+    }
+}
+
+#[test]
+fn prop_packed_gemm_batched_bit_identical_to_single() {
+    // Integer accumulation is exact, so tiling over the batch cannot
+    // change a single bit relative to the per-sample path.
+    let mut rng = SplitMix64::new(0x6E33_0003);
+    for case in 0..25 {
+        let n_rows = 1 + rng.next_below(24) as usize;
+        let cols = 1 + rng.next_below(300) as usize;
+        let n = 1 + rng.next_below(12) as usize;
+        let rows: Vec<Vec<f32>> = (0..n_rows)
+            .map(|_| (0..cols).map(|_| rng.next_gaussian() as f32).collect())
+            .collect();
+        let packed = PackedLinear::pack(&rows, 1.0 / cols as f32);
+        let mut scratch = ScratchArena::new();
+        let x: Vec<f32> = (0..n * cols).map(|_| rng.next_gaussian() as f32).collect();
+        let mut batched = vec![0.0f32; n * n_rows];
+        packed.gemm_batch(&x, &mut batched, &mut scratch);
+        let mut single = vec![0.0f32; n_rows];
+        for s in 0..n {
+            packed.gemv(&x[s * cols..(s + 1) * cols], &mut single, &mut scratch);
+            assert_eq!(
+                &batched[s * n_rows..(s + 1) * n_rows],
+                &single[..],
+                "case {case} sample {s}: batched path diverged from single"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_prefix_sum_smoothing_equals_naive_exactly() {
+    // Inputs on the 2^-8 dyadic grid with |v| <= 4: every window sum is
+    // exact in f32 and every prefix sum is exact in f64, so the O(n)
+    // prefix-sum kernel must agree with the O(n*window) naive moving
+    // average bit-for-bit.
+    let mut rng = SplitMix64::new(0x6E33_0004);
+    let mut scratch = ScratchArena::new();
+    for case in 0..120 {
+        let n = 1 + rng.next_below(300) as usize;
+        let window = [1usize, 3, 5, 9, 15][rng.next_below(5) as usize];
+        let x: Vec<f32> = (0..n)
+            .map(|_| (rng.next_below(2049) as i64 - 1024) as f32 / 256.0)
+            .collect();
+        let naive = tinyml_codesign::data::moving_average_f32(&x, window);
+        let mut fast = vec![0.0f32; n];
+        SmoothKernel::new(window).smooth_into(&x, &mut fast, &mut scratch);
+        assert_eq!(fast, naive, "case {case}: n={n} window={window}");
+    }
+}
+
+#[test]
+fn prop_prefix_sum_smoothing_close_on_arbitrary_inputs() {
+    // Off the grid the two differ only by f32-vs-f64 accumulation order;
+    // bound it tightly on gaussian data (the AD spectral frames).
+    let mut rng = SplitMix64::new(0x6E33_0005);
+    let mut scratch = ScratchArena::new();
+    for case in 0..60 {
+        let n = 1 + rng.next_below(256) as usize;
+        let x: Vec<f32> = (0..n).map(|_| rng.next_gaussian() as f32).collect();
+        let naive = tinyml_codesign::data::moving_average_f32(&x, 9);
+        let mut fast = vec![0.0f32; n];
+        SmoothKernel::new(9).smooth_into(&x, &mut fast, &mut scratch);
+        for (i, (&f, &w)) in fast.iter().zip(&naive).enumerate() {
+            assert!((f - w).abs() < 1e-4, "case {case} i={i}: {f} vs {w}");
+        }
     }
 }
