@@ -1,23 +1,52 @@
-//! Bench: fleet routing policies under skewed load.
+//! Bench: fleet routing policies under skewed load, plus elastic
+//! (autoscaled) vs fixed capacity under a bursty trace.
 //!
-//! 90% of the traffic is KWS, served by two *heterogeneous* replicas: a
-//! full-budget Pynq-Z2 deployment and an Arty A7-100T folded to 1/8th of
-//! the multiplier budget (~10x slower after the clock difference).
-//! Round-robin splits KWS traffic evenly and ends up waiting on the slow
-//! replica; least-loaded observes the queue imbalance and shifts traffic
-//! to the fast one.  Work stealing is disabled so the routing policy is
-//! the only balancing mechanism being measured.
+//! **Part 1 — routing policies.**  90% of the traffic is KWS, served by
+//! two *heterogeneous* replicas: a full-budget Pynq-Z2 deployment and an
+//! Arty A7-100T folded to 1/8th of the multiplier budget (~10x slower
+//! after the clock difference).  Round-robin splits KWS traffic evenly
+//! and ends up waiting on the slow replica; least-loaded observes the
+//! queue imbalance and shifts traffic to the fast one.  Work stealing is
+//! disabled so the routing policy is the only balancing mechanism being
+//! measured.  Self-checking: least-loaded throughput >= round-robin.
 //!
-//! Self-checking: asserts least-loaded throughput >= round-robin.
+//! **Part 2 — autoscaling.**  Three task-phased bursts (KWS, then AD,
+//! then IC), each paced *above* what two replicas of the task can serve
+//! and *below* what four can, with idle gaps in between.  The fixed
+//! fleet pins 2 replicas per task (6 boards, always on).  The elastic
+//! fleet starts at 1 replica per task (3 boards) and lets the
+//! telemetry-driven controller grow the hot task to 4 and shrink back
+//! when the burst passes — capacity follows the traffic instead of being
+//! provisioned for the union of peaks.  Self-checking: the elastic fleet
+//! serves every request with p99 <= the fixed 6-board fleet while
+//! spending fewer board-seconds.
+//!
+//! Writes `BENCH_fleet.json` (per-policy p50/p99/throughput/µJ plus the
+//! autoscale-vs-fixed comparison) the way `benches/kernels.rs` writes
+//! `BENCH_kernels.json`, so later PRs have a recorded trajectory to
+//! beat.  `BENCH_QUICK=1` (used by ci.sh) cuts the trace sizes but keeps
+//! every assertion.
 
 use std::time::{Duration, Instant};
 use tinyml_codesign::board::{arty_a7_100t, pynq_z2};
 use tinyml_codesign::data::prng::SplitMix64;
 use tinyml_codesign::dataflow::schedule::ScheduleConfig;
-use tinyml_codesign::fleet::{Fleet, FleetConfig, Policy, Registry, RouteError};
+use tinyml_codesign::fleet::worker::precise_sleep;
+use tinyml_codesign::fleet::{
+    AutoscaleConfig, BoardInstance, Fleet, FleetConfig, FleetSnapshot, Policy, Registry,
+    RouteError, ScaleAction,
+};
+use tinyml_codesign::report::json::{num, obj, s, Value};
 
-const REQUESTS: usize = 400;
 const TIME_SCALE: f64 = 50.0;
+
+fn quick() -> bool {
+    std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+// ---------------------------------------------------------------------------
+// Part 1: routing policies under skewed load.
+// ---------------------------------------------------------------------------
 
 fn skewed_registry() -> Registry {
     let mut reg = Registry::new();
@@ -30,7 +59,7 @@ fn skewed_registry() -> Registry {
     reg
 }
 
-fn workload(n: usize) -> Vec<(&'static str, Vec<f32>)> {
+fn skewed_workload(n: usize) -> Vec<(&'static str, Vec<f32>)> {
     let mut rng = SplitMix64::new(0xBE7C);
     (0..n)
         .map(|_| {
@@ -45,8 +74,17 @@ fn workload(n: usize) -> Vec<(&'static str, Vec<f32>)> {
         .collect()
 }
 
-/// Run one policy; returns (throughput req/s, p99 us, uJ/inf).
-fn run_policy(policy: Policy) -> (f64, f64, f64) {
+struct PolicyResult {
+    policy: &'static str,
+    throughput_rps: f64,
+    p50_us: f64,
+    p99_us: f64,
+    uj_per_inf: f64,
+}
+
+/// Run one policy over the skewed trace (closed submission loop with
+/// backpressure retries).
+fn run_policy(policy: Policy, name: &'static str, requests: usize) -> PolicyResult {
     let cfg = FleetConfig {
         policy,
         queue_cap: 64,
@@ -56,7 +94,7 @@ fn run_policy(policy: Policy) -> (f64, f64, f64) {
     };
     let fleet = Fleet::start(skewed_registry(), cfg).unwrap();
     let handle = fleet.handle();
-    let reqs = workload(REQUESTS);
+    let reqs = skewed_workload(requests);
     let t0 = Instant::now();
     let mut pending = Vec::new();
     for (task, x) in reqs {
@@ -78,34 +116,275 @@ fn run_policy(policy: Policy) -> (f64, f64, f64) {
     }
     let wall = t0.elapsed().as_secs_f64();
     let summary = fleet.shutdown();
-    assert_eq!(summary.snapshot.served as usize, REQUESTS);
-    (REQUESTS as f64 / wall, summary.snapshot.p99_us, summary.snapshot.energy_per_inference_uj)
+    assert_eq!(summary.snapshot.served as usize, requests);
+    PolicyResult {
+        policy: name,
+        throughput_rps: requests as f64 / wall,
+        p50_us: summary.snapshot.p50_us,
+        p99_us: summary.snapshot.p99_us,
+        uj_per_inf: summary.snapshot.energy_per_inference_uj,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Part 2: autoscale-on vs fixed fleet under a bursty trace.
+// ---------------------------------------------------------------------------
+
+/// Identical synthetic replica envelope per task so elastic clones match
+/// fixed replicas exactly: latency 400 us, II 80 us.
+fn bursty_instance(id: usize, task: &str) -> BoardInstance {
+    let power = match task {
+        "kws" => 1.5,
+        "ad" => 1.2,
+        _ => 1.8,
+    };
+    BoardInstance::synthetic(id, task, 400.0, 80.0, power)
+}
+
+const BURST_TASKS: [&str; 3] = ["kws", "ad", "ic"];
+
+struct BurstyResult {
+    snapshot: FleetSnapshot,
+    wall_s: f64,
+    max_boards_alive: usize,
+    /// Max per-board peak queue depth in each burst phase
+    /// (`Fleet::snapshot_phase` rolls the peaks over at the boundary, so
+    /// these are per-phase numbers, not since-start stickiness).
+    phase_peak_depths: Vec<usize>,
+}
+
+/// Run the phased bursty trace.  `elastic == false`: 2 replicas per task,
+/// fixed.  `elastic == true`: 1 replica per task + the autoscale
+/// controller (max 4 per task).
+fn run_bursty(elastic: bool, per_burst: usize) -> BurstyResult {
+    let replicas = if elastic { 1 } else { 2 };
+    let mut instances = Vec::new();
+    for task in BURST_TASKS {
+        for _ in 0..replicas {
+            instances.push(bursty_instance(instances.len(), task));
+        }
+    }
+    let autoscale = elastic.then_some(AutoscaleConfig {
+        interval: Duration::from_millis(2),
+        high_queue: 2.0,
+        slo_p99_us: 0.0,
+        low_util: 0.25,
+        min_replicas: 1,
+        max_replicas: 4,
+        cooldown: Duration::from_millis(8),
+    });
+    let cfg = FleetConfig {
+        policy: Policy::LeastLoaded,
+        queue_cap: 1024,
+        time_scale: 20.0,
+        autoscale,
+        ..Default::default()
+    };
+    let fleet = Fleet::start(Registry { instances }, cfg).unwrap();
+    let handle = fleet.handle();
+    // Arrival pacing: one request per 700 us => ~1430 req/s, between the
+    // 2-replica (~830/s) and 4-replica (~1670/s) batched service rates.
+    let arrival = Duration::from_micros(700);
+    let gap = Duration::from_millis(100);
+    let t0 = Instant::now();
+    let mut max_boards_alive = 0usize;
+    let mut phase_peak_depths = Vec::new();
+    for task in BURST_TASKS {
+        let dim = tinyml_codesign::data::feature_dim(task);
+        let x = vec![0.2f32; dim];
+        let mut pending = Vec::with_capacity(per_burst);
+        for _ in 0..per_burst {
+            match handle.submit(task, x.clone()) {
+                Ok(rx) => pending.push(rx),
+                Err(e) => panic!("bursty trace rejected (queue_cap too small?): {e:?}"),
+            }
+            precise_sleep(arrival);
+        }
+        for rx in pending {
+            rx.recv().expect("request dropped");
+        }
+        let alive: usize =
+            BURST_TASKS.iter().map(|t| fleet.active_replicas(t)).sum();
+        max_boards_alive = max_boards_alive.max(alive);
+        // Phase boundary: snapshot + roll the peak-depth high-water
+        // marks over so the next phase reports its own peak.
+        let phase = fleet.snapshot_phase();
+        phase_peak_depths
+            .push(phase.per_board.iter().map(|b| b.depth_peak).max().unwrap_or(0));
+        // Idle gap: the elastic fleet shrinks back toward the floor here.
+        precise_sleep(gap);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let summary = fleet.shutdown();
+    BurstyResult {
+        snapshot: summary.snapshot,
+        wall_s,
+        max_boards_alive,
+        phase_peak_depths,
+    }
+}
+
+fn bursty_json(tag: &str, r: &BurstyResult, served_want: usize) -> Value {
+    obj(vec![
+        ("mode", s(tag)),
+        ("served", num(r.snapshot.served as f64)),
+        ("expected", num(served_want as f64)),
+        ("wall_s", num(r.wall_s)),
+        ("p50_us", num(r.snapshot.p50_us)),
+        ("p99_us", num(r.snapshot.p99_us)),
+        ("uj_per_inf", num(r.snapshot.energy_per_inference_uj)),
+        ("board_seconds", num(r.snapshot.board_seconds)),
+        ("scale_events", num(r.snapshot.scale_events.len() as f64)),
+        ("max_boards_alive", num(r.max_boards_alive as f64)),
+        (
+            "phase_peak_depths",
+            Value::Arr(r.phase_peak_depths.iter().map(|&p| num(p as f64)).collect()),
+        ),
+    ])
 }
 
 fn main() {
+    let quick = quick();
+    let policy_requests = if quick { 200 } else { 400 };
+    let per_burst = if quick { 120 } else { 240 };
+
     println!(
-        "[bench] fleet routing under skewed load ({REQUESTS} requests, 90% kws, \
-         heterogeneous kws replicas, time_scale {TIME_SCALE}, no stealing)"
+        "[bench] part 1: fleet routing under skewed load ({policy_requests} requests, \
+         90% kws, heterogeneous kws replicas, time_scale {TIME_SCALE}, no stealing{})",
+        if quick { ", quick mode" } else { "" }
     );
-    let (rr_tput, rr_p99, rr_uj) = run_policy(Policy::RoundRobin);
-    let (ll_tput, ll_p99, ll_uj) = run_policy(Policy::LeastLoaded);
-    let (ea_tput, ea_p99, ea_uj) = run_policy(Policy::EnergyAware);
-    println!(
-        "[bench] round-robin : {rr_tput:>8.0} req/s  p99 {rr_p99:>9.1} us  {rr_uj:>6.2} uJ/inf"
-    );
-    println!(
-        "[bench] least-loaded: {ll_tput:>8.0} req/s  p99 {ll_p99:>9.1} us  {ll_uj:>6.2} uJ/inf"
-    );
-    println!(
-        "[bench] energy-aware: {ea_tput:>8.0} req/s  p99 {ea_p99:>9.1} us  {ea_uj:>6.2} uJ/inf"
-    );
+    let results = [
+        run_policy(Policy::RoundRobin, "round-robin", policy_requests),
+        run_policy(Policy::LeastLoaded, "least-loaded", policy_requests),
+        run_policy(Policy::EnergyAware, "energy-aware", policy_requests),
+    ];
+    for r in &results {
+        println!(
+            "[bench] {:<12}: {:>8.0} req/s  p50 {:>9.1} us  p99 {:>9.1} us  {:>6.2} uJ/inf",
+            r.policy, r.throughput_rps, r.p50_us, r.p99_us, r.uj_per_inf
+        );
+    }
+    let (rr, ll) = (&results[0], &results[1]);
     println!(
         "[bench] least-loaded / round-robin throughput = {:.2}x",
-        ll_tput / rr_tput
+        ll.throughput_rps / rr.throughput_rps
     );
+
+    println!(
+        "\n[bench] part 2: autoscale vs fixed fleet over 3 task-phased bursts of \
+         {per_burst} requests (1 / 700 us pacing, 100 ms gaps)"
+    );
+    let fixed = run_bursty(false, per_burst);
+    let elastic = run_bursty(true, per_burst);
+    let served_want = 3 * per_burst;
+    println!(
+        "[bench] fixed-6   : p50 {:>9.1} us  p99 {:>9.1} us  {:>7.3} board-s  ({} served)",
+        fixed.snapshot.p50_us,
+        fixed.snapshot.p99_us,
+        fixed.snapshot.board_seconds,
+        fixed.snapshot.served
+    );
+    println!(
+        "[bench] autoscale : p50 {:>9.1} us  p99 {:>9.1} us  {:>7.3} board-s  \
+         ({} served, {} scale events)",
+        elastic.snapshot.p50_us,
+        elastic.snapshot.p99_us,
+        elastic.snapshot.board_seconds,
+        elastic.snapshot.served,
+        elastic.snapshot.scale_events.len()
+    );
+    for e in &elastic.snapshot.scale_events {
+        println!("[bench]   {e}");
+    }
+
+    let doc = obj(vec![
+        ("bench", s("fleet")),
+        ("quick", Value::Bool(quick)),
+        (
+            "policies",
+            Value::Arr(
+                results
+                    .iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("policy", s(r.policy)),
+                            ("requests", num(policy_requests as f64)),
+                            ("throughput_rps", num(r.throughput_rps)),
+                            ("p50_us", num(r.p50_us)),
+                            ("p99_us", num(r.p99_us)),
+                            ("uj_per_inf", num(r.uj_per_inf)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "autoscale",
+            obj(vec![
+                ("per_burst", num(per_burst as f64)),
+                ("fixed", bursty_json("fixed-6", &fixed, served_want)),
+                ("elastic", bursty_json("autoscale", &elastic, served_want)),
+                (
+                    "p99_ratio_elastic_over_fixed",
+                    num(elastic.snapshot.p99_us / fixed.snapshot.p99_us.max(1e-9)),
+                ),
+                (
+                    "board_seconds_ratio_elastic_over_fixed",
+                    num(elastic.snapshot.board_seconds
+                        / fixed.snapshot.board_seconds.max(1e-9)),
+                ),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_fleet.json", doc.to_json()).expect("write BENCH_fleet.json");
+    println!("[bench] wrote BENCH_fleet.json");
+
+    // Self-checks.  Part 1: the load-aware policy must beat blind
+    // rotation under skew.
     assert!(
-        ll_tput >= rr_tput,
-        "least-loaded must beat round-robin under skewed load: {ll_tput:.0} < {rr_tput:.0}"
+        ll.throughput_rps >= rr.throughput_rps,
+        "least-loaded must beat round-robin under skewed load: {:.0} < {:.0}",
+        ll.throughput_rps,
+        rr.throughput_rps
     );
-    println!("[bench] OK: least-loaded >= round-robin under skewed load");
+    // Part 2: conservation first — scaling must not drop anything.
+    assert_eq!(fixed.snapshot.served as usize, served_want, "fixed fleet dropped");
+    assert_eq!(elastic.snapshot.served as usize, served_want, "elastic fleet dropped");
+    let ups = elastic
+        .snapshot
+        .scale_events
+        .iter()
+        .filter(|e| e.action == ScaleAction::Up)
+        .count();
+    let downs = elastic
+        .snapshot
+        .scale_events
+        .iter()
+        .filter(|e| e.action == ScaleAction::Down)
+        .count();
+    assert!(ups >= 1, "bursts never tripped a scale-up");
+    assert!(downs >= 1, "idle gaps never tripped a scale-down");
+    // The headline: elastic capacity follows the hot task, so the tail
+    // is no worse than the always-on 6-board fleet...
+    assert!(
+        elastic.snapshot.p99_us <= fixed.snapshot.p99_us,
+        "autoscale p99 {:.1} us must be <= fixed-fleet p99 {:.1} us",
+        elastic.snapshot.p99_us,
+        fixed.snapshot.p99_us
+    );
+    // ...while paying for strictly fewer board-seconds.
+    assert!(
+        elastic.snapshot.board_seconds < fixed.snapshot.board_seconds,
+        "autoscale board-seconds {:.3} must be < fixed {:.3}",
+        elastic.snapshot.board_seconds,
+        fixed.snapshot.board_seconds
+    );
+    println!(
+        "[bench] OK: least-loaded >= round-robin; autoscale p99 {:.1} <= fixed {:.1} us \
+         with {:.3} vs {:.3} board-seconds",
+        elastic.snapshot.p99_us,
+        fixed.snapshot.p99_us,
+        elastic.snapshot.board_seconds,
+        fixed.snapshot.board_seconds
+    );
 }

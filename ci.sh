@@ -33,6 +33,15 @@ fi
 # BENCH_kernels.json (the recorded perf trajectory).
 run env BENCH_QUICK=1 cargo bench --bench kernels
 
+# Fleet self-check: routing-policy floor (least-loaded >= round-robin)
+# and the autoscale guarantee (elastic p99 <= fixed 6-board p99 on fewer
+# board-seconds, no dropped requests).  Emits BENCH_fleet.json.
+run env BENCH_QUICK=1 cargo bench --bench fleet
+
+# The unified executor / autoscaler surfaces are documented contracts;
+# rotted intra-doc links on them (e.g. a renamed trait method) fail CI.
+run env RUSTDOCFLAGS="-D rustdoc::broken-intra-doc-links" cargo doc --no-deps
+
 # Keep the feature-gated PJRT backend compiling when its vendored xla
 # dependency is enabled in Cargo.toml (it cannot resolve otherwise, so
 # skip with a warning on the offline image).

@@ -15,7 +15,10 @@
 
 use tinyml_codesign::data::prng::SplitMix64;
 use tinyml_codesign::error::Result;
-use tinyml_codesign::fleet::{Fleet, FleetConfig, Policy, Registry, RouteError};
+use tinyml_codesign::fleet::worker::precise_sleep;
+use tinyml_codesign::fleet::{
+    AutoscaleConfig, Fleet, FleetConfig, Policy, Registry, RouteError,
+};
 
 const TIME_SCALE: f64 = 20.0;
 const REQUESTS: usize = 900;
@@ -101,5 +104,55 @@ fn main() -> Result<()> {
         print!("{}", summary.render());
         println!("json: {}", summary.snapshot.to_json().to_json());
     }
+
+    // Elastic finale: one replica per task plus the telemetry-driven
+    // autoscaler, hit with a KWS burst.  Watch the controller grow the
+    // KWS replica set while the burst is hot and shrink it back once the
+    // queue drains — the scale history prints with the summary.
+    println!("\n-- autoscale demo: kws burst over a 3-board floor --");
+    let mut reg = Registry::new();
+    reg.add(tinyml_codesign::board::pynq_z2(), "kws_mlp_w3a3")?;
+    reg.add(tinyml_codesign::board::pynq_z2(), "ad_autoencoder")?;
+    reg.add(tinyml_codesign::board::pynq_z2(), "ic_cnv_w1a1")?;
+    let cfg = FleetConfig {
+        queue_cap: 1024,
+        time_scale: TIME_SCALE,
+        autoscale: Some(AutoscaleConfig {
+            interval: std::time::Duration::from_millis(2),
+            cooldown: std::time::Duration::from_millis(10),
+            max_replicas: 4,
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let fleet = Fleet::start(reg, cfg)?;
+    let handle = fleet.handle();
+    let dim = tinyml_codesign::data::feature_dim("kws");
+    let mut pending = Vec::new();
+    for _ in 0..300 {
+        loop {
+            match handle.submit("kws", vec![0.2f32; dim]) {
+                Ok(rx) => {
+                    pending.push(rx);
+                    break;
+                }
+                Err(RouteError::Overloaded) => {
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+                Err(e) => {
+                    println!("rejected: {e}");
+                    break;
+                }
+            }
+        }
+    }
+    for rx in pending {
+        let _ = rx.recv();
+    }
+    // Idle long enough for the controller to notice and shrink.
+    precise_sleep(std::time::Duration::from_millis(120));
+    let summary = fleet.shutdown();
+    print!("{}", summary.render());
+    println!("json: {}", summary.snapshot.to_json().to_json());
     Ok(())
 }

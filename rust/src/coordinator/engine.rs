@@ -8,10 +8,13 @@
 //! executables are not Sync) and replies over per-request channels.
 //!
 //! The device side is abstracted behind [`BatchExecutor`]
-//! ([`ModelExecutor`] wraps a [`LoadedModel`]) so [`serve_with`] can
-//! drive any executor; the [`crate::fleet`] board workers keep their own
-//! loop (work stealing, per-batch telemetry, simulated device timing)
-//! but reuse [`fill_window`], so every serving path batches identically.
+//! ([`ModelExecutor`] wraps a [`LoadedModel`];
+//! [`crate::fleet::worker::SimBoardExecutor`] wraps a simulated board
+//! with its dataflow-predicted device occupancy).  [`serve_with`] and the
+//! fleet's [`crate::fleet::worker::run_worker`] both drive the trait —
+//! the fleet loop adds work stealing and per-batch telemetry but contains
+//! no execute path of its own — and both batch through [`fill_window`],
+//! so every serving path batches *and executes* identically.
 
 use crate::error::{anyhow, Result};
 use crate::runtime::{argmax, LoadedModel, Runtime};
@@ -52,7 +55,10 @@ impl Default for BatchPolicy {
 }
 
 /// What the batching loop needs from a device: capacity, shapes, and a
-/// padded-batch execute.
+/// padded-batch execute.  This is the *only* execute abstraction in the
+/// crate — the single-model engine, the fleet board workers, and the
+/// pjrt-feature fleet workers all drive it, so device semantics (padding,
+/// occupancy-dependent timing) live behind the trait and nowhere else.
 pub trait BatchExecutor {
     /// Device batch capacity; batches are padded to exactly this size.
     fn device_batch(&mut self) -> Result<usize>;
@@ -60,11 +66,17 @@ pub trait BatchExecutor {
     fn input_elems(&self) -> usize;
     /// Output elements per sample.
     fn num_outputs(&self) -> usize;
-    /// Execute one padded batch of `device_batch * input_elems` values
-    /// into a caller-owned buffer of `device_batch * num_outputs` values.
-    /// The serve loop reuses both buffers across batches, so the steady
+    /// Execute one padded batch: `x` holds `device_batch * input_elems`
+    /// values of which the first `n` samples are live (`1 <= n <=
+    /// device_batch`, tail zero-padded); results land in the first
+    /// `n * num_outputs` values of `out` (sized `device_batch *
+    /// num_outputs`).  Executors compiled for a fixed batch (the AOT PJRT
+    /// path) run the whole padded batch and may ignore `n` for compute;
+    /// executors whose device time depends on occupancy (the simulated
+    /// boards' `latency + (n-1)*ii` dataflow hold) use `n` for timing.
+    /// The serve loops reuse both buffers across batches, so the steady
     /// state allocates nothing on the device path.
-    fn execute(&mut self, x: &[f32], out: &mut [f32]) -> Result<()>;
+    fn execute(&mut self, x: &[f32], n: usize, out: &mut [f32]) -> Result<()>;
 }
 
 /// [`BatchExecutor`] over the runtime's [`LoadedModel`].
@@ -86,8 +98,8 @@ impl BatchExecutor for ModelExecutor<'_> {
         self.model.manifest.num_outputs
     }
 
-    fn execute(&mut self, x: &[f32], out: &mut [f32]) -> Result<()> {
-        self.model.infer_batch_into(self.rt, x, out)
+    fn execute(&mut self, x: &[f32], n: usize, out: &mut [f32]) -> Result<()> {
+        self.model.infer_prefix_into(self.rt, x, n, out)
     }
 }
 
@@ -167,7 +179,7 @@ pub fn serve_with<E: BatchExecutor>(
         }
         x[batch.len() * feat..].fill(0.0);
         let exec_start = Instant::now();
-        exec.execute(&x, &mut out)?;
+        exec.execute(&x, batch.len(), &mut out)?;
         let exec_us = exec_start.elapsed().as_micros();
         for (i, (req, t0)) in batch.iter().enumerate() {
             let slice = out[i * n_out..(i + 1) * n_out].to_vec();
@@ -239,7 +251,8 @@ mod tests {
             2
         }
 
-        fn execute(&mut self, x: &[f32], out: &mut [f32]) -> Result<()> {
+        fn execute(&mut self, x: &[f32], n: usize, out: &mut [f32]) -> Result<()> {
+            assert!((1..=4).contains(&n), "live count out of range: {n}");
             for (o, v) in out.iter_mut().zip(x) {
                 *o = v * 2.0;
             }

@@ -1,0 +1,332 @@
+//! Telemetry-driven replica autoscaling: grow/shrink same-task replicas
+//! at runtime (the ROADMAP "Replica autoscaling" open item).
+//!
+//! The paper's designs are fixed spatial dataflow accelerators tuned per
+//! board; hls4ml's reuse factor shows parallelism is a *configuration*,
+//! not a constant.  This module lifts that to fleet scope: replica
+//! *count* becomes a runtime knob.  A controller thread samples the
+//! serving plane every [`AutoscaleConfig::interval`] and reads three
+//! signals per task:
+//!
+//! * **queue depth** — each replica's instantaneous queue depth at the
+//!   sampling instant, averaged over the task's replicas (the queues'
+//!   peak high-water marks are left to `Fleet::snapshot_phase` — one
+//!   reset-on-read counter cannot serve two consumers);
+//! * **predicted latency vs SLO** — the same rule4ml-style flow
+//!   estimate the latency-SLO router uses (`latency + depth * ii`, in
+//!   unscaled device-µs), evaluated on the task's *least-loaded* active
+//!   replica: if even the best replica would blow the SLO, queueing has
+//!   outrun the hardware;
+//! * **utilization** — Δ(device-execution µs) / (interval × replicas)
+//!   from [`super::Telemetry::exec_us_totals`].
+//!
+//! Scale **up** clones the task's fastest instance
+//! ([`super::Registry::add_replica_of`] — the flow numbers carry over,
+//! no re-estimation) when the mean per-replica queue depth crosses
+//! [`AutoscaleConfig::high_queue`] or the SLO estimate trips.  Scale
+//! **down** retires the emptiest replica once utilization has stayed
+//! below [`AutoscaleConfig::low_util`] with quiet queues for
+//! [`LOW_TICKS_FOR_SCALE_DOWN`] consecutive samples (utilization is
+//! quantized to batch completions, so one low sample can just mean a
+//! long batch hold straddled the interval).  Retirement is
+//! drain-then-join — the replica's queue is closed (racing submits
+//! bounce to the re-read router and land on surviving replicas), the
+//! worker drains every queued request, and only then is the thread
+//! joined — so scale-down can never drop an admitted request.  Every
+//! decision is recorded as a [`ScaleEvent`] riding the fleet snapshot
+//! into `report::json`.
+
+use crate::report::json::{num, obj, s, Value};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Autoscaler knobs.  Defaults suit time-scaled simulation (µs-class
+/// device latencies stretched into the ms range); real deployments
+/// would sample at seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct AutoscaleConfig {
+    /// Sampling period of the controller thread.
+    pub interval: Duration,
+    /// Scale up when the mean per-replica queue depth at a sampling
+    /// instant exceeds this.
+    pub high_queue: f64,
+    /// Scale up when the task's best replica's predicted completion
+    /// latency (`latency + depth * ii`, unscaled device-µs — the same
+    /// estimate the latency-SLO router uses) exceeds this.  `0` disables
+    /// the SLO signal.
+    pub slo_p99_us: f64,
+    /// Scale down when per-replica utilization (device-µs executed per
+    /// wall-µs) stays below this — with quiet queues — for
+    /// [`LOW_TICKS_FOR_SCALE_DOWN`] consecutive samples.
+    pub low_util: f64,
+    /// Never shrink a task below this many replicas.
+    pub min_replicas: usize,
+    /// Never grow a task above this many replicas.
+    pub max_replicas: usize,
+    /// Minimum time between scale operations on the same task — one
+    /// decision must show up in the signals before the next is made.
+    pub cooldown: Duration,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            interval: Duration::from_millis(5),
+            high_queue: 3.0,
+            slo_p99_us: 0.0,
+            low_util: 0.2,
+            min_replicas: 1,
+            max_replicas: 4,
+            cooldown: Duration::from_millis(20),
+        }
+    }
+}
+
+/// Which way a scale operation went.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleAction {
+    Up,
+    Down,
+}
+
+impl ScaleAction {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScaleAction::Up => "up",
+            ScaleAction::Down => "down",
+        }
+    }
+}
+
+/// One recorded scale decision (manual or controller-driven).
+#[derive(Clone, Debug)]
+pub struct ScaleEvent {
+    /// Seconds since the fleet started.
+    pub t_s: f64,
+    pub action: ScaleAction,
+    pub task: String,
+    /// Instance slot added (Up) or retired (Down).
+    pub instance: usize,
+    pub label: String,
+    /// What tripped the decision ("queue", "slo", "idle", "manual", ...).
+    pub reason: String,
+    /// Active replicas of `task` after the operation.
+    pub replicas_after: usize,
+}
+
+impl ScaleEvent {
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("t_s", num(self.t_s)),
+            ("action", s(self.action.name())),
+            ("task", s(&self.task)),
+            ("instance", num(self.instance as f64)),
+            ("label", s(&self.label)),
+            ("reason", s(&self.reason)),
+            ("replicas_after", num(self.replicas_after as f64)),
+        ])
+    }
+}
+
+impl fmt::Display for ScaleEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "t={:.3}s {} {} -> {} replicas ({}, [{}] {})",
+            self.t_s,
+            self.task,
+            self.action.name(),
+            self.replicas_after,
+            self.reason,
+            self.instance,
+            self.label
+        )
+    }
+}
+
+/// Consecutive low-utilization ticks required before a scale-down.
+/// Utilization is quantized to *batch completions* (a worker adds its
+/// `exec_us` to telemetry only when a batch finishes), so a single tick
+/// can read util = 0 while a replica is mid-hold on a batch longer than
+/// the sampling interval; requiring several low ticks in a row makes
+/// the observation window span at least one batch hold and keeps the
+/// controller from retiring a busy replica and oscillating.
+pub const LOW_TICKS_FOR_SCALE_DOWN: u32 = 3;
+
+/// Per-task controller state across ticks.
+struct TaskCtl {
+    last_op: Option<Instant>,
+    /// Consecutive ticks with util below the floor and quiet queues.
+    low_ticks: u32,
+}
+
+/// The controller thread body: sample every `cfg.interval` until the
+/// stop signal fires.  Spawned by `Fleet::start` when
+/// `FleetConfig::autoscale` is set; `Fleet::shutdown` stops it *before*
+/// closing queues, so no scale operation races the final drain.
+pub(super) fn run_controller(
+    state: Arc<super::FleetState>,
+    cfg: AutoscaleConfig,
+    stop: super::StopSignal,
+) {
+    let mut ctl: BTreeMap<String, TaskCtl> = BTreeMap::new();
+    let mut prev_exec_us: Vec<u128> = state.telemetry.exec_us_totals();
+    let mut last_tick = Instant::now();
+    loop {
+        {
+            let (flag, cv) = &*stop;
+            let guard = flag.lock().unwrap();
+            if *guard {
+                return;
+            }
+            let (guard, _) = cv.wait_timeout(guard, cfg.interval).unwrap();
+            if *guard {
+                return;
+            }
+        }
+        let now = Instant::now();
+        let interval_us = now.duration_since(last_tick).as_micros().max(1);
+        last_tick = now;
+        tick(&state, &cfg, &mut ctl, &mut prev_exec_us, interval_us);
+    }
+}
+
+/// One sampling tick: read the three signals per task and decide.
+fn tick(
+    state: &Arc<super::FleetState>,
+    cfg: &AutoscaleConfig,
+    ctl: &mut BTreeMap<String, TaskCtl>,
+    prev_exec_us: &mut Vec<u128>,
+    interval_us: u128,
+) {
+    let reg = state.registry.lock().unwrap().clone();
+    let exec_us = state.telemetry.exec_us_totals();
+    // One read of the live plane: instantaneous depths, active flags,
+    // and the router's latency estimator — released before any scale
+    // operation.  The controller deliberately does NOT consume the
+    // queues' peak high-water marks: those belong to
+    // `Fleet::snapshot_phase` (report rollover), and sharing one
+    // reset-on-read counter between two consumers would clobber both
+    // signals.  Sampled every `interval`, instantaneous depth is an
+    // equally persistent signal during a real backlog.
+    let (active, depths, router) = {
+        let p = state.plane.read().unwrap();
+        let depths: Vec<usize> = p.queues.iter().map(|q| q.depth()).collect();
+        (p.active.clone(), depths, p.router.clone())
+    };
+    for task in reg.tasks() {
+        let ids: Vec<usize> = reg
+            .instances
+            .iter()
+            .filter(|i| i.task == task && active.get(i.id).copied().unwrap_or(false))
+            .map(|i| i.id)
+            .collect();
+        if ids.is_empty() {
+            continue;
+        }
+        let entry = ctl
+            .entry(task.clone())
+            .or_insert_with(|| TaskCtl { last_op: None, low_ticks: 0 });
+        if entry.last_op.is_some_and(|t| t.elapsed() < cfg.cooldown) {
+            continue;
+        }
+        // Signal 1: queue depth at sampling time, averaged per replica.
+        let mean_depth = ids
+            .iter()
+            .map(|&i| depths.get(i).copied().unwrap_or(0) as f64)
+            .sum::<f64>()
+            / ids.len() as f64;
+        // Signal 2: flow-estimated completion latency on the *best*
+        // replica — if even it blows the SLO, queueing has outrun the
+        // hardware and more hardware is the only fix.
+        let best_pred_us = ids
+            .iter()
+            .map(|&i| router.predicted_latency_us(i, depths.get(i).copied().unwrap_or(0)))
+            .fold(f64::INFINITY, f64::min);
+        let slo_tripped = cfg.slo_p99_us > 0.0 && best_pred_us > cfg.slo_p99_us;
+        // Signal 3: device-time utilization over the interval.
+        let delta_us: u128 = ids
+            .iter()
+            .map(|&i| {
+                exec_us
+                    .get(i)
+                    .copied()
+                    .unwrap_or(0)
+                    .saturating_sub(prev_exec_us.get(i).copied().unwrap_or(0))
+            })
+            .sum();
+        let util = delta_us as f64 / (interval_us as f64 * ids.len() as f64);
+
+        let quiet = util < cfg.low_util && mean_depth <= 1.0;
+        entry.low_ticks = if quiet { entry.low_ticks + 1 } else { 0 };
+
+        if (mean_depth > cfg.high_queue || slo_tripped) && ids.len() < cfg.max_replicas
+        {
+            let reason = match (mean_depth > cfg.high_queue, slo_tripped) {
+                (true, true) => "queue+slo",
+                (false, true) => "slo",
+                _ => "queue",
+            };
+            if super::add_replica_inner(state, &task, reason).is_ok() {
+                entry.last_op = Some(Instant::now());
+                entry.low_ticks = 0;
+            }
+        } else if entry.low_ticks >= LOW_TICKS_FOR_SCALE_DOWN
+            && ids.len() > cfg.min_replicas
+        {
+            // Retire the emptiest replica; ties retire the costliest
+            // µJ/inference first, keeping the efficient boards.
+            let victim = ids
+                .iter()
+                .copied()
+                .min_by(|&a, &b| {
+                    depths[a].cmp(&depths[b]).then(
+                        reg.instances[b]
+                            .energy_per_inference_uj
+                            .total_cmp(&reg.instances[a].energy_per_inference_uj),
+                    )
+                })
+                .expect("ids non-empty");
+            if super::retire_replica_inner(state, victim, "idle").is_ok() {
+                entry.last_op = Some(Instant::now());
+                entry.low_ticks = 0;
+            }
+        }
+    }
+    *prev_exec_us = exec_us;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = AutoscaleConfig::default();
+        assert!(c.min_replicas >= 1);
+        assert!(c.max_replicas >= c.min_replicas);
+        assert!(c.high_queue > 0.0);
+        assert!(c.low_util > 0.0 && c.low_util < 1.0);
+        assert!(c.interval > Duration::ZERO);
+    }
+
+    #[test]
+    fn events_serialize_and_render() {
+        let e = ScaleEvent {
+            t_s: 0.125,
+            action: ScaleAction::Up,
+            task: "kws".into(),
+            instance: 6,
+            label: "Pynq-Z2#6/kws_mlp_w3a3".into(),
+            reason: "queue".into(),
+            replicas_after: 3,
+        };
+        let j = e.to_json().to_json();
+        assert!(j.contains("\"action\":\"up\""), "{j}");
+        assert!(j.contains("\"replicas_after\":3"), "{j}");
+        let text = e.to_string();
+        assert!(text.contains("kws up -> 3 replicas"), "{text}");
+    }
+}

@@ -12,21 +12,37 @@
 //! The key is a 64-bit FNV-1a digest of the task name and the quantized
 //! input.  A 64-bit digest can collide in principle; at fleet request
 //! volumes the probability is negligible (birthday bound ~n²/2⁶⁵) and
-//! this is the standard memo-cache trade.  Eviction is FIFO — the memo
-//! is a bounded buffer, not an LRU — which keeps the insert path to one
-//! `VecDeque` operation under the lock.
+//! this is the standard memo-cache trade.  Eviction is **LRU** (v2 —
+//! the v1 memo was FIFO, which evicted hot steady-traffic entries as
+//! soon as enough one-off AD frames flowed past them): every hit
+//! refreshes the entry's recency, and eviction removes the
+//! least-recently-*used* key.  Recency is a monotone tick plus a
+//! `BTreeMap<tick, key>` index, so get/insert stay O(log n) under one
+//! short lock — no unsafe linked lists.  Hit/miss counters are kept
+//! fleet-wide *and* per task, so the snapshot can show which workload
+//! actually benefits (AD frames rarely repeat; KWS wake-words do).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+/// Per-task slice of the hit/miss counters.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TaskCacheStats {
+    pub task: String,
+    pub hits: u64,
+    pub misses: u64,
+}
+
 /// Hit/miss counters plus occupancy, for telemetry and `report::json`.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub entries: usize,
     pub cap: usize,
+    /// Per-task counters, sorted by task name.
+    pub per_task: Vec<TaskCacheStats>,
 }
 
 impl CacheStats {
@@ -40,13 +56,43 @@ impl CacheStats {
     }
 }
 
-struct Inner {
-    map: HashMap<u64, (Vec<f32>, usize)>,
-    /// Insertion order for FIFO eviction (one entry per live key).
-    fifo: VecDeque<u64>,
+struct Entry {
+    output: Vec<f32>,
+    top1: usize,
+    /// Recency tick; key into `Inner::lru`.
+    tick: u64,
 }
 
-/// Bounded (task, quantized-input) → (output, top1) memo.
+struct Inner {
+    map: HashMap<u64, Entry>,
+    /// Recency index: tick → key, oldest first.  Ticks are unique (one
+    /// monotone counter), so this is a faithful LRU order.
+    lru: BTreeMap<u64, u64>,
+    tick: u64,
+    /// (task, hits, misses) — a handful of entries, scanned linearly so
+    /// the steady-state hot path never allocates a key String (the task
+    /// name is only cloned the first time a task is seen).
+    per_task: Vec<(String, u64, u64)>,
+}
+
+/// Bump a task's hit (or miss) counter without allocating when the task
+/// is already known.  Index-first lookup keeps the borrow checker happy
+/// and the insert path out of the steady state.
+fn bump_task(per_task: &mut Vec<(String, u64, u64)>, task: &str, hit: bool) {
+    match per_task.iter().position(|t| t.0 == task) {
+        Some(i) => {
+            if hit {
+                per_task[i].1 += 1;
+            } else {
+                per_task[i].2 += 1;
+            }
+        }
+        None => per_task.push((task.to_string(), hit as u64, !hit as u64)),
+    }
+}
+
+/// Bounded (task, quantized-input) → (output, top1) memo with LRU
+/// eviction.
 pub struct ResultCache {
     cap: usize,
     inner: Mutex<Inner>,
@@ -63,7 +109,12 @@ impl ResultCache {
     pub fn new(cap: usize) -> Self {
         ResultCache {
             cap: cap.max(1),
-            inner: Mutex::new(Inner { map: HashMap::new(), fifo: VecDeque::new() }),
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                lru: BTreeMap::new(),
+                tick: 0,
+                per_task: Vec::new(),
+            }),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
@@ -88,42 +139,81 @@ impl ResultCache {
         h
     }
 
-    /// Look up a key, counting hits.  Misses are counted at
+    /// Look up a key, counting hits (fleet-wide and for `task`) and
+    /// refreshing the entry's LRU position.  Misses are counted at
     /// [`Self::insert`] time instead, so a submit that is rejected by
     /// admission control (and retried, possibly many times) does not
     /// inflate the miss counter: `hits + misses` stays equal to the
     /// cached-path traffic that actually completed.
-    pub fn get(&self, key: u64) -> Option<(Vec<f32>, usize)> {
-        let inner = self.inner.lock().unwrap();
-        match inner.map.get(&key) {
-            Some((out, top1)) => {
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                Some((out.clone(), *top1))
-            }
-            None => None,
-        }
+    pub fn get(&self, task: &str, key: u64) -> Option<(Vec<f32>, usize)> {
+        let mut inner = self.inner.lock().unwrap();
+        // Reborrow once so `map` and `lru` can be field-split; one map
+        // probe does lookup + recency refresh (this is the submit hot
+        // path and the whole cache serializes on this lock).
+        let inner = &mut *inner;
+        let e = inner.map.get_mut(&key)?;
+        inner.tick += 1;
+        inner.lru.remove(&e.tick);
+        e.tick = inner.tick;
+        inner.lru.insert(e.tick, key);
+        let result = (e.output.clone(), e.top1);
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        bump_task(&mut inner.per_task, task, true);
+        Some(result)
     }
 
-    /// Insert (or refresh) an entry, evicting FIFO past the capacity.
-    /// Each insert is one executed cache miss (see [`Self::get`]).
-    pub fn insert(&self, key: u64, output: &[f32], top1: usize) {
+    /// Insert (or refresh) an entry, evicting the least-recently-used
+    /// key past the capacity.  Each insert is one executed cache miss
+    /// (see [`Self::get`]).
+    pub fn insert(&self, task: &str, key: u64, output: &[f32], top1: usize) {
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut inner = self.inner.lock().unwrap();
-        if inner.map.insert(key, (output.to_vec(), top1)).is_none() {
-            inner.fifo.push_back(key);
-            while inner.map.len() > self.cap {
-                let Some(old) = inner.fifo.pop_front() else { break };
-                inner.map.remove(&old);
+        // Reborrow through the guard once so `map` and `lru` can be
+        // field-split below.
+        let inner = &mut *inner;
+        bump_task(&mut inner.per_task, task, false);
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.entry(key) {
+            std::collections::hash_map::Entry::Occupied(mut o) => {
+                let old_tick = o.get().tick;
+                *o.get_mut() = Entry { output: output.to_vec(), top1, tick };
+                inner.lru.remove(&old_tick);
+                inner.lru.insert(tick, key);
+            }
+            std::collections::hash_map::Entry::Vacant(v) => {
+                v.insert(Entry { output: output.to_vec(), top1, tick });
+                inner.lru.insert(tick, key);
+                while inner.map.len() > self.cap {
+                    let Some((&oldest, &victim)) = inner.lru.iter().next() else {
+                        break;
+                    };
+                    inner.lru.remove(&oldest);
+                    inner.map.remove(&victim);
+                }
             }
         }
     }
 
     pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        let mut per_task: Vec<TaskCacheStats> = inner
+            .per_task
+            .iter()
+            .map(|(task, hits, misses)| TaskCacheStats {
+                task: task.clone(),
+                hits: *hits,
+                misses: *misses,
+            })
+            .collect();
+        // Sorted for stable snapshots/JSON regardless of first-seen order.
+        per_task.sort_by(|a, b| a.task.cmp(&b.task));
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
-            entries: self.inner.lock().unwrap().map.len(),
+            entries: inner.map.len(),
             cap: self.cap,
+            per_task,
         }
     }
 }
@@ -133,17 +223,26 @@ mod tests {
     use super::*;
 
     #[test]
-    fn counts_hits_and_misses() {
+    fn counts_hits_and_misses_per_task() {
         let c = ResultCache::new(8);
         let k = ResultCache::key("kws", &[0.1, 0.2]);
-        assert!(c.get(k).is_none());
-        c.insert(k, &[1.0, 2.0], 1);
-        let (out, top1) = c.get(k).expect("hit after insert");
+        assert!(c.get("kws", k).is_none());
+        c.insert("kws", k, &[1.0, 2.0], 1);
+        let (out, top1) = c.get("kws", k).expect("hit after insert");
         assert_eq!(out, vec![1.0, 2.0]);
         assert_eq!(top1, 1);
+        let ka = ResultCache::key("ad", &[0.3]);
+        c.insert("ad", ka, &[3.0], 0);
         let s = c.stats();
-        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
-        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!((s.hits, s.misses, s.entries), (1, 2, 2));
+        assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(
+            s.per_task,
+            vec![
+                TaskCacheStats { task: "ad".into(), hits: 0, misses: 1 },
+                TaskCacheStats { task: "kws".into(), hits: 1, misses: 1 },
+            ]
+        );
     }
 
     #[test]
@@ -159,24 +258,42 @@ mod tests {
     }
 
     #[test]
-    fn fifo_eviction_bounds_entries() {
+    fn lru_eviction_bounds_entries() {
         let c = ResultCache::new(4);
         for i in 0..20u32 {
-            c.insert(ResultCache::key("kws", &[i as f32]), &[i as f32], 0);
+            c.insert("kws", ResultCache::key("kws", &[i as f32]), &[i as f32], 0);
             assert!(c.stats().entries <= 4, "at insert {i}");
         }
         // Oldest evicted, newest retained.
-        assert!(c.get(ResultCache::key("kws", &[0.0])).is_none());
-        assert!(c.get(ResultCache::key("kws", &[19.0])).is_some());
+        assert!(c.get("kws", ResultCache::key("kws", &[0.0])).is_none());
+        assert!(c.get("kws", ResultCache::key("kws", &[19.0])).is_some());
+    }
+
+    #[test]
+    fn hits_refresh_recency_where_fifo_would_evict() {
+        let c = ResultCache::new(2);
+        let hot = ResultCache::key("kws", &[1.0]);
+        let cold = ResultCache::key("kws", &[2.0]);
+        c.insert("kws", hot, &[1.0], 0);
+        c.insert("kws", cold, &[2.0], 0);
+        // Touch the older entry: under FIFO it would still be first out.
+        assert!(c.get("kws", hot).is_some());
+        c.insert("kws", ResultCache::key("kws", &[3.0]), &[3.0], 0);
+        assert!(
+            c.get("kws", hot).is_some(),
+            "LRU must keep the recently-hit entry"
+        );
+        assert!(c.get("kws", cold).is_none(), "LRU evicts the stale entry");
+        assert_eq!(c.stats().entries, 2);
     }
 
     #[test]
     fn reinsert_refreshes_without_duplicating() {
         let c = ResultCache::new(2);
         let k = ResultCache::key("ad", &[1.0]);
-        c.insert(k, &[1.0], 0);
-        c.insert(k, &[2.0], 0);
+        c.insert("ad", k, &[1.0], 0);
+        c.insert("ad", k, &[2.0], 0);
         assert_eq!(c.stats().entries, 1);
-        assert_eq!(c.get(k).unwrap().0, vec![2.0]);
+        assert_eq!(c.get("ad", k).unwrap().0, vec![2.0]);
     }
 }

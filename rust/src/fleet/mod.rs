@@ -1,5 +1,5 @@
 //! Multi-board serving plane: one coordinator, many simulated
-//! accelerators.
+//! accelerators — with an **elastic** replica set.
 //!
 //! The paper deploys each MLPerf Tiny task on a *single* board and
 //! measures µs-latency / µJ-energy per inference; this module lifts that
@@ -10,13 +10,23 @@
 //! [`router::Router`] places every request on an instance under a
 //! pluggable policy with admission control; bounded per-board queues give
 //! backpressure; per-board worker threads batch through the same dynamic
-//! window as the single-model engine, steal work from same-task replicas,
-//! and hold the (simulated) accelerator for the dataflow-predicted device
-//! time.  [`telemetry::Telemetry`] aggregates the result into fleet-level
-//! p50/p99/throughput/energy.  An optional bounded [`cache::ResultCache`]
-//! in front of the router memoizes (task, quantized-input) → output so
-//! repeated requests skip the boards entirely, with hit/miss counters in
-//! the snapshot.
+//! window as the single-model engine and execute through the same
+//! [`crate::coordinator::engine::BatchExecutor`] trait (the simulated
+//! dataflow hold lives inside [`worker::SimBoardExecutor`]).
+//! [`telemetry::Telemetry`] aggregates the result into fleet-level
+//! p50/p99/throughput/energy.  An optional bounded LRU
+//! [`cache::ResultCache`] in front of the router memoizes
+//! (task, quantized-input) → output with per-task hit/miss counters.
+//!
+//! Replicas **come and go at runtime**: [`Fleet::add_replica`] clones a
+//! task's instance (flow numbers carry over) and spins up its queue +
+//! worker; [`Fleet::retire_replica`] closes the queue, lets the worker
+//! drain every admitted request, then joins it — never dropping work.
+//! Every submit re-reads the live routing plane, so membership changes
+//! are visible immediately.  With [`FleetConfig::autoscale`] set, a
+//! [`autoscale`] controller thread drives both from telemetry (queue
+//! depth, predicted latency vs SLO, utilization), and the scale history
+//! rides [`FleetSnapshot`] into `report::json`.
 //!
 //! ```no_run
 //! use tinyml_codesign::fleet::{Fleet, FleetConfig, Registry};
@@ -31,22 +41,27 @@
 //! println!("{}", summary.render());
 //! ```
 
+pub mod autoscale;
 pub mod cache;
 pub mod registry;
 pub mod router;
 pub mod telemetry;
 pub mod worker;
 
-pub use cache::{CacheStats, ResultCache};
+pub use autoscale::{AutoscaleConfig, ScaleAction, ScaleEvent};
+pub use cache::{CacheStats, ResultCache, TaskCacheStats};
 pub use registry::{BoardInstance, Registry};
 pub use router::{Policy, RouteError, Router};
 pub use telemetry::{FleetSnapshot, Telemetry};
-pub use worker::{BoardQueue, FleetRequest, WorkerConfig};
+pub use worker::{
+    BoardQueue, DataflowTiming, FleetRequest, PeerList, SimBoardExecutor, WorkerConfig,
+};
 
 use crate::coordinator::engine::{BatchPolicy, Reply};
-use crate::error::{anyhow, Result};
-use std::sync::{mpsc, Arc};
-use std::time::Duration;
+use crate::error::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 /// Fleet-wide serving knobs.
 #[derive(Clone, Copy, Debug)]
@@ -67,6 +82,8 @@ pub struct FleetConfig {
     /// of the router without touching a board; cache hits carry
     /// `batch_size == 0` in their [`Reply`].
     pub cache_cap: usize,
+    /// Telemetry-driven replica autoscaling (`None` = fixed fleet).
+    pub autoscale: Option<AutoscaleConfig>,
 }
 
 impl Default for FleetConfig {
@@ -78,22 +95,258 @@ impl Default for FleetConfig {
             time_scale: 1.0,
             work_stealing: true,
             cache_cap: 0,
+            autoscale: None,
         }
     }
 }
 
-/// A running fleet: workers + router + telemetry.
-pub struct Fleet {
-    registry: Registry,
-    router: Arc<Router>,
-    queues: Vec<Arc<BoardQueue>>,
-    telemetry: Arc<Telemetry>,
+/// The live routing surface: which queues exist and which replicas are
+/// candidates.  Swapped under a write lock on every membership change;
+/// every submit takes a read lock, so new and retired replicas are
+/// visible on the very next request.
+pub(crate) struct Plane {
+    pub(crate) router: Arc<Router>,
+    pub(crate) queues: Vec<Arc<BoardQueue>>,
+    /// `active[id]` — retired slots keep their queue (history) but are
+    /// never routed to.
+    pub(crate) active: Vec<bool>,
+}
+
+struct WorkerSlot {
+    handle: Option<std::thread::JoinHandle<u64>>,
+    /// Final serve count, filled in when the worker is joined.
+    served: u64,
+}
+
+struct Lifecycle {
+    started: Instant,
+    stopped: Option<Instant>,
+}
+
+/// Everything a running fleet shares between its public handle, its
+/// workers, and the autoscale controller.
+pub(crate) struct FleetState {
+    pub(crate) config: FleetConfig,
+    pub(crate) registry: Mutex<Registry>,
+    pub(crate) plane: RwLock<Plane>,
+    pub(crate) telemetry: Arc<Telemetry>,
     cache: Option<Arc<ResultCache>>,
-    workers: Vec<std::thread::JoinHandle<u64>>,
+    workers: Mutex<Vec<WorkerSlot>>,
+    /// task → live same-task queue list shared with the workers (for
+    /// stealing); updated in place on membership changes.
+    peers: Mutex<BTreeMap<String, PeerList>>,
+    /// Per-slot alive interval — the board-seconds ledger.
+    lifecycle: Mutex<Vec<Lifecycle>>,
+    events: Mutex<Vec<ScaleEvent>>,
+    /// Serializes add/retire end to end so slot ids stay aligned across
+    /// registry, telemetry, queues, workers, and lifecycle.
+    scale_lock: Mutex<()>,
+    pub(crate) t0: Instant,
+}
+
+/// Stop signal for the controller thread (flag + condvar for a prompt
+/// wakeup out of its sampling sleep).
+pub(crate) type StopSignal = Arc<(Mutex<bool>, Condvar)>;
+
+struct Scaler {
+    stop: StopSignal,
+    join: std::thread::JoinHandle<()>,
+}
+
+/// A running fleet: workers + live router + telemetry (+ autoscaler).
+pub struct Fleet {
+    state: Arc<FleetState>,
+    scaler: Option<Scaler>,
+}
+
+/// Spawn the worker thread for one replica slot.  The executor comes
+/// from the instance's factory ([`BoardInstance::executor`]) — the
+/// worker loop itself is executor-agnostic.
+fn spawn_worker(
+    state: &Arc<FleetState>,
+    inst: BoardInstance,
+    own: Arc<BoardQueue>,
+    peers: PeerList,
+) -> std::thread::JoinHandle<u64> {
+    let telemetry = state.telemetry.clone();
+    let cache = state.cache.clone();
+    let cfg = state.config;
+    std::thread::spawn(move || {
+        let exec = inst.executor(cfg.batch.max_batch, cfg.time_scale);
+        let wcfg = WorkerConfig { batch: cfg.batch, work_stealing: cfg.work_stealing };
+        worker::run_worker(&inst, exec, &own, &peers, &wcfg, &telemetry, cache.as_deref())
+    })
+}
+
+/// Grow `task` by one replica (clone of its fastest instance).  Returns
+/// the new slot id.  Serialized by the scale lock so concurrent scale
+/// operations cannot interleave their slot appends.
+pub(crate) fn add_replica_inner(
+    state: &Arc<FleetState>,
+    task: &str,
+    reason: &str,
+) -> Result<usize> {
+    let _guard = state.scale_lock.lock().unwrap();
+    let cfg = state.config;
+    let (inst, reg_snapshot) = {
+        let mut reg = state.registry.lock().unwrap();
+        let tmpl = reg
+            .instances
+            .iter()
+            .filter(|i| i.task == task)
+            .min_by(|a, b| a.ii_s.total_cmp(&b.ii_s))
+            .map(|i| i.id)
+            .ok_or_else(|| anyhow!("no instance hosts task '{task}' to replicate"))?;
+        let id = reg.add_replica_of(tmpl)?;
+        (reg.instances[id].clone(), reg.clone())
+    };
+    let id = inst.id;
+    let tid = state.telemetry.add_board();
+    debug_assert_eq!(tid, id, "telemetry slot out of line with registry id");
+    let q = Arc::new(BoardQueue::new(cfg.queue_cap));
+    state
+        .lifecycle
+        .lock()
+        .unwrap()
+        .push(Lifecycle { started: Instant::now(), stopped: None });
+    let peers = {
+        let mut pm = state.peers.lock().unwrap();
+        let entry = pm
+            .entry(task.to_string())
+            .or_insert_with(|| Arc::new(RwLock::new(Vec::new())))
+            .clone();
+        entry.write().unwrap().push(q.clone());
+        entry
+    };
+    let handle = spawn_worker(state, inst.clone(), q.clone(), peers);
+    state.workers.lock().unwrap().push(WorkerSlot { handle: Some(handle), served: 0 });
+    // Last step: publish to the routing plane — from here on submits can
+    // land on the new replica.
+    let replicas_after = {
+        let mut p = state.plane.write().unwrap();
+        p.queues.push(q);
+        p.active.push(true);
+        p.router = Arc::new(Router::with_active(
+            &reg_snapshot,
+            cfg.policy,
+            cfg.queue_cap,
+            &p.active,
+        ));
+        reg_snapshot
+            .instances
+            .iter()
+            .filter(|i| i.task == task && p.active[i.id])
+            .count()
+    };
+    state.events.lock().unwrap().push(ScaleEvent {
+        t_s: state.t0.elapsed().as_secs_f64(),
+        action: ScaleAction::Up,
+        task: task.to_string(),
+        instance: id,
+        label: inst.label.clone(),
+        reason: reason.to_string(),
+        replicas_after,
+    });
+    Ok(id)
+}
+
+/// Retire slot `id`: unroute it, close its queue, let the worker drain
+/// every admitted request, then join the thread (drain-then-join — a
+/// scale-down can never drop work).  Refuses to retire a task's last
+/// active replica.  Returns the worker's final serve count.
+pub(crate) fn retire_replica_inner(
+    state: &Arc<FleetState>,
+    id: usize,
+    reason: &str,
+) -> Result<u64> {
+    let _guard = state.scale_lock.lock().unwrap();
+    let cfg = state.config;
+    let reg_snapshot = state.registry.lock().unwrap().clone();
+    let Some(inst) = reg_snapshot.instances.get(id) else {
+        bail!("no instance {id} to retire");
+    };
+    let task = inst.task.clone();
+    let label = inst.label.clone();
+    let (queue, replicas_after) = {
+        let mut p = state.plane.write().unwrap();
+        if !p.active.get(id).copied().unwrap_or(false) {
+            bail!("instance {id} ({label}) is already retired");
+        }
+        let live = reg_snapshot
+            .instances
+            .iter()
+            .filter(|i| i.task == task && p.active[i.id])
+            .count();
+        if live <= 1 {
+            bail!("cannot retire the last active '{task}' replica");
+        }
+        p.active[id] = false;
+        p.router = Arc::new(Router::with_active(
+            &reg_snapshot,
+            cfg.policy,
+            cfg.queue_cap,
+            &p.active,
+        ));
+        (p.queues[id].clone(), live - 1)
+    };
+    // Stop admitting.  A submit racing on the old router bounces off the
+    // closed queue and retries on the rebuilt one; anything that won the
+    // push race is in the queue and will be drained below.
+    queue.close();
+    // Unlist from the live peer set so surviving replicas stop scanning
+    // it (the owner drains its own backlog).
+    if let Some(peers) = state.peers.lock().unwrap().get(&task) {
+        peers.write().unwrap().retain(|q| !Arc::ptr_eq(q, &queue));
+    }
+    // Drain-then-join: bounded by the queued backlog.
+    let handle = state.workers.lock().unwrap()[id].handle.take();
+    let served = match handle {
+        Some(h) => h.join().unwrap_or(0),
+        None => 0,
+    };
+    state.workers.lock().unwrap()[id].served = served;
+    state.lifecycle.lock().unwrap()[id].stopped = Some(Instant::now());
+    state.events.lock().unwrap().push(ScaleEvent {
+        t_s: state.t0.elapsed().as_secs_f64(),
+        action: ScaleAction::Down,
+        task,
+        instance: id,
+        label,
+        reason: reason.to_string(),
+        replicas_after,
+    });
+    Ok(served)
+}
+
+/// Telemetry snapshot with the fleet-level extras grafted on: cache
+/// counters, per-slot active flags, board-seconds, scale history.
+fn snapshot_of(state: &FleetState) -> FleetSnapshot {
+    let reg = state.registry.lock().unwrap().clone();
+    let mut snap = state.telemetry.snapshot(&reg);
+    if let Some(c) = &state.cache {
+        snap.cache = c.stats();
+    }
+    {
+        let p = state.plane.read().unwrap();
+        for (i, b) in snap.per_board.iter_mut().enumerate() {
+            b.active = p.active.get(i).copied().unwrap_or(false);
+        }
+    }
+    let now = Instant::now();
+    snap.board_seconds = state
+        .lifecycle
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|l| (l.stopped.unwrap_or(now) - l.started).as_secs_f64())
+        .sum();
+    snap.scale_events = state.events.lock().unwrap().clone();
+    snap
 }
 
 impl Fleet {
-    /// Spawn one worker thread per registry instance.
+    /// Spawn one worker thread per registry instance (plus the autoscale
+    /// controller when configured).
     pub fn start(registry: Registry, config: FleetConfig) -> Result<Fleet> {
         if registry.is_empty() {
             return Err(anyhow!("fleet registry is empty"));
@@ -110,89 +363,167 @@ impl Fleet {
                 ));
             }
         }
-        let router = Arc::new(Router::new(&registry, config.policy, config.queue_cap));
+        if let Some(a) = &config.autoscale {
+            if a.min_replicas < 1 || a.max_replicas < a.min_replicas {
+                return Err(anyhow!(
+                    "autoscale replica bounds {}..{} invalid",
+                    a.min_replicas,
+                    a.max_replicas
+                ));
+            }
+        }
+        let n = registry.len();
         let queues: Vec<Arc<BoardQueue>> = registry
             .instances
             .iter()
             .map(|_| Arc::new(BoardQueue::new(config.queue_cap)))
             .collect();
-        let telemetry = Arc::new(Telemetry::new(registry.len()));
-        let cache = (config.cache_cap > 0)
-            .then(|| Arc::new(ResultCache::new(config.cache_cap)));
-        let mut workers = Vec::new();
+        let telemetry = Arc::new(Telemetry::new(n));
+        let cache =
+            (config.cache_cap > 0).then(|| Arc::new(ResultCache::new(config.cache_cap)));
+        let router =
+            Arc::new(Router::new(&registry, config.policy, config.queue_cap));
+        let mut peers_map: BTreeMap<String, PeerList> = BTreeMap::new();
         for inst in &registry.instances {
-            let inst = inst.clone();
-            let own = queues[inst.id].clone();
-            // Same-task replicas to steal from, skipping self.
-            let peers: Vec<Arc<BoardQueue>> = registry
-                .eligible(&inst.task)
-                .into_iter()
-                .filter(|&i| i != inst.id)
-                .map(|i| queues[i].clone())
-                .collect();
-            let telemetry = telemetry.clone();
-            let cache = cache.clone();
-            let wcfg = WorkerConfig {
-                batch: config.batch,
-                time_scale: config.time_scale,
-                work_stealing: config.work_stealing,
-            };
-            workers.push(std::thread::spawn(move || {
-                worker::run_worker(&inst, &own, &peers, &wcfg, &telemetry, cache.as_deref())
-            }));
+            peers_map
+                .entry(inst.task.clone())
+                .or_insert_with(|| Arc::new(RwLock::new(Vec::new())))
+                .write()
+                .unwrap()
+                .push(queues[inst.id].clone());
         }
-        Ok(Fleet { registry, router, queues, telemetry, cache, workers })
+        let now = Instant::now();
+        let state = Arc::new(FleetState {
+            config,
+            registry: Mutex::new(registry.clone()),
+            plane: RwLock::new(Plane {
+                router,
+                queues: queues.clone(),
+                active: vec![true; n],
+            }),
+            telemetry,
+            cache,
+            workers: Mutex::new(Vec::new()),
+            peers: Mutex::new(peers_map),
+            lifecycle: Mutex::new(
+                (0..n).map(|_| Lifecycle { started: now, stopped: None }).collect(),
+            ),
+            events: Mutex::new(Vec::new()),
+            scale_lock: Mutex::new(()),
+            t0: now,
+        });
+        let peer_of: Vec<PeerList> = {
+            let pm = state.peers.lock().unwrap();
+            registry.instances.iter().map(|i| pm[&i.task].clone()).collect()
+        };
+        {
+            let mut workers = state.workers.lock().unwrap();
+            for (inst, peers) in registry.instances.iter().zip(peer_of) {
+                let handle = spawn_worker(
+                    &state,
+                    inst.clone(),
+                    queues[inst.id].clone(),
+                    peers,
+                );
+                workers.push(WorkerSlot { handle: Some(handle), served: 0 });
+            }
+        }
+        let scaler = config.autoscale.map(|acfg| {
+            let stop: StopSignal = Arc::new((Mutex::new(false), Condvar::new()));
+            let thread_stop = stop.clone();
+            let thread_state = state.clone();
+            let join = std::thread::spawn(move || {
+                autoscale::run_controller(thread_state, acfg, thread_stop)
+            });
+            Scaler { stop, join }
+        });
+        Ok(Fleet { state, scaler })
     }
 
     /// Cloneable submission handle.
     pub fn handle(&self) -> FleetHandle {
-        FleetHandle {
-            router: self.router.clone(),
-            queues: self.queues.clone(),
-            cache: self.cache.clone(),
-        }
+        FleetHandle { state: self.state.clone() }
     }
 
-    pub fn registry(&self) -> &Registry {
-        &self.registry
+    /// Current registry (grows as replicas are added; retired instances
+    /// keep their slots).
+    pub fn registry(&self) -> Registry {
+        self.state.registry.lock().unwrap().clone()
+    }
+
+    /// Active replica count for `task`.
+    pub fn active_replicas(&self, task: &str) -> usize {
+        let reg = self.state.registry.lock().unwrap();
+        let p = self.state.plane.read().unwrap();
+        reg.instances
+            .iter()
+            .filter(|i| i.task == task && p.active.get(i.id).copied().unwrap_or(false))
+            .count()
+    }
+
+    /// Manually grow `task` by one replica (what the autoscaler does on
+    /// a queue/SLO trip).  Returns the new slot id.
+    pub fn add_replica(&self, task: &str) -> Result<usize> {
+        add_replica_inner(&self.state, task, "manual")
+    }
+
+    /// Manually retire slot `id` (drain-then-join; refuses to retire a
+    /// task's last active replica).  Returns the worker's serve count.
+    pub fn retire_replica(&self, id: usize) -> Result<u64> {
+        retire_replica_inner(&self.state, id, "manual")
     }
 
     /// Current telemetry without stopping the fleet.
     pub fn snapshot(&self) -> FleetSnapshot {
-        snapshot_with_cache(&self.telemetry, &self.registry, self.cache.as_deref())
+        snapshot_of(&self.state)
     }
 
-    /// Close every queue, drain, join workers, and return the final
-    /// telemetry plus per-worker serve counts.
-    pub fn shutdown(self) -> FleetSummary {
-        for q in &self.queues {
+    /// Snapshot *and* roll the per-phase high-water marks over (queue
+    /// peaks reset to current depth, telemetry depth peaks to zero) —
+    /// use at bench phase boundaries so each phase reports its own peak
+    /// queue depth instead of the stickiest value since start.
+    pub fn snapshot_phase(&self) -> FleetSnapshot {
+        let snap = snapshot_of(&self.state);
+        for q in self.state.plane.read().unwrap().queues.iter() {
+            q.reset_peak();
+        }
+        self.state.telemetry.reset_depth_peaks();
+        snap
+    }
+
+    /// Stop the autoscaler, close every queue, drain, join workers, and
+    /// return the final telemetry plus per-worker serve counts.
+    pub fn shutdown(mut self) -> FleetSummary {
+        if let Some(s) = self.scaler.take() {
+            *s.stop.0.lock().unwrap() = true;
+            s.stop.1.notify_all();
+            let _ = s.join.join();
+        }
+        let queues: Vec<Arc<BoardQueue>> =
+            self.state.plane.read().unwrap().queues.clone();
+        for q in &queues {
             q.close();
         }
-        let served_per_worker: Vec<u64> =
-            self.workers.into_iter().map(|w| w.join().unwrap_or(0)).collect();
-        FleetSummary {
-            snapshot: snapshot_with_cache(
-                &self.telemetry,
-                &self.registry,
-                self.cache.as_deref(),
-            ),
-            served_per_worker,
+        let served_per_worker: Vec<u64> = {
+            let mut workers = self.state.workers.lock().unwrap();
+            workers
+                .iter_mut()
+                .map(|w| {
+                    if let Some(h) = w.handle.take() {
+                        w.served = h.join().unwrap_or(0);
+                    }
+                    w.served
+                })
+                .collect()
+        };
+        let now = Instant::now();
+        for l in self.state.lifecycle.lock().unwrap().iter_mut() {
+            if l.stopped.is_none() {
+                l.stopped = Some(now);
+            }
         }
+        FleetSummary { snapshot: snapshot_of(&self.state), served_per_worker }
     }
-}
-
-/// Telemetry snapshot with the result-cache counters grafted on (the
-/// cache lives outside `Telemetry`, which stays per-board).
-fn snapshot_with_cache(
-    telemetry: &Telemetry,
-    registry: &Registry,
-    cache: Option<&ResultCache>,
-) -> FleetSnapshot {
-    let mut snap = telemetry.snapshot(registry);
-    if let Some(c) = cache {
-        snap.cache = c.stats();
-    }
-    snap
 }
 
 /// What [`Fleet::shutdown`] returns.
@@ -207,19 +538,15 @@ impl FleetSummary {
     }
 }
 
-/// Clone-to-share submission side of a running fleet.
+/// Clone-to-share submission side of a running fleet.  Reads the live
+/// routing plane on every submit, so replicas added or retired after the
+/// handle was created are used/avoided automatically.
 #[derive(Clone)]
 pub struct FleetHandle {
-    router: Arc<Router>,
-    queues: Vec<Arc<BoardQueue>>,
-    cache: Option<Arc<ResultCache>>,
+    state: Arc<FleetState>,
 }
 
 impl FleetHandle {
-    fn depths(&self) -> Vec<usize> {
-        self.queues.iter().map(|q| q.depth()).collect()
-    }
-
     /// Route + enqueue; returns the reply channel without blocking on
     /// execution.  Admission control surfaces as `Err(RouteError)`.
     /// With result caching on, a repeated (task, quantized-input) is
@@ -231,9 +558,9 @@ impl FleetHandle {
         x: Vec<f32>,
     ) -> Result<mpsc::Receiver<Reply>, RouteError> {
         let mut cache_key = None;
-        if let Some(cache) = &self.cache {
+        if let Some(cache) = &self.state.cache {
             let key = ResultCache::key(task, &x);
-            if let Some((output, top1)) = cache.get(key) {
+            if let Some((output, top1)) = cache.get(task, key) {
                 let (tx, rx) = mpsc::channel();
                 let _ = tx.send(Reply {
                     output,
@@ -247,19 +574,22 @@ impl FleetHandle {
             cache_key = Some(key);
         }
         // select() reads a depth snapshot; the push re-checks the bound
-        // under the queue lock, so a racing submit can at worst bounce to
-        // the next replica — never overfill.  try_push hands the request
-        // back on failure, so the input is never copied.
+        // (and closed-ness) under the queue lock, so a racing submit can
+        // at worst bounce to the next replica — never overfill, never
+        // land on a retiring board.  try_push hands the request back on
+        // failure, so the input is never copied.
         let (tx, rx) = mpsc::channel();
         let mut req = FleetRequest {
             x,
             reply: tx,
-            enqueued: std::time::Instant::now(),
+            enqueued: Instant::now(),
             cache_key,
         };
+        let plane = self.state.plane.read().unwrap();
         for _ in 0..3 {
-            let idx = self.router.select(task, &self.depths())?;
-            match self.queues[idx].try_push(req) {
+            let depths: Vec<usize> = plane.queues.iter().map(|q| q.depth()).collect();
+            let idx = plane.router.select(task, &depths)?;
+            match plane.queues[idx].try_push(req) {
                 Ok(()) => return Ok(rx),
                 Err(r) => req = r,
             }
@@ -275,9 +605,9 @@ impl FleetHandle {
         rx.recv().map_err(|_| anyhow!("fleet dropped {task} request"))
     }
 
-    /// Instantaneous queue depths (observability).
+    /// Instantaneous queue depths, one per slot (observability).
     pub fn queue_depths(&self) -> Vec<usize> {
-        self.depths()
+        self.state.plane.read().unwrap().queues.iter().map(|q| q.depth()).collect()
     }
 }
 
@@ -325,6 +655,8 @@ mod tests {
         assert_eq!(summary.served_per_worker.iter().sum::<u64>(), 60);
         assert!(summary.snapshot.p99_us >= summary.snapshot.p50_us);
         assert!(summary.snapshot.energy_per_inference_uj > 0.0);
+        assert!(summary.snapshot.board_seconds > 0.0);
+        assert!(summary.snapshot.scale_events.is_empty(), "no autoscaler ran");
     }
 
     #[test]
@@ -403,8 +735,17 @@ mod tests {
         assert_eq!(summary.snapshot.cache.hits, 1);
         assert_eq!(summary.snapshot.cache.misses, 2);
         assert!(summary.snapshot.cache.entries >= 1);
+        let kws = summary
+            .snapshot
+            .cache
+            .per_task
+            .iter()
+            .find(|t| t.task == "kws")
+            .expect("per-task cache stats");
+        assert_eq!((kws.hits, kws.misses), (1, 2));
         let json = summary.snapshot.to_json().to_json();
         assert!(json.contains("\"cache_hits\""), "{json}");
+        assert!(json.contains("\"cache_per_task\""), "{json}");
     }
 
     #[test]
@@ -435,5 +776,115 @@ mod tests {
         assert_eq!(summary.snapshot.served, 120);
         let stolen: u64 = summary.snapshot.per_board.iter().map(|b| b.stolen).sum();
         assert!(stolen > 0, "idle replica should have stolen work");
+    }
+
+    #[test]
+    fn manual_scale_up_and_down_conserves_requests() {
+        let reg = Registry {
+            instances: vec![
+                BoardInstance::synthetic(0, "kws", 200.0, 40.0, 1.5),
+                BoardInstance::synthetic(1, "kws", 200.0, 40.0, 1.5),
+            ],
+        };
+        let cfg = FleetConfig { time_scale: 5.0, ..Default::default() };
+        let fleet = Fleet::start(reg, cfg).unwrap();
+        let handle = fleet.handle();
+        let mut rxs = Vec::new();
+        for _ in 0..40 {
+            rxs.push(handle.submit("kws", input_for("kws")).unwrap());
+        }
+        // Grow while traffic is in flight.
+        let id = fleet.add_replica("kws").unwrap();
+        assert_eq!(id, 2);
+        assert_eq!(fleet.active_replicas("kws"), 3);
+        for _ in 0..40 {
+            rxs.push(handle.submit("kws", input_for("kws")).unwrap());
+        }
+        // Shrink while traffic is in flight: drain-then-join means the
+        // retired board's backlog still comes back.
+        let served_by_retired = fleet.retire_replica(0).unwrap();
+        assert_eq!(fleet.active_replicas("kws"), 2);
+        for _ in 0..40 {
+            rxs.push(handle.submit("kws", input_for("kws")).unwrap());
+        }
+        for rx in rxs {
+            rx.recv().expect("admitted request must not be dropped by scaling");
+        }
+        // Retiring twice or below one replica is refused.
+        assert!(fleet.retire_replica(0).is_err(), "already retired");
+        fleet.retire_replica(1).unwrap();
+        assert!(
+            fleet.retire_replica(2).is_err(),
+            "last active replica must be kept"
+        );
+        let summary = fleet.shutdown();
+        assert_eq!(summary.snapshot.served, 120);
+        assert_eq!(summary.served_per_worker.iter().sum::<u64>(), 120);
+        assert!(summary.served_per_worker[0] >= served_by_retired);
+        assert_eq!(summary.snapshot.scale_events.len(), 3, "up, down, down");
+        assert_eq!(summary.snapshot.scale_events[0].action, ScaleAction::Up);
+        assert!(!summary.snapshot.per_board[0].active, "slot 0 retired");
+        let json = summary.snapshot.to_json().to_json();
+        assert!(json.contains("\"scale_events\""), "{json}");
+        assert!(json.contains("\"board_seconds\""), "{json}");
+    }
+
+    #[test]
+    fn autoscaler_grows_under_burst_and_shrinks_when_idle() {
+        let reg = Registry {
+            instances: vec![BoardInstance::synthetic(0, "kws", 500.0, 100.0, 1.5)],
+        };
+        let acfg = AutoscaleConfig {
+            interval: Duration::from_millis(2),
+            high_queue: 2.0,
+            low_util: 0.3,
+            min_replicas: 1,
+            max_replicas: 3,
+            cooldown: Duration::from_millis(4),
+            ..Default::default()
+        };
+        let cfg = FleetConfig {
+            queue_cap: 512,
+            time_scale: 20.0,
+            autoscale: Some(acfg),
+            ..Default::default()
+        };
+        let fleet = Fleet::start(reg, cfg).unwrap();
+        let handle = fleet.handle();
+        // Burst: ~2 ms of device time per batch against a 100-burst —
+        // the queue is deep for many controller intervals.
+        let mut rxs = Vec::new();
+        for _ in 0..100 {
+            rxs.push(handle.submit("kws", input_for("kws")).unwrap());
+        }
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        // Idle: utilization collapses; wait out several intervals +
+        // cooldowns for the controller to shrink back to the floor.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while fleet.active_replicas("kws") > 1 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(
+            fleet.active_replicas("kws"),
+            1,
+            "controller should shrink an idle fleet to min_replicas"
+        );
+        let summary = fleet.shutdown();
+        assert_eq!(summary.snapshot.served, 100, "scaling must not drop requests");
+        let ups = summary
+            .snapshot
+            .scale_events
+            .iter()
+            .filter(|e| e.action == ScaleAction::Up)
+            .count();
+        let downs = summary
+            .snapshot
+            .scale_events
+            .iter()
+            .filter(|e| e.action == ScaleAction::Down)
+            .count();
+        assert!(ups >= 1 && downs >= 1, "{:?}", summary.snapshot.scale_events);
     }
 }

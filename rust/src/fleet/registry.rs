@@ -113,8 +113,26 @@ pub struct BoardInstance {
 
 impl BoardInstance {
     /// Device time for a back-to-back batch of `n` inferences.
+    /// Delegates to [`super::worker::DataflowTiming`] — the single home
+    /// of the `latency + (n-1) * ii` model — so the executors' simulated
+    /// device holds and the workers' energy accounting can never
+    /// diverge.
     pub fn batch_latency_s(&self, n: usize) -> f64 {
-        self.latency_s + n.saturating_sub(1) as f64 * self.ii_s
+        super::worker::DataflowTiming::for_instance(self, 1.0).batch_device_s(n)
+    }
+
+    /// Default executor for this instance: the simulated board, with the
+    /// instance's flow-estimated latency/II as the device hold.  This is
+    /// the factory the fleet hands to `run_worker` — one executor per
+    /// replica, all behind `BatchExecutor`, so swapping in the
+    /// pjrt-feature executor (or a mock in tests) changes nothing in the
+    /// worker loop.
+    pub fn executor(
+        &self,
+        device_batch: usize,
+        time_scale: f64,
+    ) -> super::worker::SimBoardExecutor {
+        super::worker::SimBoardExecutor::for_instance(self, device_batch, time_scale)
     }
 
     /// Hand-specified instance (µs units) for tests and benches that
@@ -204,6 +222,22 @@ impl Registry {
         Ok(reg)
     }
 
+    /// Clone instance `template` as a new replica with the next id and a
+    /// fresh label.  The codesign numbers (latency, II, power, energy)
+    /// carry over — replicating a deployed accelerator re-uses its flow
+    /// results; it does not re-run the flow.  This is how the autoscaler
+    /// grows a task's replica set at runtime.
+    pub fn add_replica_of(&mut self, template: usize) -> Result<usize> {
+        let Some(tmpl) = self.instances.get(template) else {
+            bail!("no instance {template} to replicate");
+        };
+        let mut inst = tmpl.clone();
+        inst.id = self.instances.len();
+        inst.label = format!("{}#{}/{}", inst.board.name, inst.id, inst.model);
+        self.instances.push(inst);
+        Ok(self.instances.len() - 1)
+    }
+
     /// Instance ids hosting `task`'s model.
     pub fn eligible(&self, task: &str) -> Vec<usize> {
         self.instances
@@ -271,6 +305,24 @@ mod tests {
         let a = reg.add_with(pynq_z2(), "kws_mlp_w3a3", &fast).unwrap();
         let b = reg.add_with(pynq_z2(), "kws_mlp_w3a3", &slow).unwrap();
         assert!(reg.instances[b].ii_s > reg.instances[a].ii_s * 2.0);
+    }
+
+    #[test]
+    fn add_replica_of_clones_costs_with_fresh_identity() {
+        let mut reg = Registry {
+            instances: vec![BoardInstance::synthetic(0, "kws", 100.0, 10.0, 1.5)],
+        };
+        let id = reg.add_replica_of(0).unwrap();
+        assert_eq!(id, 1);
+        let (a, b) = (&reg.instances[0], &reg.instances[1]);
+        assert_eq!(b.id, 1);
+        assert_ne!(a.label, b.label);
+        assert_eq!(a.task, b.task);
+        assert_eq!(a.latency_s, b.latency_s);
+        assert_eq!(a.ii_s, b.ii_s);
+        assert_eq!(a.energy_per_inference_uj, b.energy_per_inference_uj);
+        assert_eq!(reg.eligible("kws"), vec![0, 1]);
+        assert!(reg.add_replica_of(9).is_err());
     }
 
     #[test]

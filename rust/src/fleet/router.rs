@@ -89,9 +89,26 @@ pub struct Router {
 
 impl Router {
     pub fn new(reg: &Registry, policy: Policy, queue_cap: usize) -> Self {
+        Self::with_active(reg, policy, queue_cap, &vec![true; reg.len()])
+    }
+
+    /// Router over the *live* subset of a registry: retired replicas keep
+    /// their slots (cost vectors stay index-aligned with queues and
+    /// telemetry) but are never candidates.  The fleet rebuilds the
+    /// router on every membership change — construction is a handful of
+    /// clones, and swapping an `Arc<Router>` atomically re-points every
+    /// subsequent submit at the new replica set.
+    pub fn with_active(
+        reg: &Registry,
+        policy: Policy,
+        queue_cap: usize,
+        active: &[bool],
+    ) -> Self {
         let mut by_task: BTreeMap<String, Vec<usize>> = BTreeMap::new();
         for inst in &reg.instances {
-            by_task.entry(inst.task.clone()).or_default().push(inst.id);
+            if active.get(inst.id).copied().unwrap_or(false) {
+                by_task.entry(inst.task.clone()).or_default().push(inst.id);
+            }
         }
         let rr = by_task.keys().map(|t| (t.clone(), AtomicUsize::new(0))).collect();
         Router {
@@ -222,6 +239,27 @@ mod tests {
         assert_eq!(r.select("kws", &[0, 0, 0]).unwrap(), 0);
         assert_eq!(r.select("kws", &[1, 0, 0]).unwrap(), 0);
         assert_eq!(r.select("kws", &[2, 0, 0]).unwrap(), 1);
+    }
+
+    #[test]
+    fn with_active_hides_retired_replicas() {
+        // Retire the fast kws board: everything lands on the slow one;
+        // retire both and the task is unknown to the router.
+        let r = Router::with_active(
+            &reg(),
+            Policy::LeastLoaded,
+            8,
+            &[false, true, true],
+        );
+        assert_eq!(r.select("kws", &[0, 3, 0]).unwrap(), 1);
+        assert_eq!(r.select("ad", &[0, 0, 0]).unwrap(), 2);
+        let none = Router::with_active(
+            &reg(),
+            Policy::LeastLoaded,
+            8,
+            &[false, false, true],
+        );
+        assert_eq!(none.select("kws", &[0, 0, 0]), Err(RouteError::UnknownTask));
     }
 
     #[test]

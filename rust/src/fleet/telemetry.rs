@@ -1,13 +1,21 @@
 //! Fleet-level observability: per-board counters + latency reservoirs,
 //! aggregated into p50/p99 latency, throughput, energy per inference, and
 //! queue depths — renderable as a table or as [`crate::report::json`].
+//!
+//! The board set is *growable*: [`Telemetry::add_board`] appends a slot
+//! when the autoscaler spins up a replica, and retired replicas keep
+//! their slots so their history stays in the final report (the snapshot
+//! marks them inactive).  Scale events and fleet board-seconds ride the
+//! [`FleetSnapshot`] into `report::json` alongside the latency and
+//! energy aggregates.
 
+use super::autoscale::ScaleEvent;
 use super::cache::CacheStats;
 use super::registry::Registry;
 use crate::data::prng::SplitMix64;
 use crate::report::json::{num, obj, s, Value};
 use std::fmt::Write as _;
-use std::sync::Mutex;
+use std::sync::{Mutex, RwLock};
 use std::time::Instant;
 
 /// Latency samples kept per board (reservoir-sampled beyond this).
@@ -58,18 +66,38 @@ impl BoardStats {
     }
 }
 
-/// Shared collector; workers record, anyone can snapshot.
+/// Shared collector; workers record, anyone can snapshot.  Slots are
+/// append-only: [`Self::add_board`] grows the set while workers are
+/// recording (the autoscaler's scale-up path).
 pub struct Telemetry {
-    boards: Vec<Mutex<BoardStats>>,
+    boards: RwLock<Vec<Mutex<BoardStats>>>,
     t0: Instant,
 }
 
 impl Telemetry {
     pub fn new(n_boards: usize) -> Self {
         Telemetry {
-            boards: (0..n_boards).map(|i| Mutex::new(BoardStats::new(i))).collect(),
+            boards: RwLock::new(
+                (0..n_boards).map(|i| Mutex::new(BoardStats::new(i))).collect(),
+            ),
             t0: Instant::now(),
         }
+    }
+
+    /// Append a slot for a newly spawned replica; returns its id.
+    pub fn add_board(&self) -> usize {
+        let mut boards = self.boards.write().unwrap();
+        let id = boards.len();
+        boards.push(Mutex::new(BoardStats::new(id)));
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.boards.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 
     /// One executed device batch on board `id`.
@@ -84,7 +112,8 @@ impl Telemetry {
         stolen: u64,
         depth_after: usize,
     ) {
-        let mut b = self.boards[id].lock().unwrap();
+        let boards = self.boards.read().unwrap();
+        let mut b = boards[id].lock().unwrap();
         b.served += latencies_us.len() as u64;
         b.batches += 1;
         b.stolen += stolen;
@@ -94,6 +123,27 @@ impl Telemetry {
         b.depth_peak = b.depth_peak.max(depth_after);
         for &v in latencies_us {
             b.push_latency(v);
+        }
+    }
+
+    /// Cumulative device-execution µs per board — the autoscaler's
+    /// utilization signal (it differences consecutive reads over its
+    /// sampling interval).
+    pub fn exec_us_totals(&self) -> Vec<u128> {
+        self.boards
+            .read()
+            .unwrap()
+            .iter()
+            .map(|m| m.lock().unwrap().exec_us_sum)
+            .collect()
+    }
+
+    /// Roll per-board queue-depth peaks over to zero; paired with
+    /// [`super::worker::BoardQueue::reset_peak`] at snapshot/phase
+    /// boundaries so `depth_peak` reads per-phase, not since-birth.
+    pub fn reset_depth_peaks(&self) {
+        for m in self.boards.read().unwrap().iter() {
+            m.lock().unwrap().depth_peak = 0;
         }
     }
 
@@ -107,7 +157,8 @@ impl Telemetry {
         let mut weighted: Vec<(f64, f64)> = Vec::new();
         let mut served = 0u64;
         let mut energy = 0.0f64;
-        for (i, m) in self.boards.iter().enumerate() {
+        let boards = self.boards.read().unwrap();
+        for (i, m) in boards.iter().enumerate().take(reg.len()) {
             let b = m.lock().unwrap();
             let inst = &reg.instances[i];
             let mut lat = b.lat_us.clone();
@@ -121,6 +172,7 @@ impl Telemetry {
             per_board.push(BoardSnapshot {
                 label: inst.label.clone(),
                 task: inst.task.clone(),
+                active: true,
                 served: b.served,
                 batches: b.batches,
                 stolen: b.stolen,
@@ -153,6 +205,10 @@ impl Telemetry {
             p99_us: weighted_percentile(&weighted, 0.99),
             energy_per_inference_uj: if served > 0 { energy / served as f64 } else { 0.0 },
             cache: CacheStats::default(),
+            // The fleet layer grafts these on: board lifecycle and scale
+            // history live beside the queues, not in the per-board stats.
+            board_seconds: 0.0,
+            scale_events: Vec::new(),
             per_board,
         }
     }
@@ -190,6 +246,8 @@ fn weighted_percentile(sorted: &[(f64, f64)], q: f64) -> f64 {
 pub struct BoardSnapshot {
     pub label: String,
     pub task: String,
+    /// `false` once the replica has been retired (history retained).
+    pub active: bool,
     pub served: u64,
     pub batches: u64,
     pub stolen: u64,
@@ -214,6 +272,12 @@ pub struct FleetSnapshot {
     /// `served` counts only board-executed requests, so total traffic is
     /// `served + cache.hits`.
     pub cache: CacheStats,
+    /// Total board-alive time: Σ over replicas of (retired-or-now −
+    /// started).  The autoscaler's cost axis — an elastic fleet should
+    /// serve the same trace with fewer board-seconds than a fixed one.
+    pub board_seconds: f64,
+    /// Scale-up/-down history (empty without the autoscaler).
+    pub scale_events: Vec<ScaleEvent>,
     pub per_board: Vec<BoardSnapshot>,
 }
 
@@ -231,6 +295,27 @@ impl FleetSnapshot {
             ("cache_entries", num(self.cache.entries as f64)),
             ("cache_hit_rate", num(self.cache.hit_rate())),
             (
+                "cache_per_task",
+                Value::Arr(
+                    self.cache
+                        .per_task
+                        .iter()
+                        .map(|t| {
+                            obj(vec![
+                                ("task", s(&t.task)),
+                                ("hits", num(t.hits as f64)),
+                                ("misses", num(t.misses as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("board_seconds", num(self.board_seconds)),
+            (
+                "scale_events",
+                Value::Arr(self.scale_events.iter().map(|e| e.to_json()).collect()),
+            ),
+            (
                 "boards",
                 Value::Arr(
                     self.per_board
@@ -239,6 +324,7 @@ impl FleetSnapshot {
                             obj(vec![
                                 ("label", s(&b.label)),
                                 ("task", s(&b.task)),
+                                ("active", Value::Bool(b.active)),
                                 ("served", num(b.served as f64)),
                                 ("batches", num(b.batches as f64)),
                                 ("stolen", num(b.stolen as f64)),
@@ -284,6 +370,26 @@ impl FleetSnapshot {
                 self.cache.cap
             )
             .ok();
+            for t in &self.cache.per_task {
+                writeln!(
+                    out,
+                    "    {:<4} {} hits / {} misses",
+                    t.task, t.hits, t.misses
+                )
+                .ok();
+            }
+        }
+        if !self.scale_events.is_empty() {
+            writeln!(
+                out,
+                "  autoscale: {} events, {:.3} board-seconds",
+                self.scale_events.len(),
+                self.board_seconds
+            )
+            .ok();
+            for e in &self.scale_events {
+                writeln!(out, "    {e}").ok();
+            }
         }
         writeln!(
             out,
@@ -292,10 +398,15 @@ impl FleetSnapshot {
         )
         .ok();
         for b in &self.per_board {
+            let label = if b.active {
+                b.label.clone()
+            } else {
+                format!("{} (retired)", b.label)
+            };
             writeln!(
                 out,
                 "  {:<26} {:>6} {:>7} {:>7} {:>9.1} {:>9.1} {:>9.2} {:>6.2} {:>6}",
-                b.label,
+                label,
                 b.served,
                 b.batches,
                 b.stolen,
@@ -343,6 +454,24 @@ mod tests {
         let parsed = crate::report::json::Value::parse(&json).unwrap();
         assert_eq!(parsed.u64_of("served").unwrap(), 4);
         assert!(snap.render().contains("fleet: 4 served"));
+    }
+
+    #[test]
+    fn boards_grow_at_runtime_and_peaks_roll_over() {
+        let mut reg = reg2();
+        let t = Telemetry::new(2);
+        assert_eq!(t.len(), 2);
+        let id = t.add_board();
+        assert_eq!(id, 2);
+        reg.instances.push(BoardInstance::synthetic(2, "kws", 100.0, 10.0, 1.5));
+        t.record_batch(2, &[50.0], 5, 45, 100.0, 0, 4);
+        let snap = t.snapshot(&reg);
+        assert_eq!(snap.per_board.len(), 3);
+        assert_eq!(snap.per_board[2].served, 1);
+        assert_eq!(snap.per_board[2].depth_peak, 4);
+        assert_eq!(t.exec_us_totals(), vec![0, 0, 45]);
+        t.reset_depth_peaks();
+        assert_eq!(t.snapshot(&reg).per_board[2].depth_peak, 0);
     }
 
     #[test]

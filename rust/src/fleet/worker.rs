@@ -5,27 +5,36 @@
 //! worker drains its queue through the *same* dynamic-batching window as
 //! the single-model engine ([`crate::coordinator::engine::fill_window`]),
 //! optionally steals queued requests from same-task replicas when its own
-//! queue runs dry before the device batch fills, then "executes" the
-//! batch by holding the board for the dataflow-simulated device time:
-//! `latency + (n-1) * ii`, scaled by the fleet's `time_scale`.
+//! queue runs dry before the device batch fills, then hands the staged
+//! batch to a [`BatchExecutor`] — the worker loop contains **no execute
+//! path of its own**.  The dataflow device timing (`latency + (n-1) * ii`
+//! stretched by `time_scale`) lives inside the executor
+//! ([`DataflowTiming`]), so the engine's `serve_with`, these fleet
+//! workers, and the pjrt-feature workers share one execution plane.
+//!
+//! Peer queues are a shared, **live** list ([`PeerList`]): replicas added
+//! or retired at runtime by the autoscaler become visible to every
+//! same-task worker on its next steal attempt, with no thread restarts.
 //!
 //! Outputs come from the packed quantized kernel core
 //! ([`crate::kernels`]): each task's class templates are quantized and
 //! packed **once per process** behind a `OnceLock` and shared by every
 //! replica worker (the seed rebuilt the f32 templates per replica
-//! thread), and each worker drives the shared matrix with its own
-//! scratch arena and staging buffers, reused across batches — the
-//! steady-state serve loop allocates only the per-request reply vectors.
+//! thread), and each executor drives the shared matrix with its own
+//! scratch arena; the worker's staging buffers are reused across batches,
+//! so the steady-state serve loop allocates only the per-request reply
+//! vectors.
 
 use super::cache::ResultCache;
 use super::registry::BoardInstance;
 use super::telemetry::Telemetry;
-use crate::coordinator::engine::{fill_window, BatchPolicy, Reply};
+use crate::coordinator::engine::{fill_window, BatchExecutor, BatchPolicy, Reply};
+use crate::error::{bail, Result};
 use crate::kernels::{PackedLinear, ScratchArena, SmoothKernel};
 use crate::runtime::argmax;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock, RwLock};
 use std::time::{Duration, Instant};
 
 /// One request in flight inside the fleet.
@@ -37,6 +46,12 @@ pub struct FleetRequest {
     /// inserts its output under this key after executing.
     pub cache_key: Option<u64>,
 }
+
+/// Live same-task replica queues (own queue included; workers skip
+/// themselves by pointer identity).  Shared between the fleet and its
+/// workers so membership changes from `add_replica` / `retire_replica`
+/// are visible without restarting anyone.
+pub type PeerList = Arc<RwLock<Vec<Arc<BoardQueue>>>>;
 
 /// Bounded MPMC queue in front of one board (router pushes, the owning
 /// worker pops, same-task workers steal).
@@ -69,9 +84,21 @@ impl BoardQueue {
         self.depth.load(Ordering::Relaxed)
     }
 
-    /// Highest depth ever observed at push time.
+    /// Highest depth observed at push time since the last
+    /// [`Self::reset_peak`].
     pub fn peak(&self) -> usize {
         self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Roll the high-water mark over to the *current* depth (not zero —
+    /// a standing backlog must stay visible).  Called when telemetry
+    /// snapshots roll over (`Fleet::snapshot_phase` at bench phase
+    /// boundaries) so per-phase peak depths are meaningful instead of
+    /// monotonically sticky across the whole run.  Deliberately has a
+    /// single consumer: the autoscaler samples instantaneous depth
+    /// instead, so a reset here never clobbers a control signal.
+    pub fn reset_peak(&self) {
+        self.peak.store(self.depth.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 
     pub fn cap(&self) -> usize {
@@ -112,8 +139,8 @@ impl BoardQueue {
     }
 
     /// Block until a request is available; `None` once closed *and*
-    /// drained.  Used by workers with nothing to steal from — no
-    /// periodic wakeups, `close()`'s notify_all is the exit signal.
+    /// drained.  Used by workers with stealing disabled — no periodic
+    /// wakeups, `close()`'s notify_all is the exit signal.
     pub fn pop_blocking(&self) -> Option<FleetRequest> {
         let mut q = self.q.lock().unwrap();
         loop {
@@ -152,7 +179,8 @@ impl BoardQueue {
         }
     }
 
-    /// Non-blocking steal (same-task replicas balancing a hot queue).
+    /// Non-blocking steal (same-task replicas balancing a hot queue, or
+    /// draining a retired replica's closed queue).
     pub fn try_steal(&self) -> Option<FleetRequest> {
         let mut q = self.q.lock().unwrap();
         let r = q.pop_front();
@@ -188,10 +216,51 @@ fn shared_packed_templates(task: &str) -> Option<Arc<PackedLinear>> {
     )
 }
 
+/// Dataflow-predicted device occupancy for one executed batch: the board
+/// is held for `latency + (n-1) * ii` device-seconds, stretched by the
+/// fleet's wall-clock `time_scale`.  The timing lives *inside* the
+/// executor (behind [`BatchExecutor::execute`]) — serve loops never time
+/// devices themselves.
+#[derive(Clone, Copy, Debug)]
+pub struct DataflowTiming {
+    /// Batch-1 end-to-end latency (device-seconds).
+    pub latency_s: f64,
+    /// Steady-state per-inference interval once the pipeline is full.
+    pub ii_s: f64,
+    /// Wall-seconds per simulated device-second (1.0 = real time).
+    pub time_scale: f64,
+}
+
+impl DataflowTiming {
+    /// No device hold at all (unit tests, conformance harnesses).
+    pub const OFF: DataflowTiming =
+        DataflowTiming { latency_s: 0.0, ii_s: 0.0, time_scale: 1.0 };
+
+    pub fn for_instance(inst: &BoardInstance, time_scale: f64) -> Self {
+        DataflowTiming { latency_s: inst.latency_s, ii_s: inst.ii_s, time_scale }
+    }
+
+    /// Unscaled device time for a back-to-back batch of `n` inferences.
+    pub fn batch_device_s(&self, n: usize) -> f64 {
+        self.latency_s + n.saturating_sub(1) as f64 * self.ii_s
+    }
+
+    /// Hold the calling thread for the batch's scaled device time.
+    pub fn hold(&self, n: usize) {
+        let wall_s = self.batch_device_s(n) * self.time_scale;
+        if wall_s > 0.0 {
+            precise_sleep(Duration::from_secs_f64(wall_s));
+        }
+    }
+}
+
 /// Deterministic surrogate forward for a task (same family as
 /// `runtime::sim`, minus the training dynamics — fleet boards serve a
-/// frozen deployed model).  The packed weight matrix is shared across
-/// replicas; scratch and staging are private to this executor.
+/// frozen deployed model), as a [`BatchExecutor`]: `execute` holds the
+/// simulated accelerator for the batch's dataflow-predicted device time,
+/// then runs one tiled pass over the shared packed weights.  The packed
+/// weight matrix is shared across replicas; scratch and staging are
+/// private to this executor.
 pub struct SimBoardExecutor {
     /// Shared packed class templates (`None` for AD, which smooths).
     packed: Option<Arc<PackedLinear>>,
@@ -199,10 +268,33 @@ pub struct SimBoardExecutor {
     scratch: ScratchArena,
     n_out: usize,
     feat: usize,
+    timing: DataflowTiming,
+    device_batch: usize,
 }
 
 impl SimBoardExecutor {
+    /// Untimed executor (tests, conformance): no device hold, default
+    /// batch capacity.
     pub fn for_task(task: &str) -> Self {
+        Self::with_timing(task, DataflowTiming::OFF, 64)
+    }
+
+    /// Executor for a registry instance: the instance's flow-estimated
+    /// latency/II become the device hold, capped at `device_batch`
+    /// samples per execute.
+    pub fn for_instance(
+        inst: &BoardInstance,
+        device_batch: usize,
+        time_scale: f64,
+    ) -> Self {
+        Self::with_timing(
+            &inst.task,
+            DataflowTiming::for_instance(inst, time_scale),
+            device_batch,
+        )
+    }
+
+    pub fn with_timing(task: &str, timing: DataflowTiming, device_batch: usize) -> Self {
         let (n_out, feat) = match task {
             "kws" => (crate::data::KWS_CLASSES, crate::data::KWS_DIM),
             "ic" => (crate::data::IC_CLASSES, crate::data::IC_DIM),
@@ -215,19 +307,15 @@ impl SimBoardExecutor {
             scratch: ScratchArena::new(),
             n_out,
             feat,
+            timing,
+            device_batch: device_batch.max(1),
         }
     }
 
-    pub fn input_elems(&self) -> usize {
-        self.feat
-    }
-
-    pub fn num_outputs(&self) -> usize {
-        self.n_out
-    }
-
     /// Forward `n` contiguous samples into `out` (`n * num_outputs`).
-    /// One tiled pass over the shared packed weights per call.
+    /// One tiled pass over the shared packed weights per call.  Pure
+    /// compute — no device hold (that is [`BatchExecutor::execute`]'s
+    /// job).
     pub fn forward_batch_into(&mut self, x: &[f32], n: usize, out: &mut [f32]) {
         debug_assert_eq!(x.len(), n * self.feat);
         debug_assert_eq!(out.len(), n * self.n_out);
@@ -252,6 +340,88 @@ impl SimBoardExecutor {
         let mut out = vec![0.0f32; self.n_out];
         self.forward_batch_into(x, 1, &mut out);
         out
+    }
+}
+
+impl BatchExecutor for SimBoardExecutor {
+    fn device_batch(&mut self) -> Result<usize> {
+        Ok(self.device_batch)
+    }
+
+    fn input_elems(&self) -> usize {
+        self.feat
+    }
+
+    fn num_outputs(&self) -> usize {
+        self.n_out
+    }
+
+    fn execute(&mut self, x: &[f32], n: usize, out: &mut [f32]) -> Result<()> {
+        if n == 0 || n > self.device_batch {
+            bail!("live count {n} outside 1..={}", self.device_batch);
+        }
+        if x.len() < n * self.feat || out.len() < n * self.n_out {
+            bail!(
+                "batch buffers too small: x {} (need {}), out {} (need {})",
+                x.len(),
+                n * self.feat,
+                out.len(),
+                n * self.n_out
+            );
+        }
+        self.timing.hold(n);
+        let (feat, n_out) = (self.feat, self.n_out);
+        self.forward_batch_into(&x[..n * feat], n, &mut out[..n * n_out]);
+        Ok(())
+    }
+}
+
+/// Fleet executor for the real PJRT backend (`--features pjrt`): the AOT
+/// executable owns the compute, [`DataflowTiming`] holds the board for
+/// the flow-predicted device occupancy exactly as the surrogate executor
+/// does — `run_worker` cannot tell them apart.
+#[cfg(feature = "pjrt")]
+pub struct PjrtBoardExecutor {
+    rt: crate::runtime::Runtime,
+    model: crate::runtime::LoadedModel,
+    timing: DataflowTiming,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtBoardExecutor {
+    /// Load `inst.model`'s artifacts from `art_dir` and wrap them with
+    /// `inst`'s dataflow-predicted occupancy.  PJRT handles are not
+    /// `Send`, so call this *inside* the worker thread.
+    pub fn load(
+        art_dir: &std::path::Path,
+        inst: &BoardInstance,
+        time_scale: f64,
+    ) -> Result<Self> {
+        Ok(PjrtBoardExecutor {
+            rt: crate::runtime::Runtime::cpu()?,
+            model: crate::runtime::LoadedModel::load(art_dir, &inst.model)?,
+            timing: DataflowTiming::for_instance(inst, time_scale),
+        })
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl BatchExecutor for PjrtBoardExecutor {
+    fn device_batch(&mut self) -> Result<usize> {
+        self.model.ensure_fwd_batch(&self.rt)
+    }
+
+    fn input_elems(&self) -> usize {
+        self.model.manifest.input_elems()
+    }
+
+    fn num_outputs(&self) -> usize {
+        self.model.manifest.num_outputs
+    }
+
+    fn execute(&mut self, x: &[f32], n: usize, out: &mut [f32]) -> Result<()> {
+        self.timing.hold(n);
+        self.model.infer_prefix_into(&self.rt, x, n, out)
     }
 }
 
@@ -294,54 +464,81 @@ pub fn precise_sleep(dur: Duration) {
     }
 }
 
-/// Knobs a worker needs beyond its instance.
+/// Knobs a worker needs beyond its instance and executor.
 pub struct WorkerConfig {
     pub batch: BatchPolicy,
-    /// Wall-seconds per simulated device-second (1.0 = real time).
-    pub time_scale: f64,
     /// Steal from same-task replicas when the own queue runs dry.
     pub work_stealing: bool,
 }
 
 /// Run one board's serve loop until its queue is closed and drained.
 /// Returns the number of requests served.
-pub fn run_worker(
+///
+/// Generic over the executor: the default fleet passes
+/// [`SimBoardExecutor`], the pjrt feature passes `PjrtBoardExecutor`
+/// (not linked: it only exists under `--features pjrt`), and tests pass
+/// mocks — the loop itself only stages batches, steals, replies, and
+/// records telemetry.  It contains no inference and no device timing;
+/// both live behind [`BatchExecutor::execute`].
+pub fn run_worker<E: BatchExecutor>(
     inst: &BoardInstance,
+    mut exec: E,
     own: &Arc<BoardQueue>,
-    peers: &[Arc<BoardQueue>],
+    peers: &PeerList,
     cfg: &WorkerConfig,
     telemetry: &Telemetry,
     cache: Option<&ResultCache>,
 ) -> u64 {
-    let mut exec = SimBoardExecutor::for_task(&inst.task);
+    let device_batch = match exec.device_batch() {
+        Ok(b) => b.max(1),
+        Err(_) => {
+            // An executor that cannot report capacity can never serve.
+            // Keep draining so callers observe dropped reply channels
+            // (an error on recv) instead of hanging until shutdown.
+            while own.pop_blocking().is_some() {}
+            return 0;
+        }
+    };
+    let window = BatchPolicy {
+        max_batch: cfg.batch.max_batch.min(device_batch).max(1),
+        max_wait: cfg.batch.max_wait,
+    };
     let feat = exec.input_elems();
     let n_out = exec.num_outputs();
-    // Batch staging, reused across batches (grown to high-water mark).
-    let mut xbuf: Vec<f32> = Vec::new();
-    let mut obuf: Vec<f32> = Vec::new();
+    // Batch staging sized to the full device batch once — fixed-batch
+    // executors (PJRT AOT) require the whole padded buffer.
+    let mut xbuf = vec![0.0f32; device_batch * feat];
+    let mut obuf = vec![0.0f32; device_batch * n_out];
     let mut served = 0u64;
     // How long to wait on the own queue before checking peers for work
     // to steal (bounds the idle-replica pickup latency).
     let steal_poll = Duration::from_micros(200);
 
-    let stealing = cfg.work_stealing && !peers.is_empty();
+    // One stolen request from a live same-task peer (the membership is
+    // re-read every call, so replicas added or retired at runtime are
+    // picked up without restarting this worker).
+    let steal_one = |own: &Arc<BoardQueue>| -> Option<FleetRequest> {
+        let list = peers.read().unwrap();
+        list.iter().filter(|q| !Arc::ptr_eq(q, own)).find_map(|q| q.try_steal())
+    };
 
     loop {
         // First request of a batch: own queue first, then — if idle —
-        // steal one from a same-task replica.  Without anyone to steal
-        // from, park on the condvar instead of polling.
+        // steal one from a same-task replica.  The closed check comes
+        // *before* the steal so a retiring replica exits as soon as its
+        // own queue is drained instead of lingering on peers' work.
         let mut stolen = 0u64;
-        let first = if stealing {
+        let first = if cfg.work_stealing {
             loop {
                 if let Some(r) = own.pop_until(Instant::now() + steal_poll) {
                     break r;
                 }
-                if let Some(r) = peers.iter().find_map(|p| p.try_steal()) {
-                    stolen += 1;
-                    break r;
-                }
                 if own.is_closed() && own.depth() == 0 {
                     return served;
+                }
+                if let Some(r) = steal_one(own) {
+                    stolen += 1;
+                    break r;
                 }
             }
         } else {
@@ -350,16 +547,21 @@ pub fn run_worker(
                 None => return served,
             }
         };
-        let mut batch = fill_window(first, &cfg.batch, |deadline| own.pop_until(deadline));
-        if stealing {
-            'steal: for peer in peers {
-                while batch.len() < cfg.batch.max_batch {
-                    match peer.try_steal() {
+        let mut batch = fill_window(first, &window, |deadline| own.pop_until(deadline));
+        if cfg.work_stealing && batch.len() < window.max_batch {
+            // Top the batch up from peers under ONE read of the live
+            // list: membership staleness within a single batch fill is
+            // harmless, and re-locking per stolen request would put
+            // O(batch) lock traffic on the serve loop.
+            let list = peers.read().unwrap();
+            'peers: for q in list.iter().filter(|q| !Arc::ptr_eq(q, own)) {
+                while batch.len() < window.max_batch {
+                    match q.try_steal() {
                         Some(r) => {
                             batch.push(r);
                             stolen += 1;
                         }
-                        None => continue 'steal,
+                        None => continue 'peers,
                     }
                 }
                 break;
@@ -367,21 +569,6 @@ pub fn run_worker(
         }
 
         let n = batch.len();
-        // Hold the (simulated) accelerator for the batch's device time.
-        let device_s = inst.batch_latency_s(n);
-        let exec_start = Instant::now();
-        precise_sleep(Duration::from_secs_f64(device_s * cfg.time_scale));
-        let exec_us = exec_start.elapsed().as_micros();
-        let energy_uj = inst.power_w * device_s * 1e6;
-
-        // One tiled pass over the shared packed weights for the whole
-        // batch (the seed re-walked the f32 template set per request).
-        if xbuf.len() < n * feat {
-            xbuf.resize(n * feat, 0.0);
-        }
-        if obuf.len() < n * n_out {
-            obuf.resize(n * n_out, 0.0);
-        }
         for (i, req) in batch.iter().enumerate() {
             // No length validation exists on the submit path, so degrade
             // gracefully on malformed inputs: truncate long ones, zero-pad
@@ -391,7 +578,20 @@ pub fn run_worker(
             xbuf[i * feat..i * feat + m].copy_from_slice(&req.x[..m]);
             xbuf[i * feat + m..(i + 1) * feat].fill(0.0);
         }
-        exec.forward_batch_into(&xbuf[..n * feat], n, &mut obuf[..n * n_out]);
+        // Fixed-batch executors run the padded tail too; keep it zeroed.
+        xbuf[n * feat..].fill(0.0);
+
+        // Energy comes from the registry's power model over *unscaled*
+        // device time, so it is invariant to time_scale.
+        let energy_uj = inst.power_w * inst.batch_latency_s(n) * 1e6;
+        let exec_start = Instant::now();
+        if exec.execute(&xbuf, n, &mut obuf).is_err() {
+            // Device failure: dropping the requests' reply senders turns
+            // into a recv error for every caller — never a hang — and the
+            // worker keeps serving subsequent batches.
+            continue;
+        }
+        let exec_us = exec_start.elapsed().as_micros();
 
         let mut latencies_us = Vec::with_capacity(n);
         let mut queue_us_sum = 0u128;
@@ -401,7 +601,7 @@ pub fn run_worker(
             if let (Some(c), Some(key)) = (cache, req.cache_key) {
                 // Insert before replying so a caller that observed the
                 // reply is guaranteed to hit on the next submit.
-                c.insert(key, &out, top1);
+                c.insert(&inst.task, key, &out, top1);
             }
             let queue_us = exec_start.duration_since(req.enqueued).as_micros();
             queue_us_sum += queue_us;
@@ -454,6 +654,30 @@ mod tests {
     }
 
     #[test]
+    fn peak_resets_to_current_depth_not_zero() {
+        let q = BoardQueue::new(8);
+        let (tx, _rx) = mpsc::channel();
+        let mk = || FleetRequest {
+            x: vec![0.0],
+            reply: tx.clone(),
+            enqueued: Instant::now(),
+            cache_key: None,
+        };
+        for _ in 0..5 {
+            q.try_push(mk()).unwrap();
+        }
+        for _ in 0..3 {
+            q.try_steal();
+        }
+        assert_eq!(q.peak(), 5);
+        q.reset_peak();
+        // Standing backlog of 2 stays visible after the rollover.
+        assert_eq!(q.peak(), 2);
+        q.try_push(mk()).unwrap();
+        assert_eq!(q.peak(), 3, "peak tracks pushes again after reset");
+    }
+
+    #[test]
     fn sim_executor_shapes_and_determinism() {
         let mut e = SimBoardExecutor::for_task("kws");
         let x = vec![0.3f32; e.input_elems()];
@@ -491,6 +715,39 @@ mod tests {
             let single = e.forward1(&s.x);
             assert_eq!(&out[i * n_out..(i + 1) * n_out], &single[..], "sample {i}");
         }
+    }
+
+    #[test]
+    fn executor_execute_respects_live_count_and_bounds() {
+        let mut e = SimBoardExecutor::for_task("kws");
+        let feat = e.input_elems();
+        let n_out = e.num_outputs();
+        let cap = e.device_batch().unwrap();
+        let ts = crate::data::test_set("kws", 2, 0xB01);
+        let mut x = vec![0.0f32; cap * feat];
+        for (i, s) in ts.samples.iter().enumerate() {
+            x[i * feat..(i + 1) * feat].copy_from_slice(&s.x);
+        }
+        let mut out = vec![f32::NAN; cap * n_out];
+        e.execute(&x, 2, &mut out).unwrap();
+        let single = e.forward1(&ts.samples[1].x);
+        assert_eq!(&out[n_out..2 * n_out], &single[..]);
+        assert!(out[2 * n_out..].iter().all(|v| v.is_nan()), "tail untouched");
+        assert!(e.execute(&x, 0, &mut out).is_err());
+        assert!(e.execute(&x, cap + 1, &mut out).is_err());
+    }
+
+    #[test]
+    fn dataflow_timing_holds_scaled_device_time() {
+        let t = DataflowTiming { latency_s: 100e-6, ii_s: 10e-6, time_scale: 2.0 };
+        assert!((t.batch_device_s(1) - 100e-6).abs() < 1e-12);
+        assert!((t.batch_device_s(8) - 170e-6).abs() < 1e-12);
+        let t0 = Instant::now();
+        t.hold(8); // 170 us * 2.0 = 340 us wall
+        assert!(t0.elapsed() >= Duration::from_micros(340));
+        let t0 = Instant::now();
+        DataflowTiming::OFF.hold(64);
+        assert!(t0.elapsed() < Duration::from_millis(5), "OFF must not sleep");
     }
 
     #[test]

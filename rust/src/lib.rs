@@ -28,9 +28,14 @@
 //!   [`fleet::router`] with pluggable policies (round-robin, least-loaded,
 //!   energy-aware, latency-SLO) plus admission control and bounded-queue
 //!   backpressure, per-board worker threads that reuse the dynamic batcher
-//!   with work stealing between same-task replicas, and [`fleet::telemetry`]
-//!   aggregating fleet-level p50/p99 latency, throughput, and energy per
-//!   inference into [`report::json`].
+//!   with work stealing between same-task replicas and execute through the
+//!   engine's `BatchExecutor` trait (the simulated dataflow hold lives in
+//!   the executor, so sim and PJRT boards share one worker loop),
+//!   [`fleet::autoscale`] growing/shrinking same-task replicas at runtime
+//!   from telemetry (queue depth, predicted latency vs SLO, utilization)
+//!   with drain-then-join retirement, and [`fleet::telemetry`] aggregating
+//!   fleet-level p50/p99 latency, throughput, energy per inference,
+//!   board-seconds, and the scale history into [`report::json`].
 //! * [`kernels`] — the packed quantized kernel core behind every surrogate
 //!   forward: templates/projections packed once into contiguous i8 with
 //!   per-row scales ([`kernels::PackedLinear`], mirroring the paper's

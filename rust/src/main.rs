@@ -11,7 +11,9 @@
 //! tinyml-codesign table <1|2|3|4|5>                  paper tables
 //! tinyml-codesign fig <2|3>                          DSE scan CSVs
 //! tinyml-codesign serve <model> [--requests N]       batching engine demo
-//! tinyml-codesign fleet [--policy rr|ll|energy|slo] [--requests N] [--cache N] [--json]
+//! tinyml-codesign fleet [--policy rr|ll|energy|slo] [--requests N] [--cache N]
+//!                       [--autoscale] [--min-replicas N] [--max-replicas N]
+//!                       [--scale-interval-us N] [--json]
 //! tinyml-codesign list                               available models
 //! ```
 
@@ -21,7 +23,7 @@ use tinyml_codesign::coordinator::{self, TrainConfig};
 use tinyml_codesign::data;
 use tinyml_codesign::eembc::{DesignPerf, Dut, Runner};
 use tinyml_codesign::error::{anyhow, bail, Result};
-use tinyml_codesign::fleet::{Fleet, FleetConfig, Policy, Registry};
+use tinyml_codesign::fleet::{AutoscaleConfig, Fleet, FleetConfig, Policy, Registry};
 use tinyml_codesign::report::tables;
 use tinyml_codesign::runtime::{LoadedModel, Runtime};
 
@@ -227,10 +229,22 @@ fn main() -> Result<()> {
                 _ => Policy::LeastLoaded,
             };
             let n = args.usize_flag("requests", 600);
+            // --autoscale: let the telemetry controller grow each task
+            // past the standard fleet's 2 replicas under load and shrink
+            // idle tasks down to the floor.
+            let autoscale = args.flag("autoscale").map(|_| AutoscaleConfig {
+                interval: std::time::Duration::from_micros(
+                    args.usize_flag("scale-interval-us", 5000) as u64,
+                ),
+                min_replicas: args.usize_flag("min-replicas", 1),
+                max_replicas: args.usize_flag("max-replicas", 4),
+                ..Default::default()
+            });
             let cfg = FleetConfig {
                 policy,
                 time_scale: 20.0,
                 cache_cap: args.usize_flag("cache", 0),
+                autoscale,
                 ..Default::default()
             };
             let fleet = Fleet::start(Registry::standard_fleet()?, cfg)?;
@@ -262,7 +276,7 @@ fn main() -> Result<()> {
             }
         }
         _ => {
-            println!("{}", include_str!("main.rs").lines().skip(2).take(14).map(|l| l.trim_start_matches("//! ")).collect::<Vec<_>>().join("\n"));
+            println!("{}", include_str!("main.rs").lines().skip(2).take(16).map(|l| l.trim_start_matches("//! ")).collect::<Vec<_>>().join("\n"));
         }
     }
     Ok(())

@@ -201,6 +201,34 @@ impl LoadedModel {
         Ok(())
     }
 
+    /// Prefix-aware batched inference (same contract as the surrogate
+    /// backend's `infer_prefix_into`, the `BatchExecutor::execute` entry
+    /// point).  The AOT executable always runs the full compiled batch,
+    /// so `n` cannot skip compute here — it only bounds how much of the
+    /// result is copied back into `out`'s live prefix.
+    pub fn infer_prefix_into(
+        &mut self,
+        rt: &Runtime,
+        x: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let batch = self.ensure_fwd_batch(rt)?;
+        if n == 0 || n > batch {
+            bail!("live count {n} outside 1..={batch}");
+        }
+        let n_out = self.manifest.num_outputs;
+        if out.len() != batch * n_out {
+            bail!("output len {} != batch {} * {}", out.len(), batch, n_out);
+        }
+        let y = self.infer_batch(rt, x)?;
+        if y.len() != out.len() {
+            bail!("device returned {} values, expected {}", y.len(), out.len());
+        }
+        out[..n * n_out].copy_from_slice(&y[..n * n_out]);
+        Ok(())
+    }
+
     /// One SGD step; parameters round-trip through the runtime.  Returns
     /// the loss.
     pub fn train_step(&mut self, rt: &Runtime, x: &[f32], y: &[i32], lr: f32) -> Result<f32> {

@@ -236,7 +236,27 @@ impl LoadedModel {
         out: &mut [f32],
     ) -> Result<()> {
         let batch = self.ensure_fwd_batch(rt)?;
+        self.infer_prefix_into(rt, x, batch, out)
+    }
+
+    /// Like [`Self::infer_batch_into`], but only the first `n` samples of
+    /// the padded batch are live: the surrogate skips the zero-padded
+    /// tail entirely (the AOT PJRT backend cannot — its executable runs
+    /// the full compiled batch — so there `n` is advisory).  This is the
+    /// [`crate::coordinator::engine::BatchExecutor::execute`] entry
+    /// point; outputs past `n * num_outputs` are left untouched.
+    pub fn infer_prefix_into(
+        &mut self,
+        rt: &Runtime,
+        x: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let batch = self.ensure_fwd_batch(rt)?;
         let feat = self.manifest.input_elems();
+        if n == 0 || n > batch {
+            bail!("live count {n} outside 1..={batch}");
+        }
         if x.len() != feat * batch {
             bail!("input len {} != batch {} * {}", x.len(), batch, feat);
         }
@@ -248,7 +268,11 @@ impl LoadedModel {
                 self.manifest.num_outputs
             );
         }
-        self.forward_batch_into(x, batch, out);
+        self.forward_batch_into(
+            &x[..n * feat],
+            n,
+            &mut out[..n * self.manifest.num_outputs],
+        );
         Ok(())
     }
 
@@ -345,6 +369,30 @@ mod tests {
         // Wrong buffer size is an error, not a panic.
         let mut short = vec![0.0f32; 3];
         assert!(m.infer_batch_into(&rt, &x, &mut short).is_err());
+    }
+
+    #[test]
+    fn infer_prefix_skips_padded_tail() {
+        let rt = Runtime::cpu().unwrap();
+        let mut m = model("kws_mlp_w3a3");
+        let batch = m.ensure_fwd_batch(&rt).unwrap();
+        let feat = m.manifest.input_elems();
+        let n_out = m.manifest.num_outputs;
+        let ts = data::test_set("kws", 3, 0x11);
+        let mut x = vec![0.0f32; batch * feat];
+        for (i, s) in ts.samples.iter().enumerate() {
+            x[i * feat..(i + 1) * feat].copy_from_slice(&s.x);
+        }
+        let full = m.infer_batch(&rt, &x).unwrap();
+        let mut buf = vec![f32::NAN; batch * n_out];
+        m.infer_prefix_into(&rt, &x, 3, &mut buf).unwrap();
+        // Live prefix matches the full-batch result bit-for-bit...
+        assert_eq!(&buf[..3 * n_out], &full[..3 * n_out]);
+        // ...and the padded tail was never touched.
+        assert!(buf[3 * n_out..].iter().all(|v| v.is_nan()));
+        // n outside 1..=batch is an error, not a panic.
+        assert!(m.infer_prefix_into(&rt, &x, 0, &mut buf).is_err());
+        assert!(m.infer_prefix_into(&rt, &x, batch + 1, &mut buf).is_err());
     }
 
     #[test]

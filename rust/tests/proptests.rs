@@ -5,11 +5,14 @@
 //! splitmix64 stream: hundreds of random cases per property, fully
 //! deterministic (failures print the case seed for replay).
 
+use tinyml_codesign::coordinator::engine::{BatchExecutor, BatchPolicy, ModelExecutor};
 use tinyml_codesign::data::prng::SplitMix64;
 use tinyml_codesign::dataflow::{Prereq, Simulator, StageSpec, UNBOUNDED_DEPTH};
 use tinyml_codesign::fifo::{optimize_fifos, DepthPolicy};
+use tinyml_codesign::fleet::worker::run_worker;
 use tinyml_codesign::fleet::{
-    BoardInstance, Fleet, FleetConfig, Policy, Registry, RouteError, Router,
+    BoardInstance, BoardQueue, Fleet, FleetConfig, FleetRequest, PeerList, Policy,
+    Registry, RouteError, Router, SimBoardExecutor, Telemetry, WorkerConfig,
 };
 use tinyml_codesign::ir::Graph;
 use tinyml_codesign::kernels::{
@@ -462,6 +465,222 @@ fn fleet_end_to_end_delivers_every_admitted_request() {
             summary.served_per_worker.iter().sum::<u64>() as usize,
             n,
             "{policy:?}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Unified execution plane: trait conformance + elastic-fleet properties.
+// ---------------------------------------------------------------------------
+
+/// Shared conformance harness for every `BatchExecutor` implementation:
+/// sane capacity/shapes, deterministic execute, per-sample independence
+/// (the live prefix of a padded batch matches a solo run of the same
+/// sample), and range-checked `n`.  Run against both the engine's
+/// `ModelExecutor` and the fleet's `SimBoardExecutor` so the two serving
+/// paths provably speak the same contract.
+fn executor_conformance<E: BatchExecutor>(exec: &mut E, name: &str) {
+    let batch = exec.device_batch().unwrap();
+    let feat = exec.input_elems();
+    let n_out = exec.num_outputs();
+    assert!(batch >= 1 && feat >= 1 && n_out >= 1, "{name}: degenerate shapes");
+    let mut rng = SplitMix64::new(0xC0F0_0001);
+    let x: Vec<f32> =
+        (0..batch * feat).map(|_| rng.next_gaussian() as f32).collect();
+    let mut a = vec![0.0f32; batch * n_out];
+    let mut b = vec![0.0f32; batch * n_out];
+    exec.execute(&x, batch, &mut a).unwrap();
+    exec.execute(&x, batch, &mut b).unwrap();
+    assert_eq!(a, b, "{name}: execute must be deterministic");
+    // Live-prefix independence: running only sample 0 must reproduce the
+    // full batch's first-sample outputs bit for bit.
+    let mut x1 = vec![0.0f32; batch * feat];
+    x1[..feat].copy_from_slice(&x[..feat]);
+    let mut one = vec![0.0f32; batch * n_out];
+    exec.execute(&x1, 1, &mut one).unwrap();
+    assert_eq!(&one[..n_out], &a[..n_out], "{name}: prefix diverges from solo run");
+    // Out-of-range live counts are errors, not panics.
+    assert!(exec.execute(&x, 0, &mut a).is_err(), "{name}: n=0 must fail");
+    assert!(
+        exec.execute(&x, batch + 1, &mut a).is_err(),
+        "{name}: n>device_batch must fail"
+    );
+}
+
+#[test]
+fn executor_conformance_model_and_sim_board() {
+    let rt = tinyml_codesign::runtime::Runtime::cpu().unwrap();
+    let mut model = tinyml_codesign::runtime::LoadedModel::load(
+        std::path::Path::new("/nonexistent"),
+        "kws_mlp_w3a3",
+    )
+    .unwrap();
+    let mut me = ModelExecutor { rt: &rt, model: &mut model };
+    executor_conformance(&mut me, "ModelExecutor");
+    for task in ["kws", "ic", "ad"] {
+        let mut sb = SimBoardExecutor::for_task(task);
+        executor_conformance(&mut sb, &format!("SimBoardExecutor/{task}"));
+    }
+}
+
+/// Executor whose outputs are unmistakably its own: proves `run_worker`
+/// has no inline inference path — every reply must have come through
+/// `BatchExecutor::execute`.
+struct MockExecutor {
+    calls: std::sync::Arc<std::sync::atomic::AtomicUsize>,
+    batch: usize,
+}
+
+impl BatchExecutor for MockExecutor {
+    fn device_batch(&mut self) -> tinyml_codesign::error::Result<usize> {
+        Ok(self.batch)
+    }
+
+    fn input_elems(&self) -> usize {
+        4
+    }
+
+    fn num_outputs(&self) -> usize {
+        2
+    }
+
+    fn execute(
+        &mut self,
+        x: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) -> tinyml_codesign::error::Result<()> {
+        self.calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        for i in 0..n {
+            out[2 * i] = x[4 * i] + 1.0;
+            out[2 * i + 1] = 42.0;
+        }
+        Ok(())
+    }
+}
+
+#[test]
+fn run_worker_has_no_inline_inference_path() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{mpsc, Arc, RwLock};
+    use std::time::Instant;
+
+    let queue = Arc::new(BoardQueue::new(64));
+    let peers: PeerList = Arc::new(RwLock::new(vec![queue.clone()]));
+    let telemetry = Arc::new(Telemetry::new(1));
+    let calls = Arc::new(AtomicUsize::new(0));
+    let exec = MockExecutor { calls: calls.clone(), batch: 4 };
+    let worker = {
+        let queue = queue.clone();
+        let telemetry = telemetry.clone();
+        std::thread::spawn(move || {
+            let inst = BoardInstance::synthetic(0, "mock", 10.0, 1.0, 1.0);
+            let wcfg = WorkerConfig {
+                batch: BatchPolicy {
+                    max_batch: 4,
+                    max_wait: std::time::Duration::from_millis(1),
+                },
+                work_stealing: true,
+            };
+            run_worker(&inst, exec, &queue, &peers, &wcfg, &telemetry, None)
+        })
+    };
+    let mut rxs = Vec::new();
+    for i in 0..20 {
+        let (tx, rx) = mpsc::channel();
+        let req = FleetRequest {
+            x: vec![i as f32; 4],
+            reply: tx,
+            enqueued: Instant::now(),
+            cache_key: None,
+        };
+        assert!(queue.try_push(req).is_ok(), "request {i} rejected");
+        rxs.push((i, rx));
+    }
+    queue.close();
+    let served = worker.join().unwrap();
+    assert_eq!(served, 20);
+    assert!(calls.load(Ordering::Relaxed) >= 1, "executor never invoked");
+    for (i, rx) in rxs {
+        let r = rx.recv().unwrap();
+        assert_eq!(
+            r.output,
+            vec![i as f32 + 1.0, 42.0],
+            "request {i}: output did not come from the mock executor"
+        );
+        assert_eq!(r.top1, 1);
+        assert!(r.batch_size >= 1 && r.batch_size <= 4);
+    }
+}
+
+#[test]
+fn prop_scale_down_drains_every_request_exactly_once() {
+    // Random interleavings of submits, scale-ups, and scale-downs:
+    // every admitted request must come back exactly once — no drops
+    // (drain-then-join) and no duplicates (each request is popped by
+    // exactly one worker).
+    let mut rng = SplitMix64::new(0x5CA1_E001);
+    for case in 0..8 {
+        let reg = Registry {
+            instances: vec![
+                BoardInstance::synthetic(0, "kws", 150.0, 30.0, 1.5),
+                BoardInstance::synthetic(1, "kws", 150.0, 30.0, 1.5),
+            ],
+        };
+        let cfg = FleetConfig {
+            time_scale: 2.0,
+            queue_cap: 512,
+            ..Default::default()
+        };
+        let fleet = Fleet::start(reg, cfg).unwrap();
+        let handle = fleet.handle();
+        let mut pending = Vec::new();
+        let mut submitted = 0u64;
+        for _ in 0..40 {
+            match rng.next_below(10) {
+                0 => {
+                    fleet.add_replica("kws").unwrap();
+                }
+                1 => {
+                    // Retire a random slot; refusals (already retired /
+                    // last replica) are part of the contract.
+                    let n_slots = fleet.registry().len();
+                    let id = rng.next_below(n_slots as u64) as usize;
+                    let _ = fleet.retire_replica(id);
+                }
+                _ => {
+                    for _ in 0..1 + rng.next_below(8) {
+                        match handle.submit("kws", vec![0.1f32; 490]) {
+                            Ok(rx) => {
+                                pending.push(rx);
+                                submitted += 1;
+                            }
+                            Err(RouteError::Overloaded) => {}
+                            Err(e) => panic!("case {case}: unexpected {e:?}"),
+                        }
+                    }
+                }
+            }
+        }
+        for rx in &pending {
+            rx.recv_timeout(std::time::Duration::from_secs(30))
+                .expect("admitted request dropped by scaling");
+            assert!(
+                rx.try_recv().is_err(),
+                "case {case}: duplicate reply for one request"
+            );
+        }
+        let summary = fleet.shutdown();
+        assert_eq!(summary.snapshot.served, submitted, "case {case}");
+        assert_eq!(
+            summary.served_per_worker.iter().sum::<u64>(),
+            submitted,
+            "case {case}"
+        );
+        assert!(
+            summary.snapshot.scale_events.len()
+                >= summary.served_per_worker.len().saturating_sub(2),
+            "case {case}: every membership change must be recorded"
         );
     }
 }
