@@ -21,11 +21,22 @@
 //! serves every request with p99 <= the fixed 6-board fleet while
 //! spending fewer board-seconds.
 //!
+//! **Part 3 — multi-tenant priority scheduling.**  One board buried
+//! under a 70/20/10 Batch/Standard/Interactive open-loop overload, once
+//! with the single-FIFO control (`fifo_queues`) and once with the
+//! class-aware queue plane.  FIFO parks interactive requests behind the
+//! batch flood and tail-drops every class uniformly; priority
+//! scheduling serves Interactive first and sheds only Batch.
+//! Self-checking: priority-scheduled Interactive p99 <= 0.5x the FIFO
+//! Interactive p99, with **zero** Interactive sheds (Batch absorbs all
+//! of the overload), and per-class stats present in the JSON.
+//!
 //! Writes `BENCH_fleet.json` (per-policy p50/p99/throughput/µJ plus the
-//! autoscale-vs-fixed comparison) the way `benches/kernels.rs` writes
-//! `BENCH_kernels.json`, so later PRs have a recorded trajectory to
-//! beat.  `BENCH_QUICK=1` (used by ci.sh) cuts the trace sizes but keeps
-//! every assertion.
+//! autoscale-vs-fixed comparison and the priority A/B) the way
+//! `benches/kernels.rs` writes `BENCH_kernels.json`, so later PRs have a
+//! recorded trajectory to beat — `tools/bench_gate.sh` holds the
+//! headline ratios as a CI floor.  `BENCH_QUICK=1` (used by ci.sh) cuts
+//! the trace sizes but keeps every assertion.
 
 use std::time::{Duration, Instant};
 use tinyml_codesign::board::{arty_a7_100t, pynq_z2};
@@ -33,8 +44,8 @@ use tinyml_codesign::data::prng::SplitMix64;
 use tinyml_codesign::dataflow::schedule::ScheduleConfig;
 use tinyml_codesign::fleet::worker::precise_sleep;
 use tinyml_codesign::fleet::{
-    AutoscaleConfig, BoardInstance, Fleet, FleetConfig, FleetSnapshot, Policy, Registry,
-    RouteError, ScaleAction,
+    AutoscaleConfig, BoardInstance, ClassSnapshot, Fleet, FleetConfig, FleetSnapshot,
+    Policy, Priority, Registry, RequestTag, RouteError, ScaleAction,
 };
 use tinyml_codesign::report::json::{num, obj, s, Value};
 
@@ -224,6 +235,83 @@ fn run_bursty(elastic: bool, per_burst: usize) -> BurstyResult {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Part 3: multi-tenant priority scheduling vs the single-FIFO control.
+// ---------------------------------------------------------------------------
+
+struct ContendedResult {
+    snapshot: FleetSnapshot,
+    submitted: usize,
+}
+
+impl ContendedResult {
+    fn class(&self, p: Priority) -> &ClassSnapshot {
+        &self.snapshot.classes[p.idx()]
+    }
+}
+
+/// One board, open-loop 70/20/10 Batch/Standard/Interactive overload:
+/// arrivals are paced at roughly twice the board's batched service rate,
+/// rejections are sheds (no retries).  The urgent classes (30% of
+/// arrivals) fit comfortably under the service rate, so with priority
+/// scheduling every shed should land on Batch.
+fn run_contended(fifo: bool, requests: usize) -> ContendedResult {
+    let reg = Registry {
+        instances: vec![BoardInstance::synthetic(0, "kws", 400.0, 80.0, 1.5)],
+    };
+    let cfg = FleetConfig {
+        policy: Policy::LeastLoaded,
+        queue_cap: 64,
+        time_scale: 20.0,
+        work_stealing: false,
+        fifo_queues: fifo,
+        ..Default::default()
+    };
+    let fleet = Fleet::start(reg, cfg).unwrap();
+    let handle = fleet.handle();
+    let mut rng = SplitMix64::new(0x9917_0001);
+    let dim = tinyml_codesign::data::feature_dim("kws");
+    let x = vec![0.2f32; dim];
+    // Batched service rate ~= 8 / ((400 + 7*80) us * 20) ~= 420 req/s;
+    // one arrival per 1.2 ms ~= 830 req/s = ~2x overload.  The
+    // interactive (10%) + standard (20%) slice is ~250 req/s — well
+    // within capacity, so only Batch *needs* to be shed.
+    let arrival = Duration::from_micros(1200);
+    let mut pending = Vec::new();
+    for i in 0..requests {
+        let priority = match rng.next_below(10) {
+            0 => Priority::Interactive,
+            1 | 2 => Priority::Standard,
+            _ => Priority::Batch, // 70%
+        };
+        let tag = RequestTag::new(i as u32 % 4, priority);
+        if let Ok(rx) = handle.submit_tagged("kws", x.clone(), tag) {
+            pending.push(rx);
+        }
+        precise_sleep(arrival);
+    }
+    for rx in pending {
+        rx.recv().expect("admitted request dropped");
+    }
+    let summary = fleet.shutdown();
+    ContendedResult { snapshot: summary.snapshot, submitted: requests }
+}
+
+fn contended_json(tag: &str, r: &ContendedResult) -> Value {
+    let shed_total: u64 = r.snapshot.classes.iter().map(|c| c.shed).sum();
+    obj(vec![
+        ("mode", s(tag)),
+        ("submitted", num(r.submitted as f64)),
+        ("served", num(r.snapshot.served as f64)),
+        ("shed_total", num(shed_total as f64)),
+        ("tenants", num(r.snapshot.tenants.len() as f64)),
+        (
+            "classes",
+            Value::Arr(r.snapshot.classes.iter().map(|c| c.to_json()).collect()),
+        ),
+    ])
+}
+
 fn bursty_json(tag: &str, r: &BurstyResult, served_want: usize) -> Value {
     obj(vec![
         ("mode", s(tag)),
@@ -297,6 +385,31 @@ fn main() {
         println!("[bench]   {e}");
     }
 
+    let contended_requests = if quick { 320 } else { 640 };
+    println!(
+        "\n[bench] part 3: priority scheduling vs FIFO under a 70/20/10 \
+         batch/standard/interactive overload ({contended_requests} requests, \
+         1 / 1.2 ms open-loop pacing, ~2x capacity)"
+    );
+    let fifo = run_contended(true, contended_requests);
+    let classful = run_contended(false, contended_requests);
+    for (tag, r) in [("fifo      ", &fifo), ("classful  ", &classful)] {
+        let i = r.class(Priority::Interactive);
+        let b = r.class(Priority::Batch);
+        println!(
+            "[bench] {tag}: interactive p99 {:>9.1} us ({} served, {} shed) | \
+             batch p99 {:>9.1} us ({} served, {} shed)",
+            i.p99_us, i.served, i.shed, b.p99_us, b.served, b.shed
+        );
+    }
+    let interactive_p99_ratio =
+        classful.class(Priority::Interactive).p99_us
+            / fifo.class(Priority::Interactive).p99_us.max(1e-9);
+    println!(
+        "[bench] interactive p99 classful / fifo = {interactive_p99_ratio:.3} \
+         (floor: <= 0.5)"
+    );
+
     let doc = obj(vec![
         ("bench", s("fleet")),
         ("quick", Value::Bool(quick)),
@@ -332,6 +445,26 @@ fn main() {
                     "board_seconds_ratio_elastic_over_fixed",
                     num(elastic.snapshot.board_seconds
                         / fixed.snapshot.board_seconds.max(1e-9)),
+                ),
+            ]),
+        ),
+        (
+            "priority",
+            obj(vec![
+                ("requests", num(contended_requests as f64)),
+                (
+                    "mix",
+                    obj(vec![
+                        ("interactive", num(0.1)),
+                        ("standard", num(0.2)),
+                        ("batch", num(0.7)),
+                    ]),
+                ),
+                ("fifo", contended_json("fifo", &fifo)),
+                ("classful", contended_json("classful", &classful)),
+                (
+                    "interactive_p99_ratio_classful_over_fifo",
+                    num(interactive_p99_ratio),
                 ),
             ]),
         ),
@@ -379,12 +512,54 @@ fn main() {
         elastic.snapshot.board_seconds,
         fixed.snapshot.board_seconds
     );
+    // Part 3: conservation in both modes (every submitted request was
+    // either served or recorded as a shed of its class)...
+    for (tag, r) in [("fifo", &fifo), ("classful", &classful)] {
+        let shed_total: u64 = r.snapshot.classes.iter().map(|c| c.shed).sum();
+        assert_eq!(
+            r.snapshot.served as usize + shed_total as usize,
+            r.submitted,
+            "{tag}: served + shed must cover the whole trace"
+        );
+    }
+    // ...the priority plane never sheds Interactive (Batch absorbs the
+    // entire overload) while FIFO's uniform tail-drop does...
+    assert_eq!(
+        classful.class(Priority::Interactive).shed,
+        0,
+        "priority scheduling must not shed interactive requests"
+    );
+    assert_eq!(
+        classful.class(Priority::Standard).shed,
+        0,
+        "the standard slice fits under its admission bound"
+    );
+    assert!(
+        classful.class(Priority::Batch).shed > 0,
+        "a 2x overload must shed batch traffic"
+    );
+    // ...and the headline: strict-priority pickup + batch-first shedding
+    // must at least halve the interactive tail vs the FIFO control.
+    assert!(
+        classful.class(Priority::Interactive).served > 0
+            && fifo.class(Priority::Interactive).served > 0,
+        "both modes must serve interactive traffic for the ratio to mean anything"
+    );
+    assert!(
+        interactive_p99_ratio <= 0.5,
+        "priority interactive p99 {:.1} us must be <= 0.5x fifo {:.1} us (ratio {:.3})",
+        classful.class(Priority::Interactive).p99_us,
+        fifo.class(Priority::Interactive).p99_us,
+        interactive_p99_ratio
+    );
     println!(
         "[bench] OK: least-loaded >= round-robin; autoscale p99 {:.1} <= fixed {:.1} us \
-         with {:.3} vs {:.3} board-seconds",
+         with {:.3} vs {:.3} board-seconds; interactive p99 ratio {:.3} <= 0.5 with \
+         zero interactive sheds",
         elastic.snapshot.p99_us,
         fixed.snapshot.p99_us,
         elastic.snapshot.board_seconds,
-        fixed.snapshot.board_seconds
+        fixed.snapshot.board_seconds,
+        interactive_p99_ratio
     );
 }

@@ -24,7 +24,7 @@ run cargo build --release
 run cargo test -q
 
 if [ "${1:-}" = "fast" ]; then
-    echo "==> skipping kernels bench, pjrt check, fmt/clippy (fast mode)"
+    echo "==> skipping kernels+fleet benches, bench gate, cargo doc, pjrt check, fmt/clippy (fast mode)"
     exit 0
 fi
 
@@ -33,10 +33,18 @@ fi
 # BENCH_kernels.json (the recorded perf trajectory).
 run env BENCH_QUICK=1 cargo bench --bench kernels
 
-# Fleet self-check: routing-policy floor (least-loaded >= round-robin)
-# and the autoscale guarantee (elastic p99 <= fixed 6-board p99 on fewer
-# board-seconds, no dropped requests).  Emits BENCH_fleet.json.
+# Fleet self-check: routing-policy floor (least-loaded >= round-robin),
+# the autoscale guarantee (elastic p99 <= fixed 6-board p99 on fewer
+# board-seconds, no dropped requests), and the priority-scheduling floor
+# (interactive p99 <= 0.5x the FIFO control, zero interactive sheds).
+# Emits BENCH_fleet.json.
 run env BENCH_QUICK=1 cargo bench --bench fleet
+
+# Bench-regression gate: first prove the gate rejects injected
+# regressions (self-test), then hold the freshly emitted BENCH_* headline
+# ratios to within 10% of the committed baselines/ floors.
+run ./tools/bench_gate.sh --self-test
+run ./tools/bench_gate.sh
 
 # The unified executor / autoscaler surfaces are documented contracts;
 # rotted intra-doc links on them (e.g. a renamed trait method) fail CI.

@@ -9,15 +9,20 @@
 //! For each policy this prints fleet p50/p99 latency, aggregate
 //! throughput, energy per inference, and the per-board breakdown
 //! (including how much work idle replicas stole), plus one JSON line for
-//! dashboards.  Device time is stretched by `TIME_SCALE` so the µs-class
-//! accelerator latencies dominate thread scheduling noise; energy numbers
-//! are computed from unscaled device time and are scale-invariant.
+//! dashboards.  Two finales follow: a KWS burst against the autoscaler,
+//! and a 70/20/10 batch/standard/interactive overload comparing the
+//! single-FIFO control against the class-aware priority queue plane
+//! (per-class p50/p99 and shed counts in the rendered tables).  Device
+//! time is stretched by `TIME_SCALE` so the µs-class accelerator
+//! latencies dominate thread scheduling noise; energy numbers are
+//! computed from unscaled device time and are scale-invariant.
 
 use tinyml_codesign::data::prng::SplitMix64;
 use tinyml_codesign::error::Result;
 use tinyml_codesign::fleet::worker::precise_sleep;
 use tinyml_codesign::fleet::{
-    AutoscaleConfig, Fleet, FleetConfig, Policy, Registry, RouteError,
+    AutoscaleConfig, BoardInstance, Fleet, FleetConfig, Policy, Priority, Registry,
+    RequestTag, RouteError,
 };
 
 const TIME_SCALE: f64 = 20.0;
@@ -154,5 +159,53 @@ fn main() -> Result<()> {
     let summary = fleet.shutdown();
     print!("{}", summary.render());
     println!("json: {}", summary.snapshot.to_json().to_json());
+
+    // Priority finale: one kws board under an open-loop overload that is
+    // 70% Batch / 20% Standard / 10% Interactive, once with the
+    // single-FIFO control and once with the class-aware queue plane.
+    // Watch the interactive tail: FIFO parks interactive requests behind
+    // the batch flood (and tail-drops them with everyone else), while
+    // priority scheduling serves them first and sheds only Batch.
+    println!("\n-- priority demo: 70/20/10 batch/standard/interactive overload --");
+    for fifo in [true, false] {
+        let reg = Registry {
+            instances: vec![BoardInstance::synthetic(0, "kws", 400.0, 80.0, 1.5)],
+        };
+        let cfg = FleetConfig {
+            queue_cap: 64,
+            time_scale: TIME_SCALE,
+            work_stealing: false,
+            fifo_queues: fifo,
+            ..Default::default()
+        };
+        let fleet = Fleet::start(reg, cfg)?;
+        let handle = fleet.handle();
+        let mut rng = SplitMix64::new(0x9917);
+        let dim = tinyml_codesign::data::feature_dim("kws");
+        let mut pending = Vec::new();
+        for i in 0..400u32 {
+            let priority = match rng.next_below(10) {
+                0 => Priority::Interactive,
+                1 | 2 => Priority::Standard,
+                _ => Priority::Batch,
+            };
+            // Open loop: a rejection is a shed, not a retry.
+            if let Ok(rx) =
+                handle.submit_tagged("kws", vec![0.2f32; dim], RequestTag::new(i % 4, priority))
+            {
+                pending.push(rx);
+            }
+            precise_sleep(std::time::Duration::from_micros(600));
+        }
+        for rx in pending {
+            let _ = rx.recv();
+        }
+        let summary = fleet.shutdown();
+        println!(
+            "\n-- queues: {} --",
+            if fifo { "fifo (control)" } else { "class-aware" }
+        );
+        print!("{}", summary.render());
+    }
     Ok(())
 }

@@ -8,10 +8,12 @@
 //! serving plane every [`AutoscaleConfig::interval`] and reads three
 //! signals per task:
 //!
-//! * **queue depth** — each replica's instantaneous queue depth at the
-//!   sampling instant, averaged over the task's replicas (the queues'
-//!   peak high-water marks are left to `Fleet::snapshot_phase` — one
-//!   reset-on-read counter cannot serve two consumers);
+//! * **queue depth** — each replica's instantaneous **urgent** depth
+//!   (Interactive + Standard; a Batch backlog is deferrable by design
+//!   and must not buy hardware) at the sampling instant, averaged over
+//!   the task's replicas (the queues' peak high-water marks are left to
+//!   `Fleet::snapshot_phase` — one reset-on-read counter cannot serve
+//!   two consumers);
 //! * **predicted latency vs SLO** — the same rule4ml-style flow
 //!   estimate the latency-SLO router uses (`latency + depth * ii`, in
 //!   unscaled device-µs), evaluated on the task's *least-loaded* active
@@ -49,8 +51,9 @@ use std::time::{Duration, Instant};
 pub struct AutoscaleConfig {
     /// Sampling period of the controller thread.
     pub interval: Duration,
-    /// Scale up when the mean per-replica queue depth at a sampling
-    /// instant exceeds this.
+    /// Scale up when the mean per-replica *urgent* queue depth
+    /// (Interactive + Standard — Batch backlog never buys hardware) at
+    /// a sampling instant exceeds this.
     pub high_queue: f64,
     /// Scale up when the task's best replica's predicted completion
     /// latency (`latency + depth * ii`, unscaled device-µs — the same
@@ -211,9 +214,23 @@ fn tick(
     // reset-on-read counter between two consumers would clobber both
     // signals.  Sampled every `interval`, instantaneous depth is an
     // equally persistent signal during a real backlog.
+    //
+    // The depth signal is the *urgent* backlog (Interactive + Standard):
+    // Batch traffic is deferrable and shed first by admission, so a
+    // Batch pile-up must not trip a scale-up — and since Interactive
+    // work jumps the queue, the urgent depth is also what the
+    // flow-latency SLO estimate should be evaluated over.  In
+    // FIFO-compat mode there is no jumping — queued Batch work really
+    // does delay urgent requests — so there the total depth is the
+    // honest signal.
+    let fifo = state.config.fifo_queues;
     let (active, depths, router) = {
         let p = state.plane.read().unwrap();
-        let depths: Vec<usize> = p.queues.iter().map(|q| q.depth()).collect();
+        let depths: Vec<usize> = p
+            .queues
+            .iter()
+            .map(|q| if fifo { q.depth() } else { q.depth_urgent() })
+            .collect();
         (p.active.clone(), depths, p.router.clone())
     };
     for task in reg.tasks() {

@@ -18,6 +18,16 @@
 //! [`cache::ResultCache`] in front of the router memoizes
 //! (task, quantized-input) → output with per-task hit/miss counters.
 //!
+//! The queue plane is **multi-tenant and class-aware** ([`queue`]):
+//! every request carries a (tenant, [`Priority`]) tag, each board
+//! queue keeps per-class subqueues with strict-priority pickup for
+//! `Interactive` (bounded by an anti-starvation guard) and weighted
+//! deficit-round-robin between `Standard` and `Batch`, and tiered
+//! admission sheds `Batch` first under overload.  Telemetry splits
+//! latency percentiles and shed counts per class (and served counts per
+//! tenant); `FleetConfig::fifo_queues` restores the single-FIFO control
+//! for A/B measurements.
+//!
 //! Replicas **come and go at runtime**: [`Fleet::add_replica`] clones a
 //! task's instance (flow numbers carry over) and spins up its queue +
 //! worker; [`Fleet::retire_replica`] closes the queue, lets the worker
@@ -43,6 +53,7 @@
 
 pub mod autoscale;
 pub mod cache;
+pub mod queue;
 pub mod registry;
 pub mod router;
 pub mod telemetry;
@@ -50,12 +61,11 @@ pub mod worker;
 
 pub use autoscale::{AutoscaleConfig, ScaleAction, ScaleEvent};
 pub use cache::{CacheStats, ResultCache, TaskCacheStats};
+pub use queue::{admit_limit, BoardQueue, FleetRequest, Priority, RequestTag};
 pub use registry::{BoardInstance, Registry};
 pub use router::{Policy, RouteError, Router};
-pub use telemetry::{FleetSnapshot, Telemetry};
-pub use worker::{
-    BoardQueue, DataflowTiming, FleetRequest, PeerList, SimBoardExecutor, WorkerConfig,
-};
+pub use telemetry::{ClassSnapshot, FleetSnapshot, ReplySample, Telemetry};
+pub use worker::{DataflowTiming, PeerList, SimBoardExecutor, WorkerConfig};
 
 use crate::coordinator::engine::{BatchPolicy, Reply};
 use crate::error::{anyhow, bail, Result};
@@ -84,6 +94,11 @@ pub struct FleetConfig {
     pub cache_cap: usize,
     /// Telemetry-driven replica autoscaling (`None` = fixed fleet).
     pub autoscale: Option<AutoscaleConfig>,
+    /// Run the queues in single-FIFO compat mode: arrival-order pickup
+    /// and uniform tail-drop admission, ignoring request priority (the
+    /// control `benches/fleet.rs` measures priority scheduling against).
+    /// Default `false` = class-aware queue plane ([`queue`]).
+    pub fifo_queues: bool,
 }
 
 impl Default for FleetConfig {
@@ -96,6 +111,7 @@ impl Default for FleetConfig {
             work_stealing: true,
             cache_cap: 0,
             autoscale: None,
+            fifo_queues: false,
         }
     }
 }
@@ -203,7 +219,7 @@ pub(crate) fn add_replica_inner(
     let id = inst.id;
     let tid = state.telemetry.add_board();
     debug_assert_eq!(tid, id, "telemetry slot out of line with registry id");
-    let q = Arc::new(BoardQueue::new(cfg.queue_cap));
+    let q = Arc::new(BoardQueue::with_mode(cfg.queue_cap, !cfg.fifo_queues));
     state
         .lifecycle
         .lock()
@@ -226,11 +242,12 @@ pub(crate) fn add_replica_inner(
         let mut p = state.plane.write().unwrap();
         p.queues.push(q);
         p.active.push(true);
-        p.router = Arc::new(Router::with_active(
+        p.router = Arc::new(Router::with_options(
             &reg_snapshot,
             cfg.policy,
             cfg.queue_cap,
             &p.active,
+            !cfg.fifo_queues,
         ));
         reg_snapshot
             .instances
@@ -281,11 +298,12 @@ pub(crate) fn retire_replica_inner(
             bail!("cannot retire the last active '{task}' replica");
         }
         p.active[id] = false;
-        p.router = Arc::new(Router::with_active(
+        p.router = Arc::new(Router::with_options(
             &reg_snapshot,
             cfg.policy,
             cfg.queue_cap,
             &p.active,
+            !cfg.fifo_queues,
         ));
         (p.queues[id].clone(), live - 1)
     };
@@ -376,13 +394,18 @@ impl Fleet {
         let queues: Vec<Arc<BoardQueue>> = registry
             .instances
             .iter()
-            .map(|_| Arc::new(BoardQueue::new(config.queue_cap)))
+            .map(|_| Arc::new(BoardQueue::with_mode(config.queue_cap, !config.fifo_queues)))
             .collect();
         let telemetry = Arc::new(Telemetry::new(n));
         let cache =
             (config.cache_cap > 0).then(|| Arc::new(ResultCache::new(config.cache_cap)));
-        let router =
-            Arc::new(Router::new(&registry, config.policy, config.queue_cap));
+        let router = Arc::new(Router::with_options(
+            &registry,
+            config.policy,
+            config.queue_cap,
+            &vec![true; n],
+            !config.fifo_queues,
+        ));
         let mut peers_map: BTreeMap<String, PeerList> = BTreeMap::new();
         for inst in &registry.instances {
             peers_map
@@ -547,15 +570,42 @@ pub struct FleetHandle {
 }
 
 impl FleetHandle {
-    /// Route + enqueue; returns the reply channel without blocking on
-    /// execution.  Admission control surfaces as `Err(RouteError)`.
-    /// With result caching on, a repeated (task, quantized-input) is
-    /// answered here — in front of the router — with `batch_size == 0`
-    /// marking the cache hit; the boards never see it.
+    /// Route + enqueue with the default tag (tenant 0, `Standard`) —
+    /// the pre-priority behavior.  See [`Self::submit_tagged`].
     pub fn submit(
         &self,
         task: &str,
         x: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Reply>, RouteError> {
+        self.submit_tagged(task, x, RequestTag::default())
+    }
+
+    /// Route + enqueue; returns the reply channel without blocking on
+    /// execution.  Admission control surfaces as `Err(RouteError)` —
+    /// counted in telemetry as a **shed** of the request's class
+    /// (`Overloaded` / `SloUnattainable`; an unknown task is a caller
+    /// bug, not a shed).  With result caching on, a repeated (task,
+    /// quantized-input) is answered here — in front of the router —
+    /// with `batch_size == 0` marking the cache hit; the boards never
+    /// see it.
+    pub fn submit_tagged(
+        &self,
+        task: &str,
+        x: Vec<f32>,
+        tag: RequestTag,
+    ) -> Result<mpsc::Receiver<Reply>, RouteError> {
+        let res = self.submit_inner(task, x, tag);
+        if let Err(RouteError::Overloaded | RouteError::SloUnattainable) = &res {
+            self.state.telemetry.record_shed(tag.priority);
+        }
+        res
+    }
+
+    fn submit_inner(
+        &self,
+        task: &str,
+        x: Vec<f32>,
+        tag: RequestTag,
     ) -> Result<mpsc::Receiver<Reply>, RouteError> {
         let mut cache_key = None;
         if let Some(cache) = &self.state.cache {
@@ -573,22 +623,48 @@ impl FleetHandle {
             }
             cache_key = Some(key);
         }
-        // select() reads a depth snapshot; the push re-checks the bound
-        // (and closed-ness) under the queue lock, so a racing submit can
-        // at worst bounce to the next replica — never overfill, never
-        // land on a retiring board.  try_push hands the request back on
-        // failure, so the input is never copied.
+        // select_class() reads a depth snapshot; the push re-checks the
+        // class bound (and closed-ness) under the queue lock, so a
+        // racing submit can at worst bounce to the next replica — never
+        // overfill, never land on a retiring board.  try_push hands the
+        // request back on failure, so the input is never copied.
         let (tx, rx) = mpsc::channel();
         let mut req = FleetRequest {
             x,
             reply: tx,
             enqueued: Instant::now(),
             cache_key,
+            tag,
         };
+        let fifo = self.state.config.fifo_queues;
         let plane = self.state.plane.read().unwrap();
         for _ in 0..3 {
             let depths: Vec<usize> = plane.queues.iter().map(|q| q.depth()).collect();
-            let idx = plane.router.select(task, &depths)?;
+            // Load signal for ordering/SLO prediction: only the backlog
+            // that is actually *ahead of this class* counts.  An
+            // Interactive request jumps every queued Standard/Batch
+            // request, so it is predicted (and balanced) against the
+            // interactive backlog alone; Standard jumps Batch; Batch
+            // waits behind everything (as does every class in FIFO-compat
+            // mode), so those just borrow `depths` — no second Vec.  The
+            // jump model is optimistic by up to ~one device window (see
+            // `Router::select_class` for the bound).
+            let ahead_own: Option<Vec<usize>> = match tag.priority {
+                _ if fifo => None,
+                Priority::Interactive => Some(
+                    plane
+                        .queues
+                        .iter()
+                        .map(|q| q.depth_class(Priority::Interactive))
+                        .collect(),
+                ),
+                Priority::Standard => {
+                    Some(plane.queues.iter().map(|q| q.depth_urgent()).collect())
+                }
+                Priority::Batch => None,
+            };
+            let ahead: &[usize] = ahead_own.as_deref().unwrap_or(&depths);
+            let idx = plane.router.select_class(task, &depths, ahead, tag.priority)?;
             match plane.queues[idx].try_push(req) {
                 Ok(()) => return Ok(rx),
                 Err(r) => req = r,
@@ -597,10 +673,15 @@ impl FleetHandle {
         Err(RouteError::Overloaded)
     }
 
-    /// Blocking round trip.
+    /// Blocking round trip with the default tag.
     pub fn infer(&self, task: &str, x: Vec<f32>) -> Result<Reply> {
+        self.infer_tagged(task, x, RequestTag::default())
+    }
+
+    /// Blocking round trip with an explicit (tenant, priority) tag.
+    pub fn infer_tagged(&self, task: &str, x: Vec<f32>, tag: RequestTag) -> Result<Reply> {
         let rx = self
-            .submit(task, x)
+            .submit_tagged(task, x, tag)
             .map_err(|e| anyhow!("fleet rejected {task} request: {e}"))?;
         rx.recv().map_err(|_| anyhow!("fleet dropped {task} request"))
     }
@@ -706,6 +787,106 @@ mod tests {
         }
         let summary = fleet.shutdown();
         assert_eq!(summary.snapshot.served as usize, accepted);
+        // Every rejection was recorded as a shed of the request's class
+        // (untagged submits default to Standard).
+        assert_eq!(summary.snapshot.classes[1].shed as usize, rejected);
+        assert_eq!(summary.snapshot.classes[0].shed, 0);
+    }
+
+    #[test]
+    fn priority_classes_round_trip_with_per_class_stats() {
+        // One slow board, a pile of Batch work, then a few Interactive
+        // requests: priority pickup must let the interactive tail beat
+        // the batch tail, and the snapshot must split stats per class
+        // and per tenant.
+        let reg = Registry {
+            instances: vec![BoardInstance::synthetic(0, "kws", 500.0, 100.0, 1.5)],
+        };
+        let cfg = FleetConfig {
+            time_scale: 5.0,
+            work_stealing: false,
+            ..Default::default()
+        };
+        let fleet = Fleet::start(reg, cfg).unwrap();
+        let handle = fleet.handle();
+        let mut rxs = Vec::new();
+        for i in 0..30u32 {
+            let tag = RequestTag::new(i % 3, Priority::Batch);
+            rxs.push(handle.submit_tagged("kws", input_for("kws"), tag).unwrap());
+        }
+        for _ in 0..6 {
+            let tag = RequestTag::new(7, Priority::Interactive);
+            rxs.push(handle.submit_tagged("kws", input_for("kws"), tag).unwrap());
+        }
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let summary = fleet.shutdown();
+        assert_eq!(summary.snapshot.served, 36);
+        let classes = &summary.snapshot.classes;
+        assert_eq!((classes[0].served, classes[1].served, classes[2].served), (6, 0, 30));
+        assert_eq!(classes.iter().map(|c| c.shed).sum::<u64>(), 0);
+        assert!(
+            classes[0].p99_us <= classes[2].p99_us,
+            "interactive p99 {:.0} us must not exceed batch p99 {:.0} us",
+            classes[0].p99_us,
+            classes[2].p99_us
+        );
+        // Tenants 0,1,2 (batch) + 7 (interactive).
+        assert_eq!(summary.snapshot.tenants.len(), 4);
+        assert_eq!(
+            summary.snapshot.tenants.iter().map(|t| t.served).sum::<u64>(),
+            36
+        );
+        let json = summary.snapshot.to_json().to_json();
+        assert!(json.contains("\"classes\""), "{json}");
+        assert!(json.contains("\"tenants\""), "{json}");
+        assert!(json.contains("\"depth_peak_class\""), "{json}");
+    }
+
+    #[test]
+    fn fifo_mode_round_trips_and_accounts_sheds_per_class() {
+        // FIFO-compat queues behave like the pre-priority fleet (uniform
+        // tail-drop, arrival-order pickup — the deterministic version of
+        // that property lives in the queue unit tests); shed accounting
+        // still splits per class.
+        let reg = Registry {
+            instances: vec![BoardInstance::synthetic(0, "kws", 2000.0, 500.0, 1.5)],
+        };
+        let cfg = FleetConfig {
+            queue_cap: 4,
+            fifo_queues: true,
+            work_stealing: false,
+            time_scale: 20.0,
+            ..Default::default()
+        };
+        let fleet = Fleet::start(reg, cfg).unwrap();
+        let handle = fleet.handle();
+        let mut rxs = Vec::new();
+        let mut shed = [0u64; 3];
+        let mut admitted = 0u64;
+        let classes =
+            [Priority::Batch, Priority::Batch, Priority::Batch, Priority::Interactive];
+        for i in 0..64 {
+            let p = classes[i % classes.len()];
+            match handle.submit_tagged("kws", input_for("kws"), RequestTag::new(0, p)) {
+                Ok(rx) => {
+                    rxs.push(rx);
+                    admitted += 1;
+                }
+                Err(RouteError::Overloaded) => shed[p.idx()] += 1,
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        assert!(shed.iter().sum::<u64>() > 0, "cap 4 must shed under a 64-burst");
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let summary = fleet.shutdown();
+        assert_eq!(summary.snapshot.served, admitted);
+        for (i, c) in summary.snapshot.classes.iter().enumerate() {
+            assert_eq!(c.shed, shed[i], "class {} shed accounting", c.class);
+        }
     }
 
     #[test]

@@ -1,0 +1,621 @@
+//! Class-aware request queues: the fleet's multi-tenant priority plane.
+//!
+//! The paper's accelerators hit their 20 µs-class latencies because every
+//! request class gets a hardware path sized for it; a single FIFO per
+//! board throws that away at the serving layer — one burst of low-value
+//! batch traffic parks latency-critical requests behind a full queue.
+//! This module replaces the PR 1 single-FIFO `BoardQueue` with a
+//! **class-aware queue plane**:
+//!
+//! * every [`FleetRequest`] carries a [`RequestTag`] — `(tenant,
+//!   [`Priority`])` — set at submit time;
+//! * each board queue keeps one FIFO subqueue *per class* and picks work
+//!   with **strict priority for `Interactive`** plus weighted
+//!   deficit-round-robin (unit-cost DRR, [`WRR_WEIGHTS`]) between
+//!   `Standard` and `Batch`;
+//! * a bounded **anti-starvation guard** ([`INTERACTIVE_BURST`]) forces
+//!   one lower-class pick after that many consecutive `Interactive` pops
+//!   while lower-class work waits, so even a saturating interactive
+//!   stream cannot starve the other classes;
+//! * admission is **tiered** ([`admit_limit`]): `Batch` is admitted only
+//!   while the queue is under half its capacity, `Standard` up to
+//!   capacity minus a small interactive reserve, `Interactive` up to the
+//!   full bound — so overload sheds `Batch` first instead of
+//!   tail-dropping every class uniformly.
+//!
+//! Per-class depth and peak-depth counters ride next to the aggregate
+//! ones; `reset_peak` rolls *all* of them over in one place, so each
+//! counter keeps a single consumer (the `Fleet::snapshot_phase` report
+//! rollover — the autoscaler samples instantaneous depth instead).
+//!
+//! [`BoardQueue::fifo`] builds the queue in **FIFO-compat mode** (one
+//! arrival order across classes, uniform admission): the control
+//! baseline `benches/fleet.rs` measures priority scheduling against, and
+//! the `FleetConfig::fifo_queues` escape hatch.
+
+use crate::coordinator::engine::Reply;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Request class, highest urgency first.  The discriminants index the
+/// per-class counters everywhere (queues, telemetry, report JSON).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Priority {
+    /// Latency-critical (a user is waiting).  Strict-priority pickup,
+    /// admitted up to the full queue bound, never shed before the
+    /// other classes.
+    Interactive = 0,
+    /// The default class: normal request traffic.
+    #[default]
+    Standard = 1,
+    /// Throughput traffic with no latency target (bulk scoring, AD
+    /// archive sweeps).  First to be shed under overload, served through
+    /// the DRR weight so it still progresses under sustained load.
+    Batch = 2,
+}
+
+/// Number of priority classes (array dimension of every per-class
+/// counter).
+pub const N_CLASSES: usize = 3;
+
+impl Priority {
+    pub const ALL: [Priority; N_CLASSES] =
+        [Priority::Interactive, Priority::Standard, Priority::Batch];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Standard => "standard",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Index into per-class counter arrays.
+    pub fn idx(&self) -> usize {
+        *self as usize
+    }
+}
+
+impl std::fmt::Display for Priority {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Who a request belongs to and how urgent it is.  Rides every
+/// [`FleetRequest`]; the default tag (`tenant 0`, `Standard`) keeps the
+/// untagged `FleetHandle::submit` path behaving like the pre-priority
+/// fleet — with one deliberate admission delta: on queues of 16+ slots,
+/// `Standard` is admitted only up to `cap - cap/16` ([`admit_limit`]),
+/// the small reserve held for `Interactive`, so an all-Standard burst
+/// that used to fill the last `cap/16` slots now sheds there instead.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RequestTag {
+    pub tenant: u32,
+    pub priority: Priority,
+}
+
+impl RequestTag {
+    pub fn new(tenant: u32, priority: Priority) -> Self {
+        RequestTag { tenant, priority }
+    }
+}
+
+/// One request in flight inside the fleet.
+pub struct FleetRequest {
+    pub x: Vec<f32>,
+    pub reply: mpsc::Sender<Reply>,
+    pub enqueued: Instant,
+    /// Set by the submit path when result caching is on: the worker
+    /// inserts its output under this key after executing.
+    pub cache_key: Option<u64>,
+    /// Tenant + priority class; drives queue pickup, admission, and the
+    /// per-class telemetry split.
+    pub tag: RequestTag,
+}
+
+/// Admission bound for `class` on a queue of capacity `cap` (total
+/// depth, all classes combined, must be *below* this for the push to be
+/// admitted).  `Batch` only gets the bottom half of the queue, so
+/// overload sheds it first; `Standard` leaves a small reserve
+/// (`cap/16`, only on queues of 16+) that only `Interactive` may use;
+/// `Interactive` is admitted to the full bound.
+pub fn admit_limit(cap: usize, class: Priority) -> usize {
+    match class {
+        Priority::Interactive => cap,
+        Priority::Standard => cap - if cap >= 16 { cap / 16 } else { 0 },
+        Priority::Batch => (cap / 2).max(1),
+    }
+}
+
+/// Unit-cost DRR quanta for the non-interactive classes
+/// (`[Standard, Batch]`): with both backlogged, pickup serves four
+/// `Standard` requests per `Batch` request.
+pub const WRR_WEIGHTS: [u32; 2] = [4, 1];
+
+/// Anti-starvation bound on strict priority: after this many consecutive
+/// `Interactive` pops while lower-class work waits, one DRR pick from
+/// the lower classes is forced, so `Standard`/`Batch` progress is
+/// guaranteed even under a saturating interactive stream (at worst
+/// 1/(`INTERACTIVE_BURST`+1) of pickups, split 4:1 by the DRR weights).
+pub const INTERACTIVE_BURST: u32 = 16;
+
+struct Inner {
+    /// One FIFO per class, entries tagged with an arrival sequence so
+    /// FIFO-compat mode can interleave classes in true arrival order.
+    q: [VecDeque<(u64, FleetRequest)>; N_CLASSES],
+    next_seq: u64,
+    /// Remaining DRR credit for `[Standard, Batch]`.
+    credit: [u32; 2],
+    /// Which lower class the DRR visits first.
+    wrr_cursor: usize,
+    /// Consecutive Interactive pops while lower-class work waited.
+    interactive_run: u32,
+}
+
+impl Inner {
+    fn total(&self) -> usize {
+        self.q.iter().map(|q| q.len()).sum()
+    }
+}
+
+/// Bounded MPMC queue in front of one board (router pushes, the owning
+/// worker pops, same-task workers steal), with per-class subqueues and
+/// the pickup/admission policy described in the module docs.
+pub struct BoardQueue {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    depth: AtomicUsize,
+    depth_class: [AtomicUsize; N_CLASSES],
+    /// High-water marks, updated at push time (where depth is
+    /// authoritative) — sampling depth after a batch drain would
+    /// systematically read 0.  One total + one per class; all rolled
+    /// over together by [`Self::reset_peak`] (single consumer).
+    peak: AtomicUsize,
+    peak_class: [AtomicUsize; N_CLASSES],
+    cap: usize,
+    /// `false` = FIFO-compat mode: arrival-order pickup, uniform
+    /// admission (the pre-priority behavior, kept as the bench control).
+    classful: bool,
+    closed: AtomicBool,
+}
+
+impl BoardQueue {
+    /// Class-aware queue (the default plane).
+    pub fn new(cap: usize) -> Self {
+        Self::with_mode(cap, true)
+    }
+
+    /// Single-FIFO control: arrival-order pickup, uniform tail-drop.
+    pub fn fifo(cap: usize) -> Self {
+        Self::with_mode(cap, false)
+    }
+
+    pub fn with_mode(cap: usize, classful: bool) -> Self {
+        BoardQueue {
+            inner: Mutex::new(Inner {
+                q: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+                next_seq: 0,
+                credit: WRR_WEIGHTS,
+                wrr_cursor: 0,
+                interactive_run: 0,
+            }),
+            cv: Condvar::new(),
+            depth: AtomicUsize::new(0),
+            depth_class: Default::default(),
+            peak: AtomicUsize::new(0),
+            peak_class: Default::default(),
+            cap: cap.max(1),
+            classful,
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    /// Lock-free read of the current total depth (router load signal).
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// Current depth of one class's subqueue.
+    pub fn depth_class(&self, class: Priority) -> usize {
+        self.depth_class[class.idx()].load(Ordering::Relaxed)
+    }
+
+    /// Interactive + Standard depth — the backlog that actually gates
+    /// latency (Batch is deferrable and jumped by both other classes).
+    /// The autoscaler's queue signal.
+    pub fn depth_urgent(&self) -> usize {
+        self.depth_class(Priority::Interactive) + self.depth_class(Priority::Standard)
+    }
+
+    /// Highest total depth observed at push time since the last
+    /// [`Self::reset_peak`].
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Per-class push-time high-water marks since the last
+    /// [`Self::reset_peak`].
+    pub fn peak_class(&self) -> [usize; N_CLASSES] {
+        [
+            self.peak_class[0].load(Ordering::Relaxed),
+            self.peak_class[1].load(Ordering::Relaxed),
+            self.peak_class[2].load(Ordering::Relaxed),
+        ]
+    }
+
+    /// Roll every high-water mark (total and per class) over to the
+    /// *current* depth (not zero — a standing backlog must stay
+    /// visible).  Called when telemetry snapshots roll over
+    /// (`Fleet::snapshot_phase` at bench phase boundaries).
+    /// Deliberately the **only** consumer of the peak counters: the
+    /// autoscaler samples instantaneous depth instead, so a reset here
+    /// never clobbers a control signal — and because the total and
+    /// per-class marks reset together under the queue lock, they stay
+    /// mutually consistent.
+    pub fn reset_peak(&self) {
+        let inner = self.inner.lock().unwrap();
+        self.peak.store(inner.total(), Ordering::Relaxed);
+        for (c, q) in inner.q.iter().enumerate() {
+            self.peak_class[c].store(q.len(), Ordering::Relaxed);
+        }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// `true` when this queue runs the class-aware plane (`false` in
+    /// FIFO-compat mode).  Workers consult this so class-special
+    /// behavior — like the Interactive execute-immediately batch opener
+    /// — switches off together with the queue's priority pickup.
+    pub fn is_classful(&self) -> bool {
+        self.classful
+    }
+
+    /// Admit a request; hands it back if its class's admission bound is
+    /// reached or the queue is closed.  Both conditions are checked
+    /// under the lock: the bound so depth can never exceed it, and
+    /// `closed` so a submit racing with shutdown cannot enqueue after
+    /// the worker's final drain (the request would be stranded forever).
+    /// In class-aware mode the bound is [`admit_limit`] for the
+    /// request's class — overload sheds `Batch` first; FIFO-compat mode
+    /// tail-drops every class at `cap` uniformly.
+    pub fn try_push(&self, r: FleetRequest) -> Result<(), FleetRequest> {
+        let mut inner = self.inner.lock().unwrap();
+        if self.closed.load(Ordering::Acquire) {
+            return Err(r);
+        }
+        let total = inner.total();
+        let limit =
+            if self.classful { admit_limit(self.cap, r.tag.priority) } else { self.cap };
+        if total >= limit {
+            return Err(r);
+        }
+        let c = r.tag.priority.idx();
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        inner.q[c].push_back((seq, r));
+        let class_len = inner.q[c].len();
+        self.depth.store(total + 1, Ordering::Relaxed);
+        self.depth_class[c].store(class_len, Ordering::Relaxed);
+        self.peak.fetch_max(total + 1, Ordering::Relaxed);
+        self.peak_class[c].fetch_max(class_len, Ordering::Relaxed);
+        drop(inner);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Stop admitting; wakes the worker so it can drain and exit.  Takes
+    /// the queue lock so closing serializes with in-flight pushes: after
+    /// close() returns, any request that won the race is in the queue
+    /// (depth > 0) and will be drained, and any later push is rejected.
+    pub fn close(&self) {
+        let guard = self.inner.lock().unwrap();
+        self.closed.store(true, Ordering::Release);
+        drop(guard);
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+
+    /// Remove the head of class subqueue `c` and refresh the depth
+    /// counters.  Caller guarantees non-empty.
+    fn take(&self, inner: &mut Inner, c: usize) -> FleetRequest {
+        let (_seq, r) = inner.q[c].pop_front().expect("take from empty subqueue");
+        self.depth_class[c].store(inner.q[c].len(), Ordering::Relaxed);
+        self.depth.store(inner.total(), Ordering::Relaxed);
+        r
+    }
+
+    /// One DRR pick over the non-interactive classes.  Terminates: if
+    /// either subqueue is non-empty, a refill makes the next sweep
+    /// spend.
+    fn pop_lower(&self, inner: &mut Inner) -> Option<FleetRequest> {
+        if inner.q[1].is_empty() && inner.q[2].is_empty() {
+            return None;
+        }
+        loop {
+            for k in 0..2 {
+                let c = (inner.wrr_cursor + k) % 2;
+                if !inner.q[c + 1].is_empty() && inner.credit[c] > 0 {
+                    inner.credit[c] -= 1;
+                    // Keep serving this class while it has credit; move
+                    // the cursor on when the quantum is spent.
+                    inner.wrr_cursor = if inner.credit[c] == 0 { (c + 1) % 2 } else { c };
+                    return Some(self.take(inner, c + 1));
+                }
+            }
+            inner.credit = WRR_WEIGHTS;
+        }
+    }
+
+    /// Class-aware pickup: strict priority for Interactive, bounded by
+    /// the anti-starvation guard; DRR between Standard and Batch.
+    /// FIFO-compat mode pops in pure arrival order across classes.
+    fn pop_locked(&self, inner: &mut Inner) -> Option<FleetRequest> {
+        if !self.classful {
+            let c = (0..N_CLASSES)
+                .filter(|&c| !inner.q[c].is_empty())
+                .min_by_key(|&c| inner.q[c].front().expect("non-empty").0)?;
+            return Some(self.take(inner, c));
+        }
+        let lower_waiting = !inner.q[1].is_empty() || !inner.q[2].is_empty();
+        if !inner.q[0].is_empty() {
+            if !lower_waiting || inner.interactive_run < INTERACTIVE_BURST {
+                inner.interactive_run =
+                    if lower_waiting { inner.interactive_run + 1 } else { 0 };
+                return Some(self.take(inner, 0));
+            }
+            // Guard tripped: one lower-class pick, then strict priority
+            // resumes.
+            inner.interactive_run = 0;
+            return self.pop_lower(inner);
+        }
+        inner.interactive_run = 0;
+        self.pop_lower(inner)
+    }
+
+    /// Block until a request is available; `None` once closed *and*
+    /// drained.  Used by workers with stealing disabled — no periodic
+    /// wakeups, `close()`'s notify_all is the exit signal.
+    pub fn pop_blocking(&self) -> Option<FleetRequest> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(r) = self.pop_locked(&mut inner) {
+                return Some(r);
+            }
+            if self.closed.load(Ordering::Acquire) {
+                return None;
+            }
+            inner = self.cv.wait(inner).unwrap();
+        }
+    }
+
+    /// Pop with a deadline (the batching window's `next` source).
+    pub fn pop_until(&self, deadline: Instant) -> Option<FleetRequest> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(r) = self.pop_locked(&mut inner) {
+                return Some(r);
+            }
+            if self.closed.load(Ordering::Acquire) {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _timeout) =
+                self.cv.wait_timeout(inner, deadline.duration_since(now)).unwrap();
+            inner = guard;
+        }
+    }
+
+    /// Non-blocking pop (same-task replicas balancing a hot queue,
+    /// draining a retired replica's closed queue, or an Interactive
+    /// batch opener topping up without waiting out the window).  Uses
+    /// the same class-aware pickup as the blocking pops, so a thief
+    /// relieves the hottest class first.
+    pub fn try_steal(&self) -> Option<FleetRequest> {
+        let mut inner = self.inner.lock().unwrap();
+        self.pop_locked(&mut inner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(tag: RequestTag) -> (FleetRequest, mpsc::Receiver<Reply>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            FleetRequest {
+                x: vec![0.0],
+                reply: tx,
+                enqueued: Instant::now(),
+                cache_key: None,
+                tag,
+            },
+            rx,
+        )
+    }
+
+    fn push(q: &BoardQueue, p: Priority) -> bool {
+        let (r, _rx) = mk(RequestTag::new(0, p));
+        q.try_push(r).is_ok()
+    }
+
+    #[test]
+    fn queue_bounds_are_strict() {
+        let q = BoardQueue::new(2);
+        assert!(push(&q, Priority::Standard));
+        assert!(push(&q, Priority::Standard));
+        assert!(!push(&q, Priority::Standard), "cap 2 must reject the 3rd");
+        assert_eq!(q.depth(), 2);
+        assert!(q.try_steal().is_some());
+        assert_eq!(q.depth(), 1);
+        q.close();
+        assert!(!push(&q, Priority::Standard), "closed queue rejects");
+        assert!(q.pop_until(Instant::now()).is_some(), "drains after close");
+        assert!(q.pop_until(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn admission_is_tiered_batch_shed_first() {
+        // cap 16: batch bound 8, standard bound 15 (one-slot interactive
+        // reserve), interactive bound 16.
+        assert_eq!(admit_limit(16, Priority::Batch), 8);
+        assert_eq!(admit_limit(16, Priority::Standard), 15);
+        assert_eq!(admit_limit(16, Priority::Interactive), 16);
+        let q = BoardQueue::new(16);
+        let mut batch_in = 0;
+        for _ in 0..20 {
+            if push(&q, Priority::Batch) {
+                batch_in += 1;
+            }
+        }
+        assert_eq!(batch_in, 8, "batch stops at half the queue");
+        let mut std_in = 0;
+        for _ in 0..20 {
+            if push(&q, Priority::Standard) {
+                std_in += 1;
+            }
+        }
+        assert_eq!(std_in, 7, "standard stops at the interactive reserve");
+        assert!(push(&q, Priority::Interactive), "reserve admits interactive");
+        assert!(!push(&q, Priority::Interactive), "full queue rejects even interactive");
+        assert_eq!(q.depth(), 16);
+        assert_eq!(q.depth_class(Priority::Batch), 8);
+        assert_eq!(q.depth_urgent(), 8);
+    }
+
+    #[test]
+    fn small_queues_have_no_interactive_reserve() {
+        // Below 16 slots the reserve rounds to zero: standard admits to
+        // the full bound (the pre-priority behavior for tiny queues).
+        assert_eq!(admit_limit(4, Priority::Standard), 4);
+        assert_eq!(admit_limit(4, Priority::Batch), 2);
+        assert_eq!(admit_limit(1, Priority::Batch), 1);
+    }
+
+    #[test]
+    fn pickup_is_strict_priority_then_weighted() {
+        let q = BoardQueue::new(64);
+        for _ in 0..8 {
+            push(&q, Priority::Standard);
+        }
+        for _ in 0..2 {
+            push(&q, Priority::Batch);
+        }
+        for _ in 0..3 {
+            push(&q, Priority::Interactive);
+        }
+        let mut order = Vec::new();
+        while let Some(r) = q.try_steal() {
+            order.push(r.tag.priority);
+        }
+        use Priority::*;
+        assert_eq!(
+            order,
+            vec![
+                Interactive,
+                Interactive,
+                Interactive,
+                // DRR 4:1 over standard/batch once interactive drains.
+                Standard,
+                Standard,
+                Standard,
+                Standard,
+                Batch,
+                Standard,
+                Standard,
+                Standard,
+                Standard,
+                Batch,
+            ]
+        );
+    }
+
+    #[test]
+    fn interactive_burst_cannot_starve_lower_classes() {
+        let q = BoardQueue::new(4096);
+        for _ in 0..20 {
+            push(&q, Priority::Standard);
+        }
+        for _ in 0..20 {
+            push(&q, Priority::Batch);
+        }
+        // Sustained interactive load: one new interactive arrival per
+        // pickup, forever.  Without the guard the lower classes would
+        // never be served.
+        let mut lower_served = 0;
+        let mut batch_served = 0;
+        let mut pops = 0;
+        while lower_served < 40 {
+            push(&q, Priority::Interactive);
+            let r = q.try_steal().expect("queue cannot be empty here");
+            pops += 1;
+            if r.tag.priority != Priority::Interactive {
+                lower_served += 1;
+            }
+            if r.tag.priority == Priority::Batch {
+                batch_served += 1;
+            }
+            assert!(
+                pops <= 40 * (INTERACTIVE_BURST as usize + 1) + 1,
+                "lower classes starving: {lower_served}/40 after {pops} pops"
+            );
+        }
+        assert_eq!(batch_served, 20, "batch must fully drain too");
+        // Interactive itself was never starved: it got the lion's share.
+        assert!(pops as u32 >= 40 * INTERACTIVE_BURST);
+    }
+
+    #[test]
+    fn fifo_mode_preserves_arrival_order_and_uniform_admission() {
+        let q = BoardQueue::fifo(4);
+        assert!(push(&q, Priority::Batch));
+        assert!(push(&q, Priority::Interactive));
+        assert!(push(&q, Priority::Batch));
+        assert!(push(&q, Priority::Standard));
+        // Uniform tail-drop: batch filled the queue and interactive is
+        // rejected like everyone else.
+        assert!(!push(&q, Priority::Interactive), "fifo mode has no reserve");
+        use Priority::*;
+        let mut order = Vec::new();
+        while let Some(r) = q.try_steal() {
+            order.push(r.tag.priority);
+        }
+        assert_eq!(order, vec![Batch, Interactive, Batch, Standard]);
+    }
+
+    #[test]
+    fn per_class_peaks_reset_to_current_depth_not_zero() {
+        let q = BoardQueue::new(64);
+        for _ in 0..5 {
+            push(&q, Priority::Standard);
+        }
+        for _ in 0..3 {
+            push(&q, Priority::Batch);
+        }
+        for _ in 0..6 {
+            q.try_steal();
+        }
+        assert_eq!(q.peak(), 8);
+        assert_eq!(q.peak_class(), [0, 5, 3]);
+        q.reset_peak();
+        // Standing backlog of 2 stays visible after the rollover; class
+        // marks roll to their own current depths.
+        assert_eq!(q.peak(), 2);
+        let pc = q.peak_class();
+        assert_eq!(pc.iter().sum::<usize>(), 2);
+        push(&q, Priority::Interactive);
+        assert_eq!(q.peak(), 3, "peak tracks pushes again after reset");
+        assert_eq!(q.peak_class()[0], 1);
+    }
+}

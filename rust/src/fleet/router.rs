@@ -5,7 +5,7 @@
 //! current depths it returns a target instance or an admission-control
 //! rejection.  Keeping it side-effect free makes the policies directly
 //! property-testable (see `rust/tests/proptests.rs`); the fleet wires it
-//! to the real [`super::worker::BoardQueue`] depths.
+//! to the real [`super::queue::BoardQueue`] depths.
 //!
 //! Policies:
 //! * **RoundRobin** — rotate over the task's replicas, skipping full
@@ -17,7 +17,19 @@
 //! * **LatencySlo** — smallest *predicted* completion latency
 //!   (`queue_depth × ii + batch-1 latency`, all from the dataflow
 //!   estimates); rejects when even the best replica would blow the SLO.
+//!
+//! Selection is **class-aware** ([`Router::select_class`]): eligibility
+//! uses the class's tiered admission bound ([`super::queue::admit_limit`]
+//! — so the router doesn't bounce `Batch` requests off queues that would
+//! refuse them anyway), load ordering and the SLO prediction run over the
+//! *class-visible* backlog the caller passes (an `Interactive` request
+//! jumps queued `Standard`/`Batch` work, so only the interactive backlog
+//! is ahead of it), and `Batch` — which has no latency target — is
+//! exempt from SLO shedding (depth admission sheds it instead).
+//! [`Router::select`] is the untagged wrapper: `Standard` semantics over
+//! the raw depths, the pre-priority behavior.
 
+use super::queue::{admit_limit, Priority};
 use super::registry::Registry;
 use std::collections::BTreeMap;
 use std::fmt;
@@ -80,6 +92,10 @@ impl fmt::Display for RouteError {
 pub struct Router {
     policy: Policy,
     queue_cap: usize,
+    /// Class-aware admission bounds + per-class SLO semantics; `false`
+    /// restores the uniform single-FIFO behavior (every class treated
+    /// as `Standard` with the full `queue_cap` bound).
+    classful: bool,
     by_task: BTreeMap<String, Vec<usize>>,
     rr: BTreeMap<String, AtomicUsize>,
     latency_us: Vec<f64>,
@@ -104,6 +120,20 @@ impl Router {
         queue_cap: usize,
         active: &[bool],
     ) -> Self {
+        Self::with_options(reg, policy, queue_cap, active, true)
+    }
+
+    /// [`Self::with_active`] with the queue mode made explicit:
+    /// `classful = false` pairs the router with FIFO-compat queues
+    /// (`FleetConfig::fifo_queues`) so eligibility matches what the
+    /// queues will actually admit.
+    pub fn with_options(
+        reg: &Registry,
+        policy: Policy,
+        queue_cap: usize,
+        active: &[bool],
+        classful: bool,
+    ) -> Self {
         let mut by_task: BTreeMap<String, Vec<usize>> = BTreeMap::new();
         for inst in &reg.instances {
             if active.get(inst.id).copied().unwrap_or(false) {
@@ -114,6 +144,7 @@ impl Router {
         Router {
             policy,
             queue_cap: queue_cap.max(1),
+            classful,
             by_task,
             rr,
             latency_us: reg.instances.iter().map(|i| i.latency_s * 1e6).collect(),
@@ -136,15 +167,42 @@ impl Router {
         self.latency_us[i] + depth as f64 * self.ii_us[i]
     }
 
-    /// Pick a target instance for `task` given per-instance queue depths
-    /// (`depths[i]` = queue in front of instance `i`).  Pure: admission
-    /// accounting is the caller's (the queue push is what commits).
+    /// Untagged pick: `Standard` semantics over the raw depths (the
+    /// pre-priority behavior; `ahead == depths`).
     pub fn select(&self, task: &str, depths: &[usize]) -> Result<usize, RouteError> {
+        self.select_class(task, depths, depths, Priority::Standard)
+    }
+
+    /// Pick a target instance for a `class`-tagged `task` request.
+    /// `depths[i]` is the *total* queue depth in front of instance `i`
+    /// (capacity signal, checked against the class's admission bound);
+    /// `ahead[i]` is the backlog actually ahead of this class on `i`
+    /// (load/SLO signal — the fleet passes the interactive depth for
+    /// `Interactive`, interactive+standard for `Standard`, total for
+    /// `Batch`).  The jump model is an approximation on the optimistic
+    /// side: the anti-starvation guard and the DRR weights let a slice
+    /// of lower-class work through (1/17 and 1/5 of pickups under
+    /// saturation), and the batch currently *executing* is invisible to
+    /// any depth signal — so a predicted latency can undershoot by on
+    /// the order of one device window.  Pure: admission accounting is
+    /// the caller's (the queue push is what commits).
+    pub fn select_class(
+        &self,
+        task: &str,
+        depths: &[usize],
+        ahead: &[usize],
+        class: Priority,
+    ) -> Result<usize, RouteError> {
         let Some(cands) = self.by_task.get(task) else {
             return Err(RouteError::UnknownTask);
         };
+        let limit = if self.classful {
+            admit_limit(self.queue_cap, class)
+        } else {
+            self.queue_cap
+        };
         let open: Vec<usize> =
-            cands.iter().copied().filter(|&i| depths[i] < self.queue_cap).collect();
+            cands.iter().copied().filter(|&i| depths[i] < limit).collect();
         if open.is_empty() {
             return Err(RouteError::Overloaded);
         }
@@ -155,7 +213,7 @@ impl Router {
                 let start = self.rr[task].fetch_add(1, Ordering::Relaxed) % cands.len();
                 for k in 0..cands.len() {
                     let i = cands[(start + k) % cands.len()];
-                    if depths[i] < self.queue_cap {
+                    if depths[i] < limit {
                         return Ok(i);
                     }
                 }
@@ -164,8 +222,8 @@ impl Router {
             Policy::LeastLoaded => Ok(open
                 .into_iter()
                 .min_by(|&a, &b| {
-                    depths[a]
-                        .cmp(&depths[b])
+                    ahead[a]
+                        .cmp(&ahead[b])
                         .then(self.ii_us[a].total_cmp(&self.ii_us[b]))
                 })
                 .unwrap()),
@@ -177,11 +235,14 @@ impl Router {
                 let best = open
                     .into_iter()
                     .min_by(|&a, &b| {
-                        self.predicted_latency_us(a, depths[a])
-                            .total_cmp(&self.predicted_latency_us(b, depths[b]))
+                        self.predicted_latency_us(a, ahead[a])
+                            .total_cmp(&self.predicted_latency_us(b, ahead[b]))
                     })
                     .unwrap();
-                if self.predicted_latency_us(best, depths[best]) > slo_us {
+                // Batch has no latency target: depth admission sheds it,
+                // never the SLO check.
+                let slo_exempt = self.classful && class == Priority::Batch;
+                if !slo_exempt && self.predicted_latency_us(best, ahead[best]) > slo_us {
                     Err(RouteError::SloUnattainable)
                 } else {
                     Ok(best)
@@ -260,6 +321,50 @@ mod tests {
             &[false, false, true],
         );
         assert_eq!(none.select("kws", &[0, 0, 0]), Err(RouteError::UnknownTask));
+    }
+
+    #[test]
+    fn class_aware_admission_bounds_and_slo_exemption() {
+        // cap 16: batch bound 8, standard bound 15, interactive 16.
+        let r = Router::new(&reg(), Policy::LeastLoaded, 16);
+        let depths = [10, 10, 0];
+        // Batch bounces off queues past half capacity...
+        assert_eq!(
+            r.select_class("kws", &depths, &depths, Priority::Batch),
+            Err(RouteError::Overloaded)
+        );
+        // ...while interactive still routes.
+        assert!(r.select_class("kws", &depths, &depths, Priority::Interactive).is_ok());
+        // Batch is never SLO-shed: depth admission is its only gate.
+        let slo = Router::new(&reg(), Policy::LatencySlo { slo_us: 1.0 }, 64);
+        let zeros = [0usize, 0, 0];
+        assert_eq!(
+            slo.select_class("kws", &zeros, &zeros, Priority::Standard),
+            Err(RouteError::SloUnattainable)
+        );
+        assert!(slo.select_class("kws", &zeros, &zeros, Priority::Batch).is_ok());
+        // FIFO-compat routers keep the uniform bound for every class.
+        let fifo = Router::with_options(
+            &reg(),
+            Policy::LeastLoaded,
+            16,
+            &[true, true, true],
+            false,
+        );
+        assert!(fifo.select_class("kws", &depths, &depths, Priority::Batch).is_ok());
+    }
+
+    #[test]
+    fn interactive_orders_by_class_visible_backlog() {
+        // Total depths favor board 1, but board 1 holds the interactive
+        // backlog — least-loaded must order by `ahead`, not `depths`.
+        let r = Router::new(&reg(), Policy::LeastLoaded, 64);
+        let depths = [20, 10, 0]; // board 0 deep in batch work...
+        let ahead = [0, 5, 0]; // ...but nothing ahead of an interactive
+        assert_eq!(
+            r.select_class("kws", &depths, &ahead, Priority::Interactive).unwrap(),
+            0
+        );
     }
 
     #[test]

@@ -8,18 +8,71 @@
 //! marks them inactive).  Scale events and fleet board-seconds ride the
 //! [`FleetSnapshot`] into `report::json` alongside the latency and
 //! energy aggregates.
+//!
+//! The collector is also **class- and tenant-aware**: every reply sample
+//! carries its [`Priority`] and tenant ([`ReplySample`]), feeding
+//! fleet-wide per-class latency reservoirs, per-class shed counters
+//! (admission rejections recorded by the submit path), per-tenant served
+//! counts, and per-class queue peak depths per board — all of which ride
+//! the snapshot into the JSON report (`classes` / `tenants` fields).
 
 use super::autoscale::ScaleEvent;
 use super::cache::CacheStats;
+use super::queue::{Priority, N_CLASSES};
 use super::registry::Registry;
 use crate::data::prng::SplitMix64;
 use crate::report::json::{num, obj, s, Value};
+use std::collections::BTreeMap;
 use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, RwLock};
 use std::time::Instant;
 
 /// Latency samples kept per board (reservoir-sampled beyond this).
 const RESERVOIR_CAP: usize = 8192;
+
+/// Distinct tenants tracked in the per-tenant served map.  Beyond this,
+/// new tenant ids are counted in fleet/class aggregates but get no
+/// per-tenant row — the map (cloned into every snapshot and serialized
+/// into the JSON report) must not grow without bound when callers use
+/// high-cardinality tenant ids.
+const TENANT_CAP: usize = 1024;
+
+/// One served request as the worker reports it to telemetry.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplySample {
+    pub tenant: u32,
+    pub priority: Priority,
+    /// End-to-end latency (enqueue → reply), µs.
+    pub latency_us: f64,
+}
+
+/// Reservoir-sampled latency stream (Algorithm R).
+#[derive(Debug)]
+struct Reservoir {
+    lat_us: Vec<f64>,
+    seen: u64,
+    rng: SplitMix64,
+}
+
+impl Reservoir {
+    fn new(seed: u64) -> Self {
+        Reservoir { lat_us: Vec::new(), seen: 0, rng: SplitMix64::new(seed) }
+    }
+
+    fn push(&mut self, v: f64) {
+        self.seen += 1;
+        if self.lat_us.len() < RESERVOIR_CAP {
+            self.lat_us.push(v);
+        } else {
+            // Algorithm R: keep each of the first n samples w.p. cap/n.
+            let j = self.rng.next_below(self.seen) as usize;
+            if j < RESERVOIR_CAP {
+                self.lat_us[j] = v;
+            }
+        }
+    }
+}
 
 #[derive(Debug)]
 struct BoardStats {
@@ -30,10 +83,9 @@ struct BoardStats {
     exec_us_sum: u128,
     energy_uj_sum: f64,
     /// End-to-end request latencies (µs), reservoir-sampled.
-    lat_us: Vec<f64>,
-    lat_seen: u64,
+    lat: Reservoir,
     depth_peak: usize,
-    rng: SplitMix64,
+    depth_peak_class: [usize; N_CLASSES],
 }
 
 impl BoardStats {
@@ -45,25 +97,19 @@ impl BoardStats {
             queue_us_sum: 0,
             exec_us_sum: 0,
             energy_uj_sum: 0.0,
-            lat_us: Vec::new(),
-            lat_seen: 0,
+            lat: Reservoir::new(0x7E1E_0000 + id as u64),
             depth_peak: 0,
-            rng: SplitMix64::new(0x7E1E_0000 + id as u64),
+            depth_peak_class: [0; N_CLASSES],
         }
     }
+}
 
-    fn push_latency(&mut self, v: f64) {
-        self.lat_seen += 1;
-        if self.lat_us.len() < RESERVOIR_CAP {
-            self.lat_us.push(v);
-        } else {
-            // Algorithm R: keep each of the first n samples w.p. cap/n.
-            let j = self.rng.next_below(self.lat_seen) as usize;
-            if j < RESERVOIR_CAP {
-                self.lat_us[j] = v;
-            }
-        }
-    }
+/// Fleet-wide per-class aggregate (latency reservoir + served count;
+/// sheds live in lock-free counters beside it).
+#[derive(Debug)]
+struct ClassAgg {
+    served: u64,
+    lat: Reservoir,
 }
 
 /// Shared collector; workers record, anyone can snapshot.  Slots are
@@ -71,6 +117,14 @@ impl BoardStats {
 /// recording (the autoscaler's scale-up path).
 pub struct Telemetry {
     boards: RwLock<Vec<Mutex<BoardStats>>>,
+    /// Fleet-wide per-class latency/served aggregates.
+    classes: [Mutex<ClassAgg>; N_CLASSES],
+    /// Admission rejections per class (recorded by the submit path when
+    /// a request is definitively refused — the shed counters the bench
+    /// asserts on).
+    shed: [AtomicU64; N_CLASSES],
+    /// Served count per tenant, fleet-wide.
+    tenants: Mutex<BTreeMap<u32, u64>>,
     t0: Instant,
 }
 
@@ -80,8 +134,21 @@ impl Telemetry {
             boards: RwLock::new(
                 (0..n_boards).map(|i| Mutex::new(BoardStats::new(i))).collect(),
             ),
+            classes: [
+                Mutex::new(ClassAgg { served: 0, lat: Reservoir::new(0xC1A5_0000) }),
+                Mutex::new(ClassAgg { served: 0, lat: Reservoir::new(0xC1A5_0001) }),
+                Mutex::new(ClassAgg { served: 0, lat: Reservoir::new(0xC1A5_0002) }),
+            ],
+            shed: Default::default(),
+            tenants: Mutex::new(BTreeMap::new()),
             t0: Instant::now(),
         }
+    }
+
+    /// One admission rejection (`Overloaded` / `SloUnattainable`) of a
+    /// `class` request.
+    pub fn record_shed(&self, class: Priority) {
+        self.shed[class.idx()].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Append a slot for a newly spawned replica; returns its id.
@@ -100,29 +167,61 @@ impl Telemetry {
         self.len() == 0
     }
 
-    /// One executed device batch on board `id`.
+    /// One executed device batch on board `id`.  `peak` / `peak_class`
+    /// are the owning queue's push-time high-water marks (total and per
+    /// class).
     #[allow(clippy::too_many_arguments)]
     pub fn record_batch(
         &self,
         id: usize,
-        latencies_us: &[f64],
+        samples: &[ReplySample],
         queue_us_sum: u128,
         exec_us: u128,
         energy_uj: f64,
         stolen: u64,
-        depth_after: usize,
+        peak: usize,
+        peak_class: [usize; N_CLASSES],
     ) {
-        let boards = self.boards.read().unwrap();
-        let mut b = boards[id].lock().unwrap();
-        b.served += latencies_us.len() as u64;
-        b.batches += 1;
-        b.stolen += stolen;
-        b.queue_us_sum += queue_us_sum;
-        b.exec_us_sum += exec_us;
-        b.energy_uj_sum += energy_uj;
-        b.depth_peak = b.depth_peak.max(depth_after);
-        for &v in latencies_us {
-            b.push_latency(v);
+        {
+            let boards = self.boards.read().unwrap();
+            let mut b = boards[id].lock().unwrap();
+            b.served += samples.len() as u64;
+            b.batches += 1;
+            b.stolen += stolen;
+            b.queue_us_sum += queue_us_sum;
+            b.exec_us_sum += exec_us;
+            b.energy_uj_sum += energy_uj;
+            b.depth_peak = b.depth_peak.max(peak);
+            for c in 0..N_CLASSES {
+                b.depth_peak_class[c] = b.depth_peak_class[c].max(peak_class[c]);
+            }
+            for s in samples {
+                b.lat.push(s.latency_us);
+            }
+        }
+        // One lock per class per batch, not per sample: the class aggs
+        // are fleet-global, so per-sample locking would multiply
+        // contention by the batch size on the hot serve path.
+        for p in Priority::ALL {
+            let mut it = samples.iter().filter(|s| s.priority == p).peekable();
+            if it.peek().is_none() {
+                continue;
+            }
+            let mut agg = self.classes[p.idx()].lock().unwrap();
+            for s in it {
+                agg.served += 1;
+                agg.lat.push(s.latency_us);
+            }
+        }
+        {
+            let mut tenants = self.tenants.lock().unwrap();
+            for s in samples {
+                if let Some(n) = tenants.get_mut(&s.tenant) {
+                    *n += 1;
+                } else if tenants.len() < TENANT_CAP {
+                    tenants.insert(s.tenant, 1);
+                }
+            }
         }
     }
 
@@ -138,12 +237,15 @@ impl Telemetry {
             .collect()
     }
 
-    /// Roll per-board queue-depth peaks over to zero; paired with
-    /// [`super::worker::BoardQueue::reset_peak`] at snapshot/phase
-    /// boundaries so `depth_peak` reads per-phase, not since-birth.
+    /// Roll per-board queue-depth peaks (total and per class) over to
+    /// zero; paired with [`super::queue::BoardQueue::reset_peak`] at
+    /// snapshot/phase boundaries so `depth_peak` reads per-phase, not
+    /// since-birth.
     pub fn reset_depth_peaks(&self) {
         for m in self.boards.read().unwrap().iter() {
-            m.lock().unwrap().depth_peak = 0;
+            let mut b = m.lock().unwrap();
+            b.depth_peak = 0;
+            b.depth_peak_class = [0; N_CLASSES];
         }
     }
 
@@ -161,7 +263,7 @@ impl Telemetry {
         for (i, m) in boards.iter().enumerate().take(reg.len()) {
             let b = m.lock().unwrap();
             let inst = &reg.instances[i];
-            let mut lat = b.lat_us.clone();
+            let mut lat = b.lat.lat_us.clone();
             if !lat.is_empty() {
                 let w = b.served as f64 / lat.len() as f64;
                 weighted.extend(lat.iter().map(|&v| (v, w)));
@@ -194,9 +296,32 @@ impl Telemetry {
                     0.0
                 },
                 depth_peak: b.depth_peak,
+                depth_peak_class: b.depth_peak_class,
             });
         }
         weighted.sort_by(|a, c| a.0.total_cmp(&c.0));
+        let classes = Priority::ALL
+            .iter()
+            .map(|p| {
+                let agg = self.classes[p.idx()].lock().unwrap();
+                let mut lat = agg.lat.lat_us.clone();
+                lat.sort_by(|a, c| a.total_cmp(c));
+                ClassSnapshot {
+                    class: p.name(),
+                    served: agg.served,
+                    shed: self.shed[p.idx()].load(Ordering::Relaxed),
+                    p50_us: percentile(&lat, 0.50),
+                    p99_us: percentile(&lat, 0.99),
+                }
+            })
+            .collect();
+        let tenants = self
+            .tenants
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&tenant, &served)| TenantSnapshot { tenant, served })
+            .collect();
         FleetSnapshot {
             elapsed_s,
             served,
@@ -205,6 +330,8 @@ impl Telemetry {
             p99_us: weighted_percentile(&weighted, 0.99),
             energy_per_inference_uj: if served > 0 { energy / served as f64 } else { 0.0 },
             cache: CacheStats::default(),
+            classes,
+            tenants,
             // The fleet layer grafts these on: board lifecycle and scale
             // history live beside the queues, not in the per-board stats.
             board_seconds: 0.0,
@@ -257,6 +384,44 @@ pub struct BoardSnapshot {
     pub p99_us: f64,
     pub energy_per_inference_uj: f64,
     pub depth_peak: usize,
+    /// Push-time queue peak per priority class
+    /// (`[interactive, standard, batch]`), rolled over with
+    /// `depth_peak` at phase boundaries.
+    pub depth_peak_class: [usize; N_CLASSES],
+}
+
+/// Fleet-wide per-priority-class aggregate: latency percentiles over the
+/// class's own reservoir, served count, and sheds (admission
+/// rejections).
+#[derive(Clone, Debug)]
+pub struct ClassSnapshot {
+    pub class: &'static str,
+    pub served: u64,
+    pub shed: u64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+impl ClassSnapshot {
+    /// The one JSON shape for per-class stats — shared by
+    /// [`FleetSnapshot::to_json`] and the bench reports so the schema
+    /// cannot drift between them.
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("class", s(self.class)),
+            ("served", num(self.served as f64)),
+            ("shed", num(self.shed as f64)),
+            ("p50_us", num(self.p50_us)),
+            ("p99_us", num(self.p99_us)),
+        ])
+    }
+}
+
+/// Served count for one tenant.
+#[derive(Clone, Copy, Debug)]
+pub struct TenantSnapshot {
+    pub tenant: u32,
+    pub served: u64,
 }
 
 /// Fleet aggregate view.
@@ -272,6 +437,12 @@ pub struct FleetSnapshot {
     /// `served` counts only board-executed requests, so total traffic is
     /// `served + cache.hits`.
     pub cache: CacheStats,
+    /// Per-priority-class p50/p99/served/shed, always all three classes
+    /// in `[interactive, standard, batch]` order.
+    pub classes: Vec<ClassSnapshot>,
+    /// Served count per tenant (tenant 0 is the untagged default; only
+    /// the first `TENANT_CAP` distinct ids get a row).
+    pub tenants: Vec<TenantSnapshot>,
     /// Total board-alive time: Σ over replicas of (retired-or-now −
     /// started).  The autoscaler's cost axis — an elastic fleet should
     /// serve the same trace with fewer board-seconds than a fixed one.
@@ -310,6 +481,24 @@ impl FleetSnapshot {
                         .collect(),
                 ),
             ),
+            (
+                "classes",
+                Value::Arr(self.classes.iter().map(|c| c.to_json()).collect()),
+            ),
+            (
+                "tenants",
+                Value::Arr(
+                    self.tenants
+                        .iter()
+                        .map(|t| {
+                            obj(vec![
+                                ("tenant", num(t.tenant as f64)),
+                                ("served", num(t.served as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             ("board_seconds", num(self.board_seconds)),
             (
                 "scale_events",
@@ -337,6 +526,15 @@ impl FleetSnapshot {
                                     num(b.energy_per_inference_uj),
                                 ),
                                 ("depth_peak", num(b.depth_peak as f64)),
+                                (
+                                    "depth_peak_class",
+                                    Value::Arr(
+                                        b.depth_peak_class
+                                            .iter()
+                                            .map(|&p| num(p as f64))
+                                            .collect(),
+                                    ),
+                                ),
                             ])
                         })
                         .collect(),
@@ -378,6 +576,36 @@ impl FleetSnapshot {
                 )
                 .ok();
             }
+        }
+        // Per-class breakdown, shown once any non-default class has
+        // traffic or anything was shed (all-Standard runs stay terse).
+        let classful = self
+            .classes
+            .iter()
+            .any(|c| c.shed > 0 || (c.class != "standard" && c.served > 0));
+        if classful {
+            writeln!(
+                out,
+                "  {:<12} {:>7} {:>7} {:>9} {:>9}",
+                "class", "served", "shed", "p50(us)", "p99(us)"
+            )
+            .ok();
+            for c in &self.classes {
+                writeln!(
+                    out,
+                    "  {:<12} {:>7} {:>7} {:>9.1} {:>9.1}",
+                    c.class, c.served, c.shed, c.p50_us, c.p99_us
+                )
+                .ok();
+            }
+        }
+        if self.tenants.len() > 1 {
+            let list: Vec<String> = self
+                .tenants
+                .iter()
+                .map(|t| format!("t{}:{}", t.tenant, t.served))
+                .collect();
+            writeln!(out, "  tenants: {} ({})", self.tenants.len(), list.join(" ")).ok();
         }
         if !self.scale_events.is_empty() {
             writeln!(
@@ -436,24 +664,61 @@ mod tests {
         }
     }
 
+    fn smp(priority: Priority, latency_us: f64) -> ReplySample {
+        ReplySample { tenant: 0, priority, latency_us }
+    }
+
     #[test]
     fn snapshot_aggregates_and_serializes() {
         let reg = reg2();
         let t = Telemetry::new(2);
-        t.record_batch(0, &[100.0, 120.0, 140.0], 30, 90, 450.0, 1, 3);
-        t.record_batch(1, &[400.0], 10, 380, 720.0, 0, 0);
+        t.record_batch(
+            0,
+            &[
+                smp(Priority::Standard, 100.0),
+                smp(Priority::Interactive, 120.0),
+                smp(Priority::Standard, 140.0),
+            ],
+            30,
+            90,
+            450.0,
+            1,
+            3,
+            [1, 2, 0],
+        );
+        t.record_batch(1, &[smp(Priority::Batch, 400.0)], 10, 380, 720.0, 0, 0, [0, 0, 0]);
+        t.record_shed(Priority::Batch);
         let snap = t.snapshot(&reg);
         assert_eq!(snap.served, 4);
         assert!(snap.p50_us >= 100.0 && snap.p50_us <= 400.0);
         assert!(snap.p99_us >= snap.p50_us);
         let e = snap.energy_per_inference_uj;
         assert!((e - (450.0 + 720.0) / 4.0).abs() < 1e-9, "{e}");
+        // Per-class split: 1 interactive, 2 standard, 1 batch (+1 shed).
+        assert_eq!(snap.classes.len(), 3);
+        assert_eq!(
+            snap.classes.iter().map(|c| c.served).collect::<Vec<_>>(),
+            vec![1, 2, 1]
+        );
+        assert_eq!(
+            snap.classes.iter().map(|c| c.shed).collect::<Vec<_>>(),
+            vec![0, 0, 1]
+        );
+        assert_eq!(snap.classes[0].p50_us, 120.0);
+        assert_eq!(snap.classes[2].p99_us, 400.0);
+        assert_eq!(snap.per_board[0].depth_peak_class, [1, 2, 0]);
         let json = snap.to_json().to_json();
         assert!(json.contains("\"throughput_rps\""));
         assert!(json.contains("synthetic#1/kws"));
+        assert!(json.contains("\"classes\""), "{json}");
+        assert!(json.contains("\"class\":\"interactive\""), "{json}");
+        assert!(json.contains("\"shed\""), "{json}");
         let parsed = crate::report::json::Value::parse(&json).unwrap();
         assert_eq!(parsed.u64_of("served").unwrap(), 4);
-        assert!(snap.render().contains("fleet: 4 served"));
+        assert_eq!(parsed.req("classes").unwrap().as_arr().unwrap().len(), 3);
+        let rendered = snap.render();
+        assert!(rendered.contains("fleet: 4 served"));
+        assert!(rendered.contains("interactive"), "{rendered}");
     }
 
     #[test]
@@ -464,14 +729,17 @@ mod tests {
         let id = t.add_board();
         assert_eq!(id, 2);
         reg.instances.push(BoardInstance::synthetic(2, "kws", 100.0, 10.0, 1.5));
-        t.record_batch(2, &[50.0], 5, 45, 100.0, 0, 4);
+        t.record_batch(2, &[smp(Priority::Standard, 50.0)], 5, 45, 100.0, 0, 4, [0, 4, 0]);
         let snap = t.snapshot(&reg);
         assert_eq!(snap.per_board.len(), 3);
         assert_eq!(snap.per_board[2].served, 1);
         assert_eq!(snap.per_board[2].depth_peak, 4);
+        assert_eq!(snap.per_board[2].depth_peak_class, [0, 4, 0]);
         assert_eq!(t.exec_us_totals(), vec![0, 0, 45]);
         t.reset_depth_peaks();
-        assert_eq!(t.snapshot(&reg).per_board[2].depth_peak, 0);
+        let rolled = t.snapshot(&reg);
+        assert_eq!(rolled.per_board[2].depth_peak, 0);
+        assert_eq!(rolled.per_board[2].depth_peak_class, [0, 0, 0]);
     }
 
     #[test]
@@ -490,7 +758,16 @@ mod tests {
         let reg = reg2();
         let t = Telemetry::new(2);
         for i in 0..20_000u64 {
-            t.record_batch(0, &[(i % 1000) as f64], 1, 1, 1.0, 0, 0);
+            t.record_batch(
+                0,
+                &[smp(Priority::Standard, (i % 1000) as f64)],
+                1,
+                1,
+                1.0,
+                0,
+                0,
+                [0, 0, 0],
+            );
         }
         let snap = t.snapshot(&reg);
         assert_eq!(snap.served, 20_000);

@@ -1,9 +1,10 @@
-//! Per-board worker threads and their bounded request queues.
+//! Per-board worker threads.
 //!
-//! Each board instance owns one [`BoardQueue`] (Mutex + Condvar; the
-//! vendored crate set has no crossbeam) and one worker thread.  The
-//! worker drains its queue through the *same* dynamic-batching window as
-//! the single-model engine ([`crate::coordinator::engine::fill_window`]),
+//! Each board instance owns one class-aware [`BoardQueue`]
+//! ([`super::queue`]; Mutex + Condvar — the vendored crate set has no
+//! crossbeam) and one worker thread.  The worker drains its queue
+//! through the *same* dynamic-batching window as the single-model engine
+//! ([`crate::coordinator::engine::fill_window`]),
 //! optionally steals queued requests from same-task replicas when its own
 //! queue runs dry before the device batch fills, then hands the staged
 //! batch to a [`BatchExecutor`] — the worker loop contains **no execute
@@ -11,6 +12,14 @@
 //! stretched by `time_scale`) lives inside the executor
 //! ([`DataflowTiming`]), so the engine's `serve_with`, these fleet
 //! workers, and the pjrt-feature workers share one execution plane.
+//!
+//! Batch gathering is **class-aware**: the queue's pickup already hands
+//! out `Interactive` work first, and a window *opened by* an Interactive
+//! request never waits out the batching timer — it tops up with whatever
+//! is queued right now and executes immediately.  Together the two rules
+//! mean an Interactive request is never parked behind a full Batch
+//! window: it either rides the earliest window (priority pickup pulls it
+//! in while the window fills) or opens its own without the wait.
 //!
 //! Peer queues are a shared, **live** list ([`PeerList`]): replicas added
 //! or retired at runtime by the autoscaler become visible to every
@@ -26,170 +35,21 @@
 //! vectors.
 
 use super::cache::ResultCache;
+use super::queue::{BoardQueue, FleetRequest, Priority};
 use super::registry::BoardInstance;
-use super::telemetry::Telemetry;
+use super::telemetry::{ReplySample, Telemetry};
 use crate::coordinator::engine::{fill_window, BatchExecutor, BatchPolicy, Reply};
 use crate::error::{bail, Result};
 use crate::kernels::{PackedLinear, ScratchArena, SmoothKernel};
 use crate::runtime::argmax;
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock, RwLock};
+use std::sync::{Arc, OnceLock, RwLock};
 use std::time::{Duration, Instant};
-
-/// One request in flight inside the fleet.
-pub struct FleetRequest {
-    pub x: Vec<f32>,
-    pub reply: mpsc::Sender<Reply>,
-    pub enqueued: Instant,
-    /// Set by the submit path when result caching is on: the worker
-    /// inserts its output under this key after executing.
-    pub cache_key: Option<u64>,
-}
 
 /// Live same-task replica queues (own queue included; workers skip
 /// themselves by pointer identity).  Shared between the fleet and its
 /// workers so membership changes from `add_replica` / `retire_replica`
 /// are visible without restarting anyone.
 pub type PeerList = Arc<RwLock<Vec<Arc<BoardQueue>>>>;
-
-/// Bounded MPMC queue in front of one board (router pushes, the owning
-/// worker pops, same-task workers steal).
-pub struct BoardQueue {
-    q: Mutex<VecDeque<FleetRequest>>,
-    cv: Condvar,
-    depth: AtomicUsize,
-    /// High-water mark, updated at push time (where depth is
-    /// authoritative) — sampling depth after a batch drain would
-    /// systematically read 0.
-    peak: AtomicUsize,
-    cap: usize,
-    closed: AtomicBool,
-}
-
-impl BoardQueue {
-    pub fn new(cap: usize) -> Self {
-        BoardQueue {
-            q: Mutex::new(VecDeque::new()),
-            cv: Condvar::new(),
-            depth: AtomicUsize::new(0),
-            peak: AtomicUsize::new(0),
-            cap: cap.max(1),
-            closed: AtomicBool::new(false),
-        }
-    }
-
-    /// Lock-free read of the current depth (router load signal).
-    pub fn depth(&self) -> usize {
-        self.depth.load(Ordering::Relaxed)
-    }
-
-    /// Highest depth observed at push time since the last
-    /// [`Self::reset_peak`].
-    pub fn peak(&self) -> usize {
-        self.peak.load(Ordering::Relaxed)
-    }
-
-    /// Roll the high-water mark over to the *current* depth (not zero —
-    /// a standing backlog must stay visible).  Called when telemetry
-    /// snapshots roll over (`Fleet::snapshot_phase` at bench phase
-    /// boundaries) so per-phase peak depths are meaningful instead of
-    /// monotonically sticky across the whole run.  Deliberately has a
-    /// single consumer: the autoscaler samples instantaneous depth
-    /// instead, so a reset here never clobbers a control signal.
-    pub fn reset_peak(&self) {
-        self.peak.store(self.depth.load(Ordering::Relaxed), Ordering::Relaxed);
-    }
-
-    pub fn cap(&self) -> usize {
-        self.cap
-    }
-
-    /// Admit a request; hands it back if the queue is full or closed.
-    /// Both conditions are checked under the lock: the cap so depth can
-    /// never exceed it, and `closed` so a submit racing with shutdown
-    /// cannot enqueue after the worker's final drain (the request would
-    /// be stranded forever).
-    pub fn try_push(&self, r: FleetRequest) -> Result<(), FleetRequest> {
-        let mut q = self.q.lock().unwrap();
-        if self.closed.load(Ordering::Acquire) || q.len() >= self.cap {
-            return Err(r);
-        }
-        q.push_back(r);
-        self.depth.store(q.len(), Ordering::Relaxed);
-        self.peak.fetch_max(q.len(), Ordering::Relaxed);
-        drop(q);
-        self.cv.notify_one();
-        Ok(())
-    }
-
-    /// Stop admitting; wakes the worker so it can drain and exit.  Takes
-    /// the queue lock so closing serializes with in-flight pushes: after
-    /// close() returns, any request that won the race is in the queue
-    /// (depth > 0) and will be drained, and any later push is rejected.
-    pub fn close(&self) {
-        let guard = self.q.lock().unwrap();
-        self.closed.store(true, Ordering::Release);
-        drop(guard);
-        self.cv.notify_all();
-    }
-
-    pub fn is_closed(&self) -> bool {
-        self.closed.load(Ordering::Acquire)
-    }
-
-    /// Block until a request is available; `None` once closed *and*
-    /// drained.  Used by workers with stealing disabled — no periodic
-    /// wakeups, `close()`'s notify_all is the exit signal.
-    pub fn pop_blocking(&self) -> Option<FleetRequest> {
-        let mut q = self.q.lock().unwrap();
-        loop {
-            if let Some(r) = q.pop_front() {
-                self.depth.store(q.len(), Ordering::Relaxed);
-                return Some(r);
-            }
-            if self.closed.load(Ordering::Acquire) {
-                return None;
-            }
-            q = self.cv.wait(q).unwrap();
-        }
-    }
-
-    /// Pop with a deadline (the batching window's `next` source).
-    pub fn pop_until(&self, deadline: Instant) -> Option<FleetRequest> {
-        let mut q = self.q.lock().unwrap();
-        loop {
-            if let Some(r) = q.pop_front() {
-                self.depth.store(q.len(), Ordering::Relaxed);
-                return Some(r);
-            }
-            if self.closed.load(Ordering::Acquire) {
-                return None;
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                return None;
-            }
-            let (guard, timeout) =
-                self.cv.wait_timeout(q, deadline.duration_since(now)).unwrap();
-            q = guard;
-            if timeout.timed_out() && q.is_empty() {
-                return None;
-            }
-        }
-    }
-
-    /// Non-blocking steal (same-task replicas balancing a hot queue, or
-    /// draining a retired replica's closed queue).
-    pub fn try_steal(&self) -> Option<FleetRequest> {
-        let mut q = self.q.lock().unwrap();
-        let r = q.pop_front();
-        if r.is_some() {
-            self.depth.store(q.len(), Ordering::Relaxed);
-        }
-        r
-    }
-}
 
 /// Per-task packed class templates, quantized once per process and
 /// shared by every replica worker of that task.
@@ -547,7 +407,24 @@ pub fn run_worker<E: BatchExecutor>(
                 None => return served,
             }
         };
-        let mut batch = fill_window(first, &window, |deadline| own.pop_until(deadline));
+        // Class-aware gathering: an Interactive opener tops up with
+        // whatever is queued *right now* and executes immediately —
+        // holding a user-facing request hostage to the batching timer
+        // just to fill the device would invert the priority the queue
+        // worked to enforce.  Lower-class openers wait out the normal
+        // window (and priority pickup pulls any Interactive arrival
+        // into that same window ahead of the remaining backlog).  In
+        // FIFO-compat mode the queue ignores priority, so this layer
+        // must too — otherwise the control run the benches compare
+        // against would keep a slice of the priority behavior.
+        let mut batch = if own.is_classful() && first.tag.priority == Priority::Interactive
+        {
+            // Non-blocking `next`: the first empty poll ends the window,
+            // so the timer never actually waits.
+            fill_window(first, &window, |_| own.try_steal())
+        } else {
+            fill_window(first, &window, |deadline| own.pop_until(deadline))
+        };
         if cfg.work_stealing && batch.len() < window.max_batch {
             // Top the batch up from peers under ONE read of the live
             // list: membership staleness within a single batch fill is
@@ -593,7 +470,7 @@ pub fn run_worker<E: BatchExecutor>(
         }
         let exec_us = exec_start.elapsed().as_micros();
 
-        let mut latencies_us = Vec::with_capacity(n);
+        let mut samples = Vec::with_capacity(n);
         let mut queue_us_sum = 0u128;
         for (i, req) in batch.iter().enumerate() {
             let out = obuf[i * n_out..(i + 1) * n_out].to_vec();
@@ -605,7 +482,11 @@ pub fn run_worker<E: BatchExecutor>(
             }
             let queue_us = exec_start.duration_since(req.enqueued).as_micros();
             queue_us_sum += queue_us;
-            latencies_us.push(req.enqueued.elapsed().as_micros() as f64);
+            samples.push(ReplySample {
+                tenant: req.tag.tenant,
+                priority: req.tag.priority,
+                latency_us: req.enqueued.elapsed().as_micros() as f64,
+            });
             let _ = req.reply.send(Reply {
                 output: out,
                 top1,
@@ -617,12 +498,13 @@ pub fn run_worker<E: BatchExecutor>(
         }
         telemetry.record_batch(
             inst.id,
-            &latencies_us,
+            &samples,
             queue_us_sum,
             exec_us,
             energy_uj,
             stolen,
             own.peak(),
+            own.peak_class(),
         );
     }
 }
@@ -630,52 +512,6 @@ pub fn run_worker<E: BatchExecutor>(
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn queue_bounds_are_strict() {
-        let q = BoardQueue::new(2);
-        let (tx, _rx) = mpsc::channel();
-        let mk = || FleetRequest {
-            x: vec![0.0],
-            reply: tx.clone(),
-            enqueued: Instant::now(),
-            cache_key: None,
-        };
-        assert!(q.try_push(mk()).is_ok());
-        assert!(q.try_push(mk()).is_ok());
-        assert!(q.try_push(mk()).is_err(), "cap 2 must reject the 3rd");
-        assert_eq!(q.depth(), 2);
-        assert!(q.try_steal().is_some());
-        assert_eq!(q.depth(), 1);
-        q.close();
-        assert!(q.try_push(mk()).is_err(), "closed queue rejects");
-        assert!(q.pop_until(Instant::now()).is_some(), "drains after close");
-        assert!(q.pop_until(Instant::now()).is_none());
-    }
-
-    #[test]
-    fn peak_resets_to_current_depth_not_zero() {
-        let q = BoardQueue::new(8);
-        let (tx, _rx) = mpsc::channel();
-        let mk = || FleetRequest {
-            x: vec![0.0],
-            reply: tx.clone(),
-            enqueued: Instant::now(),
-            cache_key: None,
-        };
-        for _ in 0..5 {
-            q.try_push(mk()).unwrap();
-        }
-        for _ in 0..3 {
-            q.try_steal();
-        }
-        assert_eq!(q.peak(), 5);
-        q.reset_peak();
-        // Standing backlog of 2 stays visible after the rollover.
-        assert_eq!(q.peak(), 2);
-        q.try_push(mk()).unwrap();
-        assert_eq!(q.peak(), 3, "peak tracks pushes again after reset");
-    }
 
     #[test]
     fn sim_executor_shapes_and_determinism() {

@@ -31,10 +31,16 @@
 //!   with work stealing between same-task replicas and execute through the
 //!   engine's `BatchExecutor` trait (the simulated dataflow hold lives in
 //!   the executor, so sim and PJRT boards share one worker loop),
+//!   a multi-tenant class-aware queue plane ([`fleet::queue`]: every
+//!   request carries a (tenant, priority) tag, strict-priority pickup for
+//!   interactive traffic with an anti-starvation guard, weighted
+//!   deficit-round-robin between standard and batch, and tiered admission
+//!   that sheds batch first under overload),
 //!   [`fleet::autoscale`] growing/shrinking same-task replicas at runtime
-//!   from telemetry (queue depth, predicted latency vs SLO, utilization)
-//!   with drain-then-join retirement, and [`fleet::telemetry`] aggregating
-//!   fleet-level p50/p99 latency, throughput, energy per inference,
+//!   from telemetry (urgent queue depth, predicted latency vs SLO,
+//!   utilization) with drain-then-join retirement, and
+//!   [`fleet::telemetry`] aggregating fleet-level p50/p99 latency,
+//!   throughput, energy per inference, per-class/per-tenant splits,
 //!   board-seconds, and the scale history into [`report::json`].
 //! * [`kernels`] — the packed quantized kernel core behind every surrogate
 //!   forward: templates/projections packed once into contiguous i8 with

@@ -14,8 +14,16 @@
 //! tinyml-codesign fleet [--policy rr|ll|energy|slo] [--requests N] [--cache N]
 //!                       [--autoscale] [--min-replicas N] [--max-replicas N]
 //!                       [--scale-interval-us N] [--json]
+//!                       [--tenants N] [--priority-mix i:s:b] [--fifo]
+//! tinyml-codesign bench-gate [--baseline-dir D] [--bench-dir D] [--tol F]
+//!                       [--update] [--self-test]    BENCH_* regression gate
 //! tinyml-codesign list                               available models
 //! ```
+//!
+//! `--priority-mix i:s:b` weights the interactive:standard:batch classes
+//! of the generated fleet workload (default `0:1:0`, all standard);
+//! `--tenants N` spreads requests over N tenant ids; `--fifo` disables
+//! priority scheduling (single-FIFO control).
 
 use tinyml_codesign::board::{arty_a7_100t, pynq_z2, Board};
 use tinyml_codesign::coordinator::engine::{spawn, BatchPolicy};
@@ -23,8 +31,10 @@ use tinyml_codesign::coordinator::{self, TrainConfig};
 use tinyml_codesign::data;
 use tinyml_codesign::eembc::{DesignPerf, Dut, Runner};
 use tinyml_codesign::error::{anyhow, bail, Result};
-use tinyml_codesign::fleet::{AutoscaleConfig, Fleet, FleetConfig, Policy, Registry};
-use tinyml_codesign::report::tables;
+use tinyml_codesign::fleet::{
+    AutoscaleConfig, Fleet, FleetConfig, Policy, Priority, Registry, RequestTag,
+};
+use tinyml_codesign::report::{gate, tables};
 use tinyml_codesign::runtime::{LoadedModel, Runtime};
 
 struct Args {
@@ -60,6 +70,45 @@ impl Args {
     fn usize_flag(&self, name: &str, default: usize) -> usize {
         self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
+
+    fn f64_flag(&self, name: &str, default: f64) -> f64 {
+        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+/// Parse `--priority-mix i:s:b` into per-class weights
+/// (interactive:standard:batch).
+fn parse_priority_mix(text: &str) -> Result<[f64; 3]> {
+    let parts: Vec<&str> = text.split(':').collect();
+    if parts.len() != 3 {
+        bail!("--priority-mix wants i:s:b (e.g. 10:20:70), got '{text}'");
+    }
+    let mut mix = [0.0f64; 3];
+    for (slot, part) in mix.iter_mut().zip(&parts) {
+        *slot = part
+            .parse::<f64>()
+            .map_err(|_| anyhow!("bad priority-mix component '{part}'"))?;
+        if *slot < 0.0 {
+            bail!("priority-mix components must be >= 0, got '{part}'");
+        }
+    }
+    if mix.iter().sum::<f64>() <= 0.0 {
+        bail!("priority-mix must have at least one positive component");
+    }
+    Ok(mix)
+}
+
+/// Sample a class from the mix weights.
+fn sample_priority(mix: &[f64; 3], u: f64) -> Priority {
+    let total: f64 = mix.iter().sum();
+    let mut acc = 0.0;
+    for (i, &w) in mix.iter().enumerate() {
+        acc += w;
+        if u * total < acc {
+            return Priority::ALL[i];
+        }
+    }
+    Priority::Batch
 }
 
 fn board_from(args: &Args) -> Board {
@@ -240,11 +289,14 @@ fn main() -> Result<()> {
                 max_replicas: args.usize_flag("max-replicas", 4),
                 ..Default::default()
             });
+            let tenants = args.usize_flag("tenants", 1).max(1) as u32;
+            let mix = parse_priority_mix(args.flag("priority-mix").unwrap_or("0:1:0"))?;
             let cfg = FleetConfig {
                 policy,
                 time_scale: 20.0,
                 cache_cap: args.usize_flag("cache", 0),
                 autoscale,
+                fifo_queues: args.flag("fifo").is_some(),
                 ..Default::default()
             };
             let fleet = Fleet::start(Registry::standard_fleet()?, cfg)?;
@@ -252,14 +304,18 @@ fn main() -> Result<()> {
             let mut rng = data::prng::SplitMix64::new(0xF1EE7);
             let mut pending = Vec::new();
             let mut rejected = 0usize;
-            for _ in 0..n {
+            for i in 0..n {
                 let task = match rng.next_below(4) {
                     0 | 1 => "kws",
                     2 => "ad",
                     _ => "ic",
                 };
+                let tag = RequestTag::new(
+                    i as u32 % tenants,
+                    sample_priority(&mix, rng.next_f64()),
+                );
                 let x = vec![0.2f32; data::feature_dim(task)];
-                match handle.submit(task, x) {
+                match handle.submit_tagged(task, x, tag) {
                     Ok(rx) => pending.push(rx),
                     Err(_) => rejected += 1,
                 }
@@ -268,15 +324,32 @@ fn main() -> Result<()> {
                 let _ = rx.recv();
             }
             let summary = fleet.shutdown();
-            println!("policy {policy}, {n} mixed requests, {rejected} rejected");
+            println!(
+                "policy {policy}{}, {n} mixed requests over {tenants} tenant(s), \
+                 {rejected} rejected",
+                if cfg.fifo_queues { " (fifo queues)" } else { "" }
+            );
             if args.flag("json").is_some() {
                 println!("{}", summary.snapshot.to_json().to_json());
             } else {
                 print!("{}", summary.render());
             }
         }
+        "bench-gate" => {
+            let bench_dir = std::path::PathBuf::from(args.flag("bench-dir").unwrap_or("."));
+            let baseline_dir =
+                std::path::PathBuf::from(args.flag("baseline-dir").unwrap_or("baselines"));
+            let tol = args.f64_flag("tol", gate::DEFAULT_TOLERANCE);
+            if args.flag("self-test").is_some() {
+                println!("{}", gate::self_test(&baseline_dir, tol)?);
+            } else if args.flag("update").is_some() {
+                println!("{}", gate::update_baselines(&bench_dir, &baseline_dir)?);
+            } else {
+                println!("{}", gate::run_gate(&bench_dir, &baseline_dir, tol)?);
+            }
+        }
         _ => {
-            println!("{}", include_str!("main.rs").lines().skip(2).take(16).map(|l| l.trim_start_matches("//! ")).collect::<Vec<_>>().join("\n"));
+            println!("{}", include_str!("main.rs").lines().skip(2).take(19).map(|l| l.trim_start_matches("//! ")).collect::<Vec<_>>().join("\n"));
         }
     }
     Ok(())

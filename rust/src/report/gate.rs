@@ -1,0 +1,406 @@
+//! Bench-regression gate: hold the recorded `BENCH_*.json` numbers as a
+//! CI floor.
+//!
+//! The self-checking benches (`benches/kernels.rs`, `benches/fleet.rs`)
+//! already assert *absolute* floors inline (packed >= naive, elastic p99
+//! <= fixed, interactive ratio <= 0.5, ...).  This module adds the
+//! *trajectory* guarantee on top: the dimensionless **headline ratios**
+//! of a fresh bench run are diffed against committed baselines
+//! (`baselines/BENCH_kernels.json`, `baselines/BENCH_fleet.json`) and
+//! CI fails on a regression beyond [`DEFAULT_TOLERANCE`] — so a PR that
+//! quietly gives back half of a recorded speedup is caught even when it
+//! still clears the benches' own absolute asserts.
+//!
+//! Only dimensionless ratios are gated (speedups, elastic/fixed ratios,
+//! the priority interactive-p99 ratio), never raw ns/µs numbers: ratios
+//! transfer across machines far better than absolute timings — but the
+//! timing-derived tail ratios still carry run-to-run noise, so a
+//! blessed baseline should keep headroom.  The committed baselines
+//! start at the benches' own assert floors — guaranteed consistent on a
+//! first CI run — and are tightened with `tinyml-codesign bench-gate
+//! --update` on a reference machine; when doing so, bless the *worst*
+//! of several runs (or round toward the floor), not a lucky best:
+//! blessing a single fast run removes the noise margin by construction
+//! and turns the 10% tolerance into a flake generator.
+//!
+//! Entry points: `tinyml-codesign bench-gate [--baseline-dir D]
+//! [--bench-dir D] [--tol F] [--update | --self-test]`, wrapped by
+//! `tools/bench_gate.sh`, wired into `ci.sh` after the benches run.
+//! `--self-test` proves the gate has teeth by injecting an artificial
+//! just-over-tolerance regression into every headline metric and
+//! checking each one is rejected.
+
+use crate::error::{anyhow, bail, Result};
+use crate::report::json::Value;
+use std::path::Path;
+
+/// Relative regression allowed before the gate fails (10%).
+pub const DEFAULT_TOLERANCE: f64 = 0.10;
+
+/// The bench documents the gate knows how to extract headlines from,
+/// keyed by their `"bench"` field.
+const BENCH_FILES: [&str; 2] = ["BENCH_kernels.json", "BENCH_fleet.json"];
+
+/// One gated headline number.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Metric {
+    /// `"<file-stem>.<path>"`, e.g. `"kernels.kws.packed_batch_speedup"`.
+    pub name: String,
+    pub value: f64,
+    /// Direction: `true` = bigger is better (speedups), `false` =
+    /// smaller is better (elastic/fixed and priority/fifo ratios).
+    pub higher_is_better: bool,
+}
+
+/// One gate failure.
+#[derive(Clone, Debug)]
+pub struct Regression {
+    pub name: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// Relative change in the *bad* direction (positive = worse).
+    pub loss: f64,
+}
+
+impl std::fmt::Display for Regression {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: {:.4} -> {:.4} ({:+.1}% vs baseline)",
+            self.name,
+            self.baseline,
+            self.current,
+            100.0 * self.loss
+        )
+    }
+}
+
+fn f64_of(doc: &Value, key: &str) -> Result<f64> {
+    doc.req(key)?.as_f64().ok_or_else(|| anyhow!("'{key}' not a number"))
+}
+
+/// Extract the gated headline metrics from one parsed `BENCH_*.json`
+/// document (dispatches on its `"bench"` field).
+pub fn headline_metrics(doc: &Value) -> Result<Vec<Metric>> {
+    let bench = doc.str_of("bench")?;
+    let mut out = Vec::new();
+    match bench.as_str() {
+        "kernels" => {
+            let shapes =
+                doc.req("shapes")?.as_arr().ok_or_else(|| anyhow!("'shapes' not an array"))?;
+            for shape in shapes {
+                let task = shape.str_of("task")?;
+                for key in ["packed_single_speedup", "packed_batch_speedup"] {
+                    out.push(Metric {
+                        name: format!("kernels.{task}.{key}"),
+                        value: f64_of(shape, key)?,
+                        higher_is_better: true,
+                    });
+                }
+            }
+            out.push(Metric {
+                name: "kernels.smooth.speedup".to_string(),
+                value: f64_of(doc.req("smooth")?, "speedup")?,
+                higher_is_better: true,
+            });
+        }
+        "fleet" => {
+            // Routing: load-aware placement over blind rotation.
+            let policies = doc
+                .req("policies")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("'policies' not an array"))?;
+            let throughput_of = |name: &str| -> Result<f64> {
+                policies
+                    .iter()
+                    .find(|p| p.str_of("policy").is_ok_and(|n| n == name))
+                    .map(|p| f64_of(p, "throughput_rps"))
+                    .ok_or_else(|| anyhow!("no '{name}' entry in policies"))?
+            };
+            out.push(Metric {
+                name: "fleet.least_loaded_over_round_robin_throughput".to_string(),
+                value: throughput_of("least-loaded")? / throughput_of("round-robin")?.max(1e-9),
+                higher_is_better: true,
+            });
+            // Autoscaling: elastic tail and cost vs the fixed fleet.
+            let auto = doc.req("autoscale")?;
+            for key in ["p99_ratio_elastic_over_fixed", "board_seconds_ratio_elastic_over_fixed"] {
+                out.push(Metric {
+                    name: format!("fleet.{key}"),
+                    value: f64_of(auto, key)?,
+                    higher_is_better: false,
+                });
+            }
+            // Priority scheduling: the interactive tail vs the FIFO
+            // control.
+            out.push(Metric {
+                name: "fleet.interactive_p99_ratio_classful_over_fifo".to_string(),
+                value: f64_of(
+                    doc.req("priority")?,
+                    "interactive_p99_ratio_classful_over_fifo",
+                )?,
+                higher_is_better: false,
+            });
+        }
+        other => bail!("bench-gate does not know bench '{other}'"),
+    }
+    Ok(out)
+}
+
+/// Diff current metrics against the baseline at `tol`.  A baseline
+/// metric missing from the current run is itself a regression (a
+/// headline must not silently disappear); metrics new in the current
+/// run are ignored (they become gated once `--update` blesses them).
+pub fn compare(baseline: &[Metric], current: &[Metric], tol: f64) -> Vec<Regression> {
+    let mut out = Vec::new();
+    for base in baseline {
+        let Some(cur) = current.iter().find(|m| m.name == base.name) else {
+            out.push(Regression {
+                name: format!("{} (missing from current run)", base.name),
+                baseline: base.value,
+                current: f64::NAN,
+                loss: f64::INFINITY,
+            });
+            continue;
+        };
+        let loss = if base.higher_is_better {
+            // Worse = smaller.  loss > 0 when current < baseline.
+            (base.value - cur.value) / base.value.abs().max(1e-12)
+        } else {
+            // Worse = bigger.
+            (cur.value - base.value) / base.value.abs().max(1e-12)
+        };
+        if loss > tol {
+            out.push(Regression {
+                name: base.name.clone(),
+                baseline: base.value,
+                current: cur.value,
+                loss,
+            });
+        }
+    }
+    out
+}
+
+fn load_metrics(path: &Path) -> Result<Vec<Metric>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("cannot read {}: {e}", path.display()))?;
+    let doc = Value::parse(&text)
+        .map_err(|e| anyhow!("cannot parse {}: {e}", path.display()))?;
+    headline_metrics(&doc)
+}
+
+/// Gate fresh `BENCH_*.json` files in `bench_dir` against the committed
+/// baselines in `baseline_dir`.  Ok(report) when everything holds;
+/// Err listing every regressed headline otherwise.
+pub fn run_gate(bench_dir: &Path, baseline_dir: &Path, tol: f64) -> Result<String> {
+    let mut report = String::new();
+    let mut regressions: Vec<Regression> = Vec::new();
+    let mut gated = 0usize;
+    for file in BENCH_FILES {
+        let baseline = load_metrics(&baseline_dir.join(file))?;
+        let current = load_metrics(&bench_dir.join(file))?;
+        gated += baseline.len();
+        regressions.extend(compare(&baseline, &current, tol));
+        for m in &baseline {
+            if let Some(c) = current.iter().find(|c| c.name == m.name) {
+                report.push_str(&format!(
+                    "  {:<55} baseline {:>8.4}  current {:>8.4}  ({})\n",
+                    m.name,
+                    m.value,
+                    c.value,
+                    if m.higher_is_better { "higher is better" } else { "lower is better" }
+                ));
+            }
+        }
+    }
+    if regressions.is_empty() {
+        Ok(format!(
+            "bench-gate OK: {gated} headline metrics within {:.0}% of baseline\n{report}",
+            tol * 100.0
+        ))
+    } else {
+        let lines: Vec<String> =
+            regressions.iter().map(|r| format!("  REGRESSED {r}")).collect();
+        // Keep the full comparison table in the failure message: judging
+        // whether a regression is isolated or part of a broad slowdown
+        // needs the metrics that *didn't* trip too.
+        bail!(
+            "bench-gate FAILED: {} of {gated} headline metrics regressed more than \
+             {:.0}%:\n{}\nall gated metrics:\n{report}\
+             (intentional? re-bless with `tinyml-codesign bench-gate --update`)",
+            regressions.len(),
+            tol * 100.0,
+            lines.join("\n")
+        )
+    }
+}
+
+/// Bless the current `BENCH_*.json` files as the new baselines.
+/// Bless conservatively: run the benches several times and bless the
+/// worst run, so the gate's relative tolerance keeps absorbing normal
+/// run-to-run noise in the timing-derived ratios (see module docs).
+pub fn update_baselines(bench_dir: &Path, baseline_dir: &Path) -> Result<String> {
+    std::fs::create_dir_all(baseline_dir)
+        .map_err(|e| anyhow!("cannot create {}: {e}", baseline_dir.display()))?;
+    let mut report = String::new();
+    for file in BENCH_FILES {
+        let src = bench_dir.join(file);
+        // Validate before blessing: a truncated or hand-edited file must
+        // not become the floor.
+        let n = load_metrics(&src)?.len();
+        let dst = baseline_dir.join(file);
+        std::fs::copy(&src, &dst)
+            .map_err(|e| anyhow!("cannot copy {} -> {}: {e}", src.display(), dst.display()))?;
+        report.push_str(&format!(
+            "  blessed {} -> {} ({n} headline metrics)\n",
+            src.display(),
+            dst.display()
+        ));
+    }
+    Ok(format!("bench-gate baselines updated:\n{report}"))
+}
+
+/// Prove the gate has teeth: for every headline metric in the committed
+/// baselines, inject an artificial regression just past the tolerance
+/// and check it is rejected (and that an unperturbed run passes).
+pub fn self_test(baseline_dir: &Path, tol: f64) -> Result<String> {
+    let mut total = 0usize;
+    for file in BENCH_FILES {
+        let baseline = load_metrics(&baseline_dir.join(file))?;
+        if baseline.is_empty() {
+            bail!("{file}: no headline metrics — gate would be vacuous");
+        }
+        // Identity must pass.
+        let clean = compare(&baseline, &baseline, tol);
+        if !clean.is_empty() {
+            bail!("{file}: identical metrics flagged as regressed: {:?}", clean);
+        }
+        // Each metric, worsened ~2% past the tolerance, must fail.
+        for (i, m) in baseline.iter().enumerate() {
+            let mut bad = baseline.clone();
+            bad[i].value = if m.higher_is_better {
+                m.value * (1.0 - tol - 0.02)
+            } else {
+                m.value * (1.0 + tol + 0.02)
+            };
+            let caught = compare(&baseline, &bad, tol);
+            if caught.len() != 1 || !caught[0].name.contains(&m.name) {
+                bail!(
+                    "{file}: artificial {:.0}% regression of '{}' not caught (got {:?})",
+                    (tol + 0.02) * 100.0,
+                    m.name,
+                    caught
+                );
+            }
+            // And a missing headline must be caught too.
+            let mut gone = baseline.clone();
+            gone.remove(i);
+            if compare(&baseline, &gone, tol).len() != 1 {
+                bail!("{file}: silently dropped headline '{}' not caught", m.name);
+            }
+            total += 1;
+        }
+    }
+    Ok(format!(
+        "bench-gate self-test OK: {total} injected regressions all rejected at \
+         {:.0}% tolerance",
+        tol * 100.0
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metric(name: &str, value: f64, higher: bool) -> Metric {
+        Metric { name: name.to_string(), value, higher_is_better: higher }
+    }
+
+    #[test]
+    fn compare_is_direction_aware() {
+        let base = vec![metric("speedup", 2.0, true), metric("ratio", 0.8, false)];
+        // Within tolerance both ways.
+        let ok = vec![metric("speedup", 1.85, true), metric("ratio", 0.86, false)];
+        assert!(compare(&base, &ok, 0.10).is_empty());
+        // Speedup collapsing fails; ratio shrinking (improving) passes.
+        let worse = vec![metric("speedup", 1.7, true), metric("ratio", 0.4, false)];
+        let r = compare(&base, &worse, 0.10);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].name, "speedup");
+        assert!(r[0].loss > 0.10);
+        // Ratio growing fails.
+        let worse2 = vec![metric("speedup", 2.2, true), metric("ratio", 0.9, false)];
+        let r2 = compare(&base, &worse2, 0.10);
+        assert_eq!(r2.len(), 1);
+        assert_eq!(r2[0].name, "ratio");
+    }
+
+    #[test]
+    fn missing_headline_is_a_regression() {
+        let base = vec![metric("a", 1.0, true), metric("b", 1.0, false)];
+        let cur = vec![metric("a", 1.0, true)];
+        let r = compare(&base, &cur, 0.10);
+        assert_eq!(r.len(), 1);
+        assert!(r[0].name.contains("b"));
+        assert!(r[0].loss.is_infinite());
+    }
+
+    #[test]
+    fn extracts_kernels_and_fleet_headlines() {
+        let kernels = Value::parse(
+            r#"{"bench":"kernels","shapes":[
+                {"task":"kws","packed_single_speedup":3.0,"packed_batch_speedup":5.0},
+                {"task":"ic","packed_single_speedup":2.0,"packed_batch_speedup":4.0}],
+                "smooth":{"speedup":6.0}}"#,
+        )
+        .unwrap();
+        let m = headline_metrics(&kernels).unwrap();
+        assert_eq!(m.len(), 5);
+        assert!(m.iter().all(|x| x.higher_is_better));
+        assert!(m.iter().any(|x| x.name == "kernels.kws.packed_batch_speedup"
+            && x.value == 5.0));
+
+        let fleet = Value::parse(
+            r#"{"bench":"fleet",
+                "policies":[{"policy":"round-robin","throughput_rps":100.0},
+                            {"policy":"least-loaded","throughput_rps":150.0},
+                            {"policy":"energy-aware","throughput_rps":90.0}],
+                "autoscale":{"p99_ratio_elastic_over_fixed":0.9,
+                             "board_seconds_ratio_elastic_over_fixed":0.7},
+                "priority":{"interactive_p99_ratio_classful_over_fifo":0.3}}"#,
+        )
+        .unwrap();
+        let m = headline_metrics(&fleet).unwrap();
+        assert_eq!(m.len(), 4);
+        let ll = m
+            .iter()
+            .find(|x| x.name == "fleet.least_loaded_over_round_robin_throughput")
+            .unwrap();
+        assert!((ll.value - 1.5).abs() < 1e-9);
+        assert!(ll.higher_is_better);
+        assert!(m
+            .iter()
+            .any(|x| x.name == "fleet.interactive_p99_ratio_classful_over_fifo"
+                && !x.higher_is_better));
+
+        assert!(headline_metrics(&Value::parse(r#"{"bench":"nope"}"#).unwrap()).is_err());
+    }
+
+    /// The committed baselines must stay parseable and self-consistent:
+    /// the gate run against them verbatim passes, and the self-test's
+    /// injected regressions are all caught.  (This is the in-tree
+    /// version of `bench-gate --self-test`, so `cargo test` alone
+    /// exercises the gate logic end to end.)
+    #[test]
+    fn committed_baselines_pass_identity_and_self_test() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("baselines");
+        let report = run_gate(&dir, &dir, DEFAULT_TOLERANCE)
+            .expect("baselines must gate cleanly against themselves");
+        assert!(report.contains("bench-gate OK"), "{report}");
+        let st = self_test(&dir, DEFAULT_TOLERANCE).expect("self-test must pass");
+        assert!(st.contains("self-test OK"), "{st}");
+        // The priority headline is part of the committed floor.
+        assert!(report.contains("interactive_p99_ratio_classful_over_fifo"), "{report}");
+    }
+}

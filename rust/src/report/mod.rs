@@ -1,3 +1,6 @@
-//! Report rendering (tables/figures) + the in-tree JSON implementation.
+//! Report rendering (tables/figures), the in-tree JSON implementation,
+//! and the bench-regression gate over the recorded `BENCH_*.json`
+//! trajectory.
+pub mod gate;
 pub mod json;
 pub mod tables;

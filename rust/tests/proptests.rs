@@ -12,7 +12,8 @@ use tinyml_codesign::fifo::{optimize_fifos, DepthPolicy};
 use tinyml_codesign::fleet::worker::run_worker;
 use tinyml_codesign::fleet::{
     BoardInstance, BoardQueue, Fleet, FleetConfig, FleetRequest, PeerList, Policy,
-    Registry, RouteError, Router, SimBoardExecutor, Telemetry, WorkerConfig,
+    Priority, Registry, RequestTag, RouteError, Router, SimBoardExecutor, Telemetry,
+    WorkerConfig,
 };
 use tinyml_codesign::ir::Graph;
 use tinyml_codesign::kernels::{
@@ -593,6 +594,7 @@ fn run_worker_has_no_inline_inference_path() {
             reply: tx,
             enqueued: Instant::now(),
             cache_key: None,
+            tag: RequestTag::default(),
         };
         assert!(queue.try_push(req).is_ok(), "request {i} rejected");
         rxs.push((i, rx));
@@ -682,6 +684,171 @@ fn prop_scale_down_drains_every_request_exactly_once() {
                 >= summary.served_per_worker.len().saturating_sub(2),
             "case {case}: every membership change must be recorded"
         );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Priority queue plane: conservation, shedding order, no starvation.
+// ---------------------------------------------------------------------------
+
+fn random_priority(rng: &mut SplitMix64) -> Priority {
+    Priority::ALL[rng.next_below(3) as usize]
+}
+
+#[test]
+fn prop_no_admitted_request_dropped_across_priority_classes() {
+    // Random class/tenant mixes against a live fleet: every admitted
+    // request comes back exactly once regardless of its class, and the
+    // per-class served/shed accounting matches the caller's view.
+    let mut rng = SplitMix64::new(0x9A10_0001);
+    for case in 0..6 {
+        let reg = Registry {
+            instances: vec![
+                BoardInstance::synthetic(0, "kws", 150.0, 30.0, 1.5),
+                BoardInstance::synthetic(1, "kws", 400.0, 80.0, 1.8),
+            ],
+        };
+        let cfg = FleetConfig {
+            time_scale: 2.0,
+            queue_cap: 32,
+            work_stealing: case % 2 == 0,
+            ..Default::default()
+        };
+        let fleet = Fleet::start(reg, cfg).unwrap();
+        let handle = fleet.handle();
+        let mut pending: Vec<(Priority, _)> = Vec::new();
+        let mut admitted = [0u64; 3];
+        let mut shed = [0u64; 3];
+        for i in 0..150u32 {
+            let p = random_priority(&mut rng);
+            let tag = RequestTag::new(i % 5, p);
+            match handle.submit_tagged("kws", vec![0.1f32; 490], tag) {
+                Ok(rx) => {
+                    admitted[p.idx()] += 1;
+                    pending.push((p, rx));
+                }
+                Err(RouteError::Overloaded) => shed[p.idx()] += 1,
+                Err(e) => panic!("case {case}: unexpected {e:?}"),
+            }
+        }
+        for (p, rx) in &pending {
+            rx.recv_timeout(std::time::Duration::from_secs(30))
+                .unwrap_or_else(|_| panic!("case {case}: admitted {p} request dropped"));
+            assert!(rx.try_recv().is_err(), "case {case}: duplicate reply");
+        }
+        let summary = fleet.shutdown();
+        assert_eq!(summary.snapshot.served, admitted.iter().sum::<u64>(), "case {case}");
+        for (i, c) in summary.snapshot.classes.iter().enumerate() {
+            assert_eq!(c.served, admitted[i], "case {case} class {}", c.class);
+            assert_eq!(c.shed, shed[i], "case {case} class {} sheds", c.class);
+        }
+    }
+}
+
+#[test]
+fn priority_overload_sheds_batch_only() {
+    // Synthetic overload: a single slow board buried under a Batch
+    // burst.  Tiered admission must shed Batch (and only Batch) — the
+    // Interactive/Standard load fits under their bounds by construction
+    // (32 batch + 20 standard + 5 interactive <= 57 < queue_cap 64), so
+    // any Interactive or Standard shed is an admission-ordering bug.
+    let reg = Registry {
+        instances: vec![BoardInstance::synthetic(0, "kws", 2000.0, 400.0, 1.5)],
+    };
+    let cfg = FleetConfig {
+        queue_cap: 64,
+        time_scale: 20.0,
+        work_stealing: false,
+        ..Default::default()
+    };
+    let fleet = Fleet::start(reg, cfg).unwrap();
+    let handle = fleet.handle();
+    let mut pending = Vec::new();
+    let mut submit = |p: Priority, n: usize| {
+        for _ in 0..n {
+            if let Ok(rx) =
+                handle.submit_tagged("kws", vec![0.1f32; 490], RequestTag::new(0, p))
+            {
+                pending.push(rx);
+            }
+        }
+    };
+    // Batch floods first; the urgent classes trickle in behind it.
+    submit(Priority::Batch, 60);
+    submit(Priority::Standard, 10);
+    submit(Priority::Batch, 40);
+    submit(Priority::Standard, 10);
+    submit(Priority::Interactive, 5);
+    for rx in &pending {
+        rx.recv_timeout(std::time::Duration::from_secs(60))
+            .expect("admitted request dropped");
+    }
+    let summary = fleet.shutdown();
+    let classes = &summary.snapshot.classes;
+    assert_eq!(classes[0].shed, 0, "interactive must never shed here");
+    assert_eq!(classes[1].shed, 0, "standard fits under its bound");
+    assert!(classes[2].shed > 0, "the batch flood must be shed");
+    assert_eq!(
+        summary.snapshot.served as usize + classes[2].shed as usize,
+        125,
+        "admitted + shed must cover the whole trace"
+    );
+}
+
+#[test]
+fn prop_no_class_starves_under_sustained_interactive_load() {
+    // Random lower-class backlogs under a saturating interactive stream
+    // (one fresh interactive arrival per pickup, forever): the
+    // anti-starvation guard must drain every Standard and Batch request
+    // within the guard's bound, while interactive keeps absolute
+    // priority the rest of the time.
+    let mut rng = SplitMix64::new(0x57A6_0001);
+    for case in 0..40 {
+        let n_std = 1 + rng.next_below(30) as usize;
+        let n_batch = 1 + rng.next_below(30) as usize;
+        let q = BoardQueue::new(8192);
+        let mk = |p: Priority| {
+            let (tx, _rx) = std::sync::mpsc::channel();
+            FleetRequest {
+                x: vec![0.0],
+                reply: tx,
+                enqueued: std::time::Instant::now(),
+                cache_key: None,
+                tag: RequestTag::new(0, p),
+            }
+        };
+        // Random interleave of the lower-class preload.
+        let mut preload: Vec<Priority> = std::iter::repeat(Priority::Standard)
+            .take(n_std)
+            .chain(std::iter::repeat(Priority::Batch).take(n_batch))
+            .collect();
+        for i in (1..preload.len()).rev() {
+            preload.swap(i, rng.next_below(i as u64 + 1) as usize);
+        }
+        for p in preload {
+            q.try_push(mk(p)).unwrap();
+        }
+        let lower_total = n_std + n_batch;
+        let mut lower_served = 0;
+        let mut pops = 0usize;
+        // Guard bound: at most INTERACTIVE_BURST+1 pops per lower-class
+        // completion.
+        let bound = lower_total
+            * (tinyml_codesign::fleet::queue::INTERACTIVE_BURST as usize + 1)
+            + 1;
+        while lower_served < lower_total {
+            q.try_push(mk(Priority::Interactive)).unwrap();
+            let r = q.try_steal().expect("queue non-empty");
+            pops += 1;
+            if r.tag.priority != Priority::Interactive {
+                lower_served += 1;
+            }
+            assert!(
+                pops <= bound,
+                "case {case}: lower classes starving ({lower_served}/{lower_total} \
+                 after {pops} pops, n_std={n_std} n_batch={n_batch})"
+            );
+        }
     }
 }
 

@@ -1,0 +1,14 @@
+#!/usr/bin/env sh
+# Bench-regression gate: diff freshly emitted BENCH_kernels.json /
+# BENCH_fleet.json (run `./ci.sh` or the benches first) against the
+# committed baselines in baselines/ and fail on a >10% regression of any
+# headline ratio.  Thin wrapper over the in-tree implementation
+# (rust/src/report/gate.rs) so CI and humans share one code path.
+#
+#   ./tools/bench_gate.sh                 # gate current BENCH_* vs baselines/
+#   ./tools/bench_gate.sh --self-test     # prove the gate rejects regressions
+#   ./tools/bench_gate.sh --update        # bless current BENCH_* as baselines
+#   ./tools/bench_gate.sh --tol 0.05      # tighter tolerance
+set -eu
+cd "$(dirname "$0")/.."
+exec cargo run --release --quiet --bin tinyml-codesign -- bench-gate "$@"
