@@ -1,67 +1,327 @@
-//! Bench: hot paths — dataflow simulator cycle rate, PJRT batch-1
-//! inference latency, and the batching engine throughput (§Perf targets).
-use std::time::Instant;
-use tinyml_codesign::board::pynq_z2;
-use tinyml_codesign::coordinator::engine::{spawn, BatchPolicy};
-use tinyml_codesign::data;
-use tinyml_codesign::report::tables;
-use tinyml_codesign::runtime::{LoadedModel, Runtime};
+//! Bench: the fleet submit→reply hot path at **saturation** — the
+//! lock-sharded serving plane (sharded telemetry, striped result cache,
+//! pooled zero-allocation replies) A/B'd against the pre-PR global-lock
+//! path kept behind `FleetConfig::global_hotpath`.
+//!
+//! The paper's boards answer in ~20 µs, so at fleet scale the *software*
+//! between submit and reply is the bottleneck; this bench removes the
+//! simulated device entirely (zero-latency boards, batch-of-1 windows)
+//! and hammers the plane with 8 closed-loop client threads, so whatever
+//! throughput differences appear are pure serving-plane software:
+//!
+//! * **Part 1 — cache off.**  Every request crosses router → queue →
+//!   worker → telemetry → reply.  Global mode pays the fleet-wide
+//!   class/tenant telemetry mutexes per batch plus a fresh reply vector
+//!   per request; sharded mode records into the worker's own shard and
+//!   replies from a recycled pool buffer.
+//! * **Part 2 — cache on (75% repeats / 25% fresh), the headline.**
+//!   Hits answer in front of the router: in global mode every one of
+//!   the 8 clients serializes on the *single* cache mutex (and misses
+//!   pile worker inserts onto it); sharded mode spreads the same keys
+//!   over 16 lock stripes and replies from the pooled buffers.  The
+//!   `sharded_over_global_throughput` ratio of this part is the gated
+//!   headline; the inline floor is **≥ 1.3x**.
+//! * **Part 3 — telemetry merge equivalence.**  An identical
+//!   deterministic trace recorded into both collectors: the sharded
+//!   merge must reproduce the global collector's per-class
+//!   served/shed counts and p50/p99 (and tenant counts) *exactly* —
+//!   the refactor loses no events.
+//!
+//! Lock contention only exists with real parallelism: below 4 hardware
+//! threads the A/B measures scheduler timeslicing, not locking, so the
+//! ratio floors are skipped (with a loud warning) and the emitted JSON
+//! carries `"parallelism_limited": true`, which `bench-gate` honors by
+//! not gating this file on such machines.
+//!
+//! Writes `BENCH_hotpath.json`; `BENCH_QUICK=1` (used by ci.sh) cuts
+//! the trace sizes but keeps every assertion.
 
-fn main() {
-    let art = tinyml_codesign::artifacts_dir();
+use std::time::{Duration, Instant};
+use tinyml_codesign::coordinator::engine::BatchPolicy;
+use tinyml_codesign::fleet::{
+    BoardInstance, Fleet, FleetConfig, Policy, Priority, Registry, RequestTag,
+};
+use tinyml_codesign::report::json::{num, obj, s, Value};
 
-    // 1. Dataflow simulator rate on the big design (full CNV).
-    let g = tinyml_codesign::ir::Graph::load(&art.join("ic_finn_full_topology.json")).unwrap();
-    let mut pm = tinyml_codesign::passes::PassManager::for_flow("finn");
-    let g = pm.run(&g);
-    let d = tinyml_codesign::dataflow::schedule::schedule(&g, &Default::default());
-    let sim = tinyml_codesign::dataflow::Simulator::new(d.stage_specs());
-    let t0 = Instant::now();
-    let r = sim.run_unbounded();
-    let dt = t0.elapsed().as_secs_f64();
-    let rate = r.simulated_cycles as f64 * d.stages.len() as f64 / dt / 1e6;
-    println!("[bench] simulator: {} cycles x {} stages in {:.3} s = {rate:.1} M stage-updates/s",
-        r.simulated_cycles, d.stages.len(), dt);
+/// Closed-loop submitter threads (the saturation load).
+const CLIENTS: usize = 8;
+/// Zero-latency worker replicas behind them.
+const BOARDS: usize = 4;
+/// Distinct hot inputs in the cache-on trace (all hits after warmup).
+const HOT_SET: usize = 256;
 
-    // 2. PJRT batch-1 inference (the EEMBC request path).
-    let rt = Runtime::cpu().unwrap();
-    let mut m = LoadedModel::load(&art, "kws_mlp_w3a3").unwrap();
-    let ts = data::test_set("kws", 64, 0xB);
-    m.infer1(&rt, &ts.samples[0].x).unwrap(); // compile + warm
-    let t0 = Instant::now();
-    let iters = 300;
-    for i in 0..iters {
-        std::hint::black_box(m.infer1(&rt, &ts.samples[i % 64].x).unwrap());
+fn quick() -> bool {
+    std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+struct RunStats {
+    submitted: u64,
+    served: u64,
+    cache_hits: u64,
+    shed: u64,
+    wall_s: f64,
+    throughput_rps: f64,
+    ns_per_request: f64,
+    class_served: Vec<u64>,
+}
+
+impl RunStats {
+    fn to_json(&self) -> Value {
+        obj(vec![
+            ("submitted", num(self.submitted as f64)),
+            ("served", num(self.served as f64)),
+            ("cache_hits", num(self.cache_hits as f64)),
+            ("shed", num(self.shed as f64)),
+            ("wall_s", num(self.wall_s)),
+            ("throughput_rps", num(self.throughput_rps)),
+            ("ns_per_request", num(self.ns_per_request)),
+        ])
     }
-    let per = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
-    println!("[bench] PJRT batch-1 inference: {per:.1} us/inference");
+}
 
-    // 3. Batching engine throughput (multi-threaded submitters).
-    let (handle, join) = spawn(art.clone(), "kws_mlp_w3a3".into(), BatchPolicy::default());
-    let n = 512;
-    let t0 = Instant::now();
-    let mut threads = Vec::new();
-    for t in 0..4 {
-        let h = handle.clone();
-        threads.push(std::thread::spawn(move || {
-            let ts = data::test_set("kws", n / 4, 0xC0 + t as u64);
-            for s in &ts.samples {
-                std::hint::black_box(h.infer(s.x.clone()).unwrap());
-            }
-        }));
+/// One A/B leg: a fleet of zero-latency boards in sharded or global-lock
+/// mode, saturated by `CLIENTS` closed-loop threads.
+///
+/// Zero device latency + batch-of-1 windows mean every measured
+/// nanosecond is serving-plane software; `cache_cap > 0` additionally
+/// routes 3 of 4 requests through the memo (the 4th is a fresh input,
+/// so workers, telemetry, and cache inserts stay on the clock too).
+fn run_saturation(global_hotpath: bool, cache_cap: usize, per_client: usize) -> RunStats {
+    let reg = Registry {
+        instances: (0..BOARDS)
+            .map(|id| BoardInstance::synthetic(id, "ad", 0.0, 0.0, 1.0))
+            .collect(),
+    };
+    let cfg = FleetConfig {
+        policy: Policy::LeastLoaded,
+        queue_cap: 256,
+        // Batch-of-1 windows: per-request accounting, the worst case the
+        // sharding targets (every request pays the full record path).
+        batch: BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+        time_scale: 1.0,
+        work_stealing: false,
+        cache_cap,
+        autoscale: None,
+        fifo_queues: false,
+        global_hotpath,
+    };
+    let fleet = Fleet::start(reg, cfg).unwrap();
+    let dim = tinyml_codesign::data::feature_dim("ad");
+    let mut warmed = 0u64;
+    if cache_cap > 0 {
+        // Populate the hot set once so the measured phase's repeats are
+        // all hits (deterministically, in both modes).
+        let h = fleet.handle();
+        let mut x = vec![0.2f32; dim];
+        for j in 0..HOT_SET {
+            x[0] = j as f32;
+            h.infer("ad", x.clone()).unwrap();
+            warmed += 1;
+        }
     }
+    let t0 = Instant::now();
+    let threads: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let h = fleet.handle();
+            std::thread::spawn(move || {
+                let mut x = vec![0.2f32; dim];
+                for i in 0..per_client {
+                    // Deterministic class/tenant mix: all three class
+                    // tags (and 8 tenants) stay hot in telemetry.
+                    let tag =
+                        RequestTag::new(((c + i) % 8) as u32, Priority::ALL[i % 3]);
+                    x[0] = if cache_cap == 0 {
+                        i as f32
+                    } else if i % 4 == 3 {
+                        // Fresh input: a guaranteed miss (distinct per
+                        // client and iteration; exact in f32 and within
+                        // the key quantizer's i32 range).
+                        (1_000_000 * (c + 1) + i) as f32
+                    } else {
+                        (i % HOT_SET) as f32 // hot: a guaranteed hit
+                    };
+                    h.infer_tagged("ad", x.clone(), tag)
+                        .expect("closed-loop request failed");
+                }
+            })
+        })
+        .collect();
     for t in threads {
         t.join().unwrap();
     }
-    let dt = t0.elapsed().as_secs_f64();
-    drop(handle);
-    let served = join.join().unwrap().unwrap();
-    println!("[bench] engine: {served} requests in {dt:.2} s = {:.0} req/s", served as f64 / dt);
-
-    // 4. End-to-end flow (compiler + sizing + estimate) latency.
-    let t0 = Instant::now();
-    for _ in 0..3 {
-        std::hint::black_box(tables::flow_for(&art, "kws_mlp_w3a3", &pynq_z2()).unwrap());
+    let wall_s = t0.elapsed().as_secs_f64();
+    let measured = (CLIENTS * per_client) as u64;
+    let summary = fleet.shutdown();
+    let snap = &summary.snapshot;
+    let shed: u64 = snap.classes.iter().map(|c| c.shed).sum();
+    // Conservation: the closed loop never overruns the 256-slot queues,
+    // so everything submitted was served by a board or answered by the
+    // cache.
+    assert_eq!(shed, 0, "closed-loop trace must not shed");
+    assert_eq!(
+        snap.served + snap.cache.hits,
+        measured + warmed,
+        "served + hits must cover the whole trace"
+    );
+    RunStats {
+        submitted: measured,
+        served: snap.served,
+        cache_hits: snap.cache.hits,
+        shed,
+        wall_s,
+        throughput_rps: measured as f64 / wall_s,
+        ns_per_request: wall_s * 1e9 / measured as f64,
+        class_served: snap.classes.iter().map(|c| c.served).collect(),
     }
-    println!("[bench] full codesign flow (KWS): {:.1} ms", t0.elapsed().as_secs_f64() * 1e3 / 3.0);
+}
+
+/// Part 3: identical deterministic trace into the sharded and the
+/// global-lock collector; the merged snapshots must agree exactly.
+/// (Shared harness — the telemetry unit test and the proptests drive
+/// the same driver at other sizes and seeds.)
+fn telemetry_equivalence(batches: usize) -> usize {
+    tinyml_codesign::fleet::telemetry::assert_merge_equivalence(
+        BOARDS, batches, 0x407B_A7C4,
+    )
+}
+
+fn main() {
+    let quick = quick();
+    let per_client = if quick { 2_500 } else { 12_000 };
+    let cores =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    // Lock contention needs hardware parallelism: with fewer than 4
+    // threads the A/B measures timeslicing, not locking, so the ratio
+    // floors are informational only (and bench-gate skips this file).
+    let contended = cores >= 4;
+    if !contended {
+        eprintln!(
+            "[bench] WARNING: only {cores} hardware threads — contention floors \
+             skipped, emitting parallelism_limited"
+        );
+    }
+
+    println!(
+        "[bench] hot path: {CLIENTS} closed-loop clients x {per_client} requests \
+         over {BOARDS} zero-latency ad boards ({cores} hw threads{})",
+        if quick { ", quick mode" } else { "" }
+    );
+
+    println!("[bench] part 1: cache off — telemetry + reply path A/B");
+    let off_global = run_saturation(true, 0, per_client);
+    let off_sharded = run_saturation(false, 0, per_client);
+    let off_ratio = off_sharded.throughput_rps / off_global.throughput_rps.max(1e-9);
+    for (tag, r) in [("global ", &off_global), ("sharded", &off_sharded)] {
+        println!(
+            "[bench]   {tag}: {:>9.0} req/s  {:>7.0} ns/req  ({} served)",
+            r.throughput_rps, r.ns_per_request, r.served
+        );
+    }
+    println!("[bench]   sharded/global (cache off) = {off_ratio:.3}x");
+
+    println!(
+        "[bench] part 2: cache on — {HOT_SET}-input hot set, 75% repeats / 25% \
+         fresh, cap 2048 (16 stripes sharded vs 1 global)"
+    );
+    let on_global = run_saturation(true, 2048, per_client);
+    let on_sharded = run_saturation(false, 2048, per_client);
+    let headline = on_sharded.throughput_rps / on_global.throughput_rps.max(1e-9);
+    for (tag, r) in [("global ", &on_global), ("sharded", &on_sharded)] {
+        println!(
+            "[bench]   {tag}: {:>9.0} req/s  {:>7.0} ns/req  ({} hits / {} executed)",
+            r.throughput_rps, r.ns_per_request, r.cache_hits, r.served
+        );
+    }
+    println!(
+        "[bench]   sharded/global (cache on) = {headline:.3}x  (headline; floor 1.3)"
+    );
+
+    let eq_batches = telemetry_equivalence(if quick { 1_000 } else { 2_000 });
+    println!(
+        "[bench] part 3: telemetry merge equivalence OK — {eq_batches} batches, \
+         per-class served/shed/p50/p99 and tenants exact"
+    );
+
+    let mut fields = vec![
+        ("bench", s("hotpath")),
+        ("quick", Value::Bool(quick)),
+        ("clients", num(CLIENTS as f64)),
+        ("boards", num(BOARDS as f64)),
+        ("parallelism", num(cores as f64)),
+        (
+            "cache_off",
+            obj(vec![
+                ("global", off_global.to_json()),
+                ("sharded", off_sharded.to_json()),
+                ("sharded_over_global", num(off_ratio)),
+            ]),
+        ),
+        (
+            "cache_on",
+            obj(vec![
+                ("hot_set", num(HOT_SET as f64)),
+                ("fresh_fraction", num(0.25)),
+                ("global", on_global.to_json()),
+                ("sharded", on_sharded.to_json()),
+                ("sharded_over_global", num(headline)),
+            ]),
+        ),
+        ("sharded_over_global_throughput", num(headline)),
+        (
+            "telemetry_merge",
+            obj(vec![
+                ("checked_batches", num(eq_batches as f64)),
+                ("exact", Value::Bool(true)),
+            ]),
+        ),
+    ];
+    if !contended {
+        fields.insert(5, ("parallelism_limited", Value::Bool(true)));
+    }
+    let doc = obj(fields);
+    std::fs::write("BENCH_hotpath.json", doc.to_json()).expect("write BENCH_hotpath.json");
+    println!("[bench] wrote BENCH_hotpath.json");
+
+    // Self-checks.  The deterministic trace must account identically in
+    // both modes — the live-fleet restatement of part 3 (the telemetry
+    // refactor loses no events under real concurrency either).
+    assert_eq!(
+        off_global.class_served, off_sharded.class_served,
+        "cache-off per-class served must match across modes"
+    );
+    assert_eq!(
+        on_global.class_served, on_sharded.class_served,
+        "cache-on per-class served must match across modes"
+    );
+    assert_eq!(
+        on_global.cache_hits, on_sharded.cache_hits,
+        "hit accounting must match across modes"
+    );
+    if contended {
+        // The headline: sharded telemetry + striped cache + pooled
+        // replies must buy >= 1.3x submit-saturation throughput over
+        // the global-lock plane.
+        assert!(
+            headline >= 1.3,
+            "sharded plane must beat the global-lock plane >= 1.3x at saturation \
+             (got {headline:.3}x: {:.0} vs {:.0} req/s)",
+            on_sharded.throughput_rps,
+            on_global.throughput_rps
+        );
+        // Sanity floor for the uncached path: removing locks must not
+        // cost throughput (generous margin for scheduler noise).
+        assert!(
+            off_ratio >= 0.8,
+            "cache-off sharded path regressed vs global: {off_ratio:.3}x"
+        );
+        println!(
+            "[bench] OK: cache-on sharded/global {headline:.3}x >= 1.3, cache-off \
+             {off_ratio:.3}x >= 0.8, merge exact"
+        );
+    } else {
+        println!(
+            "[bench] OK (parallelism-limited): merge exact; ratios reported, floors \
+             skipped"
+        );
+    }
 }

@@ -24,7 +24,7 @@ run cargo build --release
 run cargo test -q
 
 if [ "${1:-}" = "fast" ]; then
-    echo "==> skipping kernels+fleet benches, bench gate, cargo doc, pjrt check, fmt/clippy (fast mode)"
+    echo "==> skipping kernels+fleet+hotpath benches, bench gate, cargo doc, pjrt check, fmt/clippy (fast mode)"
     exit 0
 fi
 
@@ -39,6 +39,13 @@ run env BENCH_QUICK=1 cargo bench --bench kernels
 # (interactive p99 <= 0.5x the FIFO control, zero interactive sheds).
 # Emits BENCH_fleet.json.
 run env BENCH_QUICK=1 cargo bench --bench fleet
+
+# Hot-path self-check: 8-client submit saturation, lock-sharded
+# telemetry + striped cache + pooled replies vs the global-lock A/B
+# plane (floor: >= 1.3x throughput on >= 4 hardware threads; the
+# telemetry merge-equivalence assertions run regardless).  Emits
+# BENCH_hotpath.json.
+run env BENCH_QUICK=1 cargo bench --bench hotpath
 
 # Bench-regression gate: first prove the gate rejects injected
 # regressions (self-test), then hold the freshly emitted BENCH_* headline

@@ -16,6 +16,7 @@
 //! no execute path of its own — and both batch through [`fill_window`],
 //! so every serving path batches *and executes* identically.
 
+use super::pool::{PooledVec, ReplyPool};
 use crate::error::{anyhow, Result};
 use crate::runtime::{argmax, LoadedModel, Runtime};
 use std::sync::mpsc;
@@ -30,7 +31,11 @@ pub struct Request {
 /// The engine's answer.
 #[derive(Clone, Debug)]
 pub struct Reply {
-    pub output: Vec<f32>,
+    /// Per-sample outputs.  Rides in a [`PooledVec`]: serve loops copy
+    /// into a recycled buffer instead of allocating, and dropping the
+    /// reply returns the buffer to its pool — the serve loop's last
+    /// per-request heap allocation, closed (see [`super::pool`]).
+    pub output: PooledVec,
     pub top1: usize,
     /// Device batch this request rode in (observability).
     pub batch_size: usize,
@@ -155,12 +160,14 @@ pub fn serve_with<E: BatchExecutor>(
     let feat = exec.input_elems();
     let n_out = exec.num_outputs();
     let mut served = 0u64;
-    // Batch staging buffers, allocated once and reused for every batch:
-    // together with the executor-side scratch arena this makes the
-    // steady-state serve loop allocation-free up to the per-request
-    // reply vectors (which cross a channel and must be owned).
+    // Batch staging buffers, allocated once and reused for every batch;
+    // replies copy into pooled buffers that return on drop — together
+    // with the executor-side scratch arena the steady-state serve loop
+    // allocates nothing per request (the per-request reply channel is
+    // the submitter's).
     let mut x = vec![0.0f32; device_batch * feat];
     let mut out = vec![0.0f32; device_batch * n_out];
+    let pool = ReplyPool::new(4 * device_batch.max(16));
 
     loop {
         // Block for the first request of a batch.
@@ -182,7 +189,7 @@ pub fn serve_with<E: BatchExecutor>(
         exec.execute(&x, batch.len(), &mut out)?;
         let exec_us = exec_start.elapsed().as_micros();
         for (i, (req, t0)) in batch.iter().enumerate() {
-            let slice = out[i * n_out..(i + 1) * n_out].to_vec();
+            let slice = pool.take_copy(&out[i * n_out..(i + 1) * n_out]);
             let top1 = argmax(&slice);
             let _ = req.reply.send(Reply {
                 output: slice,

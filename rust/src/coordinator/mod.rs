@@ -4,6 +4,7 @@
 
 pub mod engine;
 pub mod flow;
+pub mod pool;
 
 use crate::data::{self, prng::SplitMix64};
 use crate::runtime::{LoadedModel, Runtime};

@@ -1,0 +1,307 @@
+//! Pooled reply buffers: the last per-request heap allocation on the
+//! serve loop, closed.
+//!
+//! The PR 2 scratch-arena work made every *staging* buffer on the hot
+//! path reusable (kernels, batch gather, engine x/out), but the reply
+//! vectors still allocated — they cross a channel to the caller, so the
+//! serve loop could not own them (ROADMAP "Kernel core": "only
+//! per-request reply vectors still allocate").  [`ReplyPool`] closes
+//! that gap: replies ride in a [`PooledVec`] — a guard around a plain
+//! `Vec<f32>` that *returns the buffer to its pool when the caller drops
+//! the reply*.  Steady state, every reply reuses a buffer some earlier
+//! reply finished with; the allocator is only touched while the pool
+//! warms up (or past its bound).
+//!
+//! Two properties the tests pin down (`rust/tests/proptests.rs`):
+//!
+//! * **Bit identity** — a reply through the pool is bit-identical to the
+//!   unpooled path ([`ReplyPool::take_copy`] clears and overwrites the
+//!   whole buffer, never resizes around stale data).
+//! * **No data leaks** — a recycled buffer can never leak a previous
+//!   request's data: the pool fills every buffer it shelves with
+//!   [`poison`] (a recognizable quiet NaN, [`POISON_BITS`]) — buffers
+//!   dropped past the bound go straight back to the allocator instead —
+//!   and the take path's full overwrite is asserted against that
+//!   poison.
+//!
+//! The pool itself is **striped** ([`N_STRIPES`] independent locks, a
+//! rotating cursor for takes, returns go to the stripe the buffer came
+//! from) — a single pool mutex shared by every client thread would just
+//! recreate the global-lock contention the sharded telemetry and striped
+//! result cache remove from the same hot path.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Bit pattern of the quiet NaN written over every buffer returned to
+/// the pool, so stale request data is unmistakable if a take path ever
+/// fails to overwrite fully (compare with [`f32::to_bits`]; `NaN !=
+/// NaN` hides it otherwise).
+pub const POISON_BITS: u32 = 0x7FC0_5EED;
+
+/// The poison value itself (`from_bits` is not const on older
+/// toolchains, so this is a fn rather than a const).
+#[inline]
+pub fn poison() -> f32 {
+    f32::from_bits(POISON_BITS)
+}
+
+/// Independent lock stripes per pool.  Takes rotate over the stripes and
+/// each buffer returns to its origin stripe, so the put/take traffic of
+/// many client threads spreads instead of serializing.
+pub const N_STRIPES: usize = 8;
+
+struct PoolInner {
+    stripes: Vec<Mutex<Vec<Vec<f32>>>>,
+    /// Rotating take cursor (relaxed; distribution is all that matters).
+    next: AtomicUsize,
+    cap_per_stripe: usize,
+    recycled: AtomicU64,
+    allocated: AtomicU64,
+}
+
+/// A bounded, striped pool of recycled `Vec<f32>` reply buffers.
+/// Cloning the handle is an Arc clone — every clone (and every
+/// outstanding [`PooledVec`]) shares the same shelves.
+#[derive(Clone)]
+pub struct ReplyPool {
+    inner: Arc<PoolInner>,
+}
+
+impl ReplyPool {
+    /// Pool bounded at ~`cap` shelved buffers (split over the stripes).
+    pub fn new(cap: usize) -> ReplyPool {
+        ReplyPool {
+            inner: Arc::new(PoolInner {
+                stripes: (0..N_STRIPES).map(|_| Mutex::new(Vec::new())).collect(),
+                next: AtomicUsize::new(0),
+                cap_per_stripe: (cap / N_STRIPES).max(1),
+                recycled: AtomicU64::new(0),
+                allocated: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Take an **empty** buffer (recycled if available).  The caller
+    /// fills it (e.g. [`crate::fleet::cache::ResultCache::get_copy`]);
+    /// dropping the guard returns the buffer here.
+    pub fn take(&self) -> PooledVec {
+        let stripe = self.inner.next.fetch_add(1, Ordering::Relaxed) % N_STRIPES;
+        let buf = self.inner.stripes[stripe].lock().unwrap().pop();
+        let mut buf = match buf {
+            Some(b) => {
+                self.inner.recycled.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            None => {
+                self.inner.allocated.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            }
+        };
+        // Recycled buffers arrive poison-filled; the guard hands out an
+        // empty vec so every element the caller reads was written by the
+        // caller.
+        buf.clear();
+        PooledVec { buf, home: Some((self.clone(), stripe)) }
+    }
+
+    /// Take a buffer holding a copy of `src` — the pooled replacement
+    /// for `src.to_vec()` on the reply path.  Clear + extend: every
+    /// element is freshly written, so a recycled buffer cannot leak.
+    pub fn take_copy(&self, src: &[f32]) -> PooledVec {
+        let mut v = self.take();
+        v.buf.extend_from_slice(src);
+        v
+    }
+
+    /// Return a buffer; full stripes drop it back to the allocator so
+    /// the pool stays bounded.  Only buffers actually shelved are
+    /// poison-filled — an overflow drop pays nothing (the allocator
+    /// reclaims it; nothing can read it again through the safe API).
+    fn put(&self, stripe: usize, mut buf: Vec<f32>) {
+        let mut shelf = self.inner.stripes[stripe].lock().unwrap();
+        if shelf.len() < self.inner.cap_per_stripe {
+            let poison = poison();
+            buf.iter_mut().for_each(|v| *v = poison);
+            shelf.push(buf);
+        }
+    }
+
+    /// Takes served from a recycled buffer (observability / tests).
+    pub fn recycled(&self) -> u64 {
+        self.inner.recycled.load(Ordering::Relaxed)
+    }
+
+    /// Takes that had to touch the allocator.
+    pub fn allocated(&self) -> u64 {
+        self.inner.allocated.load(Ordering::Relaxed)
+    }
+
+    /// Buffers currently shelved across all stripes.
+    pub fn shelved(&self) -> usize {
+        self.inner.stripes.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+}
+
+/// A reply buffer that knows its way home: derefs as `[f32]`, and on
+/// drop returns the underlying `Vec` to the [`ReplyPool`] it came from
+/// (detached instances are plain vectors and just deallocate).
+///
+/// Cloning detaches: the copy is an ordinary allocation that does *not*
+/// return to the pool — a clone outliving the pool must not resurrect
+/// it, and replies are cloned only off the hot path.
+#[derive(Default)]
+pub struct PooledVec {
+    buf: Vec<f32>,
+    home: Option<(ReplyPool, usize)>,
+}
+
+impl PooledVec {
+    /// Wrap a plain vector; dropping it frees normally (the unpooled
+    /// path, and what `Clone` produces).
+    pub fn detached(buf: Vec<f32>) -> Self {
+        PooledVec { buf, home: None }
+    }
+
+    /// Whether this buffer returns to a pool on drop.
+    pub fn is_pooled(&self) -> bool {
+        self.home.is_some()
+    }
+
+    /// Mutable access to the underlying vector (fill-in-place paths like
+    /// the result cache's `get_copy`).
+    pub fn vec_mut(&mut self) -> &mut Vec<f32> {
+        &mut self.buf
+    }
+
+    /// Detached copy of the contents.
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.buf.clone()
+    }
+}
+
+impl Drop for PooledVec {
+    fn drop(&mut self) {
+        if let Some((pool, stripe)) = self.home.take() {
+            pool.put(stripe, std::mem::take(&mut self.buf));
+        }
+    }
+}
+
+impl std::ops::Deref for PooledVec {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        &self.buf
+    }
+}
+
+impl std::ops::DerefMut for PooledVec {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.buf
+    }
+}
+
+impl Clone for PooledVec {
+    fn clone(&self) -> Self {
+        PooledVec::detached(self.buf.clone())
+    }
+}
+
+impl From<Vec<f32>> for PooledVec {
+    fn from(buf: Vec<f32>) -> Self {
+        PooledVec::detached(buf)
+    }
+}
+
+impl std::fmt::Debug for PooledVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.buf.fmt(f)
+    }
+}
+
+impl PartialEq for PooledVec {
+    fn eq(&self, other: &Self) -> bool {
+        self.buf == other.buf
+    }
+}
+
+impl PartialEq<Vec<f32>> for PooledVec {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        &self.buf == other
+    }
+}
+
+impl PartialEq<[f32]> for PooledVec {
+    fn eq(&self, other: &[f32]) -> bool {
+        self.buf == other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_copy_round_trips_and_recycles() {
+        let pool = ReplyPool::new(32);
+        let data = vec![1.0f32, -2.5, 3.25];
+        let ptr = {
+            let v = pool.take_copy(&data);
+            assert_eq!(v, data);
+            assert!(v.is_pooled());
+            assert_eq!(pool.allocated(), 1);
+            v.as_ptr()
+        };
+        // Dropped: shelved (poisoned), and the next take on the same
+        // stripe reuses the same storage.
+        assert_eq!(pool.shelved(), 1);
+        for _ in 0..N_STRIPES {
+            let v = pool.take_copy(&[9.0]);
+            if v.as_ptr() == ptr {
+                assert_eq!(v, vec![9.0f32], "recycled buffer must hold only new data");
+                assert!(pool.recycled() >= 1);
+                return;
+            }
+        }
+        panic!("rotating cursor never revisited the stripe holding the buffer");
+    }
+
+    #[test]
+    fn returned_buffers_are_poisoned() {
+        let pool = ReplyPool::new(8);
+        drop(pool.take_copy(&[1.0, 2.0]));
+        // Reach into the stripe the cursor used (take 0 used stripe 0).
+        let shelf = pool.inner.stripes[0].lock().unwrap();
+        let buf = shelf.first().expect("buffer shelved");
+        assert!(
+            buf.iter().all(|v| v.to_bits() == POISON_BITS),
+            "shelved buffer must be fully poison-filled: {buf:?}"
+        );
+    }
+
+    #[test]
+    fn pool_is_bounded_and_detached_vecs_stay_plain() {
+        let pool = ReplyPool::new(N_STRIPES); // one buffer per stripe
+        let taken: Vec<PooledVec> =
+            (0..4 * N_STRIPES).map(|_| pool.take_copy(&[0.5])).collect();
+        drop(taken);
+        assert!(pool.shelved() <= N_STRIPES, "cap must bound shelved buffers");
+        let d = PooledVec::detached(vec![1.0]);
+        assert!(!d.is_pooled());
+        let c = pool.take_copy(&[2.0]).clone();
+        assert!(!c.is_pooled(), "clones must detach from the pool");
+    }
+
+    #[test]
+    fn equality_and_deref_match_plain_vectors() {
+        let pool = ReplyPool::new(8);
+        let v = pool.take_copy(&[1.0, 2.0]);
+        assert_eq!(v, vec![1.0f32, 2.0]);
+        assert_eq!(&v[..], &[1.0f32, 2.0][..]);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v.to_vec(), vec![1.0f32, 2.0]);
+        let w: PooledVec = vec![1.0f32, 2.0].into();
+        assert_eq!(v, w);
+    }
+}

@@ -1,6 +1,7 @@
 //! Result cache: a bounded memo of (task, quantized input) → output
 //! sitting **in front of** the router (the ROADMAP "Result caching"
-//! open item).
+//! open item), **lock-striped** so a cache-on fleet does not serialize
+//! every submit on one mutex.
 //!
 //! Repeated requests — identical or near-identical after quantizing the
 //! input to a 1/256 grid (comfortably finer than the i8 grid the packed
@@ -9,22 +10,47 @@
 //! boards never see the request.  Workers populate the memo after
 //! executing, keyed by a digest the submit path computed.
 //!
+//! **Striping (v3).**  The store is split into N independent lock
+//! shards picked by the low bits of the key digest; every client thread
+//! probing the cache and every worker inserting behind a miss lands on
+//! its key's shard only.  The v2 cache held one mutex over the whole
+//! map — with 8 concurrent submitters the entire fleet serialized on
+//! it (the single hottest lock `benches/hotpath.rs` measures; the
+//! `FleetConfig::global_hotpath` A/B control rebuilds that one-shard
+//! layout via [`ResultCache::with_shards`]).  Each shard runs its own
+//! LRU over its own slice of the capacity, so get/insert stay O(log n)
+//! under one *short, shard-local* lock.
+//!
+//! **Class-aware admission (caching v3, ROADMAP follow-up).**  Entries
+//! remember the [`Priority`] of the traffic that populated (or, for
+//! `Interactive`, last hit) them.  A `Batch`-class insert may evict
+//! only non-`Interactive` entries — if its shard is wall-to-wall
+//! interactive working set, the batch result is simply not admitted —
+//! so a bulk scoring sweep can flow through a full cache without
+//! flushing the entries interactive users are actually hitting.
+//! `Interactive`/`Standard` inserts evict plain LRU (an interactive
+//! working set that really has gone cold is still reclaimable).
+//!
 //! The key is a 64-bit FNV-1a digest of the task name and the quantized
 //! input.  A 64-bit digest can collide in principle; at fleet request
 //! volumes the probability is negligible (birthday bound ~n²/2⁶⁵) and
-//! this is the standard memo-cache trade.  Eviction is **LRU** (v2 —
+//! this is the standard memo-cache trade.  Eviction is LRU (since v2 —
 //! the v1 memo was FIFO, which evicted hot steady-traffic entries as
-//! soon as enough one-off AD frames flowed past them): every hit
-//! refreshes the entry's recency, and eviction removes the
-//! least-recently-*used* key.  Recency is a monotone tick plus a
-//! `BTreeMap<tick, key>` index, so get/insert stay O(log n) under one
-//! short lock — no unsafe linked lists.  Hit/miss counters are kept
-//! fleet-wide *and* per task, so the snapshot can show which workload
-//! actually benefits (AD frames rarely repeat; KWS wake-words do).
+//! soon as enough one-off AD frames flowed past them): recency is a
+//! per-shard monotone tick plus a `BTreeMap<tick, key>` index.
+//! Hit/miss counters are kept fleet-wide *and* per task, so the
+//! snapshot can show which workload actually benefits (AD frames rarely
+//! repeat; KWS wake-words do).
 
+use super::queue::Priority;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+/// Default shard sizing: one lock per ~64 entries, between 1 (tiny
+/// caches keep the exact single-lock semantics) and 16 shards.
+const MAX_SHARDS: usize = 16;
+const ENTRIES_PER_SHARD: usize = 64;
 
 /// Per-task slice of the hit/miss counters.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -61,13 +87,24 @@ struct Entry {
     top1: usize,
     /// Recency tick; key into `Inner::lru`.
     tick: u64,
+    /// Most urgent class that populated or (for `Interactive`) hit this
+    /// entry — the admission shield: `Batch` inserts cannot evict
+    /// `Interactive`-classed entries.
+    class: Priority,
 }
 
 struct Inner {
+    /// This shard's slice of the total capacity.
+    cap: usize,
     map: HashMap<u64, Entry>,
-    /// Recency index: tick → key, oldest first.  Ticks are unique (one
-    /// monotone counter), so this is a faithful LRU order.
+    /// Recency index: tick → key, oldest first.  Ticks are unique per
+    /// shard (one monotone counter), so this is a faithful LRU order.
     lru: BTreeMap<u64, u64>,
+    /// Recency index over the **non-Interactive** entries only — the
+    /// Batch eviction candidates.  Kept in lockstep with `lru` (same
+    /// ticks) so class-aware eviction is an O(log n) head pop instead
+    /// of a scan past the protected prefix under the shard lock.
+    lru_unprotected: BTreeMap<u64, u64>,
     tick: u64,
     /// (task, hits, misses) — a handful of entries, scanned linearly so
     /// the steady-state hot path never allocates a key String (the task
@@ -91,11 +128,13 @@ fn bump_task(per_task: &mut Vec<(String, u64, u64)>, task: &str, hit: bool) {
     }
 }
 
-/// Bounded (task, quantized-input) → (output, top1) memo with LRU
-/// eviction.
+/// Bounded (task, quantized-input) → (output, top1) memo: lock-striped,
+/// per-shard LRU, class-aware admission.
 pub struct ResultCache {
     cap: usize,
-    inner: Mutex<Inner>,
+    /// Power-of-two shard count; a key lives in shard
+    /// `key & (shards.len() - 1)`.
+    shards: Vec<Mutex<Inner>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -106,18 +145,51 @@ fn fnv_byte(h: u64, b: u8) -> u64 {
 }
 
 impl ResultCache {
+    /// Striped cache sized for `cap` entries (shard count scales with
+    /// the capacity; tiny caches get one shard and keep exact
+    /// single-lock LRU semantics).
     pub fn new(cap: usize) -> Self {
+        let want = (cap / ENTRIES_PER_SHARD).next_power_of_two().min(MAX_SHARDS);
+        Self::with_shards(cap, want)
+    }
+
+    /// Explicit shard count (rounded up to a power of two, at least 1).
+    /// `with_shards(cap, 1)` rebuilds the pre-striping single-mutex
+    /// cache — the `FleetConfig::global_hotpath` A/B control.  Each
+    /// shard owns `cap / n` (±1) entries; with more shards than
+    /// capacity, every shard still holds at least one entry, so the
+    /// total bound is `max(cap, n)`.
+    pub fn with_shards(cap: usize, n: usize) -> Self {
+        let n = n.max(1).next_power_of_two();
+        let cap = cap.max(1);
+        let (base, rem) = (cap / n, cap % n);
         ResultCache {
-            cap: cap.max(1),
-            inner: Mutex::new(Inner {
-                map: HashMap::new(),
-                lru: BTreeMap::new(),
-                tick: 0,
-                per_task: Vec::new(),
-            }),
+            cap,
+            shards: (0..n)
+                .map(|i| {
+                    Mutex::new(Inner {
+                        cap: (base + usize::from(i < rem)).max(1),
+                        map: HashMap::new(),
+                        lru: BTreeMap::new(),
+                        lru_unprotected: BTreeMap::new(),
+                        tick: 0,
+                        per_task: Vec::new(),
+                    })
+                })
+                .collect(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
+    }
+
+    /// Number of lock stripes (observability / tests).
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    fn shard(&self, key: u64) -> &Mutex<Inner> {
+        &self.shards[key as usize & (self.shards.len() - 1)]
     }
 
     /// Digest of (task, input quantized to a 1/256 grid).  Pure and
@@ -139,81 +211,167 @@ impl ResultCache {
         h
     }
 
-    /// Look up a key, counting hits (fleet-wide and for `task`) and
-    /// refreshing the entry's LRU position.  Misses are counted at
-    /// [`Self::insert`] time instead, so a submit that is rejected by
-    /// admission control (and retried, possibly many times) does not
-    /// inflate the miss counter: `hits + misses` stays equal to the
-    /// cached-path traffic that actually completed.
-    pub fn get(&self, task: &str, key: u64) -> Option<(Vec<f32>, usize)> {
-        let mut inner = self.inner.lock().unwrap();
+    /// Look up a key; on a hit, hand the output slice and top1 to
+    /// `on_hit` **under the shard lock** (exactly where the pre-striping
+    /// cache cloned) and return its result — so the caller acquires its
+    /// reply buffer lazily and a *miss pays nothing* beyond the probe.
+    /// Counts the hit (fleet-wide and for `task`), refreshes the
+    /// entry's LRU position, and — when `class` is `Interactive` —
+    /// upgrades the entry's admission class, shielding the live
+    /// interactive working set from `Batch` eviction.  Misses are
+    /// counted at [`Self::insert_tagged`] time instead, so a submit
+    /// that is rejected by admission control (and retried, possibly
+    /// many times) does not inflate the miss counter: `hits + misses`
+    /// stays equal to the cached-path traffic that actually completed.
+    pub fn get_hit<R>(
+        &self,
+        task: &str,
+        key: u64,
+        class: Priority,
+        on_hit: impl FnOnce(&[f32], usize) -> R,
+    ) -> Option<R> {
+        let mut inner = self.shard(key).lock().unwrap();
         // Reborrow once so `map` and `lru` can be field-split; one map
-        // probe does lookup + recency refresh (this is the submit hot
-        // path and the whole cache serializes on this lock).
+        // probe does lookup + recency refresh under one short,
+        // shard-local lock.
         let inner = &mut *inner;
         let e = inner.map.get_mut(&key)?;
         inner.tick += 1;
         inner.lru.remove(&e.tick);
+        inner.lru_unprotected.remove(&e.tick);
+        if class == Priority::Interactive {
+            e.class = Priority::Interactive;
+        }
         e.tick = inner.tick;
         inner.lru.insert(e.tick, key);
-        let result = (e.output.clone(), e.top1);
+        if e.class != Priority::Interactive {
+            inner.lru_unprotected.insert(e.tick, key);
+        }
+        let r = on_hit(&e.output, e.top1);
         self.hits.fetch_add(1, Ordering::Relaxed);
         bump_task(&mut inner.per_task, task, true);
-        Some(result)
+        Some(r)
     }
 
-    /// Insert (or refresh) an entry, evicting the least-recently-used
-    /// key past the capacity.  Each insert is one executed cache miss
-    /// (see [`Self::get`]).
-    pub fn insert(&self, task: &str, key: u64, output: &[f32], top1: usize) {
+    /// [`Self::get_hit`] copying the output into `dst` (cleared first)
+    /// — for callers that already hold a destination buffer.
+    pub fn get_copy(
+        &self,
+        task: &str,
+        key: u64,
+        class: Priority,
+        dst: &mut Vec<f32>,
+    ) -> Option<usize> {
+        self.get_hit(task, key, class, |out, top1| {
+            dst.clear();
+            dst.extend_from_slice(out);
+            top1
+        })
+    }
+
+    /// Allocating convenience wrapper over [`Self::get_copy`]
+    /// (`Standard` class — no admission upgrade; tests and spot
+    /// checks).
+    pub fn get(&self, task: &str, key: u64) -> Option<(Vec<f32>, usize)> {
+        let mut out = Vec::new();
+        let top1 = self.get_copy(task, key, Priority::Standard, &mut out)?;
+        Some((out, top1))
+    }
+
+    /// Insert (or refresh) an entry populated by a `class` request,
+    /// evicting past the shard's capacity — LRU for
+    /// `Interactive`/`Standard`; `Batch` may only evict
+    /// non-`Interactive` entries and is turned away (not admitted) when
+    /// its shard holds nothing but interactive working set.  Each
+    /// insert is one executed cache miss (see [`Self::get_copy`]).
+    pub fn insert_tagged(
+        &self,
+        task: &str,
+        key: u64,
+        output: &[f32],
+        top1: usize,
+        class: Priority,
+    ) {
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.shard(key).lock().unwrap();
         // Reborrow through the guard once so `map` and `lru` can be
         // field-split below.
         let inner = &mut *inner;
         bump_task(&mut inner.per_task, task, false);
         inner.tick += 1;
         let tick = inner.tick;
-        match inner.map.entry(key) {
-            std::collections::hash_map::Entry::Occupied(mut o) => {
-                let old_tick = o.get().tick;
-                *o.get_mut() = Entry { output: output.to_vec(), top1, tick };
-                inner.lru.remove(&old_tick);
-                inner.lru.insert(tick, key);
+        if let Some(e) = inner.map.get_mut(&key) {
+            // Refresh in place.  Keep the more urgent class: a refresh
+            // by Batch must not strip an entry's interactive shield.
+            let class = if e.class.idx() < class.idx() { e.class } else { class };
+            let old_tick = e.tick;
+            *e = Entry { output: output.to_vec(), top1, tick, class };
+            inner.lru.remove(&old_tick);
+            inner.lru_unprotected.remove(&old_tick);
+            inner.lru.insert(tick, key);
+            if class != Priority::Interactive {
+                inner.lru_unprotected.insert(tick, key);
             }
-            std::collections::hash_map::Entry::Vacant(v) => {
-                v.insert(Entry { output: output.to_vec(), top1, tick });
-                inner.lru.insert(tick, key);
-                while inner.map.len() > self.cap {
-                    let Some((&oldest, &victim)) = inner.lru.iter().next() else {
-                        break;
-                    };
-                    inner.lru.remove(&oldest);
-                    inner.map.remove(&victim);
-                }
-            }
+            return;
+        }
+        while inner.map.len() >= inner.cap {
+            // Oldest evictable entry, O(log n): Batch pops the head of
+            // the unprotected index (and so cannot flush interactive
+            // entries); other classes pop the full LRU head.
+            let victim = if class == Priority::Batch {
+                inner.lru_unprotected.iter().next().map(|(&t, &k)| (t, k))
+            } else {
+                inner.lru.iter().next().map(|(&t, &k)| (t, k))
+            };
+            let Some((t, k)) = victim else {
+                // Batch vs a wall of interactive working set: not
+                // admitted.
+                return;
+            };
+            inner.lru.remove(&t);
+            inner.lru_unprotected.remove(&t);
+            inner.map.remove(&k);
+        }
+        inner.map.insert(key, Entry { output: output.to_vec(), top1, tick, class });
+        inner.lru.insert(tick, key);
+        if class != Priority::Interactive {
+            inner.lru_unprotected.insert(tick, key);
         }
     }
 
+    /// [`Self::insert_tagged`] with the default (`Standard`) class.
+    pub fn insert(&self, task: &str, key: u64, output: &[f32], top1: usize) {
+        self.insert_tagged(task, key, output, top1, Priority::Standard);
+    }
+
     pub fn stats(&self) -> CacheStats {
-        let inner = self.inner.lock().unwrap();
-        let mut per_task: Vec<TaskCacheStats> = inner
-            .per_task
-            .iter()
-            .map(|(task, hits, misses)| TaskCacheStats {
-                task: task.clone(),
-                hits: *hits,
-                misses: *misses,
-            })
-            .collect();
+        let mut entries = 0usize;
+        let mut merged: Vec<TaskCacheStats> = Vec::new();
+        for shard in &self.shards {
+            let inner = shard.lock().unwrap();
+            entries += inner.map.len();
+            for (task, hits, misses) in &inner.per_task {
+                match merged.iter_mut().find(|t| &t.task == task) {
+                    Some(t) => {
+                        t.hits += hits;
+                        t.misses += misses;
+                    }
+                    None => merged.push(TaskCacheStats {
+                        task: task.clone(),
+                        hits: *hits,
+                        misses: *misses,
+                    }),
+                }
+            }
+        }
         // Sorted for stable snapshots/JSON regardless of first-seen order.
-        per_task.sort_by(|a, b| a.task.cmp(&b.task));
+        merged.sort_by(|a, b| a.task.cmp(&b.task));
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
-            entries: inner.map.len(),
+            entries,
             cap: self.cap,
-            per_task,
+            per_task: merged,
         }
     }
 }
@@ -225,6 +383,7 @@ mod tests {
     #[test]
     fn counts_hits_and_misses_per_task() {
         let c = ResultCache::new(8);
+        assert_eq!(c.n_shards(), 1, "tiny caches keep the single-lock layout");
         let k = ResultCache::key("kws", &[0.1, 0.2]);
         assert!(c.get("kws", k).is_none());
         c.insert("kws", k, &[1.0, 2.0], 1);
@@ -295,5 +454,80 @@ mod tests {
         c.insert("ad", k, &[2.0], 0);
         assert_eq!(c.stats().entries, 1);
         assert_eq!(c.get("ad", k).unwrap().0, vec![2.0]);
+    }
+
+    #[test]
+    fn striping_spreads_keys_and_keeps_the_total_bound() {
+        let c = ResultCache::new(1024);
+        assert_eq!(c.n_shards(), 16);
+        for i in 0..4096u32 {
+            let k = ResultCache::key("kws", &[i as f32]);
+            c.insert("kws", k, &[i as f32], 0);
+            assert!(c.stats().entries <= 1024, "at insert {i}");
+        }
+        // Every shard actually holds entries (FNV spreads the keys) and
+        // recent keys are retrievable wherever they landed.
+        let occupied =
+            c.shards.iter().filter(|s| !s.lock().unwrap().map.is_empty()).count();
+        assert_eq!(occupied, 16, "keys must spread over all shards");
+        let hot = ResultCache::key("kws", &[4095.0]);
+        assert_eq!(c.get("kws", hot).unwrap().0, vec![4095.0]);
+        // The forced single-shard layout (the A/B control) still works.
+        let one = ResultCache::with_shards(1024, 1);
+        assert_eq!(one.n_shards(), 1);
+        one.insert("kws", hot, &[1.0], 0);
+        assert!(one.get("kws", hot).is_some());
+    }
+
+    #[test]
+    fn batch_inserts_cannot_evict_the_interactive_working_set() {
+        let c = ResultCache::with_shards(3, 1);
+        let ik: Vec<u64> =
+            (0..3).map(|i| ResultCache::key("kws", &[i as f32])).collect();
+        for (i, &k) in ik.iter().enumerate() {
+            c.insert_tagged("kws", k, &[i as f32], 0, Priority::Interactive);
+        }
+        // A 20-key batch sweep over the full cache: nothing admitted,
+        // nothing evicted.
+        for i in 100..120u32 {
+            let k = ResultCache::key("kws", &[i as f32]);
+            c.insert_tagged("kws", k, &[i as f32], 0, Priority::Batch);
+        }
+        for (i, &k) in ik.iter().enumerate() {
+            assert_eq!(
+                c.get("kws", k).expect("interactive entry flushed by batch sweep").0,
+                vec![i as f32]
+            );
+        }
+        // Standard traffic can still reclaim a cold interactive entry
+        // (plain LRU), so the shield is not a leak.
+        let sk = ResultCache::key("kws", &[500.0]);
+        c.insert_tagged("kws", sk, &[5.0], 0, Priority::Standard);
+        assert_eq!(c.stats().entries, 3);
+        assert!(c.get("kws", sk).is_some());
+    }
+
+    #[test]
+    fn interactive_hits_upgrade_and_batch_evicts_lru_among_unprotected() {
+        let c = ResultCache::with_shards(2, 1);
+        let a = ResultCache::key("kws", &[1.0]);
+        let b = ResultCache::key("kws", &[2.0]);
+        c.insert_tagged("kws", a, &[1.0], 0, Priority::Standard);
+        c.insert_tagged("kws", b, &[2.0], 0, Priority::Standard);
+        // An interactive hit on `a` shields it from batch eviction even
+        // though it was populated by Standard traffic.
+        let mut dst = Vec::new();
+        assert_eq!(c.get_copy("kws", a, Priority::Interactive, &mut dst), Some(0));
+        assert_eq!(dst, vec![1.0]);
+        let bk = ResultCache::key("kws", &[9.0]);
+        c.insert_tagged("kws", bk, &[9.0], 0, Priority::Batch);
+        assert!(c.get("kws", a).is_some(), "upgraded entry survives the batch insert");
+        assert!(c.get("kws", b).is_none(), "batch evicted the unprotected LRU entry");
+        assert!(c.get("kws", bk).is_some());
+        // A batch refresh of the protected key must not strip its shield.
+        c.insert_tagged("kws", a, &[1.5], 0, Priority::Batch);
+        let bk2 = ResultCache::key("kws", &[11.0]);
+        c.insert_tagged("kws", bk2, &[11.0], 0, Priority::Batch);
+        assert!(c.get("kws", a).is_some(), "batch refresh stripped the shield");
     }
 }

@@ -28,6 +28,24 @@
 //! tenant); `FleetConfig::fifo_queues` restores the single-FIFO control
 //! for A/B measurements.
 //!
+//! The steady-state submit→reply path takes **no fleet-global mutexes**
+//! and the serve side **allocates nothing per request**: telemetry is
+//! lock-sharded per worker ([`telemetry`] — each worker records into
+//! its own shard through a [`TelemetrySink`], merged at snapshot time),
+//! the result cache is lock-striped ([`cache`]), reply buffers and
+//! worker staging recycle (replies through
+//! [`crate::coordinator::pool::ReplyPool`]s), and registry reads are
+//! Arc clones.  Two fleet-wide synchronization points remain, both
+//! deliberately cheap: queued submits take the read side of the
+//! `RwLock<Plane>` (read-mostly — writers only on membership changes;
+//! this is what makes live scaling possible), and sheds bump relaxed
+//! atomics.  What still allocates per request sits on the caller's side
+//! of the submit boundary: the input vector and the one-shot `mpsc`
+//! reply channel (the API hand-off).
+//! [`FleetConfig::global_hotpath`] restores the pre-PR
+//! global-lock/allocating path as the A/B control `benches/hotpath.rs`
+//! measures against.
+//!
 //! Replicas **come and go at runtime**: [`Fleet::add_replica`] clones a
 //! task's instance (flow numbers carry over) and spins up its queue +
 //! worker; [`Fleet::retire_replica`] closes the queue, lets the worker
@@ -64,10 +82,13 @@ pub use cache::{CacheStats, ResultCache, TaskCacheStats};
 pub use queue::{admit_limit, BoardQueue, FleetRequest, Priority, RequestTag};
 pub use registry::{BoardInstance, Registry};
 pub use router::{Policy, RouteError, Router};
-pub use telemetry::{ClassSnapshot, FleetSnapshot, ReplySample, Telemetry};
+pub use telemetry::{
+    ClassSnapshot, FleetSnapshot, ReplySample, Telemetry, TelemetrySink,
+};
 pub use worker::{DataflowTiming, PeerList, SimBoardExecutor, WorkerConfig};
 
 use crate::coordinator::engine::{BatchPolicy, Reply};
+use crate::coordinator::pool::{PooledVec, ReplyPool};
 use crate::error::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
@@ -99,6 +120,15 @@ pub struct FleetConfig {
     /// control `benches/fleet.rs` measures priority scheduling against).
     /// Default `false` = class-aware queue plane ([`queue`]).
     pub fifo_queues: bool,
+    /// Run the steady-state serve path with the pre-PR **global locks**:
+    /// fleet-wide class/tenant telemetry mutexes on every recorded
+    /// batch, a single-mutex result cache, and a freshly allocated
+    /// reply vector per request.  Default `false` = lock-sharded
+    /// telemetry ([`telemetry`]), striped cache ([`cache`]), and pooled
+    /// zero-allocation replies ([`crate::coordinator::pool`]).  Kept as
+    /// the A/B control `benches/hotpath.rs` measures the sharded plane
+    /// against (`tinyml-codesign fleet --global-hotpath`).
+    pub global_hotpath: bool,
 }
 
 impl Default for FleetConfig {
@@ -112,6 +142,7 @@ impl Default for FleetConfig {
             cache_cap: 0,
             autoscale: None,
             fifo_queues: false,
+            global_hotpath: false,
         }
     }
 }
@@ -143,10 +174,19 @@ struct Lifecycle {
 /// workers, and the autoscale controller.
 pub(crate) struct FleetState {
     pub(crate) config: FleetConfig,
-    pub(crate) registry: Mutex<Registry>,
+    /// Arc-shared: snapshots and scale decisions clone the *handle*
+    /// (the seed deep-cloned the whole instance table on every
+    /// `snapshot`/`registry()` call); mutations are rare scale events
+    /// that clone-and-swap the inner registry under the lock.
+    pub(crate) registry: Mutex<Arc<Registry>>,
     pub(crate) plane: RwLock<Plane>,
     pub(crate) telemetry: Arc<Telemetry>,
     cache: Option<Arc<ResultCache>>,
+    /// Reply buffers for the cache-hit submit path (hits never reach a
+    /// worker, so they recycle through this shared striped pool);
+    /// `None` in `global_hotpath` mode — hits allocate, the pre-PR
+    /// behavior.
+    reply_pool: Option<ReplyPool>,
     workers: Mutex<Vec<WorkerSlot>>,
     /// task → live same-task queue list shared with the workers (for
     /// stealing); updated in place on membership changes.
@@ -184,13 +224,20 @@ fn spawn_worker(
     own: Arc<BoardQueue>,
     peers: PeerList,
 ) -> std::thread::JoinHandle<u64> {
-    let telemetry = state.telemetry.clone();
+    // Resolve the telemetry sink once, outside the serve loop: in the
+    // sharded (default) mode the worker holds its own shard and never
+    // touches the collector's slot table again.
+    let sink = TelemetrySink::resolve(&state.telemetry, inst.id);
     let cache = state.cache.clone();
     let cfg = state.config;
     std::thread::spawn(move || {
         let exec = inst.executor(cfg.batch.max_batch, cfg.time_scale);
-        let wcfg = WorkerConfig { batch: cfg.batch, work_stealing: cfg.work_stealing };
-        worker::run_worker(&inst, exec, &own, &peers, &wcfg, &telemetry, cache.as_deref())
+        let wcfg = WorkerConfig {
+            batch: cfg.batch,
+            work_stealing: cfg.work_stealing,
+            pooled_replies: !cfg.global_hotpath,
+        };
+        worker::run_worker(&inst, exec, &own, &peers, &wcfg, &sink, cache.as_deref())
     })
 }
 
@@ -205,7 +252,12 @@ pub(crate) fn add_replica_inner(
     let _guard = state.scale_lock.lock().unwrap();
     let cfg = state.config;
     let (inst, reg_snapshot) = {
-        let mut reg = state.registry.lock().unwrap();
+        // Scale events are rare: clone the registry once, mutate, and
+        // swap the shared Arc — every reader holding the old Arc keeps a
+        // consistent (briefly stale) view, and no hot path ever deep
+        // clones.
+        let mut guard = state.registry.lock().unwrap();
+        let mut reg = (**guard).clone();
         let tmpl = reg
             .instances
             .iter()
@@ -214,7 +266,9 @@ pub(crate) fn add_replica_inner(
             .map(|i| i.id)
             .ok_or_else(|| anyhow!("no instance hosts task '{task}' to replicate"))?;
         let id = reg.add_replica_of(tmpl)?;
-        (reg.instances[id].clone(), reg.clone())
+        let inst = reg.instances[id].clone();
+        *guard = Arc::new(reg);
+        (inst, guard.clone())
     };
     let id = inst.id;
     let tid = state.telemetry.add_board();
@@ -278,7 +332,8 @@ pub(crate) fn retire_replica_inner(
 ) -> Result<u64> {
     let _guard = state.scale_lock.lock().unwrap();
     let cfg = state.config;
-    let reg_snapshot = state.registry.lock().unwrap().clone();
+    // Arc clone — a handle to the shared table, not a deep copy.
+    let reg_snapshot: Arc<Registry> = state.registry.lock().unwrap().clone();
     let Some(inst) = reg_snapshot.instances.get(id) else {
         bail!("no instance {id} to retire");
     };
@@ -339,7 +394,9 @@ pub(crate) fn retire_replica_inner(
 /// Telemetry snapshot with the fleet-level extras grafted on: cache
 /// counters, per-slot active flags, board-seconds, scale history.
 fn snapshot_of(state: &FleetState) -> FleetSnapshot {
-    let reg = state.registry.lock().unwrap().clone();
+    // Arc clone, not a deep copy: the seed cloned the full instance
+    // table (labels, models, flow numbers) on every snapshot.
+    let reg: Arc<Registry> = state.registry.lock().unwrap().clone();
     let mut snap = state.telemetry.snapshot(&reg);
     if let Some(c) = &state.cache {
         snap.cache = c.stats();
@@ -396,9 +453,22 @@ impl Fleet {
             .iter()
             .map(|_| Arc::new(BoardQueue::with_mode(config.queue_cap, !config.fifo_queues)))
             .collect();
-        let telemetry = Arc::new(Telemetry::new(n));
-        let cache =
-            (config.cache_cap > 0).then(|| Arc::new(ResultCache::new(config.cache_cap)));
+        // The A/B flag swaps all three hot-path subsystems at once:
+        // global-lock telemetry, single-shard cache, allocating replies.
+        let telemetry = Arc::new(if config.global_hotpath {
+            Telemetry::with_global_locks(n)
+        } else {
+            Telemetry::new(n)
+        });
+        let cache = (config.cache_cap > 0).then(|| {
+            Arc::new(if config.global_hotpath {
+                ResultCache::with_shards(config.cache_cap, 1)
+            } else {
+                ResultCache::new(config.cache_cap)
+            })
+        });
+        let reply_pool = (!config.global_hotpath && config.cache_cap > 0)
+            .then(|| ReplyPool::new(256));
         let router = Arc::new(Router::with_options(
             &registry,
             config.policy,
@@ -418,7 +488,7 @@ impl Fleet {
         let now = Instant::now();
         let state = Arc::new(FleetState {
             config,
-            registry: Mutex::new(registry.clone()),
+            registry: Mutex::new(Arc::new(registry.clone())),
             plane: RwLock::new(Plane {
                 router,
                 queues: queues.clone(),
@@ -426,6 +496,7 @@ impl Fleet {
             }),
             telemetry,
             cache,
+            reply_pool,
             workers: Mutex::new(Vec::new()),
             peers: Mutex::new(peers_map),
             lifecycle: Mutex::new(
@@ -469,8 +540,9 @@ impl Fleet {
     }
 
     /// Current registry (grows as replicas are added; retired instances
-    /// keep their slots).
-    pub fn registry(&self) -> Registry {
+    /// keep their slots).  Returns a shared handle — an Arc clone, not
+    /// a copy of the instance table.
+    pub fn registry(&self) -> Arc<Registry> {
         self.state.registry.lock().unwrap().clone()
     }
 
@@ -610,7 +682,22 @@ impl FleetHandle {
         let mut cache_key = None;
         if let Some(cache) = &self.state.cache {
             let key = ResultCache::key(task, &x);
-            if let Some((output, top1)) = cache.get(task, key) {
+            // Hits copy into a pooled reply buffer (returned to the
+            // pool when the caller drops the reply) and, for
+            // Interactive traffic, upgrade the entry's admission class
+            // so a Batch sweep cannot evict the live working set.  The
+            // buffer is acquired lazily inside the hit callback, so a
+            // miss pays no pool traffic.  The global_hotpath control
+            // allocates instead (pre-PR path).
+            let hit = cache.get_hit(task, key, tag.priority, |out, top1| {
+                let mut output = match &self.state.reply_pool {
+                    Some(p) => p.take(),
+                    None => PooledVec::detached(Vec::new()),
+                };
+                output.vec_mut().extend_from_slice(out);
+                (output, top1)
+            });
+            if let Some((output, top1)) = hit {
                 let (tx, rx) = mpsc::channel();
                 let _ = tx.send(Reply {
                     output,
@@ -927,6 +1014,49 @@ mod tests {
         let json = summary.snapshot.to_json().to_json();
         assert!(json.contains("\"cache_hits\""), "{json}");
         assert!(json.contains("\"cache_per_task\""), "{json}");
+    }
+
+    /// The A/B control must be behaviorally identical: same outputs bit
+    /// for bit (pooled replies lose nothing), same served/hit/per-class
+    /// accounting (sharded telemetry loses no events) — only the locking
+    /// layout differs.
+    #[test]
+    fn global_hotpath_control_serves_identically() {
+        let run = |global: bool| {
+            let reg = Registry {
+                instances: vec![BoardInstance::synthetic(0, "kws", 80.0, 10.0, 1.5)],
+            };
+            let cfg = FleetConfig {
+                cache_cap: 32,
+                global_hotpath: global,
+                ..Default::default()
+            };
+            let fleet = Fleet::start(reg, cfg).unwrap();
+            let handle = fleet.handle();
+            let mut outs = Vec::new();
+            for i in 0..20u32 {
+                let mut x = input_for("kws");
+                x[0] = (i % 5) as f32; // 5 distinct inputs -> 15 repeats hit
+                let tag = RequestTag::new(i % 3, Priority::ALL[(i % 3) as usize]);
+                let r = handle.infer_tagged("kws", x, tag).unwrap();
+                outs.push(r.output.to_vec());
+            }
+            (outs, fleet.shutdown())
+        };
+        let (sharded_outs, sharded) = run(false);
+        let (global_outs, global) = run(true);
+        assert_eq!(
+            sharded_outs, global_outs,
+            "pooled replies must be bit-identical to the allocating path"
+        );
+        assert_eq!(sharded.snapshot.served, global.snapshot.served);
+        assert_eq!(sharded.snapshot.cache.hits, global.snapshot.cache.hits);
+        assert_eq!(sharded.snapshot.cache.hits, 15);
+        for (a, b) in sharded.snapshot.classes.iter().zip(&global.snapshot.classes) {
+            assert_eq!(a.served, b.served, "class {}", a.class);
+            assert_eq!(a.shed, b.shed, "class {}", a.class);
+        }
+        assert_eq!(sharded.snapshot.tenants.len(), global.snapshot.tenants.len());
     }
 
     #[test]

@@ -1,20 +1,35 @@
-//! Fleet-level observability: per-board counters + latency reservoirs,
-//! aggregated into p50/p99 latency, throughput, energy per inference, and
-//! queue depths — renderable as a table or as [`crate::report::json`].
+//! Fleet-level observability: **lock-sharded** per-worker accumulators +
+//! latency reservoirs, merged into p50/p99 latency, throughput, energy
+//! per inference, and queue depths — renderable as a table or as
+//! [`crate::report::json`].
 //!
-//! The board set is *growable*: [`Telemetry::add_board`] appends a slot
-//! when the autoscaler spins up a replica, and retired replicas keep
-//! their slots so their history stays in the final report (the snapshot
-//! marks them inactive).  Scale events and fleet board-seconds ride the
-//! [`FleetSnapshot`] into `report::json` alongside the latency and
-//! energy aggregates.
+//! **Sharding (the hot-path contract).**  Every worker owns one
+//! [`TelemetryShard`] and records into it through a [`TelemetrySink`]
+//! resolved once at spawn: a single uncontended mutex per executed
+//! batch, touched by nobody else on the hot path.  Per-class latency
+//! reservoirs, per-class served counts, and per-tenant served counts
+//! all live *inside* the worker's shard; [`Telemetry::snapshot`] (the
+//! existing single-consumer rollover point, `Fleet::snapshot_phase`)
+//! merges the shards.  Nothing on the record path takes a fleet-global
+//! lock — the pre-PR collector serialized every worker on three
+//! fleet-wide class mutexes plus a `Mutex<BTreeMap>` of tenants per
+//! batch, on top of a reader-writer lock over the slot table.
 //!
-//! The collector is also **class- and tenant-aware**: every reply sample
-//! carries its [`Priority`] and tenant ([`ReplySample`]), feeding
-//! fleet-wide per-class latency reservoirs, per-class shed counters
-//! (admission rejections recorded by the submit path), per-tenant served
-//! counts, and per-class queue peak depths per board — all of which ride
-//! the snapshot into the JSON report (`classes` / `tenants` fields).
+//! The pre-PR path is kept, verbatim in behavior, behind
+//! [`Telemetry::with_global_locks`] — the A/B control that
+//! `benches/hotpath.rs` measures the sharded plane against
+//! (`FleetConfig::global_hotpath`).  The merge is **lossless**: on the
+//! same trace, the sharded snapshot's per-class served/shed counts and
+//! p50/p99 equal the global-lock collector's exactly (whenever no
+//! reservoir has saturated, the merged multiset of samples is identical
+//! — the bench asserts this equivalence on a deterministic replay).
+//!
+//! Shed counters are fleet-wide relaxed atomics in both modes (they are
+//! recorded by the *submit* path on definitive rejection, which has no
+//! shard of its own).  The board set is *growable*:
+//! [`Telemetry::add_board`] appends a shard when the autoscaler spins up
+//! a replica, and retired replicas keep their slots so their history
+//! stays in the final report (the snapshot marks them inactive).
 
 use super::autoscale::ScaleEvent;
 use super::cache::CacheStats;
@@ -25,17 +40,20 @@ use crate::report::json::{num, obj, s, Value};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
-/// Latency samples kept per board (reservoir-sampled beyond this).
+/// Latency samples kept per reservoir (reservoir-sampled beyond this).
 const RESERVOIR_CAP: usize = 8192;
 
-/// Distinct tenants tracked in the per-tenant served map.  Beyond this,
-/// new tenant ids are counted in fleet/class aggregates but get no
-/// per-tenant row — the map (cloned into every snapshot and serialized
-/// into the JSON report) must not grow without bound when callers use
-/// high-cardinality tenant ids.
+/// Distinct tenants tracked per shard (and, in global-lock mode, in the
+/// global map) — and the row bound of the merged `tenants` report.
+/// Beyond this, new tenant ids are counted in fleet/class aggregates
+/// but get no per-tenant row: the report must not grow without bound
+/// when callers use high-cardinality tenant ids.  Past the cap the two
+/// collector modes may retain *different* subsets (global keeps
+/// first-seen, the sharded merge keeps the lowest ids across shards) —
+/// both bounded; below it they are identical.
 const TENANT_CAP: usize = 1024;
 
 /// One served request as the worker reports it to telemetry.
@@ -72,10 +90,24 @@ impl Reservoir {
             }
         }
     }
+
+    /// `true` once samples have been dropped (kept < seen): percentile
+    /// merges must weight this reservoir instead of concatenating flat.
+    fn saturated(&self) -> bool {
+        self.seen as usize > self.lat_us.len()
+    }
 }
 
+/// Per-class slice of one shard: served count + latency reservoir.
 #[derive(Debug)]
-struct BoardStats {
+struct ClassLocal {
+    served: u64,
+    lat: Reservoir,
+}
+
+/// Everything one worker accumulates, behind its own (uncontended) lock.
+#[derive(Debug)]
+struct ShardStats {
     served: u64,
     batches: u64,
     stolen: u64,
@@ -86,11 +118,24 @@ struct BoardStats {
     lat: Reservoir,
     depth_peak: usize,
     depth_peak_class: [usize; N_CLASSES],
+    /// Per-class served/latency, merged fleet-wide at snapshot time
+    /// (written only in sharded mode — global-lock mode keeps these in
+    /// the collector's [`GlobalAggs`] instead, the pre-PR layout).
+    class: [ClassLocal; N_CLASSES],
+    /// (tenant, served) pairs, capped at [`TENANT_CAP`]; a handful of
+    /// entries scanned linearly, so the hot path never allocates.
+    tenants: Vec<(u32, u64)>,
+    /// `true` once this shard has refused a tenant row (table full):
+    /// merged per-tenant counts may then undercount tenants another
+    /// shard still tracks, and the snapshot flags it
+    /// ([`FleetSnapshot::tenants_complete`]).
+    tenant_dropped: bool,
 }
 
-impl BoardStats {
+impl ShardStats {
     fn new(id: usize) -> Self {
-        BoardStats {
+        let cseed = |c: u64| 0xC1A5_0000 ^ ((id as u64) << 8) ^ c;
+        ShardStats {
             served: 0,
             batches: 0,
             stolen: 0,
@@ -100,49 +145,242 @@ impl BoardStats {
             lat: Reservoir::new(0x7E1E_0000 + id as u64),
             depth_peak: 0,
             depth_peak_class: [0; N_CLASSES],
+            class: [
+                ClassLocal { served: 0, lat: Reservoir::new(cseed(0)) },
+                ClassLocal { served: 0, lat: Reservoir::new(cseed(1)) },
+                ClassLocal { served: 0, lat: Reservoir::new(cseed(2)) },
+            ],
+            tenants: Vec::new(),
+            tenant_dropped: false,
+        }
+    }
+
+    /// Board-scope fields (both modes).
+    #[allow(clippy::too_many_arguments)]
+    fn apply_board(
+        &mut self,
+        samples: &[ReplySample],
+        queue_us_sum: u128,
+        exec_us: u128,
+        energy_uj: f64,
+        stolen: u64,
+        peak: usize,
+        peak_class: [usize; N_CLASSES],
+    ) {
+        self.served += samples.len() as u64;
+        self.batches += 1;
+        self.stolen += stolen;
+        self.queue_us_sum += queue_us_sum;
+        self.exec_us_sum += exec_us;
+        self.energy_uj_sum += energy_uj;
+        self.depth_peak = self.depth_peak.max(peak);
+        for c in 0..N_CLASSES {
+            self.depth_peak_class[c] = self.depth_peak_class[c].max(peak_class[c]);
+        }
+        for s in samples {
+            self.lat.push(s.latency_us);
+        }
+    }
+
+    /// Class + tenant slices (sharded mode only).
+    fn apply_class_tenant(&mut self, samples: &[ReplySample]) {
+        for s in samples {
+            let cl = &mut self.class[s.priority.idx()];
+            cl.served += 1;
+            cl.lat.push(s.latency_us);
+            match self.tenants.iter().position(|t| t.0 == s.tenant) {
+                Some(i) => self.tenants[i].1 += 1,
+                None if self.tenants.len() < TENANT_CAP => {
+                    self.tenants.push((s.tenant, 1))
+                }
+                None => self.tenant_dropped = true,
+            }
         }
     }
 }
 
-/// Fleet-wide per-class aggregate (latency reservoir + served count;
-/// sheds live in lock-free counters beside it).
-#[derive(Debug)]
-struct ClassAgg {
-    served: u64,
-    lat: Reservoir,
+/// One worker's private accumulator.  The owning worker is the only
+/// hot-path writer (a single uncontended lock per executed batch);
+/// snapshots lock it briefly to merge.
+pub struct TelemetryShard {
+    stats: Mutex<ShardStats>,
 }
 
-/// Shared collector; workers record, anyone can snapshot.  Slots are
-/// append-only: [`Self::add_board`] grows the set while workers are
-/// recording (the autoscaler's scale-up path).
+impl TelemetryShard {
+    fn new(id: usize) -> Self {
+        TelemetryShard { stats: Mutex::new(ShardStats::new(id)) }
+    }
+
+    /// One executed device batch, recorded entirely inside this shard
+    /// (board stats + per-class + per-tenant) — the sharded hot path.
+    /// `peak` / `peak_class` are the owning queue's push-time high-water
+    /// marks (total and per class).
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_batch(
+        &self,
+        samples: &[ReplySample],
+        queue_us_sum: u128,
+        exec_us: u128,
+        energy_uj: f64,
+        stolen: u64,
+        peak: usize,
+        peak_class: [usize; N_CLASSES],
+    ) {
+        let mut st = self.stats.lock().unwrap();
+        st.apply_board(samples, queue_us_sum, exec_us, energy_uj, stolen, peak, peak_class);
+        st.apply_class_tenant(samples);
+    }
+}
+
+/// The pre-PR fleet-global aggregates (class mutexes + tenant map),
+/// kept only for the `global_hotpath` A/B control.
+struct GlobalAggs {
+    classes: [Mutex<ClassLocal>; N_CLASSES],
+    tenants: Mutex<BTreeMap<u32, u64>>,
+}
+
+impl GlobalAggs {
+    fn new() -> Self {
+        GlobalAggs {
+            classes: [
+                Mutex::new(ClassLocal { served: 0, lat: Reservoir::new(0xC1A5_0000) }),
+                Mutex::new(ClassLocal { served: 0, lat: Reservoir::new(0xC1A5_0001) }),
+                Mutex::new(ClassLocal { served: 0, lat: Reservoir::new(0xC1A5_0002) }),
+            ],
+            tenants: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// The pre-PR record path: one fleet-global lock per class per
+    /// batch, plus the tenant-map lock — every worker serializes here.
+    fn record(&self, samples: &[ReplySample]) {
+        for p in Priority::ALL {
+            let mut it = samples.iter().filter(|s| s.priority == p).peekable();
+            if it.peek().is_none() {
+                continue;
+            }
+            let mut agg = self.classes[p.idx()].lock().unwrap();
+            for s in it {
+                agg.served += 1;
+                agg.lat.push(s.latency_us);
+            }
+        }
+        let mut tenants = self.tenants.lock().unwrap();
+        for s in samples {
+            if let Some(n) = tenants.get_mut(&s.tenant) {
+                *n += 1;
+            } else if tenants.len() < TENANT_CAP {
+                tenants.insert(s.tenant, 1);
+            }
+        }
+    }
+}
+
+/// Where a worker's `record_batch` goes, resolved **once** at worker
+/// spawn so the hot path never re-derives it:
+///
+/// * `Sharded` — a direct handle to the worker's own shard.  No slot
+///   table read, no fleet-global locks: one uncontended mutex per batch.
+/// * `Global` — the pre-PR path through [`Telemetry::record_batch`]
+///   (slot-table read lock + shard lock + global class/tenant mutexes),
+///   kept as the A/B baseline for `benches/hotpath.rs`.
+pub enum TelemetrySink {
+    Sharded(Arc<TelemetryShard>),
+    Global(Arc<Telemetry>, usize),
+}
+
+impl TelemetrySink {
+    /// Resolve slot `id`'s record sink once (worker spawn time): the
+    /// worker's own shard in sharded mode, the collector itself in
+    /// global-lock mode.
+    pub fn resolve(telemetry: &Arc<Telemetry>, id: usize) -> TelemetrySink {
+        if telemetry.global.is_none() {
+            TelemetrySink::Sharded(telemetry.boards.read().unwrap()[id].clone())
+        } else {
+            TelemetrySink::Global(telemetry.clone(), id)
+        }
+    }
+
+    /// Record one executed device batch (see
+    /// [`TelemetryShard::record_batch`] for the argument contract).
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_batch(
+        &self,
+        samples: &[ReplySample],
+        queue_us_sum: u128,
+        exec_us: u128,
+        energy_uj: f64,
+        stolen: u64,
+        peak: usize,
+        peak_class: [usize; N_CLASSES],
+    ) {
+        match self {
+            TelemetrySink::Sharded(shard) => shard.record_batch(
+                samples,
+                queue_us_sum,
+                exec_us,
+                energy_uj,
+                stolen,
+                peak,
+                peak_class,
+            ),
+            TelemetrySink::Global(t, id) => t.record_batch(
+                *id,
+                samples,
+                queue_us_sum,
+                exec_us,
+                energy_uj,
+                stolen,
+                peak,
+                peak_class,
+            ),
+        }
+    }
+}
+
+/// Shared collector; workers record (through their [`TelemetrySink`]),
+/// anyone can snapshot.  Slots are append-only: [`Self::add_board`]
+/// grows the set while workers are recording (the autoscaler's scale-up
+/// path).
 pub struct Telemetry {
-    boards: RwLock<Vec<Mutex<BoardStats>>>,
-    /// Fleet-wide per-class latency/served aggregates.
-    classes: [Mutex<ClassAgg>; N_CLASSES],
+    boards: RwLock<Vec<Arc<TelemetryShard>>>,
+    /// `Some` = pre-PR global-lock mode (the A/B control); `None` =
+    /// sharded (default).
+    global: Option<GlobalAggs>,
     /// Admission rejections per class (recorded by the submit path when
     /// a request is definitively refused — the shed counters the bench
-    /// asserts on).
+    /// asserts on).  Lock-free in both modes.
     shed: [AtomicU64; N_CLASSES],
-    /// Served count per tenant, fleet-wide.
-    tenants: Mutex<BTreeMap<u32, u64>>,
     t0: Instant,
 }
 
 impl Telemetry {
+    /// Sharded collector (the default hot path).
     pub fn new(n_boards: usize) -> Self {
+        Self::with_mode(n_boards, false)
+    }
+
+    /// Pre-PR global-lock collector: per-class and per-tenant aggregates
+    /// live behind fleet-wide mutexes crossed on every `record_batch`.
+    /// Only the `FleetConfig::global_hotpath` A/B control builds this.
+    pub fn with_global_locks(n_boards: usize) -> Self {
+        Self::with_mode(n_boards, true)
+    }
+
+    fn with_mode(n_boards: usize, global: bool) -> Self {
         Telemetry {
             boards: RwLock::new(
-                (0..n_boards).map(|i| Mutex::new(BoardStats::new(i))).collect(),
+                (0..n_boards).map(|i| Arc::new(TelemetryShard::new(i))).collect(),
             ),
-            classes: [
-                Mutex::new(ClassAgg { served: 0, lat: Reservoir::new(0xC1A5_0000) }),
-                Mutex::new(ClassAgg { served: 0, lat: Reservoir::new(0xC1A5_0001) }),
-                Mutex::new(ClassAgg { served: 0, lat: Reservoir::new(0xC1A5_0002) }),
-            ],
+            global: global.then(GlobalAggs::new),
             shed: Default::default(),
-            tenants: Mutex::new(BTreeMap::new()),
             t0: Instant::now(),
         }
+    }
+
+    /// `false` when running the global-lock A/B baseline.
+    pub fn is_sharded(&self) -> bool {
+        self.global.is_none()
     }
 
     /// One admission rejection (`Overloaded` / `SloUnattainable`) of a
@@ -151,11 +389,11 @@ impl Telemetry {
         self.shed[class.idx()].fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Append a slot for a newly spawned replica; returns its id.
+    /// Append a shard for a newly spawned replica; returns its id.
     pub fn add_board(&self) -> usize {
         let mut boards = self.boards.write().unwrap();
         let id = boards.len();
-        boards.push(Mutex::new(BoardStats::new(id)));
+        boards.push(Arc::new(TelemetryShard::new(id)));
         id
     }
 
@@ -167,9 +405,12 @@ impl Telemetry {
         self.len() == 0
     }
 
-    /// One executed device batch on board `id`.  `peak` / `peak_class`
-    /// are the owning queue's push-time high-water marks (total and per
-    /// class).
+    /// One executed device batch on slot `id`, routed by mode: sharded
+    /// collectors record everything in the slot's own shard; the
+    /// global-lock baseline additionally crosses the fleet-wide class
+    /// and tenant mutexes (the pre-PR behavior).  Workers go through
+    /// their resolved [`TelemetrySink`] instead of calling this per
+    /// batch; tests and the A/B sink land here.
     #[allow(clippy::too_many_arguments)]
     pub fn record_batch(
         &self,
@@ -182,45 +423,30 @@ impl Telemetry {
         peak: usize,
         peak_class: [usize; N_CLASSES],
     ) {
-        {
-            let boards = self.boards.read().unwrap();
-            let mut b = boards[id].lock().unwrap();
-            b.served += samples.len() as u64;
-            b.batches += 1;
-            b.stolen += stolen;
-            b.queue_us_sum += queue_us_sum;
-            b.exec_us_sum += exec_us;
-            b.energy_uj_sum += energy_uj;
-            b.depth_peak = b.depth_peak.max(peak);
-            for c in 0..N_CLASSES {
-                b.depth_peak_class[c] = b.depth_peak_class[c].max(peak_class[c]);
-            }
-            for s in samples {
-                b.lat.push(s.latency_us);
-            }
-        }
-        // One lock per class per batch, not per sample: the class aggs
-        // are fleet-global, so per-sample locking would multiply
-        // contention by the batch size on the hot serve path.
-        for p in Priority::ALL {
-            let mut it = samples.iter().filter(|s| s.priority == p).peekable();
-            if it.peek().is_none() {
-                continue;
-            }
-            let mut agg = self.classes[p.idx()].lock().unwrap();
-            for s in it {
-                agg.served += 1;
-                agg.lat.push(s.latency_us);
-            }
-        }
-        {
-            let mut tenants = self.tenants.lock().unwrap();
-            for s in samples {
-                if let Some(n) = tenants.get_mut(&s.tenant) {
-                    *n += 1;
-                } else if tenants.len() < TENANT_CAP {
-                    tenants.insert(s.tenant, 1);
-                }
+        let shard = self.boards.read().unwrap()[id].clone();
+        match &self.global {
+            None => shard.record_batch(
+                samples,
+                queue_us_sum,
+                exec_us,
+                energy_uj,
+                stolen,
+                peak,
+                peak_class,
+            ),
+            Some(g) => {
+                let mut st = shard.stats.lock().unwrap();
+                st.apply_board(
+                    samples,
+                    queue_us_sum,
+                    exec_us,
+                    energy_uj,
+                    stolen,
+                    peak,
+                    peak_class,
+                );
+                drop(st);
+                g.record(samples);
             }
         }
     }
@@ -233,7 +459,7 @@ impl Telemetry {
             .read()
             .unwrap()
             .iter()
-            .map(|m| m.lock().unwrap().exec_us_sum)
+            .map(|s| s.stats.lock().unwrap().exec_us_sum)
             .collect()
     }
 
@@ -242,10 +468,10 @@ impl Telemetry {
     /// snapshot/phase boundaries so `depth_peak` reads per-phase, not
     /// since-birth.
     pub fn reset_depth_peaks(&self) {
-        for m in self.boards.read().unwrap().iter() {
-            let mut b = m.lock().unwrap();
-            b.depth_peak = 0;
-            b.depth_peak_class = [0; N_CLASSES];
+        for shard in self.boards.read().unwrap().iter() {
+            let mut st = shard.stats.lock().unwrap();
+            st.depth_peak = 0;
+            st.depth_peak_class = [0; N_CLASSES];
         }
     }
 
@@ -259,9 +485,35 @@ impl Telemetry {
         let mut weighted: Vec<(f64, f64)> = Vec::new();
         let mut served = 0u64;
         let mut energy = 0.0f64;
+        // Sharded-mode class/tenant merge accumulators.  One lock per
+        // shard for the whole merge (class merges cover *every* shard,
+        // including slots newer than `reg` — the global-lock baseline
+        // counts those too, and the merge must lose nothing).
+        let mut class_served = [0u64; N_CLASSES];
+        let mut class_vals: [Vec<(f64, f64)>; N_CLASSES] = Default::default();
+        let mut class_saturated = [false; N_CLASSES];
+        let mut tenant_map: BTreeMap<u32, u64> = BTreeMap::new();
+        let mut tenants_complete = true;
         let boards = self.boards.read().unwrap();
-        for (i, m) in boards.iter().enumerate().take(reg.len()) {
-            let b = m.lock().unwrap();
+        for (i, shard) in boards.iter().enumerate() {
+            let b = shard.stats.lock().unwrap();
+            if self.global.is_none() {
+                for (c, cl) in b.class.iter().enumerate() {
+                    class_served[c] += cl.served;
+                    if !cl.lat.lat_us.is_empty() {
+                        let w = cl.served as f64 / cl.lat.lat_us.len() as f64;
+                        class_saturated[c] |= cl.lat.saturated();
+                        class_vals[c].extend(cl.lat.lat_us.iter().map(|&v| (v, w)));
+                    }
+                }
+                for &(tenant, n) in &b.tenants {
+                    *tenant_map.entry(tenant).or_insert(0) += n;
+                }
+                tenants_complete &= !b.tenant_dropped;
+            }
+            if i >= reg.len() {
+                continue;
+            }
             let inst = &reg.instances[i];
             let mut lat = b.lat.lat_us.clone();
             if !lat.is_empty() {
@@ -299,29 +551,73 @@ impl Telemetry {
                 depth_peak_class: b.depth_peak_class,
             });
         }
+        drop(boards);
         weighted.sort_by(|a, c| a.0.total_cmp(&c.0));
-        let classes = Priority::ALL
-            .iter()
-            .map(|p| {
-                let agg = self.classes[p.idx()].lock().unwrap();
-                let mut lat = agg.lat.lat_us.clone();
-                lat.sort_by(|a, c| a.total_cmp(c));
-                ClassSnapshot {
-                    class: p.name(),
-                    served: agg.served,
-                    shed: self.shed[p.idx()].load(Ordering::Relaxed),
-                    p50_us: percentile(&lat, 0.50),
-                    p99_us: percentile(&lat, 0.99),
-                }
-            })
-            .collect();
-        let tenants = self
-            .tenants
-            .lock()
-            .unwrap()
-            .iter()
-            .map(|(&tenant, &served)| TenantSnapshot { tenant, served })
-            .collect();
+        let classes = match &self.global {
+            // Pre-PR path: one fleet-wide reservoir per class.
+            Some(g) => Priority::ALL
+                .iter()
+                .map(|p| {
+                    let agg = g.classes[p.idx()].lock().unwrap();
+                    let mut lat = agg.lat.lat_us.clone();
+                    lat.sort_by(|a, c| a.total_cmp(c));
+                    ClassSnapshot {
+                        class: p.name(),
+                        served: agg.served,
+                        shed: self.shed[p.idx()].load(Ordering::Relaxed),
+                        p50_us: percentile(&lat, 0.50),
+                        p99_us: percentile(&lat, 0.99),
+                    }
+                })
+                .collect(),
+            // Sharded merge.  Unsaturated reservoirs kept every sample,
+            // so the merged multiset is *identical* to what one global
+            // reservoir would hold — flat nearest-rank percentiles make
+            // the merge bit-equal to the pre-PR path (the equivalence
+            // `benches/hotpath.rs` asserts).  Once any shard has
+            // dropped samples, fall back to traffic-weighted
+            // percentiles, mirroring the per-board fleet merge.
+            None => Priority::ALL
+                .iter()
+                .map(|p| {
+                    let c = p.idx();
+                    let mut vals = std::mem::take(&mut class_vals[c]);
+                    vals.sort_by(|a, b| a.0.total_cmp(&b.0));
+                    let (p50_us, p99_us) = if class_saturated[c] {
+                        (
+                            weighted_percentile(&vals, 0.50),
+                            weighted_percentile(&vals, 0.99),
+                        )
+                    } else {
+                        let flat: Vec<f64> = vals.iter().map(|&(v, _)| v).collect();
+                        (percentile(&flat, 0.50), percentile(&flat, 0.99))
+                    };
+                    ClassSnapshot {
+                        class: p.name(),
+                        served: class_served[c],
+                        shed: self.shed[c].load(Ordering::Relaxed),
+                        p50_us,
+                        p99_us,
+                    }
+                })
+                .collect(),
+        };
+        let tenants = match &self.global {
+            Some(g) => g
+                .tenants
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(&tenant, &served)| TenantSnapshot { tenant, served })
+                .collect(),
+            // Re-cap after the merge: shards cap independently, so the
+            // union could otherwise grow to boards x TENANT_CAP rows.
+            None => tenant_map
+                .iter()
+                .take(TENANT_CAP)
+                .map(|(&tenant, &served)| TenantSnapshot { tenant, served })
+                .collect(),
+        };
         FleetSnapshot {
             elapsed_s,
             served,
@@ -332,6 +628,9 @@ impl Telemetry {
             cache: CacheStats::default(),
             classes,
             tenants,
+            // Global-lock mode tracks tenants in one table, so any row
+            // it emits is a complete fleet-wide count by construction.
+            tenants_complete: self.global.is_some() || tenants_complete,
             // The fleet layer grafts these on: board lifecycle and scale
             // history live beside the queues, not in the per-board stats.
             board_seconds: 0.0,
@@ -339,6 +638,70 @@ impl Telemetry {
             per_board,
         }
     }
+}
+
+/// Lossless-merge self-check shared by `benches/hotpath.rs` (part 3),
+/// the unit tests, and the property tests (same precedent as
+/// `crate::report::gate::self_test`): replay one deterministic trace
+/// into a sharded and a global-lock collector and assert the merged
+/// snapshots agree **exactly** — per-class served/shed and p50/p99,
+/// tenant rows, per-board served/p99, and the fleet total.  Panics on
+/// divergence; returns the batch count replayed.  Per-class exactness
+/// requires unsaturated class reservoirs, so `batches` is capped
+/// (expected samples per class stay well under the reservoir size).
+pub fn assert_merge_equivalence(n_boards: usize, batches: usize, seed: u64) -> usize {
+    assert!(n_boards >= 1);
+    assert!(
+        batches <= 2000,
+        "per-class exactness needs unsaturated reservoirs; keep batches <= 2000"
+    );
+    let reg = Registry {
+        instances: (0..n_boards)
+            .map(|id| {
+                super::registry::BoardInstance::synthetic(id, "kws", 100.0, 10.0, 1.5)
+            })
+            .collect(),
+    };
+    let sharded = Telemetry::new(n_boards);
+    let global = Telemetry::with_global_locks(n_boards);
+    let mut rng = SplitMix64::new(seed);
+    for _ in 0..batches {
+        let id = rng.next_below(n_boards as u64) as usize;
+        let n = 1 + rng.next_below(8) as usize;
+        let samples: Vec<ReplySample> = (0..n)
+            .map(|_| ReplySample {
+                tenant: rng.next_below(32) as u32,
+                priority: Priority::ALL[rng.next_below(3) as usize],
+                latency_us: rng.next_below(1_000_000) as f64 / 100.0,
+            })
+            .collect();
+        for t in [&sharded, &global] {
+            t.record_batch(id, &samples, 7, 13, 1.0, 0, n, [0, n, 0]);
+        }
+        if rng.next_below(7) == 0 {
+            let p = Priority::ALL[rng.next_below(3) as usize];
+            sharded.record_shed(p);
+            global.record_shed(p);
+        }
+    }
+    let a = sharded.snapshot(&reg);
+    let b = global.snapshot(&reg);
+    assert_eq!(a.served, b.served, "total served must merge losslessly");
+    for (ca, cb) in a.classes.iter().zip(&b.classes) {
+        assert_eq!(ca.served, cb.served, "class {} served", ca.class);
+        assert_eq!(ca.shed, cb.shed, "class {} shed", ca.class);
+        assert_eq!(ca.p50_us, cb.p50_us, "class {} p50 must merge exactly", ca.class);
+        assert_eq!(ca.p99_us, cb.p99_us, "class {} p99 must merge exactly", ca.class);
+    }
+    assert_eq!(a.tenants.len(), b.tenants.len(), "tenant rows");
+    for (ta, tb) in a.tenants.iter().zip(&b.tenants) {
+        assert_eq!((ta.tenant, ta.served), (tb.tenant, tb.served));
+    }
+    for (ba, bb) in a.per_board.iter().zip(&b.per_board) {
+        assert_eq!(ba.served, bb.served, "per-board served");
+        assert_eq!(ba.p99_us, bb.p99_us, "per-board p99");
+    }
+    batches
 }
 
 /// Percentile over a pre-sorted slice (nearest-rank).
@@ -391,7 +754,7 @@ pub struct BoardSnapshot {
 }
 
 /// Fleet-wide per-priority-class aggregate: latency percentiles over the
-/// class's own reservoir, served count, and sheds (admission
+/// class's merged samples, served count, and sheds (admission
 /// rejections).
 #[derive(Clone, Debug)]
 pub struct ClassSnapshot {
@@ -440,9 +803,16 @@ pub struct FleetSnapshot {
     /// Per-priority-class p50/p99/served/shed, always all three classes
     /// in `[interactive, standard, batch]` order.
     pub classes: Vec<ClassSnapshot>,
-    /// Served count per tenant (tenant 0 is the untagged default; only
-    /// the first `TENANT_CAP` distinct ids get a row).
+    /// Served count per tenant (tenant 0 is the untagged default; at
+    /// most `TENANT_CAP` rows — ids beyond the cap are counted in the
+    /// aggregates but get no row).
     pub tenants: Vec<TenantSnapshot>,
+    /// `true` while every emitted tenant row is an exact fleet-wide
+    /// count.  `false` once tenant cardinality overflowed any shard's
+    /// table: a row may then undercount (the tenant was dropped by one
+    /// shard but tracked by another) — the rows stay bounded either
+    /// way.
+    pub tenants_complete: bool,
     /// Total board-alive time: Σ over replicas of (retired-or-now −
     /// started).  The autoscaler's cost axis — an elastic fleet should
     /// serve the same trace with fewer board-seconds than a fixed one.
@@ -499,6 +869,7 @@ impl FleetSnapshot {
                         .collect(),
                 ),
             ),
+            ("tenants_complete", Value::Bool(self.tenants_complete)),
             ("board_seconds", num(self.board_seconds)),
             (
                 "scale_events",
@@ -605,7 +976,14 @@ impl FleetSnapshot {
                 .iter()
                 .map(|t| format!("t{}:{}", t.tenant, t.served))
                 .collect();
-            writeln!(out, "  tenants: {} ({})", self.tenants.len(), list.join(" ")).ok();
+            writeln!(
+                out,
+                "  tenants: {} ({}){}",
+                self.tenants.len(),
+                list.join(" "),
+                if self.tenants_complete { "" } else { " [rows may undercount]" }
+            )
+            .ok();
         }
         if !self.scale_events.is_empty() {
             writeln!(
@@ -672,6 +1050,7 @@ mod tests {
     fn snapshot_aggregates_and_serializes() {
         let reg = reg2();
         let t = Telemetry::new(2);
+        assert!(t.is_sharded());
         t.record_batch(
             0,
             &[
@@ -742,6 +1121,53 @@ mod tests {
         assert_eq!(rolled.per_board[2].depth_peak_class, [0, 0, 0]);
     }
 
+    /// Shards cap their tenant tables independently, so the merge must
+    /// re-cap: the report may never exceed `TENANT_CAP` rows no matter
+    /// how many distinct tenant ids flow through (ids past the cap stay
+    /// counted in the aggregates).
+    #[test]
+    fn merged_tenant_rows_stay_bounded() {
+        let reg = reg2();
+        let t = Telemetry::new(2);
+        for i in 0..(2 * TENANT_CAP as u32) {
+            t.record_batch(
+                (i % 2) as usize,
+                &[ReplySample { tenant: i, priority: Priority::Standard, latency_us: 1.0 }],
+                1,
+                1,
+                1.0,
+                0,
+                1,
+                [0, 1, 0],
+            );
+        }
+        let snap = t.snapshot(&reg);
+        assert_eq!(snap.served, 2 * TENANT_CAP as u64);
+        assert_eq!(snap.tenants.len(), TENANT_CAP, "merged rows must re-cap");
+        assert!(snap.tenants.iter().all(|x| x.served == 1));
+        // No shard's own table overflowed (each saw exactly TENANT_CAP
+        // distinct ids), so every emitted row is still exact.
+        assert!(snap.tenants_complete);
+        // Overflow one shard: rows stay bounded but may now undercount,
+        // and the snapshot says so.
+        for i in 0..(TENANT_CAP as u32 + 1) {
+            t.record_batch(
+                0,
+                &[ReplySample { tenant: 1_000_000 + i, priority: Priority::Standard, latency_us: 1.0 }],
+                1,
+                1,
+                1.0,
+                0,
+                1,
+                [0, 1, 0],
+            );
+        }
+        let over = t.snapshot(&reg);
+        assert!(!over.tenants_complete, "shard overflow must be flagged");
+        assert!(over.tenants.len() <= TENANT_CAP);
+        assert!(over.to_json().to_json().contains("\"tenants_complete\":false"));
+    }
+
     #[test]
     fn fleet_percentiles_weight_by_traffic() {
         // 99% of traffic at 1 us (hot board, saturated reservoir stands
@@ -773,5 +1199,37 @@ mod tests {
         assert_eq!(snap.served, 20_000);
         assert!(snap.per_board[0].p50_us >= 300.0 && snap.per_board[0].p50_us <= 700.0);
         assert!(snap.per_board[0].p99_us >= 900.0);
+        // The standard-class merge weighted the saturated shard; the
+        // percentiles stay representative of the (uniform) stream.
+        assert!(snap.classes[1].p50_us >= 300.0 && snap.classes[1].p50_us <= 700.0);
+    }
+
+    /// The refactor's lossless-merge guarantee, via the shared harness
+    /// (the bench and the property tests drive the same one at other
+    /// sizes/seeds).
+    #[test]
+    fn sharded_merge_equals_global_lock_collector_exactly() {
+        assert!(!Telemetry::with_global_locks(1).is_sharded());
+        assert_eq!(assert_merge_equivalence(4, 500, 0x5AAD_ED01), 500);
+    }
+
+    /// A resolved sharded sink records without ever touching the
+    /// collector's slot table again (the merge still sees everything).
+    #[test]
+    fn sink_resolves_to_shard_and_merges() {
+        let reg = reg2();
+        let t = Arc::new(Telemetry::new(2));
+        let sink0 = TelemetrySink::resolve(&t, 0);
+        let sink1 = TelemetrySink::resolve(&t, 1);
+        assert!(matches!(&sink0, TelemetrySink::Sharded(_)));
+        sink0.record_batch(&[smp(Priority::Interactive, 10.0)], 1, 2, 3.0, 0, 1, [1, 0, 0]);
+        sink1.record_batch(&[smp(Priority::Batch, 90.0)], 1, 2, 3.0, 0, 1, [0, 0, 1]);
+        let snap = t.snapshot(&reg);
+        assert_eq!(snap.served, 2);
+        assert_eq!(snap.classes[0].served, 1);
+        assert_eq!(snap.classes[2].served, 1);
+        assert_eq!(snap.classes[0].p99_us, 10.0);
+        let g = Arc::new(Telemetry::with_global_locks(2));
+        assert!(matches!(TelemetrySink::resolve(&g, 0), TelemetrySink::Global(..)));
     }
 }

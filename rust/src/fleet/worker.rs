@@ -25,20 +25,31 @@
 //! or retired at runtime by the autoscaler become visible to every
 //! same-task worker on its next steal attempt, with no thread restarts.
 //!
+//! The steady-state loop takes **no fleet-global locks and allocates
+//! nothing per request**: telemetry goes through a [`TelemetrySink`]
+//! resolved once at spawn (the worker's own lock-shard — see
+//! [`super::telemetry`]), staging (batch buffers, telemetry samples) is
+//! reused across batches, and replies copy into recycled
+//! [`crate::coordinator::pool::ReplyPool`] buffers that return to the
+//! worker's pool when the caller drops them.  (The per-request `mpsc`
+//! reply channel is the submit side's, not this loop's.)
+//! `WorkerConfig::pooled_replies` switches the pool off for the
+//! `FleetConfig::global_hotpath` A/B baseline.
+//!
 //! Outputs come from the packed quantized kernel core
 //! ([`crate::kernels`]): each task's class templates are quantized and
 //! packed **once per process** behind a `OnceLock` and shared by every
 //! replica worker (the seed rebuilt the f32 templates per replica
 //! thread), and each executor drives the shared matrix with its own
-//! scratch arena; the worker's staging buffers are reused across batches,
-//! so the steady-state serve loop allocates only the per-request reply
-//! vectors.
+//! scratch arena; the worker's staging buffers are reused across
+//! batches.
 
 use super::cache::ResultCache;
 use super::queue::{BoardQueue, FleetRequest, Priority};
 use super::registry::BoardInstance;
-use super::telemetry::{ReplySample, Telemetry};
+use super::telemetry::{ReplySample, TelemetrySink};
 use crate::coordinator::engine::{fill_window, BatchExecutor, BatchPolicy, Reply};
+use crate::coordinator::pool::{PooledVec, ReplyPool};
 use crate::error::{bail, Result};
 use crate::kernels::{PackedLinear, ScratchArena, SmoothKernel};
 use crate::runtime::argmax;
@@ -329,6 +340,10 @@ pub struct WorkerConfig {
     pub batch: BatchPolicy,
     /// Steal from same-task replicas when the own queue runs dry.
     pub work_stealing: bool,
+    /// Reply through a per-worker [`ReplyPool`] (the zero-allocation
+    /// path).  `false` = allocate a fresh reply vector per request, the
+    /// pre-PR behavior kept for the `global_hotpath` A/B control.
+    pub pooled_replies: bool,
 }
 
 /// Run one board's serve loop until its queue is closed and drained.
@@ -346,7 +361,7 @@ pub fn run_worker<E: BatchExecutor>(
     own: &Arc<BoardQueue>,
     peers: &PeerList,
     cfg: &WorkerConfig,
-    telemetry: &Telemetry,
+    telemetry: &TelemetrySink,
     cache: Option<&ResultCache>,
 ) -> u64 {
     let device_batch = match exec.device_batch() {
@@ -369,6 +384,12 @@ pub fn run_worker<E: BatchExecutor>(
     // executors (PJRT AOT) require the whole padded buffer.
     let mut xbuf = vec![0.0f32; device_batch * feat];
     let mut obuf = vec![0.0f32; device_batch * n_out];
+    // Reply buffers recycle through this worker's pool: a reply returns
+    // its buffer when the caller drops it, so steady state the loop
+    // allocates nothing per request.
+    let pool = cfg.pooled_replies.then(|| ReplyPool::new(4 * device_batch.max(16)));
+    // Telemetry staging, reused across batches (cleared, never shrunk).
+    let mut samples: Vec<ReplySample> = Vec::with_capacity(window.max_batch);
     let mut served = 0u64;
     // How long to wait on the own queue before checking peers for work
     // to steal (bounds the idle-replica pickup latency).
@@ -470,15 +491,22 @@ pub fn run_worker<E: BatchExecutor>(
         }
         let exec_us = exec_start.elapsed().as_micros();
 
-        let mut samples = Vec::with_capacity(n);
+        samples.clear();
         let mut queue_us_sum = 0u128;
         for (i, req) in batch.iter().enumerate() {
-            let out = obuf[i * n_out..(i + 1) * n_out].to_vec();
+            let slice = &obuf[i * n_out..(i + 1) * n_out];
+            let out = match &pool {
+                Some(p) => p.take_copy(slice),
+                None => PooledVec::detached(slice.to_vec()),
+            };
             let top1 = argmax(&out);
             if let (Some(c), Some(key)) = (cache, req.cache_key) {
                 // Insert before replying so a caller that observed the
-                // reply is guaranteed to hit on the next submit.
-                c.insert(&inst.task, key, &out, top1);
+                // reply is guaranteed to hit on the next submit.  The
+                // request's class tags the entry for class-aware
+                // admission (Batch sweeps cannot flush Interactive's
+                // working set).
+                c.insert_tagged(&inst.task, key, &out, top1, req.tag.priority);
             }
             let queue_us = exec_start.duration_since(req.enqueued).as_micros();
             queue_us_sum += queue_us;
@@ -497,7 +525,6 @@ pub fn run_worker<E: BatchExecutor>(
             served += 1;
         }
         telemetry.record_batch(
-            inst.id,
             &samples,
             queue_us_sum,
             exec_us,

@@ -14,7 +14,7 @@
 //! tinyml-codesign fleet [--policy rr|ll|energy|slo] [--requests N] [--cache N]
 //!                       [--autoscale] [--min-replicas N] [--max-replicas N]
 //!                       [--scale-interval-us N] [--json]
-//!                       [--tenants N] [--priority-mix i:s:b] [--fifo]
+//!                       [--tenants N] [--priority-mix i:s:b] [--fifo] [--global-hotpath]
 //! tinyml-codesign bench-gate [--baseline-dir D] [--bench-dir D] [--tol F]
 //!                       [--update] [--self-test]    BENCH_* regression gate
 //! tinyml-codesign list                               available models
@@ -23,7 +23,9 @@
 //! `--priority-mix i:s:b` weights the interactive:standard:batch classes
 //! of the generated fleet workload (default `0:1:0`, all standard);
 //! `--tenants N` spreads requests over N tenant ids; `--fifo` disables
-//! priority scheduling (single-FIFO control).
+//! priority scheduling (single-FIFO control); `--global-hotpath`
+//! restores the pre-sharding global-lock telemetry/cache/allocating
+//! reply path (the A/B control `benches/hotpath.rs` measures against).
 
 use tinyml_codesign::board::{arty_a7_100t, pynq_z2, Board};
 use tinyml_codesign::coordinator::engine::{spawn, BatchPolicy};
@@ -297,6 +299,7 @@ fn main() -> Result<()> {
                 cache_cap: args.usize_flag("cache", 0),
                 autoscale,
                 fifo_queues: args.flag("fifo").is_some(),
+                global_hotpath: args.flag("global-hotpath").is_some(),
                 ..Default::default()
             };
             let fleet = Fleet::start(Registry::standard_fleet()?, cfg)?;

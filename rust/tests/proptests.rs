@@ -6,6 +6,7 @@
 //! deterministic (failures print the case seed for replay).
 
 use tinyml_codesign::coordinator::engine::{BatchExecutor, BatchPolicy, ModelExecutor};
+use tinyml_codesign::coordinator::pool::{PooledVec, ReplyPool, POISON_BITS};
 use tinyml_codesign::data::prng::SplitMix64;
 use tinyml_codesign::dataflow::{Prereq, Simulator, StageSpec, UNBOUNDED_DEPTH};
 use tinyml_codesign::fifo::{optimize_fifos, DepthPolicy};
@@ -573,7 +574,7 @@ fn run_worker_has_no_inline_inference_path() {
     let exec = MockExecutor { calls: calls.clone(), batch: 4 };
     let worker = {
         let queue = queue.clone();
-        let telemetry = telemetry.clone();
+        let sink = tinyml_codesign::fleet::TelemetrySink::resolve(&telemetry, 0);
         std::thread::spawn(move || {
             let inst = BoardInstance::synthetic(0, "mock", 10.0, 1.0, 1.0);
             let wcfg = WorkerConfig {
@@ -582,8 +583,9 @@ fn run_worker_has_no_inline_inference_path() {
                     max_wait: std::time::Duration::from_millis(1),
                 },
                 work_stealing: true,
+                pooled_replies: true,
             };
-            run_worker(&inst, exec, &queue, &peers, &wcfg, &telemetry, None)
+            run_worker(&inst, exec, &queue, &peers, &wcfg, &sink, None)
         })
     };
     let mut rxs = Vec::new();
@@ -849,6 +851,152 @@ fn prop_no_class_starves_under_sustained_interactive_load() {
                  after {pops} pops, n_std={n_std} n_batch={n_batch})"
             );
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pooled reply path + sharded telemetry (the zero-allocation hot path).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pooled_replies_bit_identical_and_recycled_buffers_never_leak() {
+    // Random take/fill/drop interleavings: every pooled copy is
+    // bit-identical to the source slice, recycled buffers are reused
+    // (the pool actually pools), and no recycled buffer ever exposes a
+    // previous request's data — the pool poison-fills on return, and a
+    // poison bit pattern showing through a take means the overwrite
+    // was not total.
+    let mut rng = SplitMix64::new(0x900C_0001);
+    for case in 0..200 {
+        let pool = ReplyPool::new(1 + rng.next_below(24) as usize);
+        let mut live: Vec<(PooledVec, Vec<f32>)> = Vec::new();
+        for step in 0..60 {
+            if rng.next_f64() < 0.6 || live.is_empty() {
+                let n = rng.next_below(40) as usize;
+                let data: Vec<f32> = (0..n)
+                    .map(|_| {
+                        // Arbitrary bit patterns except the poison
+                        // sentinel itself (kept distinguishable).
+                        let mut b = rng.next_u64() as u32;
+                        if b == POISON_BITS {
+                            b ^= 1;
+                        }
+                        f32::from_bits(b)
+                    })
+                    .collect();
+                let v = pool.take_copy(&data);
+                assert_eq!(v.len(), data.len(), "case {case} step {step}: length");
+                for (i, (a, b)) in v.iter().zip(&data).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "case {case} step {step} elem {i}: pooled copy diverged"
+                    );
+                }
+                assert!(
+                    v.iter().all(|x| x.to_bits() != POISON_BITS),
+                    "case {case} step {step}: poison leaked through a take"
+                );
+                live.push((v, data));
+            } else {
+                // Drop a random live buffer back into the pool; the
+                // survivors must be untouched by the recycling.
+                let i = rng.next_below(live.len() as u64) as usize;
+                live.swap_remove(i);
+                for (j, (v, want)) in live.iter().enumerate() {
+                    // Bit-level compare: the random payloads include
+                    // NaNs, where `==` would lie.
+                    assert!(
+                        v.len() == want.len()
+                            && v.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "case {case} step {step}: drop corrupted live buffer {j}"
+                    );
+                }
+            }
+        }
+        drop(live);
+        assert!(
+            pool.recycled() > 0,
+            "case {case}: pool never recycled a buffer — the zero-allocation \
+             path is vacuous"
+        );
+    }
+}
+
+#[test]
+fn prop_fleet_replies_identical_with_and_without_the_sharded_hotpath() {
+    // The same deterministic trace through the sharded/pooled plane and
+    // the global-lock/allocating control: outputs bit-identical request
+    // for request (the surrogate executors are deterministic, so any
+    // divergence is a pooling or cache-striping bug), accounting equal.
+    let run = |global_hotpath: bool| {
+        let reg = Registry {
+            instances: vec![
+                BoardInstance::synthetic(0, "kws", 80.0, 10.0, 1.5),
+                BoardInstance::synthetic(1, "ad", 40.0, 5.0, 1.5),
+            ],
+        };
+        let cfg = FleetConfig {
+            cache_cap: 64,
+            work_stealing: false,
+            global_hotpath,
+            ..Default::default()
+        };
+        let fleet = Fleet::start(reg, cfg).unwrap();
+        let handle = fleet.handle();
+        let mut rng = SplitMix64::new(0x1DE7_0001);
+        // A small pool of inputs per task so repeats occur and the
+        // cache path (hits through pooled buffers) is exercised too.
+        let inputs: Vec<(&str, Vec<Vec<f32>>)> = ["kws", "ad"]
+            .into_iter()
+            .map(|task| {
+                let dim = tinyml_codesign::data::feature_dim(task);
+                let pool: Vec<Vec<f32>> = (0..4)
+                    .map(|_| {
+                        (0..dim).map(|_| rng.next_below(64) as f32 / 16.0).collect()
+                    })
+                    .collect();
+                (task, pool)
+            })
+            .collect();
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        for i in 0..120u32 {
+            let (task, pool) = &inputs[rng.next_below(2) as usize];
+            let x = pool[rng.next_below(4) as usize].clone();
+            let tag = RequestTag::new(i % 4, random_priority(&mut rng));
+            let r = handle.infer_tagged(task, x, tag).unwrap();
+            outs.push(r.output.to_vec());
+        }
+        let summary = fleet.shutdown();
+        (outs, summary.snapshot.served, summary.snapshot.cache.hits)
+    };
+    let (a, served_a, hits_a) = run(false);
+    let (b, served_b, hits_b) = run(true);
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x, y, "request {i}: pooled reply diverged from unpooled");
+    }
+    assert_eq!(served_a, served_b, "served accounting diverged");
+    assert_eq!(hits_a, hits_b, "cache-hit accounting diverged");
+    assert!(hits_a > 0, "trace never hit the cache — property is vacuous");
+}
+
+#[test]
+fn prop_sharded_telemetry_merge_matches_global_collector() {
+    // Random board counts, trace lengths, and seeds through the shared
+    // lossless-merge harness (`telemetry::assert_merge_equivalence` —
+    // the same driver the telemetry unit test and bench part 3 run at
+    // their own sizes): the sharded collector's merged snapshot must
+    // reproduce the global-lock collector's per-class served/shed and
+    // p50/p99 (and tenants) exactly while no reservoir saturates.
+    let mut rng = SplitMix64::new(0x5AAD_0002);
+    for _case in 0..20 {
+        let boards = 1 + rng.next_below(6) as usize;
+        let batches = 50 + rng.next_below(250) as usize;
+        tinyml_codesign::fleet::telemetry::assert_merge_equivalence(
+            boards,
+            batches,
+            rng.next_u64(),
+        );
     }
 }
 
