@@ -26,6 +26,12 @@
 //!   merge must reproduce the global collector's per-class
 //!   served/shed counts and p50/p99 (and tenant counts) *exactly* —
 //!   the refactor loses no events.
+//! * **Part 4 — tracing overhead.**  The sharded cache-off leg re-run
+//!   with lifecycle tracing sampling 1 request in 16
+//!   (`FleetConfig::trace_sample`): stage histograms, drift, and event
+//!   rings all live.  The `traced_over_untraced_throughput` ratio is a
+//!   second gated headline; the inline floor is **≥ 0.9x** — sampled
+//!   tracing must stay within 10% of the untraced plane.
 //!
 //! Lock contention only exists with real parallelism: below 4 hardware
 //! threads the A/B measures scheduler timeslicing, not locking, so the
@@ -63,6 +69,10 @@ struct RunStats {
     throughput_rps: f64,
     ns_per_request: f64,
     class_served: Vec<u64>,
+    /// Completed spans folded into the stage histograms (0 untraced).
+    stage_spans: u64,
+    /// Batches covered by the flow-vs-measured drift accumulators.
+    drift_batches: u64,
 }
 
 impl RunStats {
@@ -86,7 +96,12 @@ impl RunStats {
 /// nanosecond is serving-plane software; `cache_cap > 0` additionally
 /// routes 3 of 4 requests through the memo (the 4th is a fresh input,
 /// so workers, telemetry, and cache inserts stay on the clock too).
-fn run_saturation(global_hotpath: bool, cache_cap: usize, per_client: usize) -> RunStats {
+fn run_saturation(
+    global_hotpath: bool,
+    cache_cap: usize,
+    per_client: usize,
+    trace_sample: usize,
+) -> RunStats {
     let reg = Registry {
         instances: (0..BOARDS)
             .map(|id| BoardInstance::synthetic(id, "ad", 0.0, 0.0, 1.0))
@@ -104,6 +119,7 @@ fn run_saturation(global_hotpath: bool, cache_cap: usize, per_client: usize) -> 
         autoscale: None,
         fifo_queues: false,
         global_hotpath,
+        trace_sample,
     };
     let fleet = Fleet::start(reg, cfg).unwrap();
     let dim = tinyml_codesign::data::feature_dim("ad");
@@ -172,6 +188,20 @@ fn run_saturation(global_hotpath: bool, cache_cap: usize, per_client: usize) -> 
         throughput_rps: measured as f64 / wall_s,
         ns_per_request: wall_s * 1e9 / measured as f64,
         class_served: snap.classes.iter().map(|c| c.served).collect(),
+        // Every stage folds one span per sampled request; queue_wait's
+        // count is the canonical tally.
+        stage_spans: snap
+            .classes
+            .iter()
+            .filter_map(|c| c.stages.as_ref())
+            .map(|set| set[0].count)
+            .sum(),
+        drift_batches: snap
+            .per_board
+            .iter()
+            .filter_map(|b| b.drift)
+            .map(|d| d.batches)
+            .sum(),
     }
 }
 
@@ -208,8 +238,8 @@ fn main() {
     );
 
     println!("[bench] part 1: cache off — telemetry + reply path A/B");
-    let off_global = run_saturation(true, 0, per_client);
-    let off_sharded = run_saturation(false, 0, per_client);
+    let off_global = run_saturation(true, 0, per_client, 0);
+    let off_sharded = run_saturation(false, 0, per_client, 0);
     let off_ratio = off_sharded.throughput_rps / off_global.throughput_rps.max(1e-9);
     for (tag, r) in [("global ", &off_global), ("sharded", &off_sharded)] {
         println!(
@@ -223,8 +253,8 @@ fn main() {
         "[bench] part 2: cache on — {HOT_SET}-input hot set, 75% repeats / 25% \
          fresh, cap 2048 (16 stripes sharded vs 1 global)"
     );
-    let on_global = run_saturation(true, 2048, per_client);
-    let on_sharded = run_saturation(false, 2048, per_client);
+    let on_global = run_saturation(true, 2048, per_client, 0);
+    let on_sharded = run_saturation(false, 2048, per_client, 0);
     let headline = on_sharded.throughput_rps / on_global.throughput_rps.max(1e-9);
     for (tag, r) in [("global ", &on_global), ("sharded", &on_sharded)] {
         println!(
@@ -240,6 +270,32 @@ fn main() {
     println!(
         "[bench] part 3: telemetry merge equivalence OK — {eq_batches} batches, \
          per-class served/shed/p50/p99 and tenants exact"
+    );
+
+    const TRACE_EVERY: usize = 16;
+    println!(
+        "[bench] part 4: tracing — sampled 1-in-{TRACE_EVERY} vs the untraced \
+         sharded cache-off leg"
+    );
+    let traced = run_saturation(false, 0, per_client, TRACE_EVERY);
+    let trace_ratio = traced.throughput_rps / off_sharded.throughput_rps.max(1e-9);
+    // The sampler is one fleet-wide counter and every submit consults it
+    // exactly once, so a shed-free closed loop folds exactly 1-in-N.
+    assert_eq!(
+        traced.stage_spans,
+        traced.submitted / TRACE_EVERY as u64,
+        "sampled spans must be exactly 1-in-{TRACE_EVERY} of submits"
+    );
+    assert!(traced.drift_batches > 0, "tracing must accumulate exec drift");
+    println!(
+        "[bench]   traced : {:>9.0} req/s  {:>7.0} ns/req  ({} spans, {} drift \
+         batches)",
+        traced.throughput_rps, traced.ns_per_request, traced.stage_spans,
+        traced.drift_batches
+    );
+    println!(
+        "[bench]   traced/untraced (cache off) = {trace_ratio:.3}x  (headline; \
+         floor 0.9)"
     );
 
     let mut fields = vec![
@@ -267,6 +323,18 @@ fn main() {
             ]),
         ),
         ("sharded_over_global_throughput", num(headline)),
+        (
+            "tracing",
+            obj(vec![
+                ("sample_every", num(TRACE_EVERY as f64)),
+                ("untraced", off_sharded.to_json()),
+                ("traced", traced.to_json()),
+                ("traced_spans", num(traced.stage_spans as f64)),
+                ("drift_batches", num(traced.drift_batches as f64)),
+                ("traced_over_untraced", num(trace_ratio)),
+            ]),
+        ),
+        ("traced_over_untraced_throughput", num(trace_ratio)),
         (
             "telemetry_merge",
             obj(vec![
@@ -314,9 +382,19 @@ fn main() {
             off_ratio >= 0.8,
             "cache-off sharded path regressed vs global: {off_ratio:.3}x"
         );
+        // The tracing headline: sampling 1-in-16 must keep >= 0.9x the
+        // untraced throughput (the unsampled path is one branch).
+        assert!(
+            trace_ratio >= 0.9,
+            "sampled tracing costs too much: {trace_ratio:.3}x ({:.0} vs {:.0} \
+             req/s untraced)",
+            traced.throughput_rps,
+            off_sharded.throughput_rps
+        );
         println!(
             "[bench] OK: cache-on sharded/global {headline:.3}x >= 1.3, cache-off \
-             {off_ratio:.3}x >= 0.8, merge exact"
+             {off_ratio:.3}x >= 0.8, traced/untraced {trace_ratio:.3}x >= 0.9, \
+             merge exact"
         );
     } else {
         println!(

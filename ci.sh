@@ -43,9 +43,20 @@ run env BENCH_QUICK=1 cargo bench --bench fleet
 # Hot-path self-check: 8-client submit saturation, lock-sharded
 # telemetry + striped cache + pooled replies vs the global-lock A/B
 # plane (floor: >= 1.3x throughput on >= 4 hardware threads; the
-# telemetry merge-equivalence assertions run regardless).  Emits
+# telemetry merge-equivalence assertions run regardless), plus the
+# lifecycle-tracing leg (1-in-16 sampling >= 0.9x untraced).  Emits
 # BENCH_hotpath.json.
 run env BENCH_QUICK=1 cargo bench --bench hotpath
+
+# Tracing smoke: a sampled fleet run must round-trip (stage histograms,
+# drift, and shed reasons ride the normal report), and the event-ring
+# dump must be valid JSONL — every non-empty line parses as one strict
+# JSON object (the binary self-checks each line too; this re-checks at
+# the consumer's side of the pipe).
+run cargo run --release -q -- fleet --trace-sample 16 --requests 200 > /dev/null
+echo "==> fleet --trace-sample 16 --trace-dump | JSONL parse check"
+cargo run --release -q -- fleet --trace-sample 16 --requests 200 --trace-dump \
+  | awk 'NF { if ($0 !~ /^\{.*\}$/) { print "bad JSONL line: " $0; exit 1 } n++ } END { print "==> trace-dump: " n+0 " JSONL event lines" }'
 
 # Bench-regression gate: first prove the gate rejects injected
 # regressions (self-test), then hold the freshly emitted BENCH_* headline

@@ -22,7 +22,7 @@ use tinyml_codesign::error::Result;
 use tinyml_codesign::fleet::worker::precise_sleep;
 use tinyml_codesign::fleet::{
     AutoscaleConfig, BoardInstance, Fleet, FleetConfig, Policy, Priority, Registry,
-    RequestTag, RouteError,
+    RequestTag, RouteError, Stage,
 };
 
 const TIME_SCALE: f64 = 20.0;
@@ -206,6 +206,86 @@ fn main() -> Result<()> {
             if fifo { "fifo (control)" } else { "class-aware" }
         );
         print!("{}", summary.render());
+    }
+
+    // Tracing finale: the mixed workload again with 1-in-4 lifecycle
+    // sampling.  The per-stage breakdown separates where time goes
+    // (queue wait vs batch-window wait vs device hold vs reply copy),
+    // the drift table ranks boards by how far measured device time sits
+    // from the registry's flow prediction (`ratio` ~ 1.0 means the
+    // analytical model the router/autoscaler act on is honest), and the
+    // first few event-ring entries show the JSONL shape `fleet
+    // --trace-dump` emits.
+    println!("\n-- trace demo: 1-in-4 sampled lifecycle tracing --");
+    let cfg = FleetConfig {
+        queue_cap: 128,
+        time_scale: TIME_SCALE,
+        trace_sample: 4,
+        ..Default::default()
+    };
+    let fleet = Fleet::start(Registry::standard_fleet()?, cfg)?;
+    let handle = fleet.handle();
+    let mut pending = Vec::new();
+    for (task, x) in workload(0x7ACE, 600) {
+        loop {
+            match handle.submit(task, x.clone()) {
+                Ok(rx) => {
+                    pending.push(rx);
+                    break;
+                }
+                Err(RouteError::Overloaded) => {
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+                Err(e) => {
+                    println!("rejected: {e}");
+                    break;
+                }
+            }
+        }
+    }
+    for rx in pending {
+        let _ = rx.recv();
+    }
+    let summary = fleet.shutdown();
+    let snap = &summary.snapshot;
+    println!("stage latency over sampled requests (p50/p99 us, log2-bucket edges):");
+    println!(
+        "  {:<12} {:>7} {:>20} {:>20} {:>20} {:>20}",
+        "class", "spans", "queue_wait", "window_wait", "exec", "reply"
+    );
+    for c in &snap.classes {
+        if let Some(set) = &c.stages {
+            print!("  {:<12} {:>7}", c.class.to_string(), set[0].count);
+            for st in Stage::ALL {
+                let h = &set[st.idx()];
+                print!(
+                    " {:>9.0}/{:<10.0}",
+                    h.percentile_us(0.50),
+                    h.percentile_us(0.99)
+                );
+            }
+            println!();
+        }
+    }
+    println!("flow-vs-measured exec drift (worst boards first):");
+    let mut drifted: Vec<&tinyml_codesign::fleet::BoardSnapshot> =
+        snap.per_board.iter().filter(|b| b.drift.is_some()).collect();
+    drifted.sort_by(|a, b| {
+        let ka = (a.drift.unwrap().ratio - 1.0).abs();
+        let kb = (b.drift.unwrap().ratio - 1.0).abs();
+        kb.partial_cmp(&ka).unwrap()
+    });
+    for b in drifted.iter().take(4) {
+        let d = b.drift.unwrap();
+        println!(
+            "  {:<28} {:>4} batches  predicted {:>10.0} us  observed {:>10.0} us  \
+             ratio {:.3}",
+            b.label, d.batches, d.predicted_exec_us, d.observed_exec_us, d.ratio
+        );
+    }
+    println!("event ring (first 5 of {} retained events, JSONL):", summary.trace_events.len());
+    for e in summary.trace_events.iter().take(5) {
+        println!("  {}", e.to_json().to_json());
     }
     Ok(())
 }

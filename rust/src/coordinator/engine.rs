@@ -129,6 +129,13 @@ impl EngineHandle {
 /// deadline and returns the next item, or `None` when the source is dry
 /// for this window.  Shared by the engine loop and the fleet workers so
 /// every serving path batches identically.
+///
+/// Lifecycle-trace boundary: the instant this function returns is the
+/// "batch-window close" edge.  The fleet worker stamps it into every
+/// traced rider's [`crate::fleet::TraceCtx`] right after the call (and
+/// stamps dequeue inside its `next` closures), so `window_wait` measures
+/// exactly the time spent inside this window — the engine loop itself
+/// carries no per-request tracing.
 pub fn fill_window<T>(
     first: T,
     policy: &BatchPolicy,

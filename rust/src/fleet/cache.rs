@@ -284,6 +284,10 @@ impl ResultCache {
     /// non-`Interactive` entries and is turned away (not admitted) when
     /// its shard holds nothing but interactive working set.  Each
     /// insert is one executed cache miss (see [`Self::get_copy`]).
+    /// Returns `true` when the entry was admitted (inserted or
+    /// refreshed); `false` when a `Batch` insert was turned away — the
+    /// denial the tracing layer records as a `cache_insert_denied`
+    /// fleet event.
     pub fn insert_tagged(
         &self,
         task: &str,
@@ -291,7 +295,7 @@ impl ResultCache {
         output: &[f32],
         top1: usize,
         class: Priority,
-    ) {
+    ) -> bool {
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut inner = self.shard(key).lock().unwrap();
         // Reborrow through the guard once so `map` and `lru` can be
@@ -312,7 +316,7 @@ impl ResultCache {
             if class != Priority::Interactive {
                 inner.lru_unprotected.insert(tick, key);
             }
-            return;
+            return true;
         }
         while inner.map.len() >= inner.cap {
             // Oldest evictable entry, O(log n): Batch pops the head of
@@ -326,7 +330,7 @@ impl ResultCache {
             let Some((t, k)) = victim else {
                 // Batch vs a wall of interactive working set: not
                 // admitted.
-                return;
+                return false;
             };
             inner.lru.remove(&t);
             inner.lru_unprotected.remove(&t);
@@ -337,9 +341,11 @@ impl ResultCache {
         if class != Priority::Interactive {
             inner.lru_unprotected.insert(tick, key);
         }
+        true
     }
 
-    /// [`Self::insert_tagged`] with the default (`Standard`) class.
+    /// [`Self::insert_tagged`] with the default (`Standard`) class
+    /// (Standard inserts are always admitted).
     pub fn insert(&self, task: &str, key: u64, output: &[f32], top1: usize) {
         self.insert_tagged(task, key, output, top1, Priority::Standard);
     }
@@ -488,10 +494,13 @@ mod tests {
             c.insert_tagged("kws", k, &[i as f32], 0, Priority::Interactive);
         }
         // A 20-key batch sweep over the full cache: nothing admitted,
-        // nothing evicted.
+        // nothing evicted — and every denial is reported to the caller.
         for i in 100..120u32 {
             let k = ResultCache::key("kws", &[i as f32]);
-            c.insert_tagged("kws", k, &[i as f32], 0, Priority::Batch);
+            assert!(
+                !c.insert_tagged("kws", k, &[i as f32], 0, Priority::Batch),
+                "batch insert {i} must report denial"
+            );
         }
         for (i, &k) in ik.iter().enumerate() {
             assert_eq!(
@@ -502,7 +511,7 @@ mod tests {
         // Standard traffic can still reclaim a cold interactive entry
         // (plain LRU), so the shield is not a leak.
         let sk = ResultCache::key("kws", &[500.0]);
-        c.insert_tagged("kws", sk, &[5.0], 0, Priority::Standard);
+        assert!(c.insert_tagged("kws", sk, &[5.0], 0, Priority::Standard));
         assert_eq!(c.stats().entries, 3);
         assert!(c.get("kws", sk).is_some());
     }

@@ -75,6 +75,7 @@ pub mod queue;
 pub mod registry;
 pub mod router;
 pub mod telemetry;
+pub mod trace;
 pub mod worker;
 
 pub use autoscale::{AutoscaleConfig, ScaleAction, ScaleEvent};
@@ -83,9 +84,16 @@ pub use queue::{admit_limit, BoardQueue, FleetRequest, Priority, RequestTag};
 pub use registry::{BoardInstance, Registry};
 pub use router::{Policy, RouteError, Router};
 pub use telemetry::{
-    ClassSnapshot, FleetSnapshot, ReplySample, Telemetry, TelemetrySink,
+    BoardSnapshot, ClassSnapshot, DriftSnapshot, FleetSnapshot, ReplySample,
+    Telemetry, TelemetrySink,
 };
-pub use worker::{DataflowTiming, PeerList, SimBoardExecutor, WorkerConfig};
+pub use trace::{
+    EventLog, EventRing, FleetEvent, Sampler, ShedReason, Stage, StageHistogram,
+    TraceCtx, TraceEvent,
+};
+pub use worker::{
+    DataflowTiming, PeerList, SimBoardExecutor, WorkerConfig, WorkerTraceConfig,
+};
 
 use crate::coordinator::engine::{BatchPolicy, Reply};
 use crate::coordinator::pool::{PooledVec, ReplyPool};
@@ -129,6 +137,15 @@ pub struct FleetConfig {
     /// the A/B control `benches/hotpath.rs` measures the sharded plane
     /// against (`tinyml-codesign fleet --global-hotpath`).
     pub global_hotpath: bool,
+    /// Per-request lifecycle tracing: sample one request in
+    /// `trace_sample` (0 = off, 1 = every request).  A sampled request
+    /// carries a [`TraceCtx`] stamped at submit, dequeue, window close,
+    /// and reply; workers fold the completed spans into per-shard
+    /// stage-latency histograms and a flow-vs-measured drift
+    /// accumulator, and discrete fleet events (scale, shed, steal,
+    /// cache-insert-denied) land in a bounded event log ([`trace`]).
+    /// An unsampled request pays exactly one branch.
+    pub trace_sample: usize,
 }
 
 impl Default for FleetConfig {
@@ -143,6 +160,7 @@ impl Default for FleetConfig {
             autoscale: None,
             fifo_queues: false,
             global_hotpath: false,
+            trace_sample: 0,
         }
     }
 }
@@ -197,7 +215,17 @@ pub(crate) struct FleetState {
     /// Serializes add/retire end to end so slot ids stay aligned across
     /// registry, telemetry, queues, workers, and lifecycle.
     scale_lock: Mutex<()>,
+    /// Tracing layer (`trace_sample > 0`): the 1-in-N sampler consulted
+    /// on every submit and the fleet event log.  `None` = tracing off —
+    /// the submit path pays one branch, the workers one per edge.
+    pub(crate) trace: Option<FleetTrace>,
     pub(crate) t0: Instant,
+}
+
+/// Shared tracing state: sampler + event log ([`trace`]).
+pub(crate) struct FleetTrace {
+    pub(crate) sampler: Sampler,
+    pub(crate) log: Arc<EventLog>,
 }
 
 /// Stop signal for the controller thread (flag + condvar for a prompt
@@ -230,12 +258,18 @@ fn spawn_worker(
     let sink = TelemetrySink::resolve(&state.telemetry, inst.id);
     let cache = state.cache.clone();
     let cfg = state.config;
+    // Resolve the board's event ring once, like the telemetry sink.
+    let trace = state.trace.as_ref().map(|t| WorkerTraceConfig {
+        ring: t.log.ring(inst.id),
+        time_scale: cfg.time_scale,
+    });
     std::thread::spawn(move || {
         let exec = inst.executor(cfg.batch.max_batch, cfg.time_scale);
         let wcfg = WorkerConfig {
             batch: cfg.batch,
             work_stealing: cfg.work_stealing,
             pooled_replies: !cfg.global_hotpath,
+            trace,
         };
         worker::run_worker(&inst, exec, &own, &peers, &wcfg, &sink, cache.as_deref())
     })
@@ -273,6 +307,10 @@ pub(crate) fn add_replica_inner(
     let id = inst.id;
     let tid = state.telemetry.add_board();
     debug_assert_eq!(tid, id, "telemetry slot out of line with registry id");
+    if let Some(t) = &state.trace {
+        let rid = t.log.add_ring();
+        debug_assert_eq!(rid, id, "event ring out of line with registry id");
+    }
     let q = Arc::new(BoardQueue::with_mode(cfg.queue_cap, !cfg.fifo_queues));
     state
         .lifecycle
@@ -318,6 +356,13 @@ pub(crate) fn add_replica_inner(
         reason: reason.to_string(),
         replicas_after,
     });
+    if let Some(t) = &state.trace {
+        t.log.record_fleet(FleetEvent::ScaleUp {
+            task: task.to_string(),
+            instance: id,
+            reason: reason.to_string(),
+        });
+    }
     Ok(id)
 }
 
@@ -382,12 +427,19 @@ pub(crate) fn retire_replica_inner(
     state.events.lock().unwrap().push(ScaleEvent {
         t_s: state.t0.elapsed().as_secs_f64(),
         action: ScaleAction::Down,
-        task,
+        task: task.clone(),
         instance: id,
         label,
         reason: reason.to_string(),
         replicas_after,
     });
+    if let Some(t) = &state.trace {
+        t.log.record_fleet(FleetEvent::ScaleDown {
+            task,
+            instance: id,
+            reason: reason.to_string(),
+        });
+    }
     Ok(served)
 }
 
@@ -504,6 +556,10 @@ impl Fleet {
             ),
             events: Mutex::new(Vec::new()),
             scale_lock: Mutex::new(()),
+            trace: (config.trace_sample > 0).then(|| FleetTrace {
+                sampler: Sampler::new(config.trace_sample),
+                log: Arc::new(EventLog::new(n)),
+            }),
             t0: now,
         });
         let peer_of: Vec<PeerList> = {
@@ -573,6 +629,13 @@ impl Fleet {
         snapshot_of(&self.state)
     }
 
+    /// Events currently retained in the fleet event log, merged across
+    /// every ring and sorted by sequence number (empty when tracing is
+    /// off — `trace_sample == 0`).
+    pub fn trace_events(&self) -> Vec<TraceEvent> {
+        self.state.trace.as_ref().map(|t| t.log.dump_sorted()).unwrap_or_default()
+    }
+
     /// Snapshot *and* roll the per-phase high-water marks over (queue
     /// peaks reset to current depth, telemetry depth peaks to zero) —
     /// use at bench phase boundaries so each phase reports its own peak
@@ -617,7 +680,17 @@ impl Fleet {
                 l.stopped = Some(now);
             }
         }
-        FleetSummary { snapshot: snapshot_of(&self.state), served_per_worker }
+        let trace_events = self
+            .state
+            .trace
+            .as_ref()
+            .map(|t| t.log.dump_sorted())
+            .unwrap_or_default();
+        FleetSummary {
+            snapshot: snapshot_of(&self.state),
+            served_per_worker,
+            trace_events,
+        }
     }
 }
 
@@ -625,6 +698,9 @@ impl Fleet {
 pub struct FleetSummary {
     pub snapshot: FleetSnapshot,
     pub served_per_worker: Vec<u64>,
+    /// Final event-log contents, sorted by sequence number (empty when
+    /// tracing was off).
+    pub trace_events: Vec<TraceEvent>,
 }
 
 impl FleetSummary {
@@ -666,21 +742,43 @@ impl FleetHandle {
         x: Vec<f32>,
         tag: RequestTag,
     ) -> Result<mpsc::Receiver<Reply>, RouteError> {
-        let res = self.submit_inner(task, x, tag);
-        if let Err(RouteError::Overloaded | RouteError::SloUnattainable) = &res {
-            self.state.telemetry.record_shed(tag.priority);
+        match self.submit_inner(task, x, tag) {
+            Ok(rx) => Ok(rx),
+            Err((e, reason)) => {
+                // A definitive refusal is a shed, counted under its
+                // reason; an unknown task is a caller bug, not a shed.
+                if let Some(reason) = reason {
+                    self.state.telemetry.record_shed(tag.priority, reason);
+                    if let Some(t) = &self.state.trace {
+                        t.log.record_fleet(FleetEvent::Shed {
+                            class: tag.priority,
+                            reason,
+                        });
+                    }
+                }
+                Err(e)
+            }
         }
-        res
     }
 
+    /// The error side carries the shed reason to record (`None` for
+    /// non-shed refusals like an unknown task) so `submit_tagged` can
+    /// count it without re-deriving the classification.
     fn submit_inner(
         &self,
         task: &str,
         x: Vec<f32>,
         tag: RequestTag,
-    ) -> Result<mpsc::Receiver<Reply>, RouteError> {
+    ) -> Result<mpsc::Receiver<Reply>, (RouteError, Option<ShedReason>)> {
+        // One branch when tracing is off (`state.trace` is `None`); with
+        // tracing on, one relaxed fetch_add decides sampling.
+        let mut trace_ctx = match &self.state.trace {
+            Some(t) if t.sampler.sample() => Some(Box::new(TraceCtx::new())),
+            _ => None,
+        };
         let mut cache_key = None;
         if let Some(cache) = &self.state.cache {
+            let probe_start = trace_ctx.as_ref().map(|_| Instant::now());
             let key = ResultCache::key(task, &x);
             // Hits copy into a pooled reply buffer (returned to the
             // pool when the caller drops the reply) and, for
@@ -698,6 +796,8 @@ impl FleetHandle {
                 (output, top1)
             });
             if let Some((output, top1)) = hit {
+                // A cache hit ends the request's lifecycle here; its
+                // trace context (if any) is dropped, never folded.
                 let (tx, rx) = mpsc::channel();
                 let _ = tx.send(Reply {
                     output,
@@ -709,6 +809,9 @@ impl FleetHandle {
                 return Ok(rx);
             }
             cache_key = Some(key);
+            if let (Some(t), Some(p0)) = (trace_ctx.as_deref_mut(), probe_start) {
+                t.cache_lookup_us = p0.elapsed().as_micros() as u32;
+            }
         }
         // select_class() reads a depth snapshot; the push re-checks the
         // class bound (and closed-ness) under the queue lock, so a
@@ -716,12 +819,14 @@ impl FleetHandle {
         // overfill, never land on a retiring board.  try_push hands the
         // request back on failure, so the input is never copied.
         let (tx, rx) = mpsc::channel();
+        let route_start = trace_ctx.as_ref().map(|_| Instant::now());
         let mut req = FleetRequest {
             x,
             reply: tx,
             enqueued: Instant::now(),
             cache_key,
             tag,
+            trace: trace_ctx,
         };
         let fifo = self.state.config.fifo_queues;
         let plane = self.state.plane.read().unwrap();
@@ -751,13 +856,31 @@ impl FleetHandle {
                 Priority::Batch => None,
             };
             let ahead: &[usize] = ahead_own.as_deref().unwrap_or(&depths);
-            let idx = plane.router.select_class(task, &depths, ahead, tag.priority)?;
+            let idx = match plane.router.select_class(task, &depths, ahead, tag.priority)
+            {
+                Ok(idx) => idx,
+                Err(e) => {
+                    let reason = match e {
+                        RouteError::Overloaded => Some(ShedReason::AdmissionTier),
+                        RouteError::SloUnattainable => Some(ShedReason::SloPredict),
+                        RouteError::UnknownTask => None,
+                    };
+                    return Err((e, reason));
+                }
+            };
+            // Cumulative, so the surviving value covers admission/route
+            // up to the winning push (retries included).
+            if let (Some(t), Some(r0)) = (req.trace.as_deref_mut(), route_start) {
+                t.route_us = r0.elapsed().as_micros() as u32;
+            }
             match plane.queues[idx].try_push(req) {
                 Ok(()) => return Ok(rx),
                 Err(r) => req = r,
             }
         }
-        Err(RouteError::Overloaded)
+        // Admission said yes but every retry found the queue closed or
+        // re-filled: a queue-full shed, distinct from the tier refusal.
+        Err((RouteError::Overloaded, Some(ShedReason::QueueFull)))
     }
 
     /// Blocking round trip with the default tag.
@@ -1057,6 +1180,75 @@ mod tests {
             assert_eq!(a.shed, b.shed, "class {}", a.class);
         }
         assert_eq!(sharded.snapshot.tenants.len(), global.snapshot.tenants.len());
+    }
+
+    #[test]
+    fn tracing_samples_spans_events_and_drift() {
+        let reg = Registry {
+            instances: vec![
+                BoardInstance::synthetic(0, "kws", 200.0, 40.0, 1.0),
+                BoardInstance::synthetic(1, "kws", 200.0, 40.0, 2.0),
+            ],
+        };
+        let cfg = FleetConfig {
+            trace_sample: 1,
+            policy: Policy::EnergyAware,
+            time_scale: 5.0,
+            ..Default::default()
+        };
+        let fleet = Fleet::start(reg, cfg).unwrap();
+        let handle = fleet.handle();
+        let mut rxs = Vec::new();
+        for _ in 0..60 {
+            rxs.push(handle.submit("kws", input_for("kws")).unwrap());
+        }
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let summary = fleet.shutdown();
+        assert_eq!(summary.snapshot.served, 60);
+        // Every request was sampled (1-in-1): the Standard class must
+        // expose stage histograms with 60 completed spans per stage.
+        let stages =
+            summary.snapshot.classes[1].stages.as_ref().expect("traced stages");
+        for h in stages.iter() {
+            assert_eq!(h.count, 60, "each stage folds one span per request");
+        }
+        // Drift accrues on every executed batch somewhere in the fleet.
+        let drift_batches: u64 = summary
+            .snapshot
+            .per_board
+            .iter()
+            .filter_map(|b| b.drift)
+            .map(|d| d.batches)
+            .sum();
+        assert!(drift_batches >= 1, "at least one batch executed");
+        assert!(summary
+            .snapshot
+            .per_board
+            .iter()
+            .filter_map(|b| b.drift)
+            .all(|d| d.predicted_exec_us > 0.0));
+        // The event log dump is seq-sorted (steal events are timing-
+        // dependent, so only the ordering invariant is asserted).
+        let events = &summary.trace_events;
+        assert!(events.windows(2).all(|w| w[0].seq < w[1].seq), "sorted by seq");
+        // The JSON snapshot carries the trace fields.
+        let json = summary.snapshot.to_json().to_json();
+        assert!(json.contains("\"stages\""), "{json}");
+        assert!(json.contains("\"queue_wait\""), "{json}");
+        assert!(json.contains("\"drift\""), "{json}");
+        // Untraced control: no stage histograms, no drift.
+        let reg = Registry {
+            instances: vec![BoardInstance::synthetic(0, "kws", 200.0, 40.0, 1.0)],
+        };
+        let fleet = Fleet::start(reg, FleetConfig::default()).unwrap();
+        let handle = fleet.handle();
+        handle.infer("kws", input_for("kws")).unwrap();
+        let summary = fleet.shutdown();
+        assert!(summary.snapshot.classes.iter().all(|c| c.stages.is_none()));
+        assert!(summary.snapshot.per_board.iter().all(|b| b.drift.is_none()));
+        assert!(summary.trace_events.is_empty());
     }
 
     #[test]

@@ -33,6 +33,7 @@
 //! baseline `benches/fleet.rs` measures priority scheduling against, and
 //! the `FleetConfig::fifo_queues` escape hatch.
 
+use super::trace::TraceCtx;
 use crate::coordinator::engine::Reply;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -114,6 +115,10 @@ pub struct FleetRequest {
     /// Tenant + priority class; drives queue pickup, admission, and the
     /// per-class telemetry split.
     pub tag: RequestTag,
+    /// Lifecycle trace context, `Some` only for sampled requests
+    /// (`FleetConfig::trace_sample`).  Boxed so the unsampled hot path
+    /// carries one pointer-sized `None` and pays exactly one branch.
+    pub trace: Option<Box<TraceCtx>>,
 }
 
 /// Admission bound for `class` on a queue of capacity `cap` (total
@@ -440,6 +445,7 @@ mod tests {
                 enqueued: Instant::now(),
                 cache_key: None,
                 tag,
+                trace: None,
             },
             rx,
         )

@@ -26,7 +26,16 @@
 //!
 //! Shed counters are fleet-wide relaxed atomics in both modes (they are
 //! recorded by the *submit* path on definitive rejection, which has no
-//! shard of its own).  The board set is *growable*:
+//! shard of its own), split per class **and per [`ShedReason`]** so
+//! overload diagnosis can tell tiered admission, SLO-predicted
+//! infeasibility, and queue exhaustion apart.  When lifecycle tracing is
+//! on (`FleetConfig::trace_sample`), workers additionally fold sampled
+//! requests' stage spans into per-class [`StageHistogram`]s and a
+//! flow-vs-measured drift accumulator inside their own shard
+//! ([`TelemetrySink::record_trace`]); log2 bucket counts merge by
+//! element-wise addition, so the snapshot's merged histograms are
+//! bucket-exact against a single global collector in *both* telemetry
+//! modes.  The board set is *growable*:
 //! [`Telemetry::add_board`] appends a shard when the autoscaler spins up
 //! a replica, and retired replicas keep their slots so their history
 //! stays in the final report (the snapshot marks them inactive).
@@ -35,6 +44,9 @@ use super::autoscale::ScaleEvent;
 use super::cache::CacheStats;
 use super::queue::{Priority, N_CLASSES};
 use super::registry::Registry;
+use super::trace::{
+    stage_set_to_json, DriftSample, ShedReason, StageSet, TraceSample, N_SHED_REASONS,
+};
 use crate::data::prng::SplitMix64;
 use crate::report::json::{num, obj, s, Value};
 use std::collections::BTreeMap;
@@ -130,6 +142,18 @@ struct ShardStats {
     /// shard still tracks, and the snapshot flags it
     /// ([`FleetSnapshot::tenants_complete`]).
     tenant_dropped: bool,
+    /// Per-class stage-latency histograms over sampled requests
+    /// (board-scope: written in *both* telemetry modes, merged by
+    /// element-wise bucket addition at snapshot time — lossless).
+    stage: [StageSet; N_CLASSES],
+    /// Sampled requests folded into `stage`.
+    sampled: u64,
+    /// Flow-vs-measured drift over executed batches while tracing is
+    /// on: Σ predicted device hold (`latency + (n-1)·ii`, scaled) vs
+    /// Σ observed `exec` wall time, in µs.
+    drift_pred_us: f64,
+    drift_obs_us: u128,
+    drift_batches: u64,
 }
 
 impl ShardStats {
@@ -152,6 +176,11 @@ impl ShardStats {
             ],
             tenants: Vec::new(),
             tenant_dropped: false,
+            stage: Default::default(),
+            sampled: 0,
+            drift_pred_us: 0.0,
+            drift_obs_us: 0,
+            drift_batches: 0,
         }
     }
 
@@ -179,6 +208,24 @@ impl ShardStats {
         }
         for s in samples {
             self.lat.push(s.latency_us);
+        }
+    }
+
+    /// Fold sampled lifecycle spans + per-batch drift (board-scope,
+    /// both modes; only called while tracing is on).
+    fn apply_trace(&mut self, samples: &[TraceSample], drift: Option<DriftSample>) {
+        for t in samples {
+            let set = &mut self.stage[t.class.idx()];
+            set[0].record(t.queue_wait_us);
+            set[1].record(t.window_wait_us);
+            set[2].record(t.exec_us);
+            set[3].record(t.reply_us);
+            self.sampled += 1;
+        }
+        if let Some(d) = drift {
+            self.drift_batches += 1;
+            self.drift_pred_us += d.pred_us;
+            self.drift_obs_us += d.obs_us;
         }
     }
 
@@ -229,6 +276,12 @@ impl TelemetryShard {
         let mut st = self.stats.lock().unwrap();
         st.apply_board(samples, queue_us_sum, exec_us, energy_uj, stolen, peak, peak_class);
         st.apply_class_tenant(samples);
+    }
+
+    /// Fold sampled lifecycle spans and one batch's drift observation
+    /// into this shard (only called while tracing is on).
+    pub fn record_trace(&self, samples: &[TraceSample], drift: Option<DriftSample>) {
+        self.stats.lock().unwrap().apply_trace(samples, drift);
     }
 }
 
@@ -336,6 +389,16 @@ impl TelemetrySink {
             ),
         }
     }
+
+    /// Fold sampled lifecycle spans + drift.  Board-scope data, so both
+    /// sink modes land in the slot's own shard — the snapshot's stage
+    /// merge is identical either way (the A/B control stays honest).
+    pub fn record_trace(&self, samples: &[TraceSample], drift: Option<DriftSample>) {
+        match self {
+            TelemetrySink::Sharded(shard) => shard.record_trace(samples, drift),
+            TelemetrySink::Global(t, id) => t.record_trace(*id, samples, drift),
+        }
+    }
 }
 
 /// Shared collector; workers record (through their [`TelemetrySink`]),
@@ -347,10 +410,11 @@ pub struct Telemetry {
     /// `Some` = pre-PR global-lock mode (the A/B control); `None` =
     /// sharded (default).
     global: Option<GlobalAggs>,
-    /// Admission rejections per class (recorded by the submit path when
-    /// a request is definitively refused — the shed counters the bench
-    /// asserts on).  Lock-free in both modes.
-    shed: [AtomicU64; N_CLASSES],
+    /// Admission rejections per class **and per reason** (recorded by
+    /// the submit path when a request is definitively refused — the
+    /// shed counters the bench asserts on).  A class's total shed is
+    /// the sum over its reasons.  Lock-free in both modes.
+    shed: [[AtomicU64; N_SHED_REASONS]; N_CLASSES],
     t0: Instant,
 }
 
@@ -383,10 +447,27 @@ impl Telemetry {
         self.global.is_none()
     }
 
-    /// One admission rejection (`Overloaded` / `SloUnattainable`) of a
-    /// `class` request.
-    pub fn record_shed(&self, class: Priority) {
-        self.shed[class.idx()].fetch_add(1, Ordering::Relaxed);
+    /// One definitive rejection of a `class` request, classified by
+    /// [`ShedReason`] (admission tier vs SLO prediction vs queue
+    /// exhaustion).
+    pub fn record_shed(&self, class: Priority, reason: ShedReason) {
+        self.shed[class.idx()][reason.idx()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Per-reason shed counts for one class.
+    fn shed_reasons_of(&self, class: usize) -> [u64; N_SHED_REASONS] {
+        let mut out = [0u64; N_SHED_REASONS];
+        for (r, slot) in out.iter_mut().enumerate() {
+            *slot = self.shed[class][r].load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Fold sampled lifecycle spans + drift into slot `id`'s shard
+    /// (board-scope in both modes — see [`TelemetrySink::record_trace`]).
+    pub fn record_trace(&self, id: usize, samples: &[TraceSample], drift: Option<DriftSample>) {
+        let shard = self.boards.read().unwrap()[id].clone();
+        shard.record_trace(samples, drift);
     }
 
     /// Append a shard for a newly spawned replica; returns its id.
@@ -494,9 +575,18 @@ impl Telemetry {
         let mut class_saturated = [false; N_CLASSES];
         let mut tenant_map: BTreeMap<u32, u64> = BTreeMap::new();
         let mut tenants_complete = true;
+        // Stage histograms are board-scope (shard-resident in both
+        // telemetry modes), merged fleet-wide per class by element-wise
+        // bucket addition — lossless by construction.
+        let mut class_stage: [StageSet; N_CLASSES] = Default::default();
         let boards = self.boards.read().unwrap();
         for (i, shard) in boards.iter().enumerate() {
             let b = shard.stats.lock().unwrap();
+            for (c, set) in b.stage.iter().enumerate() {
+                for (st, h) in set.iter().enumerate() {
+                    class_stage[c][st].merge(h);
+                }
+            }
             if self.global.is_none() {
                 for (c, cl) in b.class.iter().enumerate() {
                     class_served[c] += cl.served;
@@ -523,6 +613,24 @@ impl Telemetry {
             served += b.served;
             energy += b.energy_uj_sum;
             lat.sort_by(|a, c| a.total_cmp(c));
+            let mut board_stage = StageSet::default();
+            for set in &b.stage {
+                for (st, h) in set.iter().enumerate() {
+                    board_stage[st].merge(h);
+                }
+            }
+            let stages =
+                (!board_stage.iter().all(|h| h.is_empty())).then(|| Box::new(board_stage));
+            let drift = (b.drift_batches > 0).then(|| DriftSnapshot {
+                batches: b.drift_batches,
+                predicted_exec_us: b.drift_pred_us,
+                observed_exec_us: b.drift_obs_us as f64,
+                ratio: if b.drift_pred_us > 0.0 {
+                    b.drift_obs_us as f64 / b.drift_pred_us
+                } else {
+                    0.0
+                },
+            });
             per_board.push(BoardSnapshot {
                 label: inst.label.clone(),
                 task: inst.task.clone(),
@@ -549,9 +657,21 @@ impl Telemetry {
                 },
                 depth_peak: b.depth_peak,
                 depth_peak_class: b.depth_peak_class,
+                stages,
+                drift,
             });
         }
         drop(boards);
+        let class_stages: Vec<Option<Box<StageSet>>> = class_stage
+            .into_iter()
+            .map(|set| {
+                if set.iter().any(|h| !h.is_empty()) {
+                    Some(Box::new(set))
+                } else {
+                    None
+                }
+            })
+            .collect();
         weighted.sort_by(|a, c| a.0.total_cmp(&c.0));
         let classes = match &self.global {
             // Pre-PR path: one fleet-wide reservoir per class.
@@ -561,12 +681,15 @@ impl Telemetry {
                     let agg = g.classes[p.idx()].lock().unwrap();
                     let mut lat = agg.lat.lat_us.clone();
                     lat.sort_by(|a, c| a.total_cmp(c));
+                    let shed_reasons = self.shed_reasons_of(p.idx());
                     ClassSnapshot {
                         class: p.name(),
                         served: agg.served,
-                        shed: self.shed[p.idx()].load(Ordering::Relaxed),
+                        shed: shed_reasons.iter().sum(),
+                        shed_reasons,
                         p50_us: percentile(&lat, 0.50),
                         p99_us: percentile(&lat, 0.99),
+                        stages: class_stages[p.idx()].clone(),
                     }
                 })
                 .collect(),
@@ -592,12 +715,15 @@ impl Telemetry {
                         let flat: Vec<f64> = vals.iter().map(|&(v, _)| v).collect();
                         (percentile(&flat, 0.50), percentile(&flat, 0.99))
                     };
+                    let shed_reasons = self.shed_reasons_of(c);
                     ClassSnapshot {
                         class: p.name(),
                         served: class_served[c],
-                        shed: self.shed[c].load(Ordering::Relaxed),
+                        shed: shed_reasons.iter().sum(),
+                        shed_reasons,
                         p50_us,
                         p99_us,
+                        stages: class_stages[c].clone(),
                     }
                 })
                 .collect(),
@@ -678,10 +804,26 @@ pub fn assert_merge_equivalence(n_boards: usize, batches: usize, seed: u64) -> u
         for t in [&sharded, &global] {
             t.record_batch(id, &samples, 7, 13, 1.0, 0, n, [0, n, 0]);
         }
+        // Sampled lifecycle spans: board-scope, so both modes record
+        // into the slot's shard and must merge identically.
+        if rng.next_below(3) == 0 {
+            let ts = TraceSample {
+                class: Priority::ALL[rng.next_below(3) as usize],
+                queue_wait_us: rng.next_below(1 << 20),
+                window_wait_us: rng.next_below(1 << 14),
+                exec_us: rng.next_below(1 << 16),
+                reply_us: rng.next_below(1 << 10),
+            };
+            let drift = DriftSample { pred_us: 100.0 + (n as f64 - 1.0) * 10.0, obs_us: 13 };
+            for t in [&sharded, &global] {
+                t.record_trace(id, &[ts], Some(drift));
+            }
+        }
         if rng.next_below(7) == 0 {
             let p = Priority::ALL[rng.next_below(3) as usize];
-            sharded.record_shed(p);
-            global.record_shed(p);
+            let r = ShedReason::ALL[rng.next_below(3) as usize];
+            sharded.record_shed(p, r);
+            global.record_shed(p, r);
         }
     }
     let a = sharded.snapshot(&reg);
@@ -690,8 +832,20 @@ pub fn assert_merge_equivalence(n_boards: usize, batches: usize, seed: u64) -> u
     for (ca, cb) in a.classes.iter().zip(&b.classes) {
         assert_eq!(ca.served, cb.served, "class {} served", ca.class);
         assert_eq!(ca.shed, cb.shed, "class {} shed", ca.class);
+        assert_eq!(ca.shed_reasons, cb.shed_reasons, "class {} shed reasons", ca.class);
+        assert_eq!(
+            ca.shed_reasons.iter().sum::<u64>(),
+            ca.shed,
+            "class {} shed must equal the sum of its reasons",
+            ca.class
+        );
         assert_eq!(ca.p50_us, cb.p50_us, "class {} p50 must merge exactly", ca.class);
         assert_eq!(ca.p99_us, cb.p99_us, "class {} p99 must merge exactly", ca.class);
+        assert_eq!(
+            ca.stages, cb.stages,
+            "class {} stage histograms must be bucket-exact across modes",
+            ca.class
+        );
     }
     assert_eq!(a.tenants.len(), b.tenants.len(), "tenant rows");
     for (ta, tb) in a.tenants.iter().zip(&b.tenants) {
@@ -751,6 +905,40 @@ pub struct BoardSnapshot {
     /// (`[interactive, standard, batch]`), rolled over with
     /// `depth_peak` at phase boundaries.
     pub depth_peak_class: [usize; N_CLASSES],
+    /// Stage-latency histograms over this board's sampled requests
+    /// (`Some` only when lifecycle tracing recorded data here).
+    pub stages: Option<Box<StageSet>>,
+    /// Flow-vs-measured `exec` drift for this instance (`Some` only
+    /// while tracing is on and batches executed here).
+    pub drift: Option<DriftSnapshot>,
+}
+
+/// Per-instance flow-vs-measured drift: the registry's flow-predicted
+/// device hold (`latency + (n-1)·ii`, scaled by the fleet's
+/// `time_scale`) summed over executed batches vs the observed `exec`
+/// wall time.  `ratio > 1` means the board runs slower than the flow
+/// estimate the router/autoscaler act on.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftSnapshot {
+    /// Executed batches folded in.
+    pub batches: u64,
+    /// Σ flow-predicted device hold, µs.
+    pub predicted_exec_us: f64,
+    /// Σ observed device hold, µs.
+    pub observed_exec_us: f64,
+    /// `observed / predicted` (0 when the prediction is 0).
+    pub ratio: f64,
+}
+
+impl DriftSnapshot {
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("batches", num(self.batches as f64)),
+            ("predicted_exec_us", num(self.predicted_exec_us)),
+            ("observed_exec_us", num(self.observed_exec_us)),
+            ("ratio", num(self.ratio)),
+        ])
+    }
 }
 
 /// Fleet-wide per-priority-class aggregate: latency percentiles over the
@@ -760,9 +948,17 @@ pub struct BoardSnapshot {
 pub struct ClassSnapshot {
     pub class: &'static str,
     pub served: u64,
+    /// Total rejections for this class — always the sum of
+    /// `shed_reasons`.
     pub shed: u64,
+    /// Rejections split by [`ShedReason`], indexed by `ShedReason::idx`
+    /// (`[admission_tier, slo_predict, queue_full]`).
+    pub shed_reasons: [u64; N_SHED_REASONS],
     pub p50_us: f64,
     pub p99_us: f64,
+    /// Fleet-wide stage-latency histograms for this class (`Some` only
+    /// when lifecycle tracing recorded data).
+    pub stages: Option<Box<StageSet>>,
 }
 
 impl ClassSnapshot {
@@ -770,13 +966,24 @@ impl ClassSnapshot {
     /// [`FleetSnapshot::to_json`] and the bench reports so the schema
     /// cannot drift between them.
     pub fn to_json(&self) -> Value {
-        obj(vec![
+        let mut fields = vec![
             ("class", s(self.class)),
             ("served", num(self.served as f64)),
             ("shed", num(self.shed as f64)),
+            (
+                "shed_reasons",
+                obj(ShedReason::ALL
+                    .iter()
+                    .map(|r| (r.name(), num(self.shed_reasons[r.idx()] as f64)))
+                    .collect()),
+            ),
             ("p50_us", num(self.p50_us)),
             ("p99_us", num(self.p99_us)),
-        ])
+        ];
+        if let Some(set) = &self.stages {
+            fields.push(("stages", stage_set_to_json(set)));
+        }
+        obj(fields)
     }
 }
 
@@ -881,7 +1088,7 @@ impl FleetSnapshot {
                     self.per_board
                         .iter()
                         .map(|b| {
-                            obj(vec![
+                            let mut fields = vec![
                                 ("label", s(&b.label)),
                                 ("task", s(&b.task)),
                                 ("active", Value::Bool(b.active)),
@@ -906,7 +1113,14 @@ impl FleetSnapshot {
                                             .collect(),
                                     ),
                                 ),
-                            ])
+                            ];
+                            if let Some(set) = &b.stages {
+                                fields.push(("stages", stage_set_to_json(set)));
+                            }
+                            if let Some(d) = &b.drift {
+                                fields.push(("drift", d.to_json()));
+                            }
+                            obj(fields)
                         })
                         .collect(),
                 ),
@@ -957,17 +1171,52 @@ impl FleetSnapshot {
         if classful {
             writeln!(
                 out,
-                "  {:<12} {:>7} {:>7} {:>9} {:>9}",
-                "class", "served", "shed", "p50(us)", "p99(us)"
+                "  {:<12} {:>7} {:>7} {:>9} {:>9}  {:>12}",
+                "class", "served", "shed", "p50(us)", "p99(us)", "adm/slo/qf"
             )
             .ok();
             for c in &self.classes {
+                let [adm, slo, qf] = c.shed_reasons;
                 writeln!(
                     out,
-                    "  {:<12} {:>7} {:>7} {:>9.1} {:>9.1}",
-                    c.class, c.served, c.shed, c.p50_us, c.p99_us
+                    "  {:<12} {:>7} {:>7} {:>9.1} {:>9.1}  {:>12}",
+                    c.class,
+                    c.served,
+                    c.shed,
+                    c.p50_us,
+                    c.p99_us,
+                    format!("{adm}/{slo}/{qf}")
                 )
                 .ok();
+            }
+        }
+        // Stage breakdown, present only when lifecycle tracing sampled
+        // requests (percentiles are log2-bucket upper bounds).
+        if self.classes.iter().any(|c| c.stages.is_some()) {
+            writeln!(
+                out,
+                "  {:<12} {:<12} {:>7} {:>9} {:>9}",
+                "trace", "stage", "count", "p50(us)", "p99(us)"
+            )
+            .ok();
+            for c in &self.classes {
+                if let Some(set) = &c.stages {
+                    for (st, h) in set.iter().enumerate() {
+                        if h.is_empty() {
+                            continue;
+                        }
+                        writeln!(
+                            out,
+                            "  {:<12} {:<12} {:>7} {:>9.0} {:>9.0}",
+                            c.class,
+                            super::trace::Stage::ALL[st].name(),
+                            h.count,
+                            h.percentile_us(0.50),
+                            h.percentile_us(0.99)
+                        )
+                        .ok();
+                    }
+                }
             }
         }
         if self.tenants.len() > 1 {
@@ -1024,6 +1273,19 @@ impl FleetSnapshot {
             )
             .ok();
         }
+        if self.per_board.iter().any(|b| b.drift.is_some()) {
+            writeln!(out, "  flow-vs-measured exec drift:").ok();
+            for b in &self.per_board {
+                if let Some(d) = &b.drift {
+                    writeln!(
+                        out,
+                        "    {:<26} predicted {:>10.0} us  observed {:>10.0} us  ratio {:.2} ({} batches)",
+                        b.label, d.predicted_exec_us, d.observed_exec_us, d.ratio, d.batches
+                    )
+                    .ok();
+                }
+            }
+        }
         out
     }
 }
@@ -1066,7 +1328,9 @@ mod tests {
             [1, 2, 0],
         );
         t.record_batch(1, &[smp(Priority::Batch, 400.0)], 10, 380, 720.0, 0, 0, [0, 0, 0]);
-        t.record_shed(Priority::Batch);
+        t.record_shed(Priority::Batch, ShedReason::AdmissionTier);
+        t.record_shed(Priority::Batch, ShedReason::QueueFull);
+        t.record_shed(Priority::Batch, ShedReason::QueueFull);
         let snap = t.snapshot(&reg);
         assert_eq!(snap.served, 4);
         assert!(snap.p50_us >= 100.0 && snap.p50_us <= 400.0);
@@ -1081,17 +1345,24 @@ mod tests {
         );
         assert_eq!(
             snap.classes.iter().map(|c| c.shed).collect::<Vec<_>>(),
-            vec![0, 0, 1]
+            vec![0, 0, 3]
         );
+        assert_eq!(snap.classes[2].shed_reasons, [1, 0, 2]);
         assert_eq!(snap.classes[0].p50_us, 120.0);
         assert_eq!(snap.classes[2].p99_us, 400.0);
         assert_eq!(snap.per_board[0].depth_peak_class, [1, 2, 0]);
+        // No tracing recorded: the optional trace fields stay absent.
+        assert!(snap.classes.iter().all(|c| c.stages.is_none()));
+        assert!(snap.per_board.iter().all(|b| b.stages.is_none() && b.drift.is_none()));
         let json = snap.to_json().to_json();
         assert!(json.contains("\"throughput_rps\""));
         assert!(json.contains("synthetic#1/kws"));
         assert!(json.contains("\"classes\""), "{json}");
         assert!(json.contains("\"class\":\"interactive\""), "{json}");
         assert!(json.contains("\"shed\""), "{json}");
+        assert!(json.contains("\"shed_reasons\""), "{json}");
+        assert!(json.contains("\"queue_full\":2"), "{json}");
+        assert!(!json.contains("\"stages\""), "untraced runs must not emit stages");
         let parsed = crate::report::json::Value::parse(&json).unwrap();
         assert_eq!(parsed.u64_of("served").unwrap(), 4);
         assert_eq!(parsed.req("classes").unwrap().as_arr().unwrap().len(), 3);
@@ -1231,5 +1502,52 @@ mod tests {
         assert_eq!(snap.classes[0].p99_us, 10.0);
         let g = Arc::new(Telemetry::with_global_locks(2));
         assert!(matches!(TelemetrySink::resolve(&g, 0), TelemetrySink::Global(..)));
+    }
+
+    /// Trace folds land in the shard and surface as per-class/per-board
+    /// stage histograms plus per-instance drift in snapshot and JSON.
+    #[test]
+    fn trace_spans_and_drift_surface_in_snapshot() {
+        let reg = reg2();
+        let t = Arc::new(Telemetry::new(2));
+        let sink = TelemetrySink::resolve(&t, 0);
+        let ts = |class, q, w, e, r| TraceSample {
+            class,
+            queue_wait_us: q,
+            window_wait_us: w,
+            exec_us: e,
+            reply_us: r,
+        };
+        sink.record_trace(
+            &[ts(Priority::Interactive, 10, 3, 100, 2)],
+            Some(DriftSample { pred_us: 90.0, obs_us: 100 }),
+        );
+        sink.record_trace(
+            &[ts(Priority::Interactive, 40, 5, 110, 2), ts(Priority::Batch, 9000, 1, 110, 3)],
+            Some(DriftSample { pred_us: 100.0, obs_us: 110 }),
+        );
+        let snap = t.snapshot(&reg);
+        let inter = snap.classes[0].stages.as_ref().expect("interactive stages");
+        assert_eq!(inter[0].count, 2, "two interactive queue_wait spans");
+        assert_eq!(inter[0].sum_us, 50);
+        assert_eq!(inter[2].count, 2);
+        assert!(snap.classes[1].stages.is_none(), "standard saw no samples");
+        let b0 = &snap.per_board[0];
+        let stages = b0.stages.as_ref().expect("board stages");
+        assert_eq!(stages[0].count, 3, "board merges all classes");
+        let drift = b0.drift.expect("board drift");
+        assert_eq!(drift.batches, 2);
+        assert!((drift.predicted_exec_us - 190.0).abs() < 1e-9);
+        assert!((drift.observed_exec_us - 210.0).abs() < 1e-9);
+        assert!((drift.ratio - 210.0 / 190.0).abs() < 1e-9);
+        assert!(snap.per_board[1].stages.is_none(), "board 1 untraced");
+        let json = snap.to_json().to_json();
+        assert!(json.contains("\"stages\""), "{json}");
+        assert!(json.contains("\"queue_wait\""), "{json}");
+        assert!(json.contains("\"drift\""), "{json}");
+        crate::report::json::Value::parse(&json).expect("snapshot JSON must parse");
+        let rendered = snap.render();
+        assert!(rendered.contains("queue_wait"), "{rendered}");
+        assert!(rendered.contains("flow-vs-measured"), "{rendered}");
     }
 }

@@ -1,0 +1,686 @@
+//! Per-request lifecycle tracing: stage-latency histograms, a sequenced
+//! fleet event log, and flow-vs-measured drift bookkeeping.
+//!
+//! # Design
+//!
+//! A sampled request (1 in `FleetConfig::trace_sample`; 0 = tracing off)
+//! carries a boxed [`TraceCtx`] stamped at every lifecycle edge:
+//!
+//! ```text
+//! submit --(cache lookup)--> route/admit --> enqueue ... dequeue
+//!        --> batch-window close --> execute start/end --> reply copy
+//! ```
+//!
+//! Workers fold each completed context into four per-class stage spans —
+//! `queue_wait` (enqueue → dequeue), `window_wait` (dequeue → window
+//! close), `exec` (device hold), `reply` (execute end → reply sent) —
+//! recorded as [`StageHistogram`]s with **fixed log2 buckets** inside the
+//! worker's own telemetry shard. Because a bucket count is just a `u64`,
+//! shard histograms merge *losslessly* in `Telemetry::snapshot` by
+//! element-wise addition: the merged histogram is bucket-exact equal to a
+//! single global collector fed the same spans (property-tested in
+//! `rust/tests/proptests.rs`).
+//!
+//! The hot path stays clean by construction: with tracing off a request
+//! pays exactly one branch (`Option<Box<TraceCtx>>` is `None`); with
+//! sampling on, unsampled requests additionally pay one relaxed atomic
+//! increment in the sampler. `benches/hotpath.rs` pins the sampled
+//! overhead (`traced_over_untraced_throughput >= 0.9`) as a gated
+//! headline.
+//!
+//! Alongside spans, a bounded per-shard [`EventRing`] records discrete
+//! fleet events — scale up/down with reason, sheds with a
+//! [`ShedReason`] class, work steals, and cache Batch-insert denials —
+//! under a fleet-wide monotone sequence number ([`SeqClock`]). Sequence
+//! numbers are allocated *under the ring lock*, so each ring is
+//! internally ordered by construction and the merged dump
+//! ([`EventLog::dump_sorted`]) is a total order. `fleet --trace-dump`
+//! emits the merged ring as JSONL, one strict-parsed object per line.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use super::queue::Priority;
+use crate::report::json::{num, obj, s, Value};
+
+// ---------------------------------------------------------------------------
+// Stages
+// ---------------------------------------------------------------------------
+
+/// Lifecycle stages folded into per-class / per-board histograms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Enqueue → dequeue: time spent waiting in the board queue.
+    QueueWait = 0,
+    /// Dequeue → batch-window close: time spent waiting for the batch to fill.
+    WindowWait = 1,
+    /// Execute start → end: the device hold for the whole batch.
+    Exec = 2,
+    /// Execute end → reply sent: output copy, argmax, cache insert, send.
+    Reply = 3,
+}
+
+/// Number of [`Stage`] variants (array dimension for stage sets).
+pub const N_STAGES: usize = 4;
+
+impl Stage {
+    /// All stages in index order.
+    pub const ALL: [Stage; N_STAGES] =
+        [Stage::QueueWait, Stage::WindowWait, Stage::Exec, Stage::Reply];
+
+    /// Stable snake_case name used in JSON reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::QueueWait => "queue_wait",
+            Stage::WindowWait => "window_wait",
+            Stage::Exec => "exec",
+            Stage::Reply => "reply",
+        }
+    }
+
+    /// Array index for this stage.
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Log2-bucket stage histogram
+// ---------------------------------------------------------------------------
+
+/// Number of log2 buckets; bucket 31 covers everything >= 2^31 µs (~36 min).
+pub const N_BUCKETS: usize = 32;
+
+/// Fixed log2-bucket latency histogram over microseconds.
+///
+/// Bucket `i` covers `[2^i, 2^(i+1))` µs, with 0 µs folded into bucket 0
+/// and the last bucket open-ended. Merging is element-wise bucket
+/// addition and therefore lossless: order of recording and sharding never
+/// changes the merged result.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StageHistogram {
+    /// Per-bucket counts; bucket `i` covers `[2^i, 2^(i+1))` µs.
+    pub buckets: [u64; N_BUCKETS],
+    /// Total samples recorded.
+    pub count: u64,
+    /// Exact sum of recorded values (for the mean; merges losslessly too).
+    pub sum_us: u128,
+}
+
+impl StageHistogram {
+    /// Bucket index for a value in µs.
+    pub fn bucket_of(us: u64) -> usize {
+        if us < 2 {
+            0
+        } else {
+            ((63 - us.leading_zeros()) as usize).min(N_BUCKETS - 1)
+        }
+    }
+
+    /// Inclusive upper edge of bucket `i` in µs (used as the percentile
+    /// estimate; the histogram rounds *up* to the bucket edge).
+    pub fn bucket_edge_us(i: usize) -> u64 {
+        if i >= N_BUCKETS - 1 {
+            u64::MAX
+        } else {
+            1u64 << (i + 1)
+        }
+    }
+
+    /// Record one span.
+    pub fn record(&mut self, us: u64) {
+        self.buckets[Self::bucket_of(us)] += 1;
+        self.count += 1;
+        self.sum_us += us as u128;
+    }
+
+    /// Lossless merge: element-wise bucket addition.
+    pub fn merge(&mut self, other: &StageHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+    }
+
+    /// True when no samples were recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Mean of the recorded spans (exact, from the sum), 0 when empty.
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Nearest-rank percentile estimate, reported as the upper edge of
+    /// the bucket holding the rank (an upper bound on the true value).
+    pub fn percentile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_edge_us(i) as f64;
+            }
+        }
+        Self::bucket_edge_us(N_BUCKETS - 1) as f64
+    }
+
+    /// JSON: `{count, mean_us, p50_us, p99_us, buckets: [[idx, count], ..]}`
+    /// with only non-zero buckets listed.
+    pub fn to_json(&self) -> Value {
+        let buckets: Vec<Value> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| Value::Arr(vec![num(i as f64), num(c as f64)]))
+            .collect();
+        obj(vec![
+            ("count", num(self.count as f64)),
+            ("mean_us", num(self.mean_us())),
+            ("p50_us", num(self.percentile_us(0.50))),
+            ("p99_us", num(self.percentile_us(0.99))),
+            ("buckets", Value::Arr(buckets)),
+        ])
+    }
+}
+
+/// One histogram per [`Stage`], in `Stage::idx` order.
+pub type StageSet = [StageHistogram; N_STAGES];
+
+/// JSON object mapping stage names to their histogram JSON.
+pub fn stage_set_to_json(set: &StageSet) -> Value {
+    Value::Obj(
+        Stage::ALL
+            .iter()
+            .map(|st| (st.name().to_string(), set[st.idx()].to_json()))
+            .collect(),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Per-request trace context and folded samples
+// ---------------------------------------------------------------------------
+
+/// Lifecycle stamps carried by a sampled request (boxed on
+/// `FleetRequest` so unsampled requests stay small and pay one branch).
+///
+/// Enqueue time is the request's own `enqueued` field; execute start/end
+/// are batch-level stamps taken by the worker. Cache-served requests
+/// never reach a worker, so their contexts end at the cache probe.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceCtx {
+    /// Stamped in `Fleet::submit` when the request is sampled.
+    pub submitted: Instant,
+    /// µs spent probing the result cache at submit (0 when caching off).
+    pub cache_lookup_us: u32,
+    /// µs spent in admission/route up to the winning queue push.
+    pub route_us: u32,
+    /// Stamped by the worker when the request is popped (or stolen).
+    pub dequeued: Option<Instant>,
+    /// Stamped by the worker once the batch window closes.
+    pub window_closed: Option<Instant>,
+}
+
+impl TraceCtx {
+    /// A fresh context stamped `submitted = now`.
+    pub fn new() -> Self {
+        TraceCtx {
+            submitted: Instant::now(),
+            cache_lookup_us: 0,
+            route_us: 0,
+            dequeued: None,
+            window_closed: None,
+        }
+    }
+}
+
+impl Default for TraceCtx {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A completed per-request trace folded into the four stage spans,
+/// recorded into the worker's telemetry shard.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceSample {
+    /// Priority class of the traced request.
+    pub class: Priority,
+    /// Enqueue → dequeue, µs.
+    pub queue_wait_us: u64,
+    /// Dequeue → batch-window close, µs.
+    pub window_wait_us: u64,
+    /// Device hold for the batch the request rode in, µs.
+    pub exec_us: u64,
+    /// Execute end → reply sent, µs.
+    pub reply_us: u64,
+}
+
+/// Per-batch flow-vs-measured drift observation: the registry's
+/// flow-predicted device hold `latency + (n-1)·ii` (scaled by the
+/// fleet's `time_scale`) vs the wall-clock `exec` span.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftSample {
+    /// Predicted device hold for the batch, µs.
+    pub pred_us: f64,
+    /// Observed device hold for the batch, µs.
+    pub obs_us: u128,
+}
+
+// ---------------------------------------------------------------------------
+// Sampling
+// ---------------------------------------------------------------------------
+
+/// 1-in-N request sampler. With tracing off the sampler is never built,
+/// so an unsampled request pays only the `Option` branch; with tracing
+/// on, each submit pays one relaxed `fetch_add`.
+pub struct Sampler {
+    every: u64,
+    counter: AtomicU64,
+}
+
+impl Sampler {
+    /// `every` is clamped to at least 1 (1 = trace every request).
+    pub fn new(every: usize) -> Self {
+        Sampler { every: (every as u64).max(1), counter: AtomicU64::new(0) }
+    }
+
+    /// True for one request in `every`, starting with the first.
+    pub fn sample(&self) -> bool {
+        self.counter.fetch_add(1, Ordering::Relaxed) % self.every == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shed reasons
+// ---------------------------------------------------------------------------
+
+/// Why a request was shed, split so overload diagnosis can tell tiered
+/// admission, SLO-predicted infeasibility, and plain queue exhaustion
+/// apart.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The router's tiered admission found no queue below the class's
+    /// admit limit (`RouteError::Overloaded` out of `select_class`).
+    AdmissionTier = 0,
+    /// The SLO policy predicted the deadline cannot be met on any
+    /// replica (`RouteError::SloUnattainable`).
+    SloPredict = 1,
+    /// Admission passed but every `try_push` retry found the queue
+    /// closed or re-filled past the limit.
+    QueueFull = 2,
+}
+
+/// Number of [`ShedReason`] variants (array dimension for counters).
+pub const N_SHED_REASONS: usize = 3;
+
+impl ShedReason {
+    /// All reasons in index order.
+    pub const ALL: [ShedReason; N_SHED_REASONS] =
+        [ShedReason::AdmissionTier, ShedReason::SloPredict, ShedReason::QueueFull];
+
+    /// Stable snake_case name used in JSON reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            ShedReason::AdmissionTier => "admission_tier",
+            ShedReason::SloPredict => "slo_predict",
+            ShedReason::QueueFull => "queue_full",
+        }
+    }
+
+    /// Array index for this reason.
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Event ring
+// ---------------------------------------------------------------------------
+
+/// Discrete fleet events recorded in the ring alongside spans.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FleetEvent {
+    /// A replica was added (autoscaler or manual), with the scale reason.
+    ScaleUp { task: String, instance: usize, reason: String },
+    /// A replica was retired, with the scale reason.
+    ScaleDown { task: String, instance: usize, reason: String },
+    /// A request was shed at submit, with its class and reason.
+    Shed { class: Priority, reason: ShedReason },
+    /// A worker stole work from peers while topping up a batch.
+    Steal { thief: usize, stolen: u64 },
+    /// The result cache refused a Batch-class insert to protect the
+    /// interactive working set.
+    CacheInsertDenied { task: String, class: Priority },
+}
+
+/// A sequenced, timestamped event as stored in a ring.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Fleet-wide monotone sequence number (allocated under the ring lock).
+    pub seq: u64,
+    /// µs since the event log was created.
+    pub t_us: u64,
+    /// The event payload.
+    pub event: FleetEvent,
+}
+
+impl TraceEvent {
+    /// One flat JSON object per event — the JSONL line shape emitted by
+    /// `fleet --trace-dump`.
+    pub fn to_json(&self) -> Value {
+        let mut fields = vec![
+            ("seq".to_string(), num(self.seq as f64)),
+            ("t_us".to_string(), num(self.t_us as f64)),
+        ];
+        let kind = match &self.event {
+            FleetEvent::ScaleUp { task, instance, reason } => {
+                fields.push(("task".to_string(), s(task)));
+                fields.push(("instance".to_string(), num(*instance as f64)));
+                fields.push(("reason".to_string(), s(reason)));
+                "scale_up"
+            }
+            FleetEvent::ScaleDown { task, instance, reason } => {
+                fields.push(("task".to_string(), s(task)));
+                fields.push(("instance".to_string(), num(*instance as f64)));
+                fields.push(("reason".to_string(), s(reason)));
+                "scale_down"
+            }
+            FleetEvent::Shed { class, reason } => {
+                fields.push(("class".to_string(), s(class.name())));
+                fields.push(("reason".to_string(), s(reason.name())));
+                "shed"
+            }
+            FleetEvent::Steal { thief, stolen } => {
+                fields.push(("board".to_string(), num(*thief as f64)));
+                fields.push(("stolen".to_string(), num(*stolen as f64)));
+                "steal"
+            }
+            FleetEvent::CacheInsertDenied { task, class } => {
+                fields.push(("task".to_string(), s(task)));
+                fields.push(("class".to_string(), s(class.name())));
+                "cache_insert_denied"
+            }
+        };
+        fields.push(("event".to_string(), s(kind)));
+        Value::Obj(fields.into_iter().collect())
+    }
+}
+
+/// Default per-ring capacity (events, not bytes).
+pub const EVENT_RING_CAP: usize = 1024;
+
+/// Shared sequence allocator + epoch for all rings of one [`EventLog`].
+pub struct SeqClock {
+    seq: AtomicU64,
+    t0: Instant,
+}
+
+struct RingInner {
+    buf: VecDeque<TraceEvent>,
+    dropped: u64,
+    cap: usize,
+}
+
+/// A bounded event ring. When full, the *oldest* event is dropped (and
+/// counted), so the ring always holds the newest `cap` events in
+/// sequence order.
+pub struct EventRing {
+    clock: Arc<SeqClock>,
+    inner: Mutex<RingInner>,
+}
+
+impl EventRing {
+    fn new(clock: Arc<SeqClock>, cap: usize) -> Self {
+        EventRing {
+            clock,
+            inner: Mutex::new(RingInner {
+                buf: VecDeque::with_capacity(cap.min(64)),
+                dropped: 0,
+                cap: cap.max(1),
+            }),
+        }
+    }
+
+    /// Record an event; returns its sequence number. The sequence is
+    /// allocated while holding the ring lock, so events within one ring
+    /// are always stored in increasing-sequence order.
+    pub fn push(&self, event: FleetEvent) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        let seq = self.clock.seq.fetch_add(1, Ordering::Relaxed);
+        let t_us = self.clock.t0.elapsed().as_micros() as u64;
+        if g.buf.len() == g.cap {
+            g.buf.pop_front();
+            g.dropped += 1;
+        }
+        g.buf.push_back(TraceEvent { seq, t_us, event });
+        seq
+    }
+
+    /// Events currently retained, oldest first.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        self.inner.lock().unwrap().buf.iter().cloned().collect()
+    }
+
+    /// Events dropped because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+}
+
+/// The fleet's event log: one ring per board shard plus a fleet-level
+/// ring for submit-path and scaling events, all sequenced by one
+/// [`SeqClock`]. Rings grow with replicas exactly like telemetry shards.
+pub struct EventLog {
+    clock: Arc<SeqClock>,
+    fleet: Arc<EventRing>,
+    rings: RwLock<Vec<Arc<EventRing>>>,
+    cap_per_ring: usize,
+}
+
+impl EventLog {
+    /// A log with `n_rings` board rings at the default capacity.
+    pub fn new(n_rings: usize) -> Self {
+        Self::with_capacity(n_rings, EVENT_RING_CAP)
+    }
+
+    /// A log with `n_rings` board rings of `cap` events each.
+    pub fn with_capacity(n_rings: usize, cap: usize) -> Self {
+        let clock = Arc::new(SeqClock { seq: AtomicU64::new(0), t0: Instant::now() });
+        let rings = (0..n_rings)
+            .map(|_| Arc::new(EventRing::new(clock.clone(), cap)))
+            .collect();
+        EventLog {
+            fleet: Arc::new(EventRing::new(clock.clone(), cap)),
+            clock,
+            rings: RwLock::new(rings),
+            cap_per_ring: cap,
+        }
+    }
+
+    /// Add a ring for a new board shard; returns its id.
+    pub fn add_ring(&self) -> usize {
+        let mut rings = self.rings.write().unwrap();
+        rings.push(Arc::new(EventRing::new(self.clock.clone(), self.cap_per_ring)));
+        rings.len() - 1
+    }
+
+    /// The board ring with the given shard id.
+    pub fn ring(&self, id: usize) -> Arc<EventRing> {
+        self.rings.read().unwrap()[id].clone()
+    }
+
+    /// Record a fleet-level (non-board) event.
+    pub fn record_fleet(&self, event: FleetEvent) -> u64 {
+        self.fleet.push(event)
+    }
+
+    /// All retained events across every ring, sorted by sequence number.
+    pub fn dump_sorted(&self) -> Vec<TraceEvent> {
+        let mut all = self.fleet.snapshot();
+        for r in self.rings.read().unwrap().iter() {
+            all.extend(r.snapshot());
+        }
+        all.sort_by_key(|e| e.seq);
+        all
+    }
+
+    /// Total events dropped across every ring.
+    pub fn total_dropped(&self) -> u64 {
+        let mut d = self.fleet.dropped();
+        for r in self.rings.read().unwrap().iter() {
+            d += r.dropped();
+        }
+        d
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges_are_log2() {
+        assert_eq!(StageHistogram::bucket_of(0), 0);
+        assert_eq!(StageHistogram::bucket_of(1), 0);
+        assert_eq!(StageHistogram::bucket_of(2), 1);
+        assert_eq!(StageHistogram::bucket_of(3), 1);
+        assert_eq!(StageHistogram::bucket_of(4), 2);
+        assert_eq!(StageHistogram::bucket_of(1023), 9);
+        assert_eq!(StageHistogram::bucket_of(1024), 10);
+        assert_eq!(StageHistogram::bucket_of(u64::MAX), N_BUCKETS - 1);
+        assert_eq!(StageHistogram::bucket_edge_us(0), 2);
+        assert_eq!(StageHistogram::bucket_edge_us(10), 2048);
+        assert_eq!(StageHistogram::bucket_edge_us(N_BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn merge_is_elementwise_and_lossless() {
+        let mut a = StageHistogram::default();
+        let mut b = StageHistogram::default();
+        let mut whole = StageHistogram::default();
+        for (i, v) in [0u64, 1, 7, 300, 5_000, 1 << 40].iter().enumerate() {
+            if i % 2 == 0 { a.record(*v) } else { b.record(*v) }
+            whole.record(*v);
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged, whole);
+        assert_eq!(merged.count, 6);
+        assert_eq!(merged.sum_us, (0u128 + 1 + 7 + 300 + 5_000 + (1 << 40)));
+    }
+
+    #[test]
+    fn percentiles_round_up_to_bucket_edges() {
+        let mut h = StageHistogram::default();
+        for _ in 0..99 {
+            h.record(100); // bucket 6: [64, 128)
+        }
+        h.record(1_000_000); // bucket 19
+        assert_eq!(h.percentile_us(0.50), 128.0);
+        assert_eq!(h.percentile_us(0.99), 128.0);
+        assert_eq!(h.percentile_us(1.0), StageHistogram::bucket_edge_us(19) as f64);
+        assert_eq!(StageHistogram::default().percentile_us(0.99), 0.0);
+    }
+
+    #[test]
+    fn sampler_fires_one_in_n() {
+        let s = Sampler::new(4);
+        let fired: Vec<bool> = (0..12).map(|_| s.sample()).collect();
+        let expect: Vec<bool> = (0..12).map(|i| i % 4 == 0).collect();
+        assert_eq!(fired, expect);
+        let every = Sampler::new(1);
+        assert!((0..5).all(|_| every.sample()));
+        // 0 clamps to 1 rather than dividing by zero.
+        assert!(Sampler::new(0).sample());
+    }
+
+    #[test]
+    fn ring_keeps_newest_in_order_and_counts_drops() {
+        let log = EventLog::with_capacity(1, 4);
+        let ring = log.ring(0);
+        for i in 0..10usize {
+            ring.push(FleetEvent::Steal { thief: i, stolen: 1 });
+        }
+        let kept = ring.snapshot();
+        assert_eq!(kept.len(), 4);
+        assert_eq!(ring.dropped(), 6);
+        let seqs: Vec<u64> = kept.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn dump_merges_rings_sorted_by_seq() {
+        let log = EventLog::with_capacity(2, 16);
+        log.ring(0).push(FleetEvent::Steal { thief: 0, stolen: 1 });
+        log.record_fleet(FleetEvent::Shed {
+            class: Priority::Batch,
+            reason: ShedReason::QueueFull,
+        });
+        log.ring(1).push(FleetEvent::Steal { thief: 1, stolen: 2 });
+        let id = log.add_ring();
+        assert_eq!(id, 2);
+        log.ring(2).push(FleetEvent::CacheInsertDenied {
+            task: "kws".to_string(),
+            class: Priority::Batch,
+        });
+        let all = log.dump_sorted();
+        assert_eq!(all.len(), 4);
+        let seqs: Vec<u64> = all.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3]);
+        assert_eq!(log.total_dropped(), 0);
+    }
+
+    #[test]
+    fn events_serialize_to_strict_jsonl_lines() {
+        let log = EventLog::with_capacity(1, 8);
+        log.record_fleet(FleetEvent::ScaleUp {
+            task: "ad".to_string(),
+            instance: 3,
+            reason: "queue+slo".to_string(),
+        });
+        log.record_fleet(FleetEvent::ScaleDown {
+            task: "ad".to_string(),
+            instance: 3,
+            reason: "idle".to_string(),
+        });
+        log.ring(0).push(FleetEvent::Shed {
+            class: Priority::Interactive,
+            reason: ShedReason::AdmissionTier,
+        });
+        for e in log.dump_sorted() {
+            let line = e.to_json().to_json();
+            let parsed = Value::parse(&line).expect("trace-dump line must parse");
+            assert_eq!(parsed.req("seq").expect("seq"), &num(e.seq as f64));
+            assert!(parsed.req("event").is_ok());
+        }
+    }
+
+    #[test]
+    fn stage_set_json_names_all_stages() {
+        let mut set = StageSet::default();
+        set[Stage::Exec.idx()].record(500);
+        let v = stage_set_to_json(&set);
+        for st in Stage::ALL {
+            assert!(v.req(st.name()).is_ok(), "missing stage {}", st.name());
+        }
+        let line = v.to_json();
+        Value::parse(&line).expect("stage set JSON must parse");
+    }
+}

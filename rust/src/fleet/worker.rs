@@ -48,6 +48,7 @@ use super::cache::ResultCache;
 use super::queue::{BoardQueue, FleetRequest, Priority};
 use super::registry::BoardInstance;
 use super::telemetry::{ReplySample, TelemetrySink};
+use super::trace::{DriftSample, EventRing, FleetEvent, TraceSample};
 use crate::coordinator::engine::{fill_window, BatchExecutor, BatchPolicy, Reply};
 use crate::coordinator::pool::{PooledVec, ReplyPool};
 use crate::error::{bail, Result};
@@ -344,6 +345,24 @@ pub struct WorkerConfig {
     /// path).  `false` = allocate a fresh reply vector per request, the
     /// pre-PR behavior kept for the `global_hotpath` A/B control.
     pub pooled_replies: bool,
+    /// Lifecycle tracing (`FleetConfig::trace_sample > 0`): the worker
+    /// stamps dequeue / window-close edges on sampled requests, folds
+    /// completed spans into its telemetry shard's stage histograms,
+    /// accumulates flow-vs-measured exec drift per batch, and records
+    /// steal / cache-insert-denied events into its board's event ring.
+    /// `None` = tracing off; the serve loop pays one branch per edge.
+    pub trace: Option<WorkerTraceConfig>,
+}
+
+/// Per-worker handles for the tracing layer ([`super::trace`]).
+pub struct WorkerTraceConfig {
+    /// This board's event ring in the fleet's
+    /// [`EventLog`](super::trace::EventLog).
+    pub ring: Arc<EventRing>,
+    /// Wall-seconds per simulated device-second — scales the registry's
+    /// flow-predicted device hold to wall time so the drift accumulator
+    /// compares like with like.
+    pub time_scale: f64,
 }
 
 /// Run one board's serve loop until its queue is closed and drained.
@@ -390,6 +409,8 @@ pub fn run_worker<E: BatchExecutor>(
     let pool = cfg.pooled_replies.then(|| ReplyPool::new(4 * device_batch.max(16)));
     // Telemetry staging, reused across batches (cleared, never shrunk).
     let mut samples: Vec<ReplySample> = Vec::with_capacity(window.max_batch);
+    // Completed spans of sampled requests, reused the same way.
+    let mut trace_samples: Vec<TraceSample> = Vec::with_capacity(window.max_batch);
     let mut served = 0u64;
     // How long to wait on the own queue before checking peers for work
     // to steal (bounds the idle-replica pickup latency).
@@ -403,13 +424,23 @@ pub fn run_worker<E: BatchExecutor>(
         list.iter().filter(|q| !Arc::ptr_eq(q, own)).find_map(|q| q.try_steal())
     };
 
+    // Stamp the dequeue edge on a sampled request (first pickup wins —
+    // a request stolen mid-window keeps its original dequeue stamp).
+    fn stamp_dequeue(r: &mut FleetRequest) {
+        if let Some(t) = r.trace.as_deref_mut() {
+            if t.dequeued.is_none() {
+                t.dequeued = Some(Instant::now());
+            }
+        }
+    }
+
     loop {
         // First request of a batch: own queue first, then — if idle —
         // steal one from a same-task replica.  The closed check comes
         // *before* the steal so a retiring replica exits as soon as its
         // own queue is drained instead of lingering on peers' work.
         let mut stolen = 0u64;
-        let first = if cfg.work_stealing {
+        let mut first = if cfg.work_stealing {
             loop {
                 if let Some(r) = own.pop_until(Instant::now() + steal_poll) {
                     break r;
@@ -428,6 +459,7 @@ pub fn run_worker<E: BatchExecutor>(
                 None => return served,
             }
         };
+        stamp_dequeue(&mut first);
         // Class-aware gathering: an Interactive opener tops up with
         // whatever is queued *right now* and executes immediately —
         // holding a user-facing request hostage to the batching timer
@@ -442,9 +474,19 @@ pub fn run_worker<E: BatchExecutor>(
         {
             // Non-blocking `next`: the first empty poll ends the window,
             // so the timer never actually waits.
-            fill_window(first, &window, |_| own.try_steal())
+            fill_window(first, &window, |_| {
+                own.try_steal().map(|mut r| {
+                    stamp_dequeue(&mut r);
+                    r
+                })
+            })
         } else {
-            fill_window(first, &window, |deadline| own.pop_until(deadline))
+            fill_window(first, &window, |deadline| {
+                own.pop_until(deadline).map(|mut r| {
+                    stamp_dequeue(&mut r);
+                    r
+                })
+            })
         };
         if cfg.work_stealing && batch.len() < window.max_batch {
             // Top the batch up from peers under ONE read of the live
@@ -455,7 +497,8 @@ pub fn run_worker<E: BatchExecutor>(
             'peers: for q in list.iter().filter(|q| !Arc::ptr_eq(q, own)) {
                 while batch.len() < window.max_batch {
                     match q.try_steal() {
-                        Some(r) => {
+                        Some(mut r) => {
+                            stamp_dequeue(&mut r);
                             batch.push(r);
                             stolen += 1;
                         }
@@ -463,6 +506,17 @@ pub fn run_worker<E: BatchExecutor>(
                     }
                 }
                 break;
+            }
+        }
+
+        if cfg.trace.is_some() {
+            // One stamp for the whole batch: the window closes for every
+            // rider at the instant staging begins.
+            let closed = Instant::now();
+            for r in batch.iter_mut() {
+                if let Some(t) = r.trace.as_deref_mut() {
+                    t.window_closed = Some(closed);
+                }
             }
         }
 
@@ -489,9 +543,11 @@ pub fn run_worker<E: BatchExecutor>(
             // worker keeps serving subsequent batches.
             continue;
         }
-        let exec_us = exec_start.elapsed().as_micros();
+        let exec_end = Instant::now();
+        let exec_us = exec_end.duration_since(exec_start).as_micros();
 
         samples.clear();
+        trace_samples.clear();
         let mut queue_us_sum = 0u128;
         for (i, req) in batch.iter().enumerate() {
             let slice = &obuf[i * n_out..(i + 1) * n_out];
@@ -506,7 +562,16 @@ pub fn run_worker<E: BatchExecutor>(
                 // request's class tags the entry for class-aware
                 // admission (Batch sweeps cannot flush Interactive's
                 // working set).
-                c.insert_tagged(&inst.task, key, &out, top1, req.tag.priority);
+                let admitted =
+                    c.insert_tagged(&inst.task, key, &out, top1, req.tag.priority);
+                if !admitted {
+                    if let Some(tr) = &cfg.trace {
+                        tr.ring.push(FleetEvent::CacheInsertDenied {
+                            task: inst.task.clone(),
+                            class: req.tag.priority,
+                        });
+                    }
+                }
             }
             let queue_us = exec_start.duration_since(req.enqueued).as_micros();
             queue_us_sum += queue_us;
@@ -522,6 +587,21 @@ pub fn run_worker<E: BatchExecutor>(
                 queue_us,
                 exec_us,
             });
+            if let Some(t) = req.trace.as_deref() {
+                // Spans close here: reply = execute end → this send.
+                // Missing stamps (hand-built requests) fall back to the
+                // execute start so no span goes negative.
+                let dequeued = t.dequeued.unwrap_or(exec_start);
+                let closed = t.window_closed.unwrap_or(exec_start);
+                trace_samples.push(TraceSample {
+                    class: req.tag.priority,
+                    queue_wait_us: dequeued.duration_since(req.enqueued).as_micros()
+                        as u64,
+                    window_wait_us: closed.duration_since(dequeued).as_micros() as u64,
+                    exec_us: exec_us as u64,
+                    reply_us: Instant::now().duration_since(exec_end).as_micros() as u64,
+                });
+            }
             served += 1;
         }
         telemetry.record_batch(
@@ -533,6 +613,17 @@ pub fn run_worker<E: BatchExecutor>(
             own.peak(),
             own.peak_class(),
         );
+        if let Some(tr) = &cfg.trace {
+            // Drift covers every executed batch while tracing is on (not
+            // only sampled ones): the flow prediction and the measured
+            // hold both exist regardless of request sampling.
+            let pred_us = inst.batch_latency_s(n) * tr.time_scale * 1e6;
+            telemetry
+                .record_trace(&trace_samples, Some(DriftSample { pred_us, obs_us: exec_us }));
+            if stolen > 0 {
+                tr.ring.push(FleetEvent::Steal { thief: inst.id, stolen });
+            }
+        }
     }
 }
 

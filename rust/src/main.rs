@@ -15,6 +15,7 @@
 //!                       [--autoscale] [--min-replicas N] [--max-replicas N]
 //!                       [--scale-interval-us N] [--json]
 //!                       [--tenants N] [--priority-mix i:s:b] [--fifo] [--global-hotpath]
+//!                       [--trace-sample N] [--trace-dump]
 //! tinyml-codesign bench-gate [--baseline-dir D] [--bench-dir D] [--tol F]
 //!                       [--update] [--self-test]    BENCH_* regression gate
 //! tinyml-codesign list                               available models
@@ -26,6 +27,11 @@
 //! priority scheduling (single-FIFO control); `--global-hotpath`
 //! restores the pre-sharding global-lock telemetry/cache/allocating
 //! reply path (the A/B control `benches/hotpath.rs` measures against).
+//! `--trace-sample N` samples one request in N through the lifecycle
+//! tracing layer (`tinyml_codesign::fleet::trace`) — stage-latency
+//! histograms and flow-vs-measured drift land in the report/JSON —
+//! and `--trace-dump` prints the fleet event ring as JSONL (one event
+//! per line) instead of the report.
 
 use tinyml_codesign::board::{arty_a7_100t, pynq_z2, Board};
 use tinyml_codesign::coordinator::engine::{spawn, BatchPolicy};
@@ -112,6 +118,26 @@ fn sample_priority(mix: &[f64; 3], u: f64) -> Priority {
     }
     Priority::Batch
 }
+
+/// Usage text for `help` / unknown subcommands.  A plain `const` — the
+/// old `include_str!("main.rs").lines().skip(2).take(19)` slice of the
+/// module doc silently truncated whenever the doc comment grew.
+const HELP: &str = "\
+tinyml-codesign flow <model> [--board pynq|arty]   codesign flow report
+tinyml-codesign train <model> [--steps N] [--lr F] Rust-driven SGD
+tinyml-codesign eval <model> [--n N]               accuracy / AUC
+tinyml-codesign eembc <model> [--mode perf|energy|accuracy]
+tinyml-codesign table <1|2|3|4|5>                  paper tables
+tinyml-codesign fig <2|3>                          DSE scan CSVs
+tinyml-codesign serve <model> [--requests N]       batching engine demo
+tinyml-codesign fleet [--policy rr|ll|energy|slo] [--requests N] [--cache N]
+                      [--autoscale] [--min-replicas N] [--max-replicas N]
+                      [--scale-interval-us N] [--json]
+                      [--tenants N] [--priority-mix i:s:b] [--fifo] [--global-hotpath]
+                      [--trace-sample N] [--trace-dump]
+tinyml-codesign bench-gate [--baseline-dir D] [--bench-dir D] [--tol F]
+                      [--update] [--self-test]    BENCH_* regression gate
+tinyml-codesign list                               available models";
 
 fn board_from(args: &Args) -> Board {
     match args.flag("board").unwrap_or("pynq") {
@@ -300,6 +326,7 @@ fn main() -> Result<()> {
                 autoscale,
                 fifo_queues: args.flag("fifo").is_some(),
                 global_hotpath: args.flag("global-hotpath").is_some(),
+                trace_sample: args.usize_flag("trace-sample", 0),
                 ..Default::default()
             };
             let fleet = Fleet::start(Registry::standard_fleet()?, cfg)?;
@@ -327,6 +354,20 @@ fn main() -> Result<()> {
                 let _ = rx.recv();
             }
             let summary = fleet.shutdown();
+            if args.flag("trace-dump").is_some() {
+                // JSONL only (one event per line, machine-consumable) —
+                // the human banner/report would corrupt the stream.
+                // Each line is self-checked against the strict parser
+                // before printing: an unparseable dump is a bug, not a
+                // consumer's problem.
+                for e in &summary.trace_events {
+                    let line = e.to_json().to_json();
+                    tinyml_codesign::report::json::Value::parse(&line)
+                        .map_err(|err| anyhow!("trace-dump line not valid JSON: {err}"))?;
+                    println!("{line}");
+                }
+                return Ok(());
+            }
             println!(
                 "policy {policy}{}, {n} mixed requests over {tenants} tenant(s), \
                  {rejected} rejected",
@@ -352,7 +393,7 @@ fn main() -> Result<()> {
             }
         }
         _ => {
-            println!("{}", include_str!("main.rs").lines().skip(2).take(19).map(|l| l.trim_start_matches("//! ")).collect::<Vec<_>>().join("\n"));
+            println!("{HELP}");
         }
     }
     Ok(())

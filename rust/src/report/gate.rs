@@ -160,6 +160,13 @@ pub fn headline_metrics(doc: &Value) -> Result<Vec<Metric>> {
                 value: f64_of(doc, "sharded_over_global_throughput")?,
                 higher_is_better: true,
             });
+            // Tracing overhead: 1-in-16 sampled lifecycle tracing vs
+            // the untraced sharded plane (part 4; inline floor 0.9).
+            out.push(Metric {
+                name: "hotpath.traced_over_untraced_throughput".to_string(),
+                value: f64_of(doc, "traced_over_untraced_throughput")?,
+                higher_is_better: true,
+            });
         }
         other => bail!("bench-gate does not know bench '{other}'"),
     }
@@ -431,14 +438,19 @@ mod tests {
                 && !x.higher_is_better));
 
         let hotpath = Value::parse(
-            r#"{"bench":"hotpath","sharded_over_global_throughput":1.8}"#,
+            r#"{"bench":"hotpath","sharded_over_global_throughput":1.8,
+                "traced_over_untraced_throughput":0.95}"#,
         )
         .unwrap();
         let m = headline_metrics(&hotpath).unwrap();
-        assert_eq!(m.len(), 1);
+        assert_eq!(m.len(), 2);
         assert_eq!(m[0].name, "hotpath.sharded_over_global_throughput");
         assert!((m[0].value - 1.8).abs() < 1e-9);
-        assert!(m[0].higher_is_better);
+        assert!(m.iter().all(|x| x.higher_is_better));
+        assert!(m
+            .iter()
+            .any(|x| x.name == "hotpath.traced_over_untraced_throughput"
+                && (x.value - 0.95).abs() < 1e-9));
 
         assert!(headline_metrics(&Value::parse(r#"{"bench":"nope"}"#).unwrap()).is_err());
     }
@@ -471,7 +483,8 @@ mod tests {
         }
         std::fs::write(
             base.join("BENCH_hotpath.json"),
-            r#"{"bench":"hotpath","sharded_over_global_throughput":1.3}"#,
+            r#"{"bench":"hotpath","sharded_over_global_throughput":1.3,
+                "traced_over_untraced_throughput":0.9}"#,
         )
         .unwrap();
         // Terrible ratio, but flagged: the gate must pass and say why.
@@ -486,7 +499,8 @@ mod tests {
         // Same ratio unflagged: a real regression.
         std::fs::write(
             cur.join("BENCH_hotpath.json"),
-            r#"{"bench":"hotpath","sharded_over_global_throughput":0.9}"#,
+            r#"{"bench":"hotpath","sharded_over_global_throughput":0.9,
+                "traced_over_untraced_throughput":0.9}"#,
         )
         .unwrap();
         let err = run_gate(&cur, &base, DEFAULT_TOLERANCE).unwrap_err().to_string();
@@ -507,9 +521,10 @@ mod tests {
         assert!(report.contains("bench-gate OK"), "{report}");
         let st = self_test(&dir, DEFAULT_TOLERANCE).expect("self-test must pass");
         assert!(st.contains("self-test OK"), "{st}");
-        // The priority and hot-path headlines are part of the committed
-        // floor.
+        // The priority, hot-path, and tracing headlines are part of the
+        // committed floor.
         assert!(report.contains("interactive_p99_ratio_classful_over_fifo"), "{report}");
         assert!(report.contains("hotpath.sharded_over_global_throughput"), "{report}");
+        assert!(report.contains("hotpath.traced_over_untraced_throughput"), "{report}");
     }
 }

@@ -584,6 +584,7 @@ fn run_worker_has_no_inline_inference_path() {
                 },
                 work_stealing: true,
                 pooled_replies: true,
+                trace: None,
             };
             run_worker(&inst, exec, &queue, &peers, &wcfg, &sink, None)
         })
@@ -597,6 +598,7 @@ fn run_worker_has_no_inline_inference_path() {
             enqueued: Instant::now(),
             cache_key: None,
             tag: RequestTag::default(),
+            trace: None,
         };
         assert!(queue.try_push(req).is_ok(), "request {i} rejected");
         rxs.push((i, rx));
@@ -817,6 +819,7 @@ fn prop_no_class_starves_under_sustained_interactive_load() {
                 enqueued: std::time::Instant::now(),
                 cache_key: None,
                 tag: RequestTag::new(0, p),
+                trace: None,
             }
         };
         // Random interleave of the lower-class preload.
@@ -998,6 +1001,192 @@ fn prop_sharded_telemetry_merge_matches_global_collector() {
             rng.next_u64(),
         );
     }
+}
+
+// ---------------------------------------------------------------------------
+// Lifecycle-tracing plane: stage-histogram merge + event-ring properties.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_stage_histogram_shard_merge_is_bucket_exact() {
+    // Random per-shard TraceSample streams: the merged per-class stage
+    // histograms in `Telemetry::snapshot` must equal a single global
+    // collector bucket for bucket (and sum for sum) — the lossless-merge
+    // contract of `prop_sharded_telemetry_merge_matches_global_collector`
+    // extended to the tracing plane.  Per-board stage sets and the drift
+    // accumulators are replayed against per-shard replicas the same way.
+    use tinyml_codesign::fleet::trace::{DriftSample, StageSet, TraceSample};
+    let mut rng = SplitMix64::new(0x7ACE_0001);
+    for case in 0..25 {
+        let boards = 1 + rng.next_below(6) as usize;
+        let reg = Registry {
+            instances: (0..boards)
+                .map(|id| BoardInstance::synthetic(id, "kws", 100.0, 10.0, 1.5))
+                .collect(),
+        };
+        let t = Telemetry::new(boards);
+        let mut global: Vec<StageSet> = (0..3).map(|_| StageSet::default()).collect();
+        let mut local: Vec<StageSet> = (0..boards).map(|_| StageSet::default()).collect();
+        let mut drift_batches = vec![0u64; boards];
+        let mut drift_pred = vec![0f64; boards];
+        let mut drift_obs = vec![0u128; boards];
+        for _ in 0..200 {
+            let id = rng.next_below(boards as u64) as usize;
+            let n = 1 + rng.next_below(4) as usize;
+            let samples: Vec<TraceSample> = (0..n)
+                .map(|_| TraceSample {
+                    class: random_priority(&mut rng),
+                    queue_wait_us: rng.next_below(1 << 20),
+                    window_wait_us: rng.next_below(1 << 12),
+                    exec_us: rng.next_below(1 << 16),
+                    reply_us: rng.next_below(1 << 8),
+                })
+                .collect();
+            let drift = (rng.next_f64() < 0.7).then(|| DriftSample {
+                pred_us: 10.0 + rng.next_f64() * 1000.0,
+                obs_us: rng.next_below(1 << 16) as u128,
+            });
+            for s in &samples {
+                let spans = [s.queue_wait_us, s.window_wait_us, s.exec_us, s.reply_us];
+                for (st, &us) in spans.iter().enumerate() {
+                    global[s.class.idx()][st].record(us);
+                    local[id][st].record(us);
+                }
+            }
+            if let Some(d) = drift {
+                drift_batches[id] += 1;
+                drift_pred[id] += d.pred_us;
+                drift_obs[id] += d.obs_us;
+            }
+            t.record_trace(id, &samples, drift);
+        }
+        let snap = t.snapshot(&reg);
+        for (c, want) in global.iter().enumerate() {
+            match &snap.classes[c].stages {
+                Some(got) => assert_eq!(
+                    &got[..],
+                    &want[..],
+                    "case {case} class {c}: merged stage set diverged from the \
+                     global collector"
+                ),
+                None => assert!(
+                    want.iter().all(|h| h.is_empty()),
+                    "case {case} class {c}: stages missing despite recorded samples"
+                ),
+            }
+        }
+        for (id, want) in local.iter().enumerate() {
+            match &snap.per_board[id].stages {
+                Some(got) => assert_eq!(
+                    &got[..],
+                    &want[..],
+                    "case {case} board {id}: shard stage set diverged"
+                ),
+                None => assert!(
+                    want.iter().all(|h| h.is_empty()),
+                    "case {case} board {id}: stages missing despite samples"
+                ),
+            }
+            match &snap.per_board[id].drift {
+                Some(d) => {
+                    assert_eq!(d.batches, drift_batches[id], "case {case} board {id}");
+                    assert!(
+                        (d.predicted_exec_us - drift_pred[id]).abs() < 1e-6
+                            && (d.observed_exec_us - drift_obs[id] as f64).abs() < 1e-6,
+                        "case {case} board {id}: drift sums diverged"
+                    );
+                }
+                None => assert_eq!(
+                    drift_batches[id], 0,
+                    "case {case} board {id}: drift missing despite batches"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_event_ring_never_reorders_and_drops_only_above_capacity() {
+    // Random pushes scattered over the fleet ring and the board rings of
+    // one `EventLog`: sequence numbers come back strictly increasing in
+    // push order and in `dump_sorted`, nothing is dropped while the load
+    // fits under per-ring capacity, and every drop above capacity is
+    // counted (retained + dropped == pushed, always).
+    use tinyml_codesign::fleet::trace::{EventLog, FleetEvent, ShedReason};
+    let mut rng = SplitMix64::new(0x51E6_0001);
+    for case in 0..60 {
+        let cap = 1 + rng.next_below(64) as usize;
+        let n_rings = 1 + rng.next_below(4) as usize;
+        let log = EventLog::with_capacity(n_rings, cap);
+        let n_events = rng.next_below(3 * cap as u64 + 4) as usize;
+        let mut pushed: Vec<u64> = Vec::new();
+        for i in 0..n_events {
+            let ev = match rng.next_below(3) {
+                0 => FleetEvent::Shed {
+                    class: random_priority(&mut rng),
+                    reason: ShedReason::ALL[rng.next_below(3) as usize],
+                },
+                1 => FleetEvent::Steal { thief: i, stolen: 1 + rng.next_below(4) },
+                _ => FleetEvent::CacheInsertDenied {
+                    task: "kws".into(),
+                    class: random_priority(&mut rng),
+                },
+            };
+            let seq = if rng.next_f64() < 0.25 {
+                log.record_fleet(ev)
+            } else {
+                log.ring(rng.next_below(n_rings as u64) as usize).push(ev)
+            };
+            pushed.push(seq);
+        }
+        assert!(
+            pushed.windows(2).all(|w| w[0] < w[1]),
+            "case {case}: sequence numbers not allocated in push order"
+        );
+        let dump = log.dump_sorted();
+        assert!(
+            dump.windows(2).all(|w| w[0].seq < w[1].seq),
+            "case {case}: dump_sorted reordered events"
+        );
+        let dropped = log.total_dropped() as usize;
+        assert_eq!(
+            dump.len() + dropped,
+            n_events,
+            "case {case}: events lost without being counted as dropped"
+        );
+        if n_events <= cap {
+            // Under per-ring capacity no ring can overflow no matter how
+            // the scatter fell, so retention must be verbatim.
+            assert_eq!(dropped, 0, "case {case}: dropped below capacity");
+            let seqs: Vec<u64> = dump.iter().map(|e| e.seq).collect();
+            assert_eq!(seqs, pushed, "case {case}: retained events diverged");
+        }
+    }
+    // Concurrent pushers into one ring: the sequence is allocated under
+    // the ring lock, so the stored order must still be strictly
+    // increasing and nothing drops when the total fits the capacity.
+    let log = EventLog::with_capacity(1, 256);
+    let ring = log.ring(0);
+    std::thread::scope(|s| {
+        for t in 0..4usize {
+            let ring = ring.clone();
+            s.spawn(move || {
+                for i in 0u64..64 {
+                    ring.push(tinyml_codesign::fleet::trace::FleetEvent::Steal {
+                        thief: t,
+                        stolen: i,
+                    });
+                }
+            });
+        }
+    });
+    let snap = ring.snapshot();
+    assert_eq!(snap.len(), 256, "concurrent pushes under capacity must all land");
+    assert!(
+        snap.windows(2).all(|w| w[0].seq < w[1].seq),
+        "concurrent pushes stored out of sequence order"
+    );
+    assert_eq!(log.total_dropped(), 0);
 }
 
 // ---------------------------------------------------------------------------
