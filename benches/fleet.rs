@@ -123,7 +123,7 @@ fn run_policy(policy: Policy, name: &'static str, requests: usize) -> PolicyResu
         }
     }
     for rx in pending {
-        rx.recv().unwrap();
+        rx.recv().unwrap().unwrap();
     }
     let wall = t0.elapsed().as_secs_f64();
     let summary = fleet.shutdown();
@@ -212,7 +212,7 @@ fn run_bursty(elastic: bool, per_burst: usize) -> BurstyResult {
             precise_sleep(arrival);
         }
         for rx in pending {
-            rx.recv().expect("request dropped");
+            rx.recv().expect("request dropped").expect("request failed");
         }
         let alive: usize =
             BURST_TASKS.iter().map(|t| fleet.active_replicas(t)).sum();
@@ -291,7 +291,7 @@ fn run_contended(fifo: bool, requests: usize) -> ContendedResult {
         precise_sleep(arrival);
     }
     for rx in pending {
-        rx.recv().expect("admitted request dropped");
+        rx.recv().expect("admitted request dropped").expect("request failed");
     }
     let summary = fleet.shutdown();
     ContendedResult { snapshot: summary.snapshot, submitted: requests }

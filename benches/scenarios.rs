@@ -1,0 +1,405 @@
+//! Bench: seeded resilience scenarios — the chaos/health/recovery plane
+//! under three scripted failures.
+//!
+//! **Scenario 1 — kill the fastest replica mid-burst.**  Two
+//! heterogeneous KWS replicas; `kill=fastest@3` makes the fast one fail
+//! every batch from its 3rd on.  The health controller must eject it
+//! (consecutive-failure signal) while the retry pump re-routes the
+//! failed batches to the survivor.  Self-checking: **every** admitted
+//! request resolves with a reply — zero lost, zero typed failures — and
+//! exactly one ejection fires.  Headlines: `kill_resolved_fraction`
+//! (1.0) and `kill_ejected` (1.0).
+//!
+//! **Scenario 2 — slow brownout.**  Same fleet, run twice: a healthy
+//! control and a degraded run where `slow=4x0` stretches replica 0's
+//! device hold 4x (the board still answers — only the drift signal can
+//! see it).  The drift-vs-flow accumulator trips, the brownout replica
+//! is ejected, and the tail is bounded: p99(degraded) / p99(healthy)
+//! stays under a generous ceiling because work stealing and then
+//! ejection keep requests off the sick board.  Headline:
+//! `p99_under_failure_ratio` (lower is better, ceiling 8.0).
+//!
+//! **Scenario 3 — flash crowd on a degraded fleet.**  A replica is dead
+//! on arrival (`kill=0@1`); a trickle gets it ejected, then a flash
+//! crowd bursts onto the survivor.  Self-checking: the degraded fleet
+//! serves the whole burst.  Headline: `recovery_served_fraction`
+//! (floor 0.95; expected 1.0).  `time_to_recover_ms` (trickle start to
+//! ejection) is emitted for trend-watching but not gated — it is an
+//! absolute timing, and the gate holds only dimensionless ratios.
+//!
+//! Writes `BENCH_scenarios.json` the way `benches/fleet.rs` writes
+//! `BENCH_fleet.json`; the bench-gate holds the headline ratios as a CI
+//! floor.  Every fault is seeded (`ChaosSpec` + SplitMix64 per replica)
+//! so runs replay.  `BENCH_QUICK=1` cuts trace sizes but keeps every
+//! assertion.
+
+use std::time::{Duration, Instant};
+use tinyml_codesign::fleet::worker::precise_sleep;
+use tinyml_codesign::fleet::{
+    BoardInstance, ChaosSpec, Fleet, FleetConfig, HealthConfig, Policy, Registry,
+    ReplyReceiver, RouteError,
+};
+use tinyml_codesign::report::json::{num, obj, s, Value};
+
+const TIME_SCALE: f64 = 20.0;
+/// A reply that takes this long is a lost request, not a slow one.
+const RECV_TIMEOUT: Duration = Duration::from_secs(10);
+
+fn quick() -> bool {
+    std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Two KWS replicas: id 0 the slower workhorse, id 1 the fast one
+/// (`kill=fastest` resolves to id 1).  Batched service rates at
+/// `TIME_SCALE` 20: ~417 req/s (id 0) and ~833 req/s (id 1).
+fn two_replica_registry() -> Registry {
+    Registry {
+        instances: vec![
+            BoardInstance::synthetic(0, "kws", 400.0, 80.0, 1.5),
+            BoardInstance::synthetic(1, "kws", 200.0, 40.0, 1.2),
+        ],
+    }
+}
+
+/// Health knobs tuned for time-scaled simulation: sample fast, eject on
+/// a 2-failure streak or a 2x drift ratio over >= 4 batches.
+fn scenario_health() -> HealthConfig {
+    HealthConfig {
+        interval: Duration::from_millis(1),
+        max_consecutive_failures: 2,
+        max_drift_ratio: 2.0,
+        min_drift_batches: 4,
+        ..Default::default()
+    }
+}
+
+fn scenario_config(chaos: Option<ChaosSpec>) -> FleetConfig {
+    FleetConfig {
+        policy: Policy::LeastLoaded,
+        queue_cap: 1024,
+        time_scale: TIME_SCALE,
+        chaos,
+        health: Some(scenario_health()),
+        // Generous: before ejection lands, a dead replica can steal a
+        // request back and fail it again; the budget must outlast that
+        // window (each failed attempt is cheap — an immediate error).
+        retry_budget: 50,
+        ..Default::default()
+    }
+}
+
+/// Submit `n` requests paced `gap` apart, retrying on backpressure.
+fn submit_paced(
+    fleet: &Fleet,
+    n: usize,
+    gap: Duration,
+) -> Vec<ReplyReceiver> {
+    let handle = fleet.handle();
+    let x = vec![0.2f32; tinyml_codesign::data::feature_dim("kws")];
+    let mut pending = Vec::with_capacity(n);
+    for _ in 0..n {
+        loop {
+            match handle.submit("kws", x.clone()) {
+                Ok(rx) => {
+                    pending.push(rx);
+                    break;
+                }
+                Err(RouteError::Overloaded) => {
+                    std::thread::sleep(Duration::from_micros(100));
+                }
+                Err(e) => panic!("unexpected rejection: {e:?}"),
+            }
+        }
+        precise_sleep(gap);
+    }
+    pending
+}
+
+/// Drain every receiver: `(ok, failed, lost)`.  `lost` > 0 means a
+/// reply sender was dropped without an outcome — the exact bug the
+/// retry pump exists to make impossible.
+fn drain(pending: Vec<ReplyReceiver>) -> (usize, usize, usize) {
+    let (mut ok, mut failed, mut lost) = (0usize, 0usize, 0usize);
+    for rx in pending {
+        match rx.recv_timeout(RECV_TIMEOUT) {
+            Ok(Ok(_)) => ok += 1,
+            Ok(Err(_)) => failed += 1,
+            Err(_) => lost += 1,
+        }
+    }
+    (ok, failed, lost)
+}
+
+/// Block until the fleet reports at least one ejection (panics after
+/// `deadline` — a sick replica the health controller never catches is a
+/// scenario failure, not a timeout).
+fn await_ejection(fleet: &Fleet, deadline: Duration, what: &str) -> Duration {
+    let t0 = Instant::now();
+    while fleet.ejections() == 0 {
+        assert!(
+            t0.elapsed() < deadline,
+            "{what}: no ejection within {deadline:?}"
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    t0.elapsed()
+}
+
+// ---------------------------------------------------------------------------
+// Scenario 1: kill the fastest replica mid-burst.
+// ---------------------------------------------------------------------------
+
+struct KillResult {
+    submitted: usize,
+    ok: usize,
+    failed: usize,
+    lost: usize,
+    ejections: u64,
+    exec_failures: u64,
+    time_to_eject_ms: f64,
+    eject_reason: String,
+}
+
+fn run_kill(requests: usize) -> KillResult {
+    let spec = ChaosSpec::parse("kill=fastest@3", 0xC4A05).unwrap();
+    let fleet = Fleet::start(two_replica_registry(), scenario_config(Some(spec))).unwrap();
+    let t0 = Instant::now();
+    // ~333 req/s: above half the fleet's healthy rate, under what the
+    // surviving workhorse alone can absorb after the ejection.
+    let pending = submit_paced(&fleet, requests, Duration::from_micros(3000));
+    let (ok, failed, lost) = drain(pending);
+    await_ejection(&fleet, Duration::from_secs(5), "kill scenario");
+    let time_to_eject_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let summary = fleet.shutdown();
+    let eject_reason = summary
+        .snapshot
+        .scale_events
+        .iter()
+        .find(|e| e.reason.starts_with("ejected:"))
+        .map(|e| e.reason.clone())
+        .unwrap_or_default();
+    KillResult {
+        submitted: requests,
+        ok,
+        failed,
+        lost,
+        ejections: summary.snapshot.ejections,
+        exec_failures: summary.snapshot.per_board.iter().map(|b| b.exec_failures).sum(),
+        time_to_eject_ms,
+        eject_reason,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scenario 2: slow brownout, healthy control vs degraded run.
+// ---------------------------------------------------------------------------
+
+struct BrownoutLeg {
+    p99_us: f64,
+    served: u64,
+    ejections: u64,
+    lost: usize,
+}
+
+fn run_brownout_leg(requests: usize, degraded: bool) -> BrownoutLeg {
+    let chaos = degraded.then(|| ChaosSpec::parse("slow=4x0", 0xB10).unwrap());
+    let fleet = Fleet::start(two_replica_registry(), scenario_config(chaos)).unwrap();
+    let pending = submit_paced(&fleet, requests, Duration::from_micros(3000));
+    let (ok, failed, lost) = drain(pending);
+    assert_eq!(failed, 0, "a slowdown must not fail requests");
+    if degraded {
+        // The brownout board still answers; only drift can convict it.
+        await_ejection(&fleet, Duration::from_secs(5), "brownout scenario");
+    }
+    let summary = fleet.shutdown();
+    assert_eq!(ok + lost, requests);
+    BrownoutLeg {
+        p99_us: summary.snapshot.p99_us,
+        served: summary.snapshot.served,
+        ejections: summary.snapshot.ejections,
+        lost,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scenario 3: flash crowd on a degraded fleet.
+// ---------------------------------------------------------------------------
+
+struct FlashCrowdResult {
+    burst: usize,
+    ok: usize,
+    failed: usize,
+    lost: usize,
+    time_to_recover_ms: f64,
+    served_fraction: f64,
+}
+
+fn run_flash_crowd(trickle: usize, burst: usize) -> FlashCrowdResult {
+    // Replica 0 is dead on arrival; the fast replica survives.
+    let spec = ChaosSpec::parse("kill=0@1", 0xF1A5).unwrap();
+    let fleet = Fleet::start(two_replica_registry(), scenario_config(Some(spec))).unwrap();
+    let t0 = Instant::now();
+    // Trickle phase: enough traffic to trip the failure streak.
+    let warm = submit_paced(&fleet, trickle, Duration::from_micros(2000));
+    await_ejection(&fleet, Duration::from_secs(5), "flash-crowd scenario");
+    let time_to_recover_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let (warm_ok, warm_failed, warm_lost) = drain(warm);
+    assert_eq!(warm_lost, 0, "trickle lost requests");
+    assert_eq!(warm_failed, 0, "trickle exhausted a retry budget");
+    assert_eq!(warm_ok, trickle);
+    // Flash crowd: open the floodgates on the surviving replica.
+    let pending = submit_paced(&fleet, burst, Duration::ZERO);
+    let (ok, failed, lost) = drain(pending);
+    fleet.shutdown();
+    FlashCrowdResult {
+        burst,
+        ok,
+        failed,
+        lost,
+        time_to_recover_ms,
+        served_fraction: ok as f64 / burst as f64,
+    }
+}
+
+fn main() {
+    let quick = quick();
+    let kill_requests = if quick { 80 } else { 160 };
+    let brownout_requests = if quick { 80 } else { 160 };
+    let (trickle, burst) = if quick { (30, 120) } else { (40, 240) };
+
+    println!(
+        "[bench] scenario 1: kill=fastest@3 over {kill_requests} requests \
+         (2 kws replicas, time_scale {TIME_SCALE}{})",
+        if quick { ", quick mode" } else { "" }
+    );
+    let kill = run_kill(kill_requests);
+    println!(
+        "[bench] kill      : {}/{} resolved ok ({} typed-failed, {} lost), \
+         {} ejection(s) in {:.0} ms ({}), {} exec failures absorbed",
+        kill.ok,
+        kill.submitted,
+        kill.failed,
+        kill.lost,
+        kill.ejections,
+        kill.time_to_eject_ms,
+        kill.eject_reason,
+        kill.exec_failures
+    );
+
+    println!(
+        "\n[bench] scenario 2: slow=4x0 brownout vs healthy control \
+         ({brownout_requests} requests each)"
+    );
+    let healthy = run_brownout_leg(brownout_requests, false);
+    let degraded = run_brownout_leg(brownout_requests, true);
+    let p99_ratio = degraded.p99_us / healthy.p99_us.max(1e-9);
+    println!(
+        "[bench] healthy   : p99 {:>9.1} us ({} served, {} ejections)",
+        healthy.p99_us, healthy.served, healthy.ejections
+    );
+    println!(
+        "[bench] degraded  : p99 {:>9.1} us ({} served, {} ejections) -> \
+         ratio {p99_ratio:.2} (ceiling 8.0)",
+        degraded.p99_us, degraded.served, degraded.ejections
+    );
+
+    println!(
+        "\n[bench] scenario 3: flash crowd of {burst} on a fleet with a \
+         dead-on-arrival replica ({trickle}-request trickle first)"
+    );
+    let crowd = run_flash_crowd(trickle, burst);
+    println!(
+        "[bench] flash     : {}/{} served ({} typed-failed, {} lost), \
+         recovered in {:.0} ms",
+        crowd.ok, crowd.burst, crowd.failed, crowd.lost, crowd.time_to_recover_ms
+    );
+
+    let kill_resolved_fraction = kill.ok as f64 / kill.submitted as f64;
+    let kill_ejected = if kill.ejections >= 1 { 1.0 } else { 0.0 };
+    let doc = obj(vec![
+        ("bench", s("scenarios")),
+        ("quick", Value::Bool(quick)),
+        (
+            "kill",
+            obj(vec![
+                ("submitted", num(kill.submitted as f64)),
+                ("ok", num(kill.ok as f64)),
+                ("failed", num(kill.failed as f64)),
+                ("lost", num(kill.lost as f64)),
+                ("ejections", num(kill.ejections as f64)),
+                ("exec_failures", num(kill.exec_failures as f64)),
+                ("time_to_eject_ms", num(kill.time_to_eject_ms)),
+                ("eject_reason", s(&kill.eject_reason)),
+                ("resolved_fraction", num(kill_resolved_fraction)),
+                ("ejected", num(kill_ejected)),
+            ]),
+        ),
+        (
+            "brownout",
+            obj(vec![
+                ("requests", num(brownout_requests as f64)),
+                ("healthy_p99_us", num(healthy.p99_us)),
+                ("degraded_p99_us", num(degraded.p99_us)),
+                ("degraded_ejections", num(degraded.ejections as f64)),
+                ("p99_under_failure_ratio", num(p99_ratio)),
+            ]),
+        ),
+        (
+            "flash_crowd",
+            obj(vec![
+                ("trickle", num(trickle as f64)),
+                ("burst", num(crowd.burst as f64)),
+                ("ok", num(crowd.ok as f64)),
+                ("failed", num(crowd.failed as f64)),
+                ("lost", num(crowd.lost as f64)),
+                ("time_to_recover_ms", num(crowd.time_to_recover_ms)),
+                ("recovery_served_fraction", num(crowd.served_fraction)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_scenarios.json", doc.to_json())
+        .expect("write BENCH_scenarios.json");
+    println!("[bench] wrote BENCH_scenarios.json");
+
+    // Self-checks.  Scenario 1: conservation under failure — the whole
+    // point of the retry pump.
+    assert_eq!(kill.lost, 0, "kill scenario lost {} requests", kill.lost);
+    assert_eq!(
+        kill.failed, 0,
+        "kill scenario exhausted {} retry budgets",
+        kill.failed
+    );
+    assert_eq!(kill.ok, kill.submitted, "every admitted request must resolve ok");
+    assert_eq!(kill.ejections, 1, "exactly the kill victim gets ejected");
+    assert!(
+        kill.eject_reason.starts_with("ejected:failures:"),
+        "a dead board is convicted by its failure streak, got '{}'",
+        kill.eject_reason
+    );
+    assert!(kill.exec_failures > 0, "the kill must actually fail batches");
+    // Scenario 2: the brownout is detected by drift alone and the tail
+    // stays bounded.
+    assert_eq!(healthy.ejections, 0, "the healthy control must not eject");
+    assert_eq!(healthy.lost + degraded.lost, 0, "brownout legs lost requests");
+    assert_eq!(degraded.ejections, 1, "drift must convict the browned-out board");
+    assert!(
+        p99_ratio <= 8.0,
+        "p99 under brownout {:.1} us must stay within 8x healthy {:.1} us \
+         (ratio {p99_ratio:.2})",
+        degraded.p99_us,
+        healthy.p99_us
+    );
+    // Scenario 3: a freshly degraded fleet still serves the flash crowd.
+    assert_eq!(crowd.lost, 0, "flash crowd lost {} requests", crowd.lost);
+    assert!(
+        crowd.served_fraction >= 0.95,
+        "degraded fleet served only {:.3} of the flash crowd",
+        crowd.served_fraction
+    );
+    println!(
+        "[bench] OK: kill resolved {}/{} with {} ejection(s); brownout p99 ratio \
+         {p99_ratio:.2} <= 8.0 with a drift ejection; flash crowd served \
+         {:.3} >= 0.95",
+        kill.ok, kill.submitted, kill.ejections, crowd.served_fraction
+    );
+}

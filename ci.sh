@@ -24,7 +24,7 @@ run cargo build --release
 run cargo test -q
 
 if [ "${1:-}" = "fast" ]; then
-    echo "==> skipping kernels+fleet+hotpath benches, bench gate, cargo doc, pjrt check, fmt/clippy (fast mode)"
+    echo "==> skipping kernels+fleet+hotpath+scenarios benches, bench gate, chaos smoke, cargo doc, pjrt check, fmt/clippy (fast mode)"
     exit 0
 fi
 
@@ -47,6 +47,26 @@ run env BENCH_QUICK=1 cargo bench --bench fleet
 # lifecycle-tracing leg (1-in-16 sampling >= 0.9x untraced).  Emits
 # BENCH_hotpath.json.
 run env BENCH_QUICK=1 cargo bench --bench hotpath
+
+# Resilience self-check: seeded kill / brownout / flash-crowd scenarios
+# against the chaos+health+retry plane (floors: zero lost requests and
+# an automatic ejection under a single-replica kill, brownout p99 within
+# 8x the healthy control, flash crowd >= 0.95 served on a degraded
+# fleet).  Emits BENCH_scenarios.json.
+run env BENCH_QUICK=1 cargo bench --bench scenarios
+
+# Chaos smoke: a fleet run with a seeded replica kill must eject the
+# victim and still resolve every admitted request (the machine-parseable
+# `chaos:` line carries ejections/served/failed/lost).
+echo "==> fleet --chaos kill=0@2 | ejection + conservation check"
+cargo run --release -q -- fleet --chaos kill=0@2 --requests 200 \
+  | awk '/^chaos: /{ line=$0 }
+         END {
+           if (line == "") { print "no chaos: line in fleet output"; exit 1 }
+           print "==> " line
+           if (line !~ /lost=0$/)       { print "chaos smoke: lost requests"; exit 1 }
+           if (line ~ /ejections=0 /)   { print "chaos smoke: no ejection"; exit 1 }
+         }'
 
 # Tracing smoke: a sampled fleet run must round-trip (stage histograms,
 # drift, and shed reasons ride the normal report), and the event-ring

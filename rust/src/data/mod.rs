@@ -248,6 +248,18 @@ pub fn feature_dim(task: &str) -> usize {
     }
 }
 
+/// Non-panicking [`feature_dim`]: `None` for task names outside the
+/// MLPerf Tiny trio (hand-built registries may host anything; callers
+/// that can't know the dimension skip validation instead of panicking).
+pub fn feature_dim_of(task: &str) -> Option<usize> {
+    match task {
+        "ic" => Some(IC_DIM),
+        "kws" => Some(KWS_DIM),
+        "ad" => Some(AD_DIM),
+        _ => None,
+    }
+}
+
 /// ROC AUC from (score, is_anomaly) pairs — the AD quality metric (§2.2).
 pub fn roc_auc(scores: &[(f32, bool)]) -> f64 {
     let mut pos: Vec<f32> = scores.iter().filter(|s| s.1).map(|s| s.0).collect();

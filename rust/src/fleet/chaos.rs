@@ -1,0 +1,516 @@
+//! Seeded, replayable fault injection for the serving plane.
+//!
+//! A [`ChaosSpec`] is a compact, `Copy` description of what should go
+//! wrong (parsed from the CLI `fleet --chaos <spec> --chaos-seed N`);
+//! [`FaultPlan::materialize`] resolves it against a concrete
+//! [`Registry`](super::registry::Registry) into per-replica
+//! [`ReplicaFaults`] schedules — picking the *fastest* replica as the
+//! kill victim when asked, but never a task's last replica, so a plan
+//! can always be survived.  Each faulted replica's executor is wrapped
+//! in a [`ChaosExecutor`], which perturbs the batch boundary only:
+//!
+//! - **transient exec errors** — each batch fails with probability
+//!   `exec=P` (seeded per replica, so runs replay exactly);
+//! - **permanent death** — `kill=ID@B` / `kill=fastest@B` makes every
+//!   batch from the victim's `B`-th on return an error, forever (the
+//!   worker keeps draining; health ejects it);
+//! - **latency inflation** — `slow=FxID` stretches the victim's device
+//!   hold by `F` (a brownout the drift accumulator can see);
+//! - **queue-stall windows** — `stall=US@EVERY` freezes every replica
+//!   for `US` µs on every `EVERY`-th batch;
+//! - **worker panic** — `panic=ID@B` panics *inside* `execute` on the
+//!   victim's `B`-th batch (the worker's `catch_unwind` converts it
+//!   into a failed batch — the thread itself must survive).
+//!
+//! Injection happens entirely behind [`BatchExecutor`], so the worker
+//! loop, the router, and the recovery machinery are exercised exactly
+//! as a real device failure would exercise them.
+
+use super::registry::Registry;
+use super::worker::{precise_sleep, DataflowTiming};
+use crate::coordinator::engine::BatchExecutor;
+use crate::data::prng::SplitMix64;
+use crate::error::{bail, Result};
+use std::time::Duration;
+
+/// Which replica a targeted fault hits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Victim {
+    /// The registry's fastest eligible replica (smallest `ii_s` whose
+    /// task keeps at least one other replica) — resolved at
+    /// [`FaultPlan::materialize`] time.
+    Fastest,
+    /// An explicit instance id.
+    Replica(usize),
+}
+
+/// Compact, `Copy` fault description (rides inside
+/// [`FleetConfig`](super::FleetConfig), which stays `Copy`).
+/// Parse one from the CLI grammar with [`ChaosSpec::parse`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChaosSpec {
+    /// Per-batch transient execute-failure probability on every replica
+    /// (`exec=P`, 0.0 = off).
+    pub exec_fail_p: f64,
+    /// Permanently kill this victim after it has executed `kill_after`
+    /// batches (`kill=ID@B` / `kill=fastest@B`).
+    pub kill: Option<Victim>,
+    /// Batch index (1-based) from which the kill victim fails forever.
+    pub kill_after: u64,
+    /// Inflate this victim's device hold by `slow_factor`
+    /// (`slow=FxID`).
+    pub slow: Option<usize>,
+    /// Device-hold inflation factor for the slow victim (> 1.0).
+    pub slow_factor: f64,
+    /// Extra µs of stall injected on stall batches (`stall=US@EVERY`).
+    pub stall_us: u64,
+    /// Every `stall_every`-th batch on every replica stalls (0 = off).
+    pub stall_every: u64,
+    /// Panic inside `execute` on this victim's `panic_after`-th batch
+    /// (`panic=ID@B`); repeats every batch after, like a kill that
+    /// unwinds instead of erroring.
+    pub panic_on: Option<usize>,
+    /// Batch index (1-based) from which the panic victim unwinds.
+    pub panic_after: u64,
+    /// Root seed; each replica derives its own stream, so runs replay.
+    pub seed: u64,
+}
+
+impl Default for ChaosSpec {
+    fn default() -> Self {
+        ChaosSpec {
+            exec_fail_p: 0.0,
+            kill: None,
+            kill_after: 1,
+            slow: None,
+            slow_factor: 1.0,
+            stall_us: 0,
+            stall_every: 0,
+            panic_on: None,
+            panic_after: 1,
+            seed: 0,
+        }
+    }
+}
+
+impl ChaosSpec {
+    /// Parse the CLI grammar: comma-separated clauses out of
+    /// `exec=P`, `kill=ID@B`, `kill=fastest@B`, `slow=FxID`,
+    /// `stall=US@EVERY`, `panic=ID@B`.  Example:
+    /// `exec=0.05,kill=fastest@40,stall=500@16`.
+    pub fn parse(spec: &str, seed: u64) -> Result<ChaosSpec> {
+        let mut out = ChaosSpec { seed, ..ChaosSpec::default() };
+        for clause in spec.split(',').filter(|c| !c.is_empty()) {
+            let Some((key, val)) = clause.split_once('=') else {
+                bail!("chaos clause '{clause}' is not key=value");
+            };
+            match key {
+                "exec" => {
+                    let p: f64 = val
+                        .parse()
+                        .map_err(|_| crate::error::anyhow!("bad exec prob '{val}'"))?;
+                    if !(0.0..=1.0).contains(&p) {
+                        bail!("exec probability {p} outside [0, 1]");
+                    }
+                    out.exec_fail_p = p;
+                }
+                "kill" => {
+                    let (who, at) = split_at_clause(val, clause)?;
+                    out.kill = Some(if who == "fastest" {
+                        Victim::Fastest
+                    } else {
+                        Victim::Replica(parse_usize(who, clause)?)
+                    });
+                    out.kill_after = at.max(1);
+                }
+                "slow" => {
+                    let Some((f, id)) = val.split_once('x') else {
+                        bail!("slow clause '{clause}' is not FACTORxID");
+                    };
+                    let factor: f64 = f
+                        .parse()
+                        .map_err(|_| crate::error::anyhow!("bad slow factor '{f}'"))?;
+                    if factor <= 1.0 {
+                        bail!("slow factor {factor} must exceed 1.0");
+                    }
+                    out.slow = Some(parse_usize(id, clause)?);
+                    out.slow_factor = factor;
+                }
+                "stall" => {
+                    let (us, every) = split_at_clause(val, clause)?;
+                    out.stall_us = parse_usize(us, clause)? as u64;
+                    out.stall_every = every.max(1);
+                }
+                "panic" => {
+                    let (who, at) = split_at_clause(val, clause)?;
+                    out.panic_on = Some(parse_usize(who, clause)?);
+                    out.panic_after = at.max(1);
+                }
+                other => bail!("unknown chaos clause '{other}'"),
+            }
+        }
+        Ok(out)
+    }
+
+    /// True when the spec injects nothing.
+    pub fn is_noop(&self) -> bool {
+        self.exec_fail_p == 0.0
+            && self.kill.is_none()
+            && self.slow.is_none()
+            && self.stall_every == 0
+            && self.panic_on.is_none()
+    }
+}
+
+/// `VAL@N` → (`VAL`, `N`); the `@N` part is required.
+fn split_at_clause<'a>(val: &'a str, clause: &str) -> Result<(&'a str, u64)> {
+    let Some((v, at)) = val.split_once('@') else {
+        bail!("chaos clause '{clause}' is missing '@N'");
+    };
+    let n: u64 = at
+        .parse()
+        .map_err(|_| crate::error::anyhow!("bad batch count '{at}' in '{clause}'"))?;
+    Ok((v, n))
+}
+
+fn parse_usize(v: &str, clause: &str) -> Result<usize> {
+    v.parse()
+        .map_err(|_| crate::error::anyhow!("bad replica id '{v}' in '{clause}'"))
+}
+
+/// The schedule one faulted replica's [`ChaosExecutor`] follows.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReplicaFaults {
+    /// Per-batch transient failure probability.
+    pub exec_fail_p: f64,
+    /// Fail every batch from this 1-based batch index on (permanent
+    /// death).
+    pub kill_after: Option<u64>,
+    /// Device-hold inflation factor (1.0 = none).
+    pub slow_factor: f64,
+    /// Extra stall per stall batch, µs.
+    pub stall_us: u64,
+    /// Every `stall_every`-th batch stalls (0 = off).
+    pub stall_every: u64,
+    /// Panic on every batch from this 1-based batch index on.
+    pub panic_after: Option<u64>,
+    /// Per-replica seed (derived from the spec seed + replica id).
+    pub seed: u64,
+}
+
+impl ReplicaFaults {
+    fn is_noop(&self) -> bool {
+        self.exec_fail_p == 0.0
+            && self.kill_after.is_none()
+            && self.slow_factor <= 1.0
+            && self.stall_every == 0
+            && self.panic_after.is_none()
+    }
+}
+
+/// A [`ChaosSpec`] resolved against a concrete registry: one optional
+/// fault schedule per replica slot.  Replicas added *after*
+/// materialization (autoscale, recovery) get no faults — new hardware
+/// is healthy.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    faults: Vec<Option<ReplicaFaults>>,
+}
+
+impl FaultPlan {
+    /// Resolve `spec` against `reg`.  `kill=fastest` picks the replica
+    /// with the smallest `ii_s` whose task keeps at least one other
+    /// replica (so the plan is survivable); errors when a targeted
+    /// victim id does not exist or when no kill victim is eligible.
+    pub fn materialize(spec: &ChaosSpec, reg: &Registry) -> Result<FaultPlan> {
+        let kill_victim = match spec.kill {
+            None => None,
+            Some(Victim::Replica(id)) => {
+                if id >= reg.len() {
+                    bail!("chaos kill victim {id} does not exist");
+                }
+                Some(id)
+            }
+            Some(Victim::Fastest) => {
+                let victim = reg
+                    .instances
+                    .iter()
+                    .filter(|i| {
+                        reg.instances.iter().any(|j| j.task == i.task && j.id != i.id)
+                    })
+                    .min_by(|a, b| a.ii_s.total_cmp(&b.ii_s))
+                    .map(|i| i.id);
+                let Some(v) = victim else {
+                    bail!("chaos kill=fastest: no task has a second replica to survive on");
+                };
+                Some(v)
+            }
+        };
+        for &(who, id) in &[("slow", spec.slow), ("panic", spec.panic_on)] {
+            if let Some(id) = id {
+                if id >= reg.len() {
+                    bail!("chaos {who} victim {id} does not exist");
+                }
+            }
+        }
+        let faults = (0..reg.len())
+            .map(|id| {
+                let f = ReplicaFaults {
+                    exec_fail_p: spec.exec_fail_p,
+                    kill_after: (kill_victim == Some(id)).then_some(spec.kill_after),
+                    slow_factor: if spec.slow == Some(id) {
+                        spec.slow_factor
+                    } else {
+                        1.0
+                    },
+                    stall_us: spec.stall_us,
+                    stall_every: spec.stall_every,
+                    panic_after: (spec.panic_on == Some(id)).then_some(spec.panic_after),
+                    // SplitMix64 decorrelates consecutive seeds, so
+                    // seed + id gives each replica its own stream.
+                    seed: spec.seed.wrapping_add(id as u64),
+                };
+                (!f.is_noop()).then_some(f)
+            })
+            .collect();
+        Ok(FaultPlan { faults })
+    }
+
+    /// The fault schedule for replica `id` (`None` = healthy, including
+    /// every id past the materialized registry).
+    pub fn for_replica(&self, id: usize) -> Option<ReplicaFaults> {
+        self.faults.get(id).copied().flatten()
+    }
+
+    /// The resolved kill victim, if the plan has one.
+    pub fn kill_victim(&self) -> Option<usize> {
+        self.faults
+            .iter()
+            .position(|f| f.map(|f| f.kill_after.is_some()).unwrap_or(false))
+    }
+}
+
+/// [`BatchExecutor`] wrapper that injects one replica's faults at the
+/// batch boundary, then delegates.  Capacity and shape queries pass
+/// through untouched, so the worker's staging is identical with chaos
+/// on or off.
+pub struct ChaosExecutor<E> {
+    inner: E,
+    faults: ReplicaFaults,
+    /// The replica's own timing model — sizes the slowdown hold so
+    /// `slow=F` means "F× the flow-predicted device time", matching
+    /// what a browned-out board would measure.
+    timing: DataflowTiming,
+    rng: SplitMix64,
+    batches: u64,
+}
+
+impl<E> ChaosExecutor<E> {
+    pub fn new(inner: E, faults: ReplicaFaults, timing: DataflowTiming) -> Self {
+        let rng = SplitMix64::new(faults.seed);
+        ChaosExecutor { inner, faults, timing, rng, batches: 0 }
+    }
+
+    /// Batches seen so far (tests).
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+}
+
+impl<E: BatchExecutor> BatchExecutor for ChaosExecutor<E> {
+    fn device_batch(&mut self) -> Result<usize> {
+        self.inner.device_batch()
+    }
+
+    fn input_elems(&self) -> usize {
+        self.inner.input_elems()
+    }
+
+    fn num_outputs(&self) -> usize {
+        self.inner.num_outputs()
+    }
+
+    fn execute(&mut self, x: &[f32], n: usize, out: &mut [f32]) -> Result<()> {
+        self.batches += 1;
+        let b = self.batches;
+        if let Some(at) = self.faults.panic_after {
+            if b >= at {
+                // The worker's catch_unwind turns this into a failed
+                // batch; the executor stays usable for the next one.
+                panic!("chaos: injected worker panic at batch {b}");
+            }
+        }
+        if let Some(at) = self.faults.kill_after {
+            if b >= at {
+                bail!("chaos: replica dead since batch {at}");
+            }
+        }
+        if self.faults.stall_every > 0 && b % self.faults.stall_every == 0 {
+            precise_sleep(Duration::from_micros(self.faults.stall_us));
+        }
+        if self.faults.exec_fail_p > 0.0 && self.rng.next_f64() < self.faults.exec_fail_p
+        {
+            bail!("chaos: transient execute failure at batch {b}");
+        }
+        if self.faults.slow_factor > 1.0 {
+            // The inner executor holds 1× already; add the excess.
+            let extra_s = self.timing.batch_device_s(n)
+                * self.timing.time_scale
+                * (self.faults.slow_factor - 1.0);
+            if extra_s > 0.0 {
+                precise_sleep(Duration::from_secs_f64(extra_s));
+            }
+        }
+        self.inner.execute(x, n, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::registry::BoardInstance;
+    use crate::fleet::worker::SimBoardExecutor;
+
+    fn two_task_registry() -> Registry {
+        Registry {
+            instances: vec![
+                BoardInstance::synthetic(0, "kws", 80.0, 10.0, 1.5),
+                BoardInstance::synthetic(1, "kws", 300.0, 60.0, 1.8),
+                BoardInstance::synthetic(2, "ad", 40.0, 5.0, 1.5),
+            ],
+        }
+    }
+
+    #[test]
+    fn parse_full_grammar() {
+        let s = ChaosSpec::parse("exec=0.25,kill=fastest@40,slow=2.5x1,stall=500@16,panic=2@10", 7)
+            .unwrap();
+        assert_eq!(s.exec_fail_p, 0.25);
+        assert_eq!(s.kill, Some(Victim::Fastest));
+        assert_eq!(s.kill_after, 40);
+        assert_eq!(s.slow, Some(1));
+        assert_eq!(s.slow_factor, 2.5);
+        assert_eq!((s.stall_us, s.stall_every), (500, 16));
+        assert_eq!((s.panic_on, s.panic_after), (Some(2), 10));
+        assert_eq!(s.seed, 7);
+        assert_eq!(
+            ChaosSpec::parse("kill=3@12", 0).unwrap().kill,
+            Some(Victim::Replica(3))
+        );
+        for bad in [
+            "nope=1",
+            "exec=2.0",
+            "kill=fastest",
+            "slow=0.5x1",
+            "slow=2.0",
+            "stall=500",
+            "exec",
+        ] {
+            assert!(ChaosSpec::parse(bad, 0).is_err(), "{bad} should fail");
+        }
+        assert!(ChaosSpec::parse("", 0).unwrap().is_noop());
+    }
+
+    #[test]
+    fn materialize_targets_fastest_with_surviving_sibling() {
+        let reg = two_task_registry();
+        // Fastest overall is the lone ad replica (ii 5 µs) — ineligible
+        // (its task would not survive); the kws pair's fast half wins.
+        let spec = ChaosSpec::parse("kill=fastest@4", 1).unwrap();
+        let plan = FaultPlan::materialize(&spec, &reg).unwrap();
+        assert_eq!(plan.kill_victim(), Some(0));
+        assert_eq!(plan.for_replica(0).unwrap().kill_after, Some(4));
+        assert!(plan.for_replica(1).is_none());
+        assert!(plan.for_replica(2).is_none());
+        assert!(plan.for_replica(99).is_none(), "future replicas are healthy");
+        // No second replica anywhere -> no eligible victim.
+        let lone = Registry {
+            instances: vec![BoardInstance::synthetic(0, "kws", 80.0, 10.0, 1.5)],
+        };
+        assert!(FaultPlan::materialize(&spec, &lone).is_err());
+        // Targeted victims must exist.
+        let bad = ChaosSpec::parse("kill=9@1", 0).unwrap();
+        assert!(FaultPlan::materialize(&bad, &reg).is_err());
+        assert!(FaultPlan::materialize(
+            &ChaosSpec::parse("slow=2x9", 0).unwrap(),
+            &reg
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn chaos_executor_replays_by_seed_and_kills_permanently() {
+        let run = |seed: u64| -> Vec<bool> {
+            let faults = ReplicaFaults {
+                exec_fail_p: 0.4,
+                kill_after: None,
+                slow_factor: 1.0,
+                stall_us: 0,
+                stall_every: 0,
+                panic_after: None,
+                seed,
+            };
+            let mut e = ChaosExecutor::new(
+                SimBoardExecutor::for_task("kws"),
+                faults,
+                DataflowTiming::OFF,
+            );
+            let x = vec![0.1f32; e.input_elems()];
+            let mut out = vec![0.0f32; e.num_outputs()];
+            (0..32).map(|_| e.execute(&x, 1, &mut out).is_ok()).collect()
+        };
+        assert_eq!(run(7), run(7), "same seed must replay exactly");
+        assert_ne!(run(7), run(8), "different seeds must differ");
+        assert!(run(7).iter().any(|ok| !ok), "p=0.4 over 32 batches must fail some");
+        assert!(run(7).iter().any(|ok| *ok), "p=0.4 over 32 batches must pass some");
+
+        let faults = ReplicaFaults {
+            exec_fail_p: 0.0,
+            kill_after: Some(3),
+            slow_factor: 1.0,
+            stall_us: 0,
+            stall_every: 0,
+            panic_after: None,
+            seed: 0,
+        };
+        let mut e = ChaosExecutor::new(
+            SimBoardExecutor::for_task("kws"),
+            faults,
+            DataflowTiming::OFF,
+        );
+        let x = vec![0.1f32; e.input_elems()];
+        let mut out = vec![0.0f32; e.num_outputs()];
+        assert!(e.execute(&x, 1, &mut out).is_ok());
+        assert!(e.execute(&x, 1, &mut out).is_ok());
+        for _ in 0..4 {
+            assert!(e.execute(&x, 1, &mut out).is_err(), "dead stays dead");
+        }
+    }
+
+    #[test]
+    fn injected_panic_is_catchable_and_repeats() {
+        let faults = ReplicaFaults {
+            exec_fail_p: 0.0,
+            kill_after: None,
+            slow_factor: 1.0,
+            stall_us: 0,
+            stall_every: 0,
+            panic_after: Some(2),
+            seed: 0,
+        };
+        let mut e = ChaosExecutor::new(
+            SimBoardExecutor::for_task("ad"),
+            faults,
+            DataflowTiming::OFF,
+        );
+        let x = vec![0.1f32; e.input_elems()];
+        let mut out = vec![0.0f32; e.num_outputs()];
+        assert!(e.execute(&x, 1, &mut out).is_ok());
+        for _ in 0..2 {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                e.execute(&x, 1, &mut out)
+            }));
+            assert!(r.is_err(), "batch >= 2 must unwind");
+        }
+    }
+}

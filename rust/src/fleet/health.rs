@@ -1,0 +1,242 @@
+//! Per-replica health checking and automatic ejection.
+//!
+//! Every replica slot carries a [`BoardHealth`]: its worker bumps three
+//! relaxed atomics at the *batch* boundary (consecutive execute
+//! failures, total failures, and a last-completed-batch heartbeat).  A
+//! controller thread — same stop-signal/`wait_timeout` skeleton as the
+//! [`autoscaler`](super::autoscale) — samples them every
+//! [`HealthConfig::interval`] and **ejects** a replica
+//! (drain-then-join retirement through the same path as scale-down,
+//! plus a `ReplicaEjected` trace event) when any of three signals
+//! trips:
+//!
+//! * **consecutive execute failures** ≥
+//!   [`HealthConfig::max_consecutive_failures`] — a dead or dying
+//!   device (chaos `kill=`/`panic=`, or a real executor error streak);
+//! * **flow-vs-measured drift** — the drift accumulator
+//!   (`observed exec / flow-predicted exec`, per board) exceeding
+//!   [`HealthConfig::max_drift_ratio`] over at least
+//!   [`HealthConfig::min_drift_batches`] batches: the board still
+//!   answers but has stopped meeting the service rate the codesign
+//!   flow promised (a brownout — chaos `slow=`, thermal throttling on
+//!   real hardware);
+//! * **stalled heartbeat** — queued work exists but no batch has
+//!   completed for [`HealthConfig::stall_timeout`] (a wedged worker;
+//!   an *idle* replica never trips this, because the depth gate keeps
+//!   "no work" distinct from "no progress").
+//!
+//! Ejection can never strand work or the fleet: retirement refuses a
+//! task's last active replica, and a dead replica's drained requests
+//! flow through the retry channel back to the router (see
+//! [`super::FleetError`]).
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Health-controller knobs.  Defaults suit time-scaled simulation
+/// (ms-class batch holds); real deployments would sample at seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthConfig {
+    /// Sampling period of the controller thread.
+    pub interval: Duration,
+    /// Eject after this many consecutive failed batches (0 disables the
+    /// failure signal).
+    pub max_consecutive_failures: u32,
+    /// Eject when observed/flow-predicted exec time exceeds this ratio
+    /// (0.0 disables the drift signal).  Needs the drift accumulator,
+    /// which enabling health turns on (`WorkerConfig::drift_time_scale`).
+    pub max_drift_ratio: f64,
+    /// Trust the drift ratio only after this many executed batches
+    /// (startup jitter makes small samples noisy).
+    pub min_drift_batches: u64,
+    /// Eject when the queue is non-empty but no batch has completed for
+    /// this long (`Duration::ZERO` disables the stall signal).
+    pub stall_timeout: Duration,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            interval: Duration::from_millis(2),
+            max_consecutive_failures: 3,
+            max_drift_ratio: 3.0,
+            min_drift_batches: 16,
+            stall_timeout: Duration::from_millis(500),
+        }
+    }
+}
+
+/// Per-replica health state: written by the replica's worker at batch
+/// boundaries (relaxed atomics — two stores per *batch*, nothing per
+/// request), read by the health controller.
+pub struct BoardHealth {
+    consecutive_failures: AtomicU32,
+    total_failures: AtomicU64,
+    /// µs since `t0` of the last completed batch (served *or* failed —
+    /// a failing worker is alive, just sick; stall means *no* batches).
+    last_beat_us: AtomicU64,
+    t0: Instant,
+}
+
+impl BoardHealth {
+    pub fn new() -> Self {
+        BoardHealth {
+            consecutive_failures: AtomicU32::new(0),
+            total_failures: AtomicU64::new(0),
+            last_beat_us: AtomicU64::new(0),
+            t0: Instant::now(),
+        }
+    }
+
+    fn beat(&self) {
+        self.last_beat_us
+            .store(self.t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+    }
+
+    /// A batch failed to execute (error or caught panic).
+    pub fn note_failure(&self) {
+        self.consecutive_failures.fetch_add(1, Ordering::Relaxed);
+        self.total_failures.fetch_add(1, Ordering::Relaxed);
+        self.beat();
+    }
+
+    /// A batch executed successfully.
+    pub fn note_success(&self) {
+        self.consecutive_failures.store(0, Ordering::Relaxed);
+        self.beat();
+    }
+
+    pub fn consecutive_failures(&self) -> u32 {
+        self.consecutive_failures.load(Ordering::Relaxed)
+    }
+
+    pub fn total_failures(&self) -> u64 {
+        self.total_failures.load(Ordering::Relaxed)
+    }
+
+    /// Time since the last completed batch (or since creation).
+    pub fn beat_age(&self) -> Duration {
+        let now_us = self.t0.elapsed().as_micros() as u64;
+        Duration::from_micros(now_us.saturating_sub(self.last_beat_us.load(Ordering::Relaxed)))
+    }
+}
+
+impl Default for BoardHealth {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The health-controller thread body: sample every `cfg.interval` until
+/// the stop signal fires.  Spawned by `Fleet::start` when health
+/// checking is enabled; `Fleet::shutdown` stops it *before* closing
+/// queues, so no ejection races the final drain.
+pub(super) fn run_health(
+    state: Arc<super::FleetState>,
+    cfg: HealthConfig,
+    stop: super::StopSignal,
+) {
+    loop {
+        {
+            let (flag, cv) = &*stop;
+            let guard = flag.lock().unwrap();
+            if *guard {
+                return;
+            }
+            let (guard, _) = cv.wait_timeout(guard, cfg.interval).unwrap();
+            if *guard {
+                return;
+            }
+        }
+        tick(&state, &cfg);
+    }
+}
+
+/// One sampling tick: scan every active replica's three signals and
+/// eject the sick ones.  Ejection failures (e.g. the last-replica
+/// guard) are deliberately swallowed — a fleet down to one sick replica
+/// keeps serving what it can rather than going dark.
+fn tick(state: &Arc<super::FleetState>, cfg: &HealthConfig) {
+    let healths: Vec<Arc<BoardHealth>> = match &state.health {
+        Some(h) => h.read().unwrap().clone(),
+        None => return,
+    };
+    let (active, depths) = {
+        let p = state.plane.read().unwrap();
+        let depths: Vec<usize> = p.queues.iter().map(|q| q.depth()).collect();
+        (p.active.clone(), depths)
+    };
+    let drifts = state.telemetry.drift_totals();
+    for (id, h) in healths.iter().enumerate() {
+        if !active.get(id).copied().unwrap_or(false) {
+            continue;
+        }
+        let mut reason = None;
+        let fails = h.consecutive_failures();
+        if cfg.max_consecutive_failures > 0 && fails >= cfg.max_consecutive_failures {
+            reason = Some(format!("failures:{fails}"));
+        } else if cfg.max_drift_ratio > 0.0 {
+            if let Some(&(batches, pred_us, obs_us)) = drifts.get(id) {
+                if batches >= cfg.min_drift_batches && pred_us > 0.0 {
+                    let ratio = obs_us as f64 / pred_us;
+                    if ratio > cfg.max_drift_ratio {
+                        reason = Some(format!("drift:{ratio:.2}x"));
+                    }
+                }
+            }
+        }
+        if reason.is_none()
+            && cfg.stall_timeout > Duration::ZERO
+            && depths.get(id).copied().unwrap_or(0) > 0
+            && h.beat_age() > cfg.stall_timeout
+        {
+            reason = Some(format!("stall:{}ms", h.beat_age().as_millis()));
+        }
+        if let Some(r) = reason {
+            let _ = super::eject_replica_inner(state, id, &format!("ejected:{r}"));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = HealthConfig::default();
+        assert!(c.interval > Duration::ZERO);
+        assert!(c.max_consecutive_failures >= 1);
+        assert!(c.max_drift_ratio > 1.0);
+        assert!(c.min_drift_batches >= 1);
+        assert!(c.stall_timeout > Duration::ZERO);
+    }
+
+    #[test]
+    fn board_health_tracks_consecutive_failures_and_beats() {
+        let h = BoardHealth::new();
+        assert_eq!(h.consecutive_failures(), 0);
+        h.note_failure();
+        h.note_failure();
+        assert_eq!(h.consecutive_failures(), 2);
+        assert_eq!(h.total_failures(), 2);
+        // Success resets the streak but not the total.
+        h.note_success();
+        assert_eq!(h.consecutive_failures(), 0);
+        assert_eq!(h.total_failures(), 2);
+        h.note_failure();
+        assert_eq!(h.consecutive_failures(), 1);
+        assert!(h.beat_age() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn beat_age_grows_without_beats() {
+        let h = BoardHealth::new();
+        h.note_success();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(h.beat_age() >= Duration::from_millis(4));
+        h.note_success();
+        assert!(h.beat_age() < Duration::from_millis(4));
+    }
+}

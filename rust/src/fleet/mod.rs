@@ -56,6 +56,22 @@
 //! depth, predicted latency vs SLO, utilization), and the scale history
 //! rides [`FleetSnapshot`] into `report::json`.
 //!
+//! The plane **survives failure**.  A batch that fails to execute
+//! (device error, or a worker panic caught at the execute boundary) is
+//! never dropped: each rider goes back through the router via a retry
+//! pump (avoiding the board it failed on while siblings survive), and a
+//! request whose [`FleetConfig::retry_budget`] runs out gets a
+//! definitive typed [`FleetError::Exhausted`] on its reply channel —
+//! every admitted request resolves to **exactly one** outcome, reply or
+//! typed error, never a bare `recv` error and never a hang.  A [`health`]
+//! controller watches per-replica signals (consecutive execute failures,
+//! flow-vs-measured drift, a depth-gated heartbeat) and **ejects** sick
+//! replicas through the same drain-then-join retirement as scale-down.
+//! The [`chaos`] module injects seeded, replayable faults (transient
+//! exec errors, permanent death, slowdowns, stall windows, worker
+//! panics) behind [`FleetConfig::chaos`] to exercise all of it —
+//! `benches/scenarios.rs` gates the resulting resilience headlines.
+//!
 //! ```no_run
 //! use tinyml_codesign::fleet::{Fleet, FleetConfig, Registry};
 //!
@@ -71,6 +87,8 @@
 
 pub mod autoscale;
 pub mod cache;
+pub mod chaos;
+pub mod health;
 pub mod queue;
 pub mod registry;
 pub mod router;
@@ -80,6 +98,8 @@ pub mod worker;
 
 pub use autoscale::{AutoscaleConfig, ScaleAction, ScaleEvent};
 pub use cache::{CacheStats, ResultCache, TaskCacheStats};
+pub use chaos::{ChaosExecutor, ChaosSpec, FaultPlan, ReplicaFaults, Victim};
+pub use health::{BoardHealth, HealthConfig};
 pub use queue::{admit_limit, BoardQueue, FleetRequest, Priority, RequestTag};
 pub use registry::{BoardInstance, Registry};
 pub use router::{Policy, RouteError, Router};
@@ -92,15 +112,43 @@ pub use trace::{
     TraceCtx, TraceEvent,
 };
 pub use worker::{
-    DataflowTiming, PeerList, SimBoardExecutor, WorkerConfig, WorkerTraceConfig,
+    DataflowTiming, PeerList, RetryItem, SimBoardExecutor, WorkerConfig,
+    WorkerTraceConfig,
 };
 
 use crate::coordinator::engine::{BatchPolicy, Reply};
 use crate::coordinator::pool::{PooledVec, ReplyPool};
 use crate::error::{anyhow, bail, Result};
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
+
+/// Definitive per-request failure, delivered **on the reply channel**.
+/// An admitted request resolves to exactly one of `Ok(Reply)` or
+/// `Err(FleetError)` — the channel is never just dropped, so a bare
+/// `recv()` error now only means the fleet itself went away.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FleetError {
+    /// The request rode `attempts` failed batches and the retry budget
+    /// ([`FleetConfig::retry_budget`]) is spent — or no healthy replica
+    /// could re-admit it.
+    Exhausted { attempts: u32 },
+}
+
+impl std::fmt::Display for FleetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FleetError::Exhausted { attempts } => {
+                write!(f, "request failed {attempts} attempt(s); retry budget spent")
+            }
+        }
+    }
+}
+
+/// Reply side of a submitted request: exactly one `Ok(Reply)` or one
+/// typed [`FleetError`] arrives per admitted request.
+pub type ReplyReceiver = mpsc::Receiver<std::result::Result<Reply, FleetError>>;
 
 /// Fleet-wide serving knobs.
 #[derive(Clone, Copy, Debug)]
@@ -146,6 +194,20 @@ pub struct FleetConfig {
     /// cache-insert-denied) land in a bounded event log ([`trace`]).
     /// An unsampled request pays exactly one branch.
     pub trace_sample: usize,
+    /// Seeded fault injection ([`chaos`]): per-replica schedules of
+    /// transient execute failures, permanent death, slowdowns, stall
+    /// windows, and worker panics, wrapped around the executor at spawn.
+    /// `None` = no injection (zero hot-path cost).
+    pub chaos: Option<ChaosSpec>,
+    /// Board health monitoring ([`health`]): a controller thread that
+    /// watches per-replica failure streaks, flow-vs-measured drift, and
+    /// heartbeat age, and ejects sick replicas (drain-then-join, same
+    /// path as scale-down).  `None` here still turns health on with
+    /// defaults when `chaos` is set.
+    pub health: Option<HealthConfig>,
+    /// How many failed batches one request may ride before it resolves
+    /// to a typed [`FleetError::Exhausted`] instead of another retry.
+    pub retry_budget: u32,
 }
 
 impl Default for FleetConfig {
@@ -161,6 +223,9 @@ impl Default for FleetConfig {
             fifo_queues: false,
             global_hotpath: false,
             trace_sample: 0,
+            chaos: None,
+            health: None,
+            retry_budget: 3,
         }
     }
 }
@@ -219,6 +284,21 @@ pub(crate) struct FleetState {
     /// on every submit and the fleet event log.  `None` = tracing off —
     /// the submit path pays one branch, the workers one per edge.
     pub(crate) trace: Option<FleetTrace>,
+    /// Per-slot health handles (same index space as queues/telemetry;
+    /// grows on scale-up, retired slots keep theirs).  `None` = health
+    /// plane off — workers skip the per-batch beat entirely.
+    pub(crate) health: Option<RwLock<Vec<Arc<BoardHealth>>>>,
+    /// Materialized fault schedule (empty when chaos is off).  Fixed at
+    /// start: replicas added later are always healthy.
+    pub(crate) fault_plan: FaultPlan,
+    /// Send side of the retry pump.  Workers clone it at spawn; shutdown
+    /// takes and drops it after the workers are joined so the pump's
+    /// `recv` loop ends (the pump holds this `FleetState`, so the cycle
+    /// is broken through the Sender, not the Arc).
+    retry_tx: Mutex<Option<mpsc::Sender<RetryItem>>>,
+    /// Replicas ejected by the health controller (a subset of the
+    /// scale-down events; also on [`FleetSnapshot::ejections`]).
+    pub(crate) ejections: AtomicU64,
     pub(crate) t0: Instant,
 }
 
@@ -237,10 +317,15 @@ struct Scaler {
     join: std::thread::JoinHandle<()>,
 }
 
-/// A running fleet: workers + live router + telemetry (+ autoscaler).
+/// A running fleet: workers + live router + telemetry (+ autoscaler,
+/// health controller, and retry pump when configured).
 pub struct Fleet {
     state: Arc<FleetState>,
     scaler: Option<Scaler>,
+    /// Health controller thread (same stop-signal shape as the scaler).
+    health_ctl: Option<Scaler>,
+    /// Retry pump: re-routes requests rescued off failed batches.
+    retry_pump: Option<std::thread::JoinHandle<u64>>,
 }
 
 /// Spawn the worker thread for one replica slot.  The executor comes
@@ -263,6 +348,19 @@ fn spawn_worker(
         ring: t.log.ring(inst.id),
         time_scale: cfg.time_scale,
     });
+    // Resolve the failure-plane handles once too: retry sender, health
+    // slot, and this replica's fault schedule (chaos).  All `None`/empty
+    // in a plain fleet — the serve loop pays nothing.
+    let retry = state.retry_tx.lock().unwrap().clone();
+    let health = state
+        .health
+        .as_ref()
+        .map(|h| h.read().unwrap()[inst.id].clone());
+    // Health's drift signal needs the flow-vs-measured accumulator even
+    // when request tracing is off.
+    let drift_time_scale =
+        (trace.is_some() || health.is_some()).then_some(cfg.time_scale);
+    let faults = state.fault_plan.for_replica(inst.id);
     std::thread::spawn(move || {
         let exec = inst.executor(cfg.batch.max_batch, cfg.time_scale);
         let wcfg = WorkerConfig {
@@ -270,8 +368,24 @@ fn spawn_worker(
             work_stealing: cfg.work_stealing,
             pooled_replies: !cfg.global_hotpath,
             trace,
+            retry,
+            retry_budget: cfg.retry_budget,
+            health,
+            drift_time_scale,
         };
-        worker::run_worker(&inst, exec, &own, &peers, &wcfg, &sink, cache.as_deref())
+        match faults {
+            // `ChaosExecutor<SimBoardExecutor>` is a distinct executor
+            // type; `run_worker` is generic, so each arm monomorphizes
+            // its own loop and the healthy path stays wrapper-free.
+            Some(f) => {
+                let timing = DataflowTiming::for_instance(&inst, cfg.time_scale);
+                let exec = ChaosExecutor::new(exec, f, timing);
+                worker::run_worker(&inst, exec, &own, &peers, &wcfg, &sink, cache.as_deref())
+            }
+            None => {
+                worker::run_worker(&inst, exec, &own, &peers, &wcfg, &sink, cache.as_deref())
+            }
+        }
     })
 }
 
@@ -310,6 +424,13 @@ pub(crate) fn add_replica_inner(
     if let Some(t) = &state.trace {
         let rid = t.log.add_ring();
         debug_assert_eq!(rid, id, "event ring out of line with registry id");
+    }
+    if let Some(h) = &state.health {
+        // Grow the health plane *before* the worker spawns: the worker
+        // resolves its slot by id at spawn time.
+        let mut hs = h.write().unwrap();
+        debug_assert_eq!(hs.len(), id, "health slot out of line with registry id");
+        hs.push(Arc::new(BoardHealth::new()));
     }
     let q = Arc::new(BoardQueue::with_mode(cfg.queue_cap, !cfg.fifo_queues));
     state
@@ -443,6 +564,85 @@ pub(crate) fn retire_replica_inner(
     Ok(served)
 }
 
+/// Eject slot `id` for cause (the health controller's verdict): the same
+/// drain-then-join retirement as a scale-down — a chaos-dead or panicking
+/// worker still drains its queue, because every failed batch resolves its
+/// riders through the retry path — plus the ejection counter and a
+/// [`FleetEvent::ReplicaEjected`] marker.  Inherits retirement's
+/// last-replica guard: a task's only replica is never ejected, however
+/// sick (degraded service beats no service).
+pub(crate) fn eject_replica_inner(
+    state: &Arc<FleetState>,
+    id: usize,
+    reason: &str,
+) -> Result<u64> {
+    let task = state
+        .registry
+        .lock()
+        .unwrap()
+        .instances
+        .get(id)
+        .map(|i| i.task.clone())
+        .ok_or_else(|| anyhow!("no instance {id} to eject"))?;
+    let served = retire_replica_inner(state, id, reason)?;
+    state.ejections.fetch_add(1, Ordering::Relaxed);
+    if let Some(t) = &state.trace {
+        t.log.record_fleet(FleetEvent::ReplicaEjected {
+            task,
+            instance: id,
+            reason: reason.to_string(),
+        });
+    }
+    Ok(served)
+}
+
+/// The retry pump: re-route requests rescued off failed batches.  Runs
+/// until every sender (one per worker + the fleet's own) is gone.
+/// Returns how many items it pumped.
+fn run_retry_pump(state: &Arc<FleetState>, rx: mpsc::Receiver<RetryItem>) -> u64 {
+    let mut pumped = 0u64;
+    while let Ok(item) = rx.recv() {
+        pumped += 1;
+        resubmit(state, item);
+    }
+    pumped
+}
+
+/// Re-admit one rescued request: prefer an active same-task replica
+/// *other than* the one it failed on (when siblings survive), shallowest
+/// queue first.  If no queue accepts it — everything closed, full, or
+/// ejected — the request resolves to a typed [`FleetError::Exhausted`]
+/// with its true attempt count; it is never silently dropped.
+fn resubmit(state: &Arc<FleetState>, item: RetryItem) {
+    let RetryItem { task, mut req } = item;
+    let reg: Arc<Registry> = state.registry.lock().unwrap().clone();
+    let candidates: Vec<usize> = {
+        let p = state.plane.read().unwrap();
+        let mut ids: Vec<usize> = reg
+            .instances
+            .iter()
+            .filter(|i| i.task == task && p.active.get(i.id).copied().unwrap_or(false))
+            .map(|i| i.id)
+            .collect();
+        if ids.len() > 1 {
+            ids.retain(|&id| id as u32 != req.failed_on);
+        }
+        ids.sort_by_key(|&id| p.queues[id].depth());
+        ids
+    };
+    {
+        let p = state.plane.read().unwrap();
+        for id in candidates {
+            match p.queues[id].try_push(req) {
+                Ok(()) => return,
+                Err(back) => req = back,
+            }
+        }
+    }
+    let attempts = req.attempts;
+    let _ = req.reply.send(Err(FleetError::Exhausted { attempts }));
+}
+
 /// Telemetry snapshot with the fleet-level extras grafted on: cache
 /// counters, per-slot active flags, board-seconds, scale history.
 fn snapshot_of(state: &FleetState) -> FleetSnapshot {
@@ -468,6 +668,7 @@ fn snapshot_of(state: &FleetState) -> FleetSnapshot {
         .map(|l| (l.stopped.unwrap_or(now) - l.started).as_secs_f64())
         .sum();
     snap.scale_events = state.events.lock().unwrap().clone();
+    snap.ejections = state.ejections.load(Ordering::Relaxed);
     snap
 }
 
@@ -499,6 +700,15 @@ impl Fleet {
                 ));
             }
         }
+        // Materialize the fault schedule against the start-time registry
+        // (resolves `kill=fastest`, rejects victims that don't exist).
+        let fault_plan = match &config.chaos {
+            Some(spec) => FaultPlan::materialize(spec, &registry)?,
+            None => FaultPlan::default(),
+        };
+        // Chaos without an explicit health config still gets the
+        // watchdog: injecting faults nobody detects tests nothing.
+        let health_cfg = config.health.or(config.chaos.map(|_| HealthConfig::default()));
         let n = registry.len();
         let queues: Vec<Arc<BoardQueue>> = registry
             .instances
@@ -538,6 +748,7 @@ impl Fleet {
                 .push(queues[inst.id].clone());
         }
         let now = Instant::now();
+        let (retry_tx, retry_rx) = mpsc::channel::<RetryItem>();
         let state = Arc::new(FleetState {
             config,
             registry: Mutex::new(Arc::new(registry.clone())),
@@ -560,8 +771,18 @@ impl Fleet {
                 sampler: Sampler::new(config.trace_sample),
                 log: Arc::new(EventLog::new(n)),
             }),
+            health: health_cfg.map(|_| {
+                RwLock::new((0..n).map(|_| Arc::new(BoardHealth::new())).collect())
+            }),
+            fault_plan,
+            retry_tx: Mutex::new(Some(retry_tx)),
+            ejections: AtomicU64::new(0),
             t0: now,
         });
+        let retry_pump = {
+            let pump_state = state.clone();
+            Some(std::thread::spawn(move || run_retry_pump(&pump_state, retry_rx)))
+        };
         let peer_of: Vec<PeerList> = {
             let pm = state.peers.lock().unwrap();
             registry.instances.iter().map(|i| pm[&i.task].clone()).collect()
@@ -587,7 +808,16 @@ impl Fleet {
             });
             Scaler { stop, join }
         });
-        Ok(Fleet { state, scaler })
+        let health_ctl = health_cfg.map(|hcfg| {
+            let stop: StopSignal = Arc::new((Mutex::new(false), Condvar::new()));
+            let thread_stop = stop.clone();
+            let thread_state = state.clone();
+            let join = std::thread::spawn(move || {
+                health::run_health(thread_state, hcfg, thread_stop)
+            });
+            Scaler { stop, join }
+        });
+        Ok(Fleet { state, scaler, health_ctl, retry_pump })
     }
 
     /// Cloneable submission handle.
@@ -649,13 +879,20 @@ impl Fleet {
         snap
     }
 
-    /// Stop the autoscaler, close every queue, drain, join workers, and
-    /// return the final telemetry plus per-worker serve counts.
+    /// Replicas ejected by the health controller so far.
+    pub fn ejections(&self) -> u64 {
+        self.state.ejections.load(Ordering::Relaxed)
+    }
+
+    /// Stop the controllers, close every queue, drain, join workers, end
+    /// the retry pump, and return the final telemetry plus per-worker
+    /// serve counts.
     pub fn shutdown(mut self) -> FleetSummary {
-        if let Some(s) = self.scaler.take() {
-            *s.stop.0.lock().unwrap() = true;
-            s.stop.1.notify_all();
-            let _ = s.join.join();
+        // Controllers first so no scale/eject decision races the drain.
+        for ctl in [self.health_ctl.take(), self.scaler.take()].into_iter().flatten() {
+            *ctl.stop.0.lock().unwrap() = true;
+            ctl.stop.1.notify_all();
+            let _ = ctl.join.join();
         }
         let queues: Vec<Arc<BoardQueue>> =
             self.state.plane.read().unwrap().queues.clone();
@@ -674,6 +911,14 @@ impl Fleet {
                 })
                 .collect()
         };
+        // All worker senders died with their threads; dropping the
+        // fleet's own ends the pump's recv loop after it drains what the
+        // failing workers rescued (closed queues turn those re-pushes
+        // into typed errors — resolved, not lost).
+        drop(self.state.retry_tx.lock().unwrap().take());
+        if let Some(p) = self.retry_pump.take() {
+            let _ = p.join();
+        }
         let now = Instant::now();
         for l in self.state.lifecycle.lock().unwrap().iter_mut() {
             if l.stopped.is_none() {
@@ -724,7 +969,7 @@ impl FleetHandle {
         &self,
         task: &str,
         x: Vec<f32>,
-    ) -> Result<mpsc::Receiver<Reply>, RouteError> {
+    ) -> Result<ReplyReceiver, RouteError> {
         self.submit_tagged(task, x, RequestTag::default())
     }
 
@@ -741,7 +986,7 @@ impl FleetHandle {
         task: &str,
         x: Vec<f32>,
         tag: RequestTag,
-    ) -> Result<mpsc::Receiver<Reply>, RouteError> {
+    ) -> Result<ReplyReceiver, RouteError> {
         match self.submit_inner(task, x, tag) {
             Ok(rx) => Ok(rx),
             Err((e, reason)) => {
@@ -769,7 +1014,20 @@ impl FleetHandle {
         task: &str,
         x: Vec<f32>,
         tag: RequestTag,
-    ) -> Result<mpsc::Receiver<Reply>, (RouteError, Option<ShedReason>)> {
+    ) -> Result<ReplyReceiver, (RouteError, Option<ShedReason>)> {
+        // Wrong-length inputs are a caller bug: refuse them here with a
+        // typed error instead of letting the worker silently truncate or
+        // zero-pad.  `feature_dim_of` is a lock-free table lookup (no
+        // registry mutex on the hot path); tasks outside the standard
+        // trio have no known dimension and skip the check.
+        if let Some(expected) = crate::data::feature_dim_of(task) {
+            if x.len() != expected {
+                return Err((
+                    RouteError::InvalidInput { expected, got: x.len() },
+                    None,
+                ));
+            }
+        }
         // One branch when tracing is off (`state.trace` is `None`); with
         // tracing on, one relaxed fetch_add decides sampling.
         let mut trace_ctx = match &self.state.trace {
@@ -799,13 +1057,13 @@ impl FleetHandle {
                 // A cache hit ends the request's lifecycle here; its
                 // trace context (if any) is dropped, never folded.
                 let (tx, rx) = mpsc::channel();
-                let _ = tx.send(Reply {
+                let _ = tx.send(Ok(Reply {
                     output,
                     top1,
                     batch_size: 0,
                     queue_us: 0,
                     exec_us: 0,
-                });
+                }));
                 return Ok(rx);
             }
             cache_key = Some(key);
@@ -827,6 +1085,8 @@ impl FleetHandle {
             cache_key,
             tag,
             trace: trace_ctx,
+            attempts: 0,
+            failed_on: queue::NOT_FAILED,
         };
         let fifo = self.state.config.fifo_queues;
         let plane = self.state.plane.read().unwrap();
@@ -863,7 +1123,10 @@ impl FleetHandle {
                     let reason = match e {
                         RouteError::Overloaded => Some(ShedReason::AdmissionTier),
                         RouteError::SloUnattainable => Some(ShedReason::SloPredict),
+                        // Caller bugs, not sheds (and `InvalidInput` is
+                        // caught before routing — unreachable here).
                         RouteError::UnknownTask => None,
+                        RouteError::InvalidInput { .. } => None,
                     };
                     return Err((e, reason));
                 }
@@ -893,7 +1156,11 @@ impl FleetHandle {
         let rx = self
             .submit_tagged(task, x, tag)
             .map_err(|e| anyhow!("fleet rejected {task} request: {e}"))?;
-        rx.recv().map_err(|_| anyhow!("fleet dropped {task} request"))
+        match rx.recv() {
+            Ok(Ok(reply)) => Ok(reply),
+            Ok(Err(e)) => Err(anyhow!("fleet {task} request failed: {e}")),
+            Err(_) => Err(anyhow!("fleet dropped {task} request")),
+        }
     }
 
     /// Instantaneous queue depths, one per slot (observability).
@@ -932,7 +1199,7 @@ mod tests {
             rxs.push((t, handle.submit(t, input_for(t)).unwrap()));
         }
         for (t, rx) in rxs {
-            let r = rx.recv().unwrap();
+            let r = rx.recv().unwrap().unwrap();
             let want = match t {
                 "kws" => 12,
                 "ad" => 128,
@@ -993,7 +1260,7 @@ mod tests {
         }
         assert!(rejected > 0, "cap 4 must reject under a 64-burst");
         for rx in rxs {
-            rx.recv().unwrap();
+            rx.recv().unwrap().unwrap();
         }
         let summary = fleet.shutdown();
         assert_eq!(summary.snapshot.served as usize, accepted);
@@ -1029,7 +1296,7 @@ mod tests {
             rxs.push(handle.submit_tagged("kws", input_for("kws"), tag).unwrap());
         }
         for rx in rxs {
-            rx.recv().unwrap();
+            rx.recv().unwrap().unwrap();
         }
         let summary = fleet.shutdown();
         assert_eq!(summary.snapshot.served, 36);
@@ -1090,7 +1357,7 @@ mod tests {
         }
         assert!(shed.iter().sum::<u64>() > 0, "cap 4 must shed under a 64-burst");
         for rx in rxs {
-            rx.recv().unwrap();
+            rx.recv().unwrap().unwrap();
         }
         let summary = fleet.shutdown();
         assert_eq!(summary.snapshot.served, admitted);
@@ -1203,7 +1470,7 @@ mod tests {
             rxs.push(handle.submit("kws", input_for("kws")).unwrap());
         }
         for rx in rxs {
-            rx.recv().unwrap();
+            rx.recv().unwrap().unwrap();
         }
         let summary = fleet.shutdown();
         assert_eq!(summary.snapshot.served, 60);
@@ -1273,7 +1540,7 @@ mod tests {
             rxs.push(handle.submit("kws", input_for("kws")).unwrap());
         }
         for rx in rxs {
-            rx.recv().unwrap();
+            rx.recv().unwrap().unwrap();
         }
         let summary = fleet.shutdown();
         assert_eq!(summary.snapshot.served, 120);
@@ -1311,7 +1578,9 @@ mod tests {
             rxs.push(handle.submit("kws", input_for("kws")).unwrap());
         }
         for rx in rxs {
-            rx.recv().expect("admitted request must not be dropped by scaling");
+            rx.recv()
+                .expect("admitted request must not be dropped by scaling")
+                .expect("scaling must not fail requests");
         }
         // Retiring twice or below one replica is refused.
         assert!(fleet.retire_replica(0).is_err(), "already retired");
@@ -1361,7 +1630,7 @@ mod tests {
             rxs.push(handle.submit("kws", input_for("kws")).unwrap());
         }
         for rx in rxs {
-            rx.recv().unwrap();
+            rx.recv().unwrap().unwrap();
         }
         // Idle: utilization collapses; wait out several intervals +
         // cooldowns for the controller to shrink back to the floor.
@@ -1389,5 +1658,110 @@ mod tests {
             .filter(|e| e.action == ScaleAction::Down)
             .count();
         assert!(ups >= 1 && downs >= 1, "{:?}", summary.snapshot.scale_events);
+    }
+
+    #[test]
+    fn wrong_length_input_is_rejected_with_typed_error() {
+        let fleet =
+            Fleet::start(synthetic_registry(), FleetConfig::default()).unwrap();
+        let handle = fleet.handle();
+        let expected = crate::data::feature_dim("kws");
+        assert_eq!(
+            handle.submit("kws", vec![0.0; 7]).unwrap_err(),
+            RouteError::InvalidInput { expected, got: 7 }
+        );
+        assert_eq!(
+            handle.submit("kws", vec![0.0; expected + 1]).unwrap_err(),
+            RouteError::InvalidInput { expected, got: expected + 1 }
+        );
+        // A caller bug is not a shed: admission counters stay clean.
+        let summary = fleet.shutdown();
+        assert_eq!(summary.snapshot.served, 0);
+        assert_eq!(summary.snapshot.classes.iter().map(|c| c.shed).sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn ejection_never_removes_a_tasks_last_healthy_replica() {
+        let reg = Registry {
+            instances: vec![BoardInstance::synthetic(0, "kws", 80.0, 10.0, 1.5)],
+        };
+        let fleet = Fleet::start(reg, FleetConfig::default()).unwrap();
+        let err = eject_replica_inner(&fleet.state, 0, "ejected:test")
+            .expect_err("sole replica must survive ejection");
+        assert!(
+            err.to_string().contains("last active"),
+            "guard should name the reason: {err}"
+        );
+        // Degraded service beats no service: the fleet still answers.
+        let handle = fleet.handle();
+        handle.infer("kws", input_for("kws")).unwrap();
+        let summary = fleet.shutdown();
+        assert_eq!(summary.snapshot.served, 1);
+        assert_eq!(summary.snapshot.ejections, 0);
+    }
+
+    #[test]
+    fn single_replica_death_loses_no_requests_and_ejects_the_dead_board() {
+        // Board 0 dies on its first batch (seeded chaos).  Every
+        // admitted request must still resolve — riders of failed batches
+        // re-route to the surviving replica — and the health controller
+        // must eject the dead board automatically.
+        let reg = Registry {
+            instances: vec![
+                BoardInstance::synthetic(0, "kws", 200.0, 40.0, 1.5),
+                BoardInstance::synthetic(1, "kws", 200.0, 40.0, 1.5),
+            ],
+        };
+        let cfg = FleetConfig {
+            time_scale: 5.0,
+            chaos: Some(ChaosSpec::parse("kill=0@1", 42).unwrap()),
+            health: Some(HealthConfig {
+                interval: Duration::from_millis(1),
+                max_consecutive_failures: 2,
+                ..Default::default()
+            }),
+            // Generous: pre-ejection, the dead board can steal (and
+            // fail) the same request more than once.
+            retry_budget: 50,
+            ..Default::default()
+        };
+        let fleet = Fleet::start(reg, cfg).unwrap();
+        let handle = fleet.handle();
+        let mut rxs = Vec::new();
+        for _ in 0..60 {
+            rxs.push(handle.submit("kws", input_for("kws")).unwrap());
+        }
+        for rx in rxs {
+            let outcome = rx
+                .recv()
+                .expect("an admitted request must never be silently dropped");
+            outcome.expect("surviving replica should absorb every retry");
+        }
+        // The controller needs a couple of ticks to observe the streak.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while fleet.ejections() == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(fleet.ejections(), 1, "dead board must be ejected for cause");
+        assert_eq!(fleet.active_replicas("kws"), 1);
+        let summary = fleet.shutdown();
+        assert_eq!(summary.snapshot.served, 60, "zero lost requests");
+        assert_eq!(summary.snapshot.ejections, 1);
+        assert!(!summary.snapshot.per_board[0].active, "slot 0 ejected");
+        assert!(
+            summary.snapshot.per_board[0].exec_failures > 0,
+            "failures must be observable in telemetry"
+        );
+        assert!(
+            summary.snapshot.scale_events.iter().any(|e| {
+                e.action == ScaleAction::Down && e.reason.starts_with("ejected:")
+            }),
+            "ejection rides the scale-event history: {:?}",
+            summary.snapshot.scale_events
+        );
+        // Nothing served on the dead board: its counter stays zero and
+        // the survivor carries the fleet.
+        assert_eq!(summary.snapshot.per_board[0].served, 0);
+        assert_eq!(summary.snapshot.per_board[1].served, 60);
     }
 }

@@ -107,7 +107,11 @@ impl RequestTag {
 /// One request in flight inside the fleet.
 pub struct FleetRequest {
     pub x: Vec<f32>,
-    pub reply: mpsc::Sender<Reply>,
+    /// Every admitted request gets **exactly one** terminal send on this
+    /// channel: `Ok(Reply)` on success, or a typed
+    /// [`FleetError`](super::FleetError) when its batch failed and the
+    /// retry budget ran out — never a silently dropped sender.
+    pub reply: mpsc::Sender<Result<Reply, super::FleetError>>,
     pub enqueued: Instant,
     /// Set by the submit path when result caching is on: the worker
     /// inserts its output under this key after executing.
@@ -119,7 +123,19 @@ pub struct FleetRequest {
     /// (`FleetConfig::trace_sample`).  Boxed so the unsampled hot path
     /// carries one pointer-sized `None` and pays exactly one branch.
     pub trace: Option<Box<TraceCtx>>,
+    /// Failed batches this request has ridden (bounded by
+    /// `FleetConfig::retry_budget`; past it the caller gets
+    /// `FleetError::Exhausted`).
+    pub attempts: u32,
+    /// Slot id of the last replica this request failed on
+    /// ([`NOT_FAILED`] = none) — the retry pump avoids re-routing onto
+    /// it while siblings survive.
+    pub failed_on: u32,
 }
+
+/// Sentinel for [`FleetRequest::failed_on`]: the request has not failed
+/// anywhere yet.
+pub const NOT_FAILED: u32 = u32::MAX;
 
 /// Admission bound for `class` on a queue of capacity `cap` (total
 /// depth, all classes combined, must be *below* this for the push to be
@@ -436,7 +452,9 @@ impl BoardQueue {
 mod tests {
     use super::*;
 
-    fn mk(tag: RequestTag) -> (FleetRequest, mpsc::Receiver<Reply>) {
+    fn mk(
+        tag: RequestTag,
+    ) -> (FleetRequest, mpsc::Receiver<Result<Reply, super::super::FleetError>>) {
         let (tx, rx) = mpsc::channel();
         (
             FleetRequest {
@@ -446,6 +464,8 @@ mod tests {
                 cache_key: None,
                 tag,
                 trace: None,
+                attempts: 0,
+                failed_on: NOT_FAILED,
             },
             rx,
         )

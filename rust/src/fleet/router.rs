@@ -74,6 +74,11 @@ pub enum RouteError {
     Overloaded,
     /// Even the best replica's predicted latency exceeds the SLO.
     SloUnattainable,
+    /// The input length does not match the task's feature dimension —
+    /// a typed submit-side rejection (the worker keeps only a debug
+    /// assertion; it never truncates or pads silently for tasks the
+    /// submit path can validate).
+    InvalidInput { expected: usize, got: usize },
 }
 
 impl fmt::Display for RouteError {
@@ -83,6 +88,9 @@ impl fmt::Display for RouteError {
             RouteError::Overloaded => f.write_str("all eligible queues full"),
             RouteError::SloUnattainable => {
                 f.write_str("predicted latency exceeds SLO on every replica")
+            }
+            RouteError::InvalidInput { expected, got } => {
+                write!(f, "input length {got} does not match the task's feature dim {expected}")
             }
         }
     }

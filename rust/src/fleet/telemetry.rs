@@ -123,6 +123,12 @@ struct ShardStats {
     served: u64,
     batches: u64,
     stolen: u64,
+    /// Batches whose execute failed (device error or caught panic).
+    /// Their riders were retried or typed-failed, never counted served.
+    exec_failures: u64,
+    /// Requests this board handed back for re-routing off failed
+    /// batches.
+    retried: u64,
     queue_us_sum: u128,
     exec_us_sum: u128,
     energy_uj_sum: f64,
@@ -163,6 +169,8 @@ impl ShardStats {
             served: 0,
             batches: 0,
             stolen: 0,
+            exec_failures: 0,
+            retried: 0,
             queue_us_sum: 0,
             exec_us_sum: 0,
             energy_uj_sum: 0.0,
@@ -283,6 +291,16 @@ impl TelemetryShard {
     pub fn record_trace(&self, samples: &[TraceSample], drift: Option<DriftSample>) {
         self.stats.lock().unwrap().apply_trace(samples, drift);
     }
+
+    /// One failed execute on this board (board-scope, both modes).
+    pub fn record_exec_failure(&self) {
+        self.stats.lock().unwrap().exec_failures += 1;
+    }
+
+    /// `n` requests handed back for re-routing off a failed batch.
+    pub fn record_retried(&self, n: u64) {
+        self.stats.lock().unwrap().retried += n;
+    }
 }
 
 /// The pre-PR fleet-global aggregates (class mutexes + tenant map),
@@ -399,6 +417,22 @@ impl TelemetrySink {
             TelemetrySink::Global(t, id) => t.record_trace(*id, samples, drift),
         }
     }
+
+    /// One failed execute (board-scope: both modes land in the shard).
+    pub fn record_exec_failure(&self) {
+        match self {
+            TelemetrySink::Sharded(shard) => shard.record_exec_failure(),
+            TelemetrySink::Global(t, id) => t.record_exec_failure(*id),
+        }
+    }
+
+    /// `n` requests handed back for re-routing (board-scope).
+    pub fn record_retried(&self, n: u64) {
+        match self {
+            TelemetrySink::Sharded(shard) => shard.record_retried(n),
+            TelemetrySink::Global(t, id) => t.record_retried(*id, n),
+        }
+    }
 }
 
 /// Shared collector; workers record (through their [`TelemetrySink`]),
@@ -468,6 +502,18 @@ impl Telemetry {
     pub fn record_trace(&self, id: usize, samples: &[TraceSample], drift: Option<DriftSample>) {
         let shard = self.boards.read().unwrap()[id].clone();
         shard.record_trace(samples, drift);
+    }
+
+    /// One failed execute on slot `id` (board-scope in both modes).
+    pub fn record_exec_failure(&self, id: usize) {
+        let shard = self.boards.read().unwrap()[id].clone();
+        shard.record_exec_failure();
+    }
+
+    /// `n` requests re-routed off slot `id`'s failed batches.
+    pub fn record_retried(&self, id: usize, n: u64) {
+        let shard = self.boards.read().unwrap()[id].clone();
+        shard.record_retried(n);
     }
 
     /// Append a shard for a newly spawned replica; returns its id.
@@ -541,6 +587,34 @@ impl Telemetry {
             .unwrap()
             .iter()
             .map(|s| s.stats.lock().unwrap().exec_us_sum)
+            .collect()
+    }
+
+    /// Per-board `(batches, Σ predicted µs, Σ observed µs)` from the
+    /// drift accumulator — the health controller's service-rate signal
+    /// (observed ≫ predicted flags a board running far off its flow
+    /// model).  Same scan shape as [`Self::exec_us_totals`].
+    pub fn drift_totals(&self) -> Vec<(u64, f64, u128)> {
+        self.boards
+            .read()
+            .unwrap()
+            .iter()
+            .map(|s| {
+                let st = s.stats.lock().unwrap();
+                (st.drift_batches, st.drift_pred_us, st.drift_obs_us)
+            })
+            .collect()
+    }
+
+    /// Per-board failed-execute counts (the health controller reads
+    /// consecutive streaks from [`super::health::BoardHealth`]; this is
+    /// the cumulative telemetry view).
+    pub fn exec_failure_totals(&self) -> Vec<u64> {
+        self.boards
+            .read()
+            .unwrap()
+            .iter()
+            .map(|s| s.stats.lock().unwrap().exec_failures)
             .collect()
     }
 
@@ -638,6 +712,8 @@ impl Telemetry {
                 served: b.served,
                 batches: b.batches,
                 stolen: b.stolen,
+                exec_failures: b.exec_failures,
+                retried: b.retried,
                 mean_batch: if b.batches > 0 {
                     b.served as f64 / b.batches as f64
                 } else {
@@ -757,10 +833,12 @@ impl Telemetry {
             // Global-lock mode tracks tenants in one table, so any row
             // it emits is a complete fleet-wide count by construction.
             tenants_complete: self.global.is_some() || tenants_complete,
-            // The fleet layer grafts these on: board lifecycle and scale
-            // history live beside the queues, not in the per-board stats.
+            // The fleet layer grafts these on: board lifecycle, scale
+            // history, and the ejection count live beside the queues,
+            // not in the per-board stats.
             board_seconds: 0.0,
             scale_events: Vec::new(),
+            ejections: 0,
             per_board,
         }
     }
@@ -825,6 +903,14 @@ pub fn assert_merge_equivalence(n_boards: usize, batches: usize, seed: u64) -> u
             sharded.record_shed(p, r);
             global.record_shed(p, r);
         }
+        // Failed batches + retried riders: board-scope, so both modes
+        // must land them in the slot's shard and merge identically.
+        if rng.next_below(5) == 0 {
+            for t in [&sharded, &global] {
+                t.record_exec_failure(id);
+                t.record_retried(id, n as u64);
+            }
+        }
     }
     let a = sharded.snapshot(&reg);
     let b = global.snapshot(&reg);
@@ -854,6 +940,8 @@ pub fn assert_merge_equivalence(n_boards: usize, batches: usize, seed: u64) -> u
     for (ba, bb) in a.per_board.iter().zip(&b.per_board) {
         assert_eq!(ba.served, bb.served, "per-board served");
         assert_eq!(ba.p99_us, bb.p99_us, "per-board p99");
+        assert_eq!(ba.exec_failures, bb.exec_failures, "per-board exec failures");
+        assert_eq!(ba.retried, bb.retried, "per-board retried");
     }
     batches
 }
@@ -895,6 +983,12 @@ pub struct BoardSnapshot {
     pub served: u64,
     pub batches: u64,
     pub stolen: u64,
+    /// Batches whose execute failed here (their riders were re-routed
+    /// or typed-failed; nonzero without chaos means a real device
+    /// error).
+    pub exec_failures: u64,
+    /// Requests this board handed back for re-routing.
+    pub retried: u64,
     pub mean_batch: f64,
     pub mean_queue_us: f64,
     pub p50_us: f64,
@@ -1026,6 +1120,9 @@ pub struct FleetSnapshot {
     pub board_seconds: f64,
     /// Scale-up/-down history (empty without the autoscaler).
     pub scale_events: Vec<ScaleEvent>,
+    /// Replicas ejected for cause by the health controller (each is
+    /// also a `scale_events` entry with an `ejected:` reason).
+    pub ejections: u64,
     pub per_board: Vec<BoardSnapshot>,
 }
 
@@ -1082,6 +1179,7 @@ impl FleetSnapshot {
                 "scale_events",
                 Value::Arr(self.scale_events.iter().map(|e| e.to_json()).collect()),
             ),
+            ("ejections", num(self.ejections as f64)),
             (
                 "boards",
                 Value::Arr(
@@ -1095,6 +1193,8 @@ impl FleetSnapshot {
                                 ("served", num(b.served as f64)),
                                 ("batches", num(b.batches as f64)),
                                 ("stolen", num(b.stolen as f64)),
+                                ("exec_failures", num(b.exec_failures as f64)),
+                                ("retried", num(b.retried as f64)),
                                 ("mean_batch", num(b.mean_batch)),
                                 ("mean_queue_us", num(b.mean_queue_us)),
                                 ("p50_us", num(b.p50_us)),
@@ -1237,9 +1337,14 @@ impl FleetSnapshot {
         if !self.scale_events.is_empty() {
             writeln!(
                 out,
-                "  autoscale: {} events, {:.3} board-seconds",
+                "  autoscale: {} events, {:.3} board-seconds{}",
                 self.scale_events.len(),
-                self.board_seconds
+                self.board_seconds,
+                if self.ejections > 0 {
+                    format!(", {} ejected for cause", self.ejections)
+                } else {
+                    String::new()
+                }
             )
             .ok();
             for e in &self.scale_events {
@@ -1248,8 +1353,8 @@ impl FleetSnapshot {
         }
         writeln!(
             out,
-            "  {:<26} {:>6} {:>7} {:>7} {:>9} {:>9} {:>9} {:>6} {:>6}",
-            "board", "served", "batches", "stolen", "p50(us)", "p99(us)", "uJ/inf", "avg_b", "peakQ"
+            "  {:<26} {:>6} {:>7} {:>7} {:>5} {:>9} {:>9} {:>9} {:>6} {:>6}",
+            "board", "served", "batches", "stolen", "fail", "p50(us)", "p99(us)", "uJ/inf", "avg_b", "peakQ"
         )
         .ok();
         for b in &self.per_board {
@@ -1260,11 +1365,12 @@ impl FleetSnapshot {
             };
             writeln!(
                 out,
-                "  {:<26} {:>6} {:>7} {:>7} {:>9.1} {:>9.1} {:>9.2} {:>6.2} {:>6}",
+                "  {:<26} {:>6} {:>7} {:>7} {:>5} {:>9.1} {:>9.1} {:>9.2} {:>6.2} {:>6}",
                 label,
                 b.served,
                 b.batches,
                 b.stolen,
+                b.exec_failures,
                 b.p50_us,
                 b.p99_us,
                 b.energy_per_inference_uj,

@@ -364,6 +364,16 @@ pub enum FleetEvent {
     /// The result cache refused a Batch-class insert to protect the
     /// interactive working set.
     CacheInsertDenied { task: String, class: Priority },
+    /// A batch failed to execute on a board (device error, chaos
+    /// injection, or a caught worker panic); its `batch` requests went
+    /// to the retry channel or got typed errors.
+    ExecFailed { instance: usize, batch: usize },
+    /// Requests from a failed batch were re-submitted through the
+    /// router.
+    Retried { instance: usize, requests: usize },
+    /// The health controller retired a sick replica (drain-then-join;
+    /// the reason names the tripped signal, e.g. `ejected:failures:3`).
+    ReplicaEjected { task: String, instance: usize, reason: String },
 }
 
 /// A sequenced, timestamped event as stored in a ring.
@@ -412,6 +422,22 @@ impl TraceEvent {
                 fields.push(("task".to_string(), s(task)));
                 fields.push(("class".to_string(), s(class.name())));
                 "cache_insert_denied"
+            }
+            FleetEvent::ExecFailed { instance, batch } => {
+                fields.push(("instance".to_string(), num(*instance as f64)));
+                fields.push(("batch".to_string(), num(*batch as f64)));
+                "exec_failed"
+            }
+            FleetEvent::Retried { instance, requests } => {
+                fields.push(("instance".to_string(), num(*instance as f64)));
+                fields.push(("requests".to_string(), num(*requests as f64)));
+                "retried"
+            }
+            FleetEvent::ReplicaEjected { task, instance, reason } => {
+                fields.push(("task".to_string(), s(task)));
+                fields.push(("instance".to_string(), num(*instance as f64)));
+                fields.push(("reason".to_string(), s(reason)));
+                "replica_ejected"
             }
         };
         fields.push(("event".to_string(), s(kind)));

@@ -45,16 +45,18 @@
 //! batches.
 
 use super::cache::ResultCache;
+use super::health::BoardHealth;
 use super::queue::{BoardQueue, FleetRequest, Priority};
 use super::registry::BoardInstance;
 use super::telemetry::{ReplySample, TelemetrySink};
 use super::trace::{DriftSample, EventRing, FleetEvent, TraceSample};
+use super::FleetError;
 use crate::coordinator::engine::{fill_window, BatchExecutor, BatchPolicy, Reply};
 use crate::coordinator::pool::{PooledVec, ReplyPool};
 use crate::error::{bail, Result};
 use crate::kernels::{PackedLinear, ScratchArena, SmoothKernel};
 use crate::runtime::argmax;
-use std::sync::{Arc, OnceLock, RwLock};
+use std::sync::{mpsc, Arc, OnceLock, RwLock};
 use std::time::{Duration, Instant};
 
 /// Live same-task replica queues (own queue included; workers skip
@@ -336,6 +338,13 @@ pub fn precise_sleep(dur: Duration) {
     }
 }
 
+/// A request rescued off a failed batch, headed back through the router
+/// (the fleet's retry pump consumes these; `task` is the routing key).
+pub struct RetryItem {
+    pub task: String,
+    pub req: FleetRequest,
+}
+
 /// Knobs a worker needs beyond its instance and executor.
 pub struct WorkerConfig {
     pub batch: BatchPolicy,
@@ -352,6 +361,50 @@ pub struct WorkerConfig {
     /// steal / cache-insert-denied events into its board's event ring.
     /// `None` = tracing off; the serve loop pays one branch per edge.
     pub trace: Option<WorkerTraceConfig>,
+    /// Where requests from failed batches go to be re-routed (`None` =
+    /// no pump; they resolve to typed errors immediately).
+    pub retry: Option<mpsc::Sender<RetryItem>>,
+    /// Failed batches one request may ride before `Exhausted`.
+    pub retry_budget: u32,
+    /// This board's slot in the fleet's health plane: the worker beats
+    /// it on every batch outcome so the controller can tell a sick
+    /// replica from an idle one.  `None` = health off.
+    pub health: Option<Arc<BoardHealth>>,
+    /// Record flow-vs-measured drift per batch at this time scale.
+    /// `Some` when tracing **or** health is on — health's drift-ratio
+    /// ejection signal must not require request tracing.
+    pub drift_time_scale: Option<f64>,
+}
+
+/// Resolve one request from a failed batch: hand it to the retry pump
+/// (budget permitting) or send the definitive typed error.  Exactly one
+/// of those happens — the reply channel is never just dropped.  Returns
+/// `true` when the request went back out for retry.
+fn fail_request(
+    mut req: FleetRequest,
+    instance: usize,
+    task: &str,
+    retry: &Option<mpsc::Sender<RetryItem>>,
+    budget: u32,
+) -> bool {
+    req.attempts += 1;
+    req.failed_on = instance as u32;
+    if req.attempts <= budget {
+        if let Some(tx) = retry {
+            return match tx.send(RetryItem { task: task.to_string(), req }) {
+                Ok(()) => true,
+                // Pump already gone (shutdown tail): resolve here.
+                Err(mpsc::SendError(item)) => {
+                    let attempts = item.req.attempts;
+                    let _ = item.req.reply.send(Err(FleetError::Exhausted { attempts }));
+                    false
+                }
+            };
+        }
+    }
+    let attempts = req.attempts;
+    let _ = req.reply.send(Err(FleetError::Exhausted { attempts }));
+    false
 }
 
 /// Per-worker handles for the tracing layer ([`super::trace`]).
@@ -387,9 +440,11 @@ pub fn run_worker<E: BatchExecutor>(
         Ok(b) => b.max(1),
         Err(_) => {
             // An executor that cannot report capacity can never serve.
-            // Keep draining so callers observe dropped reply channels
-            // (an error on recv) instead of hanging until shutdown.
-            while own.pop_blocking().is_some() {}
+            // Keep draining so every caller gets a terminal outcome —
+            // retried elsewhere or a typed error, never a hang.
+            while let Some(req) = own.pop_blocking() {
+                fail_request(req, inst.id, &inst.task, &cfg.retry, cfg.retry_budget);
+            }
             return 0;
         }
     };
@@ -522,10 +577,18 @@ pub fn run_worker<E: BatchExecutor>(
 
         let n = batch.len();
         for (i, req) in batch.iter().enumerate() {
-            // No length validation exists on the submit path, so degrade
-            // gracefully on malformed inputs: truncate long ones, zero-pad
-            // short ones (the logit scale stays 1/feat — deterministic
-            // garbage out, never a panic).
+            // Submit rejects wrong-length inputs for known tasks
+            // (`RouteError::InvalidInput`), so a mismatch here means a
+            // nonstandard task or a hand-built request.  Degrade
+            // gracefully either way: truncate long ones, zero-pad short
+            // ones (the logit scale stays 1/feat — deterministic garbage
+            // out, never a panic).
+            debug_assert!(
+                crate::data::feature_dim_of(&inst.task).is_none()
+                    || req.x.len() == feat,
+                "wrong-length input slipped past submit validation: {} != {feat}",
+                req.x.len()
+            );
             let m = req.x.len().min(feat);
             xbuf[i * feat..i * feat + m].copy_from_slice(&req.x[..m]);
             xbuf[i * feat + m..(i + 1) * feat].fill(0.0);
@@ -537,11 +600,48 @@ pub fn run_worker<E: BatchExecutor>(
         // device time, so it is invariant to time_scale.
         let energy_uj = inst.power_w * inst.batch_latency_s(n) * 1e6;
         let exec_start = Instant::now();
-        if exec.execute(&xbuf, n, &mut obuf).is_err() {
-            // Device failure: dropping the requests' reply senders turns
-            // into a recv error for every caller — never a hang — and the
-            // worker keeps serving subsequent batches.
+        // The execute boundary is also the panic boundary: an executor
+        // (or injected chaos) panic is caught here and handled exactly
+        // like a device error, so one poisoned batch cannot take the
+        // whole replica thread down silently.
+        let exec_ok = matches!(
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                exec.execute(&xbuf, n, &mut obuf)
+            })),
+            Ok(Ok(()))
+        );
+        if !exec_ok {
+            // Device failure: the batch is **not lost**.  Every rider
+            // goes back through the router via the retry pump — avoiding
+            // this board while siblings survive — or resolves to a typed
+            // `Exhausted` once its budget is spent.  The worker keeps
+            // serving subsequent batches (health decides ejection).
+            telemetry.record_exec_failure();
+            if let Some(h) = &cfg.health {
+                h.note_failure();
+            }
+            if let Some(tr) = &cfg.trace {
+                tr.ring.push(FleetEvent::ExecFailed { instance: inst.id, batch: n });
+            }
+            let mut retried = 0usize;
+            for req in batch.drain(..) {
+                if fail_request(req, inst.id, &inst.task, &cfg.retry, cfg.retry_budget) {
+                    retried += 1;
+                }
+            }
+            if retried > 0 {
+                telemetry.record_retried(retried as u64);
+                if let Some(tr) = &cfg.trace {
+                    tr.ring.push(FleetEvent::Retried {
+                        instance: inst.id,
+                        requests: retried,
+                    });
+                }
+            }
             continue;
+        }
+        if let Some(h) = &cfg.health {
+            h.note_success();
         }
         let exec_end = Instant::now();
         let exec_us = exec_end.duration_since(exec_start).as_micros();
@@ -580,13 +680,13 @@ pub fn run_worker<E: BatchExecutor>(
                 priority: req.tag.priority,
                 latency_us: req.enqueued.elapsed().as_micros() as f64,
             });
-            let _ = req.reply.send(Reply {
+            let _ = req.reply.send(Ok(Reply {
                 output: out,
                 top1,
                 batch_size: n,
                 queue_us,
                 exec_us,
-            });
+            }));
             if let Some(t) = req.trace.as_deref() {
                 // Spans close here: reply = execute end → this send.
                 // Missing stamps (hand-built requests) fall back to the
@@ -613,13 +713,17 @@ pub fn run_worker<E: BatchExecutor>(
             own.peak(),
             own.peak_class(),
         );
-        if let Some(tr) = &cfg.trace {
-            // Drift covers every executed batch while tracing is on (not
-            // only sampled ones): the flow prediction and the measured
-            // hold both exist regardless of request sampling.
-            let pred_us = inst.batch_latency_s(n) * tr.time_scale * 1e6;
+        if let Some(ts) = cfg.drift_time_scale {
+            // Drift covers every executed batch (not only sampled ones):
+            // the flow prediction and the measured hold both exist
+            // regardless of request sampling — and the health
+            // controller's drift-ratio signal reads this with tracing
+            // off (`trace_samples` is just empty then).
+            let pred_us = inst.batch_latency_s(n) * ts * 1e6;
             telemetry
                 .record_trace(&trace_samples, Some(DriftSample { pred_us, obs_us: exec_us }));
+        }
+        if let Some(tr) = &cfg.trace {
             if stolen > 0 {
                 tr.ring.push(FleetEvent::Steal { thief: inst.id, stolen });
             }

@@ -16,6 +16,7 @@
 //!                       [--scale-interval-us N] [--json]
 //!                       [--tenants N] [--priority-mix i:s:b] [--fifo] [--global-hotpath]
 //!                       [--trace-sample N] [--trace-dump]
+//!                       [--chaos SPEC] [--chaos-seed N]
 //! tinyml-codesign bench-gate [--baseline-dir D] [--bench-dir D] [--tol F]
 //!                       [--update] [--self-test]    BENCH_* regression gate
 //! tinyml-codesign list                               available models
@@ -32,6 +33,14 @@
 //! histograms and flow-vs-measured drift land in the report/JSON —
 //! and `--trace-dump` prints the fleet event ring as JSONL (one event
 //! per line) instead of the report.
+//!
+//! `--chaos SPEC` injects seeded faults into the fleet (grammar:
+//! `exec=P,kill=ID@B,slow=FxID,stall=US@EVERY,panic=ID@B` — see
+//! `tinyml_codesign::fleet::chaos`); the health controller then detects
+//! and ejects misbehaving replicas while the retry pump re-routes their
+//! failed batches. `--chaos-seed N` re-seeds the fault PRNG (default 42).
+//! With chaos on, the report is prefixed by a machine-parseable
+//! `chaos: ejections=.. served=.. failed=.. lost=..` line.
 
 use tinyml_codesign::board::{arty_a7_100t, pynq_z2, Board};
 use tinyml_codesign::coordinator::engine::{spawn, BatchPolicy};
@@ -40,7 +49,7 @@ use tinyml_codesign::data;
 use tinyml_codesign::eembc::{DesignPerf, Dut, Runner};
 use tinyml_codesign::error::{anyhow, bail, Result};
 use tinyml_codesign::fleet::{
-    AutoscaleConfig, Fleet, FleetConfig, Policy, Priority, Registry, RequestTag,
+    AutoscaleConfig, ChaosSpec, Fleet, FleetConfig, Policy, Priority, Registry, RequestTag,
 };
 use tinyml_codesign::report::{gate, tables};
 use tinyml_codesign::runtime::{LoadedModel, Runtime};
@@ -135,6 +144,7 @@ tinyml-codesign fleet [--policy rr|ll|energy|slo] [--requests N] [--cache N]
                       [--scale-interval-us N] [--json]
                       [--tenants N] [--priority-mix i:s:b] [--fifo] [--global-hotpath]
                       [--trace-sample N] [--trace-dump]
+                      [--chaos SPEC] [--chaos-seed N]
 tinyml-codesign bench-gate [--baseline-dir D] [--bench-dir D] [--tol F]
                       [--update] [--self-test]    BENCH_* regression gate
 tinyml-codesign list                               available models";
@@ -319,6 +329,14 @@ fn main() -> Result<()> {
             });
             let tenants = args.usize_flag("tenants", 1).max(1) as u32;
             let mix = parse_priority_mix(args.flag("priority-mix").unwrap_or("0:1:0"))?;
+            // --chaos: seeded fault injection; the health controller
+            // defaults on whenever chaos is requested (Fleet::start).
+            let chaos = match args.flag("chaos") {
+                Some(spec) => {
+                    Some(ChaosSpec::parse(spec, args.usize_flag("chaos-seed", 42) as u64)?)
+                }
+                None => None,
+            };
             let cfg = FleetConfig {
                 policy,
                 time_scale: 20.0,
@@ -327,6 +345,7 @@ fn main() -> Result<()> {
                 fifo_queues: args.flag("fifo").is_some(),
                 global_hotpath: args.flag("global-hotpath").is_some(),
                 trace_sample: args.usize_flag("trace-sample", 0),
+                chaos,
                 ..Default::default()
             };
             let fleet = Fleet::start(Registry::standard_fleet()?, cfg)?;
@@ -350,8 +369,13 @@ fn main() -> Result<()> {
                     Err(_) => rejected += 1,
                 }
             }
+            let (mut ok, mut failed, mut lost) = (0usize, 0usize, 0usize);
             for rx in pending {
-                let _ = rx.recv();
+                match rx.recv() {
+                    Ok(Ok(_)) => ok += 1,
+                    Ok(Err(_)) => failed += 1,
+                    Err(_) => lost += 1,
+                }
             }
             let summary = fleet.shutdown();
             if args.flag("trace-dump").is_some() {
@@ -373,6 +397,14 @@ fn main() -> Result<()> {
                  {rejected} rejected",
                 if cfg.fifo_queues { " (fifo queues)" } else { "" }
             );
+            if cfg.chaos.is_some() {
+                // Machine-parseable resilience line for the CI chaos
+                // smoke: ejections must be nonzero, lost must be zero.
+                println!(
+                    "chaos: ejections={} served={ok} failed={failed} lost={lost}",
+                    summary.snapshot.ejections
+                );
+            }
             if args.flag("json").is_some() {
                 println!("{}", summary.snapshot.to_json().to_json());
             } else {

@@ -2,9 +2,10 @@
 //! CI floor.
 //!
 //! The self-checking benches (`benches/kernels.rs`, `benches/fleet.rs`,
-//! `benches/hotpath.rs`) already assert *absolute* floors inline
-//! (packed >= naive, elastic p99 <= fixed, interactive ratio <= 0.5,
-//! sharded plane >= 1.3x the global-lock plane, ...).  This module adds
+//! `benches/hotpath.rs`, `benches/scenarios.rs`) already assert
+//! *absolute* floors inline (packed >= naive, elastic p99 <= fixed,
+//! interactive ratio <= 0.5, sharded plane >= 1.3x the global-lock
+//! plane, zero lost requests under a replica kill, ...).  This module adds
 //! the *trajectory* guarantee on top: the dimensionless **headline
 //! ratios** of a fresh bench run are diffed against committed baselines
 //! (`baselines/BENCH_*.json`) and CI fails on a regression beyond
@@ -47,8 +48,12 @@ pub const DEFAULT_TOLERANCE: f64 = 0.10;
 
 /// The bench documents the gate knows how to extract headlines from,
 /// keyed by their `"bench"` field.
-const BENCH_FILES: [&str; 3] =
-    ["BENCH_kernels.json", "BENCH_fleet.json", "BENCH_hotpath.json"];
+const BENCH_FILES: [&str; 4] = [
+    "BENCH_kernels.json",
+    "BENCH_fleet.json",
+    "BENCH_hotpath.json",
+    "BENCH_scenarios.json",
+];
 
 /// One gated headline number.
 #[derive(Clone, Debug, PartialEq)]
@@ -165,6 +170,32 @@ pub fn headline_metrics(doc: &Value) -> Result<Vec<Metric>> {
             out.push(Metric {
                 name: "hotpath.traced_over_untraced_throughput".to_string(),
                 value: f64_of(doc, "traced_over_untraced_throughput")?,
+                higher_is_better: true,
+            });
+        }
+        "scenarios" => {
+            // Resilience: conservation and detection under a replica
+            // kill (both fractions of 1.0 — any loss regresses them)...
+            let kill = doc.req("kill")?;
+            for key in ["resolved_fraction", "ejected"] {
+                out.push(Metric {
+                    name: format!("scenarios.kill_{key}"),
+                    value: f64_of(kill, key)?,
+                    higher_is_better: true,
+                });
+            }
+            // ...bounded tail degradation during a brownout...
+            out.push(Metric {
+                name: "scenarios.p99_under_failure_ratio".to_string(),
+                value: f64_of(doc.req("brownout")?, "p99_under_failure_ratio")?,
+                higher_is_better: false,
+            });
+            // ...and full service through a flash crowd on a degraded
+            // fleet.  `time_to_recover_ms` is deliberately not gated:
+            // absolute timings do not transfer across machines.
+            out.push(Metric {
+                name: "scenarios.recovery_served_fraction".to_string(),
+                value: f64_of(doc.req("flash_crowd")?, "recovery_served_fraction")?,
                 higher_is_better: true,
             });
         }
@@ -452,6 +483,24 @@ mod tests {
             .any(|x| x.name == "hotpath.traced_over_untraced_throughput"
                 && (x.value - 0.95).abs() < 1e-9));
 
+        let scenarios = Value::parse(
+            r#"{"bench":"scenarios",
+                "kill":{"resolved_fraction":1.0,"ejected":1.0},
+                "brownout":{"p99_under_failure_ratio":3.5},
+                "flash_crowd":{"recovery_served_fraction":0.98}}"#,
+        )
+        .unwrap();
+        let m = headline_metrics(&scenarios).unwrap();
+        assert_eq!(m.len(), 4);
+        assert!(m.iter().any(|x| x.name == "scenarios.kill_resolved_fraction"
+            && x.value == 1.0
+            && x.higher_is_better));
+        assert!(m.iter().any(|x| x.name == "scenarios.p99_under_failure_ratio"
+            && (x.value - 3.5).abs() < 1e-9
+            && !x.higher_is_better));
+        assert!(m.iter().any(|x| x.name == "scenarios.recovery_served_fraction"
+            && x.higher_is_better));
+
         assert!(headline_metrics(&Value::parse(r#"{"bench":"nope"}"#).unwrap()).is_err());
     }
 
@@ -477,9 +526,14 @@ mod tests {
             "autoscale":{"p99_ratio_elastic_over_fixed":1.0,
                          "board_seconds_ratio_elastic_over_fixed":1.0},
             "priority":{"interactive_p99_ratio_classful_over_fifo":0.5}}"#;
+        let scenarios = r#"{"bench":"scenarios",
+            "kill":{"resolved_fraction":1.0,"ejected":1.0},
+            "brownout":{"p99_under_failure_ratio":8.0},
+            "flash_crowd":{"recovery_served_fraction":0.95}}"#;
         for d in [&base, &cur] {
             std::fs::write(d.join("BENCH_kernels.json"), kernels).unwrap();
             std::fs::write(d.join("BENCH_fleet.json"), fleet).unwrap();
+            std::fs::write(d.join("BENCH_scenarios.json"), scenarios).unwrap();
         }
         std::fs::write(
             base.join("BENCH_hotpath.json"),

@@ -12,9 +12,9 @@ use tinyml_codesign::dataflow::{Prereq, Simulator, StageSpec, UNBOUNDED_DEPTH};
 use tinyml_codesign::fifo::{optimize_fifos, DepthPolicy};
 use tinyml_codesign::fleet::worker::run_worker;
 use tinyml_codesign::fleet::{
-    BoardInstance, BoardQueue, Fleet, FleetConfig, FleetRequest, PeerList, Policy,
-    Priority, Registry, RequestTag, RouteError, Router, SimBoardExecutor, Telemetry,
-    WorkerConfig,
+    BoardInstance, BoardQueue, ChaosSpec, Fleet, FleetConfig, FleetError,
+    FleetRequest, HealthConfig, PeerList, Policy, Priority, Registry, RequestTag,
+    RouteError, Router, SimBoardExecutor, Telemetry, WorkerConfig,
 };
 use tinyml_codesign::ir::Graph;
 use tinyml_codesign::kernels::{
@@ -459,7 +459,9 @@ fn fleet_end_to_end_delivers_every_admitted_request() {
             }
         }
         for rx in &pending {
-            rx.recv().expect("admitted request was dropped");
+            rx.recv()
+                .expect("admitted request was dropped")
+                .expect("request must not fail without chaos");
         }
         let summary = fleet.shutdown();
         assert_eq!(summary.snapshot.served as usize, n, "{policy:?}");
@@ -467,6 +469,91 @@ fn fleet_end_to_end_delivers_every_admitted_request() {
             summary.served_per_worker.iter().sum::<u64>() as usize,
             n,
             "{policy:?}"
+        );
+    }
+}
+
+#[test]
+fn prop_chaos_every_admitted_request_gets_exactly_one_outcome() {
+    // Under a random fault plan — transient exec errors on every
+    // replica, permanent death / injected panics / stalls on replica 0
+    // — every admitted request must resolve with *exactly one* outcome:
+    // a reply or a typed FleetError.  Never a hang (recv_timeout), never
+    // a duplicate (the channel must be spent after the first outcome).
+    let mut rng = SplitMix64::new(0xC4A0_5007);
+    for case in 0..6u64 {
+        let mut clauses: Vec<String> = Vec::new();
+        let exec_p = [0.0, 0.15, 0.4][rng.next_below(3) as usize];
+        if exec_p > 0.0 {
+            clauses.push(format!("exec={exec_p}"));
+        }
+        // Targeted faults hit replica 0 only, so its kws sibling keeps
+        // the plan survivable (mirrors FaultPlan::materialize's own
+        // kill=fastest rule).
+        if rng.next_below(2) == 0 {
+            clauses.push("kill=0@3".to_string());
+        } else if rng.next_below(2) == 0 {
+            clauses.push("panic=0@4".to_string());
+        }
+        if rng.next_below(2) == 0 {
+            clauses.push("stall=200@4".to_string());
+        }
+        let spec =
+            ChaosSpec::parse(&clauses.join(","), 0x51EE ^ (case << 8)).unwrap();
+        let reg = Registry {
+            instances: vec![
+                BoardInstance::synthetic(0, "kws", 80.0, 10.0, 1.5),
+                BoardInstance::synthetic(1, "kws", 250.0, 50.0, 1.8),
+            ],
+        };
+        let cfg = FleetConfig {
+            queue_cap: 1024,
+            chaos: Some(spec),
+            health: Some(HealthConfig {
+                interval: std::time::Duration::from_millis(1),
+                max_consecutive_failures: 2,
+                ..Default::default()
+            }),
+            // Outlast the window where a dying replica can steal a
+            // request back and fail it again before ejection lands.
+            retry_budget: 50,
+            ..Default::default()
+        };
+        let fleet = Fleet::start(reg, cfg).unwrap();
+        let handle = fleet.handle();
+        let n = 60;
+        let x = vec![0.1f32; tinyml_codesign::data::feature_dim("kws")];
+        let mut pending = Vec::new();
+        for _ in 0..n {
+            match handle.submit("kws", x.clone()) {
+                Ok(rx) => pending.push(rx),
+                Err(e) => panic!("case {case} ({spec:?}): rejected: {e:?}"),
+            }
+        }
+        let (mut ok, mut typed_err) = (0usize, 0usize);
+        for rx in &pending {
+            match rx.recv_timeout(std::time::Duration::from_secs(10)) {
+                Ok(Ok(_)) => ok += 1,
+                Ok(Err(FleetError::Exhausted { attempts })) => {
+                    assert!(attempts > 0, "case {case}: exhausted with 0 attempts");
+                    typed_err += 1;
+                }
+                Err(e) => panic!(
+                    "case {case} ({spec:?}): request hung or was dropped: {e:?}"
+                ),
+            }
+            // Exactly one outcome: the reply channel must be spent.
+            assert!(
+                rx.try_recv().is_err(),
+                "case {case} ({spec:?}): duplicate outcome on one request"
+            );
+        }
+        assert_eq!(ok + typed_err, n, "case {case}");
+        let summary = fleet.shutdown();
+        assert_eq!(
+            summary.snapshot.served as usize, ok,
+            "case {case} ({spec:?}): telemetry served must match delivered \
+             replies exactly (no double-serving)"
         );
     }
 }
@@ -585,6 +672,10 @@ fn run_worker_has_no_inline_inference_path() {
                 work_stealing: true,
                 pooled_replies: true,
                 trace: None,
+                retry: None,
+                retry_budget: 0,
+                health: None,
+                drift_time_scale: None,
             };
             run_worker(&inst, exec, &queue, &peers, &wcfg, &sink, None)
         })
@@ -599,6 +690,8 @@ fn run_worker_has_no_inline_inference_path() {
             cache_key: None,
             tag: RequestTag::default(),
             trace: None,
+            attempts: 0,
+            failed_on: tinyml_codesign::fleet::queue::NOT_FAILED,
         };
         assert!(queue.try_push(req).is_ok(), "request {i} rejected");
         rxs.push((i, rx));
@@ -608,7 +701,7 @@ fn run_worker_has_no_inline_inference_path() {
     assert_eq!(served, 20);
     assert!(calls.load(Ordering::Relaxed) >= 1, "executor never invoked");
     for (i, rx) in rxs {
-        let r = rx.recv().unwrap();
+        let r = rx.recv().unwrap().unwrap();
         assert_eq!(
             r.output,
             vec![i as f32 + 1.0, 42.0],
@@ -670,7 +763,8 @@ fn prop_scale_down_drains_every_request_exactly_once() {
         }
         for rx in &pending {
             rx.recv_timeout(std::time::Duration::from_secs(30))
-                .expect("admitted request dropped by scaling");
+                .expect("admitted request dropped by scaling")
+                .expect("request must not fail without chaos");
             assert!(
                 rx.try_recv().is_err(),
                 "case {case}: duplicate reply for one request"
@@ -737,7 +831,8 @@ fn prop_no_admitted_request_dropped_across_priority_classes() {
         }
         for (p, rx) in &pending {
             rx.recv_timeout(std::time::Duration::from_secs(30))
-                .unwrap_or_else(|_| panic!("case {case}: admitted {p} request dropped"));
+                .unwrap_or_else(|_| panic!("case {case}: admitted {p} request dropped"))
+                .expect("request must not fail without chaos");
             assert!(rx.try_recv().is_err(), "case {case}: duplicate reply");
         }
         let summary = fleet.shutdown();
@@ -785,7 +880,8 @@ fn priority_overload_sheds_batch_only() {
     submit(Priority::Interactive, 5);
     for rx in &pending {
         rx.recv_timeout(std::time::Duration::from_secs(60))
-            .expect("admitted request dropped");
+            .expect("admitted request dropped")
+            .expect("request must not fail without chaos");
     }
     let summary = fleet.shutdown();
     let classes = &summary.snapshot.classes;
@@ -820,6 +916,8 @@ fn prop_no_class_starves_under_sustained_interactive_load() {
                 cache_key: None,
                 tag: RequestTag::new(0, p),
                 trace: None,
+                attempts: 0,
+                failed_on: tinyml_codesign::fleet::queue::NOT_FAILED,
             }
         };
         // Random interleave of the lower-class preload.
