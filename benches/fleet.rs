@@ -49,11 +49,11 @@ use tinyml_codesign::fleet::{
 };
 use tinyml_codesign::report::json::{num, obj, s, Value};
 
-const TIME_SCALE: f64 = 50.0;
+#[path = "util.rs"]
+mod util;
+use util::quick;
 
-fn quick() -> bool {
-    std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
-}
+const TIME_SCALE: f64 = 50.0;
 
 // ---------------------------------------------------------------------------
 // Part 1: routing policies under skewed load.

@@ -56,9 +56,9 @@ const BOARDS: usize = 4;
 /// Distinct hot inputs in the cache-on trace (all hits after warmup).
 const HOT_SET: usize = 256;
 
-fn quick() -> bool {
-    std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
-}
+#[path = "util.rs"]
+mod util;
+use util::quick;
 
 struct RunStats {
     submitted: u64,

@@ -45,9 +45,9 @@ const TIME_SCALE: f64 = 20.0;
 /// A reply that takes this long is a lost request, not a slow one.
 const RECV_TIMEOUT: Duration = Duration::from_secs(10);
 
-fn quick() -> bool {
-    std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
-}
+#[path = "util.rs"]
+mod util;
+use util::quick;
 
 /// Two KWS replicas: id 0 the slower workhorse, id 1 the fast one
 /// (`kill=fastest` resolves to id 1).  Batched service rates at

@@ -1,0 +1,29 @@
+//! Shared helpers for the self-checking benches (`kernels`, `fleet`,
+//! `hotpath`, `scenarios`).  Each bench target pulls this file in with
+//! `#[path = "util.rs"] mod util;` — bench targets cannot depend on one
+//! another, and these helpers are measurement plumbing, not library
+//! surface, so they live beside the benches instead of in the crate.
+//!
+//! Not every bench uses every helper (only `kernels` needs best-of
+//! timing), hence the item-level `dead_code` allowances.
+
+use std::time::Instant;
+
+/// `BENCH_QUICK=1` (set by ci.sh) cuts iteration/trace counts ~10x but
+/// keeps every assertion.
+#[allow(dead_code)]
+pub fn quick() -> bool {
+    std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Best-of-`reps` wall time of `f` (ns), de-noising scheduler jitter.
+#[allow(dead_code)]
+pub fn best_ns<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_nanos() as f64);
+    }
+    best
+}

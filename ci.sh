@@ -28,9 +28,21 @@ if [ "${1:-}" = "fast" ]; then
     exit 0
 fi
 
+# Scalar-oracle rerun: the TINYML_FORCE_SCALAR=1 kill switch must pin
+# the kernel dispatch to the scalar path and keep it healthy on any
+# host CPU.  Rerun the kernel unit tests, the packed/simd proptests,
+# and the quick kernels bench under the switch (the forced-scalar bench
+# emits simd_unavailable: true so its floors self-skip; it runs BEFORE
+# the dispatched bench below so the BENCH_kernels.json the gate reads
+# comes from the real SIMD run).
+run env TINYML_FORCE_SCALAR=1 cargo test -q --lib -- kernels
+run env TINYML_FORCE_SCALAR=1 cargo test -q --test proptests -- packed simd
+run env TINYML_FORCE_SCALAR=1 BENCH_QUICK=1 cargo bench --bench kernels
+
 # Kernel-core self-check: quick mode keeps the perf-floor and
 # equivalence assertions but cuts iterations ~10x.  Emits
-# BENCH_kernels.json (the recorded perf trajectory).
+# BENCH_kernels.json (the recorded perf trajectory), now including the
+# simd-vs-scalar-oracle A/B (simd_over_scalar_speedup per shape).
 run env BENCH_QUICK=1 cargo bench --bench kernels
 
 # Fleet self-check: routing-policy floor (least-loaded >= round-robin),

@@ -42,7 +42,11 @@
 //! replica worker (the seed rebuilt the f32 templates per replica
 //! thread), and each executor drives the shared matrix with its own
 //! scratch arena; the worker's staging buffers are reused across
-//! batches.
+//! batches.  The batched GEMM's inner dot runs at the process-wide
+//! [`crate::kernels::simd`] dispatch level (AVX2 / SSE2 / NEON;
+//! `TINYML_FORCE_SCALAR=1` pins the scalar oracle), selected once at
+//! first use — replica counts don't re-detect, and every replica is
+//! bit-identical to every other regardless of level.
 
 use super::cache::ResultCache;
 use super::health::BoardHealth;

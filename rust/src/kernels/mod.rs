@@ -19,11 +19,19 @@
 //! * [`SmoothKernel`] — the AD autoencoder's 9-tap moving average as an
 //!   O(n) prefix-sum pass (the seed recomputed each window from scratch,
 //!   O(n·window)).
+//! * [`simd`] — runtime-dispatched `std::arch` implementations of the
+//!   i8 inner loops (x86_64 AVX2 with an SSE2 fallback, aarch64 NEON),
+//!   selected once per process into a dispatch table, with the scalar
+//!   loop as both universal fallback and **bit-exactness oracle**
+//!   (integer accumulation is associative, so SIMD-vs-scalar
+//!   equivalence is exact, not a tolerance).  `TINYML_FORCE_SCALAR=1`
+//!   pins the scalar path for A/B runs and CI.
 //! * [`ScratchArena`] — caller-owned scratch for everything the kernels
-//!   need at runtime (quantized activations, per-sample scales, prefix
-//!   sums).  Buffers grow to their high-water mark and are then reused,
-//!   so the steady-state serve loop performs **zero heap allocations**
-//!   inside the kernels.
+//!   need at runtime (quantized activations, per-sample scales, i32
+//!   partial-sum strips for the column-blocked GEMM, prefix sums).
+//!   Buffers grow to their high-water mark and are then reused, so the
+//!   steady-state serve loop performs **zero heap allocations** inside
+//!   the kernels.
 //!
 //! Scratch-arena contract: one arena per executor (they are cheap);
 //! kernels may clobber any arena buffer, so never hand one arena to two
@@ -32,9 +40,11 @@
 //! output slices and never allocate.
 
 mod packed;
+pub mod simd;
 mod smooth;
 
 pub use packed::{quantized_max_abs_error, PackedLinear};
+pub use simd::SimdLevel;
 pub use smooth::SmoothKernel;
 
 /// Caller-owned scratch backing the kernel hot paths.
@@ -50,6 +60,9 @@ pub struct ScratchArena {
     pub(crate) xq: Vec<i8>,
     /// Per-sample activation dequantization scales.
     pub(crate) xscale: Vec<f32>,
+    /// i32 partial sums for the column-blocked GEMM, `n * ROW_TILE`
+    /// elements (exact across block boundaries by associativity).
+    pub(crate) acc: Vec<i32>,
     /// f64 prefix sums for [`SmoothKernel`] (len n + 1).
     pub(crate) prefix: Vec<f64>,
 }

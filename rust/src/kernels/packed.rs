@@ -9,9 +9,21 @@
 //! dequantizes: `y[r] = acc * (w_scale[r] * out_scale) * x_scale`.
 //!
 //! Integer accumulation is associative, so loop order cannot change the
-//! result: the batched, weight-tiled path is bit-identical to the
-//! single-sample path.
+//! result: the batched, weight-tiled, column-blocked path is
+//! bit-identical to the single-sample path, **and** every
+//! [`super::simd`] lane implementation of the inner dot is bit-identical
+//! to the scalar oracle — equivalence is testable exactly, never within
+//! a tolerance.
+//!
+//! Blocking (the software mirror of hls4ml's reuse-factor knob): the
+//! batched path keeps the existing [`ROW_TILE`]-row outer tile and adds
+//! a [`COL_BLOCK`]-column inner block, so one weight panel
+//! (`ROW_TILE x COL_BLOCK` i8) plus one quantized activation strip
+//! (`COL_BLOCK` i8) stay resident in L1 while every sample of the batch
+//! streams past; per-(row, sample) partial sums ride an i32 accumulator
+//! strip in the arena across column blocks.
 
+use super::simd::{self, DotFn};
 use super::ScratchArena;
 
 /// Row tile for the batched path: a tile of rows stays hot in L1 while
@@ -19,37 +31,52 @@ use super::ScratchArena;
 /// walked once per batch rather than once per sample.
 const ROW_TILE: usize = 8;
 
+/// Column block for the batched path: `ROW_TILE * COL_BLOCK` weight
+/// bytes (16 KiB) + one `COL_BLOCK`-byte activation strip ≈ 18 KiB —
+/// comfortably inside a 32 KiB L1d with room for the accumulators.
+const COL_BLOCK: usize = 2048;
+
 /// Widest supported row: guarantees `cols * 127 * 127` fits an i32
 /// accumulator with headroom (the largest shipped shape, IC, is 3072).
 const MAX_COLS: usize = 131_072;
 
-/// Exact i32 dot product over two i8 slices.  Integer adds reassociate
-/// freely, so this loop vectorizes in release builds (unlike the f32
-/// `.sum::<f32>()` chain it replaces, which is a serial dependency).
-#[inline]
-fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0i32;
-    for (&p, &q) in a.iter().zip(b.iter()) {
-        acc += p as i32 * q as i32;
+/// Non-finite f32s (±Inf, NaN) have magnitude bits `>= 0x7f80_0000`;
+/// for finite values the magnitude bits order exactly like `|v|`, which
+/// is what lets the quantizer's scan be one branch-free u32 max.
+const NON_FINITE_BITS: u32 = 0x7f80_0000;
+
+/// Branch-free max-abs scan, in magnitude-bits space: returns
+/// `max(bits(v) & 0x7fff_ffff)`.  For finite inputs this *is* the
+/// max-abs (IEEE-754 magnitude bits are monotone in `|v|`); any NaN or
+/// Inf element — not just an all-input overflow — surfaces as a value
+/// `>= NON_FINITE_BITS`.  A single u32 max per element with no
+/// data-dependent branches, so the loop auto-vectorizes.
+fn max_abs_bits(src: &[f32]) -> u32 {
+    let mut m = 0u32;
+    for &v in src {
+        m = m.max(v.to_bits() & 0x7fff_ffff);
     }
-    acc
+    m
 }
 
 /// Symmetric i8 quantization of one vector; returns the dequantization
-/// scale (`v ≈ q * scale`).  All-zero (or non-finite) input quantizes to
-/// zeros with scale 0, which reproduces the exact f32 result (0) for
-/// every output.
-fn quantize_i8(src: &[f32], dst: &mut [i8]) -> f32 {
+/// scale (`v ≈ q * scale`).  All-zero input — or **any** non-finite
+/// element (a single NaN or Inf anywhere in the sample, pinned by unit
+/// test) — quantizes to zeros with scale 0, so one corrupt element
+/// can never smuggle garbage through the integer path.
+///
+/// Split into two passes on purpose: the max-abs scan is a branch-free
+/// u32 max ([`max_abs_bits`]) and the scale/round loop is a
+/// straight-line multiply-round-cast, so both auto-vectorize instead of
+/// serializing on the scan's compare-and-select chain.
+pub(crate) fn quantize_i8(src: &[f32], dst: &mut [i8]) -> f32 {
     debug_assert_eq!(src.len(), dst.len());
-    let mut max_abs = 0.0f32;
-    for &v in src {
-        max_abs = max_abs.max(v.abs());
-    }
-    if max_abs == 0.0 || !max_abs.is_finite() {
+    let bits = max_abs_bits(src);
+    if bits == 0 || bits >= NON_FINITE_BITS {
         dst.fill(0);
         return 0.0;
     }
+    let max_abs = f32::from_bits(bits);
     let inv = 127.0 / max_abs;
     for (d, &v) in dst.iter_mut().zip(src) {
         // |v * inv| ≤ 127 (+1 ulp); float→int casts saturate, so the
@@ -129,10 +156,35 @@ impl PackedLinear {
     /// Batched matvec over `x.len() / cols` samples packed contiguously
     /// in `x`; writes `rows` outputs per sample into `out`.  Activations
     /// are quantized once per sample, then the weight matrix is walked
-    /// once per batch in row tiles (every sample streams past the hot
-    /// tile).  Allocation-free in steady state: all intermediates live
-    /// in the caller's arena.
+    /// once per batch in row tiles × column blocks (see module docs),
+    /// with the inner dot running at the process-wide
+    /// [`simd::dispatch`] level (AVX2 / SSE2 / NEON, or scalar under
+    /// `TINYML_FORCE_SCALAR=1`).  Allocation-free in steady state: all
+    /// intermediates live in the caller's arena.
     pub fn gemm_batch(&self, x: &[f32], out: &mut [f32], scratch: &mut ScratchArena) {
+        self.gemm_with_dot(simd::dispatch().dot_i8, x, out, scratch);
+    }
+
+    /// [`Self::gemm_batch`] pinned to the scalar inner loop regardless
+    /// of the dispatch table — the **bit-exactness oracle** the SIMD
+    /// proptests and the `simd_over_scalar_speedup` bench A/B against.
+    /// Identical blocking, identical quantization, scalar dot.
+    pub fn gemm_batch_scalar(
+        &self,
+        x: &[f32],
+        out: &mut [f32],
+        scratch: &mut ScratchArena,
+    ) {
+        self.gemm_with_dot(simd::dot_i8_scalar, x, out, scratch);
+    }
+
+    fn gemm_with_dot(
+        &self,
+        dot: DotFn,
+        x: &[f32],
+        out: &mut [f32],
+        scratch: &mut ScratchArena,
+    ) {
         if self.rows == 0 || self.cols == 0 {
             return;
         }
@@ -148,15 +200,33 @@ impl PackedLinear {
                 &mut xq[s * self.cols..(s + 1) * self.cols],
             );
         }
+        let acc = ScratchArena::grown(&mut scratch.acc, n * ROW_TILE, 0);
 
         for r0 in (0..self.rows).step_by(ROW_TILE) {
             let r1 = (r0 + ROW_TILE).min(self.rows);
+            let tile = r1 - r0;
+            let acc_t = &mut acc[..n * tile];
+            acc_t.fill(0);
+            // Column blocks: the ROW_TILE x COL_BLOCK weight panel and
+            // each sample's COL_BLOCK activation strip stay L1-resident;
+            // i32 partial sums are exact, so block boundaries cannot
+            // change a single bit of the result.
+            for c0 in (0..self.cols).step_by(COL_BLOCK) {
+                let c1 = (c0 + COL_BLOCK).min(self.cols);
+                for s in 0..n {
+                    let xq_s = &xq[s * self.cols + c0..s * self.cols + c1];
+                    let acc_s = &mut acc_t[s * tile..(s + 1) * tile];
+                    for (t, r) in (r0..r1).enumerate() {
+                        acc_s[t] +=
+                            dot(&self.q[r * self.cols + c0..r * self.cols + c1], xq_s);
+                    }
+                }
+            }
             for s in 0..n {
-                let xq_s = &xq[s * self.cols..(s + 1) * self.cols];
                 let out_s = &mut out[s * self.rows..(s + 1) * self.rows];
-                for r in r0..r1 {
-                    let acc = dot_i8(&self.q[r * self.cols..(r + 1) * self.cols], xq_s);
-                    out_s[r] = acc as f32 * self.scales[r] * xs[s];
+                let acc_s = &acc_t[s * tile..(s + 1) * tile];
+                for (t, r) in (r0..r1).enumerate() {
+                    out_s[r] = acc_s[t] as f32 * self.scales[r] * xs[s];
                 }
             }
         }
@@ -175,9 +245,10 @@ mod tests {
     }
 
     // Tolerance-bounded equivalence vs the f32 reference, batched-vs-
-    // single bit-exactness, and argmax preservation are covered by the
-    // randomized properties in rust/tests/proptests.rs; the tests here
-    // pin down the exact-arithmetic edge cases only.
+    // single bit-exactness, SIMD-vs-scalar bit-identity, and argmax
+    // preservation are covered by the randomized properties in
+    // rust/tests/proptests.rs; the tests here pin down the
+    // exact-arithmetic edge cases only.
 
     fn naive(x: &[f32], rows: &[Vec<f32>], out_scale: f32) -> Vec<f32> {
         rows.iter()
@@ -217,9 +288,75 @@ mod tests {
     }
 
     #[test]
+    fn single_non_finite_element_zeroes_the_sample() {
+        // Pre-split-scan behavior: `f32::max` ignores NaN, so one NaN
+        // element slipped past the guard and quantized as 0 while its
+        // neighbors carried garbage-scaled values.  The magnitude-bits
+        // scan catches *any* non-finite element — the whole sample
+        // quantizes to zeros with scale 0, pinned here per kind.
+        let rows = vec![vec![1.0f32; 8]];
+        let p = PackedLinear::pack(&rows, 1.0);
+        let mut a = ScratchArena::new();
+        let mut out = vec![9.0f32; 1];
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut x = vec![1.0f32; 8];
+            x[3] = bad;
+            p.gemv(&x, &mut out, &mut a);
+            assert_eq!(out, vec![0.0], "element {bad} must zero the sample");
+        }
+        // And in a batch, only the corrupt sample is zeroed — its
+        // neighbors still quantize normally.
+        let mut xb = vec![1.0f32; 3 * 8];
+        xb[8 + 2] = f32::NAN;
+        let mut outb = vec![9.0f32; 3];
+        p.gemm_batch(&xb, &mut outb, &mut a);
+        assert_eq!(outb[1], 0.0, "NaN sample must be zeroed");
+        assert!(outb[0] > 0.5 && outb[2] > 0.5, "clean samples must survive: {outb:?}");
+    }
+
+    #[test]
+    fn quantize_scan_orders_magnitudes_exactly() {
+        // The u32 magnitude-bits max must agree with the f32 max-abs on
+        // finite data (IEEE-754 monotonicity), including negatives,
+        // zeros, and denormals.
+        let src = [0.0f32, -3.5, 2.25, -0.0, 1e-40, -1e-39, 3.0];
+        let bits = max_abs_bits(&src);
+        assert_eq!(f32::from_bits(bits), 3.5);
+        assert!(bits < NON_FINITE_BITS);
+        assert_eq!(max_abs_bits(&[]), 0);
+        assert!(max_abs_bits(&[0.0, f32::NAN]) >= NON_FINITE_BITS);
+        assert!(max_abs_bits(&[f32::NEG_INFINITY]) >= NON_FINITE_BITS);
+    }
+
+    #[test]
+    fn column_blocking_is_bit_identical_across_the_block_boundary() {
+        // A shape wider than COL_BLOCK forces multi-block accumulation;
+        // partial i32 sums must reproduce the single-dot result exactly
+        // (compare the blocked batched path against per-sample gemv and
+        // the scalar oracle).
+        let mut rng = SplitMix64::new(0xB10C);
+        let cols = COL_BLOCK + 37; // ragged second block
+        let rows = gaussian_rows(&mut rng, 3, cols);
+        let p = PackedLinear::pack(&rows, 1.0 / cols as f32);
+        let mut a = ScratchArena::new();
+        let x: Vec<f32> = (0..2 * cols).map(|_| rng.next_gaussian() as f32).collect();
+        let mut batched = vec![0.0f32; 2 * 3];
+        p.gemm_batch(&x, &mut batched, &mut a);
+        let mut oracle = vec![0.0f32; 2 * 3];
+        p.gemm_batch_scalar(&x, &mut oracle, &mut a);
+        assert_eq!(batched, oracle, "dispatched path diverged from scalar oracle");
+        let mut single = vec![0.0f32; 3];
+        for s in 0..2 {
+            p.gemv(&x[s * cols..(s + 1) * cols], &mut single, &mut a);
+            assert_eq!(&batched[s * 3..(s + 1) * 3], &single[..]);
+        }
+    }
+
+    #[test]
     fn steady_state_is_allocation_free() {
         // After a warm-up call the arena must not grow again for the
-        // same shape (pointer + capacity stable).
+        // same shape (pointer + capacity stable) — including the i32
+        // accumulator strip the column-blocked path added.
         let mut rng = SplitMix64::new(0xA11C);
         let rows = gaussian_rows(&mut rng, 4, 32);
         let p = PackedLinear::pack(&rows, 1.0);
@@ -228,9 +365,11 @@ mod tests {
         let mut out = vec![0.0f32; 3 * 4];
         p.gemm_batch(&x, &mut out, &mut a);
         let (ptr, cap) = (a.xq.as_ptr(), a.xq.capacity());
+        let (aptr, acap) = (a.acc.as_ptr(), a.acc.capacity());
         for _ in 0..5 {
             p.gemm_batch(&x, &mut out, &mut a);
         }
         assert_eq!((a.xq.as_ptr(), a.xq.capacity()), (ptr, cap));
+        assert_eq!((a.acc.as_ptr(), a.acc.capacity()), (aptr, acap));
     }
 }

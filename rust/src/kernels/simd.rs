@@ -1,0 +1,394 @@
+//! Runtime-dispatched SIMD inner loops for the packed i8 kernel core.
+//!
+//! The paper's MVAU dataflow engines get their speed from PE×SIMD lane
+//! parallelism over quantized weights; this module is the software
+//! mirror of the SIMD axis: the i8×i8→i32 dot product at the heart of
+//! [`super::PackedLinear`] gets explicit `std::arch` implementations —
+//! AVX2 and a baseline SSE2 fallback on x86_64, NEON on aarch64 —
+//! selected **once per process** into a dispatch table
+//! ([`dispatch`]) by runtime CPU-feature detection.
+//!
+//! Correctness story: every implementation computes the *exact* i32 sum
+//! `Σ a[i]·b[i]`.  Integer accumulation is associative, so lane order
+//! and horizontal-reduction order cannot change the result — the scalar
+//! loop ([`dot_i8_scalar`]) is therefore both the universal fallback
+//! and a **bit-exactness oracle**: SIMD-vs-scalar equivalence is tested
+//! exactly (see the `simd` proptests), never within a tolerance.
+//!
+//! Why the products cannot overflow: i8×i8 products are bounded by
+//! `(-128)·(-128) = 16384`, so
+//! * `pmaddwd` / `_mm256_madd_epi16` over sign-extended i8 sums two
+//!   such products into one i32 lane — max `32768`, exact (the i16
+//!   saturation edge case `(-32768)²` is unreachable from i8 inputs);
+//! * NEON `vmull_s8` widens to i16 (max 16384 < 32767, exact) and
+//!   `vpadalq_s16` pairwise-accumulates into i32 lanes.
+//! Per-lane i32 accumulation over [`super::PackedLinear`]'s maximum row
+//! width (131072 columns) stays below `131072/8 · 32768 ≈ 5.4e8`, far
+//! inside i32 range; arbitrary-i8 test inputs (including -128) are
+//! covered by the same bound.
+//!
+//! Kill switch: `TINYML_FORCE_SCALAR=1` (read **once** at dispatch
+//! init) pins the table to the scalar path — the A/B control for
+//! benches and the way CI exercises the oracle path on any hardware,
+//! mirroring the `global_hotpath`/`fifo_queues` controls of PRs 4–5.
+//!
+//! Safety: this is the only module in the crate containing `unsafe`.
+//! Each `#[target_feature]` function is reachable only through a
+//! dispatch path that proved its precondition with the matching
+//! `is_x86_feature_detected!`/`is_aarch64_feature_detected!` check
+//! ([`dot_i8_for`] returns `None` otherwise), and every intrinsic
+//! block operates strictly inside slice bounds.
+
+use std::sync::OnceLock;
+
+/// One SIMD capability tier of the kernel core, ordered by preference.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable scalar loop — universal fallback and bit-exactness oracle.
+    Scalar,
+    /// x86_64 baseline: 128-bit sign-extend + `pmaddwd` (always present
+    /// on x86_64; selected when AVX2 is not).
+    Sse2,
+    /// x86_64 AVX2: 256-bit `vpmovsxbw` + `vpmaddwd`, 16 i8 lanes/step.
+    Avx2,
+    /// aarch64 NEON: `vmull_s8` + `vpadalq_s16`, 16 i8 lanes/step.
+    Neon,
+}
+
+impl SimdLevel {
+    /// Stable lowercase name (used in bench JSON and logs).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Sse2 => "sse2",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    /// A *wide* path is one expected to clear the bench's
+    /// `simd_over_scalar_speedup` floor (AVX2 or NEON).  SSE2 is used
+    /// when present but not held to the floor — the bench emits
+    /// `simd_unavailable: true` and the gate skips the headline,
+    /// following the `parallelism_limited` precedent.
+    pub fn is_wide(self) -> bool {
+        matches!(self, SimdLevel::Avx2 | SimdLevel::Neon)
+    }
+}
+
+/// The dispatched inner-loop signature: exact i32 dot of two i8 slices.
+pub type DotFn = fn(&[i8], &[i8]) -> i32;
+
+/// Exact i32 dot product — scalar oracle and universal fallback.
+/// Integer adds reassociate freely, so this loop auto-vectorizes in
+/// release builds *and* defines the bit-exact result every `std::arch`
+/// path must reproduce.
+pub fn dot_i8_scalar(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0i32;
+    for (&p, &q) in a.iter().zip(b.iter()) {
+        acc += p as i32 * q as i32;
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// AVX2 dot: 16 i8 per step, sign-extended to 16 i16 lanes
+    /// (`vpmovsxbw`), pair-multiplied-and-added into 8 i32 lanes
+    /// (`vpmaddwd`), horizontally reduced once at the end.
+    ///
+    /// # Safety
+    /// Caller must have verified `is_x86_feature_detected!("avx2")`
+    /// (enforced by [`super::dot_i8_for`], the only constructor that
+    /// hands this function out).
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_avx2_impl(a: &[i8], b: &[i8]) -> i32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            // SAFETY: i + 16 <= n bounds both 16-byte loads.
+            let va = _mm_loadu_si128(a.as_ptr().add(i) as *const __m128i);
+            let vb = _mm_loadu_si128(b.as_ptr().add(i) as *const __m128i);
+            let wa = _mm256_cvtepi8_epi16(va);
+            let wb = _mm256_cvtepi8_epi16(vb);
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(wa, wb));
+            i += 16;
+        }
+        let lo = _mm256_castsi256_si128(acc);
+        let hi = _mm256_extracti128_si256::<1>(acc);
+        let mut sum = hsum_epi32(_mm_add_epi32(lo, hi));
+        while i < n {
+            sum += a[i] as i32 * b[i] as i32;
+            i += 1;
+        }
+        sum
+    }
+
+    /// SSE2 dot: 16 i8 per step, sign-extended by interleaving with a
+    /// `cmpgt`-derived sign mask (SSE2 has no `pmovsxbw`), then two
+    /// `pmaddwd` accumulations into 4 i32 lanes.
+    ///
+    /// # Safety
+    /// Caller must have verified `is_x86_feature_detected!("sse2")`
+    /// (baseline on x86_64, still checked by [`super::dot_i8_for`]).
+    #[target_feature(enable = "sse2")]
+    unsafe fn dot_sse2_impl(a: &[i8], b: &[i8]) -> i32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let zero = _mm_setzero_si128();
+        let mut acc = _mm_setzero_si128();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            // SAFETY: i + 16 <= n bounds both 16-byte loads.
+            let va = _mm_loadu_si128(a.as_ptr().add(i) as *const __m128i);
+            let vb = _mm_loadu_si128(b.as_ptr().add(i) as *const __m128i);
+            let sa = _mm_cmpgt_epi8(zero, va);
+            let sb = _mm_cmpgt_epi8(zero, vb);
+            let a_lo = _mm_unpacklo_epi8(va, sa);
+            let a_hi = _mm_unpackhi_epi8(va, sa);
+            let b_lo = _mm_unpacklo_epi8(vb, sb);
+            let b_hi = _mm_unpackhi_epi8(vb, sb);
+            acc = _mm_add_epi32(acc, _mm_madd_epi16(a_lo, b_lo));
+            acc = _mm_add_epi32(acc, _mm_madd_epi16(a_hi, b_hi));
+            i += 16;
+        }
+        let mut sum = hsum_epi32(acc);
+        while i < n {
+            sum += a[i] as i32 * b[i] as i32;
+            i += 1;
+        }
+        sum
+    }
+
+    /// Horizontal sum of 4 i32 lanes (exact: i32 wrapping adds are
+    /// unreachable given the accumulation bounds in the module docs).
+    ///
+    /// # Safety
+    /// SSE2 shuffles/adds — baseline on every x86_64 CPU; only called
+    /// from the `#[target_feature]` dot impls above.  (Declared
+    /// `unsafe fn` rather than wrapping an `unsafe` block so it builds
+    /// warning-free both before and after the stabilization of safe
+    /// register-only `std::arch` intrinsics.)
+    #[inline(always)]
+    unsafe fn hsum_epi32(v: __m128i) -> i32 {
+        let s = _mm_add_epi32(v, _mm_shuffle_epi32::<0b01_00_11_10>(v));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b00_00_00_01>(s));
+        _mm_cvtsi128_si32(s)
+    }
+
+    pub fn dot_avx2(a: &[i8], b: &[i8]) -> i32 {
+        // SAFETY: handed out by `dot_i8_for(Avx2)` only after
+        // `is_x86_feature_detected!("avx2")` returned true.
+        unsafe { dot_avx2_impl(a, b) }
+    }
+
+    pub fn dot_sse2(a: &[i8], b: &[i8]) -> i32 {
+        // SAFETY: handed out by `dot_i8_for(Sse2)` only after
+        // `is_x86_feature_detected!("sse2")` returned true.
+        unsafe { dot_sse2_impl(a, b) }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use std::arch::aarch64::*;
+
+    /// NEON dot: 16 i8 per step — `vmull_s8` widens each half to 8
+    /// exact i16 products, `vpadalq_s16` pairwise-accumulates them into
+    /// 4 i32 lanes, one `vaddvq_s32` reduction at the end.
+    ///
+    /// # Safety
+    /// Caller must have verified
+    /// `is_aarch64_feature_detected!("neon")` (enforced by
+    /// [`super::dot_i8_for`]).
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_neon_impl(a: &[i8], b: &[i8]) -> i32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let mut acc = vdupq_n_s32(0);
+        let mut i = 0usize;
+        while i + 16 <= n {
+            // SAFETY: i + 16 <= n bounds both 16-byte loads.
+            let va = vld1q_s8(a.as_ptr().add(i));
+            let vb = vld1q_s8(b.as_ptr().add(i));
+            let lo = vmull_s8(vget_low_s8(va), vget_low_s8(vb));
+            let hi = vmull_high_s8(va, vb);
+            acc = vpadalq_s16(acc, lo);
+            acc = vpadalq_s16(acc, hi);
+            i += 16;
+        }
+        let mut sum = vaddvq_s32(acc);
+        while i < n {
+            sum += a[i] as i32 * b[i] as i32;
+            i += 1;
+        }
+        sum
+    }
+
+    pub fn dot_neon(a: &[i8], b: &[i8]) -> i32 {
+        // SAFETY: handed out by `dot_i8_for(Neon)` only after
+        // `is_aarch64_feature_detected!("neon")` returned true.
+        unsafe { dot_neon_impl(a, b) }
+    }
+}
+
+/// The dot implementation for `level`, or `None` when this CPU (or this
+/// compilation target) does not support it.  This is the **only** place
+/// that hands out the `std::arch` paths, and it performs the runtime
+/// feature check that proves each one's `#[target_feature]`
+/// precondition — callers can never reach an intrinsic the CPU lacks.
+pub fn dot_i8_for(level: SimdLevel) -> Option<DotFn> {
+    match level {
+        SimdLevel::Scalar => Some(dot_i8_scalar),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => {
+            is_x86_feature_detected!("avx2").then_some(x86::dot_avx2 as DotFn)
+        }
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => {
+            is_x86_feature_detected!("sse2").then_some(x86::dot_sse2 as DotFn)
+        }
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => {
+            std::arch::is_aarch64_feature_detected!("neon")
+                .then_some(arm::dot_neon as DotFn)
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        _ => None,
+        #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+        _ => None,
+    }
+}
+
+/// Every level this process can actually run, scalar first — the
+/// proptests iterate this so SIMD-vs-scalar bit-identity is checked on
+/// each compiled-in path the host CPU supports.
+pub fn available_levels() -> Vec<SimdLevel> {
+    [SimdLevel::Scalar, SimdLevel::Sse2, SimdLevel::Avx2, SimdLevel::Neon]
+        .into_iter()
+        .filter(|&l| dot_i8_for(l).is_some())
+        .collect()
+}
+
+/// Best level the CPU supports (ignoring the kill switch).
+fn detect_best() -> SimdLevel {
+    for level in [SimdLevel::Avx2, SimdLevel::Neon, SimdLevel::Sse2] {
+        if dot_i8_for(level).is_some() {
+            return level;
+        }
+    }
+    SimdLevel::Scalar
+}
+
+/// Does the environment ask for the scalar path?  Read once by
+/// [`dispatch`] init; exposed so tests can assert the kill switch is
+/// honored when CI sets it for a whole process.
+pub fn force_scalar_from_env() -> bool {
+    std::env::var("TINYML_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Pure selection rule: the kill switch beats detection.  Split out of
+/// [`dispatch`] so the policy is unit-testable without racing the
+/// process-wide `OnceLock` or mutating the environment mid-test.
+pub fn select_level(force_scalar: bool) -> SimdLevel {
+    if force_scalar {
+        SimdLevel::Scalar
+    } else {
+        detect_best()
+    }
+}
+
+/// The per-process kernel dispatch table: the selected level plus the
+/// inner-loop function pointers the packed kernels call.
+pub struct Dispatch {
+    pub level: SimdLevel,
+    pub dot_i8: DotFn,
+}
+
+static DISPATCH: OnceLock<Dispatch> = OnceLock::new();
+
+/// The process-wide dispatch table, initialized exactly once: read the
+/// `TINYML_FORCE_SCALAR` kill switch, detect CPU features, install the
+/// best proven implementation.
+pub fn dispatch() -> &'static Dispatch {
+    DISPATCH.get_or_init(|| {
+        let level = select_level(force_scalar_from_env());
+        // `dot_i8_for` re-proves the feature precondition; `select_level`
+        // only ever names levels it found available, so the fallback arm
+        // is unreachable in practice but keeps the init total.
+        let dot_i8 = dot_i8_for(level).unwrap_or(dot_i8_scalar);
+        Dispatch { level, dot_i8 }
+    })
+}
+
+/// The SIMD level the packed kernels are actually running at.
+pub fn active_level() -> SimdLevel {
+    dispatch().level
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::prng::SplitMix64;
+
+    fn random_i8(rng: &mut SplitMix64, len: usize) -> Vec<i8> {
+        // Full i8 range including -128 — the SIMD paths must be exact
+        // beyond the |q| <= 127 range the quantizer actually emits.
+        (0..len).map(|_| rng.next_below(256) as u8 as i8).collect()
+    }
+
+    #[test]
+    fn every_available_level_matches_the_scalar_oracle() {
+        let mut rng = SplitMix64::new(0x51D0);
+        let levels = available_levels();
+        assert!(levels.contains(&SimdLevel::Scalar));
+        // Ragged tails around the 16-lane width, plus empty and long.
+        for len in [0usize, 1, 7, 15, 16, 17, 31, 32, 33, 127, 490, 3072] {
+            let a = random_i8(&mut rng, len);
+            let b = random_i8(&mut rng, len);
+            let want = dot_i8_scalar(&a, &b);
+            for &level in &levels {
+                let got = dot_i8_for(level).unwrap()(&a, &b);
+                assert_eq!(got, want, "level {} diverged at len {len}", level.name());
+            }
+        }
+    }
+
+    #[test]
+    fn extreme_values_cannot_overflow_the_lanes() {
+        // All-(-128) × all-(-128): the largest possible per-product
+        // magnitude at the widest pairwise accumulation.
+        let a = vec![-128i8; 1024];
+        let want = 1024 * 16384;
+        for &level in &available_levels() {
+            assert_eq!(dot_i8_for(level).unwrap()(&a, &a), want, "{}", level.name());
+        }
+    }
+
+    #[test]
+    fn kill_switch_selects_scalar() {
+        assert_eq!(select_level(true), SimdLevel::Scalar);
+        // Without the switch, selection picks something available.
+        assert!(dot_i8_for(select_level(false)).is_some());
+    }
+
+    #[test]
+    fn env_kill_switch_is_honored_by_the_live_dispatch() {
+        // Meaningful when the whole process runs under
+        // TINYML_FORCE_SCALAR=1 (ci.sh does exactly that rerun);
+        // otherwise it only pins that the table initialized coherently.
+        if force_scalar_from_env() {
+            assert_eq!(active_level(), SimdLevel::Scalar);
+        }
+        assert_eq!(
+            active_level().name(),
+            dispatch().level.name(),
+            "dispatch table must be internally consistent"
+        );
+    }
+}

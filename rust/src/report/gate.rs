@@ -13,12 +13,16 @@
 //! recorded speedup is caught even when it still clears the benches'
 //! own absolute asserts.
 //!
-//! One escape hatch: a current bench document carrying
+//! Two escape hatches: a current bench document carrying
 //! `"parallelism_limited": true` (emitted by `benches/hotpath.rs` on
 //! machines with fewer than 4 hardware threads, where lock-contention
 //! ratios measure the scheduler instead of the locks) is reported but
 //! not gated — its baselines stay committed and gate again on real
-//! hardware.
+//! hardware.  Likewise a `BENCH_kernels.json` carrying
+//! `"simd_unavailable": true` (no AVX2/NEON wide path, or the
+//! `TINYML_FORCE_SCALAR=1` kill switch) skips only the
+//! `simd_over_scalar_speedup` headlines — the packed-vs-naive speedups
+//! still gate, and the SIMD baselines keep gating on capable CPUs.
 //!
 //! Only dimensionless ratios are gated (speedups, elastic/fixed ratios,
 //! the priority interactive-p99 ratio), never raw ns/µs numbers: ratios
@@ -102,6 +106,12 @@ pub fn headline_metrics(doc: &Value) -> Result<Vec<Metric>> {
         "kernels" => {
             let shapes =
                 doc.req("shapes")?.as_arr().ok_or_else(|| anyhow!("'shapes' not an array"))?;
+            // SIMD headlines are extracted only from runs that had a
+            // wide path: a `simd_unavailable: true` document (scalar
+            // kill switch, SSE2-only or exotic CPU) measures nothing —
+            // `run_gate` drops the corresponding baselines too, the
+            // metric-scoped analogue of `parallelism_limited`.
+            let simd_unavailable = doc.bool_of_or("simd_unavailable", false);
             for shape in shapes {
                 let task = shape.str_of("task")?;
                 for key in ["packed_single_speedup", "packed_batch_speedup"] {
@@ -110,6 +120,17 @@ pub fn headline_metrics(doc: &Value) -> Result<Vec<Metric>> {
                         value: f64_of(shape, key)?,
                         higher_is_better: true,
                     });
+                }
+                if !simd_unavailable {
+                    if let Some(v) =
+                        shape.get("simd_over_scalar_speedup").and_then(Value::as_f64)
+                    {
+                        out.push(Metric {
+                            name: format!("kernels.{task}.simd_over_scalar_speedup"),
+                            value: v,
+                            higher_is_better: true,
+                        });
+                    }
                 }
             }
             out.push(Metric {
@@ -257,7 +278,7 @@ pub fn run_gate(bench_dir: &Path, baseline_dir: &Path, tol: f64) -> Result<Strin
     let mut regressions: Vec<Regression> = Vec::new();
     let mut gated = 0usize;
     for file in BENCH_FILES {
-        let baseline = load_metrics(&baseline_dir.join(file))?;
+        let mut baseline = load_metrics(&baseline_dir.join(file))?;
         let cur_doc = load_doc(&bench_dir.join(file))?;
         if cur_doc.bool_of_or("parallelism_limited", false) {
             // Contention ratios from a <4-thread machine measure the
@@ -267,6 +288,18 @@ pub fn run_gate(bench_dir: &Path, baseline_dir: &Path, tol: f64) -> Result<Strin
                 "  {file}: parallelism-limited run — contention headlines not gated\n"
             ));
             continue;
+        }
+        if cur_doc.bool_of_or("simd_unavailable", false) {
+            // A run without a wide SIMD path (AVX2/NEON) — or one
+            // pinned scalar by TINYML_FORCE_SCALAR=1 — cannot measure
+            // the SIMD speedup: drop those headlines (and only those)
+            // from the comparison; the committed baselines keep gating
+            // them on capable hardware.
+            baseline.retain(|m| !m.name.contains("simd_over_scalar_speedup"));
+            report.push_str(&format!(
+                "  {file}: no wide SIMD path in this run — simd_over_scalar \
+                 headlines not gated\n"
+            ));
         }
         let current = headline_metrics(&cur_doc)?;
         gated += baseline.len();
@@ -325,6 +358,17 @@ pub fn update_baselines(bench_dir: &Path, baseline_dir: &Path) -> Result<String>
             bail!(
                 "refusing to bless {}: parallelism-limited run (re-run the bench \
                  on a machine with >= 4 hardware threads); nothing was blessed",
+                src.display()
+            );
+        }
+        // A scalar-pinned or SSE2-only kernels run would bless a
+        // baseline with no SIMD headlines at all, silently de-gating
+        // them everywhere.
+        if doc.bool_of_or("simd_unavailable", false) {
+            bail!(
+                "refusing to bless {}: no wide SIMD path in this run (re-run on \
+                 an AVX2/NEON machine without TINYML_FORCE_SCALAR); nothing was \
+                 blessed",
                 src.display()
             );
         }
@@ -434,16 +478,34 @@ mod tests {
     fn extracts_kernels_and_fleet_headlines() {
         let kernels = Value::parse(
             r#"{"bench":"kernels","shapes":[
-                {"task":"kws","packed_single_speedup":3.0,"packed_batch_speedup":5.0},
-                {"task":"ic","packed_single_speedup":2.0,"packed_batch_speedup":4.0}],
+                {"task":"kws","packed_single_speedup":3.0,"packed_batch_speedup":5.0,
+                 "simd_over_scalar_speedup":1.8},
+                {"task":"ic","packed_single_speedup":2.0,"packed_batch_speedup":4.0,
+                 "simd_over_scalar_speedup":2.5}],
                 "smooth":{"speedup":6.0}}"#,
         )
         .unwrap();
         let m = headline_metrics(&kernels).unwrap();
-        assert_eq!(m.len(), 5);
+        assert_eq!(m.len(), 7);
         assert!(m.iter().all(|x| x.higher_is_better));
         assert!(m.iter().any(|x| x.name == "kernels.kws.packed_batch_speedup"
             && x.value == 5.0));
+        assert!(m.iter().any(|x| x.name == "kernels.kws.simd_over_scalar_speedup"
+            && x.value == 1.8));
+
+        // Flagged simd_unavailable: the simd headlines disappear from
+        // extraction (the packed speedups stay), and a pre-SIMD document
+        // without the keys still parses.
+        let kernels_scalar = Value::parse(
+            r#"{"bench":"kernels","simd_unavailable":true,"shapes":[
+                {"task":"kws","packed_single_speedup":3.0,"packed_batch_speedup":5.0,
+                 "simd_over_scalar_speedup":1.0}],
+                "smooth":{"speedup":6.0}}"#,
+        )
+        .unwrap();
+        let m = headline_metrics(&kernels_scalar).unwrap();
+        assert_eq!(m.len(), 3);
+        assert!(m.iter().all(|x| !x.name.contains("simd_over_scalar_speedup")));
 
         let fleet = Value::parse(
             r#"{"bench":"fleet",
@@ -562,6 +624,70 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
     }
 
+    /// A current kernels document flagged `simd_unavailable` skips the
+    /// SIMD headlines (and only those) — the same numbers unflagged are
+    /// a regression against the committed SIMD baseline.
+    #[test]
+    fn simd_unavailable_runs_skip_only_simd_headlines() {
+        let dir = std::env::temp_dir().join(format!(
+            "tinyml_gate_simd_test_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let (base, cur) = (dir.join("baselines"), dir.join("bench"));
+        std::fs::create_dir_all(&base).unwrap();
+        std::fs::create_dir_all(&cur).unwrap();
+        let fleet = r#"{"bench":"fleet",
+            "policies":[{"policy":"round-robin","throughput_rps":100.0},
+                        {"policy":"least-loaded","throughput_rps":100.0}],
+            "autoscale":{"p99_ratio_elastic_over_fixed":1.0,
+                         "board_seconds_ratio_elastic_over_fixed":1.0},
+            "priority":{"interactive_p99_ratio_classful_over_fifo":0.5}}"#;
+        let hotpath = r#"{"bench":"hotpath","sharded_over_global_throughput":1.3,
+            "traced_over_untraced_throughput":0.9}"#;
+        let scenarios = r#"{"bench":"scenarios",
+            "kill":{"resolved_fraction":1.0,"ejected":1.0},
+            "brownout":{"p99_under_failure_ratio":8.0},
+            "flash_crowd":{"recovery_served_fraction":0.95}}"#;
+        for d in [&base, &cur] {
+            std::fs::write(d.join("BENCH_fleet.json"), fleet).unwrap();
+            std::fs::write(d.join("BENCH_hotpath.json"), hotpath).unwrap();
+            std::fs::write(d.join("BENCH_scenarios.json"), scenarios).unwrap();
+        }
+        std::fs::write(
+            base.join("BENCH_kernels.json"),
+            r#"{"bench":"kernels","shapes":[
+                {"task":"kws","packed_single_speedup":1.0,"packed_batch_speedup":2.0,
+                 "simd_over_scalar_speedup":1.2}],
+                "smooth":{"speedup":1.0}}"#,
+        )
+        .unwrap();
+        // Scalar-pinned run (the ci.sh TINYML_FORCE_SCALAR rerun, or an
+        // SSE2-only machine): ratio ~1.0, but flagged — must gate.
+        std::fs::write(
+            cur.join("BENCH_kernels.json"),
+            r#"{"bench":"kernels","simd_unavailable":true,"shapes":[
+                {"task":"kws","packed_single_speedup":1.0,"packed_batch_speedup":2.0,
+                 "simd_over_scalar_speedup":1.0}],
+                "smooth":{"speedup":1.0}}"#,
+        )
+        .unwrap();
+        let report = run_gate(&cur, &base, DEFAULT_TOLERANCE).expect("flagged run gates");
+        assert!(report.contains("simd_over_scalar headlines not gated"), "{report}");
+        // Same ratio unflagged: a real regression of the SIMD headline.
+        std::fs::write(
+            cur.join("BENCH_kernels.json"),
+            r#"{"bench":"kernels","shapes":[
+                {"task":"kws","packed_single_speedup":1.0,"packed_batch_speedup":2.0,
+                 "simd_over_scalar_speedup":1.0}],
+                "smooth":{"speedup":1.0}}"#,
+        )
+        .unwrap();
+        let err = run_gate(&cur, &base, DEFAULT_TOLERANCE).unwrap_err().to_string();
+        assert!(err.contains("kernels.kws.simd_over_scalar_speedup"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
     /// The committed baselines must stay parseable and self-consistent:
     /// the gate run against them verbatim passes, and the self-test's
     /// injected regressions are all caught.  (This is the in-tree
@@ -575,10 +701,11 @@ mod tests {
         assert!(report.contains("bench-gate OK"), "{report}");
         let st = self_test(&dir, DEFAULT_TOLERANCE).expect("self-test must pass");
         assert!(st.contains("self-test OK"), "{st}");
-        // The priority, hot-path, and tracing headlines are part of the
-        // committed floor.
+        // The priority, hot-path, tracing, and SIMD headlines are part
+        // of the committed floor.
         assert!(report.contains("interactive_p99_ratio_classful_over_fifo"), "{report}");
         assert!(report.contains("hotpath.sharded_over_global_throughput"), "{report}");
         assert!(report.contains("hotpath.traced_over_untraced_throughput"), "{report}");
+        assert!(report.contains("kernels.kws.simd_over_scalar_speedup"), "{report}");
     }
 }

@@ -16,7 +16,12 @@
 //! memories), every batch makes one tiled pass over it with i32
 //! accumulation, and the AD smoothing is an O(n) prefix-sum pass.  All
 //! intermediates live in a model-owned [`ScratchArena`], so the
-//! steady-state serve loop allocates nothing inside the forward.
+//! steady-state serve loop allocates nothing inside the forward.  The
+//! GEMM inner loop runs at the process-wide [`crate::kernels::simd`]
+//! dispatch level (AVX2 / SSE2 / NEON, scalar under
+//! `TINYML_FORCE_SCALAR=1`), so SIMD wins land here with no code in
+//! this module — and bit-exactly, so surrogate outputs do not depend
+//! on the host CPU.
 //!
 //! If `<model>_manifest.json` exists it is honored; otherwise a manifest
 //! is synthesized from the model name so the engine, fleet, EEMBC, and

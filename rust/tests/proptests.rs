@@ -18,7 +18,7 @@ use tinyml_codesign::fleet::{
 };
 use tinyml_codesign::ir::Graph;
 use tinyml_codesign::kernels::{
-    quantized_max_abs_error, PackedLinear, ScratchArena, SmoothKernel,
+    quantized_max_abs_error, simd, PackedLinear, ScratchArena, SmoothKernel,
 };
 use tinyml_codesign::passes;
 
@@ -1414,6 +1414,116 @@ fn prop_packed_gemm_batched_bit_identical_to_single() {
                 "case {case} sample {s}: batched path diverged from single"
             );
         }
+    }
+}
+
+#[test]
+fn prop_simd_dot_bit_identical_to_scalar_on_every_level() {
+    // Integer accumulation is associative, so every compiled-in SIMD
+    // dot (AVX2 / SSE2 / NEON — whatever this CPU supports) must equal
+    // the scalar oracle EXACTLY, bit for bit, on arbitrary i8 data
+    // (including -128, outside the |q| <= 127 range the quantizer
+    // emits) and on every ragged tail around the 16-lane width.
+    let mut rng = SplitMix64::new(0x51D_0001);
+    let levels = simd::available_levels();
+    assert!(levels.contains(&simd::SimdLevel::Scalar));
+    for case in 0..60 {
+        // Cover sub-lane, lane-aligned, lane+tail, and long lengths.
+        let len = match case % 6 {
+            0 => rng.next_below(16) as usize,
+            1 => 16 * (1 + rng.next_below(8) as usize),
+            2 => 16 * (1 + rng.next_below(8) as usize) + 1 + rng.next_below(15) as usize,
+            3 => 1 + rng.next_below(600) as usize,
+            4 => 3072,
+            _ => 490,
+        };
+        let a: Vec<i8> = (0..len).map(|_| rng.next_below(256) as u8 as i8).collect();
+        let b: Vec<i8> = (0..len).map(|_| rng.next_below(256) as u8 as i8).collect();
+        let want = simd::dot_i8_scalar(&a, &b);
+        for &level in &levels {
+            let got = simd::dot_i8_for(level).expect("listed level must resolve")(&a, &b);
+            assert_eq!(
+                got,
+                want,
+                "case {case}: level {} diverged from scalar at len {len}",
+                level.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_simd_gemm_batch_bit_identical_to_scalar_oracle() {
+    // The dispatched gemm_batch (whatever level this CPU selected) vs
+    // the scalar-oracle path with identical blocking: outputs must be
+    // bit-identical on random shapes — ragged columns (cols % 16 != 0),
+    // tiny and empty row sets, batches of 0..6 samples, column counts
+    // crossing the L1 block boundary, and samples poisoned with
+    // NaN/Inf elements (both paths share the quantizer, which zeroes
+    // any non-finite sample — pinned by unit test; here we pin that
+    // the two paths stay identical under it).
+    let mut rng = SplitMix64::new(0x51D_0002);
+    let mut scratch = ScratchArena::new();
+    for case in 0..40 {
+        let n_rows = match case % 5 {
+            0 => 0,
+            1 => 1,
+            _ => 1 + rng.next_below(24) as usize,
+        };
+        let cols = match case % 4 {
+            0 => 1 + rng.next_below(15) as usize,        // sub-lane
+            1 => 16 * (1 + rng.next_below(30) as usize), // lane-aligned
+            2 => 2048 + 1 + rng.next_below(80) as usize, // crosses COL_BLOCK
+            _ => 1 + rng.next_below(600) as usize,       // ragged
+        };
+        let n = rng.next_below(6) as usize;
+        let rows: Vec<Vec<f32>> = (0..n_rows)
+            .map(|_| (0..cols).map(|_| rng.next_gaussian() as f32).collect())
+            .collect();
+        let packed = PackedLinear::pack(&rows, 1.0 / cols as f32);
+        let mut x: Vec<f32> =
+            (0..n * cols).map(|_| rng.next_gaussian() as f32).collect();
+        // Poison ~1 in 4 samples with a non-finite element.
+        for s in 0..n {
+            if rng.next_below(4) == 0 && cols > 0 {
+                let j = rng.next_below(cols as u64) as usize;
+                x[s * cols + j] = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY][s % 3];
+            }
+        }
+        let mut dispatched = vec![0.0f32; n * n_rows];
+        let mut oracle = vec![0.0f32; n * n_rows];
+        packed.gemm_batch(&x, &mut dispatched, &mut scratch);
+        packed.gemm_batch_scalar(&x, &mut oracle, &mut scratch);
+        let (d_bits, o_bits): (Vec<u32>, Vec<u32>) = (
+            dispatched.iter().map(|v| v.to_bits()).collect(),
+            oracle.iter().map(|v| v.to_bits()).collect(),
+        );
+        assert_eq!(
+            d_bits, o_bits,
+            "case {case}: {} gemm (rows={n_rows} cols={cols} n={n}) diverged \
+             bitwise from the scalar oracle",
+            simd::active_level().name()
+        );
+    }
+}
+
+#[test]
+fn prop_simd_force_scalar_dispatch() {
+    // The kill-switch policy is pure and absolute: forcing scalar wins
+    // over any detected feature set...
+    assert_eq!(simd::select_level(true), simd::SimdLevel::Scalar);
+    // ...an unforced selection always resolves to a runnable path...
+    assert!(simd::dot_i8_for(simd::select_level(false)).is_some());
+    // ...and when the whole process runs under TINYML_FORCE_SCALAR=1
+    // (the ci.sh scalar-oracle rerun does exactly that), the live
+    // dispatch table must have honored it.
+    if simd::force_scalar_from_env() {
+        assert_eq!(
+            simd::active_level(),
+            simd::SimdLevel::Scalar,
+            "TINYML_FORCE_SCALAR=1 was set at startup but the dispatch \
+             table selected a SIMD path"
+        );
     }
 }
 
