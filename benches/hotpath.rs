@@ -32,6 +32,15 @@
 //!   rings all live.  The `traced_over_untraced_throughput` ratio is a
 //!   second gated headline; the inline floor is **≥ 0.9x** — sampled
 //!   tracing must stay within 10% of the untraced plane.
+//! * **Part 5 — flash crowd (single-flight coalescing).**  An
+//!   *open-loop* burst (submit everything, then drain) where 75% of
+//!   requests duplicate a 32-input hot set against boards with real
+//!   simulated latency, so duplicates arrive while the first copy is
+//!   still in flight — the cache can't answer them, but the coalescer
+//!   (`FleetConfig::coalesce`) can attach them to the leader's
+//!   execution.  Both legs run with the cache on; the only delta is
+//!   coalescing.  The `coalesced_over_uncoalesced_throughput` ratio is
+//!   the third gated headline; the inline floor is **≥ 1.2x**.
 //!
 //! Lock contention only exists with real parallelism: below 4 hardware
 //! threads the A/B measures scheduler timeslicing, not locking, so the
@@ -55,6 +64,9 @@ const CLIENTS: usize = 8;
 const BOARDS: usize = 4;
 /// Distinct hot inputs in the cache-on trace (all hits after warmup).
 const HOT_SET: usize = 256;
+/// Distinct hot inputs in the part-5 flash crowd: small enough that
+/// every hot key has many in-flight duplicates for the coalescer.
+const FLASH_HOT: usize = 32;
 
 #[path = "util.rs"]
 mod util;
@@ -120,6 +132,7 @@ fn run_saturation(
         fifo_queues: false,
         global_hotpath,
         trace_sample,
+        ..Default::default()
     };
     let fleet = Fleet::start(reg, cfg).unwrap();
     let dim = tinyml_codesign::data::feature_dim("ad");
@@ -215,6 +228,119 @@ fn telemetry_equivalence(batches: usize) -> usize {
     )
 }
 
+struct FlashStats {
+    submitted: u64,
+    /// Board-executed requests (leaders + fresh inputs).
+    served: u64,
+    cache_hits: u64,
+    /// Requests resolved by riding another request's execution.
+    followers: u64,
+    wall_s: f64,
+    throughput_rps: f64,
+}
+
+impl FlashStats {
+    fn to_json(&self) -> Value {
+        obj(vec![
+            ("submitted", num(self.submitted as f64)),
+            ("served", num(self.served as f64)),
+            ("cache_hits", num(self.cache_hits as f64)),
+            ("followers", num(self.followers as f64)),
+            ("wall_s", num(self.wall_s)),
+            ("throughput_rps", num(self.throughput_rps)),
+        ])
+    }
+}
+
+/// Part 5: one flash-crowd leg.  Unlike the closed loops above, this is
+/// **open-loop**: every client submits its whole trace without waiting,
+/// then drains the replies — so duplicates of a hot input genuinely pile
+/// up *behind* the in-flight first copy.  Boards have real simulated
+/// latency (200 µs + 20 µs/item) for the same reason: a zero-latency
+/// board would complete (and cache) every input before its first
+/// duplicate arrived, leaving the coalescer nothing to do.
+fn run_flash_crowd(coalesce: bool, per_client: usize) -> FlashStats {
+    let reg = Registry {
+        instances: (0..BOARDS)
+            .map(|id| BoardInstance::synthetic(id, "ad", 200.0, 20.0, 1.0))
+            .collect(),
+    };
+    let cfg = FleetConfig {
+        policy: Policy::LeastLoaded,
+        // Generous: the open-loop burst parks nearly the whole trace in
+        // the queues at once, and the conservation check below requires
+        // a shed-free run (Standard's admit bound is cap - cap/16).
+        queue_cap: 8192,
+        batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(100) },
+        time_scale: 1.0,
+        cache_cap: 2048,
+        coalesce,
+        ..Default::default()
+    };
+    let fleet = Fleet::start(reg, cfg).unwrap();
+    let dim = tinyml_codesign::data::feature_dim("ad");
+    let t0 = Instant::now();
+    let threads: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let h = fleet.handle();
+            std::thread::spawn(move || {
+                let mut rxs = Vec::with_capacity(per_client);
+                let mut x = vec![0.2f32; dim];
+                for i in 0..per_client {
+                    x[0] = if i % 4 == 3 {
+                        // Fresh input, distinct per client and iteration.
+                        (1_000_000 * (c + 1) + i) as f32
+                    } else {
+                        (i % FLASH_HOT) as f32 // the crowd's hot set
+                    };
+                    rxs.push(
+                        h.submit("ad", x.clone()).expect("flash-crowd submit refused"),
+                    );
+                }
+                for rx in rxs {
+                    rx.recv()
+                        .expect("fleet dropped a flash-crowd reply")
+                        .expect("flash-crowd request failed");
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let submitted = (CLIENTS * per_client) as u64;
+    let summary = fleet.shutdown();
+    let snap = &summary.snapshot;
+    let shed: u64 = snap.classes.iter().map(|c| c.shed).sum();
+    assert_eq!(shed, 0, "flash-crowd trace must not shed");
+    let followers = snap.coalesce.as_ref().map_or(0, |co| co.followers);
+    // Conservation: every submitted request resolved exactly one way —
+    // executed on a board, answered by the cache, or fanned to it as a
+    // coalesced follower.
+    assert_eq!(
+        snap.served + snap.cache.hits + followers,
+        submitted,
+        "served + hits + followers must cover the whole flash crowd"
+    );
+    if coalesce {
+        let co = snap.coalesce.as_ref().expect("coalesce stats missing");
+        assert_eq!(co.fanned_err, 0, "healthy fleet must not fan errors");
+        assert_eq!(
+            co.fanned_ok, co.followers,
+            "every follower must be fanned exactly once"
+        );
+    }
+    FlashStats {
+        submitted,
+        served: snap.served,
+        cache_hits: snap.cache.hits,
+        followers,
+        wall_s,
+        throughput_rps: submitted as f64 / wall_s,
+    }
+}
+
 fn main() {
     let quick = quick();
     let per_client = if quick { 2_500 } else { 12_000 };
@@ -298,6 +424,34 @@ fn main() {
          floor 0.9)"
     );
 
+    let flash_per_client = if quick { 600 } else { 2_400 };
+    println!(
+        "[bench] part 5: flash crowd — open-loop burst, 75% duplicates of a \
+         {FLASH_HOT}-input hot set, {CLIENTS} clients x {flash_per_client}, \
+         coalescing off vs on (cache on in both)"
+    );
+    let uncoalesced = run_flash_crowd(false, flash_per_client);
+    let coalesced = run_flash_crowd(true, flash_per_client);
+    let flash_ratio =
+        coalesced.throughput_rps / uncoalesced.throughput_rps.max(1e-9);
+    for (tag, r) in [("uncoalesced", &uncoalesced), ("coalesced  ", &coalesced)] {
+        println!(
+            "[bench]   {tag}: {:>9.0} req/s  ({} executed / {} hits / {} followers)",
+            r.throughput_rps, r.served, r.cache_hits, r.followers
+        );
+    }
+    // The crowd must actually coalesce: with 6x more duplicates than hot
+    // inputs in flight, a zero-follower run means the layer is wired
+    // wrong, not that the workload was easy.
+    assert!(
+        coalesced.followers > 0,
+        "duplicate-heavy open-loop burst produced no coalesced followers"
+    );
+    assert_eq!(uncoalesced.followers, 0, "coalescing-off leg must not coalesce");
+    println!(
+        "[bench]   coalesced/uncoalesced = {flash_ratio:.3}x  (headline; floor 1.2)"
+    );
+
     let mut fields = vec![
         ("bench", s("hotpath")),
         ("quick", Value::Bool(quick)),
@@ -335,6 +489,18 @@ fn main() {
             ]),
         ),
         ("traced_over_untraced_throughput", num(trace_ratio)),
+        (
+            "flash_crowd",
+            obj(vec![
+                ("hot_set", num(FLASH_HOT as f64)),
+                ("duplicate_fraction", num(0.75)),
+                ("per_client", num(flash_per_client as f64)),
+                ("uncoalesced", uncoalesced.to_json()),
+                ("coalesced", coalesced.to_json()),
+                ("coalesced_over_uncoalesced", num(flash_ratio)),
+            ]),
+        ),
+        ("coalesced_over_uncoalesced_throughput", num(flash_ratio)),
         (
             "telemetry_merge",
             obj(vec![
@@ -391,10 +557,20 @@ fn main() {
             traced.throughput_rps,
             off_sharded.throughput_rps
         );
+        // The coalescing headline: merging duplicate in-flight work must
+        // buy >= 1.2x flash-crowd throughput (expected ~3x — duplicates
+        // never reach a board at all).
+        assert!(
+            flash_ratio >= 1.2,
+            "coalescing must beat the uncoalesced flash crowd >= 1.2x \
+             (got {flash_ratio:.3}x: {:.0} vs {:.0} req/s)",
+            coalesced.throughput_rps,
+            uncoalesced.throughput_rps
+        );
         println!(
             "[bench] OK: cache-on sharded/global {headline:.3}x >= 1.3, cache-off \
              {off_ratio:.3}x >= 0.8, traced/untraced {trace_ratio:.3}x >= 0.9, \
-             merge exact"
+             coalesced/uncoalesced {flash_ratio:.3}x >= 1.2, merge exact"
         );
     } else {
         println!(

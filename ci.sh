@@ -20,6 +20,10 @@ run() {
     "$@"
 }
 
+# Doc link integrity first: needs no toolchain, fails fast, and covers
+# docs/*.md + ROADMAP.md (relative links and backtick path references).
+run ./tools/check_docs.sh
+
 run cargo build --release
 run cargo test -q
 
@@ -78,6 +82,21 @@ cargo run --release -q -- fleet --chaos kill=0@2 --requests 200 \
            print "==> " line
            if (line !~ /lost=0$/)       { print "chaos smoke: lost requests"; exit 1 }
            if (line ~ /ejections=0 /)   { print "chaos smoke: no ejection"; exit 1 }
+         }'
+
+# Coalescing smoke: the fleet CLI's mixed workload submits a constant
+# input per task open-loop, so with single-flight coalescing on, the
+# duplicates still in flight must attach as followers (followers > 0 on
+# the machine-parseable `coalesce:` line) and every follower must fan
+# cleanly (fanned_err = 0 — no chaos in this run).
+echo "==> fleet --coalesce --cache 256 | follower fan-out check"
+cargo run --release -q -- fleet --coalesce --cache 256 --requests 200 \
+  | awk '/^coalesce: /{ line=$0 }
+         END {
+           if (line == "") { print "no coalesce: line in fleet output"; exit 1 }
+           print "==> " line
+           if (line !~ /followers=[1-9]/) { print "coalesce smoke: no followers attached"; exit 1 }
+           if (line !~ /fanned_err=0$/)   { print "coalesce smoke: follower fan-out failed"; exit 1 }
          }'
 
 # Tracing smoke: a sampled fleet run must round-trip (stage histograms,

@@ -31,6 +31,39 @@
 //! `Interactive`/`Standard` inserts evict plain LRU (an interactive
 //! working set that really has gone cold is still reclaimable).
 //!
+//! **Caching v5: TTL, per-task splits, hit-rate-aware admission.**
+//! Three admission/eviction features land together, all driven by the
+//! per-task counters earlier versions already kept (see
+//! [`CacheOptions`]):
+//!
+//! * **Per-entry TTL.**  With [`CacheOptions::ttl`] set, an entry older
+//!   than the TTL is dropped the moment a probe touches it and the
+//!   probe reports a plain miss.  Crucially the expired probe counts
+//!   **nothing** — neither a hit (the stale answer was not served) nor
+//!   a miss (misses are counted once, at [`ResultCache::insert_tagged`]
+//!   time, when the re-executed result lands).  Counting the expiry as
+//!   a hit — what a naive "found the key" path would do — would feed
+//!   hit-rate-aware admission stale-hit noise and keep dead tasks
+//!   looking cacheable.
+//! * **Per-task capacity splits.**  With [`CacheOptions::task_cap`]
+//!   set, no task may hold more than its split (divided over the
+//!   shards like the total capacity).  A task at its split evicts *its
+//!   own* oldest entry — class-aware, so a `Batch` insert still cannot
+//!   reclaim an `Interactive` entry even of its own task — instead of
+//!   squeezing its neighbours.  The victim scan walks the shard's LRU
+//!   index (shards hold ≲64 entries, so the walk is short and stays
+//!   under the shard-local lock).
+//! * **Hit-rate-aware admission.**  With
+//!   [`CacheOptions::hitrate_admission`], a task whose observed hit
+//!   rate in a shard stays under [`HITRATE_ADMIT_FLOOR`] after
+//!   [`HITRATE_MIN_OBS`] probes is mostly turned away: only one insert
+//!   in [`HITRATE_PROBE_EVERY`] is admitted, so the counters keep
+//!   learning and a workload that *starts* repeating is re-admitted
+//!   within a few probes.  This is the "stop caching AD frames that
+//!   never repeat" knob: anomaly-detection traffic is near-unique by
+//!   construction, and before v5 it continually churned cache slots
+//!   that KWS wake-words would actually re-hit.
+//!
 //! The key is a 64-bit FNV-1a digest of the task name and the quantized
 //! input.  A 64-bit digest can collide in principle; at fleet request
 //! volumes the probability is negligible (birthday bound ~n²/2⁶⁵) and
@@ -41,16 +74,31 @@
 //! Hit/miss counters are kept fleet-wide *and* per task, so the
 //! snapshot can show which workload actually benefits (AD frames rarely
 //! repeat; KWS wake-words do).
+//!
+//! The in-flight companion to this memo is [`super::coalesce`]: the
+//! cache answers repeats of *completed* executions, the coalescer
+//! collapses repeats of executions still *in flight*.
 
 use super::queue::Priority;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 /// Default shard sizing: one lock per ~64 entries, between 1 (tiny
 /// caches keep the exact single-lock semantics) and 16 shards.
 const MAX_SHARDS: usize = 16;
 const ENTRIES_PER_SHARD: usize = 64;
+
+/// Hit-rate-aware admission only engages after this many per-shard
+/// observations (hits + misses) of a task — a cold start must not be
+/// mistaken for a never-repeating workload.
+pub const HITRATE_MIN_OBS: u64 = 128;
+/// Tasks observed below this hit rate are throttled.
+pub const HITRATE_ADMIT_FLOOR: f64 = 0.05;
+/// While throttled, one insert in this many is still admitted as a
+/// probe so a workload that starts repeating is re-discovered.
+pub const HITRATE_PROBE_EVERY: u64 = 8;
 
 /// Per-task slice of the hit/miss counters.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -82,6 +130,21 @@ impl CacheStats {
     }
 }
 
+/// Caching-v5 admission/eviction knobs.  `Default` (no TTL, no split,
+/// admission off) reproduces the v4 cache exactly — [`ResultCache::new`]
+/// and [`ResultCache::with_shards`] build that configuration.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheOptions {
+    /// Per-entry time-to-live; `None` disables expiry.
+    pub ttl: Option<Duration>,
+    /// Cache-wide per-task entry budget (split over shards like the
+    /// total capacity); `0` disables the split.
+    pub task_cap: usize,
+    /// Throttle inserts for tasks whose observed hit rate stays under
+    /// [`HITRATE_ADMIT_FLOOR`] after [`HITRATE_MIN_OBS`] observations.
+    pub hitrate_admission: bool,
+}
+
 struct Entry {
     output: Vec<f32>,
     top1: usize,
@@ -91,11 +154,32 @@ struct Entry {
     /// entry — the admission shield: `Batch` inserts cannot evict
     /// `Interactive`-classed entries.
     class: Priority,
+    /// Index into the shard's `per_task` table (per-task split
+    /// accounting without a String per entry).
+    task: usize,
+    /// Insert time, for TTL expiry.
+    at: Instant,
+}
+
+/// Per-shard, per-task counters.  One short Vec scanned linearly so the
+/// steady-state hot path never allocates a key String (the task name is
+/// only cloned the first time a task is seen in a shard).
+struct TaskCounters {
+    name: String,
+    hits: u64,
+    misses: u64,
+    /// Live entries of this task in this shard (per-task splits).
+    entries: usize,
+    /// Inserts attempted while throttled by hit-rate admission; every
+    /// [`HITRATE_PROBE_EVERY`]-th one is admitted as a probe.
+    probes: u64,
 }
 
 struct Inner {
     /// This shard's slice of the total capacity.
     cap: usize,
+    /// This shard's slice of the per-task budget (0 = no split).
+    task_cap: usize,
     map: HashMap<u64, Entry>,
     /// Recency index: tick → key, oldest first.  Ticks are unique per
     /// shard (one monotone counter), so this is a faithful LRU order.
@@ -106,35 +190,46 @@ struct Inner {
     /// of a scan past the protected prefix under the shard lock.
     lru_unprotected: BTreeMap<u64, u64>,
     tick: u64,
-    /// (task, hits, misses) — a handful of entries, scanned linearly so
-    /// the steady-state hot path never allocates a key String (the task
-    /// name is only cloned the first time a task is seen).
-    per_task: Vec<(String, u64, u64)>,
+    per_task: Vec<TaskCounters>,
 }
 
 /// Bump a task's hit (or miss) counter without allocating when the task
-/// is already known.  Index-first lookup keeps the borrow checker happy
-/// and the insert path out of the steady state.
-fn bump_task(per_task: &mut Vec<(String, u64, u64)>, task: &str, hit: bool) {
-    match per_task.iter().position(|t| t.0 == task) {
+/// is already known, returning the task's index in the table.
+/// Index-first lookup keeps the borrow checker happy and the insert
+/// path out of the steady state.
+fn bump_task(per_task: &mut Vec<TaskCounters>, task: &str, hit: bool) -> usize {
+    match per_task.iter().position(|t| t.name == task) {
         Some(i) => {
             if hit {
-                per_task[i].1 += 1;
+                per_task[i].hits += 1;
             } else {
-                per_task[i].2 += 1;
+                per_task[i].misses += 1;
             }
+            i
         }
-        None => per_task.push((task.to_string(), hit as u64, !hit as u64)),
+        None => {
+            per_task.push(TaskCounters {
+                name: task.to_string(),
+                hits: hit as u64,
+                misses: !hit as u64,
+                entries: 0,
+                probes: 0,
+            });
+            per_task.len() - 1
+        }
     }
 }
 
 /// Bounded (task, quantized-input) → (output, top1) memo: lock-striped,
-/// per-shard LRU, class-aware admission.
+/// per-shard LRU, class-aware admission, optional TTL / per-task splits
+/// / hit-rate-aware admission (caching v5).
 pub struct ResultCache {
     cap: usize,
     /// Power-of-two shard count; a key lives in shard
     /// `key & (shards.len() - 1)`.
     shards: Vec<Mutex<Inner>>,
+    ttl: Option<Duration>,
+    hitrate_admission: bool,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -147,10 +242,18 @@ fn fnv_byte(h: u64, b: u8) -> u64 {
 impl ResultCache {
     /// Striped cache sized for `cap` entries (shard count scales with
     /// the capacity; tiny caches get one shard and keep exact
-    /// single-lock LRU semantics).
+    /// single-lock LRU semantics).  V4 semantics: no TTL, no per-task
+    /// split, no hit-rate admission.
     pub fn new(cap: usize) -> Self {
         let want = (cap / ENTRIES_PER_SHARD).next_power_of_two().min(MAX_SHARDS);
         Self::with_shards(cap, want)
+    }
+
+    /// Like [`ResultCache::new`] (auto-derived shard count) but with the
+    /// v5 [`CacheOptions`] knobs applied.
+    pub fn with_options(cap: usize, opts: CacheOptions) -> Self {
+        let want = (cap / ENTRIES_PER_SHARD).next_power_of_two().min(MAX_SHARDS);
+        Self::with_config(cap, want, opts)
     }
 
     /// Explicit shard count (rounded up to a power of two, at least 1).
@@ -160,15 +263,27 @@ impl ResultCache {
     /// capacity, every shard still holds at least one entry, so the
     /// total bound is `max(cap, n)`.
     pub fn with_shards(cap: usize, n: usize) -> Self {
+        Self::with_config(cap, n, CacheOptions::default())
+    }
+
+    /// Full v5 constructor: explicit shard count plus the
+    /// [`CacheOptions`] admission/eviction knobs.
+    pub fn with_config(cap: usize, n: usize, opts: CacheOptions) -> Self {
         let n = n.max(1).next_power_of_two();
         let cap = cap.max(1);
         let (base, rem) = (cap / n, cap % n);
+        let (tbase, trem) = (opts.task_cap / n, opts.task_cap % n);
         ResultCache {
             cap,
             shards: (0..n)
                 .map(|i| {
                     Mutex::new(Inner {
                         cap: (base + usize::from(i < rem)).max(1),
+                        task_cap: if opts.task_cap == 0 {
+                            0
+                        } else {
+                            (tbase + usize::from(i < trem)).max(1)
+                        },
                         map: HashMap::new(),
                         lru: BTreeMap::new(),
                         lru_unprotected: BTreeMap::new(),
@@ -177,6 +292,8 @@ impl ResultCache {
                     })
                 })
                 .collect(),
+            ttl: opts.ttl,
+            hitrate_admission: opts.hitrate_admission,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
@@ -223,6 +340,13 @@ impl ResultCache {
     /// that is rejected by admission control (and retried, possibly
     /// many times) does not inflate the miss counter: `hits + misses`
     /// stays equal to the cached-path traffic that actually completed.
+    ///
+    /// **TTL (v5).**  A probe that finds an entry older than the
+    /// configured TTL drops it and returns `None` *without counting
+    /// anything*: it is not a hit (no stale answer was served) and the
+    /// miss is counted — once — when the re-executed result reaches
+    /// [`Self::insert_tagged`].  Counting the expired probe as a hit
+    /// would feed hit-rate-aware admission stale-hit noise.
     pub fn get_hit<R>(
         &self,
         task: &str,
@@ -236,6 +360,16 @@ impl ResultCache {
         // shard-local lock.
         let inner = &mut *inner;
         let e = inner.map.get_mut(&key)?;
+        if let Some(ttl) = self.ttl {
+            if e.at.elapsed() >= ttl {
+                let (tick, ti) = (e.tick, e.task);
+                inner.lru.remove(&tick);
+                inner.lru_unprotected.remove(&tick);
+                inner.map.remove(&key);
+                inner.per_task[ti].entries -= 1;
+                return None;
+            }
+        }
         inner.tick += 1;
         inner.lru.remove(&e.tick);
         inner.lru_unprotected.remove(&e.tick);
@@ -284,10 +418,17 @@ impl ResultCache {
     /// non-`Interactive` entries and is turned away (not admitted) when
     /// its shard holds nothing but interactive working set.  Each
     /// insert is one executed cache miss (see [`Self::get_copy`]).
+    ///
+    /// V5 admission runs in order: (1) a refresh of a live key is
+    /// always admitted — the key is demonstrably repeating; (2)
+    /// hit-rate-aware admission may turn the insert away (a throttled
+    /// task still lands one probe in [`HITRATE_PROBE_EVERY`]); (3) a
+    /// task at its per-task split evicts its own oldest entry
+    /// (class-aware) before the shard-capacity LRU loop runs.
+    ///
     /// Returns `true` when the entry was admitted (inserted or
-    /// refreshed); `false` when a `Batch` insert was turned away — the
-    /// denial the tracing layer records as a `cache_insert_denied`
-    /// fleet event.
+    /// refreshed); `false` when it was turned away — the denial the
+    /// tracing layer records as a `cache_insert_denied` fleet event.
     pub fn insert_tagged(
         &self,
         task: &str,
@@ -301,7 +442,7 @@ impl ResultCache {
         // Reborrow through the guard once so `map` and `lru` can be
         // field-split below.
         let inner = &mut *inner;
-        bump_task(&mut inner.per_task, task, false);
+        let ti = bump_task(&mut inner.per_task, task, false);
         inner.tick += 1;
         let tick = inner.tick;
         if let Some(e) = inner.map.get_mut(&key) {
@@ -309,7 +450,21 @@ impl ResultCache {
             // by Batch must not strip an entry's interactive shield.
             let class = if e.class.idx() < class.idx() { e.class } else { class };
             let old_tick = e.tick;
-            *e = Entry { output: output.to_vec(), top1, tick, class };
+            let old_ti = e.task;
+            *e = Entry {
+                output: output.to_vec(),
+                top1,
+                tick,
+                class,
+                task: ti,
+                at: Instant::now(),
+            };
+            if old_ti != ti {
+                // 64-bit key collision across tasks: vanishingly rare,
+                // but keep the split accounting consistent.
+                inner.per_task[old_ti].entries -= 1;
+                inner.per_task[ti].entries += 1;
+            }
             inner.lru.remove(&old_tick);
             inner.lru_unprotected.remove(&old_tick);
             inner.lru.insert(tick, key);
@@ -317,6 +472,39 @@ impl ResultCache {
                 inner.lru_unprotected.insert(tick, key);
             }
             return true;
+        }
+        if self.hitrate_admission {
+            let t = &mut inner.per_task[ti];
+            let obs = t.hits + t.misses;
+            if obs >= HITRATE_MIN_OBS && (t.hits as f64) < HITRATE_ADMIT_FLOOR * obs as f64
+            {
+                t.probes += 1;
+                if t.probes % HITRATE_PROBE_EVERY != 0 {
+                    return false;
+                }
+            }
+        }
+        if inner.task_cap > 0 && inner.per_task[ti].entries >= inner.task_cap {
+            // The task is at its split: evict its own oldest entry.
+            // Batch scans only the unprotected index, so the shield
+            // holds even within a task's own slice.
+            let pool = if class == Priority::Batch {
+                &inner.lru_unprotected
+            } else {
+                &inner.lru
+            };
+            let victim = pool
+                .iter()
+                .find(|(_, k)| inner.map.get(*k).map_or(false, |e| e.task == ti))
+                .map(|(&t, &k)| (t, k));
+            let Some((t, k)) = victim else {
+                // Batch vs an all-interactive slice of its own task.
+                return false;
+            };
+            inner.lru.remove(&t);
+            inner.lru_unprotected.remove(&t);
+            inner.map.remove(&k);
+            inner.per_task[ti].entries -= 1;
         }
         while inner.map.len() >= inner.cap {
             // Oldest evictable entry, O(log n): Batch pops the head of
@@ -334,9 +522,15 @@ impl ResultCache {
             };
             inner.lru.remove(&t);
             inner.lru_unprotected.remove(&t);
-            inner.map.remove(&k);
+            if let Some(e) = inner.map.remove(&k) {
+                inner.per_task[e.task].entries -= 1;
+            }
         }
-        inner.map.insert(key, Entry { output: output.to_vec(), top1, tick, class });
+        inner.map.insert(
+            key,
+            Entry { output: output.to_vec(), top1, tick, class, task: ti, at: Instant::now() },
+        );
+        inner.per_task[ti].entries += 1;
         inner.lru.insert(tick, key);
         if class != Priority::Interactive {
             inner.lru_unprotected.insert(tick, key);
@@ -350,22 +544,26 @@ impl ResultCache {
         self.insert_tagged(task, key, output, top1, Priority::Standard);
     }
 
+    /// Merged counters and occupancy.  `entries` counts resident
+    /// entries — with a TTL configured, an entry that has aged out but
+    /// has not been probed since is still resident (expiry is lazy,
+    /// paid by the probe that discovers it).
     pub fn stats(&self) -> CacheStats {
         let mut entries = 0usize;
         let mut merged: Vec<TaskCacheStats> = Vec::new();
         for shard in &self.shards {
             let inner = shard.lock().unwrap();
             entries += inner.map.len();
-            for (task, hits, misses) in &inner.per_task {
-                match merged.iter_mut().find(|t| &t.task == task) {
-                    Some(t) => {
-                        t.hits += hits;
-                        t.misses += misses;
+            for t in &inner.per_task {
+                match merged.iter_mut().find(|m| m.task == t.name) {
+                    Some(m) => {
+                        m.hits += t.hits;
+                        m.misses += t.misses;
                     }
                     None => merged.push(TaskCacheStats {
-                        task: task.clone(),
-                        hits: *hits,
-                        misses: *misses,
+                        task: t.name.clone(),
+                        hits: t.hits,
+                        misses: t.misses,
                     }),
                 }
             }
@@ -538,5 +736,125 @@ mod tests {
         let bk2 = ResultCache::key("kws", &[11.0]);
         c.insert_tagged("kws", bk2, &[11.0], 0, Priority::Batch);
         assert!(c.get("kws", a).is_some(), "batch refresh stripped the shield");
+    }
+
+    /// TTL expiry works at (and across) the shard boundary, and an
+    /// expired probe counts as a *miss*, not a hit: the probe itself
+    /// counts nothing, and the miss lands when the re-executed result
+    /// is re-inserted — the ISSUE-9 counter fix, pinned.
+    #[test]
+    fn ttl_expiry_at_the_shard_boundary_counts_as_miss_not_hit() {
+        let opts = CacheOptions { ttl: Some(Duration::from_millis(250)), ..Default::default() };
+        let c = ResultCache::with_config(64, 4, opts);
+        assert_eq!(c.n_shards(), 4);
+        // Spread keys until at least two shards are occupied, so expiry
+        // bookkeeping is exercised on both sides of a shard boundary.
+        let keys: Vec<u64> =
+            (0..8u32).map(|i| ResultCache::key("kws", &[i as f32])).collect();
+        for (i, &k) in keys.iter().enumerate() {
+            c.insert("kws", k, &[i as f32], 0);
+        }
+        let occupied =
+            c.shards.iter().filter(|s| !s.lock().unwrap().map.is_empty()).count();
+        assert!(occupied >= 2, "keys must straddle a shard boundary");
+        // Fresh probes hit.
+        assert!(c.get("kws", keys[0]).is_some());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 8, 8));
+        std::thread::sleep(Duration::from_millis(600));
+        // Expired probes: every entry is dropped, and NOTHING is
+        // counted — hits stay at 1 and misses stay at 8.
+        for &k in &keys {
+            assert!(c.get("kws", k).is_none(), "expired entry served");
+        }
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 8, 0));
+        assert_eq!(
+            s.per_task,
+            vec![TaskCacheStats { task: "kws".into(), hits: 1, misses: 8 }],
+            "expired probes must not pollute per-task admission counters"
+        );
+        // The miss is counted exactly once, by the re-insert after the
+        // re-execution — and the refreshed entry hits again.
+        c.insert("kws", keys[0], &[42.0], 0);
+        assert_eq!(c.get("kws", keys[0]).unwrap().0, vec![42.0]);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (2, 9, 1));
+    }
+
+    /// A task at its per-task split evicts its own oldest entry instead
+    /// of squeezing its neighbours.
+    #[test]
+    fn per_task_capacity_split_bounds_each_task() {
+        let opts = CacheOptions { task_cap: 2, ..Default::default() };
+        let c = ResultCache::with_config(8, 1, opts);
+        let kws: Vec<u64> =
+            (0..2u32).map(|i| ResultCache::key("kws", &[i as f32])).collect();
+        for (i, &k) in kws.iter().enumerate() {
+            c.insert("kws", k, &[i as f32], 0);
+        }
+        // Five AD frames through a split of two: only the newest two
+        // survive, and the KWS working set is untouched even though the
+        // shard (cap 8) had room for all seven entries.
+        let ad: Vec<u64> =
+            (0..5u32).map(|i| ResultCache::key("ad", &[i as f32])).collect();
+        for (i, &k) in ad.iter().enumerate() {
+            assert!(c.insert_tagged("ad", k, &[i as f32], 0, Priority::Standard));
+        }
+        assert_eq!(c.stats().entries, 4, "2 kws + 2 ad");
+        assert!(c.get("ad", ad[0]).is_none());
+        assert!(c.get("ad", ad[1]).is_none());
+        assert!(c.get("ad", ad[2]).is_none());
+        assert!(c.get("ad", ad[3]).is_some());
+        assert!(c.get("ad", ad[4]).is_some());
+        for &k in &kws {
+            assert!(c.get("kws", k).is_some(), "neighbour task squeezed out");
+        }
+        // Batch still cannot reclaim an Interactive entry of its own
+        // task through the per-task eviction path.
+        let c2 = ResultCache::with_config(8, 1, CacheOptions { task_cap: 1, ..Default::default() });
+        let ik = ResultCache::key("ic", &[1.0]);
+        c2.insert_tagged("ic", ik, &[1.0], 0, Priority::Interactive);
+        let bk = ResultCache::key("ic", &[2.0]);
+        assert!(
+            !c2.insert_tagged("ic", bk, &[2.0], 0, Priority::Batch),
+            "batch evicted interactive via the per-task split"
+        );
+        assert!(c2.get("ic", ik).is_some());
+    }
+
+    /// A task observed to never repeat is throttled to probe-only
+    /// admission; a task with a healthy hit rate is unaffected.
+    #[test]
+    fn hitrate_admission_throttles_never_repeating_tasks() {
+        let opts = CacheOptions { hitrate_admission: true, ..Default::default() };
+        let c = ResultCache::with_config(256, 1, opts);
+        // A hot KWS key with a near-1.0 hit rate.
+        let hot = ResultCache::key("kws", &[7.0]);
+        c.insert("kws", hot, &[7.0], 0);
+        for _ in 0..16 {
+            assert!(c.get("kws", hot).is_some());
+        }
+        // 128 unique AD frames: warm-up, all admitted (the floor must
+        // not fire before HITRATE_MIN_OBS observations).
+        for i in 0..HITRATE_MIN_OBS {
+            let k = ResultCache::key("ad", &[i as f32]);
+            assert!(c.insert_tagged("ad", k, &[0.0], 0, Priority::Standard), "warm-up insert {i}");
+        }
+        // Past warm-up at hit rate 0: only one insert in
+        // HITRATE_PROBE_EVERY is admitted.
+        let tries = 2 * HITRATE_PROBE_EVERY;
+        let admitted = (0..tries)
+            .filter(|i| {
+                let k = ResultCache::key("ad", &[1000.0 + *i as f32]);
+                c.insert_tagged("ad", k, &[0.0], 0, Priority::Standard)
+            })
+            .count() as u64;
+        assert_eq!(admitted, tries / HITRATE_PROBE_EVERY, "throttle admits probes only");
+        // The healthy task is still admitted unconditionally.
+        for i in 0..16u32 {
+            let k = ResultCache::key("kws", &[100.0 + i as f32]);
+            assert!(c.insert_tagged("kws", k, &[0.0], 0, Priority::Standard));
+        }
     }
 }

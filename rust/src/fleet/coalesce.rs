@@ -1,0 +1,358 @@
+//! Single-flight request coalescing: collapse identical **in-flight**
+//! misses into one board execution.
+//!
+//! The result cache ([`super::cache`]) answers repeats of *completed*
+//! executions; this module handles the window the cache cannot cover —
+//! the flash crowd that arrives while the first identical request is
+//! still queued or executing.  Without it, N identical submits that all
+//! miss the (not-yet-populated) cache each queue for a board and each
+//! burn `latency + ii` device time; with it, one **leader** executes
+//! and N−1 **followers** ride its reply.
+//!
+//! **Identity.**  Two requests coalesce when they share the same
+//! 64-bit [`super::cache::ResultCache::key`] digest — task name plus
+//! the input quantized to the 1/256 grid — i.e. exactly when a cache
+//! hit would have served one from the other.
+//!
+//! **Admission state machine.**  The submit path calls
+//! [`Coalescer::attach_or_lead`] *after* the cache probe misses:
+//!
+//! * no open flight for the key → a fresh [`Flight`] is registered and
+//!   the caller becomes its **leader** ([`Attach::Lead`]); the flight
+//!   rides the leader's [`super::FleetRequest`] through routing,
+//!   queueing, retries, and execution.
+//! * an open flight whose leader's class is the same or more urgent →
+//!   the caller's reply sender is enrolled as a **follower**
+//!   ([`Attach::Follow`]) and the submit returns immediately — the
+//!   request never touches the router.
+//! * an open flight led by a *less* urgent class → [`Attach::Solo`]:
+//!   an Interactive request must not wait behind a Batch leader's
+//!   queue position, so it proceeds uncoalesced (and simply does not
+//!   coalesce with anyone — the key is occupied).
+//!
+//! **Leader/follower lifecycle and failure semantics.**  Exactly one
+//! terminal event finishes a flight, and whoever triggers it calls
+//! [`Coalescer::finish`] (directly or via [`Coalescer::fan_err`]):
+//!
+//! * the worker completes the leader's batch → it fans a bit-identical
+//!   copy of the leader's output to every follower through its
+//!   [`crate::coordinator::pool::ReplyPool`];
+//! * the leader's retry budget runs out (worker fail path, or the
+//!   retry pump finding no queue) → the same typed
+//!   [`super::FleetError`] the leader gets is fanned to every
+//!   follower;
+//! * the leader is refused admission after registering (every routing
+//!   retry bounced) → the submit path fans
+//!   `FleetError::Exhausted { attempts: 0 }` — zero attempts marks "the
+//!   leader never executed" — and surfaces its own `RouteError`.
+//!
+//! `finish` removes the map entry *first* (new arrivals for the key
+//! start a fresh flight — re-election by succession rather than
+//! follower promotion) and then snapshots the follower list exactly
+//! once, flipping the flight to `Done`.  Enrolment and finishing take
+//! the same stripe lock, so no follower can enrol after the snapshot:
+//! the **exactly-one-outcome invariant** extends to followers — every
+//! enrolled sender receives exactly one `Ok`/`Err`, pinned by the
+//! chaos proptests in `rust/tests/proptests.rs`.  A `finish` racing a
+//! stale `Arc<Flight>` (the key already re-led by a successor) is
+//! guarded by pointer identity and leaves the successor untouched.
+//!
+//! Like the cache, the flight map is lock-striped by the low key bits;
+//! a coalesce-off fleet never constructs a [`Coalescer`], so the
+//! steady-state submit path pays nothing.
+
+use super::queue::Priority;
+use super::FleetError;
+use crate::coordinator::engine::Reply;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+/// Reply-channel sender type shared with [`super::FleetRequest`].
+pub type ReplySender = mpsc::Sender<std::result::Result<Reply, FleetError>>;
+
+/// Lock stripes over the in-flight map (power of two; the map holds one
+/// entry per *distinct in-flight key*, so it stays small — striping is
+/// about lock traffic under flash-crowd submit storms, not capacity).
+const STRIPES: usize = 16;
+
+/// Counters for telemetry (`coalesce` block in the snapshot JSON).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CoalesceStats {
+    /// Flights opened (one per leader, followers or not).
+    pub leaders: u64,
+    /// Requests that attached to an open flight instead of routing.
+    pub followers: u64,
+    /// Follower replies fanned out from completed leader batches.
+    pub fanned_ok: u64,
+    /// Follower errors fanned out from failed/aborted leaders.
+    pub fanned_err: u64,
+}
+
+enum FlightState {
+    Open { followers: Vec<ReplySender>, leader_class: Priority },
+    Done,
+}
+
+/// One in-flight execution a herd can ride.  Registered under its key
+/// in the [`Coalescer`] map while open; carried by the leader's
+/// `FleetRequest` until a terminal outcome finishes it.
+pub struct Flight {
+    key: u64,
+    state: Mutex<FlightState>,
+}
+
+impl FlightState {
+    fn open(leader_class: Priority) -> FlightState {
+        FlightState::Open { followers: Vec::new(), leader_class }
+    }
+}
+
+impl Flight {
+    /// Snapshot the follower list exactly once, flipping to `Done`.
+    /// Later calls (a double-finish race) get an empty list.
+    fn take_followers(&self) -> Vec<ReplySender> {
+        let mut st = self.state.lock().unwrap();
+        match std::mem::replace(&mut *st, FlightState::Done) {
+            FlightState::Open { followers, .. } => followers,
+            FlightState::Done => Vec::new(),
+        }
+    }
+}
+
+/// What [`Coalescer::attach_or_lead`] decided for one submitted miss.
+pub enum Attach {
+    /// Caller leads a fresh flight: route normally, carry the flight on
+    /// the request, fan followers at the terminal outcome.
+    Lead(Arc<Flight>),
+    /// Caller's sender was enrolled on an open flight; its receiver
+    /// resolves when the leader's outcome fans out.  Do not route.
+    Follow,
+    /// An open flight exists but its leader's class is less urgent than
+    /// the caller: proceed uncoalesced.
+    Solo,
+}
+
+/// Striped map of in-flight executions, keyed by the cache digest.
+pub struct Coalescer {
+    stripes: Vec<Mutex<HashMap<u64, Arc<Flight>>>>,
+    leaders: AtomicU64,
+    followers: AtomicU64,
+    fanned_ok: AtomicU64,
+    fanned_err: AtomicU64,
+}
+
+impl Default for Coalescer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Coalescer {
+    pub fn new() -> Self {
+        Coalescer {
+            stripes: (0..STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
+            leaders: AtomicU64::new(0),
+            followers: AtomicU64::new(0),
+            fanned_ok: AtomicU64::new(0),
+            fanned_err: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn stripe(&self, key: u64) -> &Mutex<HashMap<u64, Arc<Flight>>> {
+        &self.stripes[key as usize & (STRIPES - 1)]
+    }
+
+    /// Decide what a cache-missing submit does for `key` — see the
+    /// module docs for the state machine.  Compatibility is "the
+    /// leader's class is the same or more urgent than `class`": a
+    /// follower never waits behind a lazier leader's queue position.
+    pub fn attach_or_lead(&self, key: u64, class: Priority, tx: &ReplySender) -> Attach {
+        let mut map = self.stripe(key).lock().unwrap();
+        if let Some(f) = map.get(&key) {
+            let mut st = f.state.lock().unwrap();
+            match &mut *st {
+                FlightState::Open { followers, leader_class } => {
+                    if leader_class.idx() <= class.idx() {
+                        followers.push(tx.clone());
+                        self.followers.fetch_add(1, Ordering::Relaxed);
+                        return Attach::Follow;
+                    }
+                    return Attach::Solo;
+                }
+                // Done but not yet (or never) deregistered: stale —
+                // fall through and lead a successor flight.
+                FlightState::Done => {}
+            }
+        }
+        let f = Arc::new(Flight { key, state: Mutex::new(FlightState::open(class)) });
+        map.insert(key, f.clone());
+        self.leaders.fetch_add(1, Ordering::Relaxed);
+        Attach::Lead(f)
+    }
+
+    /// Terminally resolve `flight`: deregister it (pointer-identity
+    /// guarded, so finishing a stale flight cannot evict a successor
+    /// already leading the same key) and hand back the follower list —
+    /// exactly once; a second finish gets an empty list.  The caller
+    /// owes every returned sender exactly one outcome.
+    pub fn finish(&self, flight: &Arc<Flight>) -> Vec<ReplySender> {
+        {
+            let mut map = self.stripe(flight.key).lock().unwrap();
+            if map.get(&flight.key).map_or(false, |cur| Arc::ptr_eq(cur, flight)) {
+                map.remove(&flight.key);
+            }
+        }
+        flight.take_followers()
+    }
+
+    /// [`Self::finish`] + fan `err` to every follower (the leader's own
+    /// reply channel is the caller's to resolve).
+    pub fn fan_err(&self, flight: &Arc<Flight>, err: &FleetError) {
+        let followers = self.finish(flight);
+        if followers.is_empty() {
+            return;
+        }
+        self.fanned_err.fetch_add(followers.len() as u64, Ordering::Relaxed);
+        for tx in followers {
+            let _ = tx.send(Err(err.clone()));
+        }
+    }
+
+    /// Count `n` follower replies fanned from a completed batch (the
+    /// worker copies and sends them itself — it owns the reply pool).
+    pub fn note_fanned_ok(&self, n: u64) {
+        self.fanned_ok.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> CoalesceStats {
+        CoalesceStats {
+            leaders: self.leaders.load(Ordering::Relaxed),
+            followers: self.followers.load(Ordering::Relaxed),
+            fanned_ok: self.fanned_ok.load(Ordering::Relaxed),
+            fanned_err: self.fanned_err.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pool::PooledVec;
+
+    fn chan() -> (ReplySender, mpsc::Receiver<std::result::Result<Reply, FleetError>>) {
+        mpsc::channel()
+    }
+
+    fn reply(v: Vec<f32>) -> Reply {
+        Reply {
+            output: PooledVec::detached(v),
+            top1: 0,
+            batch_size: 1,
+            queue_us: 0,
+            exec_us: 0,
+        }
+    }
+
+    #[test]
+    fn first_leads_duplicates_follow_and_fan_out_resolves_them() {
+        let co = Coalescer::new();
+        let key = 0xAB;
+        let (ltx, _lrx) = chan();
+        let flight = match co.attach_or_lead(key, Priority::Standard, &ltx) {
+            Attach::Lead(f) => f,
+            _ => panic!("first request must lead"),
+        };
+        let (f1tx, f1rx) = chan();
+        let (f2tx, f2rx) = chan();
+        assert!(matches!(co.attach_or_lead(key, Priority::Standard, &f1tx), Attach::Follow));
+        assert!(matches!(co.attach_or_lead(key, Priority::Batch, &f2tx), Attach::Follow));
+        // A different key is independent.
+        let (otx, _orx) = chan();
+        assert!(matches!(co.attach_or_lead(0xCD, Priority::Standard, &otx), Attach::Lead(_)));
+        // The "worker" finishes the flight and fans copies.
+        let followers = co.finish(&flight);
+        assert_eq!(followers.len(), 2);
+        co.note_fanned_ok(followers.len() as u64);
+        for tx in followers {
+            let _ = tx.send(Ok(reply(vec![1.0, 2.0])));
+        }
+        for rx in [f1rx, f2rx] {
+            let got = rx.recv().unwrap().unwrap();
+            assert_eq!(&got.output[..], &[1.0, 2.0]);
+        }
+        let s = co.stats();
+        assert_eq!(s, CoalesceStats { leaders: 2, followers: 2, fanned_ok: 2, fanned_err: 0 });
+        // The key is free again: the next identical request leads.
+        let (ntx, _nrx) = chan();
+        assert!(matches!(co.attach_or_lead(key, Priority::Standard, &ntx), Attach::Lead(_)));
+    }
+
+    #[test]
+    fn more_urgent_request_goes_solo_instead_of_waiting_on_a_lazy_leader() {
+        let co = Coalescer::new();
+        let (btx, _brx) = chan();
+        let _flight = match co.attach_or_lead(7, Priority::Batch, &btx) {
+            Attach::Lead(f) => f,
+            _ => panic!("must lead"),
+        };
+        // Interactive behind a Batch leader: solo, never enrolled.
+        let (itx, irx) = chan();
+        assert!(matches!(co.attach_or_lead(7, Priority::Interactive, &itx), Attach::Solo));
+        assert!(irx.try_recv().is_err());
+        // The reverse composition coalesces: Interactive leader,
+        // Standard/Batch followers.
+        let (ltx, _lrx) = chan();
+        assert!(matches!(co.attach_or_lead(9, Priority::Interactive, &ltx), Attach::Lead(_)));
+        let (stx, _srx) = chan();
+        assert!(matches!(co.attach_or_lead(9, Priority::Batch, &stx), Attach::Follow));
+        assert_eq!(co.stats().followers, 1);
+    }
+
+    #[test]
+    fn fan_err_resolves_followers_with_the_typed_error() {
+        let co = Coalescer::new();
+        let (ltx, _lrx) = chan();
+        let flight = match co.attach_or_lead(1, Priority::Standard, &ltx) {
+            Attach::Lead(f) => f,
+            _ => panic!("must lead"),
+        };
+        let (ftx, frx) = chan();
+        assert!(matches!(co.attach_or_lead(1, Priority::Standard, &ftx), Attach::Follow));
+        co.fan_err(&flight, &FleetError::Exhausted { attempts: 4 });
+        match frx.recv().unwrap() {
+            Err(FleetError::Exhausted { attempts }) => assert_eq!(attempts, 4),
+            Ok(_) => panic!("follower got a reply from a failed leader"),
+        }
+        assert!(frx.try_recv().is_err(), "exactly one outcome");
+        assert_eq!(co.stats().fanned_err, 1);
+    }
+
+    #[test]
+    fn finish_is_once_only_and_a_stale_finish_cannot_evict_a_successor() {
+        let co = Coalescer::new();
+        let (tx, _rx) = chan();
+        let f1 = match co.attach_or_lead(5, Priority::Standard, &tx) {
+            Attach::Lead(f) => f,
+            _ => panic!("must lead"),
+        };
+        let (ftx, _frx) = chan();
+        assert!(matches!(co.attach_or_lead(5, Priority::Standard, &ftx), Attach::Follow));
+        assert_eq!(co.finish(&f1).len(), 1);
+        assert_eq!(co.finish(&f1).len(), 0, "followers snapshot exactly once");
+        // A successor takes over the key; finishing the stale flight
+        // again must not deregister it.
+        let f2 = match co.attach_or_lead(5, Priority::Standard, &tx) {
+            Attach::Lead(f) => f,
+            _ => panic!("successor must lead"),
+        };
+        assert_eq!(co.finish(&f1).len(), 0);
+        let (gtx, _grx) = chan();
+        assert!(
+            matches!(co.attach_or_lead(5, Priority::Standard, &gtx), Attach::Follow),
+            "successor flight must survive the stale finish"
+        );
+        assert_eq!(co.finish(&f2).len(), 1);
+    }
+}

@@ -16,7 +16,11 @@
 //! [`telemetry::Telemetry`] aggregates the result into fleet-level
 //! p50/p99/throughput/energy.  An optional bounded LRU
 //! [`cache::ResultCache`] in front of the router memoizes
-//! (task, quantized-input) → output with per-task hit/miss counters.
+//! (task, quantized-input) → output with per-task hit/miss counters,
+//! per-entry TTL, per-task capacity splits, and hit-rate-aware
+//! admission (caching v5); an optional single-flight [`coalesce`] layer
+//! behind it merges identical *in-flight* requests onto one leader's
+//! board execution and fans the reply to every follower.
 //!
 //! The queue plane is **multi-tenant and class-aware** ([`queue`]):
 //! every request carries a (tenant, [`Priority`]) tag, each board
@@ -88,6 +92,7 @@
 pub mod autoscale;
 pub mod cache;
 pub mod chaos;
+pub mod coalesce;
 pub mod health;
 pub mod queue;
 pub mod registry;
@@ -97,8 +102,9 @@ pub mod trace;
 pub mod worker;
 
 pub use autoscale::{AutoscaleConfig, ScaleAction, ScaleEvent};
-pub use cache::{CacheStats, ResultCache, TaskCacheStats};
+pub use cache::{CacheOptions, CacheStats, ResultCache, TaskCacheStats};
 pub use chaos::{ChaosExecutor, ChaosSpec, FaultPlan, ReplicaFaults, Victim};
+pub use coalesce::{CoalesceStats, Coalescer};
 pub use health::{BoardHealth, HealthConfig};
 pub use queue::{admit_limit, BoardQueue, FleetRequest, Priority, RequestTag};
 pub use registry::{BoardInstance, Registry};
@@ -169,6 +175,22 @@ pub struct FleetConfig {
     /// of the router without touching a board; cache hits carry
     /// `batch_size == 0` in their [`Reply`].
     pub cache_cap: usize,
+    /// Per-entry result-cache TTL in µs (0 = entries never expire).  An
+    /// expired entry is dropped by the probe that discovers it and the
+    /// probe counts as a plain miss — never a stale hit (see
+    /// [`cache`]'s v5 notes).
+    pub cache_ttl_us: u64,
+    /// Cache-wide per-task entry budget (0 = no split): a task at its
+    /// split evicts its own oldest entry instead of squeezing its
+    /// neighbours' working sets.
+    pub cache_task_cap: usize,
+    /// Single-flight request coalescing ([`coalesce`]): identical
+    /// in-flight requests (same task + 1/256-quantized input, same or
+    /// more urgent leader class) attach as followers to one leader's
+    /// board execution and ride its reply.  Works with or without the
+    /// result cache (the cache remembers *completed* executions; the
+    /// coalescer collapses *in-flight* ones).
+    pub coalesce: bool,
     /// Telemetry-driven replica autoscaling (`None` = fixed fleet).
     pub autoscale: Option<AutoscaleConfig>,
     /// Run the queues in single-FIFO compat mode: arrival-order pickup
@@ -219,6 +241,9 @@ impl Default for FleetConfig {
             time_scale: 1.0,
             work_stealing: true,
             cache_cap: 0,
+            cache_ttl_us: 0,
+            cache_task_cap: 0,
+            coalesce: false,
             autoscale: None,
             fifo_queues: false,
             global_hotpath: false,
@@ -270,6 +295,11 @@ pub(crate) struct FleetState {
     /// `None` in `global_hotpath` mode — hits allocate, the pre-PR
     /// behavior.
     reply_pool: Option<ReplyPool>,
+    /// Single-flight coalescer ([`FleetConfig::coalesce`]): identical
+    /// in-flight requests attach to one leader's board execution and
+    /// share its reply.  `None` = coalescing off — the submit path pays
+    /// one branch.
+    coalescer: Option<Arc<Coalescer>>,
     workers: Mutex<Vec<WorkerSlot>>,
     /// task → live same-task queue list shared with the workers (for
     /// stealing); updated in place on membership changes.
@@ -342,6 +372,7 @@ fn spawn_worker(
     // touches the collector's slot table again.
     let sink = TelemetrySink::resolve(&state.telemetry, inst.id);
     let cache = state.cache.clone();
+    let coalesce = state.coalescer.clone();
     let cfg = state.config;
     // Resolve the board's event ring once, like the telemetry sink.
     let trace = state.trace.as_ref().map(|t| WorkerTraceConfig {
@@ -380,11 +411,27 @@ fn spawn_worker(
             Some(f) => {
                 let timing = DataflowTiming::for_instance(&inst, cfg.time_scale);
                 let exec = ChaosExecutor::new(exec, f, timing);
-                worker::run_worker(&inst, exec, &own, &peers, &wcfg, &sink, cache.as_deref())
+                worker::run_worker(
+                    &inst,
+                    exec,
+                    &own,
+                    &peers,
+                    &wcfg,
+                    &sink,
+                    cache.as_deref(),
+                    coalesce.as_deref(),
+                )
             }
-            None => {
-                worker::run_worker(&inst, exec, &own, &peers, &wcfg, &sink, cache.as_deref())
-            }
+            None => worker::run_worker(
+                &inst,
+                exec,
+                &own,
+                &peers,
+                &wcfg,
+                &sink,
+                cache.as_deref(),
+                coalesce.as_deref(),
+            ),
         }
     })
 }
@@ -640,6 +687,9 @@ fn resubmit(state: &Arc<FleetState>, item: RetryItem) {
         }
     }
     let attempts = req.attempts;
+    if let (Some(co), Some(f)) = (&state.coalescer, req.flight.as_ref()) {
+        co.fan_err(f, &FleetError::Exhausted { attempts });
+    }
     let _ = req.reply.send(Err(FleetError::Exhausted { attempts }));
 }
 
@@ -652,6 +702,9 @@ fn snapshot_of(state: &FleetState) -> FleetSnapshot {
     let mut snap = state.telemetry.snapshot(&reg);
     if let Some(c) = &state.cache {
         snap.cache = c.stats();
+    }
+    if let Some(co) = &state.coalescer {
+        snap.coalesce = Some(co.stats());
     }
     {
         let p = state.plane.read().unwrap();
@@ -723,14 +776,21 @@ impl Fleet {
             Telemetry::new(n)
         });
         let cache = (config.cache_cap > 0).then(|| {
+            let opts = CacheOptions {
+                ttl: (config.cache_ttl_us > 0)
+                    .then(|| Duration::from_micros(config.cache_ttl_us)),
+                task_cap: config.cache_task_cap,
+                hitrate_admission: true,
+            };
             Arc::new(if config.global_hotpath {
-                ResultCache::with_shards(config.cache_cap, 1)
+                ResultCache::with_config(config.cache_cap, 1, opts)
             } else {
-                ResultCache::new(config.cache_cap)
+                ResultCache::with_options(config.cache_cap, opts)
             })
         });
         let reply_pool = (!config.global_hotpath && config.cache_cap > 0)
             .then(|| ReplyPool::new(256));
+        let coalescer = config.coalesce.then(|| Arc::new(Coalescer::new()));
         let router = Arc::new(Router::with_options(
             &registry,
             config.policy,
@@ -760,6 +820,7 @@ impl Fleet {
             telemetry,
             cache,
             reply_pool,
+            coalescer,
             workers: Mutex::new(Vec::new()),
             peers: Mutex::new(peers_map),
             lifecycle: Mutex::new(
@@ -1077,6 +1138,20 @@ impl FleetHandle {
         // overfill, never land on a retiring board.  try_push hands the
         // request back on failure, so the input is never copied.
         let (tx, rx) = mpsc::channel();
+        // Single-flight probe: a duplicate of an in-flight request (same
+        // coalescing key, compatible class) attaches as a follower and
+        // returns its receiver immediately — the leader's worker fans the
+        // reply out at batch completion.  The key is the cache digest,
+        // computed above on a cache miss and here when the cache is off.
+        let mut flight = None;
+        if let Some(co) = &self.state.coalescer {
+            let key = cache_key.unwrap_or_else(|| ResultCache::key(task, &x));
+            match co.attach_or_lead(key, tag.priority, &tx) {
+                coalesce::Attach::Follow => return Ok(rx),
+                coalesce::Attach::Lead(f) => flight = Some(f),
+                coalesce::Attach::Solo => {}
+            }
+        }
         let route_start = trace_ctx.as_ref().map(|_| Instant::now());
         let mut req = FleetRequest {
             x,
@@ -1087,6 +1162,7 @@ impl FleetHandle {
             trace: trace_ctx,
             attempts: 0,
             failed_on: queue::NOT_FAILED,
+            flight,
         };
         let fifo = self.state.config.fifo_queues;
         let plane = self.state.plane.read().unwrap();
@@ -1128,6 +1204,15 @@ impl FleetHandle {
                         RouteError::UnknownTask => None,
                         RouteError::InvalidInput { .. } => None,
                     };
+                    // A refused leader never executes: resolve every
+                    // follower with a typed error (`attempts: 0` marks
+                    // "leader never ran") instead of leaving them parked
+                    // on a flight nobody will finish.
+                    if let (Some(co), Some(f)) =
+                        (&self.state.coalescer, req.flight.as_ref())
+                    {
+                        co.fan_err(f, &FleetError::Exhausted { attempts: 0 });
+                    }
                     return Err((e, reason));
                 }
             };
@@ -1143,6 +1228,10 @@ impl FleetHandle {
         }
         // Admission said yes but every retry found the queue closed or
         // re-filled: a queue-full shed, distinct from the tier refusal.
+        // Same leader-abort rule as the admission refusal above.
+        if let (Some(co), Some(f)) = (&self.state.coalescer, req.flight.as_ref()) {
+            co.fan_err(f, &FleetError::Exhausted { attempts: 0 });
+        }
         Err((RouteError::Overloaded, Some(ShedReason::QueueFull)))
     }
 

@@ -131,6 +131,12 @@ pub struct FleetRequest {
     /// ([`NOT_FAILED`] = none) — the retry pump avoids re-routing onto
     /// it while siblings survive.
     pub failed_on: u32,
+    /// Single-flight coalescing ([`super::coalesce`]): `Some` when this
+    /// request leads an open flight.  It rides the request through
+    /// routing and retries; whoever delivers the terminal outcome fans
+    /// it to the flight's followers.  `None` on every request when
+    /// coalescing is off — one pointer-sized field, zero hot-path cost.
+    pub flight: Option<std::sync::Arc<super::coalesce::Flight>>,
 }
 
 /// Sentinel for [`FleetRequest::failed_on`]: the request has not failed
@@ -466,6 +472,7 @@ mod tests {
                 trace: None,
                 attempts: 0,
                 failed_on: NOT_FAILED,
+                flight: None,
             },
             rx,
         )

@@ -42,6 +42,7 @@
 
 use super::autoscale::ScaleEvent;
 use super::cache::CacheStats;
+use super::coalesce::CoalesceStats;
 use super::queue::{Priority, N_CLASSES};
 use super::registry::Registry;
 use super::trace::{
@@ -828,6 +829,7 @@ impl Telemetry {
             p99_us: weighted_percentile(&weighted, 0.99),
             energy_per_inference_uj: if served > 0 { energy / served as f64 } else { 0.0 },
             cache: CacheStats::default(),
+            coalesce: None,
             classes,
             tenants,
             // Global-lock mode tracks tenants in one table, so any row
@@ -1101,6 +1103,11 @@ pub struct FleetSnapshot {
     /// `served` counts only board-executed requests, so total traffic is
     /// `served + cache.hits`.
     pub cache: CacheStats,
+    /// Single-flight coalescing counters; `None` when coalescing is off
+    /// (the JSON then omits the `coalesce` block entirely).  A coalesced
+    /// follower never reaches a board, so total traffic with coalescing
+    /// on is `served + cache.hits + coalesce.followers`.
+    pub coalesce: Option<CoalesceStats>,
     /// Per-priority-class p50/p99/served/shed, always all three classes
     /// in `[interactive, standard, batch]` order.
     pub classes: Vec<ClassSnapshot>,
@@ -1128,7 +1135,7 @@ pub struct FleetSnapshot {
 
 impl FleetSnapshot {
     pub fn to_json(&self) -> Value {
-        obj(vec![
+        let mut fields = vec![
             ("elapsed_s", num(self.elapsed_s)),
             ("served", num(self.served as f64)),
             ("throughput_rps", num(self.throughput_rps)),
@@ -1225,7 +1232,21 @@ impl FleetSnapshot {
                         .collect(),
                 ),
             ),
-        ])
+        ];
+        // Present only when coalescing is on — absence vs. all-zero
+        // distinguishes "off" from "on but no duplicates arrived".
+        if let Some(co) = &self.coalesce {
+            fields.push((
+                "coalesce",
+                obj(vec![
+                    ("leaders", num(co.leaders as f64)),
+                    ("followers", num(co.followers as f64)),
+                    ("fanned_ok", num(co.fanned_ok as f64)),
+                    ("fanned_err", num(co.fanned_err as f64)),
+                ]),
+            ));
+        }
+        obj(fields)
     }
 
     /// Human-readable table.
@@ -1261,6 +1282,14 @@ impl FleetSnapshot {
                 )
                 .ok();
             }
+        }
+        if let Some(co) = &self.coalesce {
+            writeln!(
+                out,
+                "  coalesce: {} leaders / {} followers ({} fanned ok, {} err)",
+                co.leaders, co.followers, co.fanned_ok, co.fanned_err
+            )
+            .ok();
         }
         // Per-class breakdown, shown once any non-default class has
         // traffic or anything was shed (all-Standard runs stay terse).

@@ -36,6 +36,13 @@
 //! `WorkerConfig::pooled_replies` switches the pool off for the
 //! `FleetConfig::global_hotpath` A/B baseline.
 //!
+//! With single-flight coalescing on (`FleetConfig::coalesce`), the reply
+//! loop is also the **fan-out point**: a leader's batch completion
+//! deregisters its [`super::coalesce::Flight`] and sends a bit-identical
+//! copy of the output to every follower; a leader whose retry budget
+//! runs out fans the same typed [`FleetError`] instead — followers share
+//! the leader's fate exactly (see [`super::coalesce`]).
+//!
 //! Outputs come from the packed quantized kernel core
 //! ([`crate::kernels`]): each task's class templates are quantized and
 //! packed **once per process** behind a `OnceLock` and shared by every
@@ -49,6 +56,7 @@
 //! bit-identical to every other regardless of level.
 
 use super::cache::ResultCache;
+use super::coalesce::Coalescer;
 use super::health::BoardHealth;
 use super::queue::{BoardQueue, FleetRequest, Priority};
 use super::registry::BoardInstance;
@@ -384,12 +392,17 @@ pub struct WorkerConfig {
 /// (budget permitting) or send the definitive typed error.  Exactly one
 /// of those happens — the reply channel is never just dropped.  Returns
 /// `true` when the request went back out for retry.
+///
+/// A retried request keeps its flight: only the *terminal* outcome fans
+/// to coalesced followers, so both `Exhausted` sends here fan first —
+/// followers share the leader's fate, reply or typed error.
 fn fail_request(
     mut req: FleetRequest,
     instance: usize,
     task: &str,
     retry: &Option<mpsc::Sender<RetryItem>>,
     budget: u32,
+    coalesce: Option<&Coalescer>,
 ) -> bool {
     req.attempts += 1;
     req.failed_on = instance as u32;
@@ -400,6 +413,9 @@ fn fail_request(
                 // Pump already gone (shutdown tail): resolve here.
                 Err(mpsc::SendError(item)) => {
                     let attempts = item.req.attempts;
+                    if let (Some(co), Some(f)) = (coalesce, item.req.flight.as_ref()) {
+                        co.fan_err(f, &FleetError::Exhausted { attempts });
+                    }
                     let _ = item.req.reply.send(Err(FleetError::Exhausted { attempts }));
                     false
                 }
@@ -407,6 +423,9 @@ fn fail_request(
         }
     }
     let attempts = req.attempts;
+    if let (Some(co), Some(f)) = (coalesce, req.flight.as_ref()) {
+        co.fan_err(f, &FleetError::Exhausted { attempts });
+    }
     let _ = req.reply.send(Err(FleetError::Exhausted { attempts }));
     false
 }
@@ -439,6 +458,7 @@ pub fn run_worker<E: BatchExecutor>(
     cfg: &WorkerConfig,
     telemetry: &TelemetrySink,
     cache: Option<&ResultCache>,
+    coalesce: Option<&Coalescer>,
 ) -> u64 {
     let device_batch = match exec.device_batch() {
         Ok(b) => b.max(1),
@@ -447,7 +467,7 @@ pub fn run_worker<E: BatchExecutor>(
             // Keep draining so every caller gets a terminal outcome —
             // retried elsewhere or a typed error, never a hang.
             while let Some(req) = own.pop_blocking() {
-                fail_request(req, inst.id, &inst.task, &cfg.retry, cfg.retry_budget);
+                fail_request(req, inst.id, &inst.task, &cfg.retry, cfg.retry_budget, coalesce);
             }
             return 0;
         }
@@ -629,7 +649,8 @@ pub fn run_worker<E: BatchExecutor>(
             }
             let mut retried = 0usize;
             for req in batch.drain(..) {
-                if fail_request(req, inst.id, &inst.task, &cfg.retry, cfg.retry_budget) {
+                if fail_request(req, inst.id, &inst.task, &cfg.retry, cfg.retry_budget, coalesce)
+                {
                     retried += 1;
                 }
             }
@@ -684,6 +705,30 @@ pub fn run_worker<E: BatchExecutor>(
                 priority: req.tag.priority,
                 latency_us: req.enqueued.elapsed().as_micros() as f64,
             });
+            // This batch completion is the request's terminal outcome:
+            // deregister its flight and fan a bit-identical copy of the
+            // output to every coalesced follower.  `finish` removes the
+            // flight under the stripe lock first, so no new follower can
+            // enrol after this snapshot (it would lead its own flight).
+            if let (Some(co), Some(flight)) = (coalesce, req.flight.as_ref()) {
+                let followers = co.finish(flight);
+                if !followers.is_empty() {
+                    co.note_fanned_ok(followers.len() as u64);
+                    for ftx in &followers {
+                        let copy = match &pool {
+                            Some(p) => p.take_copy(&out),
+                            None => PooledVec::detached(out.to_vec()),
+                        };
+                        let _ = ftx.send(Ok(Reply {
+                            output: copy,
+                            top1,
+                            batch_size: n,
+                            queue_us,
+                            exec_us,
+                        }));
+                    }
+                }
+            }
             let _ = req.reply.send(Ok(Reply {
                 output: out,
                 top1,

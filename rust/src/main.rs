@@ -12,6 +12,7 @@
 //! tinyml-codesign fig <2|3>                          DSE scan CSVs
 //! tinyml-codesign serve <model> [--requests N]       batching engine demo
 //! tinyml-codesign fleet [--policy rr|ll|energy|slo] [--requests N] [--cache N]
+//!                       [--cache-ttl-us N] [--cache-task-cap N] [--coalesce]
 //!                       [--autoscale] [--min-replicas N] [--max-replicas N]
 //!                       [--scale-interval-us N] [--json]
 //!                       [--tenants N] [--priority-mix i:s:b] [--fifo] [--global-hotpath]
@@ -41,6 +42,16 @@
 //! failed batches. `--chaos-seed N` re-seeds the fault PRNG (default 42).
 //! With chaos on, the report is prefixed by a machine-parseable
 //! `chaos: ejections=.. served=.. failed=.. lost=..` line.
+//!
+//! `--cache-ttl-us N` expires result-cache entries after N µs (expired
+//! probes count as misses, never stale hits); `--cache-task-cap N`
+//! bounds any one task's share of the cache (see
+//! `tinyml_codesign::fleet::cache` for the full v5 admission rules).
+//! `--coalesce` turns on single-flight request coalescing
+//! (`tinyml_codesign::fleet::coalesce`): duplicate in-flight requests
+//! ride one leader's board execution and the report is prefixed by a
+//! machine-parseable `coalesce: leaders=.. followers=.. fanned_ok=..
+//! fanned_err=..` line.
 
 use tinyml_codesign::board::{arty_a7_100t, pynq_z2, Board};
 use tinyml_codesign::coordinator::engine::{spawn, BatchPolicy};
@@ -140,6 +151,7 @@ tinyml-codesign table <1|2|3|4|5>                  paper tables
 tinyml-codesign fig <2|3>                          DSE scan CSVs
 tinyml-codesign serve <model> [--requests N]       batching engine demo
 tinyml-codesign fleet [--policy rr|ll|energy|slo] [--requests N] [--cache N]
+                      [--cache-ttl-us N] [--cache-task-cap N] [--coalesce]
                       [--autoscale] [--min-replicas N] [--max-replicas N]
                       [--scale-interval-us N] [--json]
                       [--tenants N] [--priority-mix i:s:b] [--fifo] [--global-hotpath]
@@ -341,6 +353,9 @@ fn main() -> Result<()> {
                 policy,
                 time_scale: 20.0,
                 cache_cap: args.usize_flag("cache", 0),
+                cache_ttl_us: args.usize_flag("cache-ttl-us", 0) as u64,
+                cache_task_cap: args.usize_flag("cache-task-cap", 0),
+                coalesce: args.flag("coalesce").is_some(),
                 autoscale,
                 fifo_queues: args.flag("fifo").is_some(),
                 global_hotpath: args.flag("global-hotpath").is_some(),
@@ -403,6 +418,15 @@ fn main() -> Result<()> {
                 println!(
                     "chaos: ejections={} served={ok} failed={failed} lost={lost}",
                     summary.snapshot.ejections
+                );
+            }
+            if cfg.coalesce {
+                // Machine-parseable coalescing line for the CI smoke:
+                // a duplicate-heavy workload must show followers > 0.
+                let co = summary.snapshot.coalesce.clone().unwrap_or_default();
+                println!(
+                    "coalesce: leaders={} followers={} fanned_ok={} fanned_err={}",
+                    co.leaders, co.followers, co.fanned_ok, co.fanned_err
                 );
             }
             if args.flag("json").is_some() {

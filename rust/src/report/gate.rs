@@ -5,7 +5,8 @@
 //! `benches/hotpath.rs`, `benches/scenarios.rs`) already assert
 //! *absolute* floors inline (packed >= naive, elastic p99 <= fixed,
 //! interactive ratio <= 0.5, sharded plane >= 1.3x the global-lock
-//! plane, zero lost requests under a replica kill, ...).  This module adds
+//! plane, coalesced flash crowd >= 1.2x the uncoalesced plane, zero
+//! lost requests under a replica kill, ...).  This module adds
 //! the *trajectory* guarantee on top: the dimensionless **headline
 //! ratios** of a fresh bench run are diffed against committed baselines
 //! (`baselines/BENCH_*.json`) and CI fails on a regression beyond
@@ -193,6 +194,23 @@ pub fn headline_metrics(doc: &Value) -> Result<Vec<Metric>> {
                 value: f64_of(doc, "traced_over_untraced_throughput")?,
                 higher_is_better: true,
             });
+            // Single-flight coalescing vs the uncoalesced flash crowd
+            // (part 5; inline floor 1.2).  Optional for older bench
+            // documents; once the committed baseline carries it, a
+            // current run missing it fails the gate (missing-headline
+            // rule in `compare`).
+            if let Some(v) = doc.get("coalesced_over_uncoalesced_throughput") {
+                out.push(Metric {
+                    name: "hotpath.coalesced_over_uncoalesced_throughput"
+                        .to_string(),
+                    value: v
+                        .as_f64()
+                        .ok_or_else(|| anyhow!(
+                            "coalesced_over_uncoalesced_throughput is not a number"
+                        ))?,
+                    higher_is_better: true,
+                });
+            }
         }
         "scenarios" => {
             // Resilience: conservation and detection under a replica
@@ -545,6 +563,22 @@ mod tests {
             .any(|x| x.name == "hotpath.traced_over_untraced_throughput"
                 && (x.value - 0.95).abs() < 1e-9));
 
+        // The coalescing headline is optional (pre-coalescing documents
+        // still parse, as above) but extracted when present.
+        let hotpath_v5 = Value::parse(
+            r#"{"bench":"hotpath","sharded_over_global_throughput":1.8,
+                "traced_over_untraced_throughput":0.95,
+                "coalesced_over_uncoalesced_throughput":2.6}"#,
+        )
+        .unwrap();
+        let m = headline_metrics(&hotpath_v5).unwrap();
+        assert_eq!(m.len(), 3);
+        assert!(m
+            .iter()
+            .any(|x| x.name == "hotpath.coalesced_over_uncoalesced_throughput"
+                && (x.value - 2.6).abs() < 1e-9
+                && x.higher_is_better));
+
         let scenarios = Value::parse(
             r#"{"bench":"scenarios",
                 "kill":{"resolved_fraction":1.0,"ejected":1.0},
@@ -706,6 +740,10 @@ mod tests {
         assert!(report.contains("interactive_p99_ratio_classful_over_fifo"), "{report}");
         assert!(report.contains("hotpath.sharded_over_global_throughput"), "{report}");
         assert!(report.contains("hotpath.traced_over_untraced_throughput"), "{report}");
+        assert!(
+            report.contains("hotpath.coalesced_over_uncoalesced_throughput"),
+            "{report}"
+        );
         assert!(report.contains("kernels.kws.simd_over_scalar_speedup"), "{report}");
     }
 }

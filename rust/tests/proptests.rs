@@ -558,6 +558,247 @@ fn prop_chaos_every_admitted_request_gets_exactly_one_outcome() {
     }
 }
 
+#[test]
+fn prop_chaos_with_coalescing_still_yields_exactly_one_outcome_each() {
+    // The exactly-one-outcome invariant must survive single-flight
+    // coalescing: every submit here carries the *same* input, so almost
+    // all requests ride another request's flight, and a chaos-failed
+    // leader must fan its typed error to every follower — never a hang,
+    // never a duplicate outcome, and every delivered Ok accounted as
+    // either a board-served leader or a fanned copy.
+    let mut rng = SplitMix64::new(0xC0A1_E5CE);
+    for case in 0..6u64 {
+        let mut clauses: Vec<String> = Vec::new();
+        let exec_p = [0.0, 0.15, 0.4][rng.next_below(3) as usize];
+        if exec_p > 0.0 {
+            clauses.push(format!("exec={exec_p}"));
+        }
+        if rng.next_below(2) == 0 {
+            clauses.push("kill=0@3".to_string());
+        } else if rng.next_below(2) == 0 {
+            clauses.push("panic=0@4".to_string());
+        }
+        if rng.next_below(2) == 0 {
+            clauses.push("stall=200@4".to_string());
+        }
+        let spec =
+            ChaosSpec::parse(&clauses.join(","), 0xC0A1 ^ (case << 8)).unwrap();
+        let reg = Registry {
+            instances: vec![
+                BoardInstance::synthetic(0, "kws", 80.0, 10.0, 1.5),
+                BoardInstance::synthetic(1, "kws", 250.0, 50.0, 1.8),
+            ],
+        };
+        let cfg = FleetConfig {
+            queue_cap: 1024,
+            coalesce: true,
+            chaos: Some(spec),
+            health: Some(HealthConfig {
+                interval: std::time::Duration::from_millis(1),
+                max_consecutive_failures: 2,
+                ..Default::default()
+            }),
+            retry_budget: 50,
+            ..Default::default()
+        };
+        let fleet = Fleet::start(reg, cfg).unwrap();
+        let handle = fleet.handle();
+        let n = 60;
+        let x = vec![0.1f32; tinyml_codesign::data::feature_dim("kws")];
+        let mut pending = Vec::new();
+        for _ in 0..n {
+            match handle.submit("kws", x.clone()) {
+                Ok(rx) => pending.push(rx),
+                Err(e) => panic!("case {case} ({spec:?}): rejected: {e:?}"),
+            }
+        }
+        let (mut ok, mut typed_err) = (0usize, 0usize);
+        for rx in &pending {
+            match rx.recv_timeout(std::time::Duration::from_secs(10)) {
+                Ok(Ok(_)) => ok += 1,
+                Ok(Err(FleetError::Exhausted { attempts })) => {
+                    // Followers inherit the leader's terminal error with
+                    // its real attempt count; `attempts: 0` only marks a
+                    // leader refused at admission, which this queue_cap
+                    // never produces.
+                    assert!(attempts > 0, "case {case}: exhausted with 0 attempts");
+                    typed_err += 1;
+                }
+                Err(e) => panic!(
+                    "case {case} ({spec:?}): request hung or was dropped: {e:?}"
+                ),
+            }
+            assert!(
+                rx.try_recv().is_err(),
+                "case {case} ({spec:?}): duplicate outcome on one request"
+            );
+        }
+        assert_eq!(ok + typed_err, n, "case {case}");
+        let summary = fleet.shutdown();
+        let snap = &summary.snapshot;
+        let co = snap.coalesce.clone().unwrap_or_default();
+        assert_eq!(
+            snap.served as usize + co.fanned_ok as usize,
+            ok,
+            "case {case} ({spec:?}): delivered Oks must be exactly the \
+             board-served leaders plus the fanned follower copies"
+        );
+        assert_eq!(
+            co.fanned_ok + co.fanned_err,
+            co.followers,
+            "case {case} ({spec:?}): every follower must resolve exactly once"
+        );
+    }
+}
+
+/// Executor that emits a NaN with a distinctive payload in every output
+/// row: the coalescing fan-out must hand followers a *bit-identical*
+/// copy of the leader's output — NaN payload included — so a reply path
+/// that recomputed, re-quantized, or round-tripped the value through
+/// text would be caught here.
+struct NanExecutor;
+
+impl BatchExecutor for NanExecutor {
+    fn device_batch(&mut self) -> tinyml_codesign::error::Result<usize> {
+        Ok(8)
+    }
+
+    fn input_elems(&self) -> usize {
+        4
+    }
+
+    fn num_outputs(&self) -> usize {
+        2
+    }
+
+    fn execute(
+        &mut self,
+        x: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) -> tinyml_codesign::error::Result<()> {
+        for i in 0..n {
+            out[2 * i] = f32::from_bits(0x7FC0_1234);
+            out[2 * i + 1] = x[4 * i] * 3.0;
+        }
+        Ok(())
+    }
+}
+
+#[test]
+fn prop_coalesced_followers_get_bit_identical_replies_nan_included() {
+    use std::sync::{mpsc, Arc, RwLock};
+    use std::time::Instant;
+    use tinyml_codesign::fleet::coalesce::Attach;
+    use tinyml_codesign::fleet::Coalescer;
+
+    let mut rng = SplitMix64::new(0xB17F_A40B);
+    for case in 0..20u64 {
+        let n_followers = 1 + rng.next_below(7) as usize;
+        let co = Arc::new(Coalescer::new());
+        let queue = Arc::new(BoardQueue::new(64));
+        let peers: PeerList = Arc::new(RwLock::new(vec![queue.clone()]));
+        let telemetry = Arc::new(Telemetry::new(1));
+
+        // Leader + followers share one flight, registered before the
+        // worker sees the request — exactly what submit_inner does.
+        let (ltx, lrx) = mpsc::channel();
+        let key = 0x5EED ^ (case << 4);
+        let flight = match co.attach_or_lead(key, Priority::Standard, &ltx) {
+            Attach::Lead(f) => f,
+            _ => panic!("case {case}: first request must lead"),
+        };
+        let frxs: Vec<_> = (0..n_followers)
+            .map(|i| {
+                let (ftx, frx) = mpsc::channel();
+                match co.attach_or_lead(key, Priority::Standard, &ftx) {
+                    Attach::Follow => frx,
+                    _ => panic!("case {case}: duplicate {i} must follow"),
+                }
+            })
+            .collect();
+        let x0 = rng.next_gaussian() as f32;
+        let pushed = queue.try_push(FleetRequest {
+            x: vec![x0; 4],
+            reply: ltx,
+            enqueued: Instant::now(),
+            cache_key: None,
+            tag: RequestTag::default(),
+            trace: None,
+            attempts: 0,
+            failed_on: tinyml_codesign::fleet::queue::NOT_FAILED,
+            flight: Some(flight),
+        });
+        assert!(pushed.is_ok(), "case {case}: leader rejected by empty queue");
+        queue.close();
+
+        let worker = {
+            let queue = queue.clone();
+            let peers = peers.clone();
+            let co = co.clone();
+            let sink = tinyml_codesign::fleet::TelemetrySink::resolve(&telemetry, 0);
+            std::thread::spawn(move || {
+                let inst = BoardInstance::synthetic(0, "mock", 10.0, 1.0, 1.0);
+                let wcfg = WorkerConfig {
+                    batch: BatchPolicy {
+                        max_batch: 4,
+                        max_wait: std::time::Duration::from_millis(1),
+                    },
+                    work_stealing: false,
+                    pooled_replies: true,
+                    trace: None,
+                    retry: None,
+                    retry_budget: 0,
+                    health: None,
+                    drift_time_scale: None,
+                };
+                run_worker(
+                    &inst,
+                    NanExecutor,
+                    &queue,
+                    &peers,
+                    &wcfg,
+                    &sink,
+                    None,
+                    Some(co.as_ref()),
+                )
+            })
+        };
+        assert_eq!(worker.join().unwrap(), 1, "case {case}: only the leader executes");
+
+        let lead = lrx.recv().unwrap().unwrap();
+        assert!(lead.output[0].is_nan(), "case {case}: executor must emit NaN");
+        let lead_bits: Vec<u32> = lead.output.iter().map(|v| v.to_bits()).collect();
+        for (i, frx) in frxs.iter().enumerate() {
+            let fr = frx
+                .recv()
+                .expect("follower channel dropped")
+                .expect("follower got an error from a healthy leader");
+            let bits: Vec<u32> = fr.output.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(
+                bits, lead_bits,
+                "case {case}: follower {i} output not bit-identical to leader"
+            );
+            assert_eq!(fr.top1, lead.top1, "case {case}: follower {i} top1 differs");
+            assert!(
+                frx.try_recv().is_err(),
+                "case {case}: follower {i} got a second outcome"
+            );
+        }
+        let st = co.stats();
+        assert_eq!(
+            (st.leaders, st.followers),
+            (1, n_followers as u64),
+            "case {case}"
+        );
+        assert_eq!(
+            (st.fanned_ok, st.fanned_err),
+            (n_followers as u64, 0),
+            "case {case}"
+        );
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Unified execution plane: trait conformance + elastic-fleet properties.
 // ---------------------------------------------------------------------------
@@ -677,7 +918,7 @@ fn run_worker_has_no_inline_inference_path() {
                 health: None,
                 drift_time_scale: None,
             };
-            run_worker(&inst, exec, &queue, &peers, &wcfg, &sink, None)
+            run_worker(&inst, exec, &queue, &peers, &wcfg, &sink, None, None)
         })
     };
     let mut rxs = Vec::new();
@@ -692,6 +933,7 @@ fn run_worker_has_no_inline_inference_path() {
             trace: None,
             attempts: 0,
             failed_on: tinyml_codesign::fleet::queue::NOT_FAILED,
+            flight: None,
         };
         assert!(queue.try_push(req).is_ok(), "request {i} rejected");
         rxs.push((i, rx));
@@ -918,6 +1160,7 @@ fn prop_no_class_starves_under_sustained_interactive_load() {
                 trace: None,
                 attempts: 0,
                 failed_on: tinyml_codesign::fleet::queue::NOT_FAILED,
+                flight: None,
             }
         };
         // Random interleave of the lower-class preload.

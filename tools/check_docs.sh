@@ -1,0 +1,69 @@
+#!/usr/bin/env sh
+# Doc link-integrity gate: every relative markdown link and every
+# backtick-quoted repo path in the operator docs must resolve to a real
+# file, so the docs cannot silently rot as the tree moves underneath
+# them.  Scans docs/*.md plus ROADMAP.md; needs only POSIX sh + grep +
+# sed (no Rust toolchain), so it runs first in CI and on any host.
+#
+#   ./tools/check_docs.sh
+#
+# Checked, per file:
+#   1. [text](target)  -- relative links, resolved against the doc's own
+#                         directory and then the repo root; #fragment
+#                         suffixes are stripped; http(s)/mailto targets
+#                         are skipped (this is an offline image).
+#   2. `path/to/file`  -- backtick tokens that start with a known
+#                         top-level directory (rust/ benches/ baselines/
+#                         tools/ docs/ examples/) must exist on disk.
+#                         Tokens containing globs or prose metacharacters
+#                         are skipped: `baselines/BENCH_*.json` is a
+#                         pattern, not a path.
+set -eu
+cd "$(dirname "$0")/.."
+
+status=0
+docs="ROADMAP.md"
+for f in docs/*.md; do
+    [ -e "$f" ] && docs="$docs $f"
+done
+
+for doc in $docs; do
+    dir=$(dirname "$doc")
+
+    # Markdown link targets.  Doc links in this repo never contain
+    # spaces, so plain word-splitting of the extracted list is safe.
+    links=$(grep -o '](  *[^)]*)\|]([^)]*)' "$doc" | sed 's/^]( *//; s/)$//' || true)
+    for target in $links; do
+        case "$target" in
+            http://* | https://* | mailto:* | '#'*) continue ;;
+        esac
+        path=${target%%#*}
+        [ -n "$path" ] || continue
+        if [ ! -e "$dir/$path" ] && [ ! -e "$path" ]; then
+            echo "check_docs: $doc: broken link ($target)" >&2
+            status=1
+        fi
+    done
+
+    # Backtick-quoted repo paths.
+    refs=$(grep -o '`[^` ]*`' "$doc" | tr -d '\140' || true)
+    for ref in $refs; do
+        case "$ref" in
+            rust/* | benches/* | baselines/* | tools/* | docs/* | examples/*) ;;
+            *) continue ;;
+        esac
+        case "$ref" in
+            *'*'* | *'{'* | *'('* | *'<'* | *..*) continue ;;
+        esac
+        if [ ! -e "$ref" ]; then
+            echo "check_docs: $doc: dangling path reference ($ref)" >&2
+            status=1
+        fi
+    done
+done
+
+if [ "$status" -ne 0 ]; then
+    echo "check_docs: FAILED" >&2
+    exit 1
+fi
+echo "check_docs: OK ($(echo "$docs" | wc -w | tr -d ' ') files checked)"
