@@ -27,6 +27,21 @@
 //! ejection) is emitted for trend-watching but not gated — it is an
 //! absolute timing, and the gate holds only dimensionless ratios.
 //!
+//! **Scenario 4 — hedging under an undetectable brownout.**  Two
+//! *equal* KWS replicas; `slow=4x0` stretches replica 0's device hold
+//! 4x, and health is held inert (all three signals disabled) so the
+//! sick board stays in the fleet for the whole run — tail-latency
+//! hedging is the only relief.  Closed-loop requests are timed
+//! client-side, once with hedging off and once with `hedge_p99` armed:
+//! the drift-corrected estimate on the browned-out board crosses the
+//! class-p99 threshold, a duplicate leg lands on the healthy sibling,
+//! and the first terminal outcome wins while the loser is discarded at
+//! its next stage boundary.  Every request also carries a generous
+//! deadline so the whole deadline plane runs; `executed_expired` must
+//! stay 0 (a board must never burn a window on a request nobody can
+//! use).  Headline: `hedged_p99_over_unhedged` (lower is better,
+//! ceiling 0.6).
+//!
 //! Writes `BENCH_scenarios.json` the way `benches/fleet.rs` writes
 //! `BENCH_fleet.json`; the bench-gate holds the headline ratios as a CI
 //! floor.  Every fault is seeded (`ChaosSpec` + SplitMix64 per replica)
@@ -44,6 +59,11 @@ use tinyml_codesign::report::json::{num, obj, s, Value};
 const TIME_SCALE: f64 = 20.0;
 /// A reply that takes this long is a lost request, not a slow one.
 const RECV_TIMEOUT: Duration = Duration::from_secs(10);
+/// Scenario 4's per-request deadline: generous (closed-loop latencies
+/// sit well under it, so nothing sheds or expires) but live — every
+/// request runs the full stamp/triage path and the bench asserts no
+/// expired request ever reached a board.
+const DEADLINE_US: u64 = 150_000;
 
 #[path = "util.rs"]
 mod util;
@@ -261,11 +281,102 @@ fn run_flash_crowd(trickle: usize, burst: usize) -> FlashCrowdResult {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Scenario 4: hedging under an undetectable brownout.
+// ---------------------------------------------------------------------------
+
+/// Two *equal* KWS replicas (200/40 µs model): the router's flow model
+/// cannot tell them apart — and with health inert, only drift-corrected
+/// hedging can route a caller around the browned-out one.
+fn equal_replica_registry() -> Registry {
+    Registry {
+        instances: vec![
+            BoardInstance::synthetic(0, "kws", 200.0, 40.0, 1.2),
+            BoardInstance::synthetic(1, "kws", 200.0, 40.0, 1.2),
+        ],
+    }
+}
+
+struct HedgeLeg {
+    p50_us: f64,
+    p99_us: f64,
+    hedged: u64,
+    wins: u64,
+    cancelled: u64,
+    shed_submit: u64,
+    executed_expired: u64,
+}
+
+/// Nearest-rank percentile over client-side latencies.
+fn percentile_us(sorted: &[f64], q: f64) -> f64 {
+    let idx = ((sorted.len() as f64 * q).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+/// One closed-loop leg: `warmup` untimed requests seed the hedge
+/// controller's span histogram and per-board drift EWMA (they all land
+/// on the browned-out board — equal flow models tie-break to id 0),
+/// then `requests` timed ones.  `hedge_p99 == 0.0` is the unhedged
+/// control; the fleet config is otherwise identical.
+fn run_hedge_leg(warmup: usize, requests: usize, hedge_p99: f64) -> HedgeLeg {
+    let chaos = ChaosSpec::parse("slow=4x0", 0x4ED6E).unwrap();
+    let cfg = FleetConfig {
+        policy: Policy::LeastLoaded,
+        queue_cap: 1024,
+        time_scale: TIME_SCALE,
+        chaos: Some(chaos),
+        // Inert health — chaos would otherwise enable it with defaults
+        // and the drift signal would eject the browned-out board.  This
+        // scenario holds the fleet degraded on purpose: ejection is the
+        // *permanent* remedy benched by scenario 2; hedging is the
+        // reversible one and must carry the tail alone here.
+        health: Some(HealthConfig {
+            max_consecutive_failures: 0,
+            max_drift_ratio: 0.0,
+            stall_timeout: Duration::ZERO,
+            ..Default::default()
+        }),
+        trace_sample: 1,
+        deadline_us: DEADLINE_US,
+        hedge_p99,
+        ..Default::default()
+    };
+    let fleet = Fleet::start(equal_replica_registry(), cfg).unwrap();
+    let handle = fleet.handle();
+    let x = vec![0.2f32; tinyml_codesign::data::feature_dim("kws")];
+    let mut latencies = Vec::with_capacity(requests);
+    for i in 0..warmup + requests {
+        let t0 = Instant::now();
+        let rx = handle.submit("kws", x.clone()).expect("closed-loop submit refused");
+        let reply = rx.recv_timeout(RECV_TIMEOUT).expect("closed-loop reply lost");
+        reply.expect("closed-loop request resolved to a typed failure");
+        if i >= warmup {
+            latencies.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+    }
+    let summary = fleet.shutdown();
+    latencies.sort_by(|a, b| a.total_cmp(b));
+    let h = summary.snapshot.hedge.unwrap_or_default();
+    let d = summary.snapshot.deadline;
+    HedgeLeg {
+        p50_us: percentile_us(&latencies, 0.50),
+        p99_us: percentile_us(&latencies, 0.99),
+        hedged: h.hedged,
+        wins: h.wins,
+        cancelled: h.cancelled,
+        shed_submit: d.shed_submit,
+        executed_expired: d.executed_expired,
+    }
+}
+
 fn main() {
     let quick = quick();
     let kill_requests = if quick { 80 } else { 160 };
     let brownout_requests = if quick { 80 } else { 160 };
     let (trickle, burst) = if quick { (30, 120) } else { (40, 240) };
+    // Warmup must exceed the hedge controller's seed floor (8 spans)
+    // with room for the drift EWMA to converge on the 4x slowdown.
+    let (hedge_warmup, hedge_requests) = if quick { (16, 60) } else { (16, 120) };
 
     println!(
         "[bench] scenario 1: kill=fastest@3 over {kill_requests} requests \
@@ -314,6 +425,24 @@ fn main() {
         crowd.ok, crowd.burst, crowd.failed, crowd.lost, crowd.time_to_recover_ms
     );
 
+    println!(
+        "\n[bench] scenario 4: slow=4x0 with health inert, hedged vs unhedged \
+         ({hedge_requests} closed-loop requests each, {hedge_warmup} warmup, \
+         deadline {DEADLINE_US} us)"
+    );
+    let unhedged = run_hedge_leg(hedge_warmup, hedge_requests, 0.0);
+    let hedged = run_hedge_leg(hedge_warmup, hedge_requests, 0.7);
+    let hedge_ratio = hedged.p99_us / unhedged.p99_us.max(1e-9);
+    println!(
+        "[bench] unhedged  : p50 {:>9.1} us, p99 {:>9.1} us",
+        unhedged.p50_us, unhedged.p99_us
+    );
+    println!(
+        "[bench] hedged    : p50 {:>9.1} us, p99 {:>9.1} us ({} legs, {} wins, \
+         {} losers cancelled) -> ratio {hedge_ratio:.2} (ceiling 0.6)",
+        hedged.p50_us, hedged.p99_us, hedged.hedged, hedged.wins, hedged.cancelled
+    );
+
     let kill_resolved_fraction = kill.ok as f64 / kill.submitted as f64;
     let kill_ejected = if kill.ejections >= 1 { 1.0 } else { 0.0 };
     let doc = obj(vec![
@@ -356,6 +485,27 @@ fn main() {
                 ("recovery_served_fraction", num(crowd.served_fraction)),
             ]),
         ),
+        (
+            "hedge",
+            obj(vec![
+                ("requests", num(hedge_requests as f64)),
+                ("warmup", num(hedge_warmup as f64)),
+                ("deadline_us", num(DEADLINE_US as f64)),
+                ("unhedged_p50_us", num(unhedged.p50_us)),
+                ("unhedged_p99_us", num(unhedged.p99_us)),
+                ("hedged_p50_us", num(hedged.p50_us)),
+                ("hedged_p99_us", num(hedged.p99_us)),
+                ("hedged_legs", num(hedged.hedged as f64)),
+                ("hedge_wins", num(hedged.wins as f64)),
+                ("hedge_cancelled", num(hedged.cancelled as f64)),
+                ("shed_submit", num((unhedged.shed_submit + hedged.shed_submit) as f64)),
+                (
+                    "executed_expired",
+                    num((unhedged.executed_expired + hedged.executed_expired) as f64),
+                ),
+                ("hedged_p99_over_unhedged", num(hedge_ratio)),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_scenarios.json", doc.to_json())
         .expect("write BENCH_scenarios.json");
@@ -396,10 +546,29 @@ fn main() {
         "degraded fleet served only {:.3} of the flash crowd",
         crowd.served_fraction
     );
+    // Scenario 4: hedging must actually fire, the duplicate leg must
+    // actually win, and the deadline plane must never let an expired
+    // request burn a board window — in either leg.
+    assert_eq!(unhedged.hedged, 0, "the control leg must not hedge");
+    assert!(hedged.hedged > 0, "the armed leg never hedged a request");
+    assert!(hedged.wins > 0, "no duplicate leg ever won its race");
+    assert_eq!(
+        unhedged.executed_expired + hedged.executed_expired,
+        0,
+        "a board executed a request that was already past its deadline"
+    );
+    assert!(
+        hedge_ratio <= 0.6,
+        "hedged p99 {:.1} us must stay within 0.6x unhedged {:.1} us \
+         (ratio {hedge_ratio:.2})",
+        hedged.p99_us,
+        unhedged.p99_us
+    );
     println!(
         "[bench] OK: kill resolved {}/{} with {} ejection(s); brownout p99 ratio \
          {p99_ratio:.2} <= 8.0 with a drift ejection; flash crowd served \
-         {:.3} >= 0.95",
-        kill.ok, kill.submitted, kill.ejections, crowd.served_fraction
+         {:.3} >= 0.95; hedged p99 ratio {hedge_ratio:.2} <= 0.6 with \
+         {} wins and 0 executed-expired",
+        kill.ok, kill.submitted, kill.ejections, crowd.served_fraction, hedged.wins
     );
 }

@@ -99,6 +99,20 @@ cargo run --release -q -- fleet --coalesce --cache 256 --requests 200 \
            if (line !~ /fanned_err=0$/)   { print "coalesce smoke: follower fan-out failed"; exit 1 }
          }'
 
+# Deadline smoke: a browned-out fleet run with per-request deadlines and
+# hedging armed must keep dead work off the boards — the machine-parseable
+# `deadline:` line must show executed_expired=0 (whatever expires is
+# discarded at a stage boundary, never executed).
+echo "==> fleet --chaos slow=4x0 --deadline-us 80000 --hedge-p99 2.0 | dead-work check"
+cargo run --release -q -- fleet --chaos slow=4x0 --deadline-us 80000 --hedge-p99 2.0 \
+    --requests 200 \
+  | awk '/^deadline: /{ line=$0 }
+         END {
+           if (line == "") { print "no deadline: line in fleet output"; exit 1 }
+           print "==> " line
+           if (line !~ /executed_expired=0$/) { print "deadline smoke: a board executed expired work"; exit 1 }
+         }'
+
 # Tracing smoke: a sampled fleet run must round-trip (stage histograms,
 # drift, and shed reasons ride the normal report), and the event-ring
 # dump must be valid JSONL — every non-empty line parses as one strict

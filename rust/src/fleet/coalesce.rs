@@ -25,10 +25,16 @@
 //!   the caller's reply sender is enrolled as a **follower**
 //!   ([`Attach::Follow`]) and the submit returns immediately — the
 //!   request never touches the router.
-//! * an open flight led by a *less* urgent class → [`Attach::Solo`]:
-//!   an Interactive request must not wait behind a Batch leader's
-//!   queue position, so it proceeds uncoalesced (and simply does not
-//!   coalesce with anyone — the key is occupied).
+//! * an open flight led by a *less* urgent class → the caller is still
+//!   enrolled, but the flight is **upgraded** to the caller's class
+//!   ([`Attach::FollowUpgraded`]): the submit path re-tags the queued
+//!   leader in place ([`super::queue::BoardQueue::promote_flight`]), so
+//!   an Interactive duplicate lifts a Batch leader to the interactive
+//!   pickup plane instead of burning a second execution.
+//! * an open flight already carrying [`MAX_FOLLOWERS_PER_FLIGHT`]
+//!   followers → [`Attach::Solo`]: the overflow request falls through
+//!   to a normal queued submit, bounding the fan loop one worker runs
+//!   at the terminal outcome.
 //!
 //! **Leader/follower lifecycle and failure semantics.**  Exactly one
 //! terminal event finishes a flight, and whoever triggers it calls
@@ -65,7 +71,7 @@ use super::queue::Priority;
 use super::FleetError;
 use crate::coordinator::engine::Reply;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
 /// Reply-channel sender type shared with [`super::FleetRequest`].
@@ -75,6 +81,12 @@ pub type ReplySender = mpsc::Sender<std::result::Result<Reply, FleetError>>;
 /// entry per *distinct in-flight key*, so it stays small — striping is
 /// about lock traffic under flash-crowd submit storms, not capacity).
 const STRIPES: usize = 16;
+
+/// Follower bound per flight.  One mega-flight fanning thousands of
+/// copies would serialize the winning worker on the fan loop; past this
+/// many followers, further duplicates go [`Attach::Solo`] and queue
+/// normally.
+pub const MAX_FOLLOWERS_PER_FLIGHT: usize = 64;
 
 /// Counters for telemetry (`coalesce` block in the snapshot JSON).
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -87,6 +99,11 @@ pub struct CoalesceStats {
     pub fanned_ok: u64,
     /// Follower errors fanned out from failed/aborted leaders.
     pub fanned_err: u64,
+    /// Duplicates forced solo because their flight was already at
+    /// [`MAX_FOLLOWERS_PER_FLIGHT`].
+    pub overflow: u64,
+    /// Flights lifted to a stronger class by a more urgent duplicate.
+    pub upgrades: u64,
 }
 
 enum FlightState {
@@ -100,7 +117,15 @@ enum FlightState {
 pub struct Flight {
     key: u64,
     state: Mutex<FlightState>,
+    /// Slot id of the queue the leader leg was pushed to
+    /// ([`NO_BOARD`] until known) — lets a class upgrade find and
+    /// promote the queued leader without a fleet-wide scan.
+    board: AtomicUsize,
 }
+
+/// Sentinel for [`Flight::board`]: the leader has not been pushed yet
+/// (or never will be — a refused or standalone flight).
+const NO_BOARD: usize = usize::MAX;
 
 impl FlightState {
     fn open(leader_class: Priority) -> FlightState {
@@ -118,6 +143,58 @@ impl Flight {
             FlightState::Done => Vec::new(),
         }
     }
+
+    /// A free-standing flight that is **not** registered in any
+    /// coalescer map: the hedged-request racer.  Both hedge legs carry
+    /// it; the caller's real sender rides as its only follower, so the
+    /// first leg to reach a terminal outcome resolves the caller and
+    /// the loser sees `Done` at its next stage boundary.  `finish` /
+    /// `fan_err` work unchanged (the pointer-identity deregister guard
+    /// simply never fires).
+    pub fn standalone(leader_class: Priority) -> Arc<Flight> {
+        Arc::new(Flight {
+            key: u64::MAX,
+            state: Mutex::new(FlightState::open(leader_class)),
+            board: AtomicUsize::new(NO_BOARD),
+        })
+    }
+
+    /// Record which board queue the leader leg landed in (submit path,
+    /// right after a successful `try_push`).
+    pub fn note_board(&self, instance: usize) {
+        self.board.store(instance, Ordering::Relaxed);
+    }
+
+    /// The leader's board, if it has been pushed.
+    pub fn board(&self) -> Option<usize> {
+        match self.board.load(Ordering::Relaxed) {
+            NO_BOARD => None,
+            i => Some(i),
+        }
+    }
+
+    /// `true` once a terminal outcome has resolved this flight.  Hedge
+    /// losers poll this at stage boundaries (dequeue, window-close) and
+    /// discard themselves instead of executing.
+    pub fn is_done(&self) -> bool {
+        matches!(*self.state.lock().unwrap(), FlightState::Done)
+    }
+
+    /// Enrol one more follower sender; `false` (no enrolment) once the
+    /// flight is `Done` or full.  The hedging submit path uses this to
+    /// park the caller's real sender on the race flight — it bumps the
+    /// same fan accounting as a coalesced follower so every enrolled
+    /// sender still maps to exactly one fanned outcome.
+    fn enroll(&self, tx: &ReplySender) -> bool {
+        let mut st = self.state.lock().unwrap();
+        match &mut *st {
+            FlightState::Open { followers, .. } if followers.len() < MAX_FOLLOWERS_PER_FLIGHT => {
+                followers.push(tx.clone());
+                true
+            }
+            _ => false,
+        }
+    }
 }
 
 /// What [`Coalescer::attach_or_lead`] decided for one submitted miss.
@@ -128,8 +205,14 @@ pub enum Attach {
     /// Caller's sender was enrolled on an open flight; its receiver
     /// resolves when the leader's outcome fans out.  Do not route.
     Follow,
-    /// An open flight exists but its leader's class is less urgent than
-    /// the caller: proceed uncoalesced.
+    /// Enrolled like [`Attach::Follow`], but the caller's class was
+    /// more urgent than the leader's, so the flight was lifted to the
+    /// caller's class — the submit path should promote the queued
+    /// leader ([`super::queue::BoardQueue::promote_flight`]) on the
+    /// board recorded by [`Flight::board`].
+    FollowUpgraded(Arc<Flight>),
+    /// An open flight exists but is already at
+    /// [`MAX_FOLLOWERS_PER_FLIGHT`]: proceed uncoalesced.
     Solo,
 }
 
@@ -140,6 +223,8 @@ pub struct Coalescer {
     followers: AtomicU64,
     fanned_ok: AtomicU64,
     fanned_err: AtomicU64,
+    overflow: AtomicU64,
+    upgrades: AtomicU64,
 }
 
 impl Default for Coalescer {
@@ -156,6 +241,8 @@ impl Coalescer {
             followers: AtomicU64::new(0),
             fanned_ok: AtomicU64::new(0),
             fanned_err: AtomicU64::new(0),
+            overflow: AtomicU64::new(0),
+            upgrades: AtomicU64::new(0),
         }
     }
 
@@ -165,31 +252,59 @@ impl Coalescer {
     }
 
     /// Decide what a cache-missing submit does for `key` — see the
-    /// module docs for the state machine.  Compatibility is "the
-    /// leader's class is the same or more urgent than `class`": a
-    /// follower never waits behind a lazier leader's queue position.
+    /// module docs for the state machine.  A follower never waits
+    /// behind a lazier leader's queue position: instead of soloing, a
+    /// more urgent duplicate lifts the whole flight to its class.
     pub fn attach_or_lead(&self, key: u64, class: Priority, tx: &ReplySender) -> Attach {
         let mut map = self.stripe(key).lock().unwrap();
         if let Some(f) = map.get(&key) {
             let mut st = f.state.lock().unwrap();
             match &mut *st {
                 FlightState::Open { followers, leader_class } => {
+                    if followers.len() >= MAX_FOLLOWERS_PER_FLIGHT {
+                        self.overflow.fetch_add(1, Ordering::Relaxed);
+                        return Attach::Solo;
+                    }
+                    followers.push(tx.clone());
+                    self.followers.fetch_add(1, Ordering::Relaxed);
                     if leader_class.idx() <= class.idx() {
-                        followers.push(tx.clone());
-                        self.followers.fetch_add(1, Ordering::Relaxed);
                         return Attach::Follow;
                     }
-                    return Attach::Solo;
+                    // Stronger class behind a lazier leader: enrol and
+                    // lift the flight so the queued leader can be
+                    // promoted to the caller's pickup plane.
+                    *leader_class = class;
+                    self.upgrades.fetch_add(1, Ordering::Relaxed);
+                    let f = f.clone();
+                    drop(st);
+                    return Attach::FollowUpgraded(f);
                 }
                 // Done but not yet (or never) deregistered: stale —
                 // fall through and lead a successor flight.
                 FlightState::Done => {}
             }
         }
-        let f = Arc::new(Flight { key, state: Mutex::new(FlightState::open(class)) });
+        let f = Arc::new(Flight {
+            key,
+            state: Mutex::new(FlightState::open(class)),
+            board: AtomicUsize::new(NO_BOARD),
+        });
         map.insert(key, f.clone());
         self.leaders.fetch_add(1, Ordering::Relaxed);
         Attach::Lead(f)
+    }
+
+    /// Enrol `tx` as one more follower on `flight`, with the same fan
+    /// accounting as [`Self::attach_or_lead`]'s `Follow` path.  `false`
+    /// when the flight is already `Done` or full — the caller must then
+    /// resolve `tx` through some other path.  The hedging submit uses
+    /// this to park the caller's real sender on the race flight.
+    pub fn enroll_follower(&self, flight: &Arc<Flight>, tx: &ReplySender) -> bool {
+        let enrolled = flight.enroll(tx);
+        if enrolled {
+            self.followers.fetch_add(1, Ordering::Relaxed);
+        }
+        enrolled
     }
 
     /// Terminally resolve `flight`: deregister it (pointer-identity
@@ -232,6 +347,8 @@ impl Coalescer {
             followers: self.followers.load(Ordering::Relaxed),
             fanned_ok: self.fanned_ok.load(Ordering::Relaxed),
             fanned_err: self.fanned_err.load(Ordering::Relaxed),
+            overflow: self.overflow.load(Ordering::Relaxed),
+            upgrades: self.upgrades.load(Ordering::Relaxed),
         }
     }
 }
@@ -283,31 +400,107 @@ mod tests {
             assert_eq!(&got.output[..], &[1.0, 2.0]);
         }
         let s = co.stats();
-        assert_eq!(s, CoalesceStats { leaders: 2, followers: 2, fanned_ok: 2, fanned_err: 0 });
+        assert_eq!(
+            s,
+            CoalesceStats {
+                leaders: 2,
+                followers: 2,
+                fanned_ok: 2,
+                fanned_err: 0,
+                ..CoalesceStats::default()
+            }
+        );
         // The key is free again: the next identical request leads.
         let (ntx, _nrx) = chan();
         assert!(matches!(co.attach_or_lead(key, Priority::Standard, &ntx), Attach::Lead(_)));
     }
 
     #[test]
-    fn more_urgent_request_goes_solo_instead_of_waiting_on_a_lazy_leader() {
+    fn more_urgent_duplicate_upgrades_the_flight_instead_of_soloing() {
         let co = Coalescer::new();
         let (btx, _brx) = chan();
-        let _flight = match co.attach_or_lead(7, Priority::Batch, &btx) {
+        let flight = match co.attach_or_lead(7, Priority::Batch, &btx) {
             Attach::Lead(f) => f,
             _ => panic!("must lead"),
         };
-        // Interactive behind a Batch leader: solo, never enrolled.
+        // Interactive behind a Batch leader: enrolled, flight lifted.
         let (itx, irx) = chan();
-        assert!(matches!(co.attach_or_lead(7, Priority::Interactive, &itx), Attach::Solo));
-        assert!(irx.try_recv().is_err());
-        // The reverse composition coalesces: Interactive leader,
-        // Standard/Batch followers.
+        match co.attach_or_lead(7, Priority::Interactive, &itx) {
+            Attach::FollowUpgraded(f) => assert!(Arc::ptr_eq(&f, &flight)),
+            _ => panic!("urgent duplicate must upgrade-and-follow"),
+        }
+        assert_eq!(co.stats().upgrades, 1);
+        // The flight now reads as Interactive-led: a later Interactive
+        // duplicate follows plainly, no second upgrade.
+        let (i2tx, _i2rx) = chan();
+        assert!(matches!(co.attach_or_lead(7, Priority::Interactive, &i2tx), Attach::Follow));
+        assert_eq!(co.stats().upgrades, 1);
+        // Both enrolled senders resolve on the fan like any follower.
+        co.fan_err(&flight, &FleetError::Exhausted { attempts: 1 });
+        assert!(matches!(irx.recv().unwrap(), Err(FleetError::Exhausted { .. })));
+        assert_eq!(co.stats().fanned_err, 2);
+        // The same-or-more-urgent leader composition still coalesces
+        // without an upgrade: Interactive leader, Batch follower.
         let (ltx, _lrx) = chan();
         assert!(matches!(co.attach_or_lead(9, Priority::Interactive, &ltx), Attach::Lead(_)));
         let (stx, _srx) = chan();
         assert!(matches!(co.attach_or_lead(9, Priority::Batch, &stx), Attach::Follow));
-        assert_eq!(co.stats().followers, 1);
+    }
+
+    #[test]
+    fn full_flight_overflows_to_solo() {
+        let co = Coalescer::new();
+        let (ltx, _lrx) = chan();
+        let flight = match co.attach_or_lead(3, Priority::Standard, &ltx) {
+            Attach::Lead(f) => f,
+            _ => panic!("must lead"),
+        };
+        let mut rxs = Vec::new();
+        for _ in 0..MAX_FOLLOWERS_PER_FLIGHT {
+            let (tx, rx) = chan();
+            assert!(matches!(co.attach_or_lead(3, Priority::Standard, &tx), Attach::Follow));
+            rxs.push(rx);
+        }
+        // One past the cap: solo, not enrolled — and an Interactive
+        // duplicate cannot upgrade a full flight either.
+        let (otx, orx) = chan();
+        assert!(matches!(co.attach_or_lead(3, Priority::Standard, &otx), Attach::Solo));
+        assert!(matches!(co.attach_or_lead(3, Priority::Interactive, &otx), Attach::Solo));
+        assert_eq!(co.stats().overflow, 2);
+        assert_eq!(co.stats().followers, MAX_FOLLOWERS_PER_FLIGHT as u64);
+        co.fan_err(&flight, &FleetError::Exhausted { attempts: 0 });
+        for rx in &rxs {
+            assert!(rx.recv().unwrap().is_err());
+        }
+        assert!(orx.try_recv().is_err(), "overflow sender was never enrolled");
+    }
+
+    #[test]
+    fn standalone_flight_races_first_terminal_outcome_wins() {
+        // The hedge shape: a free-standing flight, the caller's sender
+        // as its only follower, two legs racing to finish it.
+        let co = Coalescer::new();
+        let flight = Flight::standalone(Priority::Standard);
+        assert!(flight.board().is_none());
+        flight.note_board(1);
+        assert_eq!(flight.board(), Some(1));
+        let (caller_tx, caller_rx) = chan();
+        assert!(co.enroll_follower(&flight, &caller_tx));
+        assert!(!flight.is_done());
+        // Winner leg finishes and fans.
+        let followers = co.finish(&flight);
+        assert_eq!(followers.len(), 1);
+        co.note_fanned_ok(followers.len() as u64);
+        for tx in followers {
+            let _ = tx.send(Ok(reply(vec![3.0])));
+        }
+        assert_eq!(&caller_rx.recv().unwrap().unwrap().output[..], &[3.0]);
+        // Loser leg sees Done, gets nothing to fan, cannot re-enrol.
+        assert!(flight.is_done());
+        assert_eq!(co.finish(&flight).len(), 0);
+        let (late_tx, _late_rx) = chan();
+        assert!(!co.enroll_follower(&flight, &late_tx));
+        assert!(caller_rx.try_recv().is_err(), "exactly one outcome for the caller");
     }
 
     #[test]

@@ -30,8 +30,9 @@
 //! flow through the retry channel back to the router (see
 //! [`super::FleetError`]).
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Health-controller knobs.  Defaults suit time-scaled simulation
@@ -125,6 +126,166 @@ impl BoardHealth {
 impl Default for BoardHealth {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-replica circuit breaker
+// ---------------------------------------------------------------------------
+
+/// Circuit-breaker knobs — the *reversible* complement to ejection.
+/// Ejection is for replicas that are gone for good (dead device,
+/// persistent brownout); the breaker handles transient failure storms
+/// (chaos `exec=P`, a flaky link): trip open on a failure-rate window,
+/// cool down masked from routing, then re-admit through half-open probe
+/// batches instead of paying a permanent replica.
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerConfig {
+    /// Rolling batch-outcome window the failure rate is computed over;
+    /// the breaker only trips once the window is full, so a single
+    /// early failure cannot open it.
+    pub window: usize,
+    /// Trip open when the failed fraction of the window reaches this.
+    pub trip_failure_rate: f64,
+    /// How long an open breaker masks the replica from routing before
+    /// it goes half-open.
+    pub cooldown: Duration,
+    /// Consecutive successful probe batches a half-open breaker needs
+    /// to close; any probe failure re-opens it for another cooldown.
+    pub probe_batches: u32,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        // Sized for time-scaled simulation like HealthConfig: windows
+        // of ms-class batches, cooldowns a few sampling ticks long.
+        BreakerConfig {
+            window: 16,
+            trip_failure_rate: 0.5,
+            cooldown: Duration::from_millis(5),
+            probe_batches: 4,
+        }
+    }
+}
+
+/// A state transition worth a trace event, returned by
+/// [`CircuitBreaker::note_batch`] so the worker can log it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerTransition {
+    /// Closed → Open: the window's failure rate crossed the threshold.
+    Tripped { failure_rate_pct: u64 },
+    /// HalfOpen → Closed: all probe batches succeeded.
+    Restored,
+}
+
+enum BreakerState {
+    /// Routable; tracking a rolling outcome window.
+    Closed { window: VecDeque<bool>, failures: usize },
+    /// Masked from routing until `since + cooldown`.
+    Open { since: Instant },
+    /// Routable again, on probation: counting consecutive successes.
+    HalfOpen { successes: u32 },
+}
+
+/// Per-replica breaker.  The worker reports batch outcomes
+/// ([`Self::note_batch`]); the submit path and retry pump consult
+/// [`Self::allows`] when building routing depths.  Every method takes
+/// an explicit `now` so the trip/cooldown/probe ladder is unit-testable
+/// without sleeping.
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    state: Mutex<BreakerState>,
+    trips: AtomicU64,
+}
+
+impl CircuitBreaker {
+    pub fn new(cfg: BreakerConfig) -> Self {
+        CircuitBreaker {
+            cfg,
+            state: Mutex::new(BreakerState::Closed { window: VecDeque::new(), failures: 0 }),
+            trips: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one batch outcome and run the state machine.  Outcomes
+    /// landing while the breaker is open (stragglers admitted before
+    /// the trip) are ignored — they predate the mask.
+    pub fn note_batch(&self, ok: bool, now: Instant) -> Option<BreakerTransition> {
+        let mut st = self.state.lock().unwrap();
+        match &mut *st {
+            BreakerState::Closed { window, failures } => {
+                window.push_back(ok);
+                if !ok {
+                    *failures += 1;
+                }
+                if window.len() > self.cfg.window {
+                    if let Some(evicted) = window.pop_front() {
+                        if !evicted {
+                            *failures -= 1;
+                        }
+                    }
+                }
+                if window.len() >= self.cfg.window && self.cfg.window > 0 {
+                    let rate = *failures as f64 / window.len() as f64;
+                    if rate >= self.cfg.trip_failure_rate {
+                        *st = BreakerState::Open { since: now };
+                        self.trips.fetch_add(1, Ordering::Relaxed);
+                        return Some(BreakerTransition::Tripped {
+                            failure_rate_pct: (rate * 100.0) as u64,
+                        });
+                    }
+                }
+                None
+            }
+            BreakerState::Open { .. } => None,
+            BreakerState::HalfOpen { successes } => {
+                if ok {
+                    *successes += 1;
+                    if *successes >= self.cfg.probe_batches {
+                        *st = BreakerState::Closed { window: VecDeque::new(), failures: 0 };
+                        return Some(BreakerTransition::Restored);
+                    }
+                    None
+                } else {
+                    // A failed probe restarts the cooldown; no event —
+                    // the replica was never declared routable-healthy.
+                    *st = BreakerState::Open { since: now };
+                    None
+                }
+            }
+        }
+    }
+
+    /// `true` when the replica may take new work.  An open breaker
+    /// whose cooldown has elapsed flips to half-open here (the check is
+    /// the natural "first request after cooldown" edge).
+    pub fn allows(&self, now: Instant) -> bool {
+        let mut st = self.state.lock().unwrap();
+        match &*st {
+            BreakerState::Closed { .. } | BreakerState::HalfOpen { .. } => true,
+            BreakerState::Open { since } => {
+                if now.duration_since(*since) >= self.cfg.cooldown {
+                    *st = BreakerState::HalfOpen { successes: 0 };
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Times this breaker has tripped open (monotone; telemetry).
+    pub fn trips(&self) -> u64 {
+        self.trips.load(Ordering::Relaxed)
+    }
+
+    /// Current state name for reports: `closed` / `open` / `half-open`.
+    pub fn state_name(&self) -> &'static str {
+        match &*self.state.lock().unwrap() {
+            BreakerState::Closed { .. } => "closed",
+            BreakerState::Open { .. } => "open",
+            BreakerState::HalfOpen { .. } => "half-open",
+        }
     }
 }
 
@@ -228,6 +389,84 @@ mod tests {
         h.note_failure();
         assert_eq!(h.consecutive_failures(), 1);
         assert!(h.beat_age() < Duration::from_secs(1));
+    }
+
+    fn probe_cfg() -> BreakerConfig {
+        BreakerConfig {
+            window: 4,
+            trip_failure_rate: 0.5,
+            cooldown: Duration::from_millis(10),
+            probe_batches: 2,
+        }
+    }
+
+    #[test]
+    fn breaker_trips_only_on_a_full_window_failure_rate() {
+        let b = CircuitBreaker::new(probe_cfg());
+        let t0 = Instant::now();
+        // Three failures straight off: window not full, no trip.
+        assert_eq!(b.note_batch(false, t0), None);
+        assert_eq!(b.note_batch(false, t0), None);
+        assert_eq!(b.note_batch(false, t0), None);
+        assert!(b.allows(t0), "not tripped below a full window");
+        // Fourth outcome fills the window at 75% failures: trip.
+        assert_eq!(
+            b.note_batch(true, t0),
+            Some(BreakerTransition::Tripped { failure_rate_pct: 75 })
+        );
+        assert_eq!(b.state_name(), "open");
+        assert_eq!(b.trips(), 1);
+        assert!(!b.allows(t0), "open breaker masks the replica");
+    }
+
+    #[test]
+    fn breaker_half_opens_after_cooldown_and_closes_on_probe_successes() {
+        let b = CircuitBreaker::new(probe_cfg());
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            b.note_batch(false, t0);
+        }
+        assert!(!b.allows(t0 + Duration::from_millis(9)), "cooldown still running");
+        assert!(b.allows(t0 + Duration::from_millis(10)), "cooldown elapsed: half-open");
+        assert_eq!(b.state_name(), "half-open");
+        let t1 = t0 + Duration::from_millis(11);
+        assert_eq!(b.note_batch(true, t1), None, "one probe is not enough");
+        assert_eq!(b.note_batch(true, t1), Some(BreakerTransition::Restored));
+        assert_eq!(b.state_name(), "closed");
+        // The window restarted: old failures cannot re-trip it.
+        assert_eq!(b.note_batch(false, t1), None);
+        assert!(b.allows(t1));
+        assert_eq!(b.trips(), 1);
+    }
+
+    #[test]
+    fn failed_probe_reopens_for_another_cooldown() {
+        let b = CircuitBreaker::new(probe_cfg());
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            b.note_batch(false, t0);
+        }
+        let t1 = t0 + Duration::from_millis(10);
+        assert!(b.allows(t1));
+        assert_eq!(b.note_batch(false, t1), None, "failed probe: silent reopen");
+        assert_eq!(b.state_name(), "open");
+        assert!(!b.allows(t1 + Duration::from_millis(9)), "fresh cooldown from the probe");
+        assert!(b.allows(t1 + Duration::from_millis(10)));
+        assert_eq!(b.trips(), 1, "a probe failure is not a new trip");
+    }
+
+    #[test]
+    fn open_breaker_ignores_straggler_outcomes() {
+        let b = CircuitBreaker::new(probe_cfg());
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            b.note_batch(false, t0);
+        }
+        // Stragglers (batches admitted before the trip) land while open:
+        // no state change, no early half-open shortcut.
+        assert_eq!(b.note_batch(true, t0), None);
+        assert_eq!(b.state_name(), "open");
+        assert!(!b.allows(t0 + Duration::from_millis(5)));
     }
 
     #[test]

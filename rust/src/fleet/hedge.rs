@@ -1,0 +1,302 @@
+//! Tail-latency hedging and deadline bookkeeping.
+//!
+//! **Why hedge.**  The paper's boards answer in tens of µs, so fleet
+//! tail latency is dominated not by execution but by *where* a request
+//! queues: one browned-out replica (chaos `slow=4x`, thermal
+//! throttling) puts every request routed to it 4× over budget while
+//! its siblings sit idle.  Health ejection (PR 7) eventually removes
+//! such a replica, but ejection is permanent and deliberately slow to
+//! trip; hedging covers the window before it — and the brownouts that
+//! never get bad enough to eject.
+//!
+//! **Decision rule.**  The [`HedgeController`] keeps one log2 span
+//! histogram per request class of *observed* queue-wait + execute time
+//! (fed from the same sampled [`super::trace::TraceCtx`] lifecycle
+//! spans PR 6 added) and a per-board **drift ratio** (observed /
+//! flow-predicted execute time, EWMA).  At submit, after routing picks
+//! board `i`, the fleet estimates this request's completion as
+//!
+//! ```text
+//! est_i = drift_i × (latency_us[i] + depth_i × ii_us[i]) × time_scale
+//! ```
+//!
+//! — the rule4ml-style flow estimate the router already uses, corrected
+//! by how far board `i`'s reality has drifted from it.  If `est_i`
+//! exceeds `hedge_p99 ×` the class's observed p99 span (and a same-task
+//! sibling is admittable), the request is **hedged**: a duplicate leg
+//! is queued on the best sibling through a standalone coalesce
+//! [`Flight`](super::coalesce::Flight) carrying the caller's reply
+//! sender as its only follower.  The first leg to reach a terminal
+//! outcome fans it to the caller; the loser finds the flight `Done` at
+//! its next stage boundary (dequeue or window-close) and discards
+//! itself without executing.  Exactly-one-outcome is inherited from the
+//! flight machinery: `finish`/`fan_err` resolve each enrolled sender
+//! exactly once, and both legs' own channels are throwaways.
+//!
+//! The observed-p99 threshold is self-stabilizing: hedge losers never
+//! execute, so a brownout's slow spans stop polluting the histogram as
+//! soon as hedging starts winning, keeping the threshold anchored to
+//! healthy-sibling latency rather than chasing the degraded tail.
+//!
+//! **Deadline counters.**  [`DeadlineStats`] is the fleet-wide ledger
+//! of the deadline plane: how many expired requests were refused at
+//! submit, discarded at dequeue / window-close / retry, and — the
+//! invariant the scenario bench pins at zero — how many expired
+//! requests a worker ever *committed to execute*.
+
+use super::queue::{Priority, N_CLASSES};
+use super::trace::StageHistogram;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Spans needed in a class histogram before its p99 is trusted for
+/// hedge decisions (startup noise makes tiny samples swing wildly).
+pub const MIN_SEED_SPANS: u64 = 8;
+
+/// Fixed-point scale for the per-board drift ratio atomics.
+const MILLI: f64 = 1000.0;
+
+/// EWMA weight of each new batch's drift observation (1/8: a browned
+/// out board crosses the hedge threshold within a handful of batches,
+/// one outlier batch does not).
+const DRIFT_ALPHA: f64 = 0.125;
+
+/// Per-class observed-span seed and per-board drift state behind the
+/// hedge decision, plus the hedge counters.  One instance per fleet,
+/// shared by the submit path (decisions) and the workers (feeding
+/// spans/drift, counting cancelled losers).
+pub struct HedgeController {
+    /// `hedge_p99` from the config: hedge when the drift-corrected flow
+    /// estimate exceeds this multiple of the class's observed p99.
+    factor: f64,
+    spans: [Mutex<StageHistogram>; N_CLASSES],
+    /// Cached p99 per class (µs), updated on every span record so the
+    /// submit path reads one relaxed atomic instead of locking.
+    p99_us: [AtomicU64; N_CLASSES],
+    /// Per-board drift ratio EWMA, milli fixed-point (1000 = on-model).
+    drift_milli: Mutex<HashMap<usize, u64>>,
+    hedged: AtomicU64,
+    cancelled: AtomicU64,
+    wins: AtomicU64,
+}
+
+impl HedgeController {
+    pub fn new(factor: f64) -> Self {
+        HedgeController {
+            factor,
+            spans: Default::default(),
+            p99_us: Default::default(),
+            drift_milli: Mutex::new(HashMap::new()),
+            hedged: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            wins: AtomicU64::new(0),
+        }
+    }
+
+    /// Feed one sampled request's observed queue-wait + execute span.
+    pub fn note_span(&self, class: Priority, span_us: u64) {
+        let mut h = self.spans[class.idx()].lock().unwrap();
+        h.record(span_us);
+        if h.count >= MIN_SEED_SPANS {
+            let p99 = h.percentile_us(0.99) as u64;
+            self.p99_us[class.idx()].store(p99.max(1), Ordering::Relaxed);
+        }
+    }
+
+    /// The class's observed p99 span, once seeded.
+    pub fn p99_of(&self, class: Priority) -> Option<u64> {
+        match self.p99_us[class.idx()].load(Ordering::Relaxed) {
+            0 => None,
+            us => Some(us),
+        }
+    }
+
+    /// Fold one batch's flow-predicted vs observed execute time into
+    /// board `i`'s drift ratio (worker, per traced batch).
+    pub fn note_drift(&self, board: usize, pred_us: f64, obs_us: u64) {
+        if pred_us <= 0.0 {
+            return;
+        }
+        let sample = (obs_us as f64 / pred_us).clamp(0.01, 1000.0);
+        let mut map = self.drift_milli.lock().unwrap();
+        let cur = *map.get(&board).unwrap_or(&(MILLI as u64)) as f64 / MILLI;
+        let next = cur + DRIFT_ALPHA * (sample - cur);
+        map.insert(board, (next * MILLI) as u64);
+    }
+
+    /// Board `i`'s drift-corrected multiplier (1.0 = on-model).
+    pub fn drift_ratio(&self, board: usize) -> f64 {
+        let map = self.drift_milli.lock().unwrap();
+        *map.get(&board).unwrap_or(&(MILLI as u64)) as f64 / MILLI
+    }
+
+    /// The submit-path decision: hedge when the drift-corrected flow
+    /// estimate for the assigned board crosses `factor ×` the class's
+    /// observed p99.  Always `false` until the class histogram seeds —
+    /// an unseeded fleet must not hedge on noise.
+    pub fn should_hedge(&self, class: Priority, est_us: f64) -> bool {
+        match self.p99_of(class) {
+            Some(p99) => est_us > self.factor * p99 as f64,
+            None => false,
+        }
+    }
+
+    /// A duplicate leg was actually queued.
+    pub fn note_hedged(&self) {
+        self.hedged.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A losing leg found its flight `Done` at a stage boundary and was
+    /// discarded without executing.
+    pub fn note_cancelled(&self) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A hedge flight was resolved by one of its legs (the caller got
+    /// an outcome through the race).
+    pub fn note_win(&self) {
+        self.wins.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> HedgeStats {
+        HedgeStats {
+            hedged: self.hedged.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            wins: self.wins.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Hedge counters for the snapshot JSON / `hedge:` machine line.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HedgeStats {
+    /// Duplicate legs queued.
+    pub hedged: u64,
+    /// Losing legs discarded at a stage boundary without executing.
+    pub cancelled: u64,
+    /// Hedge flights resolved (caller reached through the race).
+    pub wins: u64,
+}
+
+/// Fleet-wide deadline ledger.  `shed_submit` mirrors the
+/// `ShedReason::Deadline` telemetry counter (kept here too so the
+/// `deadline:` machine line needs one source); the `expired_*` counters
+/// split discards by the stage that caught them; `executed_expired`
+/// counts expired requests a worker *committed to execute* at
+/// window-close — the deadline plane's correctness headline keeps it at
+/// zero.
+#[derive(Default)]
+pub struct DeadlineStats {
+    pub shed_submit: AtomicU64,
+    pub expired_dequeue: AtomicU64,
+    pub expired_window: AtomicU64,
+    pub expired_retry: AtomicU64,
+    pub executed_expired: AtomicU64,
+}
+
+impl DeadlineStats {
+    pub fn snapshot(&self) -> DeadlineSnapshot {
+        DeadlineSnapshot {
+            shed_submit: self.shed_submit.load(Ordering::Relaxed),
+            expired_dequeue: self.expired_dequeue.load(Ordering::Relaxed),
+            expired_window: self.expired_window.load(Ordering::Relaxed),
+            expired_retry: self.expired_retry.load(Ordering::Relaxed),
+            executed_expired: self.executed_expired.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Total requests resolved `DeadlineExceeded` after admission
+    /// (dequeue + window + retry discards).
+    pub fn expired_total(&self) -> u64 {
+        self.expired_dequeue.load(Ordering::Relaxed)
+            + self.expired_window.load(Ordering::Relaxed)
+            + self.expired_retry.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time copy of [`DeadlineStats`] for the snapshot JSON and
+/// the `deadline:` machine line.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DeadlineSnapshot {
+    pub shed_submit: u64,
+    pub expired_dequeue: u64,
+    pub expired_window: u64,
+    pub expired_retry: u64,
+    pub executed_expired: u64,
+}
+
+impl DeadlineSnapshot {
+    /// Any deadline-plane activity at all (drives snapshot rendering).
+    pub fn any(&self) -> bool {
+        *self != DeadlineSnapshot::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hedge_decision_waits_for_seed_then_tracks_p99() {
+        let hc = HedgeController::new(2.0);
+        assert!(!hc.should_hedge(Priority::Standard, 1e9), "unseeded: never hedge");
+        for _ in 0..MIN_SEED_SPANS {
+            hc.note_span(Priority::Standard, 100);
+        }
+        let p99 = hc.p99_of(Priority::Standard).expect("seeded");
+        // Log2 buckets round up to the bucket edge; the decision uses
+        // whatever edge the histogram reports.
+        assert!(p99 >= 100);
+        assert!(hc.should_hedge(Priority::Standard, 2.0 * p99 as f64 + 1.0));
+        assert!(!hc.should_hedge(Priority::Standard, 2.0 * p99 as f64 - 1.0));
+        // Classes are independent: Interactive is still unseeded.
+        assert!(!hc.should_hedge(Priority::Interactive, 1e9));
+    }
+
+    #[test]
+    fn drift_ratio_converges_toward_observations_and_decays_back() {
+        let hc = HedgeController::new(2.0);
+        assert!((hc.drift_ratio(0) - 1.0).abs() < 1e-9, "unseen board is on-model");
+        // A 4x brownout: the EWMA climbs toward 4 within a few batches.
+        for _ in 0..32 {
+            hc.note_drift(0, 100.0, 400);
+        }
+        assert!(hc.drift_ratio(0) > 3.5, "ratio {} should approach 4", hc.drift_ratio(0));
+        assert!((hc.drift_ratio(1) - 1.0).abs() < 1e-9, "boards are independent");
+        // Recovery: back on model, the ratio decays toward 1.
+        for _ in 0..48 {
+            hc.note_drift(0, 100.0, 100);
+        }
+        assert!(hc.drift_ratio(0) < 1.2, "ratio {} should recover", hc.drift_ratio(0));
+    }
+
+    #[test]
+    fn counters_and_deadline_ledger_accumulate() {
+        let hc = HedgeController::new(1.5);
+        hc.note_hedged();
+        hc.note_hedged();
+        hc.note_cancelled();
+        hc.note_win();
+        assert_eq!(hc.stats(), HedgeStats { hedged: 2, cancelled: 1, wins: 1 });
+        let d = DeadlineStats::default();
+        d.shed_submit.fetch_add(3, Ordering::Relaxed);
+        d.expired_dequeue.fetch_add(2, Ordering::Relaxed);
+        d.expired_window.fetch_add(1, Ordering::Relaxed);
+        d.expired_retry.fetch_add(4, Ordering::Relaxed);
+        let snap = d.snapshot();
+        assert!(snap.any());
+        assert_eq!(
+            snap,
+            DeadlineSnapshot {
+                shed_submit: 3,
+                expired_dequeue: 2,
+                expired_window: 1,
+                expired_retry: 4,
+                executed_expired: 0,
+            }
+        );
+        assert_eq!(d.expired_total(), 7);
+        assert!(!DeadlineSnapshot::default().any());
+    }
+}

@@ -94,6 +94,7 @@ pub mod cache;
 pub mod chaos;
 pub mod coalesce;
 pub mod health;
+pub mod hedge;
 pub mod queue;
 pub mod registry;
 pub mod router;
@@ -105,7 +106,10 @@ pub use autoscale::{AutoscaleConfig, ScaleAction, ScaleEvent};
 pub use cache::{CacheOptions, CacheStats, ResultCache, TaskCacheStats};
 pub use chaos::{ChaosExecutor, ChaosSpec, FaultPlan, ReplicaFaults, Victim};
 pub use coalesce::{CoalesceStats, Coalescer};
-pub use health::{BoardHealth, HealthConfig};
+pub use health::{
+    BoardHealth, BreakerConfig, BreakerTransition, CircuitBreaker, HealthConfig,
+};
+pub use hedge::{DeadlineSnapshot, DeadlineStats, HedgeController, HedgeStats};
 pub use queue::{admit_limit, BoardQueue, FleetRequest, Priority, RequestTag};
 pub use registry::{BoardInstance, Registry};
 pub use router::{Policy, RouteError, Router};
@@ -140,6 +144,17 @@ pub enum FleetError {
     /// ([`FleetConfig::retry_budget`]) is spent — or no healthy replica
     /// could re-admit it.
     Exhausted { attempts: u32 },
+    /// The request's deadline passed before it could execute: caught at
+    /// dequeue, window-close, or in the retry pump, and resolved here
+    /// instead of burning board time on dead work.  (A deadline the
+    /// submit path already predicts unmeetable is refused up front as
+    /// [`RouteError::DeadlineUnmeetable`] — the request is never
+    /// admitted.)
+    DeadlineExceeded,
+    /// The fleet itself went away while the request was waiting (its
+    /// reply channel disconnected) — the only failure that is not a
+    /// per-request outcome.
+    Disconnected,
 }
 
 impl std::fmt::Display for FleetError {
@@ -148,6 +163,10 @@ impl std::fmt::Display for FleetError {
             FleetError::Exhausted { attempts } => {
                 write!(f, "request failed {attempts} attempt(s); retry budget spent")
             }
+            FleetError::DeadlineExceeded => {
+                f.write_str("deadline exceeded before execution")
+            }
+            FleetError::Disconnected => f.write_str("fleet shut down mid-request"),
         }
     }
 }
@@ -230,6 +249,29 @@ pub struct FleetConfig {
     /// How many failed batches one request may ride before it resolves
     /// to a typed [`FleetError::Exhausted`] instead of another retry.
     pub retry_budget: u32,
+    /// Default per-request deadline in wall-clock µs applied to
+    /// requests whose tag carries none (0 = no default).  A request
+    /// whose flow-predicted completion already misses its deadline is
+    /// refused at submit ([`RouteError::DeadlineUnmeetable`], shed
+    /// reason `deadline`); one that expires after admission is
+    /// discarded at its next stage boundary and resolved
+    /// [`FleetError::DeadlineExceeded`] — dead work never reaches a
+    /// board.
+    pub deadline_us: u64,
+    /// Tail-latency hedging threshold (0.0 = off): when a request's
+    /// drift-corrected flow estimate on its routed board exceeds
+    /// `hedge_p99 ×` its class's observed p99 span, a duplicate leg is
+    /// queued on a same-task sibling through a standalone coalesce
+    /// flight; first terminal outcome wins, the loser is cancelled at
+    /// its next stage boundary ([`hedge`]).  Enabling this turns
+    /// request tracing on (sample 1) if it was off — the threshold is
+    /// seeded from sampled stage spans.
+    pub hedge_p99: f64,
+    /// Per-replica circuit breakers ([`health::CircuitBreaker`]): trip
+    /// on a failure-rate window, mask the replica from routing through
+    /// a cooldown, re-admit via half-open probe batches — the
+    /// *reversible* complement to health ejection.  `None` = off.
+    pub breaker: Option<BreakerConfig>,
 }
 
 impl Default for FleetConfig {
@@ -251,6 +293,9 @@ impl Default for FleetConfig {
             chaos: None,
             health: None,
             retry_budget: 3,
+            deadline_us: 0,
+            hedge_p99: 0.0,
+            breaker: None,
         }
     }
 }
@@ -329,6 +374,16 @@ pub(crate) struct FleetState {
     /// Replicas ejected by the health controller (a subset of the
     /// scale-down events; also on [`FleetSnapshot::ejections`]).
     pub(crate) ejections: AtomicU64,
+    /// Hedging plane ([`FleetConfig::hedge_p99`]): per-class observed
+    /// span seed, per-board drift ratios, hedge counters.  `None` =
+    /// hedging off — the submit path pays one branch.
+    pub(crate) hedge: Option<Arc<HedgeController>>,
+    /// Fleet-wide deadline ledger (always present — its counters stay
+    /// zero in a deadline-free fleet).
+    pub(crate) deadline_stats: Arc<DeadlineStats>,
+    /// Per-slot circuit breakers ([`FleetConfig::breaker`]), same index
+    /// space as queues; grows on scale-up.  `None` = breakers off.
+    pub(crate) breakers: Option<RwLock<Vec<Arc<CircuitBreaker>>>>,
     pub(crate) t0: Instant,
 }
 
@@ -387,6 +442,16 @@ fn spawn_worker(
         .health
         .as_ref()
         .map(|h| h.read().unwrap()[inst.id].clone());
+    // Deadline/hedge/breaker planes, resolved once like the handles
+    // above.  The deadline ledger is unconditional (a request can carry
+    // its own deadline even when the fleet default is 0); hedge and
+    // breaker are `None`-cheap when off.
+    let deadline = state.deadline_stats.clone();
+    let hedge = state.hedge.clone();
+    let breaker = state
+        .breakers
+        .as_ref()
+        .map(|b| b.read().unwrap()[inst.id].clone());
     // Health's drift signal needs the flow-vs-measured accumulator even
     // when request tracing is off.
     let drift_time_scale =
@@ -403,6 +468,9 @@ fn spawn_worker(
             retry_budget: cfg.retry_budget,
             health,
             drift_time_scale,
+            deadline,
+            hedge,
+            breaker,
         };
         match faults {
             // `ChaosExecutor<SimBoardExecutor>` is a distinct executor
@@ -478,6 +546,15 @@ pub(crate) fn add_replica_inner(
         let mut hs = h.write().unwrap();
         debug_assert_eq!(hs.len(), id, "health slot out of line with registry id");
         hs.push(Arc::new(BoardHealth::new()));
+    }
+    if let Some(b) = &state.breakers {
+        // Same before-spawn rule as health: the worker resolves its
+        // breaker slot by id.  A fresh replica starts Closed.
+        let mut bs = b.write().unwrap();
+        debug_assert_eq!(bs.len(), id, "breaker slot out of line with registry id");
+        bs.push(Arc::new(CircuitBreaker::new(
+            cfg.breaker.unwrap_or_default(),
+        )));
     }
     let q = Arc::new(BoardQueue::with_mode(cfg.queue_cap, !cfg.fifo_queues));
     state
@@ -662,6 +739,26 @@ fn run_retry_pump(state: &Arc<FleetState>, rx: mpsc::Receiver<RetryItem>) -> u64
 /// with its true attempt count; it is never silently dropped.
 fn resubmit(state: &Arc<FleetState>, item: RetryItem) {
     let RetryItem { task, mut req } = item;
+    // A rescued hedge loser whose flight already resolved owes nobody
+    // anything: the winning leg fanned the caller's outcome.  Retrying
+    // it would be dead work.
+    if req.hedge && req.flight.as_ref().is_some_and(|f| f.is_done()) {
+        if let Some(hc) = &state.hedge {
+            hc.note_cancelled();
+        }
+        return;
+    }
+    // The retry budget never outlives the deadline: an expired rescue
+    // resolves typed now instead of re-queueing work every later stage
+    // would discard.
+    if req.deadline.is_some_and(|dl| Instant::now() >= dl) {
+        state.deadline_stats.expired_retry.fetch_add(1, Ordering::Relaxed);
+        if let (Some(co), Some(f)) = (&state.coalescer, req.flight.as_ref()) {
+            co.fan_err(f, &FleetError::DeadlineExceeded);
+        }
+        let _ = req.reply.send(Err(FleetError::DeadlineExceeded));
+        return;
+    }
     let reg: Arc<Registry> = state.registry.lock().unwrap().clone();
     let candidates: Vec<usize> = {
         let p = state.plane.read().unwrap();
@@ -673,6 +770,13 @@ fn resubmit(state: &Arc<FleetState>, item: RetryItem) {
             .collect();
         if ids.len() > 1 {
             ids.retain(|&id| id as u32 != req.failed_on);
+        }
+        // Skip replicas whose breaker is open — the rescue should not
+        // land back on the board class that just failed it.
+        if let Some(bs) = &state.breakers {
+            let bs = bs.read().unwrap();
+            let now = Instant::now();
+            ids.retain(|&id| bs.get(id).map_or(true, |b| b.allows(now)));
         }
         ids.sort_by_key(|&id| p.queues[id].depth());
         ids
@@ -722,15 +826,26 @@ fn snapshot_of(state: &FleetState) -> FleetSnapshot {
         .sum();
     snap.scale_events = state.events.lock().unwrap().clone();
     snap.ejections = state.ejections.load(Ordering::Relaxed);
+    snap.hedge = state.hedge.as_ref().map(|h| h.stats());
+    snap.deadline = state.deadline_stats.snapshot();
+    snap.breaker_trips = state.breakers.as_ref().map(|bs| {
+        bs.read().unwrap().iter().map(|b| b.trips()).sum()
+    });
     snap
 }
 
 impl Fleet {
     /// Spawn one worker thread per registry instance (plus the autoscale
     /// controller when configured).
-    pub fn start(registry: Registry, config: FleetConfig) -> Result<Fleet> {
+    pub fn start(registry: Registry, mut config: FleetConfig) -> Result<Fleet> {
         if registry.is_empty() {
             return Err(anyhow!("fleet registry is empty"));
+        }
+        // Hedging decides off sampled lifecycle spans; a hedging fleet
+        // with tracing off would never seed its thresholds.  Same
+        // auto-enable precedent as chaos implying a health watchdog.
+        if config.hedge_p99 > 0.0 && config.trace_sample == 0 {
+            config.trace_sample = 1;
         }
         // Queues, router cost tables, and telemetry are all indexed by
         // instance id; a hand-built registry with ids out of line would
@@ -790,7 +905,11 @@ impl Fleet {
         });
         let reply_pool = (!config.global_hotpath && config.cache_cap > 0)
             .then(|| ReplyPool::new(256));
-        let coalescer = config.coalesce.then(|| Arc::new(Coalescer::new()));
+        // Hedging rides the coalesce flight machinery (the duplicate leg
+        // races the primary through a flight), so a hedging fleet gets a
+        // coalescer even when request coalescing itself is off.
+        let coalescer = (config.coalesce || config.hedge_p99 > 0.0)
+            .then(|| Arc::new(Coalescer::new()));
         let router = Arc::new(Router::with_options(
             &registry,
             config.policy,
@@ -838,6 +957,12 @@ impl Fleet {
             fault_plan,
             retry_tx: Mutex::new(Some(retry_tx)),
             ejections: AtomicU64::new(0),
+            hedge: (config.hedge_p99 > 0.0)
+                .then(|| Arc::new(HedgeController::new(config.hedge_p99))),
+            deadline_stats: Arc::new(DeadlineStats::default()),
+            breakers: config.breaker.map(|cfg| {
+                RwLock::new((0..n).map(|_| Arc::new(CircuitBreaker::new(cfg))).collect())
+            }),
             t0: now,
         });
         let retry_pump = {
@@ -943,6 +1068,26 @@ impl Fleet {
     /// Replicas ejected by the health controller so far.
     pub fn ejections(&self) -> u64 {
         self.state.ejections.load(Ordering::Relaxed)
+    }
+
+    /// Hedge counters so far (`None` when hedging is off).
+    pub fn hedge_stats(&self) -> Option<HedgeStats> {
+        self.state.hedge.as_ref().map(|h| h.stats())
+    }
+
+    /// Deadline-plane ledger so far (all zeros in a deadline-free
+    /// fleet).
+    pub fn deadline_stats(&self) -> DeadlineSnapshot {
+        self.state.deadline_stats.snapshot()
+    }
+
+    /// Per-slot circuit-breaker state names (`None` when breakers are
+    /// off) — observability for tests and the CLI.
+    pub fn breaker_states(&self) -> Option<Vec<&'static str>> {
+        self.state
+            .breakers
+            .as_ref()
+            .map(|bs| bs.read().unwrap().iter().map(|b| b.state_name()).collect())
     }
 
     /// Stop the controllers, close every queue, drain, join workers, end
@@ -1148,10 +1293,37 @@ impl FleetHandle {
             let key = cache_key.unwrap_or_else(|| ResultCache::key(task, &x));
             match co.attach_or_lead(key, tag.priority, &tx) {
                 coalesce::Attach::Follow => return Ok(rx),
+                // A stronger-class duplicate: attached as a follower and
+                // upgraded the flight's class; chase the queued leader to
+                // its board (stamped at push time) and promote it in
+                // place so the whole flight serves at the duplicate's
+                // urgency.  A miss (leader already dequeued, or not yet
+                // pushed) costs nothing — the follower still gets the
+                // leader's reply at the leader's original urgency.
+                coalesce::Attach::FollowUpgraded(f) => {
+                    if let Some(b) = f.board() {
+                        let p = self.state.plane.read().unwrap();
+                        if let Some(q) = p.queues.get(b) {
+                            q.promote_flight(&f, tag.priority);
+                        }
+                    }
+                    return Ok(rx);
+                }
                 coalesce::Attach::Lead(f) => flight = Some(f),
                 coalesce::Attach::Solo => {}
             }
         }
+        // Absolute deadline: the request's own tag wins; the fleet-wide
+        // default fills in when the tag carries none.  Stamped at submit
+        // so queueing, routing retries, and execution all count against
+        // the same budget.
+        let deadline_us = if tag.deadline_us > 0 {
+            tag.deadline_us
+        } else {
+            self.state.config.deadline_us
+        };
+        let deadline =
+            (deadline_us > 0).then(|| Instant::now() + Duration::from_micros(deadline_us));
         let route_start = trace_ctx.as_ref().map(|_| Instant::now());
         let mut req = FleetRequest {
             x,
@@ -1163,11 +1335,33 @@ impl FleetHandle {
             attempts: 0,
             failed_on: queue::NOT_FAILED,
             flight,
+            deadline,
+            hedge: false,
         };
         let fifo = self.state.config.fifo_queues;
+        let time_scale = self.state.config.time_scale;
         let plane = self.state.plane.read().unwrap();
+        // Hedge bookkeeping across routing retries: the decision is made
+        // once, on the first board the router settles on; the duplicate
+        // leg is queued only after the primary push lands.
+        let mut hedge_decided = false;
+        let mut hedge_dup: Option<(Arc<coalesce::Flight>, Vec<f32>)> = None;
         for _ in 0..3 {
-            let depths: Vec<usize> = plane.queues.iter().map(|q| q.depth()).collect();
+            let mut depths: Vec<usize> =
+                plane.queues.iter().map(|q| q.depth()).collect();
+            // An open circuit breaker masks its replica from routing the
+            // same way a full queue does: the depth is forced past every
+            // admission bound.  `allows` also flips a cooled-down
+            // breaker to half-open here, so probe traffic resumes
+            // through the normal route path — no side channel.
+            if let Some(bs) = &self.state.breakers {
+                let now = Instant::now();
+                for (i, b) in bs.read().unwrap().iter().enumerate() {
+                    if !b.allows(now) {
+                        depths[i] = usize::MAX;
+                    }
+                }
+            }
             // Load signal for ordering/SLO prediction: only the backlog
             // that is actually *ahead of this class* counts.  An
             // Interactive request jumps every queued Standard/Batch
@@ -1203,6 +1397,9 @@ impl FleetHandle {
                         // caught before routing — unreachable here).
                         RouteError::UnknownTask => None,
                         RouteError::InvalidInput { .. } => None,
+                        // Generated by the deadline triage below, never
+                        // by the router itself.
+                        RouteError::DeadlineUnmeetable => Some(ShedReason::Deadline),
                     };
                     // A refused leader never executes: resolve every
                     // follower with a typed error (`attempts: 0` marks
@@ -1216,13 +1413,110 @@ impl FleetHandle {
                     return Err((e, reason));
                 }
             };
+            // Deadline triage: when the flow-predicted completion on
+            // the chosen board already misses the deadline, refuse now
+            // — a typed `DeadlineUnmeetable` and a `deadline` shed —
+            // instead of queueing work every later stage would discard.
+            if let Some(dl) = req.deadline {
+                let pred_us =
+                    plane.router.predicted_latency_us(idx, depths[idx]) * time_scale;
+                if Instant::now() + Duration::from_micros(pred_us as u64) > dl {
+                    self.state
+                        .deadline_stats
+                        .shed_submit
+                        .fetch_add(1, Ordering::Relaxed);
+                    if let (Some(co), Some(f)) =
+                        (&self.state.coalescer, req.flight.as_ref())
+                    {
+                        co.fan_err(f, &FleetError::DeadlineExceeded);
+                    }
+                    return Err((
+                        RouteError::DeadlineUnmeetable,
+                        Some(ShedReason::Deadline),
+                    ));
+                }
+            }
+            // Hedge decision (once): when this board's drift-corrected
+            // flow estimate crosses the class's observed-p99 threshold,
+            // move the caller's reply sender into a coalesce flight —
+            // the primary keeps a throwaway channel, a duplicate leg is
+            // queued on a sibling after the primary push lands, and the
+            // first terminal outcome fans to the caller.  The loser
+            // finds the flight `Done` at its next stage boundary and
+            // discards itself without executing.
+            if !hedge_decided {
+                hedge_decided = true;
+                if let (Some(hc), Some(co)) =
+                    (&self.state.hedge, &self.state.coalescer)
+                {
+                    let est = hc.drift_ratio(idx)
+                        * plane.router.predicted_latency_us(idx, depths[idx])
+                        * time_scale;
+                    if hc.should_hedge(tag.priority, est) {
+                        let f = match &req.flight {
+                            Some(f) => f.clone(),
+                            None => {
+                                let f = coalesce::Flight::standalone(tag.priority);
+                                req.flight = Some(f.clone());
+                                f
+                            }
+                        };
+                        if co.enroll_follower(&f, &req.reply) {
+                            req.reply = mpsc::channel().0;
+                            req.hedge = true;
+                            hedge_dup = Some((f, req.x.clone()));
+                        }
+                    }
+                }
+            }
             // Cumulative, so the surviving value covers admission/route
             // up to the winning push (retries included).
             if let (Some(t), Some(r0)) = (req.trace.as_deref_mut(), route_start) {
                 t.route_us = r0.elapsed().as_micros() as u32;
             }
             match plane.queues[idx].try_push(req) {
-                Ok(()) => return Ok(rx),
+                Ok(()) => {
+                    if let Some((f, dup_x)) = hedge_dup.take() {
+                        // Stamp the board first: a stronger-class
+                        // duplicate arriving later promotes the queued
+                        // primary through `promote_flight`.
+                        f.note_board(idx);
+                        // Best same-task sibling with the primary's
+                        // board masked out.  `ahead == depths` is
+                        // deliberately conservative for this best-effort
+                        // pick; any refusal just runs the request
+                        // unhedged (the flight still resolves through
+                        // the primary).
+                        let mut masked = depths.clone();
+                        masked[idx] = usize::MAX;
+                        if let Ok(j) = plane.router.select_class(
+                            task,
+                            &masked,
+                            &masked,
+                            tag.priority,
+                        ) {
+                            let dup = FleetRequest {
+                                x: dup_x,
+                                reply: mpsc::channel().0,
+                                enqueued: Instant::now(),
+                                cache_key,
+                                tag,
+                                trace: None,
+                                attempts: 0,
+                                failed_on: queue::NOT_FAILED,
+                                flight: Some(f),
+                                deadline,
+                                hedge: true,
+                            };
+                            if plane.queues[j].try_push(dup).is_ok() {
+                                if let Some(hc) = &self.state.hedge {
+                                    hc.note_hedged();
+                                }
+                            }
+                        }
+                    }
+                    return Ok(rx);
+                }
                 Err(r) => req = r,
             }
         }
@@ -1248,7 +1542,43 @@ impl FleetHandle {
         match rx.recv() {
             Ok(Ok(reply)) => Ok(reply),
             Ok(Err(e)) => Err(anyhow!("fleet {task} request failed: {e}")),
-            Err(_) => Err(anyhow!("fleet dropped {task} request")),
+            // The fleet shut down with the request admitted but
+            // unresolved — a typed lifecycle error, not a bare channel
+            // `RecvError`.
+            Err(_) => {
+                Err(anyhow!("fleet {task} request failed: {}", FleetError::Disconnected))
+            }
+        }
+    }
+
+    /// Blocking round trip that never outlives the request's deadline:
+    /// waits at most `tag.deadline_us` (falling back to the fleet-wide
+    /// [`FleetConfig::deadline_us`]) for the reply, then resolves to a
+    /// typed [`FleetError::DeadlineExceeded`] without blocking on the
+    /// fleet's own stage-boundary cancellation.  With no deadline from
+    /// either source this is exactly [`Self::infer_tagged`].
+    pub fn infer_deadline(&self, task: &str, x: Vec<f32>, tag: RequestTag) -> Result<Reply> {
+        let deadline_us = if tag.deadline_us > 0 {
+            tag.deadline_us
+        } else {
+            self.state.config.deadline_us
+        };
+        if deadline_us == 0 {
+            return self.infer_tagged(task, x, tag);
+        }
+        let rx = self
+            .submit_tagged(task, x, tag)
+            .map_err(|e| anyhow!("fleet rejected {task} request: {e}"))?;
+        match rx.recv_timeout(Duration::from_micros(deadline_us)) {
+            Ok(Ok(reply)) => Ok(reply),
+            Ok(Err(e)) => Err(anyhow!("fleet {task} request failed: {e}")),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(anyhow!(
+                "fleet {task} request failed: {}",
+                FleetError::DeadlineExceeded
+            )),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(anyhow!("fleet {task} request failed: {}", FleetError::Disconnected))
+            }
         }
     }
 

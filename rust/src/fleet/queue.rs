@@ -96,11 +96,22 @@ impl std::fmt::Display for Priority {
 pub struct RequestTag {
     pub tenant: u32,
     pub priority: Priority,
+    /// Relative deadline in µs (wall clock, unscaled), `0` = none.  The
+    /// submit path turns it into an absolute [`FleetRequest::deadline`];
+    /// past it the request is refused at submit, discarded at dequeue /
+    /// window-close, and never retried.
+    pub deadline_us: u64,
 }
 
 impl RequestTag {
     pub fn new(tenant: u32, priority: Priority) -> Self {
-        RequestTag { tenant, priority }
+        RequestTag { tenant, priority, deadline_us: 0 }
+    }
+
+    /// Builder: attach a relative deadline (µs from submit; 0 = none).
+    pub fn with_deadline_us(mut self, deadline_us: u64) -> Self {
+        self.deadline_us = deadline_us;
+        self
     }
 }
 
@@ -137,6 +148,16 @@ pub struct FleetRequest {
     /// it to the flight's followers.  `None` on every request when
     /// coalescing is off — one pointer-sized field, zero hot-path cost.
     pub flight: Option<std::sync::Arc<super::coalesce::Flight>>,
+    /// Absolute expiry, derived from `tag.deadline_us` at submit.
+    /// Workers check it at dequeue and window-close and resolve expired
+    /// requests with `FleetError::DeadlineExceeded` instead of
+    /// executing dead work; the retry pump refuses to resubmit past it.
+    pub deadline: Option<Instant>,
+    /// `true` on the duplicate leg of a hedged request.  Both legs ride
+    /// the same flight; the first terminal outcome fans to the caller,
+    /// the loser is discarded at its next stage boundary (the flight is
+    /// already `Done`).
+    pub hedge: bool,
 }
 
 /// Sentinel for [`FleetRequest::failed_on`]: the request has not failed
@@ -452,6 +473,42 @@ impl BoardQueue {
         let mut inner = self.inner.lock().unwrap();
         self.pop_locked(&mut inner)
     }
+
+    /// Best-effort class upgrade of a queued coalesce leader: move the
+    /// request carrying `flight` from a lower-class subqueue into
+    /// `to`'s, retagging it, so a more urgent duplicate arriving behind
+    /// a `Batch` leader lifts the whole flight instead of soloing.
+    /// O(queue depth) under the lock, but only runs on the coalesce-hit
+    /// path with a class mismatch — never on the hot path.  Returns
+    /// `false` when the leader was already dequeued (or lives in this
+    /// queue at `to` or better); the upgrade is then moot because the
+    /// flight is at (or past) pickup anyway.
+    pub fn promote_flight(
+        &self,
+        flight: &std::sync::Arc<super::coalesce::Flight>,
+        to: Priority,
+    ) -> bool {
+        if !self.classful {
+            return false;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        for c in (to.idx() + 1)..N_CLASSES {
+            let pos = inner.q[c].iter().position(|(_, r)| {
+                r.flight.as_ref().is_some_and(|f| std::sync::Arc::ptr_eq(f, flight))
+            });
+            if let Some(pos) = pos {
+                let (seq, mut r) = inner.q[c].remove(pos).expect("position just found");
+                r.tag.priority = to;
+                inner.q[to.idx()].push_back((seq, r));
+                self.depth_class[c].store(inner.q[c].len(), Ordering::Relaxed);
+                let class_len = inner.q[to.idx()].len();
+                self.depth_class[to.idx()].store(class_len, Ordering::Relaxed);
+                self.peak_class[to.idx()].fetch_max(class_len, Ordering::Relaxed);
+                return true;
+            }
+        }
+        false
+    }
 }
 
 #[cfg(test)]
@@ -473,6 +530,8 @@ mod tests {
                 attempts: 0,
                 failed_on: NOT_FAILED,
                 flight: None,
+                deadline: None,
+                hedge: false,
             },
             rx,
         )
@@ -625,6 +684,36 @@ mod tests {
             order.push(r.tag.priority);
         }
         assert_eq!(order, vec![Batch, Interactive, Batch, Standard]);
+    }
+
+    #[test]
+    fn promote_flight_moves_queued_leader_to_stronger_class() {
+        use super::super::coalesce::{Attach, Coalescer};
+        let co = Coalescer::new();
+        let (ltx, _lrx) = mpsc::channel();
+        let flight = match co.attach_or_lead(42, Priority::Batch, &ltx) {
+            Attach::Lead(f) => f,
+            _ => panic!("first keyed request must lead"),
+        };
+        let q = BoardQueue::new(64);
+        push(&q, Priority::Standard);
+        let (mut leader, _rx) = mk(RequestTag::new(0, Priority::Batch));
+        leader.flight = Some(flight.clone());
+        q.try_push(leader).map_err(|_| ()).expect("push leader");
+        push(&q, Priority::Standard);
+        assert_eq!(q.depth_class(Priority::Batch), 1);
+
+        assert!(q.promote_flight(&flight, Priority::Interactive));
+        assert_eq!(q.depth_class(Priority::Batch), 0);
+        assert_eq!(q.depth_class(Priority::Interactive), 1);
+        assert_eq!(q.depth(), 3, "promotion moves, never drops");
+
+        // The promoted leader now wins pickup and carries the new class.
+        let first = q.try_steal().expect("non-empty");
+        assert_eq!(first.tag.priority, Priority::Interactive);
+        assert!(first.flight.is_some());
+        // A second promotion finds nothing: the leader is gone.
+        assert!(!q.promote_flight(&flight, Priority::Interactive));
     }
 
     #[test]

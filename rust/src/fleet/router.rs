@@ -79,6 +79,10 @@ pub enum RouteError {
     /// assertion; it never truncates or pads silently for tasks the
     /// submit path can validate).
     InvalidInput { expected: usize, got: usize },
+    /// The flow-predicted completion on the chosen replica already
+    /// misses the request's deadline at submit: refusing now is cheaper
+    /// than queueing work every later stage would discard.
+    DeadlineUnmeetable,
 }
 
 impl fmt::Display for RouteError {
@@ -91,6 +95,9 @@ impl fmt::Display for RouteError {
             }
             RouteError::InvalidInput { expected, got } => {
                 write!(f, "input length {got} does not match the task's feature dim {expected}")
+            }
+            RouteError::DeadlineUnmeetable => {
+                f.write_str("flow-predicted completion already misses the request deadline")
             }
         }
     }

@@ -841,6 +841,9 @@ impl Telemetry {
             board_seconds: 0.0,
             scale_events: Vec::new(),
             ejections: 0,
+            hedge: None,
+            deadline: super::hedge::DeadlineSnapshot::default(),
+            breaker_trips: None,
             per_board,
         }
     }
@@ -901,7 +904,7 @@ pub fn assert_merge_equivalence(n_boards: usize, batches: usize, seed: u64) -> u
         }
         if rng.next_below(7) == 0 {
             let p = Priority::ALL[rng.next_below(3) as usize];
-            let r = ShedReason::ALL[rng.next_below(3) as usize];
+            let r = ShedReason::ALL[rng.next_below(ShedReason::ALL.len() as u64) as usize];
             sharded.record_shed(p, r);
             global.record_shed(p, r);
         }
@@ -1130,6 +1133,16 @@ pub struct FleetSnapshot {
     /// Replicas ejected for cause by the health controller (each is
     /// also a `scale_events` entry with an `ejected:` reason).
     pub ejections: u64,
+    /// Hedge counters; `None` when hedging is off (the JSON then omits
+    /// the `hedge` block, same absence-vs-zero rule as `coalesce`).
+    pub hedge: Option<super::hedge::HedgeStats>,
+    /// Deadline-plane ledger (always present; all zeros in a
+    /// deadline-free fleet — the JSON block appears once any counter is
+    /// nonzero).
+    pub deadline: super::hedge::DeadlineSnapshot,
+    /// Total circuit-breaker trips across slots; `None` when breakers
+    /// are off.
+    pub breaker_trips: Option<u64>,
     pub per_board: Vec<BoardSnapshot>,
 }
 
@@ -1243,8 +1256,36 @@ impl FleetSnapshot {
                     ("followers", num(co.followers as f64)),
                     ("fanned_ok", num(co.fanned_ok as f64)),
                     ("fanned_err", num(co.fanned_err as f64)),
+                    ("overflow", num(co.overflow as f64)),
+                    ("upgrades", num(co.upgrades as f64)),
                 ]),
             ));
+        }
+        // Same absence rule for hedging and breakers.
+        if let Some(h) = &self.hedge {
+            fields.push((
+                "hedge",
+                obj(vec![
+                    ("hedged", num(h.hedged as f64)),
+                    ("cancelled", num(h.cancelled as f64)),
+                    ("wins", num(h.wins as f64)),
+                ]),
+            ));
+        }
+        if self.deadline.any() {
+            fields.push((
+                "deadline",
+                obj(vec![
+                    ("shed_submit", num(self.deadline.shed_submit as f64)),
+                    ("expired_dequeue", num(self.deadline.expired_dequeue as f64)),
+                    ("expired_window", num(self.deadline.expired_window as f64)),
+                    ("expired_retry", num(self.deadline.expired_retry as f64)),
+                    ("executed_expired", num(self.deadline.executed_expired as f64)),
+                ]),
+            ));
+        }
+        if let Some(trips) = self.breaker_trips {
+            fields.push(("breaker_trips", num(trips as f64)));
         }
         obj(fields)
     }
@@ -1286,10 +1327,35 @@ impl FleetSnapshot {
         if let Some(co) = &self.coalesce {
             writeln!(
                 out,
-                "  coalesce: {} leaders / {} followers ({} fanned ok, {} err)",
-                co.leaders, co.followers, co.fanned_ok, co.fanned_err
+                "  coalesce: {} leaders / {} followers ({} fanned ok, {} err, {} overflow, {} upgrades)",
+                co.leaders, co.followers, co.fanned_ok, co.fanned_err, co.overflow, co.upgrades
             )
             .ok();
+        }
+        if let Some(h) = &self.hedge {
+            writeln!(
+                out,
+                "  hedge: {} hedged / {} wins / {} losers cancelled",
+                h.hedged, h.wins, h.cancelled
+            )
+            .ok();
+        }
+        if self.deadline.any() {
+            writeln!(
+                out,
+                "  deadline: {} shed at submit, expired {} dequeue / {} window / {} retry, {} executed expired",
+                self.deadline.shed_submit,
+                self.deadline.expired_dequeue,
+                self.deadline.expired_window,
+                self.deadline.expired_retry,
+                self.deadline.executed_expired
+            )
+            .ok();
+        }
+        if let Some(trips) = self.breaker_trips {
+            if trips > 0 {
+                writeln!(out, "  breaker: {trips} trips").ok();
+            }
         }
         // Per-class breakdown, shown once any non-default class has
         // traffic or anything was shed (all-Standard runs stay terse).
@@ -1300,21 +1366,21 @@ impl FleetSnapshot {
         if classful {
             writeln!(
                 out,
-                "  {:<12} {:>7} {:>7} {:>9} {:>9}  {:>12}",
-                "class", "served", "shed", "p50(us)", "p99(us)", "adm/slo/qf"
+                "  {:<12} {:>7} {:>7} {:>9} {:>9}  {:>14}",
+                "class", "served", "shed", "p50(us)", "p99(us)", "adm/slo/qf/dl"
             )
             .ok();
             for c in &self.classes {
-                let [adm, slo, qf] = c.shed_reasons;
+                let [adm, slo, qf, dl] = c.shed_reasons;
                 writeln!(
                     out,
-                    "  {:<12} {:>7} {:>7} {:>9.1} {:>9.1}  {:>12}",
+                    "  {:<12} {:>7} {:>7} {:>9.1} {:>9.1}  {:>14}",
                     c.class,
                     c.served,
                     c.shed,
                     c.p50_us,
                     c.p99_us,
-                    format!("{adm}/{slo}/{qf}")
+                    format!("{adm}/{slo}/{qf}/{dl}")
                 )
                 .ok();
             }
@@ -1482,7 +1548,7 @@ mod tests {
             snap.classes.iter().map(|c| c.shed).collect::<Vec<_>>(),
             vec![0, 0, 3]
         );
-        assert_eq!(snap.classes[2].shed_reasons, [1, 0, 2]);
+        assert_eq!(snap.classes[2].shed_reasons, [1, 0, 2, 0]);
         assert_eq!(snap.classes[0].p50_us, 120.0);
         assert_eq!(snap.classes[2].p99_us, 400.0);
         assert_eq!(snap.per_board[0].depth_peak_class, [1, 2, 0]);

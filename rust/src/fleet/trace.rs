@@ -321,15 +321,23 @@ pub enum ShedReason {
     /// Admission passed but every `try_push` retry found the queue
     /// closed or re-filled past the limit.
     QueueFull = 2,
+    /// The flow-predicted completion time already misses the request's
+    /// deadline at submit, so the request was refused instead of
+    /// queueing dead work.
+    Deadline = 3,
 }
 
 /// Number of [`ShedReason`] variants (array dimension for counters).
-pub const N_SHED_REASONS: usize = 3;
+pub const N_SHED_REASONS: usize = 4;
 
 impl ShedReason {
     /// All reasons in index order.
-    pub const ALL: [ShedReason; N_SHED_REASONS] =
-        [ShedReason::AdmissionTier, ShedReason::SloPredict, ShedReason::QueueFull];
+    pub const ALL: [ShedReason; N_SHED_REASONS] = [
+        ShedReason::AdmissionTier,
+        ShedReason::SloPredict,
+        ShedReason::QueueFull,
+        ShedReason::Deadline,
+    ];
 
     /// Stable snake_case name used in JSON reports.
     pub fn name(self) -> &'static str {
@@ -337,6 +345,7 @@ impl ShedReason {
             ShedReason::AdmissionTier => "admission_tier",
             ShedReason::SloPredict => "slo_predict",
             ShedReason::QueueFull => "queue_full",
+            ShedReason::Deadline => "deadline",
         }
     }
 
@@ -374,6 +383,13 @@ pub enum FleetEvent {
     /// The health controller retired a sick replica (drain-then-join;
     /// the reason names the tripped signal, e.g. `ejected:failures:3`).
     ReplicaEjected { task: String, instance: usize, reason: String },
+    /// A replica's circuit breaker tripped open: its rolling batch
+    /// failure rate crossed the configured threshold, so the router
+    /// masks it until the cooldown elapses and half-open probes pass.
+    BreakerTripped { instance: usize, failure_rate_pct: u64 },
+    /// A replica's breaker closed again after the half-open probe
+    /// batches all succeeded; the replica is routable once more.
+    BreakerRestored { instance: usize },
 }
 
 /// A sequenced, timestamped event as stored in a ring.
@@ -438,6 +454,15 @@ impl TraceEvent {
                 fields.push(("instance".to_string(), num(*instance as f64)));
                 fields.push(("reason".to_string(), s(reason)));
                 "replica_ejected"
+            }
+            FleetEvent::BreakerTripped { instance, failure_rate_pct } => {
+                fields.push(("instance".to_string(), num(*instance as f64)));
+                fields.push(("failure_rate_pct".to_string(), num(*failure_rate_pct as f64)));
+                "breaker_tripped"
+            }
+            FleetEvent::BreakerRestored { instance } => {
+                fields.push(("instance".to_string(), num(*instance as f64)));
+                "breaker_restored"
             }
         };
         fields.push(("event".to_string(), s(kind)));

@@ -43,6 +43,18 @@
 //! runs out fans the same typed [`FleetError`] instead — followers share
 //! the leader's fate exactly (see [`super::coalesce`]).
 //!
+//! The worker is also the deadline plane's **cancellation point**: every
+//! stage boundary a request crosses — dequeue, window close, and the
+//! failed-batch retry decision — re-checks its absolute deadline, and an
+//! expired request resolves to a typed
+//! [`FleetError::DeadlineExceeded`] *instead of executing*.  The same
+//! boundaries discard a hedge loser (a leg whose
+//! [`Flight`](super::coalesce::Flight) another leg already resolved)
+//! silently — the caller was answered through the flight fan-out, so the
+//! loser owes nobody anything.  Each executed batch's outcome also feeds
+//! the board's optional [`CircuitBreaker`], whose trip/restore
+//! transitions land in the trace ring as fleet events.
+//!
 //! Outputs come from the packed quantized kernel core
 //! ([`crate::kernels`]): each task's class templates are quantized and
 //! packed **once per process** behind a `OnceLock` and shared by every
@@ -57,7 +69,8 @@
 
 use super::cache::ResultCache;
 use super::coalesce::Coalescer;
-use super::health::BoardHealth;
+use super::health::{BoardHealth, BreakerTransition, CircuitBreaker};
+use super::hedge::{DeadlineStats, HedgeController};
 use super::queue::{BoardQueue, FleetRequest, Priority};
 use super::registry::BoardInstance;
 use super::telemetry::{ReplySample, TelemetrySink};
@@ -68,6 +81,7 @@ use crate::coordinator::pool::{PooledVec, ReplyPool};
 use crate::error::{bail, Result};
 use crate::kernels::{PackedLinear, ScratchArena, SmoothKernel};
 use crate::runtime::argmax;
+use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, OnceLock, RwLock};
 use std::time::{Duration, Instant};
 
@@ -386,6 +400,19 @@ pub struct WorkerConfig {
     /// `Some` when tracing **or** health is on — health's drift-ratio
     /// ejection signal must not require request tracing.
     pub drift_time_scale: Option<f64>,
+    /// Fleet-wide deadline ledger.  Unconditional (a request can carry
+    /// its own deadline even in a fleet with no default): the worker
+    /// checks expiry at every stage boundary and counts what it
+    /// discarded here.
+    pub deadline: Arc<DeadlineStats>,
+    /// Hedge plane (`FleetConfig::hedge_p99 > 0`): the worker feeds
+    /// observed spans + per-board drift into it and counts the hedge
+    /// losers it discards.  `None` = hedging off.
+    pub hedge: Option<Arc<HedgeController>>,
+    /// This board's circuit breaker (`FleetConfig::breaker`): beaten
+    /// with every executed batch's outcome; trip/restore transitions go
+    /// to the trace ring.  `None` = breakers off.
+    pub breaker: Option<Arc<CircuitBreaker>>,
 }
 
 /// Resolve one request from a failed batch: hand it to the retry pump
@@ -396,6 +423,12 @@ pub struct WorkerConfig {
 /// A retried request keeps its flight: only the *terminal* outcome fans
 /// to coalesced followers, so both `Exhausted` sends here fan first —
 /// followers share the leader's fate, reply or typed error.
+///
+/// Two triage rules run before the budget: a hedge loser whose flight
+/// already resolved is discarded silently (the caller was answered by
+/// the winning leg), and a request past its deadline resolves
+/// [`FleetError::DeadlineExceeded`] instead of burning retry budget on
+/// work nobody can use — the retry budget never outlives the deadline.
 fn fail_request(
     mut req: FleetRequest,
     instance: usize,
@@ -403,7 +436,23 @@ fn fail_request(
     retry: &Option<mpsc::Sender<RetryItem>>,
     budget: u32,
     coalesce: Option<&Coalescer>,
+    deadline: &DeadlineStats,
+    hedge: Option<&HedgeController>,
 ) -> bool {
+    if req.hedge && req.flight.as_ref().is_some_and(|f| f.is_done()) {
+        if let Some(hc) = hedge {
+            hc.note_cancelled();
+        }
+        return false;
+    }
+    if req.deadline.is_some_and(|dl| Instant::now() >= dl) {
+        deadline.expired_retry.fetch_add(1, Ordering::Relaxed);
+        if let (Some(co), Some(f)) = (coalesce, req.flight.as_ref()) {
+            co.fan_err(f, &FleetError::DeadlineExceeded);
+        }
+        let _ = req.reply.send(Err(FleetError::DeadlineExceeded));
+        return false;
+    }
     req.attempts += 1;
     req.failed_on = instance as u32;
     if req.attempts <= budget {
@@ -428,6 +477,48 @@ fn fail_request(
     }
     let _ = req.reply.send(Err(FleetError::Exhausted { attempts }));
     false
+}
+
+/// Which stage boundary a triage check runs at (selects the
+/// [`DeadlineStats`] counter an expiry discard is booked under).
+#[derive(Clone, Copy)]
+enum TriageStage {
+    Dequeue,
+    WindowClose,
+}
+
+/// Stage-boundary triage: decide whether a picked-up request is still
+/// worth serving *at* `now`.  A hedge loser (its flight already resolved
+/// through the other leg) is discarded silently; a request past its
+/// deadline resolves to a typed [`FleetError::DeadlineExceeded`] — in
+/// both cases the request never reaches the executor.  Returns the
+/// request back when it should keep going.
+fn triage_request(
+    req: FleetRequest,
+    now: Instant,
+    stage: TriageStage,
+    cfg: &WorkerConfig,
+    coalesce: Option<&Coalescer>,
+) -> Option<FleetRequest> {
+    if req.hedge && req.flight.as_ref().is_some_and(|f| f.is_done()) {
+        if let Some(hc) = &cfg.hedge {
+            hc.note_cancelled();
+        }
+        return None;
+    }
+    if req.deadline.is_some_and(|dl| now >= dl) {
+        let counter = match stage {
+            TriageStage::Dequeue => &cfg.deadline.expired_dequeue,
+            TriageStage::WindowClose => &cfg.deadline.expired_window,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+        if let (Some(co), Some(f)) = (coalesce, req.flight.as_ref()) {
+            co.fan_err(f, &FleetError::DeadlineExceeded);
+        }
+        let _ = req.reply.send(Err(FleetError::DeadlineExceeded));
+        return None;
+    }
+    Some(req)
 }
 
 /// Per-worker handles for the tracing layer ([`super::trace`]).
@@ -467,7 +558,16 @@ pub fn run_worker<E: BatchExecutor>(
             // Keep draining so every caller gets a terminal outcome —
             // retried elsewhere or a typed error, never a hang.
             while let Some(req) = own.pop_blocking() {
-                fail_request(req, inst.id, &inst.task, &cfg.retry, cfg.retry_budget, coalesce);
+                fail_request(
+                    req,
+                    inst.id,
+                    &inst.task,
+                    &cfg.retry,
+                    cfg.retry_budget,
+                    coalesce,
+                    &cfg.deadline,
+                    cfg.hedge.as_deref(),
+                );
             }
             return 0;
         }
@@ -518,24 +618,47 @@ pub fn run_worker<E: BatchExecutor>(
         // steal one from a same-task replica.  The closed check comes
         // *before* the steal so a retiring replica exits as soon as its
         // own queue is drained instead of lingering on peers' work.
+        // Every pickup passes dequeue-stage triage (deadline expiry,
+        // hedge-loser discard) before it counts as the batch opener.
         let mut stolen = 0u64;
         let mut first = if cfg.work_stealing {
             loop {
                 if let Some(r) = own.pop_until(Instant::now() + steal_poll) {
-                    break r;
+                    match triage_request(r, Instant::now(), TriageStage::Dequeue, cfg, coalesce)
+                    {
+                        Some(r) => break r,
+                        None => continue,
+                    }
                 }
                 if own.is_closed() && own.depth() == 0 {
                     return served;
                 }
                 if let Some(r) = steal_one(own) {
-                    stolen += 1;
-                    break r;
+                    match triage_request(r, Instant::now(), TriageStage::Dequeue, cfg, coalesce)
+                    {
+                        Some(r) => {
+                            stolen += 1;
+                            break r;
+                        }
+                        None => continue,
+                    }
                 }
             }
         } else {
-            match own.pop_blocking() {
-                Some(r) => r,
-                None => return served,
+            loop {
+                match own.pop_blocking() {
+                    Some(r) => match triage_request(
+                        r,
+                        Instant::now(),
+                        TriageStage::Dequeue,
+                        cfg,
+                        coalesce,
+                    ) {
+                        Some(r) => break r,
+                        None => continue,
+                    },
+                    None => return served,
+                }
             }
         };
         stamp_dequeue(&mut first);
@@ -552,19 +675,44 @@ pub fn run_worker<E: BatchExecutor>(
         let mut batch = if own.is_classful() && first.tag.priority == Priority::Interactive
         {
             // Non-blocking `next`: the first empty poll ends the window,
-            // so the timer never actually waits.
-            fill_window(first, &window, |_| {
-                own.try_steal().map(|mut r| {
-                    stamp_dequeue(&mut r);
-                    r
-                })
+            // so the timer never actually waits.  Triaged-away pickups
+            // loop for a replacement instead of closing the window.
+            fill_window(first, &window, |_| loop {
+                match own.try_steal() {
+                    Some(r) => match triage_request(
+                        r,
+                        Instant::now(),
+                        TriageStage::Dequeue,
+                        cfg,
+                        coalesce,
+                    ) {
+                        Some(mut r) => {
+                            stamp_dequeue(&mut r);
+                            break Some(r);
+                        }
+                        None => continue,
+                    },
+                    None => break None,
+                }
             })
         } else {
-            fill_window(first, &window, |deadline| {
-                own.pop_until(deadline).map(|mut r| {
-                    stamp_dequeue(&mut r);
-                    r
-                })
+            fill_window(first, &window, |deadline| loop {
+                match own.pop_until(deadline) {
+                    Some(r) => match triage_request(
+                        r,
+                        Instant::now(),
+                        TriageStage::Dequeue,
+                        cfg,
+                        coalesce,
+                    ) {
+                        Some(mut r) => {
+                            stamp_dequeue(&mut r);
+                            break Some(r);
+                        }
+                        None => continue,
+                    },
+                    None => break None,
+                }
             })
         };
         if cfg.work_stealing && batch.len() < window.max_batch {
@@ -576,10 +724,18 @@ pub fn run_worker<E: BatchExecutor>(
             'peers: for q in list.iter().filter(|q| !Arc::ptr_eq(q, own)) {
                 while batch.len() < window.max_batch {
                     match q.try_steal() {
-                        Some(mut r) => {
-                            stamp_dequeue(&mut r);
-                            batch.push(r);
-                            stolen += 1;
+                        Some(r) => {
+                            if let Some(mut r) = triage_request(
+                                r,
+                                Instant::now(),
+                                TriageStage::Dequeue,
+                                cfg,
+                                coalesce,
+                            ) {
+                                stamp_dequeue(&mut r);
+                                batch.push(r);
+                                stolen += 1;
+                            }
                         }
                         None => continue 'peers,
                     }
@@ -596,6 +752,32 @@ pub fn run_worker<E: BatchExecutor>(
                 if let Some(t) = r.trace.as_deref_mut() {
                     t.window_closed = Some(closed);
                 }
+            }
+        }
+
+        // Window-close triage: batch membership is final here — the last
+        // stage boundary where a dead request (expired, or a hedge leg
+        // whose race is already lost) can be dropped without executing.
+        // One timestamp covers the whole pass so the commitment check
+        // below evaluates against the same instant.
+        let committed = Instant::now();
+        batch = batch
+            .into_iter()
+            .filter_map(|r| {
+                triage_request(r, committed, TriageStage::WindowClose, cfg, coalesce)
+            })
+            .collect();
+        if batch.is_empty() {
+            continue;
+        }
+        // Commitment point: from here the batch reaches
+        // `BatchExecutor::execute`.  Anything still expired at
+        // `committed` would be executed dead work; the triage above
+        // keeps this counter structurally zero (the scenario bench and
+        // the ci smoke pin it there).
+        for r in batch.iter() {
+            if r.deadline.is_some_and(|dl| committed >= dl) {
+                cfg.deadline.executed_expired.fetch_add(1, Ordering::Relaxed);
             }
         }
 
@@ -634,6 +816,25 @@ pub fn run_worker<E: BatchExecutor>(
             })),
             Ok(Ok(()))
         );
+        // Every executed batch's outcome beats this board's breaker;
+        // trip/restore transitions are fleet events like ejections.
+        if let Some(b) = &cfg.breaker {
+            if let Some(transition) = b.note_batch(exec_ok, Instant::now()) {
+                if let Some(tr) = &cfg.trace {
+                    tr.ring.push(match transition {
+                        BreakerTransition::Tripped { failure_rate_pct } => {
+                            FleetEvent::BreakerTripped {
+                                instance: inst.id,
+                                failure_rate_pct,
+                            }
+                        }
+                        BreakerTransition::Restored => {
+                            FleetEvent::BreakerRestored { instance: inst.id }
+                        }
+                    });
+                }
+            }
+        }
         if !exec_ok {
             // Device failure: the batch is **not lost**.  Every rider
             // goes back through the router via the retry pump — avoiding
@@ -649,8 +850,16 @@ pub fn run_worker<E: BatchExecutor>(
             }
             let mut retried = 0usize;
             for req in batch.drain(..) {
-                if fail_request(req, inst.id, &inst.task, &cfg.retry, cfg.retry_budget, coalesce)
-                {
+                if fail_request(
+                    req,
+                    inst.id,
+                    &inst.task,
+                    &cfg.retry,
+                    cfg.retry_budget,
+                    coalesce,
+                    &cfg.deadline,
+                    cfg.hedge.as_deref(),
+                ) {
                     retried += 1;
                 }
             }
@@ -727,6 +936,13 @@ pub fn run_worker<E: BatchExecutor>(
                             exec_us,
                         }));
                     }
+                    // A hedged leg that took its flight's followers won
+                    // the race: the caller was reached through the fan.
+                    if req.hedge {
+                        if let Some(hc) = &cfg.hedge {
+                            hc.note_win();
+                        }
+                    }
                 }
             }
             let _ = req.reply.send(Ok(Reply {
@@ -736,6 +952,14 @@ pub fn run_worker<E: BatchExecutor>(
                 queue_us,
                 exec_us,
             }));
+            // Feed the hedge threshold with this request's *observed*
+            // submit→reply span.  Losers never execute, so a brownout's
+            // slow spans stop polluting the seed once hedging starts
+            // winning — the threshold stays anchored to healthy-sibling
+            // latency.
+            if let Some(hc) = &cfg.hedge {
+                hc.note_span(req.tag.priority, req.enqueued.elapsed().as_micros() as u64);
+            }
             if let Some(t) = req.trace.as_deref() {
                 // Spans close here: reply = execute end → this send.
                 // Missing stamps (hand-built requests) fall back to the
@@ -771,6 +995,11 @@ pub fn run_worker<E: BatchExecutor>(
             let pred_us = inst.batch_latency_s(n) * ts * 1e6;
             telemetry
                 .record_trace(&trace_samples, Some(DriftSample { pred_us, obs_us: exec_us }));
+            // The same per-batch drift corrects the submit path's hedge
+            // estimate for this board (EWMA toward observed/predicted).
+            if let Some(hc) = &cfg.hedge {
+                hc.note_drift(inst.id, pred_us, exec_us as u64);
+            }
         }
         if let Some(tr) = &cfg.trace {
             if stolen > 0 {
@@ -864,5 +1093,78 @@ mod tests {
         let dt = t0.elapsed();
         assert!(dt >= Duration::from_micros(300));
         assert!(dt < Duration::from_millis(50), "{dt:?}");
+    }
+
+    use super::super::queue::RequestTag;
+
+    fn mk_req(
+        reply: mpsc::Sender<std::result::Result<Reply, FleetError>>,
+        deadline: Option<Instant>,
+        hedge: bool,
+        flight: Option<Arc<super::super::coalesce::Flight>>,
+    ) -> FleetRequest {
+        FleetRequest {
+            x: vec![0.0; 4],
+            reply,
+            enqueued: Instant::now(),
+            cache_key: None,
+            tag: RequestTag::default(),
+            trace: None,
+            attempts: 0,
+            failed_on: super::super::queue::NOT_FAILED,
+            flight,
+            deadline,
+            hedge,
+        }
+    }
+
+    #[test]
+    fn fail_request_never_retries_past_the_deadline() {
+        // Budget remaining AND a live pump — but the deadline already
+        // passed, so the rescue resolves typed instead of retrying.
+        let (tx, rx) = mpsc::channel();
+        let (ptx, prx) = mpsc::channel::<RetryItem>();
+        let stats = DeadlineStats::default();
+        let expired = Instant::now() - Duration::from_micros(1);
+        let req = mk_req(tx, Some(expired), false, None);
+        let retried =
+            fail_request(req, 0, "kws", &Some(ptx), 3, None, &stats, None);
+        assert!(!retried);
+        assert!(matches!(rx.try_recv(), Ok(Err(FleetError::DeadlineExceeded))));
+        assert!(prx.try_recv().is_err(), "nothing went to the pump");
+        assert_eq!(stats.snapshot().expired_retry, 1);
+
+        // Same request shape with headroom left on the deadline: the
+        // retry budget applies as before and the rescue is pumped.
+        let (tx, rx) = mpsc::channel();
+        let (ptx, prx) = mpsc::channel::<RetryItem>();
+        let live = Instant::now() + Duration::from_secs(60);
+        let req = mk_req(tx, Some(live), false, None);
+        let retried =
+            fail_request(req, 0, "kws", &Some(ptx), 3, None, &stats, None);
+        assert!(retried);
+        assert!(rx.try_recv().is_err(), "no outcome yet — it is mid-retry");
+        let item = prx.try_recv().expect("rescue reached the pump");
+        assert_eq!(item.req.attempts, 1);
+        assert_eq!(stats.snapshot().expired_retry, 1, "unchanged");
+    }
+
+    #[test]
+    fn fail_request_discards_a_resolved_hedge_loser_silently() {
+        let co = Coalescer::new();
+        let hc = HedgeController::new(2.0);
+        let stats = DeadlineStats::default();
+        let flight = super::super::coalesce::Flight::standalone(Priority::Standard);
+        // The other leg already resolved the race.
+        co.fan_err(&flight, &FleetError::Exhausted { attempts: 1 });
+        assert!(flight.is_done());
+        let (tx, rx) = mpsc::channel();
+        let req = mk_req(tx, None, true, Some(flight));
+        let retried =
+            fail_request(req, 0, "kws", &None, 3, Some(&co), &stats, Some(&hc));
+        assert!(!retried);
+        assert!(rx.try_recv().is_err(), "loser's throwaway channel owes nothing");
+        assert_eq!(hc.stats().cancelled, 1);
+        assert_eq!(stats.snapshot(), Default::default(), "no deadline discard booked");
     }
 }

@@ -18,6 +18,7 @@
 //!                       [--tenants N] [--priority-mix i:s:b] [--fifo] [--global-hotpath]
 //!                       [--trace-sample N] [--trace-dump]
 //!                       [--chaos SPEC] [--chaos-seed N]
+//!                       [--deadline-us N] [--hedge-p99 F] [--breaker]
 //! tinyml-codesign bench-gate [--baseline-dir D] [--bench-dir D] [--tol F]
 //!                       [--update] [--self-test]    BENCH_* regression gate
 //! tinyml-codesign list                               available models
@@ -52,6 +53,20 @@
 //! ride one leader's board execution and the report is prefixed by a
 //! machine-parseable `coalesce: leaders=.. followers=.. fanned_ok=..
 //! fanned_err=..` line.
+//!
+//! `--deadline-us N` stamps every generated request with an N µs
+//! deadline: submit refuses requests whose flow-predicted completion
+//! already misses it, and workers discard expired requests at every
+//! later stage boundary (see `tinyml_codesign::fleet::hedge`), so the
+//! report is prefixed by a machine-parseable `deadline:` line whose
+//! `executed_expired` field must stay 0. `--hedge-p99 F` arms
+//! tail-latency hedging: when a request's drift-corrected estimate on
+//! its assigned replica exceeds F x its class's observed p99, a
+//! duplicate leg is queued on a sibling replica and the first terminal
+//! outcome wins (`hedge:` line). `--breaker` puts a per-replica
+//! circuit breaker in front of routing (trip on failure-rate window,
+//! half-open probes) as the reversible complement to health ejection
+//! (`breaker:` line).
 
 use tinyml_codesign::board::{arty_a7_100t, pynq_z2, Board};
 use tinyml_codesign::coordinator::engine::{spawn, BatchPolicy};
@@ -60,7 +75,8 @@ use tinyml_codesign::data;
 use tinyml_codesign::eembc::{DesignPerf, Dut, Runner};
 use tinyml_codesign::error::{anyhow, bail, Result};
 use tinyml_codesign::fleet::{
-    AutoscaleConfig, ChaosSpec, Fleet, FleetConfig, Policy, Priority, Registry, RequestTag,
+    AutoscaleConfig, BreakerConfig, ChaosSpec, Fleet, FleetConfig, Policy, Priority, Registry,
+    RequestTag,
 };
 use tinyml_codesign::report::{gate, tables};
 use tinyml_codesign::runtime::{LoadedModel, Runtime};
@@ -157,6 +173,7 @@ tinyml-codesign fleet [--policy rr|ll|energy|slo] [--requests N] [--cache N]
                       [--tenants N] [--priority-mix i:s:b] [--fifo] [--global-hotpath]
                       [--trace-sample N] [--trace-dump]
                       [--chaos SPEC] [--chaos-seed N]
+                      [--deadline-us N] [--hedge-p99 F] [--breaker]
 tinyml-codesign bench-gate [--baseline-dir D] [--bench-dir D] [--tol F]
                       [--update] [--self-test]    BENCH_* regression gate
 tinyml-codesign list                               available models";
@@ -361,6 +378,9 @@ fn main() -> Result<()> {
                 global_hotpath: args.flag("global-hotpath").is_some(),
                 trace_sample: args.usize_flag("trace-sample", 0),
                 chaos,
+                deadline_us: args.usize_flag("deadline-us", 0) as u64,
+                hedge_p99: args.f64_flag("hedge-p99", 0.0),
+                breaker: args.flag("breaker").map(|_| BreakerConfig::default()),
                 ..Default::default()
             };
             let fleet = Fleet::start(Registry::standard_fleet()?, cfg)?;
@@ -427,6 +447,34 @@ fn main() -> Result<()> {
                 println!(
                     "coalesce: leaders={} followers={} fanned_ok={} fanned_err={}",
                     co.leaders, co.followers, co.fanned_ok, co.fanned_err
+                );
+            }
+            if cfg.deadline_us > 0 || summary.snapshot.deadline.any() {
+                // Machine-parseable deadline line for the CI smoke:
+                // executed_expired must be zero — a nonzero value means
+                // a board burned cycles on a request nobody could use.
+                let d = summary.snapshot.deadline;
+                println!(
+                    "deadline: shed_submit={} expired_dequeue={} expired_window={} \
+                     expired_retry={} executed_expired={}",
+                    d.shed_submit,
+                    d.expired_dequeue,
+                    d.expired_window,
+                    d.expired_retry,
+                    d.executed_expired
+                );
+            }
+            if cfg.hedge_p99 > 0.0 {
+                let h = summary.snapshot.hedge.unwrap_or_default();
+                println!(
+                    "hedge: hedged={} wins={} cancelled={}",
+                    h.hedged, h.wins, h.cancelled
+                );
+            }
+            if cfg.breaker.is_some() {
+                println!(
+                    "breaker: trips={}",
+                    summary.snapshot.breaker_trips.unwrap_or(0)
                 );
             }
             if args.flag("json").is_some() {

@@ -237,6 +237,18 @@ pub fn headline_metrics(doc: &Value) -> Result<Vec<Metric>> {
                 value: f64_of(doc.req("flash_crowd")?, "recovery_served_fraction")?,
                 higher_is_better: true,
             });
+            // Tail-latency hedging (scenario 4): hedged p99 over the
+            // unhedged control under an undetectable brownout, lower is
+            // better.  Optional for pre-hedging documents; once the
+            // committed baseline carries it, a current run missing it
+            // fails the gate (missing-headline rule in `compare`).
+            if let Some(h) = doc.get("hedge") {
+                out.push(Metric {
+                    name: "scenarios.hedged_p99_over_unhedged".to_string(),
+                    value: f64_of(h, "hedged_p99_over_unhedged")?,
+                    higher_is_better: false,
+                });
+            }
         }
         other => bail!("bench-gate does not know bench '{other}'"),
     }
@@ -596,6 +608,22 @@ mod tests {
             && !x.higher_is_better));
         assert!(m.iter().any(|x| x.name == "scenarios.recovery_served_fraction"
             && x.higher_is_better));
+
+        // The hedging headline is optional (pre-hedging documents still
+        // parse, as above) but extracted when present.
+        let scenarios_v2 = Value::parse(
+            r#"{"bench":"scenarios",
+                "kill":{"resolved_fraction":1.0,"ejected":1.0},
+                "brownout":{"p99_under_failure_ratio":3.5},
+                "flash_crowd":{"recovery_served_fraction":0.98},
+                "hedge":{"hedged_p99_over_unhedged":0.4}}"#,
+        )
+        .unwrap();
+        let m = headline_metrics(&scenarios_v2).unwrap();
+        assert_eq!(m.len(), 5);
+        assert!(m.iter().any(|x| x.name == "scenarios.hedged_p99_over_unhedged"
+            && (x.value - 0.4).abs() < 1e-9
+            && !x.higher_is_better));
 
         assert!(headline_metrics(&Value::parse(r#"{"bench":"nope"}"#).unwrap()).is_err());
     }

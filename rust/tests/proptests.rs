@@ -12,9 +12,10 @@ use tinyml_codesign::dataflow::{Prereq, Simulator, StageSpec, UNBOUNDED_DEPTH};
 use tinyml_codesign::fifo::{optimize_fifos, DepthPolicy};
 use tinyml_codesign::fleet::worker::run_worker;
 use tinyml_codesign::fleet::{
-    BoardInstance, BoardQueue, ChaosSpec, Fleet, FleetConfig, FleetError,
-    FleetRequest, HealthConfig, PeerList, Policy, Priority, Registry, RequestTag,
-    RouteError, Router, SimBoardExecutor, Telemetry, WorkerConfig,
+    BoardInstance, BoardQueue, BreakerConfig, ChaosSpec, DeadlineStats, Fleet,
+    FleetConfig, FleetError, FleetRequest, HealthConfig, PeerList, Policy, Priority,
+    Registry, RequestTag, RouteError, Router, SimBoardExecutor, Telemetry,
+    WorkerConfig,
 };
 use tinyml_codesign::ir::Graph;
 use tinyml_codesign::kernels::{
@@ -323,6 +324,11 @@ fn prop_router_only_routes_to_boards_hosting_the_task() {
                     matches!(policy, Policy::LatencySlo { .. }),
                     "case {case}: {policy:?} returned SloUnattainable"
                 );
+            }
+            // The pure router never sees the request payload or its
+            // deadline — those refusals belong to the submit path.
+            Err(e @ (RouteError::InvalidInput { .. } | RouteError::DeadlineUnmeetable)) => {
+                panic!("case {case}: router returned a submit-side refusal {e:?}");
             }
         }
     }
@@ -651,6 +657,136 @@ fn prop_chaos_with_coalescing_still_yields_exactly_one_outcome_each() {
     }
 }
 
+#[test]
+fn prop_chaos_with_deadlines_hedging_and_breaker_yields_exactly_one_outcome() {
+    // The whole robustness plane armed at once: random fault plans with
+    // per-request deadlines, tail-latency hedging, and per-replica
+    // circuit breakers.  Every admitted request must still resolve with
+    // *exactly one* terminal outcome — a reply, a spent retry budget
+    // (`Exhausted`), or a typed `DeadlineExceeded` — never a hang,
+    // never a duplicate.  Hedged duplicate legs and breaker-masked
+    // replicas must never leak an extra outcome into a caller's
+    // channel, a deadline-free request must never expire, and no board
+    // may ever execute a request that was already past its deadline.
+    let mut rng = SplitMix64::new(0xD11E_5EED);
+    for case in 0..6u64 {
+        let mut clauses: Vec<String> = Vec::new();
+        let exec_p = [0.0, 0.15, 0.4][rng.next_below(3) as usize];
+        if exec_p > 0.0 {
+            clauses.push(format!("exec={exec_p}"));
+        }
+        if rng.next_below(2) == 0 {
+            clauses.push("kill=0@3".to_string());
+        } else if rng.next_below(2) == 0 {
+            clauses.push("panic=0@4".to_string());
+        }
+        // A slowdown feeds the drift EWMA, which is what arms hedging.
+        if rng.next_below(2) == 0 {
+            clauses.push("slow=4x0".to_string());
+        }
+        if rng.next_below(2) == 0 {
+            clauses.push("stall=200@4".to_string());
+        }
+        let spec =
+            ChaosSpec::parse(&clauses.join(","), 0xD11E ^ (case << 8)).unwrap();
+        let reg = Registry {
+            instances: vec![
+                BoardInstance::synthetic(0, "kws", 80.0, 10.0, 1.5),
+                BoardInstance::synthetic(1, "kws", 250.0, 50.0, 1.8),
+            ],
+        };
+        let cfg = FleetConfig {
+            queue_cap: 1024,
+            chaos: Some(spec),
+            health: Some(HealthConfig {
+                interval: std::time::Duration::from_millis(1),
+                max_consecutive_failures: 2,
+                ..Default::default()
+            }),
+            retry_budget: 50,
+            // Low threshold so drift-corrected estimates actually cross
+            // it once a slowdown clause lands.
+            hedge_p99: 0.5,
+            breaker: Some(BreakerConfig::default()),
+            ..Default::default()
+        };
+        let fleet = Fleet::start(reg, cfg).unwrap();
+        let handle = fleet.handle();
+        let n = 80;
+        let mut pending = Vec::new();
+        let (mut refused, mut shed) = (0usize, 0usize);
+        for i in 0..n {
+            // A third of the stream has no deadline, a third a tight
+            // one (expiry and unmeetable-at-submit both reachable under
+            // stalls and backlog), a third a generous one.
+            let d_us = [0u64, 500, 1_000_000][rng.next_below(3) as usize];
+            let tag = RequestTag::default().with_deadline_us(d_us);
+            // Distinct inputs per request: this exercises hedging's
+            // standalone flights, not input coalescing.
+            let mut x = vec![0.1f32; tinyml_codesign::data::feature_dim("kws")];
+            x[0] = i as f32;
+            match handle.submit_tagged("kws", x, tag) {
+                Ok(rx) => pending.push((d_us, rx)),
+                Err(RouteError::DeadlineUnmeetable) => {
+                    assert!(
+                        d_us > 0,
+                        "case {case} ({spec:?}): refused a deadline-free request"
+                    );
+                    refused += 1;
+                }
+                // Both breakers can be open in the same instant — the
+                // whole fleet is masked and submit sheds.
+                Err(RouteError::Overloaded) => shed += 1,
+                Err(e) => panic!("case {case} ({spec:?}): rejected: {e:?}"),
+            }
+        }
+        let (mut ok, mut exhausted, mut expired) = (0usize, 0usize, 0usize);
+        for (d_us, rx) in &pending {
+            match rx.recv_timeout(std::time::Duration::from_secs(10)) {
+                Ok(Ok(_)) => ok += 1,
+                Ok(Err(FleetError::Exhausted { attempts })) => {
+                    assert!(attempts > 0, "case {case}: exhausted with 0 attempts");
+                    exhausted += 1;
+                }
+                Ok(Err(FleetError::DeadlineExceeded)) => {
+                    assert!(
+                        *d_us > 0,
+                        "case {case} ({spec:?}): a deadline-free request expired"
+                    );
+                    expired += 1;
+                }
+                Ok(Err(e)) => {
+                    panic!("case {case} ({spec:?}): unexpected typed error {e:?}")
+                }
+                Err(e) => panic!(
+                    "case {case} ({spec:?}): request hung or was dropped: {e:?}"
+                ),
+            }
+            // Exactly one outcome: the reply channel must be spent.
+            assert!(
+                rx.try_recv().is_err(),
+                "case {case} ({spec:?}): duplicate outcome on one request"
+            );
+        }
+        assert_eq!(
+            ok + exhausted + expired,
+            pending.len(),
+            "case {case} ({spec:?})"
+        );
+        assert_eq!(
+            ok + exhausted + expired + refused + shed,
+            n,
+            "case {case} ({spec:?}): submit outcomes must cover the whole trace"
+        );
+        let summary = fleet.shutdown();
+        assert_eq!(
+            summary.snapshot.deadline.executed_expired, 0,
+            "case {case} ({spec:?}): a board executed a request that was \
+             already past its deadline"
+        );
+    }
+}
+
 /// Executor that emits a NaN with a distinctive payload in every output
 /// row: the coalescing fan-out must hand followers a *bit-identical*
 /// copy of the leader's output — NaN payload included — so a reply path
@@ -728,6 +864,8 @@ fn prop_coalesced_followers_get_bit_identical_replies_nan_included() {
             attempts: 0,
             failed_on: tinyml_codesign::fleet::queue::NOT_FAILED,
             flight: Some(flight),
+            deadline: None,
+            hedge: false,
         });
         assert!(pushed.is_ok(), "case {case}: leader rejected by empty queue");
         queue.close();
@@ -751,6 +889,9 @@ fn prop_coalesced_followers_get_bit_identical_replies_nan_included() {
                     retry_budget: 0,
                     health: None,
                     drift_time_scale: None,
+                    deadline: Arc::new(DeadlineStats::default()),
+                    hedge: None,
+                    breaker: None,
                 };
                 run_worker(
                     &inst,
@@ -917,6 +1058,9 @@ fn run_worker_has_no_inline_inference_path() {
                 retry_budget: 0,
                 health: None,
                 drift_time_scale: None,
+                deadline: Arc::new(DeadlineStats::default()),
+                hedge: None,
+                breaker: None,
             };
             run_worker(&inst, exec, &queue, &peers, &wcfg, &sink, None, None)
         })
@@ -934,6 +1078,8 @@ fn run_worker_has_no_inline_inference_path() {
             attempts: 0,
             failed_on: tinyml_codesign::fleet::queue::NOT_FAILED,
             flight: None,
+            deadline: None,
+            hedge: false,
         };
         assert!(queue.try_push(req).is_ok(), "request {i} rejected");
         rxs.push((i, rx));
@@ -1161,6 +1307,8 @@ fn prop_no_class_starves_under_sustained_interactive_load() {
                 attempts: 0,
                 failed_on: tinyml_codesign::fleet::queue::NOT_FAILED,
                 flight: None,
+                deadline: None,
+                hedge: false,
             }
         };
         // Random interleave of the lower-class preload.
